@@ -1,0 +1,111 @@
+//! Figure 1 — the MPIgnite ↔ MPI function table, regenerated and
+//! *verified*: each row's MPIgnite-RS method is exercised against a live
+//! communicator, so the table can't drift from the implementation.
+//!
+//! Run: `cargo run --example api_table`
+
+use mpignite::comm::run_local_world;
+use mpignite::prelude::*;
+use mpignite::util::Table;
+
+fn main() -> Result<()> {
+    mpignite::util::init_logger();
+
+    // Exercise every method in the table on a 4-rank world.
+    let checks = run_local_world(4, |comm: &SparkComm| {
+        let rank = comm.get_rank(); // MPI_Comm_rank
+        let size = comm.get_size(); // MPI_Comm_size
+        assert_eq!(size, 4);
+
+        // MPI_Send / MPI_Recv
+        if rank == 0 {
+            comm.send(1, 1, 5i64)?;
+        }
+        if rank == 1 {
+            assert_eq!(comm.receive::<i64>(0, 1)?, 5);
+        }
+        // MPI_Irecv / MPI_Wait
+        if rank == 2 {
+            comm.send(3, 2, true)?;
+        }
+        if rank == 3 {
+            let f: CommFuture<bool> = comm.receive_async(2, 2)?;
+            assert!(f.wait()?);
+        }
+        // MPI_Comm_split
+        let sub = comm.split((rank % 2) as i64, rank as i64)?;
+        assert_eq!(sub.get_size(), 2);
+        // MPI_Bcast
+        let b = comm.broadcast(0, if rank == 0 { Some(9i64) } else { None })?;
+        assert_eq!(b, 9);
+        // MPI_Allreduce (arbitrary closure)
+        let s = comm.all_reduce(rank as i64, |a, b| a + b)?;
+        assert_eq!(s, 6);
+        // MPI_Reduce
+        let r = comm.reduce(0, 1i64, |a, b| a + b)?;
+        if rank == 0 {
+            assert_eq!(r, Some(4));
+        }
+        // MPI_Gather
+        let g = comm.gather(0, rank as i64)?;
+        if rank == 0 {
+            assert_eq!(g, Some(vec![0, 1, 2, 3]));
+        }
+        // MPI_Scatter
+        let item = comm.scatter(0, if rank == 0 { Some(vec![10i64, 11, 12, 13]) } else { None })?;
+        assert_eq!(item, 10 + rank as i64);
+        // MPI_Allgather
+        assert_eq!(comm.all_gather(rank as i64)?, vec![0, 1, 2, 3]);
+        // MPI_Scan
+        assert_eq!(comm.scan(1i64, |a, b| a + b)?, rank as i64 + 1);
+        // MPI_Barrier
+        comm.barrier()?;
+        // MPI_Sendrecv
+        let other = (rank + 1) % size;
+        let from = (rank + size - 1) % size;
+        let got: i64 = comm.sendrecv(other, from as i64, 3, rank as i64)?;
+        assert_eq!(got, from as i64);
+        // MPI_Alltoall
+        let recvd = comm.all_to_all((0..size as i64).map(|i| rank as i64 * 10 + i).collect())?;
+        assert_eq!(recvd[0], rank as i64);
+        // MPI_Comm_dup
+        let dup = comm.dup()?;
+        assert_ne!(dup.context_id(), comm.context_id());
+        // MPI_Iprobe (nothing pending on this fresh dup)
+        assert_eq!(dup.probe(mpignite::comm::ANY_SOURCE, mpignite::comm::ANY_TAG)?, None);
+        Ok(true)
+    })?;
+    assert!(checks.iter().all(|&c| c));
+
+    // Print the table (Figure 1, extended with the future-work rows the
+    // prototype now implements).
+    let rows = [
+        ("comm.send(rec, tag, data)", "MPI_Send", "paper"),
+        ("comm.receive::<T>(sender, tag) -> T", "MPI_Recv", "paper"),
+        ("comm.receive_async::<T>(sender, tag) -> CommFuture<T>", "MPI_Irecv", "paper"),
+        ("future.wait() -> T", "MPI_Wait", "paper"),
+        ("comm.get_rank()", "MPI_Comm_rank", "paper"),
+        ("comm.get_size()", "MPI_Comm_size", "paper"),
+        ("comm.split(color, key) -> SparkComm", "MPI_Comm_split", "paper"),
+        ("comm.broadcast::<T>(root, data) -> T", "MPI_Bcast", "paper"),
+        ("comm.all_reduce::<T>(data, f) -> T", "MPI_Allreduce", "paper"),
+        ("comm.reduce::<T>(root, data, f)", "MPI_Reduce", "extension"),
+        ("comm.gather::<T>(root, data)", "MPI_Gather", "extension"),
+        ("comm.scatter::<T>(root, data)", "MPI_Scatter", "extension"),
+        ("comm.all_gather::<T>(data)", "MPI_Allgather", "extension"),
+        ("comm.scan::<T>(data, f)", "MPI_Scan", "extension"),
+        ("comm.barrier()", "MPI_Barrier", "extension"),
+        ("comm.sendrecv::<S,R>(dst, src, tag, data)", "MPI_Sendrecv", "extension"),
+        ("comm.all_to_all::<T>(data)", "MPI_Alltoall", "extension"),
+        ("comm.dup()", "MPI_Comm_dup", "extension"),
+        ("comm.probe(src, tag)", "MPI_Iprobe", "extension"),
+    ];
+    let mut t = Table::new(vec!["MPIgnite-RS", "MPI", "status"]);
+    for (ours, mpi, status) in rows {
+        t.row(vec![ours, mpi, status]);
+    }
+    println!("Figure 1 — MPIgnite-RS ↔ MPI correspondence (all rows verified live):\n");
+    print!("{}", t.render());
+    println!("\napi_table OK ({} methods verified)", rows.len());
+    Ok(())
+}

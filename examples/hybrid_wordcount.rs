@@ -1,0 +1,130 @@
+//! Hybrid data-parallel + task-parallel application — the paper's §5
+//! claim: "A single application can support both parallelized functions
+//! unique to MPIgnite as well as typical RDDs found in any Spark
+//! application".
+//!
+//! Phase 1 (data parallel): RDD wordcount over a synthetic corpus —
+//! flatMap → map → reduceByKey, crossing a real shuffle boundary.
+//! Phase 2 (task parallel): the per-partition top-k candidates are handed
+//! to a parallel closure that merges them with MPI-style collectives
+//! (gather at rank 0, broadcast of the global top-k).
+//!
+//! Run: `cargo run --example hybrid_wordcount`
+
+use mpignite::prelude::*;
+use mpignite::rng::Xoshiro256;
+
+const K: usize = 5;
+
+fn synth_corpus(lines: usize, seed: u64) -> Vec<String> {
+    // Zipf-ish: a small hot vocabulary plus random cold words.
+    let hot = ["spark", "mpi", "rdd", "comm", "rank", "task"];
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..lines)
+        .map(|_| {
+            let words: Vec<String> = (0..12)
+                .map(|_| {
+                    if rng.chance(0.7) {
+                        hot[rng.range(0, hot.len())].to_string()
+                    } else {
+                        rng.word(3, 8)
+                    }
+                })
+                .collect();
+            words.join(" ")
+        })
+        .collect()
+}
+
+fn main() -> Result<()> {
+    mpignite::util::init_logger();
+    let parts = 4;
+    let sc = IgniteContext::local(parts);
+
+    // ---- Phase 1: classic RDD pipeline (with caching + shuffle) -----
+    let corpus = synth_corpus(2000, 11);
+    let counts_rdd = sc
+        .parallelize(corpus)
+        .flat_map(|line| line.split_whitespace().map(String::from).collect())
+        .map(|w| (w, 1i64))
+        .reduce_by_key(parts, |a, b| a + b)
+        .cache();
+    let total_words: i64 = counts_rdd.clone().map(|(_, c)| c).fold(0, |a, b| a + b)?;
+    let distinct = counts_rdd.count()?;
+    println!("phase 1 (RDD): {total_words} words, {distinct} distinct");
+    assert_eq!(total_words, 2000 * 12);
+
+    // Per-partition top-K candidates (still data-parallel).
+    let candidates: Vec<Vec<(String, i64)>> = counts_rdd.run_action(|_, mut part| {
+        part.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        part.truncate(K);
+        part
+    })?;
+
+    // ---- Phase 2: MPI-style merge in a parallel closure -------------
+    let results = sc
+        .parallelize_func(move |world: &SparkComm| {
+            let mine = candidates[world.rank()].clone();
+            // Encode as parallel vectors for the wire.
+            let words: Vec<Value> =
+                mine.iter().map(|(w, _)| Value::Str(w.clone())).collect();
+            let counts: Vec<i64> = mine.iter().map(|(_, c)| *c).collect();
+            let package = Value::Map(vec![
+                ("words".into(), Value::List(words)),
+                ("counts".into(), Value::I64Vec(counts)),
+            ]);
+            let gathered = world.gather(0, package).expect("gather");
+            let top = if let Some(all) = gathered {
+                // Rank 0 merges and selects the global top-K.
+                let mut merged: Vec<(String, i64)> = Vec::new();
+                for pkg in all {
+                    let words = match pkg.get("words") {
+                        Some(Value::List(l)) => l.clone(),
+                        _ => vec![],
+                    };
+                    let counts = match pkg.get("counts") {
+                        Some(Value::I64Vec(c)) => c.clone(),
+                        _ => vec![],
+                    };
+                    for (w, c) in words.into_iter().zip(counts) {
+                        if let Value::Str(w) = w {
+                            merged.push((w, c));
+                        }
+                    }
+                }
+                merged.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                merged.truncate(K);
+                let packed: Vec<Value> = merged
+                    .into_iter()
+                    .map(|(w, c)| Value::List(vec![Value::Str(w), Value::I64(c)]))
+                    .collect();
+                world.broadcast(0, Some(Value::List(packed))).expect("bcast")
+            } else {
+                world.broadcast::<Value>(0, None).expect("bcast")
+            };
+            top
+        })
+        .execute(parts)?;
+
+    // Every rank got the same global top-K.
+    for r in 1..parts {
+        assert_eq!(results[r], results[0], "broadcast gave all ranks the same top-k");
+    }
+    println!("phase 2 (closure): global top-{K}:");
+    if let Value::List(top) = &results[0] {
+        assert_eq!(top.len(), K);
+        for entry in top {
+            if let Value::List(pair) = entry {
+                println!("  {:?} -> {:?}", pair[0], pair[1]);
+            }
+        }
+        // Hot vocabulary dominates by construction.
+        if let Value::List(pair) = &top[0] {
+            if let Value::I64(c) = pair[1] {
+                assert!(c > 1500, "hot words appear thousands of times, got {c}");
+            }
+        }
+    }
+    println!("hybrid_wordcount OK");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Listing 2 — the token ring, showing the message-passing API: blocking
+//! `receive`, always-non-blocking `send`, tags, and rank arithmetic.
+//!
+//! Run: `cargo run --example ring`
+
+use mpignite::prelude::*;
+
+/// The `ring` function from Listing 2, "defined explicitly before
+/// parallelizing it".
+fn ring(world: &SparkComm) -> i64 {
+    let rank = world.get_rank();
+    let size = world.get_size();
+    let token;
+    if rank == 0 {
+        token = 42;
+        world.send(rank + 1, 0, token).expect("send");
+        let back = world.receive::<i64>((size - 1) as i64, 0).expect("receive");
+        assert_eq!(back, token, "token came back unchanged");
+        back
+    } else {
+        let t = world.receive::<i64>((rank - 1) as i64, 0).expect("receive");
+        world.send((rank + 1) % size, 0, t).expect("send");
+        t
+    }
+}
+
+fn main() -> Result<()> {
+    mpignite::util::init_logger();
+    let sc = IgniteContext::local(16);
+
+    let parallel = sc.parallelize_func(ring);
+    let tokens = parallel.execute(16)?;
+
+    println!("tokens seen per rank: {tokens:?}");
+    assert!(tokens.iter().all(|&t| t == 42), "every rank forwarded the same token");
+
+    // Since receive blocks, "no process other than the root will send
+    // until it has received the token" — the ring is causally ordered.
+    println!("ring OK (16 ranks)");
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT lowering: JAX (L2 + L1) → HLO **text** artifacts for the Rust
+runtime.
+
+HLO text, NOT ``lowered.compiler_ir(...).serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids, which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects (``proto.id() <=
+INT_MAX``). The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/gen_hlo.py.
+
+Python runs ONCE, at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_points():
+    """Every artifact: name → (fn, example args, output arity).
+
+    Shape variants cover the examples and benches: small tiles for the
+    Listing-4 grid, bench tiles for E8, and the E2E power-iteration sizes
+    (full matrix for the single-rank baseline; row blocks for 4/8 ranks).
+    """
+    eps = {}
+
+    def add(name, fn, args, n_outputs):
+        eps[name] = (fn, args, n_outputs)
+
+    # Square matvecs (quickstart, E8 bench sweep).
+    for n in (64, 256, 512, 1024):
+        add(f"matvec_f32_{n}x{n}", model.matvec, (f32(n, n), f32(n)), 1)
+    # Row-block matvecs for the distributed power iteration:
+    # 1024-column matrix split over 4 or 8 ranks.
+    for rows in (128, 256):
+        add(f"matvec_f32_{rows}x1024", model.matvec_tile, (f32(rows, 1024), f32(1024)), 1)
+    # Listing-4 style small tile.
+    add("matvec_f32_4x4", model.matvec_tile, (f32(4, 4), f32(4)), 1)
+    # Reductions.
+    for n in (1024,):
+        add(f"dot_f32_{n}", model.dot, (f32(n), f32(n)), 1)
+        add(f"normalize_f32_{n}", model.normalize, (f32(n),), 1)
+    # Whole-step baseline + convergence check.
+    add("power_step_f32_1024", model.power_iteration_step, (f32(1024, 1024), f32(1024)), 2)
+    add("residual_norm_f32_1024", model.residual_norm, (f32(1024, 1024), f32(1024), f32()), 1)
+    return eps
+
+
+def shape_desc(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None, help="lower a single entry point")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, example_args, n_outputs) in sorted(entry_points().items()):
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": fname,
+            "inputs": [shape_desc(a) for a in example_args],
+            "n_outputs": n_outputs,
+        }
+        print(f"lowered {name}: {len(text)} chars")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    # Merge with an existing manifest when lowering a single entry.
+    if args.only and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            merged = json.load(f)
+        merged.update(manifest)
+        manifest = merged
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(manifest)} entries)")
+
+
+if __name__ == "__main__":
+    main()

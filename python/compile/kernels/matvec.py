@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: tiled matrix-vector product.
+
+The compute hot-spot of the paper's running example (Listings 1 and 4 are
+both matrix-vector multiplication). TPU-shaped rather than GPU-shaped
+(DESIGN.md §3 Hardware adaptation): the matrix streams through VMEM in
+``(BM, BK)`` blocks declared by ``BlockSpec`` — the HBM→VMEM schedule that
+a CUDA port would express with threadblocks — and each grid step feeds the
+MXU a ``(BM, BK) @ (BK, 1)`` contraction, accumulating into a ``(BM, 1)``
+output block that stays resident in VMEM across the K-sweep.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so lowering goes through the interpreter to plain HLO. The
+BlockSpec structure (and hence the VMEM/MXU analysis in EXPERIMENTS.md
+§Perf) is unchanged by interpretation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    """One grid step: o[bm] += A[bm, bk] @ x[bk]."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU contraction in f32; accumulate across the K grid dimension.
+    o_ref[...] += jnp.dot(a_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k"))
+def matvec(a, x, *, block_m=128, block_k=128):
+    """``y = A @ x`` via the tiled Pallas kernel.
+
+    ``a``: (M, K) f32. ``x``: (K,) f32. Returns (M,) f32.
+    Shapes must divide the block sizes; ``matvec_padded`` relaxes that.
+    """
+    m, k = a.shape
+    bm = min(block_m, m)
+    bk = min(block_k, k)
+    if m % bm or k % bk:
+        raise ValueError(f"shape ({m},{k}) not divisible by blocks ({bm},{bk})")
+    x2 = x.reshape(k, 1)
+    y2 = pl.pallas_call(
+        _matvec_kernel,
+        grid=(m // bm, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bk, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=True,
+    )(a, x2)
+    return y2.reshape(m)
+
+
+def matvec_padded(a, x, *, block_m=128, block_k=128):
+    """``matvec`` for arbitrary shapes: zero-pad up to block multiples.
+
+    Zero padding preserves the product exactly (extra rows are sliced off,
+    extra columns multiply zero entries of x).
+    """
+    m, k = a.shape
+    bm = min(block_m, max(1, m))
+    bk = min(block_k, max(1, k))
+    mp = -(-m // bm) * bm
+    kp = -(-k // bk) * bk
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    x_p = jnp.pad(x, (0, kp - k))
+    return matvec(a_p, x_p, block_m=bm, block_k=bk)[:m]
+
+
+def vmem_footprint_bytes(block_m=128, block_k=128):
+    """Estimated VMEM residency per grid step (f32): A block + x block +
+    y block. Used by the §Perf roofline notes, not by execution."""
+    return 4 * (block_m * block_k + block_k + block_m)

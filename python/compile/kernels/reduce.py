@@ -1,0 +1,52 @@
+"""L1 Pallas kernels: blocked reductions (dot product, sum of squares).
+
+These are the reduction primitives the L2 model composes for vector norms
+(power-iteration normalization) and Rayleigh quotients. Each streams its
+input through VMEM in 1-D blocks and accumulates a scalar (kept as a
+(1, 1) block — TPU reductions want 2-D refs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...] * y_ref[...]).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dot(x, y, *, block=256):
+    """Blocked dot product of two equal-length f32 vectors."""
+    (n,) = x.shape
+    b = min(block, n)
+    if n % b:
+        raise ValueError(f"length {n} not divisible by block {b}")
+    out = pl.pallas_call(
+        _dot_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((1, b), lambda i: (0, i)),
+            pl.BlockSpec((1, b), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(x.reshape(1, n), y.reshape(1, n))
+    return out.reshape(())
+
+
+def sumsq(x, *, block=256):
+    """Blocked sum of squares (squared L2 norm)."""
+    return dot(x, x, block=block)
+
+
+def norm(x, *, block=256):
+    """L2 norm via the blocked sum-of-squares kernel."""
+    return jnp.sqrt(sumsq(x, block=block))

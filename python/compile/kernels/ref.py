@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth the
+pytest suite asserts against (`assert_allclose`)."""
+
+import jax.numpy as jnp
+
+
+def matvec(a, x):
+    """y = A @ x."""
+    return a @ x
+
+
+def dot(x, y):
+    return jnp.dot(x, y)
+
+
+def sumsq(x):
+    return jnp.dot(x, x)
+
+
+def norm(x):
+    return jnp.sqrt(jnp.dot(x, x))
+
+
+def power_iteration_step(a, x, eps=1e-12):
+    """One normalized power-iteration step + Rayleigh quotient."""
+    y = a @ x
+    nrm = jnp.sqrt(jnp.dot(y, y))
+    x_next = y / (nrm + eps)
+    eig = jnp.dot(x_next, a @ x_next)
+    return x_next, eig

@@ -1,0 +1,67 @@
+"""L2: the JAX compute graph composed from the L1 Pallas kernels.
+
+Entry points here are what `aot.py` lowers to HLO text for the Rust
+runtime. Everything is shape-static at lowering time; the L3 coordinator
+chooses which artifact (shape variant) to execute.
+
+The workload is the paper's running example scaled into a real driver:
+distributed matrix-vector products (Listings 1/4) and the power-iteration
+solver the E2E example runs, where each MPIgnite rank owns a row block of
+A and computes its tile product with the L1 kernel, combining partial
+vectors with `allReduce` at L3.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import matvec as mv
+from .kernels import reduce as red
+
+
+# Block shapes (§Perf): K-full row sweeps — (BM=256, BK=1024) keeps each
+# grid step's VMEM residency ≈ 1 MiB (fits the ~16 MiB budget with double
+# buffering), stays MXU-aligned, reads A exactly once (single pass, no
+# output-block revisits), and minimizes interpret-mode grid overhead on
+# the CPU PJRT backend (54.8 ms → 6.9 ms at 1024², see EXPERIMENTS.md).
+BLOCK_M = 256
+BLOCK_K = 1024
+
+
+def matvec(a, x):
+    """Full matrix-vector product via the tiled Pallas kernel."""
+    return mv.matvec_padded(a, x, block_m=BLOCK_M, block_k=BLOCK_K)
+
+
+def matvec_tile(a_tile, x):
+    """One rank's row-block product: the per-rank compute of the 2D
+    decomposition (Listing 4) and of the E2E power iteration."""
+    return mv.matvec_padded(a_tile, x, block_m=BLOCK_M, block_k=BLOCK_K)
+
+
+def dot(x, y):
+    """Blocked dot product (Rayleigh quotient numerator at L3)."""
+    return red.dot(x, y)
+
+
+def normalize(y, eps=1e-12):
+    """y / ||y|| with the norm from the blocked sum-of-squares kernel."""
+    return y / (red.norm(y) + eps)
+
+
+def power_iteration_step(a, x, eps=1e-12):
+    """One whole-matrix power-iteration step (single-rank baseline):
+    x ← A·x / ||A·x||, eigenvalue estimate via Rayleigh quotient."""
+    y = mv.matvec_padded(a, x, block_m=BLOCK_M, block_k=BLOCK_K)
+    x_next = y / (red.norm(y) + eps)
+    eig = red.dot(x_next, mv.matvec_padded(a, x_next, block_m=BLOCK_M, block_k=BLOCK_K))
+    return x_next, eig
+
+
+def axpy(alpha, x, y):
+    """alpha*x + y — fused by XLA; used for residual updates at L3."""
+    return alpha * x + y
+
+
+def residual_norm(a, x, eig):
+    """||A·x − λ·x|| — convergence check for the E2E driver."""
+    r = mv.matvec_padded(a, x, block_m=BLOCK_M, block_k=BLOCK_K) - eig * x
+    return jnp.sqrt(red.sumsq(r))

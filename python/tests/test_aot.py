@@ -1,0 +1,61 @@
+"""AOT path checks: every entry point lowers to parseable HLO text with
+the right parameter shapes, and the manifest stays consistent."""
+
+import jax
+import pytest
+
+from compile import aot
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def eps():
+    return aot.entry_points()
+
+
+def test_entry_point_inventory(eps):
+    names = set(eps)
+    # The examples and benches depend on these exact names.
+    for required in [
+        "matvec_f32_64x64",
+        "matvec_f32_256x256",
+        "matvec_f32_1024x1024",
+        "matvec_f32_128x1024",
+        "matvec_f32_256x1024",
+        "matvec_f32_4x4",
+        "dot_f32_1024",
+        "normalize_f32_1024",
+        "power_step_f32_1024",
+        "residual_norm_f32_1024",
+    ]:
+        assert required in names, f"missing entry point {required}"
+
+
+@pytest.mark.parametrize("name", ["matvec_f32_64x64", "dot_f32_1024", "power_step_f32_1024"])
+def test_lowering_produces_hlo_text(eps, name):
+    fn, args, n_outputs = eps[name]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert "HloModule" in text, "not HLO text"
+    assert "ENTRY" in text
+    # return_tuple=True → the root is a tuple of n_outputs elements.
+    assert text.count("parameter(") >= len(args)
+
+
+def test_hlo_text_has_no_serialized_proto_markers(eps):
+    # Guard against regressing to .serialize() (64-bit-id protos).
+    fn, args, _ = eps["matvec_f32_64x64"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert text.lstrip().startswith("HloModule")
+
+
+def test_shape_desc():
+    s = jax.ShapeDtypeStruct((3, 4), "float32")
+    assert aot.shape_desc(s) == {"shape": [3, 4], "dtype": "float32"}
+
+
+def test_entry_points_are_lowerable(eps):
+    # Smoke-lower everything (cheap: tracing only, no compile).
+    for name, (fn, args, _) in eps.items():
+        lowered = jax.jit(fn).lower(*args)
+        assert lowered is not None, name

@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (`ref.py`).
+
+Hypothesis sweeps shapes and values; fixed cases pin the block-boundary
+edge cases. This is the core correctness signal for the compute layer —
+the Rust runtime executes exactly what these kernels lower to.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matvec as mv
+from compile.kernels import reduce as red
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ------------------------------------------------------------- matvec --
+
+
+@pytest.mark.parametrize("m,k,bm,bk", [
+    (4, 4, 4, 4),
+    (8, 8, 4, 4),
+    (16, 32, 8, 8),
+    (128, 128, 128, 128),
+    (256, 128, 128, 64),
+])
+def test_matvec_matches_ref_exact_blocks(m, k, bm, bk):
+    a, x = rand((m, k), 1), rand((k,), 2)
+    got = mv.matvec(a, x, block_m=bm, block_k=bk)
+    np.testing.assert_allclose(got, ref.matvec(a, x), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k", [(1, 1), (3, 5), (7, 129), (130, 100), (5, 1024)])
+def test_matvec_padded_arbitrary_shapes(m, k):
+    a, x = rand((m, k), 3), rand((k,), 4)
+    got = mv.matvec_padded(a, x)
+    assert got.shape == (m,)
+    np.testing.assert_allclose(got, ref.matvec(a, x), rtol=1e-4, atol=1e-4)
+
+
+def test_matvec_rejects_non_divisible():
+    with pytest.raises(ValueError):
+        mv.matvec(rand((10, 10), 0), rand((10,), 1), block_m=4, block_k=4)
+
+
+def test_matvec_identity():
+    n = 64
+    a = jnp.eye(n, dtype=jnp.float32)
+    x = rand((n,), 5)
+    np.testing.assert_allclose(mv.matvec(a, x, block_m=32, block_k=32), x, rtol=1e-6)
+
+
+def test_matvec_zeros():
+    a = jnp.zeros((32, 32), jnp.float32)
+    x = rand((32,), 6)
+    np.testing.assert_allclose(mv.matvec(a, x, block_m=32, block_k=32), jnp.zeros(32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_padded_hypothesis_shapes(m, k, seed):
+    a, x = rand((m, k), seed), rand((k,), seed + 1)
+    got = mv.matvec_padded(a, x, block_m=16, block_k=16)
+    np.testing.assert_allclose(got, ref.matvec(a, x), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**31 - 1))
+def test_matvec_scale_invariance(scale, seed):
+    # (sA)·x == s(A·x) — catches accumulation-order bugs at magnitude.
+    a, x = rand((32, 32), seed), rand((32,), seed + 1)
+    got = mv.matvec(jnp.float32(scale) * a, x, block_m=16, block_k=16)
+    want = jnp.float32(scale) * mv.matvec(a, x, block_m=16, block_k=16)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale)
+
+
+def test_vmem_footprint_estimate_monotone():
+    assert mv.vmem_footprint_bytes(128, 128) < mv.vmem_footprint_bytes(256, 256)
+    # Default tile fits comfortably in ~16 MiB VMEM.
+    assert mv.vmem_footprint_bytes() < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------- reductions --
+
+
+@pytest.mark.parametrize("n,block", [(4, 4), (256, 256), (1024, 256), (2048, 128)])
+def test_dot_matches_ref(n, block):
+    x, y = rand((n,), 7), rand((n,), 8)
+    got = red.dot(x, y, block=block)
+    np.testing.assert_allclose(got, ref.dot(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_sumsq_and_norm():
+    x = rand((512,), 9)
+    np.testing.assert_allclose(red.sumsq(x, block=128), ref.sumsq(x), rtol=1e-5)
+    np.testing.assert_allclose(red.norm(x, block=128), ref.norm(x), rtol=1e-5)
+
+
+def test_dot_rejects_non_divisible():
+    with pytest.raises(ValueError):
+        red.dot(rand((10,), 0), rand((10,), 1), block=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(1, 16),
+    block=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dot_hypothesis(n_blocks, block, seed):
+    n = n_blocks * block
+    x, y = rand((n,), seed), rand((n,), seed + 1)
+    np.testing.assert_allclose(
+        red.dot(x, y, block=block), ref.dot(x, y), rtol=1e-4, atol=1e-3
+    )

@@ -1,0 +1,78 @@
+"""L2 correctness: the composed model graph vs the jnp oracle, plus the
+distributed-decomposition identity the L3 coordinator relies on (sum of
+row-block tile products == full product)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def symmetric(n, seed):
+    a = rand((n, n), seed)
+    return (a + a.T) / 2
+
+
+def test_power_iteration_step_matches_ref():
+    a, x = symmetric(64, 0), rand((64,), 1)
+    got_x, got_eig = model.power_iteration_step(a, x)
+    want_x, want_eig = ref.power_iteration_step(a, x)
+    np.testing.assert_allclose(got_x, want_x, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_eig, want_eig, rtol=1e-4, atol=1e-4)
+
+
+def test_power_iteration_converges_to_dominant_eigenpair():
+    n = 96
+    a = symmetric(n, 2)
+    x = rand((n,), 3)
+    x = x / jnp.linalg.norm(x)
+    eig = 0.0
+    for _ in range(200):
+        x, eig = model.power_iteration_step(a, x)
+    eigs = np.linalg.eigvalsh(np.asarray(a))
+    dominant = eigs[np.argmax(np.abs(eigs))]
+    np.testing.assert_allclose(float(eig), float(dominant), rtol=1e-3)
+    # Residual ||Ax - λx|| is small.
+    res = model.residual_norm(a, x, eig)
+    assert float(res) < 1e-2
+
+
+def test_row_block_decomposition_identity():
+    """sum-free identity: concatenating per-rank row-block products equals
+    the full product — what allGather over matvec_tile computes at L3."""
+    n, ranks = 128, 4
+    a, x = rand((n, n), 4), rand((n,), 5)
+    rows = n // ranks
+    parts = [model.matvec_tile(a[r * rows:(r + 1) * rows, :], x) for r in range(ranks)]
+    got = jnp.concatenate(parts)
+    np.testing.assert_allclose(got, ref.matvec(a, x), rtol=1e-4, atol=1e-4)
+
+
+def test_normalize_unit_norm():
+    y = rand((256,), 6)
+    x = model.normalize(y)
+    np.testing.assert_allclose(jnp.linalg.norm(x), 1.0, rtol=1e-5)
+
+
+def test_axpy():
+    x, y = rand((64,), 7), rand((64,), 8)
+    np.testing.assert_allclose(model.axpy(2.5, x, y), 2.5 * x + y, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([16, 32, 64]), seed=st.integers(0, 2**31 - 1))
+def test_power_step_norm_is_one_hypothesis(n, seed):
+    a, x = symmetric(n, seed), rand((n,), seed + 1)
+    x_next, _ = model.power_iteration_step(a, x)
+    np.testing.assert_allclose(jnp.linalg.norm(x_next), 1.0, rtol=1e-4)

@@ -1,0 +1,73 @@
+//! E3 — collective scaling: broadcast and allReduce across algorithms
+//! (linear / binomial tree / block-store / ring) and rank counts.
+//!
+//! Expected shape: tree beats linear as ranks grow (log vs linear rounds
+//! at the root); block-store broadcast (the paper's "Spark built-in
+//! broadcasting" alternative) wins for large payloads in-process; ring
+//! allreduce pays 2(N−1) hops but each hop is cheap.
+
+use mpignite::bench::time_world_op;
+use mpignite::comm::CollectiveAlgo;
+use mpignite::util::{fmt_bytes, fmt_duration, Table};
+
+fn main() {
+    mpignite::util::init_logger();
+    let fast = std::env::var("MPIGNITE_BENCH_FAST").is_ok();
+    let iters = if fast { 20 } else { 200 };
+
+    // ---- broadcast ----------------------------------------------------
+    println!("\n== E3a: broadcast latency by algorithm ==");
+    let mut t = Table::new(vec!["ranks", "payload", "linear", "tree", "blockstore"]);
+    let mut csv = Table::new(vec!["ranks", "payload", "linear_ns", "tree_ns", "blockstore_ns"]);
+    for n in [4usize, 8, 16, 32] {
+        for payload in [8usize, 8192] {
+            let mut cells = vec![n.to_string(), fmt_bytes(payload as u64)];
+            let mut raw = vec![n.to_string(), payload.to_string()];
+            for algo in [CollectiveAlgo::Linear, CollectiveAlgo::Tree, CollectiveAlgo::BlockStore] {
+                let words = payload / 8;
+                let d = time_world_op(n, iters, move |comm, _| {
+                    let data = if comm.rank() == 0 {
+                        Some(vec![1.0f64; words])
+                    } else {
+                        None
+                    };
+                    let _ = comm.broadcast_with(algo, 0, data).unwrap();
+                });
+                cells.push(fmt_duration(d));
+                raw.push(d.as_nanos().to_string());
+            }
+            t.row(cells);
+            csv.row(raw);
+        }
+    }
+    print!("{}", t.render());
+    println!("\n-- csv --\n{}", csv.to_csv());
+
+    // ---- allReduce ----------------------------------------------------
+    println!("== E3b: allReduce(sum of f64 vectors) latency by algorithm ==");
+    let mut t = Table::new(vec!["ranks", "payload", "linear", "tree", "ring"]);
+    let mut csv = Table::new(vec!["ranks", "payload", "linear_ns", "tree_ns", "ring_ns"]);
+    for n in [4usize, 8, 16, 32] {
+        for payload in [8usize, 8192] {
+            let mut cells = vec![n.to_string(), fmt_bytes(payload as u64)];
+            let mut raw = vec![n.to_string(), payload.to_string()];
+            for algo in [CollectiveAlgo::Linear, CollectiveAlgo::Tree, CollectiveAlgo::Ring] {
+                let words = payload / 8;
+                let d = time_world_op(n, iters, move |comm, _| {
+                    let mine = vec![comm.rank() as f64; words];
+                    let _ = comm
+                        .all_reduce_with(algo, mine, |a, b| {
+                            a.iter().zip(&b).map(|(x, y)| x + y).collect()
+                        })
+                        .unwrap();
+                });
+                cells.push(fmt_duration(d));
+                raw.push(d.as_nanos().to_string());
+            }
+            t.row(cells);
+            csv.row(raw);
+        }
+    }
+    print!("{}", t.render());
+    println!("\n-- csv --\n{}", csv.to_csv());
+}

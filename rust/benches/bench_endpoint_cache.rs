@@ -1,0 +1,62 @@
+//! E6 — endpoint-cache amortization: the paper's claim that maintaining
+//! a collection of RPC endpoints "augmented on an as-needed basis ...
+//! amortizes the cost of sending to new worker nodes".
+//!
+//! Cold = connections dropped before every ask (re-dial + handshake);
+//! warm = cached connection reused. Expected shape: warm ≪ cold.
+
+use mpignite::bench::{BenchSuite, Throughput};
+use mpignite::metrics;
+use mpignite::rpc::{Envelope, RpcEnv};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    mpignite::util::init_logger();
+    let server = RpcEnv::server("bench-server", 0).unwrap();
+    server.register("echo", Arc::new(|env: &Envelope| Ok(Some(env.body.clone()))));
+    let addr = server.address();
+
+    let mut suite = BenchSuite::new("E6: endpoint establishment vs cached connection");
+
+    {
+        let client = RpcEnv::client("bench-cold");
+        let addr = addr.clone();
+        suite.bench("cold_ask (drop connections each time)", move || {
+            client.drop_connections();
+            let _ = client.ask(&addr, "echo", vec![0u8; 64], Duration::from_secs(5)).unwrap();
+        });
+    }
+    {
+        let client = RpcEnv::client("bench-warm");
+        let addr = addr.clone();
+        // Prime once.
+        let _ = client.ask(&addr, "echo", vec![0u8; 64], Duration::from_secs(5)).unwrap();
+        suite.bench("warm_ask (cached connection)", move || {
+            let _ = client.ask(&addr, "echo", vec![0u8; 64], Duration::from_secs(5)).unwrap();
+        });
+    }
+    {
+        // One-way sends on a warm connection (pure transport cost).
+        let client = RpcEnv::client("bench-oneway");
+        let addr = addr.clone();
+        let _ = client.ask(&addr, "echo", vec![], Duration::from_secs(5)).unwrap();
+        suite.bench_throughput(
+            "warm_one_way_send (64 B)",
+            Throughput::Bytes(64),
+            move || {
+                client.send(&addr, "echo", vec![0u8; 64]).unwrap();
+            },
+        );
+    }
+
+    suite.report();
+    let cold = suite.results()[0].median;
+    let warm = suite.results()[1].median;
+    println!(
+        "\namortization factor: cold/warm = {:.1}x  (connections established: {})",
+        cold.as_secs_f64() / warm.as_secs_f64(),
+        metrics::global().counter("rpc.conn.established").get()
+    );
+    server.shutdown();
+}

@@ -1,0 +1,141 @@
+//! E7 — fault tolerance costs: task retry, straggler speculation, lost
+//! shuffle output recomputation, and worker loss with the paper's
+//! p2p→relay recovery fallback (single-shot timings, not steady-state).
+//!
+//! Expected shape: fault-free < retry < recompute; speculation caps the
+//! straggler's impact near the straggler threshold instead of its full
+//! delay; worker-loss recovery completes the job on survivors.
+
+use mpignite::cluster::{Master, Worker};
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use mpignite::scheduler::Engine;
+use mpignite::util::{fmt_duration, Stopwatch, Table};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn engine(slots: usize, speculation: bool) -> Arc<Engine> {
+    let mut conf = IgniteConf::new();
+    conf.set("ignite.worker.slots", slots.to_string());
+    conf.set("ignite.task.speculation", if speculation { "true" } else { "false" });
+    conf.set("ignite.task.speculation.multiplier", "3.0");
+    Engine::new(conf).unwrap()
+}
+
+fn run_job(eng: &Arc<Engine>, stage: u64) -> Duration {
+    let sw = Stopwatch::start();
+    eng.run_task_set(stage, 16, |_p| {
+        std::hint::black_box((0..20_000u64).sum::<u64>());
+        Ok(())
+    })
+    .unwrap();
+    sw.elapsed()
+}
+
+fn main() {
+    mpignite::util::init_logger();
+    println!("\n== E7: fault handling costs (16 tasks, 4 slots) ==");
+    let mut t = Table::new(vec!["scenario", "job time", "notes"]);
+
+    // Baseline.
+    let eng = engine(4, false);
+    let base = run_job(&eng, 1);
+    t.row(vec!["fault-free".into(), fmt_duration(base), String::new()]);
+
+    // One injected task failure (retry absorbs it).
+    let eng = engine(4, false);
+    eng.fault.fail_task(2, 3, 0);
+    let with_retry = run_job(&eng, 2);
+    t.row(vec!["1 injected task failure".into(), fmt_duration(with_retry), "retry".into()]);
+
+    // Straggler without speculation: pays the full 150ms delay.
+    let eng = engine(4, false);
+    eng.fault.delay_task(3, 0, Duration::from_millis(150));
+    let slow = run_job(&eng, 3);
+    t.row(vec![
+        "150ms straggler, speculation OFF".into(),
+        fmt_duration(slow),
+        "pays full delay".into(),
+    ]);
+
+    // Straggler with speculation: copy rescues it.
+    let eng = engine(4, true);
+    eng.fault.delay_task(4, 0, Duration::from_millis(150));
+    let rescued = run_job(&eng, 4);
+    t.row(vec![
+        "150ms straggler, speculation ON".into(),
+        fmt_duration(rescued),
+        "copy rescues".into(),
+    ]);
+
+    // Lost shuffle output → lineage recompute.
+    let eng = engine(4, false);
+    let sc_conf = {
+        let mut c = IgniteConf::new();
+        c.set("ignite.worker.slots", "4");
+        c
+    };
+    let _ = sc_conf;
+    {
+        use mpignite::scheduler::StageSpec;
+        let stage = StageSpec {
+            shuffle_id: 77,
+            num_tasks: 8,
+            run_task: Arc::new(|map_idx, eng: &Engine| {
+                std::hint::black_box((0..50_000u64).sum::<u64>());
+                eng.shuffle.put_bucket(77, map_idx, 0, vec![map_idx as u64]);
+                eng.shuffle.map_done(77, map_idx, 8);
+                Ok(())
+            }),
+        };
+        let sw = Stopwatch::start();
+        eng.run_stages(std::slice::from_ref(&stage)).unwrap();
+        let first = sw.elapsed();
+        // Lose one map output; re-running the stage recomputes.
+        eng.shuffle.lose_map_output(77, 3);
+        let sw = Stopwatch::start();
+        eng.run_stages(std::slice::from_ref(&stage)).unwrap();
+        let recompute = sw.elapsed();
+        t.row(vec!["shuffle stage first run".into(), fmt_duration(first), "8 map tasks".into()]);
+        t.row(vec![
+            "recompute after losing 1 map output".into(),
+            fmt_duration(recompute),
+            "lineage".into(),
+        ]);
+    }
+
+    // Worker loss mid-cluster → relay recovery (paper's mode switch).
+    {
+        mpignite::closure::register_parallel_fn("bench.fault.allreduce", |comm, _| {
+            let v = comm.all_reduce(1i64, |a, b| a + b)?;
+            Ok(Value::I64(v))
+        });
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.worker.heartbeat.ms", "50");
+        conf.set("ignite.worker.timeout.ms", "300");
+        let master = Master::start(&conf, 0).unwrap();
+        let workers: Vec<_> =
+            (0..3).map(|_| Worker::start(&conf, master.address()).unwrap()).collect();
+        master.wait_for_workers(3, Duration::from_secs(5)).unwrap();
+
+        let sw = Stopwatch::start();
+        master.execute_named("bench.fault.allreduce", 6, Value::Unit).unwrap();
+        let healthy = sw.elapsed();
+
+        workers[2].kill();
+        std::thread::sleep(Duration::from_millis(400)); // let loss register
+        let sw = Stopwatch::start();
+        let out = master.execute_named("bench.fault.allreduce", 6, Value::Unit).unwrap();
+        let after_loss = sw.elapsed();
+        assert_eq!(out[0], Value::I64(6));
+        t.row(vec!["cluster job, 3 workers healthy".into(), fmt_duration(healthy), String::new()]);
+        t.row(vec![
+            "cluster job after killing 1 of 3".into(),
+            fmt_duration(after_loss),
+            "survivors (+relay fallback on mid-job loss)".into(),
+        ]);
+        master.shutdown();
+    }
+
+    print!("{}", t.render());
+}

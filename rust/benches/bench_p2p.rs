@@ -1,0 +1,121 @@
+//! E1 — point-to-point latency/throughput: master-relay vs peer-to-peer
+//! (the paper's two implementation iterations, §3.1), over real TCP with
+//! a real master process in the relay path. Also sweeps message size on
+//! the local transport and compares the two mailbox paths (receive
+//! posted first vs message buffered first).
+//!
+//! Expected shape: p2p < relay at every size, gap grows with message size
+//! (relay pays serialize+forward twice); the paper's design switched to
+//! p2p for exactly this reason.
+
+use mpignite::cluster::{Master, Worker};
+use mpignite::comm::{run_local_world, TransportMode};
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use mpignite::util::{fmt_bytes, fmt_duration, Table};
+use std::time::{Duration, Instant};
+
+fn cluster_pingpong(mode: &str, payload: usize, iters: usize) -> Duration {
+    let fn_name = format!("bench.pingpong.{mode}.{payload}");
+    let iters_i = iters as i64;
+    mpignite::closure::register_parallel_fn(&fn_name, move |comm, arg| {
+        let bytes = match arg {
+            Value::I64(n) => vec![0u8; *n as usize],
+            _ => vec![],
+        };
+        comm.barrier()?;
+        let t0 = Instant::now();
+        for i in 0..iters_i {
+            let tag = i % 100;
+            if comm.rank() == 0 {
+                comm.send(1, tag, bytes.clone())?;
+                let _: Vec<u8> = comm.receive(1, tag)?;
+            } else {
+                let b: Vec<u8> = comm.receive(0, tag)?;
+                comm.send(0, tag, b)?;
+            }
+        }
+        Ok(Value::F64(t0.elapsed().as_secs_f64() / iters_i as f64))
+    });
+
+    let mut conf = IgniteConf::new();
+    conf.set("ignite.comm.mode", mode);
+    conf.set("ignite.comm.recv.timeout.ms", "120000");
+    let master = Master::start(&conf, 0).unwrap();
+    let _w1 = Worker::start(&conf, master.address()).unwrap();
+    let _w2 = Worker::start(&conf, master.address()).unwrap();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+    let out = master.execute_named(&fn_name, 2, Value::I64(payload as i64)).unwrap();
+    master.shutdown();
+    match out[0] {
+        Value::F64(s) => Duration::from_secs_f64(s),
+        _ => panic!("bad bench result"),
+    }
+}
+
+fn main() {
+    mpignite::util::init_logger();
+    let fast = std::env::var("MPIGNITE_BENCH_FAST").is_ok();
+    let iters = if fast { 30 } else { 300 };
+
+    // ---- relay vs p2p over TCP (2 workers) ---------------------------
+    println!("\n== E1: relay vs p2p round-trip over TCP (2 ranks on 2 workers) ==");
+    let mut t = Table::new(vec!["payload", "relay RTT", "p2p RTT", "relay/p2p"]);
+    let mut csv = Table::new(vec!["payload_bytes", "relay_ns", "p2p_ns"]);
+    for payload in [8usize, 1024, 16 * 1024, 256 * 1024] {
+        let relay = cluster_pingpong("relay", payload, iters);
+        let p2p = cluster_pingpong("p2p", payload, iters);
+        let ratio = relay.as_secs_f64() / p2p.as_secs_f64();
+        t.row(vec![
+            fmt_bytes(payload as u64),
+            fmt_duration(relay),
+            fmt_duration(p2p),
+            format!("{ratio:.2}x"),
+        ]);
+        csv.row(vec![
+            payload.to_string(),
+            relay.as_nanos().to_string(),
+            p2p.as_nanos().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\n-- csv --\n{}", csv.to_csv());
+
+    // ---- local transport: matching-path ablation ----------------------
+    // posted-first (receiver waits) vs buffered-first (sender races ahead
+    // and the unexpected queue absorbs it — the paper's receiver-side
+    // buffering).
+    println!("== E1b: mailbox path ablation (local, 2 ranks, 8 B) ==");
+    let mut t = Table::new(vec!["path", "round trip"]);
+    for (name, recv_first) in [("posted-receive-first", true), ("buffered-first", false)] {
+        let iters = if fast { 200 } else { 2000 };
+        let out = run_local_world(2, move |comm| {
+            comm.barrier()?;
+            let t0 = Instant::now();
+            for i in 0..iters {
+                let tag = (i % 100) as i64;
+                if comm.rank() == 0 {
+                    if recv_first {
+                        // Post receive, then nudge: peer replies after.
+                        let f = comm.receive_async::<i64>(1, tag)?;
+                        comm.send(1, tag, 1i64)?;
+                        let _ = f.wait()?;
+                    } else {
+                        comm.send(1, tag, 1i64)?;
+                        // Delay our receive so the reply lands in the
+                        // unexpected queue first.
+                        std::thread::yield_now();
+                        let _: i64 = comm.receive(1, tag)?;
+                    }
+                } else {
+                    let _: i64 = comm.receive(0, tag)?;
+                    comm.send(0, tag, 2i64)?;
+                }
+            }
+            Ok(t0.elapsed() / iters as u32)
+        })
+        .unwrap();
+        t.row(vec![name.to_string(), fmt_duration(out[0])]);
+    }
+    print!("{}", t.render());
+}

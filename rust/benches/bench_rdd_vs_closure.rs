@@ -1,0 +1,85 @@
+//! E5 — closure model vs plain RDD on the same computation (the paper's
+//! own observation that Listing 1 "could have equivalently been written
+//! with traditional RDDs and a mapping function").
+//!
+//! Workload: 128×512 matvec, row-parallel. Expected shape: both models
+//! are within a small constant of each other for compute-bound work —
+//! the closure model's overhead is rank/world setup, the RDD model's is
+//! scheduler bookkeeping.
+
+use mpignite::bench::{black_box, BenchSuite, Throughput};
+use mpignite::prelude::*;
+use std::sync::Arc;
+
+const ROWS: usize = 128;
+const COLS: usize = 512;
+
+fn matrix() -> Vec<Vec<f64>> {
+    (0..ROWS)
+        .map(|i| (0..COLS).map(|j| ((i * 31 + j * 17) % 1000) as f64 / 1000.0).collect())
+        .collect()
+}
+
+fn main() {
+    mpignite::util::init_logger();
+    let sc = IgniteContext::local(4);
+    let mat = Arc::new(matrix());
+    let x: Arc<Vec<f64>> = Arc::new((0..COLS).map(|j| (j % 7) as f64).collect());
+
+    let mut suite = BenchSuite::new("E5: RDD map/reduce vs parallel closure (128x512 matvec)");
+
+    // --- data parallel: RDD of rows, map to dot products, sum ---------
+    {
+        let mat = mat.clone();
+        let x = x.clone();
+        let sc_rdd = IgniteContext::local(4);
+        suite.bench_throughput("rdd_map_reduce", Throughput::Items(ROWS as u64), move || {
+            let rows: Vec<Vec<f64>> = (*mat).clone();
+            let x = x.clone();
+            let total: f64 = sc_rdd
+                .parallelize(rows)
+                .map(move |row| row.iter().zip(x.iter()).map(|(a, b)| a * b).sum::<f64>())
+                .reduce(|a, b| a + b)
+                .unwrap();
+            black_box(total);
+        });
+    }
+
+    // --- task parallel: parallel closure, one row block per rank ------
+    {
+        let mat = mat.clone();
+        let x = x.clone();
+        let sc2 = sc;
+        suite.bench_throughput("parallel_closure", Throughput::Items(ROWS as u64), move || {
+            let mat = mat.clone();
+            let x = x.clone();
+            let partials = sc2
+                .parallelize_func(move |world: &SparkComm| {
+                    let per = ROWS / world.size();
+                    let r0 = world.rank() * per;
+                    let local: f64 = (r0..r0 + per)
+                        .map(|i| mat[i].iter().zip(x.iter()).map(|(a, b)| a * b).sum::<f64>())
+                        .sum();
+                    world.all_reduce(local, |a, b| a + b).unwrap()
+                })
+                .execute(4)
+                .unwrap();
+            black_box(partials[0]);
+        });
+    }
+
+    // --- single-threaded reference (floor) ------------------------------
+    {
+        let mat = mat.clone();
+        let x = x.clone();
+        suite.bench_throughput("single_thread_floor", Throughput::Items(ROWS as u64), move || {
+            let total: f64 = mat
+                .iter()
+                .map(|row| row.iter().zip(x.iter()).map(|(a, b)| a * b).sum::<f64>())
+                .sum();
+            black_box(total);
+        });
+    }
+
+    suite.report();
+}

@@ -1,0 +1,47 @@
+//! E2 — ring latency scaling (the paper's Listing 2 pattern).
+//!
+//! One token traverses an N-rank ring; reported latency is per full
+//! traversal, so the expected shape is ~linear in N (each hop is one
+//! mailbox enqueue + wakeup in local mode).
+//!
+//! Run: `cargo bench --bench bench_ring` (MPIGNITE_BENCH_FAST=1 to smoke).
+
+use mpignite::bench::time_world_op;
+use mpignite::util::{fmt_duration, Table};
+
+fn ring_once(comm: &mpignite::comm::SparkComm, tag: i64) {
+    let rank = comm.rank();
+    let size = comm.size();
+    if size == 1 {
+        return;
+    }
+    if rank == 0 {
+        comm.send(1, tag, 1i64).unwrap();
+        let _: i64 = comm.receive((size - 1) as i64, tag).unwrap();
+    } else {
+        let t: i64 = comm.receive((rank - 1) as i64, tag).unwrap();
+        comm.send((rank + 1) % size, tag, t).unwrap();
+    }
+}
+
+fn main() {
+    mpignite::util::init_logger();
+    let fast = std::env::var("MPIGNITE_BENCH_FAST").is_ok();
+    let iters = if fast { 50 } else { 500 };
+
+    let mut table = Table::new(vec!["ranks", "ring traversal", "per hop"]);
+    let mut csv = Table::new(vec!["ranks", "traversal_ns", "per_hop_ns"]);
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let per_iter = time_world_op(n, iters, |comm, i| ring_once(comm, (i % 1000) as i64));
+        let per_hop = per_iter / n as u32;
+        table.row(vec![n.to_string(), fmt_duration(per_iter), fmt_duration(per_hop)]);
+        csv.row(vec![
+            n.to_string(),
+            per_iter.as_nanos().to_string(),
+            per_hop.as_nanos().to_string(),
+        ]);
+    }
+    println!("\n== E2: ring latency vs ranks (local transport) ==");
+    print!("{}", table.render());
+    println!("\n-- csv --\n{}", csv.to_csv());
+}

@@ -1,0 +1,35 @@
+//! E4 — communicator split cost: the gather-sort-broadcast protocol at
+//! the lowest participating rank (paper §3.1), vs ranks and color count.
+//!
+//! Expected shape: linear in ranks (root receives N reports and sends N
+//! results); color count barely matters (same message volume).
+
+use mpignite::bench::time_world_op;
+use mpignite::util::{fmt_duration, Table};
+
+fn main() {
+    mpignite::util::init_logger();
+    let fast = std::env::var("MPIGNITE_BENCH_FAST").is_ok();
+    let iters = if fast { 20 } else { 200 };
+
+    println!("\n== E4: split(color, key) latency ==");
+    let mut t = Table::new(vec!["ranks", "colors", "split latency"]);
+    let mut csv = Table::new(vec!["ranks", "colors", "split_ns"]);
+    for n in [4usize, 16, 64] {
+        for colors in [1usize, 4, 8] {
+            if colors > n {
+                continue;
+            }
+            let d = time_world_op(n, iters, move |comm, _| {
+                let sub = comm
+                    .split((comm.rank() % colors) as i64, comm.rank() as i64)
+                    .unwrap();
+                std::hint::black_box(sub.size());
+            });
+            t.row(vec![n.to_string(), colors.to_string(), fmt_duration(d)]);
+            csv.row(vec![n.to_string(), colors.to_string(), d.as_nanos().to_string()]);
+        }
+    }
+    print!("{}", t.render());
+    println!("\n-- csv --\n{}", csv.to_csv());
+}

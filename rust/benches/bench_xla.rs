@@ -1,0 +1,113 @@
+//! E8 — the compute hot path: AOT Pallas matvec artifacts through PJRT
+//! vs a naive pure-Rust matvec, across matrix sizes.
+//!
+//! Expected shape: XLA wins increasingly with size (vectorized dot loops
+//! vs scalar loop); the artifact path's fixed overhead (channel round
+//! trip + literal marshalling) dominates at tiny sizes.
+//!
+//! Requires `make artifacts`; exits 0 with a notice otherwise.
+
+use mpignite::bench::{black_box, BenchSuite, Throughput};
+use mpignite::rng::Xoshiro256;
+use mpignite::runtime::{shared_service, TensorF32};
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n).map(|_| rng.next_f32() - 0.5).collect()
+}
+
+fn naive_matvec(a: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+    let mut y = vec![0f32; n];
+    for i in 0..n {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = 0f32;
+        for j in 0..n {
+            acc += row[j] * x[j];
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+fn main() {
+    mpignite::util::init_logger();
+    let svc = match shared_service("artifacts") {
+        Ok(s) => s,
+        Err(e) => {
+            println!("bench_xla skipped: {e}");
+            return;
+        }
+    };
+
+    let mut suite = BenchSuite::new("E8: Pallas/XLA artifact vs naive Rust matvec");
+    for n in [256usize, 512, 1024] {
+        let a = rand_vec(n * n, 1);
+        let x = rand_vec(n, 2);
+        let flops = (2 * n * n) as u64;
+
+        // Correctness cross-check first (runtime vs naive).
+        let name = format!("matvec_f32_{n}x{n}");
+        let y_xla = svc
+            .matvec(&name, TensorF32::matrix(a.clone(), n, n), TensorF32::vec(x.clone()))
+            .unwrap();
+        let y_ref = naive_matvec(&a, &x, n);
+        for i in 0..n {
+            assert!(
+                (y_xla[i] - y_ref[i]).abs() < 1e-2 * (1.0 + y_ref[i].abs()),
+                "mismatch at {i}: {} vs {}",
+                y_xla[i],
+                y_ref[i]
+            );
+        }
+
+        {
+            let (a, x) = (a.clone(), x.clone());
+            suite.bench_throughput(
+                format!("naive_rust_{n}x{n}"),
+                Throughput::Items(flops),
+                move || {
+                    black_box(naive_matvec(&a, &x, n));
+                },
+            );
+        }
+        {
+            let svc = svc.clone();
+            let (a, x) = (a.clone(), x.clone());
+            let name2 = name.clone();
+            suite.bench_throughput(
+                format!("xla_artifact_{n}x{n}"),
+                Throughput::Items(flops),
+                move || {
+                    let y = svc
+                        .matvec(
+                            &name2,
+                            TensorF32::matrix(a.clone(), n, n),
+                            TensorF32::vec(x.clone()),
+                        )
+                        .unwrap();
+                    black_box(y);
+                },
+            );
+        }
+        {
+            // §Perf variant: the matrix lives in a cached device buffer;
+            // only the vector is marshalled per call.
+            let svc = svc.clone();
+            let a = std::sync::Arc::new(TensorF32::matrix(a.clone(), n, n));
+            let x = x.clone();
+            let key = format!("bench.tile.{n}");
+            suite.bench_throughput(
+                format!("xla_cached_tile_{n}x{n}"),
+                Throughput::Items(flops),
+                move || {
+                    let y = svc
+                        .matvec_cached(&name, &key, &a, TensorF32::vec(x.clone()))
+                        .unwrap();
+                    black_box(y);
+                },
+            );
+        }
+    }
+    suite.report();
+    println!("\n(throughput items = flops; compare xla vs naive rows per size)");
+}

@@ -1,0 +1,289 @@
+//! `xbench` — the benchmark harness (the vendor set has no `criterion`).
+//!
+//! Each bench binary (under `rust/benches/`, `harness = false`) builds a
+//! [`BenchSuite`], registers closures, and calls `run()`. The harness does
+//! per-bench warmup, adaptive iteration batching to amortize timer
+//! overhead, robust stats (median + MAD), and prints both an aligned table
+//! and CSV (for EXPERIMENTS.md).
+
+use crate::util::{fmt_duration, Table};
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// Optional throughput denominator: items or bytes per iteration.
+    pub throughput: Option<Throughput>,
+}
+
+/// Throughput units for a bench.
+#[derive(Debug, Clone, Copy)]
+pub enum Throughput {
+    Items(u64),
+    Bytes(u64),
+}
+
+impl BenchResult {
+    pub fn throughput_desc(&self) -> String {
+        match self.throughput {
+            None => String::new(),
+            Some(Throughput::Items(n)) => {
+                let per_sec = n as f64 / self.median.as_secs_f64();
+                if per_sec >= 1e6 {
+                    format!("{:.2} Mitems/s", per_sec / 1e6)
+                } else {
+                    format!("{:.1} items/s", per_sec)
+                }
+            }
+            Some(Throughput::Bytes(b)) => {
+                let per_sec = b as f64 / self.median.as_secs_f64();
+                format!("{:.1} MiB/s", per_sec / (1024.0 * 1024.0))
+            }
+        }
+    }
+}
+
+/// Harness options (overridable from env for quick local runs).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOptions {
+    /// Target total measurement time per bench.
+    pub measure_time: Duration,
+    /// Warmup time per bench.
+    pub warmup_time: Duration,
+    /// Number of samples (batches) to collect.
+    pub samples: usize,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        // MPIGNITE_BENCH_FAST=1 shrinks times for CI/smoke runs.
+        if std::env::var("MPIGNITE_BENCH_FAST").is_ok() {
+            BenchOptions {
+                measure_time: Duration::from_millis(200),
+                warmup_time: Duration::from_millis(50),
+                samples: 10,
+            }
+        } else {
+            BenchOptions {
+                measure_time: Duration::from_secs(1),
+                warmup_time: Duration::from_millis(200),
+                samples: 20,
+            }
+        }
+    }
+}
+
+/// A collection of named benchmarks sharing options and a report.
+pub struct BenchSuite {
+    pub title: String,
+    options: BenchOptions,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: impl Into<String>) -> Self {
+        BenchSuite { title: title.into(), options: BenchOptions::default(), results: Vec::new() }
+    }
+
+    pub fn with_options(mut self, options: BenchOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Measure `f` (one logical iteration per call).
+    pub fn bench(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_with_throughput(name, None, move || f())
+    }
+
+    /// Measure `f`, reporting throughput per iteration.
+    pub fn bench_throughput(
+        &mut self,
+        name: impl Into<String>,
+        throughput: Throughput,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        self.bench_with_throughput(name, Some(throughput), move || f())
+    }
+
+    fn bench_with_throughput(
+        &mut self,
+        name: impl Into<String>,
+        throughput: Option<Throughput>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        let name = name.into();
+        let opts = self.options;
+
+        // Warmup + estimate cost of one iteration.
+        let warmup_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warmup_start.elapsed() < opts.warmup_time || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let est_per_iter = warmup_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // Choose batch size so each sample takes ~measure_time/samples.
+        let per_sample = opts.measure_time.as_secs_f64() / opts.samples as f64;
+        let batch = ((per_sample / est_per_iter.max(1e-9)) as u64).clamp(1, 10_000_000);
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(opts.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..opts.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed();
+            samples_ns.push(dt.as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let median = samples_ns[samples_ns.len() / 2];
+        let p95 = samples_ns[((samples_ns.len() as f64 * 0.95) as usize).min(samples_ns.len() - 1)];
+        let min = samples_ns[0];
+
+        let result = BenchResult {
+            name,
+            iters: total_iters,
+            mean: Duration::from_nanos(mean as u64),
+            median: Duration::from_nanos(median as u64),
+            p95: Duration::from_nanos(p95 as u64),
+            min: Duration::from_nanos(min as u64),
+            throughput,
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render the report table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(vec!["benchmark", "median", "mean", "p95", "min", "iters", "throughput"]);
+        for r in &self.results {
+            t.row(vec![
+                r.name.clone(),
+                fmt_duration(r.median),
+                fmt_duration(r.mean),
+                fmt_duration(r.p95),
+                fmt_duration(r.min),
+                r.iters.to_string(),
+                r.throughput_desc(),
+            ]);
+        }
+        t
+    }
+
+    /// Print table + CSV block; called at the end of each bench binary.
+    pub fn report(&self) {
+        println!("\n== {} ==", self.title);
+        print!("{}", self.table().render());
+        println!("\n-- csv --");
+        let mut csv = Table::new(vec!["benchmark", "median_ns", "mean_ns", "p95_ns", "min_ns", "iters"]);
+        for r in &self.results {
+            csv.row(vec![
+                r.name.clone(),
+                r.median.as_nanos().to_string(),
+                r.mean.as_nanos().to_string(),
+                r.p95.as_nanos().to_string(),
+                r.min.as_nanos().to_string(),
+                r.iters.to_string(),
+            ]);
+        }
+        print!("{}", csv.to_csv());
+    }
+}
+
+/// Prevent the optimizer from removing a computed value (stable-Rust
+/// equivalent of `std::hint::black_box` — which exists, so use it).
+pub fn black_box<T>(v: T) -> T {
+    std::hint::black_box(v)
+}
+
+/// Time a collective/peer pattern on a persistent `n`-rank local world:
+/// every rank runs `op` `iters` times (with a barrier before timing
+/// starts), rank 0 measures, and the mean per-iteration latency is
+/// returned. Avoids counting thread-spawn cost in the measurement —
+/// the pattern used by all comm-layer benches (E1–E4).
+pub fn time_world_op<F>(n_ranks: usize, iters: usize, op: F) -> Duration
+where
+    F: Fn(&crate::comm::SparkComm, usize) + Send + Sync + 'static,
+{
+    let out = crate::comm::run_local_world(n_ranks, move |comm| {
+        comm.barrier()?;
+        let t0 = Instant::now();
+        for i in 0..iters {
+            op(comm, i);
+        }
+        let dt = t0.elapsed();
+        comm.barrier()?;
+        Ok(dt)
+    })
+    .expect("bench world failed");
+    out[0] / iters as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_opts() -> BenchOptions {
+        BenchOptions {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(2),
+            samples: 4,
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let mut suite = BenchSuite::new("t").with_options(fast_opts());
+        let r = suite.bench("sum", || {
+            let s: u64 = black_box((0..100u64).sum());
+            black_box(s);
+        });
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn ordering_of_fast_vs_slow() {
+        let mut suite = BenchSuite::new("t").with_options(fast_opts());
+        suite.bench("fast", || {
+            black_box(1 + 1);
+        });
+        suite.bench("slow", || {
+            let mut v = 0u64;
+            for i in 0..5_000u64 {
+                v = v.wrapping_add(black_box(i));
+            }
+            black_box(v);
+        });
+        let rs = suite.results();
+        assert!(rs[1].median > rs[0].median, "slow should be slower");
+    }
+
+    #[test]
+    fn throughput_descriptions() {
+        let mut suite = BenchSuite::new("t").with_options(fast_opts());
+        let r = suite.bench_throughput("bytes", Throughput::Bytes(1024 * 1024), || {
+            black_box(0u8);
+        });
+        assert!(r.throughput_desc().contains("MiB/s"));
+        let table = suite.table();
+        assert_eq!(table.num_rows(), 1);
+    }
+}

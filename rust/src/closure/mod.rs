@@ -1,0 +1,253 @@
+//! Parallel closures — the paper's programming model (§3.2).
+//!
+//! A parallel section is a first-class function `f(&SparkComm) -> R`
+//! passed to `parallelize_func`, yielding a [`FuncRdd`]; `execute(n)`
+//! launches `n` ranked instances and returns the array of per-rank
+//! results. "Once a closure is executed in the driver application, all
+//! instances of the parallel function must complete before the driver
+//! program can continue" — the implicit barrier is the join in
+//! [`FuncRdd::execute`]. [`FuncRdd::execute_async`] + [`ExecHandle`]
+//! provide the asynchronous chaining the paper lists as future work.
+//!
+//! Cluster mode cannot ship Rust closures across processes, so it uses a
+//! [`FuncRegistry`] of named functions (`register_parallel_fn`) taking a
+//! serializable [`Value`] argument — the documented substitution for
+//! Scala closure serialization (see DESIGN.md §2).
+
+use crate::comm::{CommWorld, SparkComm};
+use crate::error::{IgniteError, Result};
+use crate::metrics;
+use crate::ser::Value;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// The deferred handle produced by `parallelize_func` (analogous to an
+/// RDD built from a function instead of a dataset).
+pub struct FuncRdd<R: Send + 'static> {
+    pub(crate) world_factory: Arc<dyn Fn(usize) -> Arc<CommWorld> + Send + Sync>,
+    pub(crate) f: Arc<dyn Fn(&SparkComm) -> R + Send + Sync>,
+}
+
+impl<R: Send + 'static> Clone for FuncRdd<R> {
+    fn clone(&self) -> Self {
+        FuncRdd { world_factory: self.world_factory.clone(), f: self.f.clone() }
+    }
+}
+
+impl<R: Send + 'static> FuncRdd<R> {
+    pub(crate) fn new(
+        world_factory: Arc<dyn Fn(usize) -> Arc<CommWorld> + Send + Sync>,
+        f: Arc<dyn Fn(&SparkComm) -> R + Send + Sync>,
+    ) -> Self {
+        FuncRdd { world_factory, f }
+    }
+
+    /// Execute `n` concurrent instances; blocks until all complete (the
+    /// implicit barrier) and returns results indexed by rank.
+    pub fn execute(&self, n: usize) -> Result<Vec<R>> {
+        self.execute_async(n).wait()
+    }
+
+    /// Launch without blocking; the returned handle joins on demand —
+    /// the paper's "chaining these closures together asynchronously".
+    pub fn execute_async(&self, n: usize) -> ExecHandle<R> {
+        assert!(n > 0, "execute needs at least one instance");
+        metrics::global().counter("closure.executions").inc();
+        let world = (self.world_factory)(n);
+        let mut handles = Vec::with_capacity(n);
+        for rank in 0..n {
+            let world = Arc::clone(&world);
+            let f = Arc::clone(&self.f);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("par-fn-{rank}"))
+                    .spawn(move || {
+                        let comm = world.comm_for_rank(rank);
+                        f(&comm)
+                    })
+                    .expect("spawn parallel instance"),
+            );
+        }
+        ExecHandle { handles: Some(handles) }
+    }
+
+    /// Functional composition: run `self`, then feed the result array to
+    /// `g` on the driver (closure chaining building block).
+    pub fn then<S, G>(&self, n: usize, g: G) -> Result<S>
+    where
+        G: FnOnce(Vec<R>) -> S,
+    {
+        Ok(g(self.execute(n)?))
+    }
+}
+
+/// Join handle over an in-flight parallel execution.
+pub struct ExecHandle<R: Send + 'static> {
+    handles: Option<Vec<std::thread::JoinHandle<R>>>,
+}
+
+impl<R: Send + 'static> ExecHandle<R> {
+    /// Block for all instances (the implicit barrier).
+    pub fn wait(mut self) -> Result<Vec<R>> {
+        let handles = self.handles.take().expect("wait called twice");
+        let mut out = Vec::with_capacity(handles.len());
+        for (rank, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(v) => out.push(v),
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "unknown panic".into());
+                    return Err(IgniteError::Task(format!("rank {rank} panicked: {msg}")));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// True once every instance has finished.
+    pub fn is_finished(&self) -> bool {
+        self.handles
+            .as_ref()
+            .map(|hs| hs.iter().all(|h| h.is_finished()))
+            .unwrap_or(true)
+    }
+}
+
+// -------------------------------------------------- cluster registry --
+
+/// Signature of a registered (cluster-executable) parallel function.
+pub type NamedParallelFn = Arc<dyn Fn(&SparkComm, &Value) -> Result<Value> + Send + Sync>;
+
+/// Global registry of named parallel functions. Worker binaries register
+/// the same names as the driver (both link the same application crate),
+/// which is how cluster mode replaces closure serialization.
+#[derive(Default)]
+pub struct FuncRegistry {
+    fns: Mutex<HashMap<String, NamedParallelFn>>,
+}
+
+impl FuncRegistry {
+    pub fn register(&self, name: &str, f: NamedParallelFn) {
+        self.fns.lock().unwrap().insert(name.to_string(), f);
+    }
+
+    pub fn get(&self, name: &str) -> Result<NamedParallelFn> {
+        self.fns
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| IgniteError::Invalid(format!("no registered parallel fn '{name}'")))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.fns.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+static REGISTRY: Lazy<FuncRegistry> = Lazy::new(FuncRegistry::default);
+
+/// The process-wide registry.
+pub fn registry() -> &'static FuncRegistry {
+    &REGISTRY
+}
+
+/// Register a named parallel function (driver + workers must agree).
+pub fn register_parallel_fn(
+    name: &str,
+    f: impl Fn(&SparkComm, &Value) -> Result<Value> + Send + Sync + 'static,
+) {
+    registry().register(name, Arc::new(f));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IgniteConf;
+
+    fn local_factory() -> Arc<dyn Fn(usize) -> Arc<CommWorld> + Send + Sync> {
+        Arc::new(|n| CommWorld::local_with_conf(n, &IgniteConf::new()))
+    }
+
+    #[test]
+    fn execute_returns_per_rank_results() {
+        let rdd = FuncRdd::new(local_factory(), Arc::new(|c: &SparkComm| c.rank() * 2));
+        assert_eq!(rdd.execute(4).unwrap(), vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn implicit_barrier_joins_all() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static DONE: AtomicUsize = AtomicUsize::new(0);
+        let rdd = FuncRdd::new(
+            local_factory(),
+            Arc::new(|c: &SparkComm| {
+                std::thread::sleep(std::time::Duration::from_millis(c.rank() as u64 * 10));
+                DONE.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        rdd.execute(5).unwrap();
+        assert_eq!(DONE.load(Ordering::SeqCst), 5, "execute returned before all ranks finished");
+    }
+
+    #[test]
+    fn execute_async_and_wait() {
+        let rdd = FuncRdd::new(local_factory(), Arc::new(|c: &SparkComm| c.size()));
+        let handle = rdd.execute_async(3);
+        assert_eq!(handle.wait().unwrap(), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn then_chains_on_driver() {
+        let rdd = FuncRdd::new(local_factory(), Arc::new(|c: &SparkComm| c.rank() as i64));
+        let total: i64 = rdd.then(4, |v| v.into_iter().sum()).unwrap();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn panic_in_rank_reported_with_rank() {
+        let rdd = FuncRdd::new(
+            local_factory(),
+            Arc::new(|c: &SparkComm| {
+                if c.rank() == 2 {
+                    panic!("boom at rank 2");
+                }
+                c.rank()
+            }),
+        );
+        let err = rdd.execute(4).unwrap_err();
+        assert!(err.to_string().contains("rank 2"), "got: {err}");
+        assert!(err.to_string().contains("boom"), "got: {err}");
+    }
+
+    #[test]
+    fn reusable_and_cloneable() {
+        // "defined elsewhere and reused" — same FuncRdd, multiple widths.
+        let rdd = FuncRdd::new(local_factory(), Arc::new(|c: &SparkComm| c.size()));
+        assert_eq!(rdd.execute(2).unwrap(), vec![2, 2]);
+        assert_eq!(rdd.clone().execute(5).unwrap(), vec![5; 5]);
+    }
+
+    #[test]
+    fn registry_round_trip() {
+        register_parallel_fn("test.rank_plus", |comm, arg| {
+            let base = match arg {
+                Value::I64(v) => *v,
+                _ => 0,
+            };
+            Ok(Value::I64(base + comm.rank() as i64))
+        });
+        let f = registry().get("test.rank_plus").unwrap();
+        let world = CommWorld::local(2);
+        let comm = world.comm_for_rank(0);
+        assert_eq!(f(&comm, &Value::I64(10)).unwrap(), Value::I64(10));
+        assert!(registry().get("test.unknown").is_err());
+        assert!(registry().names().contains(&"test.rank_plus".to_string()));
+    }
+}

@@ -1,0 +1,174 @@
+//! Wire messages between master and workers.
+
+use crate::error::Result;
+use crate::ser::{Decode, Encode, Reader, Value};
+
+/// Worker → master: registration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegisterReq {
+    pub addr: String,
+    pub slots: u64,
+}
+
+impl Encode for RegisterReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.addr.encode(buf);
+        self.slots.encode(buf);
+    }
+}
+impl Decode for RegisterReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(RegisterReq { addr: String::decode(r)?, slots: u64::decode(r)? })
+    }
+}
+
+/// Master → worker: registration reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegisterResp {
+    pub worker_id: u64,
+}
+
+impl Encode for RegisterResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.worker_id.encode(buf);
+    }
+}
+impl Decode for RegisterResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(RegisterResp { worker_id: u64::decode(r)? })
+    }
+}
+
+/// Worker → master: liveness.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Heartbeat {
+    pub worker_id: u64,
+}
+
+impl Encode for Heartbeat {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.worker_id.encode(buf);
+    }
+}
+impl Decode for Heartbeat {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(Heartbeat { worker_id: u64::decode(r)? })
+    }
+}
+
+/// Master → worker: launch ranks of a named parallel function. Carries
+/// the rank→worker-address mapping the paper distributes with tasks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaunchReq {
+    pub job_id: u64,
+    pub fn_name: String,
+    pub world_size: u64,
+    pub ranks: Vec<u64>,
+    pub rank_table: Vec<(u64, String)>,
+    pub arg: Value,
+    pub relay_mode: bool,
+    /// Job-scoped base context id (isolates messages across jobs).
+    pub context: u64,
+}
+
+impl Encode for LaunchReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.job_id.encode(buf);
+        self.fn_name.encode(buf);
+        self.world_size.encode(buf);
+        self.ranks.encode(buf);
+        self.rank_table.encode(buf);
+        self.arg.encode(buf);
+        self.relay_mode.encode(buf);
+        self.context.encode(buf);
+    }
+}
+impl Decode for LaunchReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(LaunchReq {
+            job_id: u64::decode(r)?,
+            fn_name: String::decode(r)?,
+            world_size: u64::decode(r)?,
+            ranks: Vec::<u64>::decode(r)?,
+            rank_table: Vec::<(u64, String)>::decode(r)?,
+            arg: Value::decode(r)?,
+            relay_mode: bool::decode(r)?,
+            context: u64::decode(r)?,
+        })
+    }
+}
+
+/// Worker → master: one rank's result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskResult {
+    pub job_id: u64,
+    pub rank: usize,
+    pub ok: bool,
+    pub value: Value,
+    pub error: String,
+}
+
+impl Encode for TaskResult {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.job_id.encode(buf);
+        self.rank.encode(buf);
+        self.ok.encode(buf);
+        self.value.encode(buf);
+        self.error.encode(buf);
+    }
+}
+impl Decode for TaskResult {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(TaskResult {
+            job_id: u64::decode(r)?,
+            rank: usize::decode(r)?,
+            ok: bool::decode(r)?,
+            value: Value::decode(r)?,
+            error: String::decode(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::{from_bytes, to_bytes};
+
+    #[test]
+    fn launch_req_round_trip() {
+        let req = LaunchReq {
+            job_id: 3,
+            fn_name: "app.fn".into(),
+            world_size: 8,
+            ranks: vec![0, 2, 4],
+            rank_table: vec![(0, "127.0.0.1:1".into()), (1, "127.0.0.1:2".into())],
+            arg: Value::Map(vec![("n".into(), Value::I64(5))]),
+            relay_mode: true,
+            context: 3 << 20,
+        };
+        let back: LaunchReq = from_bytes(&to_bytes(&req)).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn task_result_round_trip_ok_and_err() {
+        for (ok, value, error) in [
+            (true, Value::F64(1.5), String::new()),
+            (false, Value::Unit, "rank exploded".to_string()),
+        ] {
+            let tr = TaskResult { job_id: 1, rank: 7, ok, value, error };
+            let back: TaskResult = from_bytes(&to_bytes(&tr)).unwrap();
+            assert_eq!(back, tr);
+        }
+    }
+
+    #[test]
+    fn register_and_heartbeat_round_trip() {
+        let req = RegisterReq { addr: "127.0.0.1:9".into(), slots: 4 };
+        assert_eq!(from_bytes::<RegisterReq>(&to_bytes(&req)).unwrap(), req);
+        let resp = RegisterResp { worker_id: 12 };
+        assert_eq!(from_bytes::<RegisterResp>(&to_bytes(&resp)).unwrap(), resp);
+        let hb = Heartbeat { worker_id: 12 };
+        assert_eq!(from_bytes::<Heartbeat>(&to_bytes(&hb)).unwrap(), hb);
+    }
+}

@@ -1,0 +1,710 @@
+//! Group communication built from the point-to-point primitives, exactly
+//! as the paper does ("Group communication is implemented from these
+//! primitives", §3.3). `broadcast` and `all_reduce` are the paper's
+//! prototype collectives; the rest are the natural extensions it defers
+//! to future work. Each collective exists in multiple algorithmic
+//! flavours (linear / binomial tree / ring / block-store) selected via
+//! config — the ablation the paper hints at when mentioning Spark's
+//! built-in broadcasting as a possibly more efficient strategy.
+//!
+//! Reduction closures are applied in communicator-rank order for the
+//! `Linear` and `Ring` algorithms (requires associativity); the `Tree`
+//! algorithm additionally requires commutativity.
+
+use super::message::internal_tags::{
+    ALLGATHER, ALLREDUCE_RING, ALLTOALL, BARRIER_DOWN, BARRIER_UP, BCAST, GATHER, REDUCE, SCAN,
+    SCATTER,
+};
+use super::{CollectiveAlgo, SparkComm};
+use crate::error::{IgniteError, Result};
+use crate::ser::{FromValue, IntoValue, Value};
+
+impl SparkComm {
+    // ---------------------------------------------------------- bcast --
+
+    /// Broadcast from `root`: the root passes `Some(data)`, the others
+    /// `None`; everyone returns the broadcast value (the paper's
+    /// `comm.broadcast[T](root, data?)`: "recipients of a broadcast
+    /// message only need to indicate the root rank").
+    pub fn broadcast<T: IntoValue + FromValue>(&self, root: usize, data: Option<T>) -> Result<T> {
+        self.broadcast_with(self.bcast_algo(), root, data)
+    }
+
+    /// Broadcast with an explicit algorithm (used by the E3 ablation).
+    pub fn broadcast_with<T: IntoValue + FromValue>(
+        &self,
+        algo: CollectiveAlgo,
+        root: usize,
+        data: Option<T>,
+    ) -> Result<T> {
+        let size = self.size();
+        if root >= size {
+            return Err(IgniteError::Comm(format!("broadcast root {root} out of range")));
+        }
+        let is_root = self.rank() == root;
+        if is_root && data.is_none() {
+            return Err(IgniteError::Comm("broadcast root must supply data".into()));
+        }
+        if size == 1 {
+            return Ok(data.expect("checked above"));
+        }
+        let value = data.map(IntoValue::into_value);
+        let out = match algo {
+            CollectiveAlgo::Linear => self.bcast_linear(root, value)?,
+            CollectiveAlgo::Tree | CollectiveAlgo::Ring => self.bcast_tree(root, value)?,
+            CollectiveAlgo::BlockStore => self.bcast_blockstore(root, value)?,
+        };
+        T::from_value(out)
+    }
+
+    fn bcast_linear(&self, root: usize, value: Option<Value>) -> Result<Value> {
+        if self.rank() == root {
+            let v = value.unwrap();
+            for r in 0..self.size() {
+                if r != root {
+                    self.send_internal(r, BCAST, v.clone())?;
+                }
+            }
+            Ok(v)
+        } else {
+            self.internal_recv(root as i64, BCAST)
+        }
+    }
+
+    /// Binomial-tree broadcast (MPICH shape).
+    fn bcast_tree(&self, root: usize, value: Option<Value>) -> Result<Value> {
+        let size = self.size();
+        let relative = (self.rank() + size - root) % size;
+        let mut mask = 1usize;
+        let mut v = value;
+        // Receive from parent (non-roots).
+        while mask < size {
+            if relative & mask != 0 {
+                let parent = ((relative ^ mask) + root) % size;
+                v = Some(self.internal_recv(parent as i64, BCAST)?);
+                break;
+            }
+            mask <<= 1;
+        }
+        // Send to children with strictly smaller masks.
+        mask >>= 1;
+        let v = v.ok_or_else(|| IgniteError::Comm("tree bcast missing value".into()))?;
+        let mut m = mask;
+        while m > 0 {
+            if relative + m < size && relative & (m - 1) == 0 && relative & m == 0 {
+                let child = (relative + m + root) % size;
+                self.send_internal(child, BCAST, v.clone())?;
+            }
+            m >>= 1;
+        }
+        Ok(v)
+    }
+
+    fn bcast_blockstore(&self, root: usize, value: Option<Value>) -> Result<Value> {
+        let seq = self.next_bcast_seq();
+        if self.rank() == root {
+            let v = value.unwrap();
+            self.bcast_store_put(seq, v.clone());
+            Ok(v)
+        } else {
+            self.bcast_store_get(seq)
+        }
+    }
+
+    // --------------------------------------------------------- reduce --
+
+    /// Reduce `data` at `root` with `f`; returns `Some(total)` at root,
+    /// `None` elsewhere.
+    pub fn reduce<T, F>(&self, root: usize, data: T, f: F) -> Result<Option<T>>
+    where
+        T: IntoValue + FromValue,
+        F: Fn(T, T) -> T,
+    {
+        let size = self.size();
+        if root >= size {
+            return Err(IgniteError::Comm(format!("reduce root {root} out of range")));
+        }
+        if size == 1 {
+            return Ok(Some(data));
+        }
+        // Rank-ordered fold at the root (associative-only requirement).
+        self.gather_fold(root, data, &f)
+    }
+
+    // ------------------------------------------------------ allreduce --
+
+    /// All-reduce with an arbitrary reduction closure (the paper's
+    /// signature enhancement over MPI's fixed op set).
+    pub fn all_reduce<T, F>(&self, data: T, f: F) -> Result<T>
+    where
+        T: IntoValue + FromValue + Clone,
+        F: Fn(T, T) -> T,
+    {
+        self.all_reduce_with(self.allreduce_algo(), data, f)
+    }
+
+    /// All-reduce with an explicit algorithm.
+    pub fn all_reduce_with<T, F>(&self, algo: CollectiveAlgo, data: T, f: F) -> Result<T>
+    where
+        T: IntoValue + FromValue + Clone,
+        F: Fn(T, T) -> T,
+    {
+        let size = self.size();
+        if size == 1 {
+            return Ok(data);
+        }
+        match algo {
+            CollectiveAlgo::Ring => self.all_reduce_ring(data, f),
+            // Linear and Tree share the gather shape; tree bcast differs.
+            CollectiveAlgo::Linear | CollectiveAlgo::BlockStore => {
+                let total = self.gather_fold(0, data, &f)?;
+                self.broadcast_with(CollectiveAlgo::Linear, 0, total)
+            }
+            CollectiveAlgo::Tree => {
+                let total = self.gather_fold(0, data, &f)?;
+                self.broadcast_with(CollectiveAlgo::Tree, 0, total)
+            }
+        }
+    }
+
+    /// Rank-ordered fold at `root` (building block for allreduce).
+    fn gather_fold<T, F>(&self, root: usize, data: T, f: &F) -> Result<Option<T>>
+    where
+        T: IntoValue + FromValue,
+        F: Fn(T, T) -> T,
+    {
+        if self.rank() == root {
+            let size = self.size();
+            let mut parts: Vec<Option<Value>> = (0..size).map(|_| None).collect();
+            parts[root] = Some(data.into_value());
+            for _ in 0..size - 1 {
+                let v = self.internal_recv(super::ANY_SOURCE, REDUCE)?;
+                match v {
+                    Value::List(mut l) if l.len() == 2 => {
+                        let payload = l.pop().unwrap();
+                        let src = match l.pop().unwrap() {
+                            Value::I64(r) => r as usize,
+                            _ => return Err(IgniteError::Comm("bad reduce part".into())),
+                        };
+                        parts[src] = Some(payload);
+                    }
+                    _ => return Err(IgniteError::Comm("bad reduce part".into())),
+                }
+            }
+            let mut acc: Option<T> = None;
+            for p in parts.into_iter() {
+                let v = T::from_value(p.ok_or_else(|| {
+                    IgniteError::Comm("missing reduce contribution".into())
+                })?)?;
+                acc = Some(match acc {
+                    None => v,
+                    Some(a) => f(a, v),
+                });
+            }
+            Ok(acc)
+        } else {
+            let tagged = Value::List(vec![
+                Value::I64(self.rank() as i64),
+                data.into_value(),
+            ]);
+            self.send_internal(root, REDUCE, tagged)?;
+            Ok(None)
+        }
+    }
+
+    /// Ring allreduce: accumulate 0→N−1 (rank order), then circulate the
+    /// total back around.
+    fn all_reduce_ring<T, F>(&self, data: T, f: F) -> Result<T>
+    where
+        T: IntoValue + FromValue + Clone,
+        F: Fn(T, T) -> T,
+    {
+        let size = self.size();
+        let rank = self.rank();
+        let next = (rank + 1) % size;
+        let prev = (rank + size - 1) % size;
+
+        // Phase 1: partial sums travel 0 → 1 → ... → N−1.
+        let acc = if rank == 0 {
+            data.clone()
+        } else {
+            let prev_acc: T = T::from_value(self.internal_recv(prev as i64, ALLREDUCE_RING)?)?;
+            f(prev_acc, data.clone())
+        };
+        if rank != size - 1 {
+            self.send_internal(next, ALLREDUCE_RING, acc.clone().into_value())?;
+            // Phase 2: total comes back around from the end of the ring.
+            let total: T = T::from_value(self.internal_recv(prev as i64, ALLREDUCE_RING)?)?;
+            if next != size - 1 {
+                self.send_internal(next, ALLREDUCE_RING, total.clone().into_value())?;
+            }
+            Ok(total)
+        } else {
+            // Last rank holds the total; start phase 2.
+            self.send_internal(next, ALLREDUCE_RING, acc.clone().into_value())?;
+            Ok(acc)
+        }
+    }
+
+    // --------------------------------------------------------- gather --
+
+    /// Gather all ranks' data at `root` in rank order.
+    pub fn gather<T: IntoValue + FromValue>(&self, root: usize, data: T) -> Result<Option<Vec<T>>> {
+        if root >= self.size() {
+            return Err(IgniteError::Comm(format!("gather root {root} out of range")));
+        }
+        if self.rank() == root {
+            let size = self.size();
+            let mut parts: Vec<Option<Value>> = (0..size).map(|_| None).collect();
+            parts[root] = Some(data.into_value());
+            for _ in 0..size - 1 {
+                let v = self.internal_recv(super::ANY_SOURCE, GATHER)?;
+                match v {
+                    Value::List(mut l) if l.len() == 2 => {
+                        let payload = l.pop().unwrap();
+                        let src = match l.pop().unwrap() {
+                            Value::I64(r) => r as usize,
+                            _ => return Err(IgniteError::Comm("bad gather part".into())),
+                        };
+                        parts[src] = Some(payload);
+                    }
+                    _ => return Err(IgniteError::Comm("bad gather part".into())),
+                }
+            }
+            parts
+                .into_iter()
+                .map(|p| {
+                    T::from_value(
+                        p.ok_or_else(|| IgniteError::Comm("missing gather part".into()))?,
+                    )
+                })
+                .collect::<Result<Vec<T>>>()
+                .map(Some)
+        } else {
+            let tagged =
+                Value::List(vec![Value::I64(self.rank() as i64), data.into_value()]);
+            self.send_internal(root, GATHER, tagged)?;
+            Ok(None)
+        }
+    }
+
+    /// Gather everywhere: every rank returns the full rank-ordered vector.
+    pub fn all_gather<T: IntoValue + FromValue + Clone>(&self, data: T) -> Result<Vec<T>> {
+        let gathered = self.gather(0, data)?;
+        let as_value: Option<Value> = gathered
+            .map(|v| Value::List(v.into_iter().map(IntoValue::into_value).collect()));
+        let all = self.broadcast_with_tag_list(as_value)?;
+        all.into_iter().map(T::from_value).collect()
+    }
+
+    fn broadcast_with_tag_list(&self, data: Option<Value>) -> Result<Vec<Value>> {
+        let size = self.size();
+        if size == 1 {
+            return match data {
+                Some(Value::List(l)) => Ok(l),
+                _ => Err(IgniteError::Comm("allgather inconsistency".into())),
+            };
+        }
+        let v = if self.rank() == 0 {
+            let v = data.ok_or_else(|| IgniteError::Comm("allgather root missing data".into()))?;
+            for r in 1..size {
+                self.send_internal(r, ALLGATHER, v.clone())?;
+            }
+            v
+        } else {
+            self.internal_recv(0, ALLGATHER)?
+        };
+        match v {
+            Value::List(l) => Ok(l),
+            other => Err(IgniteError::Comm(format!("bad allgather value {}", other.type_name()))),
+        }
+    }
+
+    // -------------------------------------------------------- scatter --
+
+    /// Scatter: root supplies one item per rank; each rank returns its
+    /// item.
+    pub fn scatter<T: IntoValue + FromValue>(
+        &self,
+        root: usize,
+        data: Option<Vec<T>>,
+    ) -> Result<T> {
+        let size = self.size();
+        if root >= size {
+            return Err(IgniteError::Comm(format!("scatter root {root} out of range")));
+        }
+        if self.rank() == root {
+            let items = data
+                .ok_or_else(|| IgniteError::Comm("scatter root must supply data".into()))?;
+            if items.len() != size {
+                return Err(IgniteError::Comm(format!(
+                    "scatter needs {size} items, got {}",
+                    items.len()
+                )));
+            }
+            let mut own: Option<T> = None;
+            for (r, item) in items.into_iter().enumerate() {
+                if r == root {
+                    own = Some(item);
+                } else {
+                    self.send_internal(r, SCATTER, item.into_value())?;
+                }
+            }
+            Ok(own.unwrap())
+        } else {
+            T::from_value(self.internal_recv(root as i64, SCATTER)?)
+        }
+    }
+
+    // ----------------------------------------------------------- scan --
+
+    /// Inclusive prefix reduction in rank order (MPI_Scan).
+    pub fn scan<T, F>(&self, data: T, f: F) -> Result<T>
+    where
+        T: IntoValue + FromValue + Clone,
+        F: Fn(T, T) -> T,
+    {
+        let rank = self.rank();
+        let size = self.size();
+        let mine = if rank == 0 {
+            data
+        } else {
+            let acc: T = T::from_value(self.internal_recv((rank - 1) as i64, SCAN)?)?;
+            f(acc, data)
+        };
+        if rank + 1 < size {
+            self.send_internal(rank + 1, SCAN, mine.clone().into_value())?;
+        }
+        Ok(mine)
+    }
+
+    // ------------------------------------------------------ all-to-all --
+
+    /// Personalized all-to-all (MPI_Alltoall): `data[i]` goes to rank `i`;
+    /// returns the vector of items received, indexed by source rank.
+    pub fn all_to_all<T: IntoValue + FromValue>(&self, data: Vec<T>) -> Result<Vec<T>> {
+        let size = self.size();
+        if data.len() != size {
+            return Err(IgniteError::Comm(format!(
+                "all_to_all needs {size} items, got {}",
+                data.len()
+            )));
+        }
+        let mut own: Option<Value> = None;
+        for (dst, item) in data.into_iter().enumerate() {
+            if dst == self.rank() {
+                own = Some(item.into_value());
+            } else {
+                self.send_internal(dst, ALLTOALL, item.into_value())?;
+            }
+        }
+        let mut out: Vec<Option<Value>> = (0..size).map(|_| None).collect();
+        out[self.rank()] = own;
+        for src in 0..size {
+            if src != self.rank() {
+                out[src] = Some(self.internal_recv(src as i64, ALLTOALL)?);
+            }
+        }
+        out.into_iter()
+            .map(|v| T::from_value(v.expect("filled above")))
+            .collect()
+    }
+
+    // -------------------------------------------------------- barrier --
+
+    /// Synchronize all ranks (tree reduce + tree release).
+    pub fn barrier(&self) -> Result<()> {
+        let size = self.size();
+        if size == 1 {
+            return Ok(());
+        }
+        let rank = self.rank();
+        // Up phase: binomial-tree fan-in to rank 0.
+        let mut mask = 1usize;
+        while mask < size {
+            if rank & mask != 0 {
+                let parent = rank & !mask;
+                self.send_internal(parent, BARRIER_UP, Value::Unit)?;
+                break;
+            } else if rank | mask < size {
+                let child = rank | mask;
+                let _ = self.internal_recv(child as i64, BARRIER_UP)?;
+            }
+            mask <<= 1;
+        }
+        // Down phase: release in reverse.
+        if rank != 0 {
+            let mut m = 1usize;
+            while m < size {
+                if rank & m != 0 {
+                    let parent = rank & !m;
+                    let _ = self.internal_recv(parent as i64, BARRIER_DOWN)?;
+                    break;
+                }
+                m <<= 1;
+            }
+        }
+        let mut m = mask >> 1;
+        // For rank 0, mask overshot the loop; recompute highest power.
+        let mut m0 = 1usize;
+        while m0 < size {
+            m0 <<= 1;
+        }
+        if rank == 0 {
+            m = m0 >> 1;
+        }
+        while m > 0 {
+            if rank & (m - 1) == 0 && rank & m == 0 && rank | m < size {
+                self.send_internal(rank | m, BARRIER_DOWN, Value::Unit)?;
+            }
+            m >>= 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_local_world, CollectiveAlgo};
+
+    const ALGOS: [CollectiveAlgo; 3] =
+        [CollectiveAlgo::Linear, CollectiveAlgo::Tree, CollectiveAlgo::BlockStore];
+
+    #[test]
+    fn broadcast_all_algorithms_all_roots() {
+        for algo in ALGOS {
+            for root in [0usize, 1, 4] {
+                let out = run_local_world(5, move |world| {
+                    let data = if world.rank() == root { Some(777i64) } else { None };
+                    world.broadcast_with(algo, root, data)
+                })
+                .unwrap();
+                assert_eq!(out, vec![777; 5], "{algo:?} root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_non_power_of_two_sizes() {
+        for n in [2usize, 3, 6, 7, 9] {
+            let out = run_local_world(n, move |world| {
+                let data = if world.rank() == 0 { Some(n as i64) } else { None };
+                world.broadcast_with(CollectiveAlgo::Tree, 0, data)
+            })
+            .unwrap();
+            assert_eq!(out, vec![n as i64; n], "size {n}");
+        }
+    }
+
+    #[test]
+    fn broadcast_root_without_data_errors() {
+        let err = run_local_world(2, |world| {
+            world.broadcast::<i64>(0, None)?;
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("root must supply data"));
+    }
+
+    #[test]
+    fn broadcast_objects() {
+        use crate::ser::Value;
+        let out = run_local_world(4, |world| {
+            let data = if world.rank() == 2 {
+                Some(Value::F32Vec(vec![1.0, 2.0, 3.0]))
+            } else {
+                None
+            };
+            world.broadcast(2, data)
+        })
+        .unwrap();
+        for v in out {
+            assert_eq!(v, Value::F32Vec(vec![1.0, 2.0, 3.0]));
+        }
+    }
+
+    #[test]
+    fn all_reduce_sum_all_algorithms() {
+        for algo in [CollectiveAlgo::Linear, CollectiveAlgo::Tree, CollectiveAlgo::Ring] {
+            for n in [1usize, 2, 5, 8] {
+                let out = run_local_world(n, move |world| {
+                    world.all_reduce_with(algo, world.rank() as i64 + 1, |a, b| a + b)
+                })
+                .unwrap();
+                let expect = (n * (n + 1) / 2) as i64;
+                assert_eq!(out, vec![expect; n], "{algo:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_arbitrary_closure_max() {
+        // Paper: "MPIgnite supports passing arbitrary reduction functions".
+        let out = run_local_world(6, |world| {
+            let v = ((world.rank() * 7) % 5) as i64;
+            world.all_reduce(v, |a, b| a.max(b))
+        })
+        .unwrap();
+        assert_eq!(out, vec![4; 6]);
+    }
+
+    #[test]
+    fn all_reduce_non_commutative_string_concat_rank_order() {
+        // Linear and Ring preserve rank order; strings expose ordering.
+        for algo in [CollectiveAlgo::Linear, CollectiveAlgo::Ring] {
+            let out = run_local_world(4, move |world| {
+                world.all_reduce_with(algo, world.rank().to_string(), |a, b| a + &b)
+            })
+            .unwrap();
+            assert_eq!(out, vec!["0123".to_string(); 4], "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn all_reduce_vector_payloads() {
+        let out = run_local_world(3, |world| {
+            let v = vec![world.rank() as f64; 4];
+            world.all_reduce(v, |a, b| a.iter().zip(&b).map(|(x, y)| x + y).collect())
+        })
+        .unwrap();
+        for v in out {
+            assert_eq!(v, vec![3.0, 3.0, 3.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_at_root_only() {
+        let out = run_local_world(4, |world| {
+            world.reduce(1, world.rank() as i64, |a, b| a + b)
+        })
+        .unwrap();
+        assert_eq!(out[1], Some(6));
+        assert_eq!(out[0], None);
+        assert_eq!(out[2], None);
+        assert_eq!(out[3], None);
+    }
+
+    #[test]
+    fn gather_rank_order() {
+        let out = run_local_world(5, |world| {
+            world.gather(0, (world.rank() as i64) * 10)
+        })
+        .unwrap();
+        assert_eq!(out[0], Some(vec![0, 10, 20, 30, 40]));
+        for r in 1..5 {
+            assert_eq!(out[r], None);
+        }
+    }
+
+    #[test]
+    fn all_gather_everywhere() {
+        let out = run_local_world(4, |world| world.all_gather(world.rank() as i64)).unwrap();
+        for v in out {
+            assert_eq!(v, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn scatter_distributes_items() {
+        let out = run_local_world(4, |world| {
+            let data = if world.rank() == 0 {
+                Some(vec![100i64, 101, 102, 103])
+            } else {
+                None
+            };
+            world.scatter(0, data)
+        })
+        .unwrap();
+        assert_eq!(out, vec![100, 101, 102, 103]);
+    }
+
+    #[test]
+    fn scatter_wrong_count_errors() {
+        let err = run_local_world(3, |world| {
+            let data = if world.rank() == 0 { Some(vec![1i64, 2]) } else { None };
+            world.scatter(0, data)?;
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("scatter needs 3 items"));
+    }
+
+    #[test]
+    fn scan_inclusive_prefix() {
+        let out = run_local_world(5, |world| {
+            world.scan(world.rank() as i64 + 1, |a, b| a + b)
+        })
+        .unwrap();
+        assert_eq!(out, vec![1, 3, 6, 10, 15]);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let before = Arc::new(AtomicUsize::new(0));
+        let b2 = before.clone();
+        let out = run_local_world(8, move |world| {
+            // Stagger arrival.
+            std::thread::sleep(std::time::Duration::from_millis(world.rank() as u64 * 5));
+            b2.fetch_add(1, Ordering::SeqCst);
+            world.barrier()?;
+            // After the barrier, every rank must have incremented.
+            Ok(b2.load(Ordering::SeqCst))
+        })
+        .unwrap();
+        for v in out {
+            assert_eq!(v, 8, "barrier released before all ranks arrived");
+        }
+    }
+
+    #[test]
+    fn barrier_non_power_of_two() {
+        for n in [3usize, 5, 7] {
+            run_local_world(n, |world| world.barrier()).unwrap();
+        }
+    }
+
+    #[test]
+    fn paper_listing_4_matvec_2d() {
+        // Full Listing 4: 3x3 grid, A[i][j] = worldRank+1, x = [1,2,3].
+        // y_i = sum_j A[i][j] * x_j computed with split/broadcast/allReduce.
+        let out = run_local_world(9, |world| {
+            let world_rank = world.rank();
+            let row = world.split((world_rank / 3) as i64, world_rank as i64)?;
+            let col = world.split((world_rank % 3) as i64, world_rank as i64)?;
+            let a = (world_rank + 1) as i64;
+            let row_rank = row.rank();
+            let col_rank = col.rank();
+
+            // Distribute the vector from the last column to the diagonal:
+            // the owner of column j's segment sends x_j to the diagonal.
+            if row_rank == row.size() - 1 {
+                row.send(col.rank(), 0, 1 + col.rank() as i64)?;
+            }
+            let x_j = if row_rank == col_rank {
+                Some(row.receive::<i64>((row.size() - 1) as i64, 0)?)
+            } else {
+                None
+            };
+            // Column broadcast from the diagonal (col rank == row index of
+            // the diagonal holder within the column = col_rank position).
+            let x = match x_j {
+                Some(x) => col.broadcast(col_rank, Some(x))?,
+                None => col.broadcast::<i64>(row_rank, None)?,
+            };
+            let multiplied = a * x;
+            let y_i = row.all_reduce(multiplied, |p, q| p + q)?;
+            Ok(y_i)
+        })
+        .unwrap();
+        // Row i has entries (3i+1, 3i+2, 3i+3); y_i = sum_j A_ij * x_j.
+        let x = [1i64, 2, 3];
+        for i in 0..3 {
+            let expect: i64 = (0..3).map(|j| (3 * i + j + 1) as i64 * x[j]).sum();
+            for j in 0..3 {
+                assert_eq!(out[3 * i + j], expect, "grid cell ({i},{j})");
+            }
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! [`CommFuture`] — the return type of `receiveAsync` (paper Listing 3).
+//!
+//! Mirrors the Scala `Future` usage in the paper: a read-only placeholder
+//! that can be explicitly waited on (`Await.result` ↦ [`CommFuture::wait`])
+//! or given success/failure callbacks (`onSuccess` ↦
+//! [`CommFuture::on_success`]). Callbacks run on the thread that completes
+//! the future (the message-delivery thread), which corresponds to running
+//! on the implicit execution context in the paper's example.
+
+use crate::error::{IgniteError, Result};
+use crate::ser::{FromValue, Value};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+type Callback = Box<dyn FnOnce(&Result<Value>) + Send>;
+
+struct State {
+    outcome: Option<Result<Value>>,
+    callbacks: Vec<Callback>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    ready: Condvar,
+}
+
+/// Completer half, held by the mailbox.
+pub struct CommPromise {
+    shared: Arc<Shared>,
+}
+
+impl CommPromise {
+    /// Complete the future; runs registered callbacks inline. Idempotent
+    /// (second completion is ignored).
+    pub fn complete(self, outcome: Result<Value>) {
+        let callbacks = {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.outcome.is_some() {
+                return;
+            }
+            st.outcome = Some(outcome.clone());
+            std::mem::take(&mut st.callbacks)
+        };
+        self.shared.ready.notify_all();
+        for cb in callbacks {
+            cb(&outcome);
+        }
+    }
+}
+
+/// Read-only handle to an asynchronous receive, typed by [`FromValue`].
+pub struct CommFuture<T: FromValue> {
+    shared: Arc<Shared>,
+    _marker: std::marker::PhantomData<fn() -> T>,
+}
+
+/// Create a connected (future, promise) pair.
+pub fn promise_pair<T: FromValue>() -> (CommFuture<T>, CommPromise) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State { outcome: None, callbacks: Vec::new() }),
+        ready: Condvar::new(),
+    });
+    (
+        CommFuture { shared: shared.clone(), _marker: std::marker::PhantomData },
+        CommPromise { shared },
+    )
+}
+
+impl<T: FromValue> CommFuture<T> {
+    /// True once a value (or error) is available.
+    pub fn is_ready(&self) -> bool {
+        self.shared.state.lock().unwrap().outcome.is_some()
+    }
+
+    /// Non-blocking poll.
+    pub fn try_get(&self) -> Option<Result<T>> {
+        let st = self.shared.state.lock().unwrap();
+        st.outcome.as_ref().map(|o| o.clone().and_then(T::from_value))
+    }
+
+    /// Block until completion (the paper's `Await.result` / `MPI_Wait`).
+    pub fn wait(&self) -> Result<T> {
+        self.wait_timeout(Duration::from_secs(3600))
+    }
+
+    /// Block with a timeout.
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        while st.outcome.is_none() {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(IgniteError::Timeout("CommFuture::wait".into()));
+            }
+            let (guard, _) = self.shared.ready.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        st.outcome.as_ref().unwrap().clone().and_then(T::from_value)
+    }
+
+    /// Register a callback for successful completion (paper's
+    /// `f.onSuccess { case b => ... }`). Runs immediately if already done.
+    pub fn on_success<F: FnOnce(T) + Send + 'static>(&self, f: F) {
+        self.on_complete(move |res| {
+            if let Ok(v) = res {
+                f(v);
+            }
+        });
+    }
+
+    /// Register a callback for completion (success or failure). If the
+    /// future is already complete, the callback runs inline on the caller.
+    pub fn on_complete<F: FnOnce(Result<T>) + Send + 'static>(&self, f: F) {
+        let mut f_opt = Some(f);
+        let run_now = {
+            let mut st = self.shared.state.lock().unwrap();
+            match &st.outcome {
+                Some(o) => Some(o.clone()),
+                None => {
+                    let f = f_opt.take().unwrap();
+                    st.callbacks.push(Box::new(move |outcome: &Result<Value>| {
+                        f(outcome.clone().and_then(T::from_value));
+                    }));
+                    None
+                }
+            }
+        };
+        if let Some(o) = run_now {
+            (f_opt.take().unwrap())(o.and_then(T::from_value));
+        }
+    }
+}
+
+impl<T: FromValue> Clone for CommFuture<T> {
+    fn clone(&self) -> Self {
+        CommFuture { shared: self.shared.clone(), _marker: std::marker::PhantomData }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    #[test]
+    fn wait_returns_completed_value() {
+        let (f, p) = promise_pair::<i64>();
+        assert!(!f.is_ready());
+        p.complete(Ok(Value::I64(9)));
+        assert!(f.is_ready());
+        assert_eq!(f.wait().unwrap(), 9);
+        assert_eq!(f.try_get().unwrap().unwrap(), 9);
+    }
+
+    #[test]
+    fn wait_blocks_until_completion_from_other_thread() {
+        let (f, p) = promise_pair::<String>();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            p.complete(Ok(Value::Str("done".into())));
+        });
+        assert_eq!(f.wait_timeout(Duration::from_secs(2)).unwrap(), "done");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wait_times_out() {
+        let (f, _p) = promise_pair::<i64>();
+        let err = f.wait_timeout(Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(err, IgniteError::Timeout(_)));
+    }
+
+    #[test]
+    fn on_success_callback_fires() {
+        let (f, p) = promise_pair::<bool>();
+        let fired = Arc::new(AtomicBool::new(false));
+        let fired2 = fired.clone();
+        f.on_success(move |v| {
+            assert!(v);
+            fired2.store(true, Ordering::SeqCst);
+        });
+        p.complete(Ok(Value::Bool(true)));
+        assert!(fired.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn error_outcome_propagates() {
+        let (f, p) = promise_pair::<i64>();
+        p.complete(Err(IgniteError::Comm("lost".into())));
+        assert!(f.wait().is_err());
+    }
+
+    #[test]
+    fn type_mismatch_is_codec_error() {
+        let (f, p) = promise_pair::<i64>();
+        p.complete(Ok(Value::Str("not an int".into())));
+        let err = f.wait().unwrap_err();
+        assert!(matches!(err, IgniteError::Codec(_)));
+    }
+
+    #[test]
+    fn double_complete_is_ignored() {
+        let (f, p) = promise_pair::<i64>();
+        let (f2, p2) = promise_pair::<i64>();
+        let _ = f2;
+        p.complete(Ok(Value::I64(1)));
+        // Simulate a second completer by reusing the shared state through
+        // the public API: cloning futures shares state, but promises are
+        // consumed; so just assert the value stands.
+        p2.complete(Ok(Value::I64(2)));
+        assert_eq!(f.wait().unwrap(), 1);
+    }
+}

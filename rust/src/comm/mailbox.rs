@@ -1,0 +1,294 @@
+//! Per-rank mailbox — the receiver-side buffering the paper adopts:
+//! "we buffer messages on the receiving worker, meaning that no network
+//! communication is necessary for receiving a previously sent message"
+//! (§3.1, footnote 3).
+//!
+//! Classic MPI matching engine: an **unexpected-message queue** (messages
+//! that arrived before a matching receive was posted) and a
+//! **posted-receive list** (receives waiting for a message). Both are
+//! scanned front-to-back, which — together with FIFO transport per peer —
+//! gives the MPI non-overtaking guarantee per `(context, src, tag)`
+//! channel.
+
+use super::future::{promise_pair, CommFuture, CommPromise};
+use super::message::{Message, Pattern};
+use crate::error::{IgniteError, Result};
+use crate::metrics;
+use crate::ser::FromValue;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Duration;
+
+struct PostedRecv {
+    pattern: Pattern,
+    promise: CommPromise,
+}
+
+struct MailboxState {
+    unexpected: VecDeque<Message>,
+    posted: VecDeque<PostedRecv>,
+    /// Bytes currently buffered (metrics / soft-cap accounting).
+    buffered_bytes: usize,
+}
+
+/// Mailbox for one world rank.
+pub struct Mailbox {
+    state: Mutex<MailboxState>,
+    /// Soft cap on buffered unexpected messages; beyond it we log and
+    /// count overflows (the prototype keeps functioning, as in the paper's
+    /// "first goal is functionality" footnote).
+    soft_cap: usize,
+}
+
+impl Mailbox {
+    pub fn new(soft_cap: usize) -> Self {
+        Mailbox {
+            state: Mutex::new(MailboxState {
+                unexpected: VecDeque::new(),
+                posted: VecDeque::new(),
+                buffered_bytes: 0,
+            }),
+            soft_cap,
+        }
+    }
+
+    /// Deliver an incoming message: complete the first matching posted
+    /// receive, or buffer it in the unexpected queue.
+    pub fn deliver(&self, msg: Message) {
+        let mut msg_opt = Some(msg);
+        let promise = {
+            let mut st = self.state.lock().unwrap();
+            let m = msg_opt.as_ref().unwrap();
+            if let Some(idx) = st.posted.iter().position(|p| p.pattern.matches(m)) {
+                Some(st.posted.remove(idx).unwrap().promise)
+            } else {
+                if st.unexpected.len() >= self.soft_cap {
+                    metrics::global().counter("comm.buffer.overflow").inc();
+                    log::warn!(
+                        target: "comm",
+                        "unexpected queue beyond soft cap ({} msgs)",
+                        st.unexpected.len() + 1
+                    );
+                }
+                let m = msg_opt.take().unwrap();
+                st.buffered_bytes += m.approx_size();
+                metrics::global().counter("comm.msgs.buffered").inc();
+                st.unexpected.push_back(m);
+                None
+            }
+        };
+        if let Some(p) = promise {
+            metrics::global().counter("comm.msgs.matched_posted").inc();
+            p.complete(Ok(msg_opt.take().unwrap().payload));
+        }
+    }
+
+    /// Post an asynchronous receive for `pattern` (the `receiveAsync` of
+    /// the paper; blocking receive waits on the returned future).
+    pub fn post_recv<T: FromValue>(&self, pattern: Pattern) -> CommFuture<T> {
+        let (future, promise) = promise_pair::<T>();
+        let mut promise_opt = Some(promise);
+        let ready_msg = {
+            let mut st = self.state.lock().unwrap();
+            if let Some(idx) = st.unexpected.iter().position(|m| pattern.matches(m)) {
+                let msg = st.unexpected.remove(idx).unwrap();
+                st.buffered_bytes = st.buffered_bytes.saturating_sub(msg.approx_size());
+                Some(msg)
+            } else {
+                st.posted.push_back(PostedRecv {
+                    pattern,
+                    promise: promise_opt.take().unwrap(),
+                });
+                None
+            }
+        };
+        if let Some(msg) = ready_msg {
+            metrics::global().counter("comm.msgs.matched_buffered").inc();
+            promise_opt.take().unwrap().complete(Ok(msg.payload));
+        }
+        future
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv_blocking<T: FromValue>(&self, pattern: Pattern, timeout: Duration) -> Result<T> {
+        self.post_recv::<T>(pattern).wait_timeout(timeout).map_err(|e| match e {
+            IgniteError::Timeout(_) => IgniteError::Timeout(format!(
+                "receive(src={}, tag={}) timed out after {timeout:?}",
+                pattern.src, pattern.tag
+            )),
+            other => other,
+        })
+    }
+
+    /// Non-destructive check whether a matching message is buffered
+    /// (MPI_Iprobe): returns the (src, tag) of the first match.
+    pub fn probe(&self, pattern: Pattern) -> Option<(usize, i64)> {
+        let st = self.state.lock().unwrap();
+        st.unexpected.iter().find(|m| pattern.matches(m)).map(|m| (m.src, m.tag))
+    }
+
+    /// Fail all pending posted receives (worker shutdown / fault).
+    pub fn poison(&self, reason: &str) {
+        let posted = {
+            let mut st = self.state.lock().unwrap();
+            std::mem::take(&mut st.posted)
+        };
+        for p in posted {
+            p.promise.complete(Err(IgniteError::Comm(format!("mailbox poisoned: {reason}"))));
+        }
+    }
+
+    /// (buffered messages, posted receives, buffered bytes) — for tests
+    /// and metrics.
+    pub fn depths(&self) -> (usize, usize, usize) {
+        let st = self.state.lock().unwrap();
+        (st.unexpected.len(), st.posted.len(), st.buffered_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::message::{ANY_SOURCE, ANY_TAG};
+    use crate::ser::Value;
+
+    fn msg(src: usize, tag: i64, v: i64) -> Message {
+        Message { context: 0, src, dst_world: 0, tag, payload: Value::I64(v) }
+    }
+
+    fn pat(src: i64, tag: i64) -> Pattern {
+        Pattern { context: 0, src, tag }
+    }
+
+    #[test]
+    fn message_before_receive_is_buffered_then_matched() {
+        let mb = Mailbox::new(1024);
+        mb.deliver(msg(1, 5, 42));
+        assert_eq!(mb.depths().0, 1, "buffered");
+        let got: i64 = mb.recv_blocking(pat(1, 5), Duration::from_millis(100)).unwrap();
+        assert_eq!(got, 42);
+        assert_eq!(mb.depths().0, 0, "drained");
+    }
+
+    #[test]
+    fn receive_before_message_blocks_until_delivery() {
+        let mb = std::sync::Arc::new(Mailbox::new(1024));
+        let mb2 = mb.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            mb2.deliver(msg(0, 1, 7));
+        });
+        let got: i64 = mb.recv_blocking(pat(0, 1), Duration::from_secs(2)).unwrap();
+        assert_eq!(got, 7);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn fifo_order_within_channel() {
+        let mb = Mailbox::new(1024);
+        for v in 0..5 {
+            mb.deliver(msg(2, 9, v));
+        }
+        for v in 0..5 {
+            let got: i64 = mb.recv_blocking(pat(2, 9), Duration::from_millis(100)).unwrap();
+            assert_eq!(got, v, "non-overtaking order violated");
+        }
+    }
+
+    #[test]
+    fn tags_differentiate_messages() {
+        let mb = Mailbox::new(1024);
+        mb.deliver(msg(1, 10, 100));
+        mb.deliver(msg(1, 20, 200));
+        // Receive tag 20 first even though tag 10 arrived first.
+        let got: i64 = mb.recv_blocking(pat(1, 20), Duration::from_millis(100)).unwrap();
+        assert_eq!(got, 200);
+        let got: i64 = mb.recv_blocking(pat(1, 10), Duration::from_millis(100)).unwrap();
+        assert_eq!(got, 100);
+    }
+
+    #[test]
+    fn any_source_any_tag() {
+        let mb = Mailbox::new(1024);
+        mb.deliver(msg(3, 7, 1));
+        let got: i64 =
+            mb.recv_blocking(pat(ANY_SOURCE, ANY_TAG), Duration::from_millis(100)).unwrap();
+        assert_eq!(got, 1);
+    }
+
+    #[test]
+    fn context_isolation() {
+        let mb = Mailbox::new(1024);
+        let m = Message { context: 99, src: 0, dst_world: 0, tag: 0, payload: Value::I64(5) };
+        mb.deliver(m);
+        // Pattern on context 0 must not see the context-99 message.
+        let err = mb.recv_blocking::<i64>(pat(0, 0), Duration::from_millis(50)).unwrap_err();
+        assert!(matches!(err, IgniteError::Timeout(_)));
+        // But a context-99 pattern gets it.
+        let got: i64 = mb
+            .recv_blocking(Pattern { context: 99, src: 0, tag: 0 }, Duration::from_millis(50))
+            .unwrap();
+        assert_eq!(got, 5);
+    }
+
+    #[test]
+    fn posted_receives_matched_in_post_order() {
+        let mb = Mailbox::new(1024);
+        let f1 = mb.post_recv::<i64>(pat(ANY_SOURCE, ANY_TAG));
+        let f2 = mb.post_recv::<i64>(pat(ANY_SOURCE, ANY_TAG));
+        mb.deliver(msg(0, 0, 111));
+        assert!(f1.is_ready(), "first posted receive matched first");
+        assert!(!f2.is_ready());
+        mb.deliver(msg(0, 0, 222));
+        assert_eq!(f1.wait().unwrap(), 111);
+        assert_eq!(f2.wait().unwrap(), 222);
+    }
+
+    #[test]
+    fn poison_fails_pending_receives() {
+        let mb = Mailbox::new(1024);
+        let f = mb.post_recv::<i64>(pat(0, 0));
+        mb.poison("worker lost");
+        let err = f.wait().unwrap_err();
+        assert!(err.to_string().contains("poisoned"));
+    }
+
+    #[test]
+    fn soft_cap_counts_overflow_but_keeps_functioning() {
+        let mb = Mailbox::new(2);
+        for v in 0..5 {
+            mb.deliver(msg(0, 0, v));
+        }
+        assert_eq!(mb.depths().0, 5, "messages kept despite soft cap");
+        for v in 0..5 {
+            let got: i64 = mb.recv_blocking(pat(0, 0), Duration::from_millis(50)).unwrap();
+            assert_eq!(got, v);
+        }
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumers() {
+        let mb = std::sync::Arc::new(Mailbox::new(1 << 16));
+        let n = 200;
+        let mut producers = Vec::new();
+        for src in 0..4usize {
+            let mb = mb.clone();
+            producers.push(std::thread::spawn(move || {
+                for v in 0..n {
+                    mb.deliver(msg(src, 0, v));
+                }
+            }));
+        }
+        let mut got = 0u64;
+        for _ in 0..4 * n {
+            let _: i64 =
+                mb.recv_blocking(pat(ANY_SOURCE, 0), Duration::from_secs(5)).unwrap();
+            got += 1;
+        }
+        assert_eq!(got, (4 * n) as u64);
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert_eq!(mb.depths().0, 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Peer message format and matching patterns.
+//!
+//! A message is addressed by *world* rank (routing) and matched by
+//! `(context id, source rank-in-communicator, tag)` — the context id is
+//! what keeps traffic of different (sub-)communicators apart: "messages
+//! sent from that communicator are passed along with that identifier, and
+//! checked for equality at the receiving end" (§3.1).
+
+use crate::error::Result;
+use crate::ser::{Decode, Encode, Reader, Value};
+
+/// Wildcard source for receive matching (MPI's `MPI_ANY_SOURCE`).
+pub const ANY_SOURCE: i64 = -1;
+/// Wildcard tag for receive matching (MPI's `MPI_ANY_TAG`).
+pub const ANY_TAG: i64 = i64::MIN;
+
+/// Reserved (negative) tags used internally by collectives; user tags must
+/// be non-negative.
+pub mod internal_tags {
+    pub const SPLIT_GATHER: i64 = -10;
+    pub const SPLIT_RESULT: i64 = -11;
+    pub const BCAST: i64 = -12;
+    pub const REDUCE: i64 = -13;
+    pub const ALLREDUCE_RING: i64 = -14;
+    pub const GATHER: i64 = -15;
+    pub const SCATTER: i64 = -16;
+    pub const ALLGATHER: i64 = -17;
+    pub const BARRIER_UP: i64 = -18;
+    pub const BARRIER_DOWN: i64 = -19;
+    pub const SCAN: i64 = -20;
+    pub const SENDRECV: i64 = -21;
+    pub const ALLTOALL: i64 = -22;
+}
+
+/// One peer-to-peer message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    /// Communicator context id (0 = world).
+    pub context: u64,
+    /// Sender's rank *within that communicator*.
+    pub src: usize,
+    /// Destination world rank (routing only; not used for matching).
+    pub dst_world: usize,
+    /// User tag (>= 0) or internal collective tag (< 0).
+    pub tag: i64,
+    /// Payload object.
+    pub payload: Value,
+}
+
+impl Message {
+    /// Serialized-size estimate for buffering metrics.
+    pub fn approx_size(&self) -> usize {
+        8 + 8 + 8 + 8 + self.payload.approx_size()
+    }
+}
+
+impl Encode for Message {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.context.encode(buf);
+        (self.src as u64).encode(buf);
+        (self.dst_world as u64).encode(buf);
+        self.tag.encode(buf);
+        self.payload.encode(buf);
+    }
+}
+
+impl Decode for Message {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(Message {
+            context: u64::decode(r)?,
+            src: u64::decode(r)? as usize,
+            dst_world: u64::decode(r)? as usize,
+            tag: i64::decode(r)?,
+            payload: Value::decode(r)?,
+        })
+    }
+}
+
+/// A receive pattern: which messages it accepts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pattern {
+    pub context: u64,
+    /// Source rank within the communicator, or [`ANY_SOURCE`].
+    pub src: i64,
+    /// Tag, or [`ANY_TAG`].
+    pub tag: i64,
+}
+
+impl Pattern {
+    pub fn matches(&self, msg: &Message) -> bool {
+        msg.context == self.context
+            && (self.src == ANY_SOURCE || msg.src as i64 == self.src)
+            && (self.tag == ANY_TAG || msg.tag == self.tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::{from_bytes, to_bytes};
+
+    fn msg(context: u64, src: usize, tag: i64) -> Message {
+        Message { context, src, dst_world: 0, tag, payload: Value::I64(5) }
+    }
+
+    #[test]
+    fn message_round_trip() {
+        let m = Message {
+            context: 7,
+            src: 3,
+            dst_world: 1,
+            tag: 42,
+            payload: Value::Str("tok".into()),
+        };
+        let back: Message = from_bytes(&to_bytes(&m)).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn exact_pattern_matching() {
+        let p = Pattern { context: 1, src: 2, tag: 5 };
+        assert!(p.matches(&msg(1, 2, 5)));
+        assert!(!p.matches(&msg(1, 2, 6)), "tag differs");
+        assert!(!p.matches(&msg(1, 3, 5)), "src differs");
+        assert!(!p.matches(&msg(2, 2, 5)), "context differs — sub-communicator isolation");
+    }
+
+    #[test]
+    fn wildcards() {
+        let any_src = Pattern { context: 0, src: ANY_SOURCE, tag: 9 };
+        assert!(any_src.matches(&msg(0, 0, 9)));
+        assert!(any_src.matches(&msg(0, 7, 9)));
+        assert!(!any_src.matches(&msg(0, 7, 8)));
+
+        let any_tag = Pattern { context: 0, src: 4, tag: ANY_TAG };
+        assert!(any_tag.matches(&msg(0, 4, 0)));
+        assert!(any_tag.matches(&msg(0, 4, -12)), "ANY_TAG matches internal tags too");
+        assert!(!any_tag.matches(&msg(0, 5, 0)));
+    }
+
+    #[test]
+    fn internal_tags_are_negative_and_distinct() {
+        use internal_tags::*;
+        let tags = [
+            SPLIT_GATHER, SPLIT_RESULT, BCAST, REDUCE, ALLREDUCE_RING, GATHER, SCATTER,
+            ALLGATHER, BARRIER_UP, BARRIER_DOWN, SCAN, SENDRECV, ALLTOALL,
+        ];
+        for t in tags {
+            assert!(t < 0);
+        }
+        let mut sorted = tags.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), tags.len());
+    }
+}

@@ -1,0 +1,592 @@
+//! The paper's contribution: MPI-style communication inside engine tasks.
+//!
+//! [`SparkComm`] is the object every parallel closure receives (paper
+//! §3.2–3.4): it exposes rank/size, tagged `send` / `receive` /
+//! `receive_async` over first-class serializable objects, communicator
+//! [`SparkComm::split`], and the collectives `broadcast` and `all_reduce`
+//! (plus the extensions listed as future work: reduce, gather, scatter,
+//! all-gather, scan, barrier, sendrecv).
+//!
+//! Figure 1 correspondence:
+//!
+//! | MPIgnite-RS                                   | MPI                |
+//! |-----------------------------------------------|--------------------|
+//! | `comm.send(rec, tag, data)`                   | `MPI_Send`         |
+//! | `comm.receive::<T>(sender, tag)`              | `MPI_Recv`         |
+//! | `comm.receive_async::<T>(sender, tag)`        | `MPI_Irecv`        |
+//! | `future.wait()`                               | `MPI_Wait`         |
+//! | `comm.rank()` / `comm.get_rank()`             | `MPI_Comm_rank`    |
+//! | `comm.size()` / `comm.get_size()`             | `MPI_Comm_size`    |
+//! | `comm.split(color, key)`                      | `MPI_Comm_split`   |
+//! | `comm.broadcast::<T>(root, data)`             | `MPI_Bcast`        |
+//! | `comm.all_reduce::<T>(data, f)`               | `MPI_Allreduce`    |
+
+mod collectives;
+mod future;
+mod mailbox;
+mod message;
+mod split;
+mod transport;
+
+pub use future::{promise_pair, CommFuture, CommPromise};
+pub use mailbox::Mailbox;
+pub use message::{internal_tags, Message, Pattern, ANY_SOURCE, ANY_TAG};
+pub use transport::{
+    install_master_comm, ClusterTransport, CommTransport, LocalTransport, RankTable,
+    TransportMode, EP_DELIVER, EP_LOOKUP, EP_RELAY,
+};
+
+use crate::config::IgniteConf;
+use crate::error::{IgniteError, Result};
+use crate::metrics;
+use crate::ser::{FromValue, IntoValue, Value};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Collective algorithm selection (ablation E3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveAlgo {
+    /// Root loops over peers (O(N) latency at the root).
+    Linear,
+    /// Binomial tree (O(log N) rounds).
+    Tree,
+    /// Ring pass (allreduce only; 2(N−1) hops, rank-ordered reduction).
+    Ring,
+    /// Shared block-store broadcast (models Spark's built-in broadcast,
+    /// which the paper flags as a possibly more efficient strategy).
+    BlockStore,
+}
+
+impl CollectiveAlgo {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "linear" => CollectiveAlgo::Linear,
+            "tree" => CollectiveAlgo::Tree,
+            "ring" => CollectiveAlgo::Ring,
+            "blockstore" => CollectiveAlgo::BlockStore,
+            other => return Err(IgniteError::Config(format!("bad collective algo {other}"))),
+        })
+    }
+}
+
+/// Entry in the in-process broadcast block store.
+struct BcastEntry {
+    value: Value,
+    remaining_readers: usize,
+}
+
+/// Shared state for one "world" of communicating ranks.
+pub struct CommWorld {
+    transport: Arc<dyn CommTransport>,
+    size: usize,
+    recv_timeout: Duration,
+    bcast_algo: CollectiveAlgo,
+    allreduce_algo: CollectiveAlgo,
+    /// In-process broadcast store (the `BlockStore` algo; local mode only).
+    bcast_store: Mutex<std::collections::HashMap<(u64, u64), BcastEntry>>,
+    bcast_ready: Condvar,
+}
+
+impl CommWorld {
+    /// Local world with `n` ranks (Spark `local[N]`), default config.
+    pub fn local(n: usize) -> Arc<Self> {
+        Self::local_with_conf(n, &IgniteConf::new())
+    }
+
+    /// Local world with explicit config.
+    pub fn local_with_conf(n: usize, conf: &IgniteConf) -> Arc<Self> {
+        let soft_cap = conf.get_usize("ignite.comm.buffer.max").unwrap_or(65536);
+        Self::over_transport(Arc::new(LocalTransport::new(n, soft_cap)), n, conf)
+    }
+
+    /// World over an arbitrary transport (cluster mode).
+    pub fn over_transport(
+        transport: Arc<dyn CommTransport>,
+        size: usize,
+        conf: &IgniteConf,
+    ) -> Arc<Self> {
+        Arc::new(CommWorld {
+            transport,
+            size,
+            recv_timeout: conf
+                .get_duration_ms("ignite.comm.recv.timeout.ms")
+                .unwrap_or(Duration::from_secs(30)),
+            bcast_algo: CollectiveAlgo::parse(
+                conf.get_str("ignite.comm.bcast.algo").unwrap_or("tree"),
+            )
+            .unwrap_or(CollectiveAlgo::Tree),
+            allreduce_algo: CollectiveAlgo::parse(
+                conf.get_str("ignite.comm.allreduce.algo").unwrap_or("tree"),
+            )
+            .unwrap_or(CollectiveAlgo::Tree),
+            bcast_store: Mutex::new(std::collections::HashMap::new()),
+            bcast_ready: Condvar::new(),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn transport(&self) -> &Arc<dyn CommTransport> {
+        &self.transport
+    }
+
+    /// The world communicator (context 0, identity rank mapping) for
+    /// `world_rank`. Each rank's task calls this once.
+    pub fn comm_for_rank(self: &Arc<Self>, world_rank: usize) -> SparkComm {
+        self.comm_for_rank_ctx(world_rank, 0)
+    }
+
+    /// World communicator with an explicit base context id — cluster jobs
+    /// use their job id so traffic from consecutive jobs cannot mix.
+    pub fn comm_for_rank_ctx(self: &Arc<Self>, world_rank: usize, context: u64) -> SparkComm {
+        assert!(world_rank < self.size, "rank {world_rank} out of range");
+        SparkComm {
+            world: Arc::clone(self),
+            context,
+            ranks: Arc::new((0..self.size).collect()),
+            my_rank: world_rank,
+            split_seq: AtomicU64::new(0),
+            bcast_seq: AtomicU64::new(0),
+        }
+    }
+
+    // -- block-store broadcast primitives (local transport only) --------
+
+    fn bcast_store_put(&self, key: (u64, u64), value: Value, readers: usize) {
+        let mut store = self.bcast_store.lock().unwrap();
+        store.insert(key, BcastEntry { value, remaining_readers: readers });
+        self.bcast_ready.notify_all();
+    }
+
+    fn bcast_store_get(&self, key: (u64, u64), timeout: Duration) -> Result<Value> {
+        let mut store = self.bcast_store.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(entry) = store.get_mut(&key) {
+                let value = entry.value.clone();
+                entry.remaining_readers -= 1;
+                if entry.remaining_readers == 0 {
+                    store.remove(&key);
+                }
+                return Ok(value);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(IgniteError::Timeout("blockstore broadcast".into()));
+            }
+            let (guard, _) = self.bcast_ready.wait_timeout(store, deadline - now).unwrap();
+            store = guard;
+        }
+    }
+}
+
+/// The per-rank communicator object passed to every parallel closure.
+pub struct SparkComm {
+    world: Arc<CommWorld>,
+    /// Context id isolating this communicator's traffic (0 = world).
+    context: u64,
+    /// Communicator rank → world rank.
+    ranks: Arc<Vec<usize>>,
+    /// This process's rank *within this communicator*.
+    my_rank: usize,
+    /// Number of splits performed on this communicator (collective
+    /// discipline keeps it identical across members, so derived context
+    /// ids agree without coordination).
+    split_seq: AtomicU64,
+    /// Number of block-store broadcasts performed (same discipline).
+    bcast_seq: AtomicU64,
+}
+
+impl SparkComm {
+    /// Rank within this communicator (paper: `world.getRank`).
+    pub fn rank(&self) -> usize {
+        self.my_rank
+    }
+
+    /// Paper-style alias for [`rank`](Self::rank).
+    pub fn get_rank(&self) -> usize {
+        self.my_rank
+    }
+
+    /// Number of ranks in this communicator (paper: `world.getSize`).
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Paper-style alias for [`size`](Self::size).
+    pub fn get_size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Context identifier (0 for the world communicator).
+    pub fn context_id(&self) -> u64 {
+        self.context
+    }
+
+    /// World rank of communicator rank `r`.
+    pub fn world_rank_of(&self, r: usize) -> Result<usize> {
+        self.ranks.get(r).copied().ok_or_else(|| {
+            IgniteError::Comm(format!("rank {r} out of range (size {})", self.size()))
+        })
+    }
+
+    fn my_world_rank(&self) -> usize {
+        self.ranks[self.my_rank]
+    }
+
+    fn my_mailbox(&self) -> Result<Arc<Mailbox>> {
+        self.world.transport.local_mailbox(self.my_world_rank()).ok_or_else(|| {
+            IgniteError::Comm(format!("rank {} has no local mailbox", self.my_world_rank()))
+        })
+    }
+
+    // ------------------------------------------------- point-to-point --
+
+    /// Send `data` to communicator rank `dst` with `tag`. Always
+    /// non-blocking (paper §4: "sending in MPIgnite is always
+    /// nonblocking") — the payload is buffered on the receiving side.
+    pub fn send<T: IntoValue>(&self, dst: usize, tag: i64, data: T) -> Result<()> {
+        if tag < 0 {
+            return Err(IgniteError::Comm(format!("user tags must be >= 0, got {tag}")));
+        }
+        self.send_internal(dst, tag, data.into_value())
+    }
+
+    pub(crate) fn send_internal(&self, dst: usize, tag: i64, payload: Value) -> Result<()> {
+        let dst_world = self.world_rank_of(dst)?;
+        metrics::global().counter("comm.user.sends").inc();
+        self.world.transport.send(Message {
+            context: self.context,
+            src: self.my_rank,
+            dst_world,
+            tag,
+            payload,
+        })
+    }
+
+    /// Blocking receive from communicator rank `src` with `tag`
+    /// (wildcards: [`ANY_SOURCE`], [`ANY_TAG`]). The type parameter plays
+    /// the role of the paper's `receive[T]` — a mismatch is a cast error.
+    pub fn receive<T: FromValue>(&self, src: i64, tag: i64) -> Result<T> {
+        self.receive_timeout(src, tag, self.world.recv_timeout)
+    }
+
+    /// Blocking receive with an explicit timeout.
+    pub fn receive_timeout<T: FromValue>(
+        &self,
+        src: i64,
+        tag: i64,
+        timeout: Duration,
+    ) -> Result<T> {
+        let mb = self.my_mailbox()?;
+        mb.recv_blocking(Pattern { context: self.context, src, tag }, timeout)
+    }
+
+    /// Non-blocking receive: returns a future (paper's `receiveAsync`).
+    pub fn receive_async<T: FromValue>(&self, src: i64, tag: i64) -> Result<CommFuture<T>> {
+        let mb = self.my_mailbox()?;
+        Ok(mb.post_recv(Pattern { context: self.context, src, tag }))
+    }
+
+    /// Non-blocking probe (MPI_Iprobe): is a matching message already
+    /// buffered? Returns its `(src, tag)` without consuming it.
+    pub fn probe(&self, src: i64, tag: i64) -> Result<Option<(usize, i64)>> {
+        let mb = self.my_mailbox()?;
+        Ok(mb.probe(Pattern { context: self.context, src, tag }))
+    }
+
+    /// Duplicate this communicator (MPI_Comm_dup): same group, fresh
+    /// context id, so libraries can use an isolated tag space. Collective.
+    pub fn dup(&self) -> Result<SparkComm> {
+        // A dup is a split where everyone picks color 0 and keeps order.
+        self.split(0, self.my_rank as i64)
+    }
+
+    /// Combined send + blocking receive (MPI_Sendrecv).
+    pub fn sendrecv<S: IntoValue, R: FromValue>(
+        &self,
+        dst: usize,
+        src: i64,
+        tag: i64,
+        data: S,
+    ) -> Result<R> {
+        // Post the receive before sending to avoid self-deadlock when
+        // dst == self.
+        let fut = self.receive_async::<R>(src, tag)?;
+        self.send(dst, tag, data)?;
+        fut.wait_timeout(self.world.recv_timeout)
+    }
+
+    // ------------------------------------------------------ internals --
+
+    pub(crate) fn bcast_algo(&self) -> CollectiveAlgo {
+        self.world.bcast_algo
+    }
+
+    pub(crate) fn allreduce_algo(&self) -> CollectiveAlgo {
+        self.world.allreduce_algo
+    }
+
+    pub(crate) fn next_split_seq(&self) -> u64 {
+        self.split_seq.fetch_add(1, Ordering::SeqCst)
+    }
+
+    pub(crate) fn next_bcast_seq(&self) -> u64 {
+        self.bcast_seq.fetch_add(1, Ordering::SeqCst)
+    }
+
+    pub(crate) fn make_sub(
+        &self,
+        context: u64,
+        ranks: Arc<Vec<usize>>,
+        my_rank: usize,
+    ) -> SparkComm {
+        SparkComm {
+            world: Arc::clone(&self.world),
+            context,
+            ranks,
+            my_rank,
+            split_seq: AtomicU64::new(0),
+            bcast_seq: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn internal_recv(&self, src: i64, tag: i64) -> Result<Value> {
+        self.receive_timeout::<Value>(src, tag, self.world.recv_timeout)
+    }
+
+    pub(crate) fn bcast_store_put(&self, seq: u64, value: Value) {
+        // Readers: every member except the root.
+        self.world.bcast_store_put((self.context, seq), value, self.size().saturating_sub(1));
+    }
+
+    pub(crate) fn bcast_store_get(&self, seq: u64) -> Result<Value> {
+        self.world.bcast_store_get((self.context, seq), self.world.recv_timeout)
+    }
+}
+
+/// Spawn `n` threads each running `f(comm)` over a fresh local world and
+/// return the per-rank results — the execution core used by tests and by
+/// the closure layer's local mode. An error in any rank is propagated
+/// (first one wins); panics are converted into `Task` errors.
+pub fn run_local_world<R, F>(n: usize, f: F) -> Result<Vec<R>>
+where
+    R: Send + 'static,
+    F: Fn(&SparkComm) -> Result<R> + Send + Sync + 'static,
+{
+    let world = CommWorld::local(n);
+    let f = Arc::new(f);
+    let mut handles = Vec::with_capacity(n);
+    for rank in 0..n {
+        let world = Arc::clone(&world);
+        let f = Arc::clone(&f);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .spawn(move || {
+                    let comm = world.comm_for_rank(rank);
+                    f(&comm)
+                })
+                .expect("spawn rank thread"),
+        );
+    }
+    let mut out = Vec::with_capacity(n);
+    for (rank, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(v)) => out.push(v),
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err(IgniteError::Task(format!("rank {rank} panicked"))),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_rank_and_size() {
+        let out = run_local_world(4, |comm| Ok((comm.rank(), comm.size()))).unwrap();
+        assert_eq!(out, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
+    }
+
+    #[test]
+    fn paper_aliases() {
+        let out = run_local_world(2, |comm| Ok((comm.get_rank(), comm.get_size()))).unwrap();
+        assert_eq!(out, vec![(0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn send_receive_pair() {
+        let out = run_local_world(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, 5, 42i64)?;
+                Ok(0)
+            } else {
+                comm.receive::<i64>(0, 5)
+            }
+        })
+        .unwrap();
+        assert_eq!(out[1], 42);
+    }
+
+    #[test]
+    fn paper_listing_2_token_ring() {
+        // Listing 2: rank 0 starts a token around the ring.
+        let n = 16;
+        let out = run_local_world(n, move |world| {
+            let rank = world.rank();
+            let size = world.size();
+            if rank == 0 {
+                world.send(rank + 1, 0, rank as i64)?;
+                world.receive::<i64>((size - 1) as i64, 0)
+            } else {
+                let token = world.receive::<i64>((rank - 1) as i64, 0)?;
+                world.send((rank + 1) % size, 0, token)?;
+                Ok(token)
+            }
+        })
+        .unwrap();
+        // Every rank forwards rank 0's token (value 0).
+        assert!(out.iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn nonblocking_receive_with_callback() {
+        // Shape of Listing 3: lower half sends, upper half replies even/odd.
+        use std::sync::atomic::AtomicUsize;
+        static FIRED: AtomicUsize = AtomicUsize::new(0);
+        let n = 10;
+        let out = run_local_world(n, move |world| {
+            let (size, rank) = (world.size(), world.rank());
+            let half = size / 2;
+            if rank < half {
+                world.send(rank + half, 0, rank as i64)?;
+                let f = world.receive_async::<bool>((rank + half) as i64, 0)?;
+                f.on_success(|_| {
+                    FIRED.fetch_add(1, Ordering::SeqCst);
+                });
+                let even = f.wait_timeout(Duration::from_secs(5))?;
+                Ok(Some(even))
+            } else {
+                let r = world.receive::<i64>((rank - half) as i64, 0)?;
+                world.send(rank - half, 0, r % 2 == 0)?;
+                Ok(None)
+            }
+        })
+        .unwrap();
+        for (rank, res) in out.iter().enumerate() {
+            if rank < 5 {
+                assert_eq!(*res, Some(rank % 2 == 0));
+            } else {
+                assert_eq!(*res, None);
+            }
+        }
+        assert_eq!(FIRED.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn user_tags_must_be_non_negative() {
+        let err = run_local_world(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, -3, 0i64)?;
+            }
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("tags must be >= 0"));
+    }
+
+    #[test]
+    fn receive_timeout_expires() {
+        let out = run_local_world(2, |comm| {
+            if comm.rank() == 0 {
+                // Never sent — must time out quickly.
+                let r = comm.receive_timeout::<i64>(1, 0, Duration::from_millis(50));
+                Ok(r.is_err())
+            } else {
+                Ok(true)
+            }
+        })
+        .unwrap();
+        assert!(out[0]);
+    }
+
+    #[test]
+    fn sendrecv_exchanges_between_pair() {
+        let out = run_local_world(2, |comm| {
+            let other = 1 - comm.rank();
+            let got: i64 = comm.sendrecv(other, other as i64, 1, (comm.rank() as i64) * 10)?;
+            Ok(got)
+        })
+        .unwrap();
+        assert_eq!(out, vec![10, 0]);
+    }
+
+    #[test]
+    fn objects_as_messages() {
+        // §3.4: first-class objects, not buffers.
+        let out = run_local_world(2, |comm| {
+            if comm.rank() == 0 {
+                let obj = Value::Map(vec![
+                    ("name".into(), Value::Str("tile".into())),
+                    ("data".into(), Value::F32Vec(vec![1.0, 2.0])),
+                ]);
+                comm.send(1, 0, obj)?;
+                Ok(None)
+            } else {
+                let v: Value = comm.receive(0, 0)?;
+                Ok(Some(v))
+            }
+        })
+        .unwrap();
+        let v = out[1].clone().unwrap();
+        assert_eq!(v.get("name"), Some(&Value::Str("tile".into())));
+    }
+
+    #[test]
+    fn type_mismatch_surfaces_as_cast_error() {
+        let out = run_local_world(2, |comm| {
+            if comm.rank() == 0 {
+                comm.send(1, 0, "a string")?;
+                Ok(true)
+            } else {
+                Ok(comm.receive::<i64>(0, 0).is_err())
+            }
+        })
+        .unwrap();
+        assert!(out[1]);
+    }
+
+    #[test]
+    fn any_source_receive() {
+        let out = run_local_world(3, |comm| {
+            if comm.rank() == 0 {
+                let a: i64 = comm.receive(ANY_SOURCE, 0)?;
+                let b: i64 = comm.receive(ANY_SOURCE, 0)?;
+                Ok(a + b)
+            } else {
+                comm.send(0, 0, comm.rank() as i64)?;
+                Ok(0)
+            }
+        })
+        .unwrap();
+        assert_eq!(out[0], 3);
+    }
+
+    #[test]
+    fn rank_panic_is_reported() {
+        let err = run_local_world(2, |comm| {
+            if comm.rank() == 1 {
+                panic!("rank 1 exploded");
+            }
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("panicked"));
+    }
+}

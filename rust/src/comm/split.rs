@@ -1,0 +1,258 @@
+//! Communicator splitting — the paper's §3.1 protocol, verbatim:
+//!
+//! > "When a communicator is split to create a sub-communicator, every
+//! > process participating in the split sends a message of its global
+//! > rank, key and color to the lowest process rank participating in the
+//! > split. That root process receives all the split information, groups
+//! > it by color, and sorts it according to key. The sorted data is then
+//! > configured to be a new rank mapping before broadcast back to the
+//! > group."
+//!
+//! The sub-communicator's context id is derived deterministically from
+//! `(parent context, split sequence, color)` with FNV-1a, so all members
+//! agree without extra coordination (split is collective, hence the split
+//! sequence number advances identically on every member).
+
+use super::message::internal_tags::{SPLIT_GATHER, SPLIT_RESULT};
+use super::SparkComm;
+use crate::error::{IgniteError, Result};
+use crate::ser::Value;
+use std::sync::Arc;
+
+/// FNV-1a over the split identity; never returns 0 (reserved for world).
+fn derive_context(parent: u64, seq: u64, color: i64) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = OFFSET;
+    for chunk in [parent, seq, color as u64] {
+        for byte in chunk.to_le_bytes() {
+            h ^= u64::from(byte);
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+impl SparkComm {
+    /// Split this communicator into sub-communicators by `color`, ordering
+    /// ranks within each new communicator by `key` (ties broken by parent
+    /// rank, as in MPI). Collective: every member must call it. Mirrors
+    /// `MPI_Comm_split` / the paper's `comm.split(color, key)`.
+    pub fn split(&self, color: i64, key: i64) -> Result<SparkComm> {
+        if color < 0 {
+            return Err(IgniteError::Comm(format!("split color must be >= 0, got {color}")));
+        }
+        let seq = self.next_split_seq();
+        let my_rank = self.rank();
+        let size = self.size();
+
+        // Degenerate single-member communicator splits to itself.
+        if size == 1 {
+            let ctx = derive_context(self.context_id(), seq, color);
+            return Ok(self.make_sub(ctx, Arc::new(vec![self.world_rank_of(0)?]), 0));
+        }
+
+        // Every member (root included, self-send) reports
+        // (parent rank, world rank, color, key) to the root = rank 0,
+        // "the lowest process rank participating in the split".
+        let report = Value::I64Vec(vec![
+            my_rank as i64,
+            self.world_rank_of(my_rank)? as i64,
+            color,
+            key,
+        ]);
+        self.send_internal(0, SPLIT_GATHER, report)?;
+
+        if my_rank == 0 {
+            // Gather all reports (including our own self-send).
+            let mut reports: Vec<(usize, usize, i64, i64)> = Vec::with_capacity(size);
+            for _ in 0..size {
+                let v = self.internal_recv(super::ANY_SOURCE, SPLIT_GATHER)?;
+                match v {
+                    Value::I64Vec(raw) if raw.len() == 4 => {
+                        reports.push((raw[0] as usize, raw[1] as usize, raw[2], raw[3]));
+                    }
+                    other => {
+                        return Err(IgniteError::Comm(format!(
+                            "bad split report: {}",
+                            other.type_name()
+                        )))
+                    }
+                }
+            }
+            // Group by color, sort each group by (key, parent rank).
+            let mut colors: Vec<i64> = reports.iter().map(|r| r.2).collect();
+            colors.sort_unstable();
+            colors.dedup();
+            for &c in &colors {
+                let mut group: Vec<&(usize, usize, i64, i64)> =
+                    reports.iter().filter(|r| r.2 == c).collect();
+                group.sort_by_key(|r| (r.3, r.0));
+                // New rank mapping: new rank i → world rank of group[i].
+                let world_ranks: Vec<i64> = group.iter().map(|r| r.1 as i64).collect();
+                // Send each member its result: [color, ...world_ranks].
+                let mut payload = vec![c];
+                payload.extend_from_slice(&world_ranks);
+                for member in &group {
+                    self.send_internal(member.0, SPLIT_RESULT, Value::I64Vec(payload.clone()))?;
+                }
+            }
+        }
+
+        // Receive our group's mapping from the root.
+        let v = self.internal_recv(0, SPLIT_RESULT)?;
+        let raw = match v {
+            Value::I64Vec(raw) if raw.len() >= 2 => raw,
+            other => {
+                return Err(IgniteError::Comm(format!(
+                    "bad split result: {}",
+                    other.type_name()
+                )))
+            }
+        };
+        let result_color = raw[0];
+        debug_assert_eq!(result_color, color);
+        let world_ranks: Vec<usize> = raw[1..].iter().map(|&w| w as usize).collect();
+        let my_world = self.world_rank_of(my_rank)?;
+        let new_rank = world_ranks
+            .iter()
+            .position(|&w| w == my_world)
+            .ok_or_else(|| IgniteError::Comm("split result omits this rank".into()))?;
+        let ctx = derive_context(self.context_id(), seq, color);
+        Ok(self.make_sub(ctx, Arc::new(world_ranks), new_rank))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::run_local_world;
+    use super::*;
+
+    #[test]
+    fn derive_context_is_deterministic_and_nonzero() {
+        let a = derive_context(0, 0, 0);
+        let b = derive_context(0, 0, 0);
+        assert_eq!(a, b);
+        assert_ne!(a, 0);
+        assert_ne!(derive_context(0, 0, 1), a, "different colors differ");
+        assert_ne!(derive_context(0, 1, 0), a, "different splits differ");
+        assert_ne!(derive_context(7, 0, 0), a, "different parents differ");
+    }
+
+    #[test]
+    fn split_into_even_odd() {
+        let out = run_local_world(6, |world| {
+            let color = (world.rank() % 2) as i64;
+            let sub = world.split(color, world.rank() as i64)?;
+            Ok((sub.rank(), sub.size(), sub.context_id()))
+        })
+        .unwrap();
+        // Even ranks {0,2,4} → sub ranks 0,1,2; odd {1,3,5} likewise.
+        assert_eq!(out[0].0, 0);
+        assert_eq!(out[2].0, 1);
+        assert_eq!(out[4].0, 2);
+        assert_eq!(out[1].0, 0);
+        assert_eq!(out[3].0, 1);
+        assert_eq!(out[5].0, 2);
+        for (_, size, _) in &out {
+            assert_eq!(*size, 3);
+        }
+        // Same color ⇒ same context; different color ⇒ different context.
+        assert_eq!(out[0].2, out[2].2);
+        assert_eq!(out[1].2, out[3].2);
+        assert_ne!(out[0].2, out[1].2);
+    }
+
+    #[test]
+    fn split_key_controls_ordering() {
+        // Reverse keys: highest parent rank gets sub-rank 0.
+        let out = run_local_world(4, |world| {
+            let key = -(world.rank() as i64);
+            let sub = world.split(0, key)?;
+            Ok(sub.rank())
+        })
+        .unwrap();
+        assert_eq!(out, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn split_isolates_messages_between_subcomms() {
+        // Each half sends within its sub-communicator only; cross-traffic
+        // would mis-deliver because context ids differ.
+        let out = run_local_world(4, |world| {
+            let color = (world.rank() / 2) as i64;
+            let sub = world.split(color, world.rank() as i64)?;
+            if sub.rank() == 0 {
+                sub.send(1, 0, (100 + world.rank()) as i64)?;
+                Ok(-1)
+            } else {
+                sub.receive::<i64>(0, 0)
+            }
+        })
+        .unwrap();
+        assert_eq!(out[1], 100); // from world rank 0
+        assert_eq!(out[3], 102); // from world rank 2
+    }
+
+    #[test]
+    fn paper_listing_4_row_and_col_splits() {
+        // The 3x3 grid from Listing 4: row = rank/3, col = rank%3.
+        let out = run_local_world(9, |world| {
+            let world_rank = world.rank();
+            let row = world.split((world_rank / 3) as i64, world_rank as i64)?;
+            let col = world.split((world_rank % 3) as i64, world_rank as i64)?;
+            Ok((row.rank(), row.size(), col.rank(), col.size()))
+        })
+        .unwrap();
+        for (world_rank, (row_rank, row_size, col_rank, col_size)) in out.iter().enumerate() {
+            assert_eq!(*row_size, 3);
+            assert_eq!(*col_size, 3);
+            assert_eq!(*row_rank, world_rank % 3, "row rank is the column index");
+            assert_eq!(*col_rank, world_rank / 3, "col rank is the row index");
+        }
+    }
+
+    #[test]
+    fn nested_splits() {
+        // Split twice: quarters of an 8-rank world.
+        let out = run_local_world(8, |world| {
+            let half = world.split((world.rank() / 4) as i64, world.rank() as i64)?;
+            let quarter = half.split((half.rank() / 2) as i64, half.rank() as i64)?;
+            Ok((quarter.rank(), quarter.size(), quarter.context_id()))
+        })
+        .unwrap();
+        for (i, (rank, size, _)) in out.iter().enumerate() {
+            assert_eq!(*size, 2);
+            assert_eq!(*rank, i % 2);
+        }
+        // Four distinct contexts.
+        let mut ctxs: Vec<u64> = out.iter().map(|o| o.2).collect();
+        ctxs.sort_unstable();
+        ctxs.dedup();
+        assert_eq!(ctxs.len(), 4);
+    }
+
+    #[test]
+    fn negative_color_rejected() {
+        let err = run_local_world(2, |world| {
+            world.split(-1, 0)?;
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("color"));
+    }
+
+    #[test]
+    fn single_rank_split_is_trivial() {
+        let out = run_local_world(1, |world| {
+            let sub = world.split(0, 0)?;
+            Ok((sub.rank(), sub.size()))
+        })
+        .unwrap();
+        assert_eq!(out, vec![(0, 1)]);
+    }
+}

@@ -1,0 +1,519 @@
+//! Message transports: how a [`Message`] reaches its destination rank's
+//! mailbox.
+//!
+//! * [`LocalTransport`] — all ranks in one process (Spark `local[N]`);
+//!   delivery is a direct mailbox enqueue.
+//! * [`ClusterTransport`] — ranks spread over worker processes. Implements
+//!   *both* iterations described in §3.1:
+//!   - **relay** (first iteration): every message goes to the master's
+//!     `comm.relay` endpoint, which forwards it to the worker hosting the
+//!     destination rank;
+//!   - **p2p** (second iteration): the sender resolves the destination
+//!     worker's address — from the rank table distributed with scheduled
+//!     tasks, or by asking the master on a miss ("it requests the
+//!     addressing information of that worker") — and sends directly; the
+//!     underlying RPC layer caches the connection.
+//!   The mode can be switched at runtime, which is the paper's proposed
+//!   fault-tolerance fallback (drop to relay during recovery, resume p2p).
+
+use super::mailbox::Mailbox;
+use super::message::Message;
+use crate::error::{IgniteError, Result};
+use crate::metrics;
+use crate::rpc::{Envelope, RpcAddress, RpcEnv};
+use crate::ser::{from_bytes, to_bytes, Decode, Encode, Reader};
+use log::debug;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// RPC endpoint names used by the comm layer.
+pub const EP_DELIVER: &str = "comm.deliver";
+pub const EP_RELAY: &str = "comm.relay";
+pub const EP_LOOKUP: &str = "comm.lookup";
+
+/// Which §3.1 iteration is active.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportMode {
+    /// Direct worker↔worker (second iteration).
+    P2p,
+    /// Everything through the master (first iteration; recovery fallback).
+    Relay,
+}
+
+impl TransportMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "p2p" => Ok(TransportMode::P2p),
+            "relay" => Ok(TransportMode::Relay),
+            other => Err(IgniteError::Config(format!("bad comm mode {other}"))),
+        }
+    }
+}
+
+/// Routing abstraction used by `SparkComm`.
+pub trait CommTransport: Send + Sync {
+    /// Route `msg` toward `msg.dst_world`'s mailbox.
+    fn send(&self, msg: Message) -> Result<()>;
+    /// Mailbox of a rank hosted in this process, if any.
+    fn local_mailbox(&self, world_rank: usize) -> Option<Arc<Mailbox>>;
+    /// Current mode (local transport is always "p2p": no master hop).
+    fn mode(&self) -> TransportMode {
+        TransportMode::P2p
+    }
+    /// Switch mode (no-op for local transport).
+    fn set_mode(&self, _mode: TransportMode) {}
+}
+
+// ---------------------------------------------------------------- local
+
+/// All ranks in-process; the paper's local deployment ("there is only one
+/// worker node" — here: one process hosting every rank's mailbox).
+pub struct LocalTransport {
+    mailboxes: Vec<Arc<Mailbox>>,
+}
+
+impl LocalTransport {
+    pub fn new(n_ranks: usize, soft_cap: usize) -> Self {
+        LocalTransport {
+            mailboxes: (0..n_ranks).map(|_| Arc::new(Mailbox::new(soft_cap))).collect(),
+        }
+    }
+}
+
+impl CommTransport for LocalTransport {
+    fn send(&self, msg: Message) -> Result<()> {
+        let mb = self
+            .mailboxes
+            .get(msg.dst_world)
+            .ok_or_else(|| IgniteError::Comm(format!("no such rank {}", msg.dst_world)))?;
+        metrics::global().counter("comm.msgs.sent").inc();
+        mb.deliver(msg);
+        Ok(())
+    }
+
+    fn local_mailbox(&self, world_rank: usize) -> Option<Arc<Mailbox>> {
+        self.mailboxes.get(world_rank).cloned()
+    }
+}
+
+// -------------------------------------------------------------- cluster
+
+/// Rank-location table: world rank → worker RPC address.
+pub type RankTable = Arc<RwLock<HashMap<usize, RpcAddress>>>;
+
+/// Wire form of a lookup request/response.
+struct LookupReq(usize);
+impl Encode for LookupReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (self.0 as u64).encode(buf);
+    }
+}
+impl Decode for LookupReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(LookupReq(u64::decode(r)? as usize))
+    }
+}
+
+const MODE_P2P: u8 = 0;
+const MODE_RELAY: u8 = 1;
+
+/// Transport for multi-process deployments.
+pub struct ClusterTransport {
+    env: RpcEnv,
+    master: RpcAddress,
+    rank_table: RankTable,
+    /// rank → (mailbox, hosting generation). The generation lets an
+    /// aborted job's late `evict_rank` leave a newer job's mailbox alone.
+    local: RwLock<HashMap<usize, (Arc<Mailbox>, u64)>>,
+    next_generation: std::sync::atomic::AtomicU64,
+    /// Messages that arrived for a rank this worker has been assigned but
+    /// not yet started hosting (the launch race): drained by `host_rank`.
+    pending: std::sync::Mutex<HashMap<usize, Vec<Message>>>,
+    mode: AtomicU8,
+    soft_cap: usize,
+    lookup_timeout: Duration,
+}
+
+impl ClusterTransport {
+    /// Create the transport and install its `comm.deliver` endpoint on
+    /// `env`.
+    pub fn new(
+        env: RpcEnv,
+        master: RpcAddress,
+        mode: TransportMode,
+        soft_cap: usize,
+    ) -> Arc<Self> {
+        let t = Arc::new(ClusterTransport {
+            env: env.clone(),
+            master,
+            rank_table: Arc::new(RwLock::new(HashMap::new())),
+            local: RwLock::new(HashMap::new()),
+            next_generation: std::sync::atomic::AtomicU64::new(1),
+            pending: std::sync::Mutex::new(HashMap::new()),
+            mode: AtomicU8::new(match mode {
+                TransportMode::P2p => MODE_P2P,
+                TransportMode::Relay => MODE_RELAY,
+            }),
+            soft_cap,
+            lookup_timeout: Duration::from_secs(5),
+        });
+        let t2 = Arc::clone(&t);
+        env.register(
+            EP_DELIVER,
+            Arc::new(move |envelope: &Envelope| {
+                let msg: Message = from_bytes(&envelope.body)?;
+                t2.deliver_local(msg);
+                Ok(None)
+            }),
+        );
+        t
+    }
+
+    /// Deliver to a hosted rank's mailbox, or park the message until the
+    /// rank is hosted (a peer's launch can race ours — "sending in
+    /// MPIgnite is always nonblocking", so the receiver buffers).
+    fn deliver_local(&self, msg: Message) {
+        // Fast path under the read lock.
+        if let Some((mb, _)) = self.local.read().unwrap().get(&msg.dst_world) {
+            mb.deliver(msg);
+            return;
+        }
+        // Park; re-check hosting under the pending lock to avoid losing a
+        // message to a concurrent host_rank drain.
+        let mut pending = self.pending.lock().unwrap();
+        if let Some((mb, _)) = self.local.read().unwrap().get(&msg.dst_world) {
+            drop(pending);
+            mb.deliver(msg);
+            return;
+        }
+        metrics::global().counter("comm.msgs.parked").inc();
+        pending.entry(msg.dst_world).or_default().push(msg);
+    }
+
+    /// Host `world_rank` in this process (called when a parallel task is
+    /// scheduled here); returns its mailbox + a hosting generation, and
+    /// drains any messages that arrived early. Re-hosting an already
+    /// hosted rank (a recovery job re-using the rank while an aborted
+    /// job's thread still runs) poisons the old mailbox and supersedes it.
+    pub fn host_rank(&self, world_rank: usize) -> (Arc<Mailbox>, u64) {
+        let generation =
+            self.next_generation.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        let (mb, old) = {
+            let mut local = self.local.write().unwrap();
+            let old = local.insert(
+                world_rank,
+                (Arc::new(Mailbox::new(self.soft_cap)), generation),
+            );
+            (local.get(&world_rank).unwrap().0.clone(), old)
+        };
+        if let Some((old_mb, _)) = old {
+            old_mb.poison("rank re-hosted by a newer job");
+        }
+        let parked = self.pending.lock().unwrap().remove(&world_rank);
+        if let Some(parked) = parked {
+            for msg in parked {
+                mb.deliver(msg);
+            }
+        }
+        (mb, generation)
+    }
+
+    /// Stop hosting a rank (task finished); pending receives are poisoned
+    /// and any parked messages are dropped. A stale `generation` (the
+    /// rank was re-hosted since) is a no-op.
+    pub fn evict_rank(&self, world_rank: usize, generation: u64) {
+        let mut local = self.local.write().unwrap();
+        match local.get(&world_rank) {
+            Some((_, g)) if *g == generation => {
+                let (mb, _) = local.remove(&world_rank).unwrap();
+                drop(local);
+                self.pending.lock().unwrap().remove(&world_rank);
+                mb.poison("rank evicted");
+            }
+            _ => {}
+        }
+    }
+
+    /// Install/extend the rank table (distributed along with scheduled
+    /// tasks, per §3.1).
+    pub fn update_rank_table(&self, entries: &[(usize, RpcAddress)]) {
+        let mut t = self.rank_table.write().unwrap();
+        for (rank, addr) in entries {
+            t.insert(*rank, addr.clone());
+        }
+    }
+
+    pub fn rank_table(&self) -> RankTable {
+        self.rank_table.clone()
+    }
+
+    /// Resolve a rank's worker address: table hit, or ask the master.
+    fn resolve(&self, world_rank: usize) -> Result<RpcAddress> {
+        if let Some(addr) = self.rank_table.read().unwrap().get(&world_rank) {
+            return Ok(addr.clone());
+        }
+        debug!(target: "comm", "rank {world_rank} not in table; asking master");
+        metrics::global().counter("comm.lookup.misses").inc();
+        let reply = self.env.ask(
+            &self.master,
+            EP_LOOKUP,
+            to_bytes(&LookupReq(world_rank)),
+            self.lookup_timeout,
+        )?;
+        let addr = RpcAddress(from_bytes::<String>(&reply)?);
+        self.rank_table.write().unwrap().insert(world_rank, addr.clone());
+        Ok(addr)
+    }
+}
+
+impl CommTransport for ClusterTransport {
+    fn send(&self, msg: Message) -> Result<()> {
+        metrics::global().counter("comm.msgs.sent").inc();
+        // Same-process fast path (both ranks scheduled on this worker).
+        if self.mode() == TransportMode::P2p {
+            if let Some(mb) = self.local_mailbox(msg.dst_world) {
+                mb.deliver(msg);
+                return Ok(());
+            }
+        }
+        let bytes = to_bytes(&msg);
+        metrics::global().counter("comm.bytes.sent").add(bytes.len() as u64);
+        match self.mode() {
+            TransportMode::P2p => {
+                let addr = self.resolve(msg.dst_world)?;
+                self.env.send(&addr, EP_DELIVER, bytes)
+            }
+            TransportMode::Relay => {
+                metrics::global().counter("comm.msgs.relayed").inc();
+                self.env.send(&self.master, EP_RELAY, bytes)
+            }
+        }
+    }
+
+    fn local_mailbox(&self, world_rank: usize) -> Option<Arc<Mailbox>> {
+        self.local.read().unwrap().get(&world_rank).map(|(mb, _)| mb.clone())
+    }
+
+    fn mode(&self) -> TransportMode {
+        if self.mode.load(Ordering::Relaxed) == MODE_RELAY {
+            TransportMode::Relay
+        } else {
+            TransportMode::P2p
+        }
+    }
+
+    fn set_mode(&self, mode: TransportMode) {
+        self.mode.store(
+            match mode {
+                TransportMode::P2p => MODE_P2P,
+                TransportMode::Relay => MODE_RELAY,
+            },
+            Ordering::Relaxed,
+        );
+    }
+}
+
+/// Install the master-side comm endpoints (`comm.relay`, `comm.lookup`)
+/// on the master's env; `rank_table` is the authoritative rank→worker map
+/// the master maintains from task scheduling.
+pub fn install_master_comm(env: &RpcEnv, rank_table: RankTable) {
+    let env2 = env.clone();
+    let table = rank_table.clone();
+    env.register(
+        EP_RELAY,
+        Arc::new(move |envelope: &Envelope| {
+            let msg: Message = from_bytes(&envelope.body)?;
+            let addr = table
+                .read()
+                .unwrap()
+                .get(&msg.dst_world)
+                .cloned()
+                .ok_or_else(|| {
+                    IgniteError::Comm(format!("relay: unknown rank {}", msg.dst_world))
+                })?;
+            metrics::global().counter("comm.relay.forwarded").inc();
+            env2.send(&addr, EP_DELIVER, envelope.body.clone())?;
+            Ok(None)
+        }),
+    );
+    let table = rank_table;
+    env.register(
+        EP_LOOKUP,
+        Arc::new(move |envelope: &Envelope| {
+            let req: LookupReq = from_bytes(&envelope.body)?;
+            let addr = table.read().unwrap().get(&req.0).cloned().ok_or_else(|| {
+                IgniteError::Comm(format!("lookup: unknown rank {}", req.0))
+            })?;
+            Ok(Some(to_bytes(&addr.0)))
+        }),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::Value;
+
+    fn msg(src: usize, dst: usize, tag: i64, v: i64) -> Message {
+        Message { context: 0, src, dst_world: dst, tag, payload: Value::I64(v) }
+    }
+
+    #[test]
+    fn local_transport_routes_between_ranks() {
+        let t = LocalTransport::new(4, 1024);
+        t.send(msg(0, 3, 1, 42)).unwrap();
+        let mb = t.local_mailbox(3).unwrap();
+        let got: i64 = mb
+            .recv_blocking(
+                super::super::message::Pattern { context: 0, src: 0, tag: 1 },
+                Duration::from_millis(100),
+            )
+            .unwrap();
+        assert_eq!(got, 42);
+    }
+
+    #[test]
+    fn local_transport_rejects_bad_rank() {
+        let t = LocalTransport::new(2, 1024);
+        assert!(t.send(msg(0, 9, 0, 0)).is_err());
+    }
+
+    /// Build a master + two workers, with ranks 0 on worker A, 1 on B.
+    fn two_worker_setup(
+        mode: TransportMode,
+    ) -> (RpcEnv, RpcEnv, RpcEnv, Arc<ClusterTransport>, Arc<ClusterTransport>) {
+        let master = RpcEnv::server("master", 0).unwrap();
+        let wa = RpcEnv::server("worker-a", 0).unwrap();
+        let wb = RpcEnv::server("worker-b", 0).unwrap();
+        let master_table: RankTable = Arc::new(RwLock::new(HashMap::new()));
+        master_table.write().unwrap().insert(0, wa.address());
+        master_table.write().unwrap().insert(1, wb.address());
+        install_master_comm(&master, master_table);
+
+        let ta = ClusterTransport::new(wa.clone(), master.address(), mode, 1024);
+        let tb = ClusterTransport::new(wb.clone(), master.address(), mode, 1024);
+        ta.host_rank(0);
+        tb.host_rank(1);
+        ta.update_rank_table(&[(0, wa.address()), (1, wb.address())]);
+        tb.update_rank_table(&[(0, wa.address()), (1, wb.address())]);
+        (master, wa, wb, ta, tb)
+    }
+
+    fn recv_i64(t: &Arc<ClusterTransport>, rank: usize, src: usize, tag: i64) -> i64 {
+        t.local_mailbox(rank)
+            .unwrap()
+            .recv_blocking(
+                super::super::message::Pattern { context: 0, src: src as i64, tag },
+                Duration::from_secs(3),
+            )
+            .unwrap()
+    }
+
+    #[test]
+    fn p2p_mode_crosses_workers_directly() {
+        let (master, _wa, _wb, ta, tb) = two_worker_setup(TransportMode::P2p);
+        let before = metrics::global().counter("comm.relay.forwarded").get();
+        ta.send(msg(0, 1, 7, 123)).unwrap();
+        assert_eq!(recv_i64(&tb, 1, 0, 7), 123);
+        let after = metrics::global().counter("comm.relay.forwarded").get();
+        assert_eq!(before, after, "p2p must not touch the relay");
+        master.shutdown();
+    }
+
+    #[test]
+    fn relay_mode_goes_through_master() {
+        let (master, _wa, _wb, ta, tb) = two_worker_setup(TransportMode::Relay);
+        let before = metrics::global().counter("comm.relay.forwarded").get();
+        ta.send(msg(0, 1, 8, 456)).unwrap();
+        assert_eq!(recv_i64(&tb, 1, 0, 8), 456);
+        let after = metrics::global().counter("comm.relay.forwarded").get();
+        assert!(after > before, "relay counter must increase");
+        master.shutdown();
+    }
+
+    #[test]
+    fn lookup_fallback_when_rank_table_is_cold() {
+        let (master, _wa, wb, ta, tb) = two_worker_setup(TransportMode::P2p);
+        // Clear A's table so it must ask the master for rank 1.
+        ta.rank_table().write().unwrap().clear();
+        let misses_before = metrics::global().counter("comm.lookup.misses").get();
+        ta.send(msg(0, 1, 9, 789)).unwrap();
+        assert_eq!(recv_i64(&tb, 1, 0, 9), 789);
+        assert!(metrics::global().counter("comm.lookup.misses").get() > misses_before);
+        // Second send hits the (now warm) table.
+        ta.send(msg(0, 1, 9, 790)).unwrap();
+        assert_eq!(recv_i64(&tb, 1, 0, 9), 790);
+        let _ = wb;
+        master.shutdown();
+    }
+
+    #[test]
+    fn same_worker_ranks_use_fast_path() {
+        let (master, _wa, _wb, ta, _tb) = two_worker_setup(TransportMode::P2p);
+        ta.host_rank(5);
+        ta.update_rank_table(&[]);
+        ta.send(msg(0, 5, 3, 55)).unwrap();
+        assert_eq!(recv_i64(&ta, 5, 0, 3), 55);
+        master.shutdown();
+    }
+
+    #[test]
+    fn mode_switch_at_runtime() {
+        let (master, _wa, _wb, ta, tb) = two_worker_setup(TransportMode::P2p);
+        ta.set_mode(TransportMode::Relay);
+        assert_eq!(ta.mode(), TransportMode::Relay);
+        let relayed_before = metrics::global().counter("comm.relay.forwarded").get();
+        ta.send(msg(0, 1, 4, 1)).unwrap();
+        assert_eq!(recv_i64(&tb, 1, 0, 4), 1);
+        assert!(metrics::global().counter("comm.relay.forwarded").get() > relayed_before);
+        ta.set_mode(TransportMode::P2p);
+        ta.send(msg(0, 1, 4, 2)).unwrap();
+        assert_eq!(recv_i64(&tb, 1, 0, 4), 2);
+        master.shutdown();
+    }
+
+    #[test]
+    fn evict_rank_poisons_pending_receives() {
+        let (master, _wa, _wb, ta, _tb) = two_worker_setup(TransportMode::P2p);
+        let (mb, generation) = ta.host_rank(7);
+        let f = mb.post_recv::<i64>(super::super::message::Pattern {
+            context: 0,
+            src: 0,
+            tag: 0,
+        });
+        ta.evict_rank(7, generation);
+        assert!(f.wait_timeout(Duration::from_millis(200)).is_err());
+        assert!(ta.local_mailbox(7).is_none());
+        master.shutdown();
+    }
+
+    #[test]
+    fn stale_generation_eviction_is_a_noop() {
+        let (master, _wa, _wb, ta, _tb) = two_worker_setup(TransportMode::P2p);
+        let (_old_mb, old_gen) = ta.host_rank(8);
+        // Re-host (a newer job took the rank over).
+        let (new_mb, _new_gen) = ta.host_rank(8);
+        // The aborted job's late eviction must not remove the new mailbox.
+        ta.evict_rank(8, old_gen);
+        assert!(ta.local_mailbox(8).is_some(), "newer hosting survives stale evict");
+        // And the new mailbox still works.
+        ta.send(msg(0, 8, 1, 5)).unwrap();
+        let got: i64 = new_mb
+            .recv_blocking(
+                super::super::message::Pattern { context: 0, src: 0, tag: 1 },
+                Duration::from_secs(2),
+            )
+            .unwrap();
+        assert_eq!(got, 5);
+        master.shutdown();
+    }
+
+    #[test]
+    fn transport_mode_parse() {
+        assert_eq!(TransportMode::parse("p2p").unwrap(), TransportMode::P2p);
+        assert_eq!(TransportMode::parse("relay").unwrap(), TransportMode::Relay);
+        assert!(TransportMode::parse("smoke-signals").is_err());
+    }
+}

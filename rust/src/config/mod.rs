@@ -1,0 +1,279 @@
+//! `IgniteConf` — the engine configuration system, modelled on Spark's
+//! `SparkConf`: string key/value pairs with typed accessors, defaults,
+//! and three override layers (defaults < file < environment < explicit
+//! `set` calls). The file format is a deliberately small TOML subset
+//! (`key = value` lines, `#` comments, bare/quoted strings, ints, floats,
+//! bools) parsed in-tree because the vendor set has no TOML crate.
+
+use crate::error::{IgniteError, Result};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// All keys understood by the engine, with their defaults. Keeping this
+/// table in one place means `validate()` can reject typos.
+pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
+    ("ignite.app.name", "mpignite-app", "Application name (logs, metrics)"),
+    ("ignite.master", "local[4]", "local[N] or ignite://host:port"),
+    ("ignite.worker.slots", "4", "Task slots per worker"),
+    ("ignite.worker.heartbeat.ms", "200", "Worker heartbeat interval"),
+    ("ignite.worker.timeout.ms", "2000", "Master marks worker lost after this"),
+    ("ignite.task.retries", "3", "Per-task retry budget"),
+    ("ignite.task.speculation", "true", "Re-run straggler tasks elsewhere"),
+    ("ignite.task.speculation.multiplier", "4.0", "Straggler = multiplier x median"),
+    ("ignite.comm.mode", "p2p", "p2p | relay (paper's two iterations)"),
+    ("ignite.comm.buffer.max", "65536", "Max buffered unexpected messages/rank"),
+    ("ignite.comm.recv.timeout.ms", "30000", "Blocking receive timeout"),
+    ("ignite.comm.bcast.algo", "tree", "tree | linear | blockstore"),
+    ("ignite.comm.allreduce.algo", "tree", "tree | linear | ring"),
+    ("ignite.rpc.connect.timeout.ms", "2000", "TCP connect timeout"),
+    ("ignite.rpc.frame.max", "67108864", "Max RPC frame size (bytes)"),
+    ("ignite.shuffle.partitions", "8", "Default reduce-side partition count"),
+    ("ignite.storage.memory.max", "268435456", "Block store budget (bytes)"),
+    ("ignite.storage.spill.dir", "/tmp/mpignite-spill", "Spill directory"),
+    ("ignite.artifacts.dir", "artifacts", "AOT HLO artifact directory"),
+    ("ignite.fault.inject.seed", "0", "0 = off; else deterministic fault seed"),
+    ("ignite.fault.recovery.mode_switch", "true", "Fall back to relay during recovery"),
+];
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct IgniteConf {
+    values: BTreeMap<String, String>,
+}
+
+impl Default for IgniteConf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IgniteConf {
+    /// Config with built-in defaults only.
+    pub fn new() -> Self {
+        let mut values = BTreeMap::new();
+        for (k, v, _) in KNOWN_KEYS {
+            values.insert((*k).to_string(), (*v).to_string());
+        }
+        IgniteConf { values }
+    }
+
+    /// Defaults, then overrides from `MPIGNITE_*` environment variables
+    /// (`ignite.comm.mode` ← `MPIGNITE_COMM_MODE`).
+    pub fn from_env() -> Self {
+        let mut conf = Self::new();
+        for (key, _, _) in KNOWN_KEYS {
+            let env_key =
+                key.trim_start_matches("ignite.").replace('.', "_").to_uppercase();
+            if let Ok(v) = std::env::var(format!("MPIGNITE_{env_key}")) {
+                conf.values.insert((*key).to_string(), v);
+            }
+        }
+        conf
+    }
+
+    /// Parse `key = value` lines (mini-TOML subset) over the defaults.
+    pub fn from_str_file(text: &str) -> Result<Self> {
+        let mut conf = Self::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                IgniteError::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = k.trim().to_string();
+            let mut val = v.trim().to_string();
+            if (val.starts_with('"') && val.ends_with('"') && val.len() >= 2)
+                || (val.starts_with('\'') && val.ends_with('\'') && val.len() >= 2)
+            {
+                val = val[1..val.len() - 1].to_string();
+            }
+            conf.values.insert(key, val);
+        }
+        Ok(conf)
+    }
+
+    /// Load from a file path over the defaults.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| IgniteError::Config(format!("read {path}: {e}")))?;
+        Self::from_str_file(&text)
+    }
+
+    /// Explicit override (highest precedence).
+    pub fn set(&mut self, key: &str, value: impl Into<String>) -> &mut Self {
+        self.values.insert(key.to_string(), value.into());
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| IgniteError::Config(format!("unknown key {key}")))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        let s = self.get_str(key)?;
+        s.parse()
+            .map_err(|_| IgniteError::Config(format!("{key}={s} is not an integer")))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64> {
+        let s = self.get_str(key)?;
+        s.parse()
+            .map_err(|_| IgniteError::Config(format!("{key}={s} is not an integer")))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        let s = self.get_str(key)?;
+        s.parse()
+            .map_err(|_| IgniteError::Config(format!("{key}={s} is not a float")))
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<bool> {
+        match self.get_str(key)? {
+            "true" | "1" | "yes" => Ok(true),
+            "false" | "0" | "no" => Ok(false),
+            s => Err(IgniteError::Config(format!("{key}={s} is not a bool"))),
+        }
+    }
+
+    pub fn get_duration_ms(&self, key: &str) -> Result<Duration> {
+        Ok(Duration::from_millis(self.get_u64(key)?))
+    }
+
+    /// Reject keys that are not in [`KNOWN_KEYS`] (catches config typos).
+    pub fn validate(&self) -> Result<()> {
+        for key in self.values.keys() {
+            if !KNOWN_KEYS.iter().any(|(k, _, _)| k == key) {
+                return Err(IgniteError::Config(format!("unknown key {key}")));
+            }
+        }
+        // Cross-field checks.
+        let mode = self.get_str("ignite.comm.mode")?;
+        if mode != "p2p" && mode != "relay" {
+            return Err(IgniteError::Config(format!("ignite.comm.mode={mode} (want p2p|relay)")));
+        }
+        self.get_usize("ignite.worker.slots")?;
+        self.get_u64("ignite.rpc.frame.max")?;
+        self.get_bool("ignite.task.speculation")?;
+        Ok(())
+    }
+
+    /// Parse `ignite.master`: `local[N]` → `Ok(N)` threads; `ignite://h:p`
+    /// → cluster address.
+    pub fn master_spec(&self) -> Result<MasterSpec> {
+        let m = self.get_str("ignite.master")?;
+        if let Some(rest) = m.strip_prefix("local[") {
+            let n: usize = rest
+                .strip_suffix(']')
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| IgniteError::Config(format!("bad master spec {m}")))?;
+            if n == 0 {
+                return Err(IgniteError::Config("local[0] is invalid".into()));
+            }
+            Ok(MasterSpec::Local(n))
+        } else if let Some(addr) = m.strip_prefix("ignite://") {
+            Ok(MasterSpec::Cluster(addr.to_string()))
+        } else {
+            Err(IgniteError::Config(format!("bad master spec {m}")))
+        }
+    }
+
+    /// Dump effective config, sorted (for logs / EXPERIMENTS.md).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.values {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        out
+    }
+}
+
+/// Where the driver should run tasks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MasterSpec {
+    /// In-process worker threads, like Spark's `local[N]`.
+    Local(usize),
+    /// Remote master at `host:port`.
+    Cluster(String),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_complete_and_valid() {
+        let conf = IgniteConf::new();
+        conf.validate().unwrap();
+        assert_eq!(conf.get_str("ignite.comm.mode").unwrap(), "p2p");
+        assert_eq!(conf.get_usize("ignite.worker.slots").unwrap(), 4);
+    }
+
+    #[test]
+    fn file_overrides_defaults() {
+        let conf = IgniteConf::from_str_file(
+            "# comment\nignite.comm.mode = relay\nignite.app.name = \"quoted name\"\n",
+        )
+        .unwrap();
+        assert_eq!(conf.get_str("ignite.comm.mode").unwrap(), "relay");
+        assert_eq!(conf.get_str("ignite.app.name").unwrap(), "quoted name");
+        conf.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_file_line_errors() {
+        assert!(IgniteConf::from_str_file("no equals sign here").is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.task.speculation.multiplier", "2.5");
+        assert_eq!(conf.get_f64("ignite.task.speculation.multiplier").unwrap(), 2.5);
+        assert_eq!(
+            conf.get_duration_ms("ignite.worker.heartbeat.ms").unwrap(),
+            Duration::from_millis(200)
+        );
+        conf.set("ignite.task.retries", "not a number");
+        assert!(conf.get_usize("ignite.task.retries").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_key_and_bad_mode() {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.typo.key", "x");
+        assert!(conf.validate().is_err());
+
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.comm.mode", "quantum");
+        assert!(conf.validate().is_err());
+    }
+
+    #[test]
+    fn master_spec_parses() {
+        let mut conf = IgniteConf::new();
+        assert_eq!(conf.master_spec().unwrap(), MasterSpec::Local(4));
+        conf.set("ignite.master", "local[16]");
+        assert_eq!(conf.master_spec().unwrap(), MasterSpec::Local(16));
+        conf.set("ignite.master", "ignite://127.0.0.1:7077");
+        assert_eq!(conf.master_spec().unwrap(), MasterSpec::Cluster("127.0.0.1:7077".into()));
+        conf.set("ignite.master", "local[0]");
+        assert!(conf.master_spec().is_err());
+        conf.set("ignite.master", "yarn");
+        assert!(conf.master_spec().is_err());
+    }
+
+    #[test]
+    fn dump_is_sorted_and_parseable() {
+        let conf = IgniteConf::new();
+        let dump = conf.dump();
+        let reparsed = IgniteConf::from_str_file(&dump).unwrap();
+        assert_eq!(reparsed.dump(), dump);
+    }
+}

@@ -1,0 +1,271 @@
+//! [`IgniteContext`] — the application entry point, mirroring Spark's
+//! `SparkContext` (the `sc` of the paper's listings): it creates RDDs from
+//! collections (`parallelize`) and parallel closures from functions
+//! (`parallelize_func`), and in cluster mode drives named parallel
+//! functions across worker processes.
+
+use crate::closure::FuncRdd;
+use crate::cluster::Master;
+use crate::comm::{CommWorld, SparkComm};
+use crate::config::{IgniteConf, MasterSpec};
+use crate::error::{IgniteError, Result};
+use crate::rdd::{ParallelCollectionNode, Rdd};
+use crate::scheduler::Engine;
+use crate::ser::Value;
+use crate::util::split_ranges;
+use std::sync::Arc;
+
+/// The driver-side context.
+pub struct IgniteContext {
+    conf: IgniteConf,
+    engine: Arc<Engine>,
+    default_parallelism: usize,
+    /// Present in cluster mode: the embedded master.
+    master: Option<Arc<Master>>,
+}
+
+impl IgniteContext {
+    /// Local mode with `n` task slots (Spark `local[N]`).
+    pub fn local(n: usize) -> Self {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.master", format!("local[{n}]"));
+        conf.set("ignite.worker.slots", n.to_string());
+        Self::with_conf(conf).expect("local context cannot fail")
+    }
+
+    /// Build from configuration (`ignite.master` decides the mode).
+    pub fn with_conf(conf: IgniteConf) -> Result<Self> {
+        conf.validate()?;
+        let spec = conf.master_spec()?;
+        let engine = Engine::new(conf.clone())?;
+        match spec {
+            MasterSpec::Local(n) => Ok(IgniteContext {
+                conf,
+                engine,
+                default_parallelism: n,
+                master: None,
+            }),
+            MasterSpec::Cluster(_) => Err(IgniteError::Config(
+                "use IgniteContext::cluster_driver to start a cluster driver".into(),
+            )),
+        }
+    }
+
+    /// Start a cluster driver: embeds the master (listening on `port`),
+    /// to which `mpignite worker` processes connect. RDD execution stays
+    /// local (threads); `execute_named` fans parallel functions out to the
+    /// workers.
+    pub fn cluster_driver(conf: IgniteConf, port: u16) -> Result<Self> {
+        conf.validate()?;
+        let engine = Engine::new(conf.clone())?;
+        let master = Master::start(&conf, port)?;
+        let default_parallelism = conf.get_usize("ignite.worker.slots")?;
+        Ok(IgniteContext { conf, engine, default_parallelism, master: Some(master) })
+    }
+
+    pub fn conf(&self) -> &IgniteConf {
+        &self.conf
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// The embedded master (cluster mode only).
+    pub fn master(&self) -> Option<&Arc<Master>> {
+        self.master.as_ref()
+    }
+
+    pub fn default_parallelism(&self) -> usize {
+        self.default_parallelism
+    }
+
+    // ------------------------------------------------- data parallel ---
+
+    /// Create an RDD from a collection, split into the default number of
+    /// partitions (Spark's `sc.parallelize`).
+    pub fn parallelize<T: crate::rdd::Data>(&self, data: Vec<T>) -> Rdd<T> {
+        self.parallelize_with(data, self.default_parallelism)
+    }
+
+    /// Create an RDD with an explicit partition count.
+    pub fn parallelize_with<T: crate::rdd::Data>(&self, data: Vec<T>, parts: usize) -> Rdd<T> {
+        let parts = parts.max(1);
+        let ranges = split_ranges(data.len(), parts);
+        let mut partitions: Vec<Vec<T>> = Vec::with_capacity(parts);
+        let mut iter = data.into_iter();
+        for r in ranges {
+            partitions.push(iter.by_ref().take(r.len()).collect());
+        }
+        Rdd::new(
+            Arc::new(ParallelCollectionNode {
+                id: crate::util::next_id(),
+                partitions: Arc::new(partitions),
+            }),
+            self.engine.clone(),
+        )
+    }
+
+    /// Create an RDD of lines from a text file.
+    pub fn text_file(&self, path: &str) -> Result<Rdd<String>> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| IgniteError::Io(format!("read {path}: {e}")))?;
+        Ok(self.parallelize(text.lines().map(String::from).collect()))
+    }
+
+    // ------------------------------------------------- task parallel ---
+
+    /// Create a parallel closure RDD (the paper's `sc.parallelizeFunc`).
+    /// The closure receives a [`SparkComm`] and may capture its outer
+    /// scope, exactly as in Listings 1–4.
+    pub fn parallelize_func<R, F>(&self, f: F) -> FuncRdd<R>
+    where
+        R: Send + 'static,
+        F: Fn(&SparkComm) -> R + Send + Sync + 'static,
+    {
+        let conf = self.conf.clone();
+        FuncRdd::new(
+            Arc::new(move |n| CommWorld::local_with_conf(n, &conf)),
+            Arc::new(f),
+        )
+    }
+
+    /// Execute a registered named parallel function on the cluster with
+    /// `n` ranks (cluster mode; see [`crate::closure::register_parallel_fn`]).
+    /// Falls back to local threads when no master is embedded.
+    pub fn execute_named(&self, name: &str, n: usize, arg: Value) -> Result<Vec<Value>> {
+        match &self.master {
+            Some(master) => master.execute_named(name, n, arg),
+            None => {
+                let f = crate::closure::registry().get(name)?;
+                let conf = self.conf.clone();
+                let arg = Arc::new(arg);
+                let rdd: FuncRdd<Result<Value>> = FuncRdd::new(
+                    Arc::new(move |m| CommWorld::local_with_conf(m, &conf)),
+                    Arc::new(move |comm: &SparkComm| f(comm, &arg)),
+                );
+                rdd.execute(n)?.into_iter().collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_listing_1_matrix_vector_multiply() {
+        // Listing 1, faithfully: 3x3 matrix, 8 instances, idle high ranks.
+        let sc = IgniteContext::local(8);
+        let mat = vec![vec![1i64, 2, 3], vec![4, 5, 6], vec![7, 8, 9]];
+        let vec_ = vec![1i64, 2, 3];
+        let res: i64 = sc
+            .parallelize_func(move |world: &SparkComm| {
+                let rank = world.get_rank();
+                if rank < mat.len() {
+                    mat[rank].iter().zip(&vec_).map(|(a, b)| a * b).sum()
+                } else {
+                    0
+                }
+            })
+            .execute(8)
+            .unwrap()
+            .into_iter()
+            .sum();
+        // A·x = [14, 32, 50]; sum = 96.
+        assert_eq!(res, 96);
+    }
+
+    #[test]
+    fn parallelize_splits_evenly() {
+        let sc = IgniteContext::local(4);
+        let rdd = sc.parallelize((0..10i64).collect());
+        assert_eq!(rdd.num_partitions(), 4);
+        assert_eq!(rdd.collect().unwrap(), (0..10i64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallelize_with_more_parts_than_items() {
+        let sc = IgniteContext::local(2);
+        let rdd = sc.parallelize_with(vec![1i64, 2], 8);
+        assert_eq!(rdd.num_partitions(), 8);
+        assert_eq!(rdd.count().unwrap(), 2);
+    }
+
+    #[test]
+    fn rdd_chain_map_filter_reduce() {
+        let sc = IgniteContext::local(4);
+        let total = sc
+            .parallelize((1..=100i64).collect())
+            .map(|x| x * 2)
+            .filter(|x| x % 4 == 0)
+            .reduce(|a, b| a + b)
+            .unwrap();
+        // Doubled evens divisible by 4 ⇔ 2x where x even: 2*(2+4+...+100).
+        assert_eq!(total, 2 * (2..=100).step_by(2).sum::<i64>());
+    }
+
+    #[test]
+    fn wordcount_via_reduce_by_key() {
+        let sc = IgniteContext::local(4);
+        let lines = vec![
+            "the quick brown fox".to_string(),
+            "the lazy dog".to_string(),
+            "the fox".to_string(),
+        ];
+        let counts = sc
+            .parallelize(lines)
+            .flat_map(|l| l.split_whitespace().map(String::from).collect())
+            .map(|w| (w, 1i64))
+            .reduce_by_key(4, |a, b| a + b)
+            .collect_map()
+            .unwrap();
+        assert_eq!(counts["the"], 3);
+        assert_eq!(counts["fox"], 2);
+        assert_eq!(counts["dog"], 1);
+        assert_eq!(counts.len(), 6);
+    }
+
+    #[test]
+    fn interop_rdd_and_parallel_closure_in_one_app() {
+        // §5: "A single application can support both parallelized
+        // functions unique to MPIgnite as well as typical RDDs".
+        let sc = IgniteContext::local(4);
+        let data: Vec<i64> = (0..32).collect();
+        let doubled = sc.parallelize(data).map(|x| x * 2).collect().unwrap();
+        let chunk = doubled.len() / 4;
+        let doubled = std::sync::Arc::new(doubled);
+        let partials = sc
+            .parallelize_func(move |world: &SparkComm| {
+                let rank = world.rank();
+                let part: i64 = doubled[rank * chunk..(rank + 1) * chunk].iter().sum();
+                world.all_reduce(part, |a, b| a + b).unwrap()
+            })
+            .execute(4)
+            .unwrap();
+        let expect: i64 = (0..32).map(|x| x * 2).sum();
+        assert_eq!(partials, vec![expect; 4]);
+    }
+
+    #[test]
+    fn execute_named_local_fallback() {
+        crate::closure::register_parallel_fn("ctx.test.sum_ranks", |comm, arg| {
+            let base = match arg {
+                Value::I64(v) => *v,
+                _ => 0,
+            };
+            let total = comm.all_reduce(comm.rank() as i64, |a, b| a + b)?;
+            Ok(Value::I64(base + total))
+        });
+        let sc = IgniteContext::local(4);
+        let out = sc.execute_named("ctx.test.sum_ranks", 4, Value::I64(100)).unwrap();
+        assert_eq!(out, vec![Value::I64(106); 4]);
+    }
+
+    #[test]
+    fn text_file_missing_errors() {
+        let sc = IgniteContext::local(2);
+        assert!(sc.text_file("/nonexistent/nope.txt").is_err());
+    }
+}

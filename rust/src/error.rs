@@ -1,0 +1,103 @@
+//! Crate-wide error type.
+//!
+//! Every layer (RPC, scheduler, comm, runtime) reports failures through
+//! [`IgniteError`]; the variants mirror the subsystems so callers can react
+//! differently to, say, a lost worker (recoverable via lineage recompute)
+//! than to a serialization bug (programmer error).
+
+use std::fmt;
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, IgniteError>;
+
+/// Errors produced by the MPIgnite-RS engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IgniteError {
+    /// Serialization / deserialization failure in the `ser` codec.
+    Codec(String),
+    /// Transport-level failure (socket, framing, endpoint lookup).
+    Rpc(String),
+    /// A peer/collective operation failed (bad rank, context mismatch...).
+    Comm(String),
+    /// Scheduler / task execution failure after retries were exhausted.
+    Task(String),
+    /// A worker died or timed out.
+    WorkerLost { worker: u64, reason: String },
+    /// Configuration error (unknown key, unparsable value).
+    Config(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// Storage layer failure (block missing, spill I/O).
+    Storage(String),
+    /// Operation timed out.
+    Timeout(String),
+    /// The engine was asked to do something invalid.
+    Invalid(String),
+    /// I/O error (stringified: io::Error is not Clone).
+    Io(String),
+}
+
+impl fmt::Display for IgniteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IgniteError::Codec(m) => write!(f, "codec error: {m}"),
+            IgniteError::Rpc(m) => write!(f, "rpc error: {m}"),
+            IgniteError::Comm(m) => write!(f, "comm error: {m}"),
+            IgniteError::Task(m) => write!(f, "task error: {m}"),
+            IgniteError::WorkerLost { worker, reason } => {
+                write!(f, "worker {worker} lost: {reason}")
+            }
+            IgniteError::Config(m) => write!(f, "config error: {m}"),
+            IgniteError::Runtime(m) => write!(f, "runtime error: {m}"),
+            IgniteError::Storage(m) => write!(f, "storage error: {m}"),
+            IgniteError::Timeout(m) => write!(f, "timeout: {m}"),
+            IgniteError::Invalid(m) => write!(f, "invalid operation: {m}"),
+            IgniteError::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for IgniteError {}
+
+impl From<std::io::Error> for IgniteError {
+    fn from(e: std::io::Error) -> Self {
+        IgniteError::Io(e.to_string())
+    }
+}
+
+impl IgniteError {
+    /// True when the scheduler should treat this as recoverable via
+    /// recomputation (the Spark fault-tolerance model, paper §2.3).
+    pub fn is_recoverable(&self) -> bool {
+        matches!(
+            self,
+            IgniteError::WorkerLost { .. } | IgniteError::Timeout(_) | IgniteError::Rpc(_)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_subsystem() {
+        assert!(IgniteError::Codec("x".into()).to_string().contains("codec"));
+        assert!(IgniteError::Rpc("x".into()).to_string().contains("rpc"));
+        assert!(IgniteError::Comm("x".into()).to_string().contains("comm"));
+    }
+
+    #[test]
+    fn worker_lost_is_recoverable() {
+        let e = IgniteError::WorkerLost { worker: 3, reason: "heartbeat".into() };
+        assert!(e.is_recoverable());
+        assert!(!IgniteError::Codec("bad tag".into()).is_recoverable());
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        let e: IgniteError = io.into();
+        assert!(matches!(e, IgniteError::Io(_)));
+    }
+}

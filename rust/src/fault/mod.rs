@@ -1,0 +1,229 @@
+//! Fault injection and detection.
+//!
+//! Spark's fault tolerance (recompute from lineage, re-run stragglers —
+//! paper §2.1.1/§2.3) only matters if faults occur, so this module makes
+//! them occur deterministically:
+//!
+//! * [`FaultPlan`] — explicit scripted faults (fail task attempt N of
+//!   partition P, delay partition P by D ms) used by tests and the E7
+//!   bench;
+//! * seeded chaos mode — every task flips a coin from a deterministic
+//!   stream, reproducible from `ignite.fault.inject.seed`;
+//! * [`HeartbeatMonitor`] — the master-side detector that declares a
+//!   worker lost after `ignite.worker.timeout.ms` of silence, driving the
+//!   comm-mode fallback (p2p → relay) the paper proposes.
+
+use crate::error::{IgniteError, Result};
+use crate::rng::Xoshiro256;
+use crate::util::now_millis;
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Identifies a task for fault matching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TaskId {
+    pub stage: u64,
+    pub partition: usize,
+    pub attempt: usize,
+}
+
+/// A scripted or seeded fault source consulted at task start.
+#[derive(Default)]
+pub struct FaultInjector {
+    /// Fail these (stage, partition, attempt) exactly once each.
+    fail_once: Mutex<HashSet<(u64, usize, usize)>>,
+    /// Delay these (stage, partition) on every attempt.
+    delays: Mutex<HashMap<(u64, usize), Duration>>,
+    /// Seeded chaos: probability of failure per attempt-0 task.
+    chaos: Option<(u64, f64)>,
+}
+
+impl FaultInjector {
+    /// No faults.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Seeded chaos mode: each task's first attempt fails with
+    /// probability `fail_prob`, decided by a hash of its identity — the
+    /// same seed always fails the same tasks.
+    pub fn chaos(seed: u64, fail_prob: f64) -> Self {
+        FaultInjector { chaos: Some((seed, fail_prob)), ..Default::default() }
+    }
+
+    /// Script: fail `(stage, partition, attempt)` once.
+    pub fn fail_task(&self, stage: u64, partition: usize, attempt: usize) -> &Self {
+        self.fail_once.lock().unwrap().insert((stage, partition, attempt));
+        self
+    }
+
+    /// Script: delay attempt 0 of `(stage, partition)` (a straggler —
+    /// re-executions on "other nodes" run at full speed, as in the
+    /// MapReduce straggler model the paper cites).
+    pub fn delay_task(&self, stage: u64, partition: usize, delay: Duration) -> &Self {
+        self.delays.lock().unwrap().insert((stage, partition), delay);
+        self
+    }
+
+    /// Called by the scheduler at task start. Sleeps for scripted delays
+    /// (first attempt only), then fails if scripted/chaos says so.
+    pub fn before_task(&self, id: TaskId) -> Result<()> {
+        if id.attempt == 0 {
+            let delay = self.delays.lock().unwrap().get(&(id.stage, id.partition)).copied();
+            if let Some(d) = delay {
+                std::thread::sleep(d);
+            }
+        }
+        if self.fail_once.lock().unwrap().remove(&(id.stage, id.partition, id.attempt)) {
+            return Err(IgniteError::Task(format!(
+                "injected fault: stage {} partition {} attempt {}",
+                id.stage, id.partition, id.attempt
+            )));
+        }
+        if let Some((seed, p)) = self.chaos {
+            if id.attempt == 0 {
+                let mix = seed ^ (id.stage.wrapping_mul(0x9E3779B97F4A7C15))
+                    ^ ((id.partition as u64).wrapping_mul(0xD1B54A32D192ED03));
+                let mut rng = Xoshiro256::seeded(mix);
+                if rng.chance(p) {
+                    return Err(IgniteError::Task(format!(
+                        "chaos fault: stage {} partition {}",
+                        id.stage, id.partition
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether any fault source is configured (fast-path check).
+    pub fn is_active(&self) -> bool {
+        self.chaos.is_some()
+            || !self.fail_once.lock().unwrap().is_empty()
+            || !self.delays.lock().unwrap().is_empty()
+    }
+}
+
+/// Master-side liveness tracking from heartbeats.
+pub struct HeartbeatMonitor {
+    last_seen: Mutex<HashMap<u64, u64>>,
+    timeout_ms: u64,
+}
+
+impl HeartbeatMonitor {
+    pub fn new(timeout: Duration) -> Self {
+        HeartbeatMonitor {
+            last_seen: Mutex::new(HashMap::new()),
+            timeout_ms: timeout.as_millis() as u64,
+        }
+    }
+
+    /// Record a heartbeat (also registers unknown workers).
+    pub fn beat(&self, worker: u64) {
+        self.last_seen.lock().unwrap().insert(worker, now_millis());
+    }
+
+    /// Forget a worker (deregistration).
+    pub fn remove(&self, worker: u64) {
+        self.last_seen.lock().unwrap().remove(&worker);
+    }
+
+    /// Workers that have been silent past the timeout.
+    pub fn lost_workers(&self) -> Vec<u64> {
+        let now = now_millis();
+        self.last_seen
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, &t)| now.saturating_sub(t) > self.timeout_ms)
+            .map(|(&w, _)| w)
+            .collect()
+    }
+
+    /// All workers currently considered alive.
+    pub fn live_workers(&self) -> Vec<u64> {
+        let now = now_millis();
+        self.last_seen
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, &t)| now.saturating_sub(t) <= self.timeout_ms)
+            .map(|(&w, _)| w)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_faults_by_default() {
+        let f = FaultInjector::none();
+        assert!(!f.is_active());
+        for p in 0..10 {
+            f.before_task(TaskId { stage: 0, partition: p, attempt: 0 }).unwrap();
+        }
+    }
+
+    #[test]
+    fn scripted_fault_fires_once() {
+        let f = FaultInjector::none();
+        f.fail_task(1, 3, 0);
+        assert!(f.is_active());
+        let id = TaskId { stage: 1, partition: 3, attempt: 0 };
+        assert!(f.before_task(id).is_err(), "first call fails");
+        assert!(f.before_task(id).is_ok(), "fault consumed");
+        // Other partitions unaffected.
+        f.fail_task(1, 3, 0);
+        assert!(f.before_task(TaskId { stage: 1, partition: 4, attempt: 0 }).is_ok());
+        assert!(f.before_task(TaskId { stage: 1, partition: 3, attempt: 1 }).is_ok());
+    }
+
+    #[test]
+    fn scripted_delay_sleeps() {
+        let f = FaultInjector::none();
+        f.delay_task(0, 0, Duration::from_millis(30));
+        let t0 = std::time::Instant::now();
+        f.before_task(TaskId { stage: 0, partition: 0, attempt: 0 }).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn chaos_is_deterministic_and_spares_retries() {
+        let f1 = FaultInjector::chaos(42, 0.5);
+        let f2 = FaultInjector::chaos(42, 0.5);
+        let mut failed = 0;
+        for p in 0..100 {
+            let id = TaskId { stage: 7, partition: p, attempt: 0 };
+            let r1 = f1.before_task(id).is_err();
+            let r2 = f2.before_task(id).is_err();
+            assert_eq!(r1, r2, "same seed, same verdict");
+            if r1 {
+                failed += 1;
+                // Attempt 1 always passes chaos.
+                assert!(f1
+                    .before_task(TaskId { stage: 7, partition: p, attempt: 1 })
+                    .is_ok());
+            }
+        }
+        assert!(failed > 20 && failed < 80, "p=0.5 should fail roughly half, got {failed}");
+    }
+
+    #[test]
+    fn heartbeat_monitor_detects_loss() {
+        let hm = HeartbeatMonitor::new(Duration::from_millis(40));
+        hm.beat(1);
+        hm.beat(2);
+        assert_eq!(hm.lost_workers(), Vec::<u64>::new());
+        assert_eq!(hm.live_workers().len(), 2);
+        std::thread::sleep(Duration::from_millis(60));
+        hm.beat(2); // 2 stays alive
+        let lost = hm.lost_workers();
+        assert_eq!(lost, vec![1]);
+        assert_eq!(hm.live_workers(), vec![2]);
+        hm.remove(1);
+        assert!(hm.lost_workers().is_empty());
+    }
+}

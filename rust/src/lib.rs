@@ -1,0 +1,80 @@
+//! # MPIgnite-RS
+//!
+//! A Rust reproduction of *MPIgnite: An MPI-Like Language and Prototype
+//! Implementation for Apache Spark* (Morris & Skjellum, 2017).
+//!
+//! The crate contains three things:
+//!
+//! 1. **`ignite` engine** — a Spark-like data-parallel engine built from
+//!    scratch: lazy [`rdd::Rdd`] lineage, a DAG scheduler that cuts stages
+//!    at shuffle boundaries ([`scheduler`]), a block manager ([`storage`]),
+//!    and a master/worker cluster runtime over framed TCP ([`rpc`],
+//!    [`cluster`]).
+//! 2. **The paper's contribution** — MPI-style peer and collective
+//!    communication *inside* engine tasks: [`comm::SparkComm`] with ranks,
+//!    tags, blocking/non-blocking receive, communicator `split`, and
+//!    collectives, delivered over the engine's own RPC endpoints in either
+//!    master-relay or peer-to-peer mode; plus *parallel closures*
+//!    ([`closure`], [`context::IgniteContext::parallelize_func`]).
+//! 3. **A three-layer compute path** — JAX/Pallas kernels are AOT-lowered
+//!    to HLO text at build time and executed from Rust via PJRT
+//!    ([`runtime`]); Python is never on the request path.
+//!
+//! ## Quickstart (Listing 1 of the paper)
+//!
+//! ```
+//! use mpignite::prelude::*;
+//!
+//! let sc = IgniteContext::local(8);
+//! let mat = vec![vec![1i64, 2, 3], vec![4, 5, 6], vec![7, 8, 9]];
+//! let vec_ = vec![1i64, 2, 3];
+//! let res: i64 = sc
+//!     .parallelize_func(move |world: &SparkComm| {
+//!         let rank = world.rank();
+//!         if rank < mat.len() {
+//!             mat[rank].iter().zip(&vec_).map(|(a, b)| a * b).sum()
+//!         } else {
+//!             0
+//!         }
+//!     })
+//!     .execute(8)
+//!     .unwrap()
+//!     .into_iter()
+//!     .sum();
+//! assert_eq!(res, 14 + 32 + 50);
+//! ```
+
+pub mod apps;
+pub mod bench;
+pub mod closure;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod context;
+pub mod error;
+pub mod fault;
+pub mod metrics;
+pub mod rdd;
+pub mod rng;
+pub mod rpc;
+pub mod runtime;
+pub mod scheduler;
+pub mod ser;
+pub mod shuffle;
+pub mod storage;
+pub mod testkit;
+pub mod util;
+
+pub use context::IgniteContext;
+pub use error::{IgniteError, Result};
+
+/// Convenience re-exports for applications and examples.
+pub mod prelude {
+    pub use crate::closure::{register_parallel_fn, FuncRdd};
+    pub use crate::comm::{CommFuture, SparkComm, ANY_SOURCE, ANY_TAG};
+    pub use crate::config::IgniteConf;
+    pub use crate::context::IgniteContext;
+    pub use crate::error::{IgniteError, Result};
+    pub use crate::rdd::Rdd;
+    pub use crate::ser::{FromValue, IntoValue, Value};
+}

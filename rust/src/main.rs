@@ -1,0 +1,245 @@
+//! `mpignite` — the launcher binary.
+//!
+//! Subcommands:
+//!
+//! * `mpignite info` — effective config, artifact inventory, API table.
+//! * `mpignite worker --master HOST:PORT [--conf FILE]` — start a worker
+//!   process, register the application function library, serve tasks.
+//! * `mpignite driver --workers N [--port P] [--conf FILE]` — start a
+//!   driver with an embedded master, wait for `N` workers, then idle
+//!   (used by scripted multi-process runs).
+//! * `mpignite power-iter [--n 1024] [--ranks 4] [--iters 30]
+//!   [--workers 2] [--local]` — the E2E workload from anywhere: spawns an
+//!   in-process cluster (or pure local mode) and runs the distributed
+//!   power iteration end-to-end.
+//! * `mpignite metrics-demo` — run a tiny job and dump the metrics
+//!   registry (sanity tool).
+
+use mpignite::cluster::{Master, Worker};
+use mpignite::comm::SparkComm;
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use mpignite::util::Stopwatch;
+use std::collections::HashMap;
+use std::time::Duration;
+
+fn main() {
+    mpignite::util::init_logger();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Minimal flag parser: `--key value` / `--key=value` / bare `--flag`.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| IgniteError::Invalid(format!("expected --flag, got {}", args[i])))?;
+        if let Some((k, v)) = key.split_once('=') {
+            out.insert(k.to_string(), v.to_string());
+            i += 1;
+        } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            out.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            out.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(out)
+}
+
+fn conf_from_flags(flags: &HashMap<String, String>) -> Result<IgniteConf> {
+    let mut conf = match flags.get("conf") {
+        Some(path) => IgniteConf::from_file(path)?,
+        None => IgniteConf::from_env(),
+    };
+    if let Some(mode) = flags.get("mode") {
+        conf.set("ignite.comm.mode", mode.clone());
+    }
+    if let Some(slots) = flags.get("slots") {
+        conf.set("ignite.worker.slots", slots.clone());
+    }
+    conf.validate()?;
+    Ok(conf)
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => ("help", &[] as &[String]),
+    };
+    match cmd {
+        "info" => cmd_info(rest),
+        "worker" => cmd_worker(rest),
+        "driver" => cmd_driver(rest),
+        "power-iter" => cmd_power_iter(rest),
+        "metrics-demo" => cmd_metrics_demo(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(IgniteError::Invalid(format!("unknown subcommand {other}")))
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "mpignite — MPIgnite-RS launcher\n\n\
+         USAGE: mpignite <subcommand> [--flags]\n\n\
+         SUBCOMMANDS:\n\
+         \x20 info                          show config, artifacts, API table\n\
+         \x20 worker --master HOST:PORT     join a cluster as a worker\n\
+         \x20 driver --workers N [--port P] start a driver + embedded master\n\
+         \x20 power-iter [--n 1024] [--ranks 4] [--iters 30] [--workers 2] [--local]\n\
+         \x20 metrics-demo                  run a tiny job, dump metrics\n\n\
+         COMMON FLAGS: --conf FILE, --mode p2p|relay, --slots N"
+    );
+}
+
+fn cmd_info(rest: &[String]) -> Result<()> {
+    let flags = parse_flags(rest)?;
+    let conf = conf_from_flags(&flags)?;
+    println!("== effective configuration ==\n{}", conf.dump());
+    let artifacts_dir = conf.get_str("ignite.artifacts.dir")?;
+    match mpignite::runtime::shared_service(artifacts_dir) {
+        Ok(svc) => {
+            println!("== AOT artifacts ({artifacts_dir}) ==");
+            for name in svc.names() {
+                let meta = svc.meta(&name).unwrap();
+                println!("  {name}  inputs={:?} outputs={}", meta.inputs, meta.n_outputs);
+            }
+        }
+        Err(e) => println!("== AOT artifacts: unavailable ({e}) =="),
+    }
+    println!("\n== MPIgnite ↔ MPI (Figure 1) ==");
+    let mut t = mpignite::util::Table::new(vec!["MPIgnite-RS", "MPI"]);
+    for (ours, mpi) in api_table_rows() {
+        t.row(vec![ours, mpi]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// The Figure-1 rows (also asserted by examples/api_table.rs).
+pub fn api_table_rows() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("comm.send(rec, tag, data)", "MPI_Send"),
+        ("comm.receive::<T>(sender, tag) -> T", "MPI_Recv"),
+        ("comm.receive_async::<T>(sender, tag) -> CommFuture<T>", "MPI_Irecv"),
+        ("future.wait() -> T", "MPI_Wait"),
+        ("comm.get_rank()", "MPI_Comm_rank"),
+        ("comm.get_size()", "MPI_Comm_size"),
+        ("comm.split(color, key) -> SparkComm", "MPI_Comm_split"),
+        ("comm.broadcast::<T>(root, data) -> T", "MPI_Bcast"),
+        ("comm.all_reduce::<T>(data, f) -> T", "MPI_Allreduce"),
+        ("comm.reduce::<T>(root, data, f)", "MPI_Reduce"),
+        ("comm.gather::<T>(root, data)", "MPI_Gather"),
+        ("comm.scatter::<T>(root, data)", "MPI_Scatter"),
+        ("comm.all_gather::<T>(data)", "MPI_Allgather"),
+        ("comm.scan::<T>(data, f)", "MPI_Scan"),
+        ("comm.barrier()", "MPI_Barrier"),
+        ("comm.sendrecv::<S,R>(dst, src, tag, data)", "MPI_Sendrecv"),
+    ]
+}
+
+fn cmd_worker(rest: &[String]) -> Result<()> {
+    let flags = parse_flags(rest)?;
+    let conf = conf_from_flags(&flags)?;
+    let master = flags
+        .get("master")
+        .ok_or_else(|| IgniteError::Invalid("worker needs --master HOST:PORT".into()))?;
+    mpignite::apps::register_all();
+    let worker = Worker::start(&conf, mpignite::rpc::RpcAddress(master.clone()))?;
+    println!("worker {} serving (master {master}); Ctrl-C to stop", worker.worker_id);
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_driver(rest: &[String]) -> Result<()> {
+    let flags = parse_flags(rest)?;
+    let conf = conf_from_flags(&flags)?;
+    let workers: usize = flags.get("workers").map(|s| s.parse().unwrap_or(1)).unwrap_or(1);
+    let port: u16 = flags.get("port").map(|s| s.parse().unwrap_or(0)).unwrap_or(0);
+    mpignite::apps::register_all();
+    let master = Master::start(&conf, port)?;
+    println!("master listening on {}", master.address());
+    master.wait_for_workers(workers, Duration::from_secs(120))?;
+    println!("{workers} workers registered; driver idle (Ctrl-C to stop)");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_power_iter(rest: &[String]) -> Result<()> {
+    let flags = parse_flags(rest)?;
+    let conf = conf_from_flags(&flags)?;
+    let n: usize = flags.get("n").map(|s| s.parse().unwrap_or(1024)).unwrap_or(1024);
+    let ranks: usize = flags.get("ranks").map(|s| s.parse().unwrap_or(4)).unwrap_or(4);
+    let iters: i64 = flags.get("iters").map(|s| s.parse().unwrap_or(30)).unwrap_or(30);
+    let workers: usize = flags.get("workers").map(|s| s.parse().unwrap_or(2)).unwrap_or(2);
+    let local = flags.contains_key("local");
+    mpignite::apps::register_all();
+
+    let arg = Value::Map(vec![
+        ("n".into(), Value::I64(n as i64)),
+        ("iters".into(), Value::I64(iters)),
+        ("seed".into(), Value::I64(7)),
+        ("artifacts".into(), Value::Str(conf.get_str("ignite.artifacts.dir")?.into())),
+    ]);
+
+    let sw = Stopwatch::start();
+    let results = if local {
+        println!("power-iter: local[{ranks}] mode, n={n}, iters={iters}");
+        let sc = IgniteContext::local(ranks);
+        sc.execute_named("app.power_iter", ranks, arg)?
+    } else {
+        println!("power-iter: cluster mode, {workers} workers, {ranks} ranks, n={n}, iters={iters}");
+        let master = Master::start(&conf, 0)?;
+        let _workers: Vec<_> =
+            (0..workers).map(|_| Worker::start(&conf, master.address())).collect::<Result<_>>()?;
+        master.wait_for_workers(workers, Duration::from_secs(10))?;
+        let out = master.execute_named("app.power_iter", ranks, arg)?;
+        master.shutdown();
+        out
+    };
+    let elapsed = sw.elapsed_millis();
+    let lambda = match results[0].get("lambda") {
+        Some(Value::F64(l)) => *l,
+        _ => return Err(IgniteError::Invalid("bad power_iter result".into())),
+    };
+    println!("λ ≈ {lambda:.4} (planted ≈ {})", mpignite::apps::PLANTED_EIG);
+    println!("wall time: {elapsed:.1} ms  ({:.2} ms/iter)", elapsed / iters as f64);
+    println!("\n== metrics ==\n{}", mpignite::metrics::global().report());
+    Ok(())
+}
+
+fn cmd_metrics_demo() -> Result<()> {
+    let sc = IgniteContext::local(4);
+    let total: i64 = sc
+        .parallelize((0..1000i64).collect())
+        .map(|x| x * x)
+        .reduce(|a, b| a + b)?;
+    println!("sum of squares 0..1000 = {total}");
+    let hist = sc
+        .parallelize_func(|world: &SparkComm| {
+            world.all_reduce(world.rank() as i64, |a, b| a + b).unwrap_or(-1)
+        })
+        .execute(4)?;
+    println!("allreduce: {hist:?}");
+    println!("\n{}", mpignite::metrics::global().report());
+    Ok(())
+}

@@ -1,0 +1,305 @@
+//! Metrics substrate: lock-free counters, gauges, and log-bucket latency
+//! histograms, collected in a process-wide registry. Every layer (RPC
+//! bytes, comm messages, scheduler tasks, block store hits) reports here;
+//! the bench harness and the E2E driver print the registry at exit.
+
+use once_cell::sync::Lazy;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value (queue depths, cached bytes).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.value.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Histogram over `[1ns, ~18s]` with 2 buckets per power of two — compact
+/// (128 buckets), lock-free recording, ~±25% quantile resolution, plenty
+/// for latency *shape* comparisons.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+const NUM_BUCKETS: usize = 128;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket_index(ns: u64) -> usize {
+        if ns == 0 {
+            return 0;
+        }
+        let log2 = 63 - ns.leading_zeros() as usize;
+        // Two buckets per octave: the second kicks in at 1.5 * 2^log2.
+        let half = usize::from(ns >= (1u64 << log2) + (1u64 << log2) / 2);
+        (log2 * 2 + half).min(NUM_BUCKETS - 1)
+    }
+
+    fn bucket_value(idx: usize) -> u64 {
+        let log2 = idx / 2;
+        let base = 1u64 << log2;
+        if idx % 2 == 0 {
+            base
+        } else {
+            base + base / 2
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[Self::bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (`0.0..=1.0`) from bucket lower bounds.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max_ns()
+    }
+}
+
+/// A snapshot row for reporting.
+#[derive(Debug, Clone)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(i64),
+    Histogram { count: u64, mean_ns: f64, p50_ns: u64, p99_ns: u64, max_ns: u64 },
+}
+
+/// Registry of named metrics. One global instance ([`global`]) plus
+/// per-test local instances.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut g = self.counters.lock().unwrap();
+        g.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut g = self.gauges.lock().unwrap();
+        g.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut g = self.histograms.lock().unwrap();
+        g.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Sorted snapshot of everything.
+    pub fn snapshot(&self) -> BTreeMap<String, MetricValue> {
+        let mut out = BTreeMap::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.insert(k.clone(), MetricValue::Counter(v.get()));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.insert(k.clone(), MetricValue::Gauge(v.get()));
+        }
+        for (k, v) in self.histograms.lock().unwrap().iter() {
+            out.insert(
+                k.clone(),
+                MetricValue::Histogram {
+                    count: v.count(),
+                    mean_ns: v.mean_ns(),
+                    p50_ns: v.quantile_ns(0.5),
+                    p99_ns: v.quantile_ns(0.99),
+                    max_ns: v.max_ns(),
+                },
+            );
+        }
+        out
+    }
+
+    /// Text report, one line per metric.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.snapshot() {
+            match v {
+                MetricValue::Counter(c) => out.push_str(&format!("{k} = {c}\n")),
+                MetricValue::Gauge(g) => out.push_str(&format!("{k} = {g}\n")),
+                MetricValue::Histogram { count, mean_ns, p50_ns, p99_ns, max_ns } => {
+                    out.push_str(&format!(
+                        "{k} = count={count} mean={mean_ns:.0}ns p50={p50_ns}ns p99={p99_ns}ns max={max_ns}ns\n"
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+static GLOBAL: Lazy<MetricsRegistry> = Lazy::new(MetricsRegistry::new);
+
+/// Process-wide registry.
+pub fn global() -> &'static MetricsRegistry {
+    &GLOBAL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("rpc.bytes");
+        c.add(10);
+        c.inc();
+        assert_eq!(c.get(), 11);
+        // Same name returns the same underlying counter.
+        assert_eq!(reg.counter("rpc.bytes").get(), 11);
+
+        let g = reg.gauge("queue.depth");
+        g.set(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_ordered() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1000); // 1µs..1ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_ns(0.5);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        assert!(p50 >= 250_000 && p50 <= 1_000_000, "p50 {p50} out of band");
+        assert!(h.mean_ns() > 0.0);
+        assert_eq!(h.max_ns(), 1_000_000);
+    }
+
+    #[test]
+    fn histogram_bucket_roundtrip_monotone() {
+        let mut last = 0;
+        for idx in 0..NUM_BUCKETS {
+            let v = Histogram::bucket_value(idx);
+            assert!(v >= last);
+            last = v;
+        }
+        // A value lands in a bucket whose lower bound does not exceed it.
+        for ns in [1u64, 2, 3, 100, 1_000, 123_456, u32::MAX as u64] {
+            let idx = Histogram::bucket_index(ns);
+            assert!(Histogram::bucket_value(idx) <= ns.max(1));
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_and_report() {
+        let reg = MetricsRegistry::new();
+        reg.counter("a").inc();
+        reg.gauge("b").set(-1);
+        reg.histogram("c").record(Duration::from_micros(5));
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 3);
+        let report = reg.report();
+        assert!(report.contains("a = 1"));
+        assert!(report.contains("b = -1"));
+        assert!(report.contains("count=1"));
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        global().counter("test.global").inc();
+        assert!(global().counter("test.global").get() >= 1);
+    }
+}

@@ -1,0 +1,391 @@
+//! Resilient Distributed Datasets — the data-parallel half of the paper's
+//! story (§2.2): read-only, lazily-evaluated, partitioned collections with
+//! lineage. Transformations build the DAG; actions hand it to the
+//! [`crate::scheduler::Engine`], which cuts stages at shuffle boundaries.
+//! A lost partition (cache eviction, injected fault) is recomputed from
+//! lineage, never checkpointed.
+//!
+//! Parallel closures ([`crate::closure`]) interoperate with these RDDs in
+//! one application — the paper's central interop claim (§3.2, §5).
+
+mod nodes;
+
+pub use nodes::*;
+
+use crate::error::Result;
+use crate::scheduler::{Engine, StageSpec};
+use crate::shuffle::HashPartitioner;
+use std::collections::HashSet;
+use std::hash::Hash;
+use std::sync::Arc;
+
+/// Element bound for RDD contents.
+pub trait Data: Clone + Send + Sync + 'static {}
+impl<T: Clone + Send + Sync + 'static> Data for T {}
+
+/// A node in the lineage DAG, computing partitions of element type `T`.
+pub trait RddNode<T: Data>: Send + Sync {
+    /// Unique id (lineage identity; cache keys).
+    fn id(&self) -> u64;
+    /// Number of partitions.
+    fn num_partitions(&self) -> usize;
+    /// Compute partition `part` (pulling parents recursively).
+    fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<T>>;
+    /// Append ancestor shuffle stages (parents first — topological order).
+    fn stage_deps(&self, out: &mut Vec<StageSpec>, seen: &mut HashSet<u64>);
+}
+
+/// Handle to a lineage node plus the engine that executes it.
+pub struct Rdd<T: Data> {
+    pub(crate) node: Arc<dyn RddNode<T>>,
+    pub(crate) engine: Arc<Engine>,
+}
+
+impl<T: Data> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Rdd { node: self.node.clone(), engine: self.engine.clone() }
+    }
+}
+
+impl<T: Data> Rdd<T> {
+    pub(crate) fn new(node: Arc<dyn RddNode<T>>, engine: Arc<Engine>) -> Self {
+        Rdd { node, engine }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.node.id()
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.node.num_partitions()
+    }
+
+    // ------------------------------------------------ transformations --
+
+    /// Element-wise mapping (lazy).
+    pub fn map<U: Data, F: Fn(T) -> U + Send + Sync + 'static>(&self, f: F) -> Rdd<U> {
+        Rdd::new(
+            Arc::new(MapNode { id: crate::util::next_id(), parent: self.node.clone(), f: Arc::new(f) }),
+            self.engine.clone(),
+        )
+    }
+
+    /// Keep elements satisfying `f` (lazy).
+    pub fn filter<F: Fn(&T) -> bool + Send + Sync + 'static>(&self, f: F) -> Rdd<T> {
+        Rdd::new(
+            Arc::new(FilterNode {
+                id: crate::util::next_id(),
+                parent: self.node.clone(),
+                f: Arc::new(f),
+            }),
+            self.engine.clone(),
+        )
+    }
+
+    /// Map each element to zero or more outputs (lazy).
+    pub fn flat_map<U: Data, F: Fn(T) -> Vec<U> + Send + Sync + 'static>(&self, f: F) -> Rdd<U> {
+        Rdd::new(
+            Arc::new(FlatMapNode {
+                id: crate::util::next_id(),
+                parent: self.node.clone(),
+                f: Arc::new(f),
+            }),
+            self.engine.clone(),
+        )
+    }
+
+    /// Whole-partition mapping (lazy).
+    pub fn map_partitions<U: Data, F: Fn(Vec<T>) -> Vec<U> + Send + Sync + 'static>(
+        &self,
+        f: F,
+    ) -> Rdd<U> {
+        Rdd::new(
+            Arc::new(MapPartitionsNode {
+                id: crate::util::next_id(),
+                parent: self.node.clone(),
+                f: Arc::new(f),
+            }),
+            self.engine.clone(),
+        )
+    }
+
+    /// Concatenate two RDDs' partitions (lazy).
+    pub fn union(&self, other: &Rdd<T>) -> Rdd<T> {
+        Rdd::new(
+            Arc::new(UnionNode {
+                id: crate::util::next_id(),
+                left: self.node.clone(),
+                right: other.node.clone(),
+            }),
+            self.engine.clone(),
+        )
+    }
+
+    /// Bernoulli sample with a fixed seed (lazy, deterministic).
+    pub fn sample(&self, fraction: f64, seed: u64) -> Rdd<T> {
+        Rdd::new(
+            Arc::new(SampleNode {
+                id: crate::util::next_id(),
+                parent: self.node.clone(),
+                fraction,
+                seed,
+            }),
+            self.engine.clone(),
+        )
+    }
+
+    /// Pair each element with its global index (lazy; indices follow
+    /// partition order).
+    pub fn zip_with_index(&self) -> Rdd<(T, usize)> {
+        Rdd::new(
+            Arc::new(ZipWithIndexNode { id: crate::util::next_id(), parent: self.node.clone() }),
+            self.engine.clone(),
+        )
+    }
+
+    /// Mark for caching: the first computation of each partition is stored
+    /// in the block manager; lineage recomputes evicted partitions.
+    pub fn cache(&self) -> Rdd<T> {
+        Rdd::new(
+            Arc::new(CacheNode { id: crate::util::next_id(), parent: self.node.clone() }),
+            self.engine.clone(),
+        )
+    }
+
+    /// Key every element by `f` (lazy) — entry to the pair-RDD ops.
+    pub fn key_by<K: Data, F: Fn(&T) -> K + Send + Sync + 'static>(&self, f: F) -> Rdd<(K, T)> {
+        self.map(move |t| (f(&t), t))
+    }
+
+    // ------------------------------------------------------- actions ---
+
+    /// Materialize every partition and concatenate (Spark `collect`).
+    pub fn collect(&self) -> Result<Vec<T>> {
+        let node = self.node.clone();
+        let parts: Vec<Vec<T>> = self.run_action(move |_, data| data)?;
+        let _ = node;
+        Ok(parts.into_iter().flatten().collect())
+    }
+
+    /// Count elements.
+    pub fn count(&self) -> Result<usize> {
+        let counts: Vec<usize> = self.run_action(|_, data: Vec<T>| data.len())?;
+        Ok(counts.into_iter().sum())
+    }
+
+    /// Reduce all elements with `f` (associative + commutative across
+    /// partitions). Errors on an empty RDD.
+    pub fn reduce<F: Fn(T, T) -> T + Send + Sync + 'static>(&self, f: F) -> Result<T> {
+        let f = Arc::new(f);
+        let f2 = f.clone();
+        let partials: Vec<Option<T>> = self.run_action(move |_, data: Vec<T>| {
+            data.into_iter().reduce(|a, b| f2(a, b))
+        })?;
+        partials
+            .into_iter()
+            .flatten()
+            .reduce(|a, b| f(a, b))
+            .ok_or_else(|| crate::error::IgniteError::Invalid("reduce on empty RDD".into()))
+    }
+
+    /// Fold with zero value.
+    pub fn fold<F: Fn(T, T) -> T + Send + Sync + 'static>(&self, zero: T, f: F) -> Result<T> {
+        let f = Arc::new(f);
+        let f2 = f.clone();
+        let z = zero.clone();
+        let partials: Vec<T> = self.run_action(move |_, data: Vec<T>| {
+            data.into_iter().fold(z.clone(), |a, b| f2(a, b))
+        })?;
+        Ok(partials.into_iter().fold(zero, |a, b| f(a, b)))
+    }
+
+    /// First `n` elements in partition order.
+    pub fn take(&self, n: usize) -> Result<Vec<T>> {
+        // Simple implementation: collect then truncate (fine at this
+        // scale; Spark's incremental take is an optimization).
+        let mut all = self.collect()?;
+        all.truncate(n);
+        Ok(all)
+    }
+
+    /// First element.
+    pub fn first(&self) -> Result<T> {
+        self.take(1)?
+            .pop()
+            .ok_or_else(|| crate::error::IgniteError::Invalid("first on empty RDD".into()))
+    }
+
+    /// Run `action` once per computed partition, returning per-partition
+    /// results in order. This is the scheduler entry point every action
+    /// funnels through.
+    pub fn run_action<R, A>(&self, action: A) -> Result<Vec<R>>
+    where
+        R: Send + 'static,
+        A: Fn(usize, Vec<T>) -> R + Send + Sync + 'static,
+    {
+        let mut stages = Vec::new();
+        let mut seen = HashSet::new();
+        self.node.stage_deps(&mut stages, &mut seen);
+        let node = self.node.clone();
+        self.engine.run_job(
+            stages,
+            self.node.num_partitions(),
+            move |part, engine| node.compute(part, engine),
+            action,
+        )
+    }
+}
+
+impl<T: Data + std::fmt::Debug> Rdd<T> {
+    /// Print every element (debug convenience, like `foreach(println)`).
+    pub fn print_all(&self) -> Result<()> {
+        for item in self.collect()? {
+            println!("{item:?}");
+        }
+        Ok(())
+    }
+}
+
+// Numeric conveniences.
+impl Rdd<i64> {
+    pub fn sum(&self) -> Result<i64> {
+        self.fold(0, |a, b| a + b)
+    }
+}
+
+impl Rdd<f64> {
+    pub fn sum(&self) -> Result<f64> {
+        self.fold(0.0, |a, b| a + b)
+    }
+
+    pub fn mean(&self) -> Result<f64> {
+        let n = self.count()?;
+        if n == 0 {
+            return Err(crate::error::IgniteError::Invalid("mean of empty RDD".into()));
+        }
+        Ok(self.sum()? / n as f64)
+    }
+}
+
+// ---------------------------------------------------------- pair ops --
+
+impl<K, V> Rdd<(K, V)>
+where
+    K: Data + Hash + Eq,
+    V: Data,
+{
+    /// Shuffle + combine values per key (Spark `reduceByKey`). Cuts a
+    /// stage boundary: map tasks bucket by key hash, reduce tasks merge.
+    pub fn reduce_by_key<F: Fn(V, V) -> V + Send + Sync + 'static>(
+        &self,
+        num_partitions: usize,
+        f: F,
+    ) -> Rdd<(K, V)> {
+        Rdd::new(
+            Arc::new(ShuffledNode {
+                id: crate::util::next_id(),
+                shuffle_id: crate::util::next_id(),
+                parent: self.node.clone(),
+                partitioner: HashPartitioner::new(num_partitions),
+                agg: Arc::new(f),
+            }),
+            self.engine.clone(),
+        )
+    }
+
+    /// Group values per key (via `reduce_by_key` over singleton vectors).
+    pub fn group_by_key(&self, num_partitions: usize) -> Rdd<(K, Vec<V>)> {
+        self.map(|(k, v)| (k, vec![v])).reduce_by_key(num_partitions, |mut a, mut b| {
+            a.append(&mut b);
+            a
+        })
+    }
+
+    /// Map values, keeping keys (no shuffle).
+    pub fn map_values<U: Data, F: Fn(V) -> U + Send + Sync + 'static>(&self, f: F) -> Rdd<(K, U)> {
+        self.map(move |(k, v)| (k, f(v)))
+    }
+
+    /// Count elements per key.
+    pub fn count_by_key(&self, num_partitions: usize) -> Rdd<(K, usize)> {
+        self.map(|(k, _)| (k, 1usize)).reduce_by_key(num_partitions, |a, b| a + b)
+    }
+
+    /// Collect as a hash map (action).
+    pub fn collect_map(&self) -> Result<std::collections::HashMap<K, V>> {
+        Ok(self.collect()?.into_iter().collect())
+    }
+}
+
+impl<K, V> Rdd<(K, V)>
+where
+    K: Data + Hash + Eq,
+    V: Data,
+{
+    /// Group this RDD with another by key (Spark `cogroup`): for every
+    /// key present in either side, the pair of value lists.
+    pub fn cogroup<W: Data>(
+        &self,
+        other: &Rdd<(K, W)>,
+        num_partitions: usize,
+    ) -> Rdd<(K, (Vec<V>, Vec<W>))> {
+        let left = self.map(|(k, v)| (k, (vec![v], Vec::<W>::new())));
+        let right = other.map(|(k, w)| (k, (Vec::<V>::new(), vec![w])));
+        left.union(&right).reduce_by_key(num_partitions, |(mut lv, mut lw), (mut rv, mut rw)| {
+            lv.append(&mut rv);
+            lw.append(&mut rw);
+            (lv, lw)
+        })
+    }
+
+    /// Inner join by key (Spark `join`): the cross product of both sides'
+    /// values per shared key.
+    pub fn join<W: Data>(&self, other: &Rdd<(K, W)>, num_partitions: usize) -> Rdd<(K, (V, W))> {
+        self.cogroup(other, num_partitions).flat_map(|(k, (vs, ws))| {
+            let mut out = Vec::with_capacity(vs.len() * ws.len());
+            for v in &vs {
+                for w in &ws {
+                    out.push((k.clone(), (v.clone(), w.clone())));
+                }
+            }
+            out
+        })
+    }
+}
+
+impl<T: Data + Hash + Eq> Rdd<T> {
+    /// Remove duplicates (shuffles).
+    pub fn distinct(&self, num_partitions: usize) -> Rdd<T> {
+        self.map(|t| (t, ()))
+            .reduce_by_key(num_partitions, |a, _| a)
+            .map(|(t, ())| t)
+    }
+}
+
+impl<T: Data> Rdd<T> {
+    /// Globally sort by a key function (action-backed: materializes, sorts
+    /// on the driver, re-parallelizes — adequate at engine scale; Spark's
+    /// range-partitioned sort is an optimization of the same contract).
+    pub fn sort_by<K, F>(&self, f: F, num_partitions: usize) -> Result<Rdd<T>>
+    where
+        K: Ord,
+        F: Fn(&T) -> K,
+    {
+        let mut all = self.collect()?;
+        all.sort_by_key(|t| f(t));
+        let parts = num_partitions.max(1);
+        let ranges = crate::util::split_ranges(all.len(), parts);
+        let mut partitions: Vec<Vec<T>> = Vec::with_capacity(parts);
+        let mut iter = all.into_iter();
+        for r in ranges {
+            partitions.push(iter.by_ref().take(r.len()).collect());
+        }
+        Ok(Rdd::new(
+            Arc::new(ParallelCollectionNode {
+                id: crate::util::next_id(),
+                partitions: Arc::new(partitions),
+            }),
+            self.engine.clone(),
+        ))
+    }
+}

@@ -1,0 +1,367 @@
+//! Lineage node implementations. Every transformation is a small struct
+//! holding its parent(s) and closure; `compute` pulls parent partitions
+//! recursively, so recomputation after a fault is just another call.
+
+use super::{Data, RddNode};
+use crate::error::Result;
+use crate::rng::Xoshiro256;
+use crate::scheduler::{Engine, StageSpec};
+use crate::shuffle::HashPartitioner;
+use std::collections::{HashMap, HashSet};
+use std::hash::Hash;
+use std::sync::Arc;
+
+/// Source RDD over an in-memory collection, pre-split into partitions
+/// (Spark's `parallelize`).
+pub struct ParallelCollectionNode<T: Data> {
+    pub id: u64,
+    pub partitions: Arc<Vec<Vec<T>>>,
+}
+
+impl<T: Data> RddNode<T> for ParallelCollectionNode<T> {
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    fn compute(&self, part: usize, _engine: &Engine) -> Result<Vec<T>> {
+        Ok(self.partitions[part].clone())
+    }
+
+    fn stage_deps(&self, _out: &mut Vec<StageSpec>, _seen: &mut HashSet<u64>) {}
+}
+
+pub struct MapNode<T: Data, U: Data> {
+    pub id: u64,
+    pub parent: Arc<dyn RddNode<T>>,
+    pub f: Arc<dyn Fn(T) -> U + Send + Sync>,
+}
+
+impl<T: Data, U: Data> RddNode<U> for MapNode<T, U> {
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+
+    fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<U>> {
+        Ok(self.parent.compute(part, engine)?.into_iter().map(|t| (self.f)(t)).collect())
+    }
+
+    fn stage_deps(&self, out: &mut Vec<StageSpec>, seen: &mut HashSet<u64>) {
+        self.parent.stage_deps(out, seen);
+    }
+}
+
+pub struct FilterNode<T: Data> {
+    pub id: u64,
+    pub parent: Arc<dyn RddNode<T>>,
+    pub f: Arc<dyn Fn(&T) -> bool + Send + Sync>,
+}
+
+impl<T: Data> RddNode<T> for FilterNode<T> {
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+
+    fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<T>> {
+        Ok(self.parent.compute(part, engine)?.into_iter().filter(|t| (self.f)(t)).collect())
+    }
+
+    fn stage_deps(&self, out: &mut Vec<StageSpec>, seen: &mut HashSet<u64>) {
+        self.parent.stage_deps(out, seen);
+    }
+}
+
+pub struct FlatMapNode<T: Data, U: Data> {
+    pub id: u64,
+    pub parent: Arc<dyn RddNode<T>>,
+    pub f: Arc<dyn Fn(T) -> Vec<U> + Send + Sync>,
+}
+
+impl<T: Data, U: Data> RddNode<U> for FlatMapNode<T, U> {
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+
+    fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<U>> {
+        Ok(self
+            .parent
+            .compute(part, engine)?
+            .into_iter()
+            .flat_map(|t| (self.f)(t))
+            .collect())
+    }
+
+    fn stage_deps(&self, out: &mut Vec<StageSpec>, seen: &mut HashSet<u64>) {
+        self.parent.stage_deps(out, seen);
+    }
+}
+
+pub struct MapPartitionsNode<T: Data, U: Data> {
+    pub id: u64,
+    pub parent: Arc<dyn RddNode<T>>,
+    pub f: Arc<dyn Fn(Vec<T>) -> Vec<U> + Send + Sync>,
+}
+
+impl<T: Data, U: Data> RddNode<U> for MapPartitionsNode<T, U> {
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+
+    fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<U>> {
+        Ok((self.f)(self.parent.compute(part, engine)?))
+    }
+
+    fn stage_deps(&self, out: &mut Vec<StageSpec>, seen: &mut HashSet<u64>) {
+        self.parent.stage_deps(out, seen);
+    }
+}
+
+pub struct UnionNode<T: Data> {
+    pub id: u64,
+    pub left: Arc<dyn RddNode<T>>,
+    pub right: Arc<dyn RddNode<T>>,
+}
+
+impl<T: Data> RddNode<T> for UnionNode<T> {
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.left.num_partitions() + self.right.num_partitions()
+    }
+
+    fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<T>> {
+        let nl = self.left.num_partitions();
+        if part < nl {
+            self.left.compute(part, engine)
+        } else {
+            self.right.compute(part - nl, engine)
+        }
+    }
+
+    fn stage_deps(&self, out: &mut Vec<StageSpec>, seen: &mut HashSet<u64>) {
+        self.left.stage_deps(out, seen);
+        self.right.stage_deps(out, seen);
+    }
+}
+
+pub struct SampleNode<T: Data> {
+    pub id: u64,
+    pub parent: Arc<dyn RddNode<T>>,
+    pub fraction: f64,
+    pub seed: u64,
+}
+
+impl<T: Data> RddNode<T> for SampleNode<T> {
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+
+    fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<T>> {
+        // Deterministic per (seed, partition) → recomputation yields the
+        // same sample (lineage consistency).
+        let mut rng = Xoshiro256::seeded(self.seed ^ (part as u64).wrapping_mul(0x9E37));
+        Ok(self
+            .parent
+            .compute(part, engine)?
+            .into_iter()
+            .filter(|_| rng.chance(self.fraction))
+            .collect())
+    }
+
+    fn stage_deps(&self, out: &mut Vec<StageSpec>, seen: &mut HashSet<u64>) {
+        self.parent.stage_deps(out, seen);
+    }
+}
+
+pub struct ZipWithIndexNode<T: Data> {
+    pub id: u64,
+    pub parent: Arc<dyn RddNode<T>>,
+}
+
+impl<T: Data> RddNode<(T, usize)> for ZipWithIndexNode<T> {
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+
+    fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<(T, usize)>> {
+        // Offsets need preceding partition sizes; compute them (cheap for
+        // narrow lineage, and cached parents make it cheaper).
+        let mut offset = 0usize;
+        for p in 0..part {
+            offset += self.parent.compute(p, engine)?.len();
+        }
+        Ok(self
+            .parent
+            .compute(part, engine)?
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| (t, offset + i))
+            .collect())
+    }
+
+    fn stage_deps(&self, out: &mut Vec<StageSpec>, seen: &mut HashSet<u64>) {
+        self.parent.stage_deps(out, seen);
+    }
+}
+
+/// Caches computed partitions in the block manager (`MEMORY_ONLY`):
+/// eviction is recovered by recomputing from the parent.
+pub struct CacheNode<T: Data> {
+    pub id: u64,
+    pub parent: Arc<dyn RddNode<T>>,
+}
+
+impl<T: Data> RddNode<T> for CacheNode<T> {
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+
+    fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<T>> {
+        let key = format!("rdd_{}_{}", self.id, part);
+        if let Some(cached) = engine.blocks.get_typed::<Vec<T>>(&key) {
+            crate::metrics::global().counter("rdd.cache.hits").inc();
+            return Ok((*cached).clone());
+        }
+        crate::metrics::global().counter("rdd.cache.misses").inc();
+        let data = self.parent.compute(part, engine)?;
+        // Size estimate: elements × element stride (coarse but monotone).
+        let size = data.len() * std::mem::size_of::<T>() + 64;
+        let _ = engine.blocks.put_typed(&key, Arc::new(data.clone()), size);
+        Ok(data)
+    }
+
+    fn stage_deps(&self, out: &mut Vec<StageSpec>, seen: &mut HashSet<u64>) {
+        self.parent.stage_deps(out, seen);
+    }
+}
+
+/// Shuffle boundary: `reduce_by_key`. The map side buckets parent
+/// partitions by key hash with map-side combining; the reduce side merges
+/// every map's bucket for its partition.
+pub struct ShuffledNode<K, V>
+where
+    K: Data + Hash + Eq,
+    V: Data,
+{
+    pub id: u64,
+    pub shuffle_id: u64,
+    pub parent: Arc<dyn RddNode<(K, V)>>,
+    pub partitioner: HashPartitioner,
+    pub agg: Arc<dyn Fn(V, V) -> V + Send + Sync>,
+}
+
+impl<K, V> RddNode<(K, V)> for ShuffledNode<K, V>
+where
+    K: Data + Hash + Eq,
+    V: Data,
+{
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.partitioner.partitions
+    }
+
+    fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<(K, V)>> {
+        // Reduce side: merge this partition's bucket from every map task.
+        let n_maps = engine.shuffle.map_count(self.shuffle_id).ok_or_else(|| {
+            crate::error::IgniteError::Storage(format!(
+                "shuffle {} not materialized (stage skipped?)",
+                self.shuffle_id
+            ))
+        })?;
+        let mut merged: HashMap<K, V> = HashMap::new();
+        for map_idx in 0..n_maps {
+            let bucket = engine.shuffle.get_bucket::<(K, V)>(self.shuffle_id, map_idx, part)?;
+            for (k, v) in bucket.iter() {
+                match merged.remove(k) {
+                    Some(acc) => {
+                        merged.insert(k.clone(), (self.agg)(acc, v.clone()));
+                    }
+                    None => {
+                        merged.insert(k.clone(), v.clone());
+                    }
+                }
+            }
+        }
+        Ok(merged.into_iter().collect())
+    }
+
+    fn stage_deps(&self, out: &mut Vec<StageSpec>, seen: &mut HashSet<u64>) {
+        // Parents first (their shuffles must materialize before ours).
+        self.parent.stage_deps(out, seen);
+        if !seen.insert(self.shuffle_id) {
+            return;
+        }
+        let parent = self.parent.clone();
+        let partitioner = self.partitioner;
+        let agg = self.agg.clone();
+        let shuffle_id = self.shuffle_id;
+        let num_maps = parent.num_partitions();
+        out.push(StageSpec {
+            shuffle_id,
+            num_tasks: num_maps,
+            run_task: Arc::new(move |map_idx, engine: &Engine| {
+                let data = parent.compute(map_idx, engine)?;
+                // Map-side combine into per-reduce buckets.
+                let mut buckets: Vec<HashMap<K, V>> =
+                    (0..partitioner.partitions).map(|_| HashMap::new()).collect();
+                for (k, v) in data {
+                    let b = &mut buckets[partitioner.partition(&k)];
+                    match b.remove(&k) {
+                        Some(acc) => {
+                            b.insert(k, agg(acc, v));
+                        }
+                        None => {
+                            b.insert(k, v);
+                        }
+                    }
+                }
+                for (reduce_idx, bucket) in buckets.into_iter().enumerate() {
+                    engine.shuffle.put_bucket(
+                        shuffle_id,
+                        map_idx,
+                        reduce_idx,
+                        bucket.into_iter().collect::<Vec<(K, V)>>(),
+                    );
+                }
+                engine.shuffle.map_done(shuffle_id, map_idx, num_maps);
+                Ok(())
+            }),
+        });
+    }
+}

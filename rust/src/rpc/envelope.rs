@@ -1,0 +1,160 @@
+//! Wire envelope for the RPC layer.
+//!
+//! Spark abstracts node communication through RPC "endpoints" addressed by
+//! name and interfaced through `RpcEndpointRef` objects (paper §3.1). Our
+//! envelope carries the destination endpoint name, the sender's listen
+//! address (so the receiving env can cache a return path — the paper's
+//! on-demand endpoint establishment), a request id for ask/reply
+//! correlation, and an opaque body produced by the `ser` codec.
+
+use crate::error::{IgniteError, Result};
+use crate::ser::{put_varint, Decode, Encode, Reader};
+
+/// What kind of traffic this envelope is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnvelopeKind {
+    /// Fire-and-forget message to an endpoint.
+    OneWay,
+    /// Request expecting a reply correlated by `request_id`.
+    Request,
+    /// Successful reply.
+    Reply,
+    /// Reply carrying an error string instead of a payload.
+    ReplyErr,
+}
+
+impl EnvelopeKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            EnvelopeKind::OneWay => 0,
+            EnvelopeKind::Request => 1,
+            EnvelopeKind::Reply => 2,
+            EnvelopeKind::ReplyErr => 3,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self> {
+        Ok(match b {
+            0 => EnvelopeKind::OneWay,
+            1 => EnvelopeKind::Request,
+            2 => EnvelopeKind::Reply,
+            3 => EnvelopeKind::ReplyErr,
+            _ => return Err(IgniteError::Codec(format!("bad envelope kind {b}"))),
+        })
+    }
+}
+
+/// Network address of an `RpcEnv` (its listen address), or a synthetic
+/// `client:` token for envs without a listener.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RpcAddress(pub String);
+
+impl RpcAddress {
+    pub fn is_client(&self) -> bool {
+        self.0.starts_with("client:")
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for RpcAddress {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// The framed unit of RPC traffic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    pub kind: EnvelopeKind,
+    /// Destination endpoint name (`"master"`, `"comm"`, `"blocks"`, ...).
+    pub endpoint: String,
+    /// Sender's listen address for return-path caching.
+    pub from: RpcAddress,
+    /// Correlates Request with Reply/ReplyErr; 0 for OneWay.
+    pub request_id: u64,
+    pub body: Vec<u8>,
+}
+
+impl Envelope {
+    pub fn one_way(endpoint: &str, from: RpcAddress, body: Vec<u8>) -> Self {
+        Envelope { kind: EnvelopeKind::OneWay, endpoint: endpoint.into(), from, request_id: 0, body }
+    }
+}
+
+impl Encode for Envelope {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.push(self.kind.to_u8());
+        self.endpoint.encode(buf);
+        self.from.0.encode(buf);
+        self.request_id.encode(buf);
+        put_varint(buf, self.body.len() as u64);
+        buf.extend_from_slice(&self.body);
+    }
+}
+
+impl Decode for Envelope {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let kind = EnvelopeKind::from_u8(r.u8()?)?;
+        let endpoint = String::decode(r)?;
+        let from = RpcAddress(String::decode(r)?);
+        let request_id = u64::decode(r)?;
+        let n = r.len()?;
+        let body = r.take(n)?.to_vec();
+        Ok(Envelope { kind, endpoint, from, request_id, body })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::{from_bytes, to_bytes};
+
+    #[test]
+    fn envelope_round_trip() {
+        let e = Envelope {
+            kind: EnvelopeKind::Request,
+            endpoint: "comm".into(),
+            from: RpcAddress("127.0.0.1:9999".into()),
+            request_id: 42,
+            body: vec![1, 2, 3],
+        };
+        let back: Envelope = from_bytes(&to_bytes(&e)).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn all_kinds_round_trip() {
+        for kind in [
+            EnvelopeKind::OneWay,
+            EnvelopeKind::Request,
+            EnvelopeKind::Reply,
+            EnvelopeKind::ReplyErr,
+        ] {
+            let e = Envelope {
+                kind,
+                endpoint: "x".into(),
+                from: RpcAddress("client:1".into()),
+                request_id: 7,
+                body: vec![],
+            };
+            let back: Envelope = from_bytes(&to_bytes(&e)).unwrap();
+            assert_eq!(back.kind, kind);
+        }
+    }
+
+    #[test]
+    fn client_address_detection() {
+        assert!(RpcAddress("client:123:4".into()).is_client());
+        assert!(!RpcAddress("10.0.0.1:7077".into()).is_client());
+    }
+
+    #[test]
+    fn bad_kind_rejected() {
+        let mut bytes = to_bytes(&Envelope::one_way("e", RpcAddress("a".into()), vec![]));
+        bytes[0] = 200;
+        assert!(from_bytes::<Envelope>(&bytes).is_err());
+    }
+}

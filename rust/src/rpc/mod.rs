@@ -1,0 +1,735 @@
+//! RPC substrate — the analogue of Spark's `RpcEnv` / `RpcEndpointRef`.
+//!
+//! The paper (§3.1) repurposes Spark's internal RPC endpoints for peer
+//! messaging, so this layer reproduces their behaviour:
+//!
+//! * named **endpoints** registered on an env, each a handler closure;
+//! * **`RpcEndpointRef`** handles that `send` (one-way) or `ask`
+//!   (request/reply, blocking with timeout);
+//! * a **connection cache**: TCP connections to peers are established on
+//!   demand at first send and reused afterwards — "workers maintain a
+//!   collection of RPC endpoints … augmented on an as-needed basis. This
+//!   amortizes the cost of sending to new worker nodes" (§3.1). The cache
+//!   also registers *inbound* connections under the sender's announced
+//!   address, so a single TCP connection serves both directions (which
+//!   additionally preserves per-peer FIFO order — the property the comm
+//!   layer's message matching relies on);
+//! * local destinations dispatch inline without touching a socket, which
+//!   is the fast path for `local[N]` deployments.
+//!
+//! Framing: 4-byte little-endian length prefix + codec-encoded
+//! [`Envelope`]. Reader threads (one per connection) decode frames and
+//! either dispatch to a handler or complete a pending `ask`.
+
+mod envelope;
+
+pub use envelope::{Envelope, EnvelopeKind, RpcAddress};
+
+use crate::error::{IgniteError, Result};
+use crate::metrics;
+use crate::ser::{from_bytes, to_bytes};
+use crate::util::next_id;
+use log::{debug, trace, warn};
+use std::collections::HashMap;
+use std::io::{BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+/// Outcome a handler produces: no reply (one-way) or a reply payload.
+pub type HandlerResult = Result<Option<Vec<u8>>>;
+
+/// Endpoint handler: gets the decoded envelope, returns an optional reply.
+/// Handlers run on connection reader threads (or inline for local sends),
+/// so they must be fast and must never block on RPC to the same peer.
+pub type Handler = Arc<dyn Fn(&Envelope) -> HandlerResult + Send + Sync>;
+
+struct Connection {
+    writer: Mutex<BufWriter<TcpStream>>,
+    peer: RpcAddress,
+}
+
+impl Drop for Connection {
+    fn drop(&mut self) {
+        // Last reference gone (evicted from every cache): close the socket
+        // so the peer's reader thread exits and neither side leaks fds —
+        // crucial for cold-connection churn (E6 bench, fault recovery).
+        if let Ok(w) = self.writer.lock() {
+            let _ = w.get_ref().shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+impl Connection {
+    fn write_frame(&self, bytes: &[u8], frame_max: usize) -> Result<()> {
+        if bytes.len() > frame_max {
+            return Err(IgniteError::Rpc(format!(
+                "frame of {} bytes exceeds max {}",
+                bytes.len(),
+                frame_max
+            )));
+        }
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+        w.write_all(bytes)?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+struct RpcEnvInner {
+    name: String,
+    addr: RpcAddress,
+    endpoints: RwLock<HashMap<String, Handler>>,
+    conns: Mutex<HashMap<RpcAddress, Arc<Connection>>>,
+    pending: Mutex<HashMap<u64, SyncSender<Result<Vec<u8>>>>>,
+    next_request: AtomicU64,
+    frame_max: usize,
+    connect_timeout: Duration,
+    shutdown: AtomicBool,
+    listen_port: Option<u16>,
+    /// Fault-injection hook: return `true` to silently drop an outbound
+    /// envelope (used by `fault` and the E7 bench).
+    drop_filter: RwLock<Option<Arc<dyn Fn(&Envelope) -> bool + Send + Sync>>>,
+}
+
+/// An RPC environment: endpoint registry + transport. Cheap to clone.
+#[derive(Clone)]
+pub struct RpcEnv {
+    inner: Arc<RpcEnvInner>,
+}
+
+impl RpcEnv {
+    /// Client-only env (no listener): can send/ask remote envs and host
+    /// endpoints reachable over connections it initiates.
+    pub fn client(name: &str) -> Self {
+        Self::build(name, None).expect("client env cannot fail")
+    }
+
+    /// Server env bound to `127.0.0.1:port` (0 = ephemeral).
+    pub fn server(name: &str, port: u16) -> Result<Self> {
+        Self::build(name, Some(port))
+    }
+
+    fn build(name: &str, port: Option<u16>) -> Result<Self> {
+        let (listener, addr, listen_port) = match port {
+            Some(p) => {
+                let l = TcpListener::bind(("127.0.0.1", p))?;
+                let actual = l.local_addr()?;
+                (Some(l), RpcAddress(format!("127.0.0.1:{}", actual.port())), Some(actual.port()))
+            }
+            None => {
+                (None, RpcAddress(format!("client:{}:{}", std::process::id(), next_id())), None)
+            }
+        };
+        let inner = Arc::new(RpcEnvInner {
+            name: name.to_string(),
+            addr,
+            endpoints: RwLock::new(HashMap::new()),
+            conns: Mutex::new(HashMap::new()),
+            pending: Mutex::new(HashMap::new()),
+            next_request: AtomicU64::new(1),
+            frame_max: 64 << 20,
+            connect_timeout: Duration::from_secs(2),
+            shutdown: AtomicBool::new(false),
+            listen_port,
+            drop_filter: RwLock::new(None),
+        });
+        if let Some(listener) = listener {
+            let inner2 = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name(format!("rpc-accept-{name}"))
+                .spawn(move || accept_loop(listener, inner2))
+                .expect("spawn accept loop");
+        }
+        Ok(RpcEnv { inner })
+    }
+
+    /// This env's address (listen address, or a `client:` token).
+    pub fn address(&self) -> RpcAddress {
+        self.inner.addr.clone()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Register an endpoint handler under `name`, replacing any previous.
+    pub fn register(&self, name: &str, handler: Handler) {
+        self.inner.endpoints.write().unwrap().insert(name.to_string(), handler);
+    }
+
+    /// Remove an endpoint.
+    pub fn unregister(&self, name: &str) {
+        self.inner.endpoints.write().unwrap().remove(name);
+    }
+
+    /// A handle to endpoint `name` at `addr` (possibly this env).
+    pub fn endpoint_ref(&self, addr: &RpcAddress, name: &str) -> RpcEndpointRef {
+        RpcEndpointRef { env: self.clone(), addr: addr.clone(), name: name.to_string() }
+    }
+
+    /// Install (or clear) the fault-injection drop filter.
+    pub fn set_drop_filter(
+        &self,
+        filter: Option<Arc<dyn Fn(&Envelope) -> bool + Send + Sync>>,
+    ) {
+        *self.inner.drop_filter.write().unwrap() = filter;
+    }
+
+    /// Number of live cached connections (E6 endpoint-cache bench).
+    pub fn cached_connections(&self) -> usize {
+        self.inner.conns.lock().unwrap().len()
+    }
+
+    /// Drop all cached connections (forces re-establishment — cold path).
+    pub fn drop_connections(&self) {
+        self.inner.conns.lock().unwrap().clear();
+    }
+
+    /// One-way send of `body` to endpoint `name` at `addr`.
+    pub fn send(&self, addr: &RpcAddress, name: &str, body: Vec<u8>) -> Result<()> {
+        let env = Envelope {
+            kind: EnvelopeKind::OneWay,
+            endpoint: name.to_string(),
+            from: self.address(),
+            request_id: 0,
+            body,
+        };
+        self.dispatch_outbound(addr, env)
+    }
+
+    /// Request/reply with timeout.
+    pub fn ask(
+        &self,
+        addr: &RpcAddress,
+        name: &str,
+        body: Vec<u8>,
+        timeout: Duration,
+    ) -> Result<Vec<u8>> {
+        let request_id = self.inner.next_request.fetch_add(1, Ordering::Relaxed);
+        let env = Envelope {
+            kind: EnvelopeKind::Request,
+            endpoint: name.to_string(),
+            from: self.address(),
+            request_id,
+            body,
+        };
+
+        if addr == &self.inner.addr {
+            // Local fast path: invoke handler inline.
+            let reply = self.invoke_local(&env)?;
+            return reply.ok_or_else(|| {
+                IgniteError::Rpc(format!("endpoint {name} returned no reply to ask"))
+            });
+        }
+
+        let (tx, rx) = sync_channel(1);
+        self.inner.pending.lock().unwrap().insert(request_id, tx);
+        if let Err(e) = self.dispatch_outbound(addr, env) {
+            self.inner.pending.lock().unwrap().remove(&request_id);
+            return Err(e);
+        }
+        match rx.recv_timeout(timeout) {
+            Ok(result) => result,
+            Err(_) => {
+                self.inner.pending.lock().unwrap().remove(&request_id);
+                Err(IgniteError::Timeout(format!("ask {name}@{addr} after {timeout:?}")))
+            }
+        }
+    }
+
+    fn invoke_local(&self, env: &Envelope) -> Result<Option<Vec<u8>>> {
+        let handler = {
+            let eps = self.inner.endpoints.read().unwrap();
+            eps.get(&env.endpoint).cloned()
+        };
+        match handler {
+            Some(h) => h(env),
+            None => Err(IgniteError::Rpc(format!(
+                "no endpoint {} at {}",
+                env.endpoint, self.inner.addr
+            ))),
+        }
+    }
+
+    fn dispatch_outbound(&self, addr: &RpcAddress, env: Envelope) -> Result<()> {
+        if let Some(filter) = self.inner.drop_filter.read().unwrap().as_ref() {
+            if filter(&env) {
+                metrics::global().counter("rpc.dropped").inc();
+                debug!(target: "rpc", "drop filter ate envelope to {}", env.endpoint);
+                return Ok(());
+            }
+        }
+        if addr == &self.inner.addr {
+            // Local delivery; replies are impossible for OneWay, and `ask`
+            // handles the local case before reaching here.
+            self.invoke_local(&env)?;
+            return Ok(());
+        }
+        let conn = self.connection_to(addr)?;
+        let bytes = to_bytes(&env);
+        metrics::global().counter("rpc.bytes.out").add(bytes.len() as u64 + 4);
+        metrics::global().counter("rpc.frames.out").inc();
+        match conn.write_frame(&bytes, self.inner.frame_max) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                // Connection went bad: evict it so the next send redials.
+                self.inner.conns.lock().unwrap().remove(addr);
+                Err(e)
+            }
+        }
+    }
+
+    /// Get or establish the cached connection to `addr` (paper's
+    /// amortized on-demand endpoint establishment).
+    fn connection_to(&self, addr: &RpcAddress) -> Result<Arc<Connection>> {
+        if addr.is_client() {
+            // We can only reach a client env over a connection it opened.
+            let conns = self.inner.conns.lock().unwrap();
+            return conns.get(addr).cloned().ok_or_else(|| {
+                IgniteError::Rpc(format!("no inbound connection from client env {addr}"))
+            });
+        }
+        if let Some(c) = self.inner.conns.lock().unwrap().get(addr) {
+            return Ok(c.clone());
+        }
+        // Establish outside the lock; racing duplicates are resolved by
+        // keeping the first insertion.
+        let sock_addr: std::net::SocketAddr = addr
+            .0
+            .parse()
+            .map_err(|e| IgniteError::Rpc(format!("bad address {addr}: {e}")))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, self.inner.connect_timeout)
+            .map_err(|e| IgniteError::Rpc(format!("connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        metrics::global().counter("rpc.conn.established").inc();
+        let conn = Arc::new(Connection {
+            writer: Mutex::new(BufWriter::new(stream.try_clone()?)),
+            peer: addr.clone(),
+        });
+        let winner = {
+            let mut conns = self.inner.conns.lock().unwrap();
+            conns.entry(addr.clone()).or_insert_with(|| conn.clone()).clone()
+        };
+        if Arc::ptr_eq(&winner, &conn) {
+            // We won the race: start the reader for our stream.
+            let inner = Arc::clone(&self.inner);
+            let peer = addr.clone();
+            std::thread::Builder::new()
+                .name(format!("rpc-read-{}", addr.0))
+                .spawn(move || reader_loop(stream, inner, peer))
+                .expect("spawn reader");
+        }
+        Ok(winner)
+    }
+
+    /// Stop accepting and drop all connections. Idempotent.
+    pub fn shutdown(&self) {
+        if self.inner.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept loop by dialing ourselves.
+        if let Some(port) = self.inner.listen_port {
+            let _ = TcpStream::connect(("127.0.0.1", port));
+        }
+        self.inner.conns.lock().unwrap().clear();
+        // Fail any pending asks.
+        let mut pending = self.inner.pending.lock().unwrap();
+        for (_, tx) in pending.drain() {
+            let _ = tx.try_send(Err(IgniteError::Rpc("env shut down".into())));
+        }
+    }
+}
+
+impl Drop for RpcEnvInner {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(port) = self.listen_port {
+            let _ = TcpStream::connect(("127.0.0.1", port));
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<RpcEnvInner>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                stream.set_nodelay(true).ok();
+                let inner2 = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name("rpc-read-inbound".into())
+                    .spawn(move || {
+                        // Peer address is learned from the first envelope.
+                        let peer = RpcAddress(String::new());
+                        reader_loop(stream, inner2, peer);
+                    })
+                    .expect("spawn inbound reader");
+            }
+            Err(e) => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                warn!(target: "rpc", "accept error on {}: {e}", inner.addr);
+            }
+        }
+    }
+}
+
+/// Read frames until EOF/error, dispatching each envelope.
+fn reader_loop(stream: TcpStream, inner: Arc<RpcEnvInner>, mut peer: RpcAddress) {
+    let mut reader = std::io::BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    // Writer for replies (and for return-path caching of inbound conns).
+    let conn = Arc::new(Connection {
+        writer: Mutex::new(BufWriter::new(stream)),
+        peer: peer.clone(),
+    });
+    let mut registered_return_path = !peer.0.is_empty();
+
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut len_buf = [0u8; 4];
+        if reader.read_exact(&mut len_buf).is_err() {
+            break;
+        }
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len > inner.frame_max {
+            warn!(target: "rpc", "oversized frame {len} from {peer}; closing");
+            break;
+        }
+        let mut body = vec![0u8; len];
+        if reader.read_exact(&mut body).is_err() {
+            break;
+        }
+        metrics::global().counter("rpc.bytes.in").add(len as u64 + 4);
+        metrics::global().counter("rpc.frames.in").inc();
+        let env: Envelope = match from_bytes(&body) {
+            Ok(e) => e,
+            Err(e) => {
+                warn!(target: "rpc", "bad frame from {peer}: {e}");
+                break;
+            }
+        };
+        if !registered_return_path {
+            // First envelope announces the peer's address: cache this
+            // connection as the return path (bidirectional reuse).
+            peer = env.from.clone();
+            let mut conns = inner.conns.lock().unwrap();
+            conns.entry(peer.clone()).or_insert_with(|| conn.clone());
+            registered_return_path = true;
+        }
+        trace!(target: "rpc", "{} <- {peer}: {:?} {} ({} B)", inner.addr, env.kind, env.endpoint, env.body.len());
+        match env.kind {
+            EnvelopeKind::OneWay => {
+                dispatch_to_handler(&inner, &env, None);
+            }
+            EnvelopeKind::Request => {
+                dispatch_to_handler(&inner, &env, Some(&conn));
+            }
+            EnvelopeKind::Reply | EnvelopeKind::ReplyErr => {
+                let tx = inner.pending.lock().unwrap().remove(&env.request_id);
+                if let Some(tx) = tx {
+                    let result = if env.kind == EnvelopeKind::Reply {
+                        Ok(env.body)
+                    } else {
+                        Err(IgniteError::Rpc(
+                            String::from_utf8_lossy(&env.body).into_owned(),
+                        ))
+                    };
+                    let _ = tx.try_send(result);
+                }
+            }
+        }
+    }
+    // Evict this connection so future sends re-establish.
+    if !peer.0.is_empty() {
+        let mut conns = inner.conns.lock().unwrap();
+        if let Some(existing) = conns.get(&peer) {
+            if Arc::ptr_eq(existing, &conn) {
+                conns.remove(&peer);
+            }
+        }
+    }
+    debug!(target: "rpc", "{}: connection from {peer} closed", inner.addr);
+}
+
+fn dispatch_to_handler(inner: &Arc<RpcEnvInner>, env: &Envelope, reply_on: Option<&Arc<Connection>>) {
+    let handler = {
+        let eps = inner.endpoints.read().unwrap();
+        eps.get(&env.endpoint).cloned()
+    };
+    let outcome: HandlerResult = match handler {
+        Some(h) => h(env),
+        None => Err(IgniteError::Rpc(format!("no endpoint {} at {}", env.endpoint, inner.addr))),
+    };
+    if env.kind != EnvelopeKind::Request {
+        if let Err(e) = outcome {
+            warn!(target: "rpc", "one-way handler {} failed: {e}", env.endpoint);
+        }
+        return;
+    }
+    let conn = match reply_on {
+        Some(c) => c,
+        None => return,
+    };
+    let (kind, body) = match outcome {
+        Ok(Some(reply)) => (EnvelopeKind::Reply, reply),
+        Ok(None) => (
+            EnvelopeKind::ReplyErr,
+            format!("endpoint {} returned no reply to ask", env.endpoint).into_bytes(),
+        ),
+        Err(e) => (EnvelopeKind::ReplyErr, e.to_string().into_bytes()),
+    };
+    let reply_env = Envelope {
+        kind,
+        endpoint: env.endpoint.clone(),
+        from: inner.addr.clone(),
+        request_id: env.request_id,
+        body,
+    };
+    if let Err(e) = conn.write_frame(&to_bytes(&reply_env), inner.frame_max) {
+        warn!(target: "rpc", "reply to {} failed: {e}", conn.peer);
+    }
+}
+
+/// Handle to a named endpoint at some env (paper's `RpcEndpointRef`).
+#[derive(Clone)]
+pub struct RpcEndpointRef {
+    env: RpcEnv,
+    addr: RpcAddress,
+    name: String,
+}
+
+impl RpcEndpointRef {
+    pub fn address(&self) -> &RpcAddress {
+        &self.addr
+    }
+
+    pub fn endpoint(&self) -> &str {
+        &self.name
+    }
+
+    /// Fire-and-forget.
+    pub fn send(&self, body: Vec<u8>) -> Result<()> {
+        self.env.send(&self.addr, &self.name, body)
+    }
+
+    /// Blocking request/reply.
+    pub fn ask(&self, body: Vec<u8>, timeout: Duration) -> Result<Vec<u8>> {
+        self.env.ask(&self.addr, &self.name, body, timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_handler() -> Handler {
+        Arc::new(|env: &Envelope| Ok(Some(env.body.clone())))
+    }
+
+    #[test]
+    fn local_send_and_ask() {
+        let env = RpcEnv::client("t");
+        let hits = Arc::new(AtomicU64::new(0));
+        let hits2 = hits.clone();
+        env.register(
+            "count",
+            Arc::new(move |_: &Envelope| {
+                hits2.fetch_add(1, Ordering::SeqCst);
+                Ok(None)
+            }),
+        );
+        env.register("echo", echo_handler());
+        let addr = env.address();
+        env.send(&addr, "count", vec![]).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        let reply = env.ask(&addr, "echo", vec![9, 9], Duration::from_secs(1)).unwrap();
+        assert_eq!(reply, vec![9, 9]);
+    }
+
+    #[test]
+    fn tcp_ask_round_trip() {
+        let server = RpcEnv::server("server", 0).unwrap();
+        server.register("echo", echo_handler());
+        let client = RpcEnv::client("client");
+        let reply = client
+            .ask(&server.address(), "echo", b"hello".to_vec(), Duration::from_secs(2))
+            .unwrap();
+        assert_eq!(reply, b"hello");
+        server.shutdown();
+    }
+
+    #[test]
+    fn tcp_one_way_reaches_handler() {
+        let server = RpcEnv::server("server", 0).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        server.register(
+            "sink",
+            Arc::new(move |env: &Envelope| {
+                tx.send(env.body.clone()).unwrap();
+                Ok(None)
+            }),
+        );
+        let client = RpcEnv::client("client");
+        client.send(&server.address(), "sink", vec![1, 2, 3]).unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(got, vec![1, 2, 3]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_endpoint_is_an_error_for_ask() {
+        let server = RpcEnv::server("server", 0).unwrap();
+        let client = RpcEnv::client("client");
+        let err = client
+            .ask(&server.address(), "ghost", vec![], Duration::from_secs(2))
+            .unwrap_err();
+        assert!(err.to_string().contains("no endpoint ghost"), "got: {err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn ask_times_out_when_handler_stalls() {
+        let server = RpcEnv::server("server", 0).unwrap();
+        server.register(
+            "slow",
+            Arc::new(|_: &Envelope| {
+                std::thread::sleep(Duration::from_millis(500));
+                Ok(Some(vec![]))
+            }),
+        );
+        let client = RpcEnv::client("client");
+        let err = client
+            .ask(&server.address(), "slow", vec![], Duration::from_millis(50))
+            .unwrap_err();
+        assert!(matches!(err, IgniteError::Timeout(_)), "got: {err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn connections_are_cached_and_reused() {
+        let server = RpcEnv::server("server", 0).unwrap();
+        server.register("echo", echo_handler());
+        let client = RpcEnv::client("client");
+        for _ in 0..10 {
+            client
+                .ask(&server.address(), "echo", vec![0], Duration::from_secs(2))
+                .unwrap();
+        }
+        assert_eq!(client.cached_connections(), 1, "one cached connection to the server");
+        server.shutdown();
+    }
+
+    #[test]
+    fn server_can_reach_client_over_inbound_connection() {
+        // The return-path caching: server sends one-way to a client env
+        // that has no listener, via the connection the client opened.
+        let server = RpcEnv::server("server", 0).unwrap();
+        server.register("echo", echo_handler());
+        let client = RpcEnv::client("client");
+        let (tx, rx) = std::sync::mpsc::channel();
+        client.register(
+            "notify",
+            Arc::new(move |env: &Envelope| {
+                tx.send(env.body.clone()).unwrap();
+                Ok(None)
+            }),
+        );
+        // Prime the connection (also announces the client's address).
+        client.ask(&server.address(), "echo", vec![], Duration::from_secs(2)).unwrap();
+        server.send(&client.address(), "notify", vec![7]).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(2)).unwrap(), vec![7]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn drop_filter_suppresses_sends() {
+        let server = RpcEnv::server("server", 0).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        server.register(
+            "sink",
+            Arc::new(move |env: &Envelope| {
+                tx.send(env.body.clone()).unwrap();
+                Ok(None)
+            }),
+        );
+        let client = RpcEnv::client("client");
+        client.set_drop_filter(Some(Arc::new(|_| true)));
+        client.send(&server.address(), "sink", vec![1]).unwrap();
+        assert!(rx.recv_timeout(Duration::from_millis(200)).is_err(), "message was dropped");
+        client.set_drop_filter(None);
+        client.send(&server.address(), "sink", vec![2]).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(2)).unwrap(), vec![2]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_asks_are_correlated_correctly() {
+        let server = RpcEnv::server("server", 0).unwrap();
+        server.register("echo", echo_handler());
+        let client = RpcEnv::client("client");
+        let addr = server.address();
+        let mut handles = Vec::new();
+        for i in 0..16u8 {
+            let client = client.clone();
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let reply =
+                    client.ask(&addr, "echo", vec![i], Duration::from_secs(3)).unwrap();
+                assert_eq!(reply, vec![i]);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn handler_error_propagates_to_asker() {
+        let server = RpcEnv::server("server", 0).unwrap();
+        server.register("fail", Arc::new(|_: &Envelope| Err(IgniteError::Invalid("nope".into()))));
+        let client = RpcEnv::client("client");
+        let err =
+            client.ask(&server.address(), "fail", vec![], Duration::from_secs(2)).unwrap_err();
+        assert!(err.to_string().contains("nope"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn two_servers_bidirectional() {
+        let a = RpcEnv::server("a", 0).unwrap();
+        let b = RpcEnv::server("b", 0).unwrap();
+        a.register("echo", echo_handler());
+        b.register("echo", echo_handler());
+        let ra = b.ask(&a.address(), "echo", vec![1], Duration::from_secs(2)).unwrap();
+        let rb = a.ask(&b.address(), "echo", vec![2], Duration::from_secs(2)).unwrap();
+        assert_eq!(ra, vec![1]);
+        assert_eq!(rb, vec![2]);
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn endpoint_ref_api() {
+        let server = RpcEnv::server("server", 0).unwrap();
+        server.register("echo", echo_handler());
+        let client = RpcEnv::client("client");
+        let r = client.endpoint_ref(&server.address(), "echo");
+        assert_eq!(r.endpoint(), "echo");
+        assert_eq!(r.ask(vec![5], Duration::from_secs(2)).unwrap(), vec![5]);
+        r.send(vec![6]).unwrap();
+        server.shutdown();
+    }
+}

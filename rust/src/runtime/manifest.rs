@@ -1,0 +1,350 @@
+//! Artifact manifest parsing.
+//!
+//! `aot.py` writes `manifest.json`; the vendor set has no JSON crate, so
+//! this is a minimal recursive-descent JSON parser covering the full JSON
+//! grammar (we only *need* objects/arrays/strings/numbers, but parsing
+//! the whole grammar is barely more code and far less surprising).
+
+use crate::error::{IgniteError, Result};
+use std::collections::BTreeMap;
+
+/// Parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(n) if *n >= 0.0 => Some(*n as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> IgniteError {
+        IgniteError::Codec(format!("json at byte {}: {msg}", self.pos))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.bump() == Some(b) {
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected {word}")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| self.err("unexpected end"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => Err(self.err(&format!("unexpected '{}'", c as char))),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(map)),
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(items)),
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump().ok_or_else(|| self.err("unterminated string"))? {
+                b'"' => return Ok(out),
+                b'\\' => match self.bump().ok_or_else(|| self.err("bad escape"))? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump().ok_or_else(|| self.err("bad \\u"))?;
+                            code = code * 16
+                                + (c as char).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
+                        }
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    c => return Err(self.err(&format!("bad escape \\{}", c as char))),
+                },
+                c if c < 0x20 => return Err(self.err("control char in string")),
+                c => {
+                    // Reassemble UTF-8 multibyte sequences.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let extra = if c >= 0xF0 {
+                            3
+                        } else if c >= 0xE0 {
+                            2
+                        } else {
+                            1
+                        };
+                        self.pos += extra;
+                        let slice = self
+                            .bytes
+                            .get(start..self.pos)
+                            .ok_or_else(|| self.err("truncated utf8"))?;
+                        out.push_str(
+                            std::str::from_utf8(slice)
+                                .map_err(|_| self.err("bad utf8"))?,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        s.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
+    }
+}
+
+/// Parse a complete JSON document.
+pub fn parse_json(text: &str) -> Result<Json> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing content"));
+    }
+    Ok(v)
+}
+
+/// One artifact entry from `manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    /// Input shapes (dims per input; scalar = empty).
+    pub inputs: Vec<Vec<usize>>,
+    pub n_outputs: usize,
+}
+
+/// Parse the manifest into entries keyed by name.
+pub fn parse_manifest(text: &str) -> Result<BTreeMap<String, EntryMeta>> {
+    let json = parse_json(text)?;
+    let obj = json
+        .as_obj()
+        .ok_or_else(|| IgniteError::Runtime("manifest root must be an object".into()))?;
+    let mut out = BTreeMap::new();
+    for (name, entry) in obj {
+        let file = entry
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| IgniteError::Runtime(format!("{name}: missing file")))?
+            .to_string();
+        let inputs = entry
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| IgniteError::Runtime(format!("{name}: missing inputs")))?
+            .iter()
+            .map(|inp| {
+                inp.get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                    .ok_or_else(|| IgniteError::Runtime(format!("{name}: bad input shape")))
+            })
+            .collect::<Result<Vec<Vec<usize>>>>()?;
+        let n_outputs = entry
+            .get("n_outputs")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| IgniteError::Runtime(format!("{name}: missing n_outputs")))?;
+        out.insert(
+            name.clone(),
+            EntryMeta { name: name.clone(), file, inputs, n_outputs },
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse_json("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse_json("null").unwrap(), Json::Null);
+        assert_eq!(parse_json("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(parse_json("\"hi\\n\"").unwrap(), Json::Str("hi\n".into()));
+    }
+
+    #[test]
+    fn parses_nested_structures() {
+        let v = parse_json(r#"{"a": [1, 2, {"b": "c"}], "d": {}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[2].get("b").unwrap().as_str(), Some("c"));
+        assert!(v.get("d").unwrap().as_obj().unwrap().is_empty());
+    }
+
+    #[test]
+    fn unicode_escapes_and_utf8() {
+        assert_eq!(parse_json(r#""A""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(parse_json("\"héllo🎇\"").unwrap(), Json::Str("héllo🎇".into()));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_json("{").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("12 34").is_err());
+        assert!(parse_json(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_shape() {
+        let text = r#"{
+          "matvec_f32_64x64": {
+            "file": "matvec_f32_64x64.hlo.txt",
+            "inputs": [{"shape": [64, 64], "dtype": "float32"},
+                       {"shape": [64], "dtype": "float32"}],
+            "n_outputs": 1
+          },
+          "power_step_f32_1024": {
+            "file": "power_step_f32_1024.hlo.txt",
+            "inputs": [{"shape": [1024, 1024], "dtype": "float32"},
+                       {"shape": [1024], "dtype": "float32"}],
+            "n_outputs": 2
+          }
+        }"#;
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        let mv = &m["matvec_f32_64x64"];
+        assert_eq!(mv.inputs, vec![vec![64, 64], vec![64]]);
+        assert_eq!(mv.n_outputs, 1);
+        assert_eq!(m["power_step_f32_1024"].n_outputs, 2);
+    }
+
+    #[test]
+    fn manifest_missing_fields_error() {
+        assert!(parse_manifest(r#"{"x": {"file": "f"}}"#).is_err());
+        assert!(parse_manifest(r#"[1]"#).is_err());
+    }
+}

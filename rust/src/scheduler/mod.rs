@@ -1,0 +1,448 @@
+//! DAG + task scheduling — the engine half of Spark's execution model
+//! (paper §2.2): the driver builds a DAG of the RDD's execution, cuts it
+//! into **stages** at shuffle boundaries, and runs each stage as a set of
+//! **tasks** (one per partition) on a pool of worker slots, with retries,
+//! straggler speculation ("automatically recomputing results on other
+//! nodes when results take longer than expected") and lineage-based
+//! recomputation of lost shuffle outputs.
+
+mod pool;
+
+pub use pool::TaskPool;
+
+use crate::config::IgniteConf;
+use crate::error::{IgniteError, Result};
+use crate::fault::{FaultInjector, TaskId};
+use crate::metrics;
+use crate::shuffle::ShuffleManager;
+use crate::storage::BlockManager;
+use log::{debug, info};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One shuffle-producing stage extracted from RDD lineage.
+#[derive(Clone)]
+pub struct StageSpec {
+    /// The shuffle this stage materializes.
+    pub shuffle_id: u64,
+    /// One task per parent partition.
+    pub num_tasks: usize,
+    /// Runs map task `i`: compute parent partition `i`, bucket it, and
+    /// register buckets with the shuffle manager.
+    pub run_task: Arc<dyn Fn(usize, &Engine) -> Result<()> + Send + Sync>,
+}
+
+/// The shared execution engine: slots, shuffle state, block store, fault
+/// injection and config. One per `IgniteContext`.
+pub struct Engine {
+    pub pool: TaskPool,
+    pub shuffle: ShuffleManager,
+    pub blocks: BlockManager,
+    pub fault: FaultInjector,
+    pub conf: IgniteConf,
+    retries: usize,
+    speculation: bool,
+    spec_multiplier: f64,
+    next_stage: AtomicUsize,
+}
+
+impl Engine {
+    pub fn new(conf: IgniteConf) -> Result<Arc<Self>> {
+        let slots = conf.get_usize("ignite.worker.slots")?.max(1);
+        let retries = conf.get_usize("ignite.task.retries")?;
+        let speculation = conf.get_bool("ignite.task.speculation")?;
+        let spec_multiplier = conf.get_f64("ignite.task.speculation.multiplier")?;
+        let fault = match conf.get_u64("ignite.fault.inject.seed")? {
+            0 => FaultInjector::none(),
+            seed => FaultInjector::chaos(seed, 0.05),
+        };
+        Ok(Arc::new(Engine {
+            pool: TaskPool::new(slots),
+            shuffle: ShuffleManager::new(),
+            blocks: BlockManager::new(
+                conf.get_usize("ignite.storage.memory.max")?,
+                conf.get_str("ignite.storage.spill.dir")?,
+            )?,
+            fault,
+            conf,
+            retries,
+            speculation,
+            spec_multiplier,
+            next_stage: AtomicUsize::new(1),
+        }))
+    }
+
+    fn next_stage_id(&self) -> u64 {
+        self.next_stage.fetch_add(1, Ordering::Relaxed) as u64
+    }
+
+    /// Run the map stages in `stages` (lineage order: parents first),
+    /// skipping stages whose shuffle output is already materialized —
+    /// Spark's "stages already computed are skipped" optimization, and
+    /// the hook lineage recomputation uses after a fault wiped outputs.
+    pub fn run_stages(self: &Arc<Self>, stages: &[StageSpec]) -> Result<()> {
+        for stage in stages {
+            if self.shuffle.is_complete(stage.shuffle_id) {
+                debug!(target: "scheduler", "stage for shuffle {} already complete", stage.shuffle_id);
+                continue;
+            }
+            let stage_id = self.next_stage_id();
+            info!(target: "scheduler", "running shuffle stage {} ({} tasks)", stage.shuffle_id, stage.num_tasks);
+            let run = stage.run_task.clone();
+            let engine = Arc::clone(self);
+            self.run_task_set(stage_id, stage.num_tasks, move |part| run(part, &engine))?;
+        }
+        Ok(())
+    }
+
+    /// Run a full job: materialize ancestor shuffle stages, then one
+    /// result task per final partition, applying `action` to each computed
+    /// partition and returning results in partition order.
+    pub fn run_job<T, R, C, A>(
+        self: &Arc<Self>,
+        stages: Vec<StageSpec>,
+        num_partitions: usize,
+        compute: C,
+        action: A,
+    ) -> Result<Vec<R>>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        C: Fn(usize, &Engine) -> Result<Vec<T>> + Send + Sync + 'static,
+        A: Fn(usize, Vec<T>) -> R + Send + Sync + 'static,
+    {
+        metrics::global().counter("scheduler.jobs").inc();
+        self.run_stages(&stages)?;
+        let stage_id = self.next_stage_id();
+        let slots: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..num_partitions).map(|_| None).collect()));
+        let compute = Arc::new(compute);
+        let action = Arc::new(action);
+        let slots2 = slots.clone();
+        let engine = Arc::clone(self);
+        self.run_task_set(stage_id, num_partitions, move |part| {
+            let data = compute(part, &engine)?;
+            let r = action(part, data);
+            // Speculation-safe: first finisher wins.
+            let mut s = slots2.lock().unwrap();
+            if s[part].is_none() {
+                s[part] = Some(r);
+            }
+            Ok(())
+        })?;
+        let mut s = slots.lock().unwrap();
+        Ok(s.iter_mut()
+            .map(|slot| slot.take().expect("task set completed, slot must be filled"))
+            .collect())
+    }
+
+    /// Run `num_tasks` tasks through the pool with retry + speculation.
+    /// Blocks until all succeed or one exhausts its retries.
+    pub fn run_task_set<F>(self: &Arc<Self>, stage_id: u64, num_tasks: usize, task: F) -> Result<()>
+    where
+        F: Fn(usize) -> Result<()> + Send + Sync + 'static,
+    {
+        if num_tasks == 0 {
+            return Ok(());
+        }
+        struct SetState {
+            done: Vec<AtomicBool>,
+            started: Mutex<Vec<Option<Instant>>>,
+            durations: Mutex<Vec<f64>>,
+            remaining: AtomicUsize,
+            error: Mutex<Option<IgniteError>>,
+            cancelled: AtomicBool,
+            wake: Condvar,
+            wake_lock: Mutex<()>,
+        }
+        let state = Arc::new(SetState {
+            done: (0..num_tasks).map(|_| AtomicBool::new(false)).collect(),
+            started: Mutex::new(vec![None; num_tasks]),
+            durations: Mutex::new(Vec::new()),
+            remaining: AtomicUsize::new(num_tasks),
+            error: Mutex::new(None),
+            cancelled: AtomicBool::new(false),
+            wake: Condvar::new(),
+            wake_lock: Mutex::new(()),
+        });
+        let task = Arc::new(task);
+        let retries = self.retries;
+
+        // submit(part, attempt) — defined as a recursive-capable closure.
+        fn submit<F>(
+            engine: &Arc<Engine>,
+            state: &Arc<SetStateDyn>,
+            task: &Arc<F>,
+            stage_id: u64,
+            part: usize,
+            attempt: usize,
+            retries: usize,
+        ) where
+            F: Fn(usize) -> Result<()> + Send + Sync + 'static,
+        {
+            let engine2 = Arc::clone(engine);
+            let state2 = Arc::clone(state);
+            let task2 = Arc::clone(task);
+            engine.pool.submit(Box::new(move || {
+                if state2.cancelled.load(Ordering::SeqCst)
+                    || state2.done[part].load(Ordering::SeqCst)
+                {
+                    return;
+                }
+                state2.started.lock().unwrap()[part] = Some(Instant::now());
+                metrics::global().counter("scheduler.tasks.launched").inc();
+                let t0 = Instant::now();
+                let outcome = engine2
+                    .fault
+                    .before_task(TaskId { stage: stage_id, partition: part, attempt })
+                    .and_then(|()| task2(part));
+                match outcome {
+                    Ok(()) => {
+                        let dt = t0.elapsed();
+                        metrics::global().histogram("scheduler.task.duration").record(dt);
+                        if !state2.done[part].swap(true, Ordering::SeqCst) {
+                            state2.durations.lock().unwrap().push(dt.as_secs_f64());
+                            state2.remaining.fetch_sub(1, Ordering::SeqCst);
+                            let _g = state2.wake_lock.lock().unwrap();
+                            state2.wake.notify_all();
+                        }
+                    }
+                    Err(e) => {
+                        if state2.done[part].load(Ordering::SeqCst) {
+                            return; // a speculative copy already finished
+                        }
+                        metrics::global().counter("scheduler.tasks.failed").inc();
+                        if attempt + 1 < retries {
+                            metrics::global().counter("scheduler.tasks.retried").inc();
+                            debug!(target: "scheduler", "retrying stage {stage_id} partition {part} (attempt {}): {e}", attempt + 1);
+                            submit(&engine2, &state2, &task2, stage_id, part, attempt + 1, retries);
+                        } else {
+                            let mut err = state2.error.lock().unwrap();
+                            if err.is_none() {
+                                *err = Some(IgniteError::Task(format!(
+                                    "stage {stage_id} partition {part} failed after {retries} attempts: {e}"
+                                )));
+                            }
+                            state2.cancelled.store(true, Ordering::SeqCst);
+                            let _g = state2.wake_lock.lock().unwrap();
+                            state2.wake.notify_all();
+                        }
+                    }
+                }
+            }));
+        }
+        // The recursive fn above can't be generic over the anonymous
+        // SetState type, so alias it:
+        type SetStateDyn = SetState;
+
+        for part in 0..num_tasks {
+            submit(self, &state, &task, stage_id, part, 0, retries.max(1));
+        }
+
+        // Wait; opportunistically launch speculative copies of stragglers.
+        let mut speculated: Vec<bool> = vec![false; num_tasks];
+        loop {
+            if state.remaining.load(Ordering::SeqCst) == 0 {
+                return Ok(());
+            }
+            if let Some(e) = state.error.lock().unwrap().clone() {
+                return Err(e);
+            }
+            {
+                let g = state.wake_lock.lock().unwrap();
+                let _ = state.wake.wait_timeout(g, Duration::from_millis(10)).unwrap();
+            }
+            if self.speculation {
+                let durations = state.durations.lock().unwrap();
+                if durations.len() >= num_tasks / 2 && !durations.is_empty() {
+                    let mut sorted = durations.clone();
+                    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    let median = sorted[sorted.len() / 2];
+                    drop(durations);
+                    let threshold = (median * self.spec_multiplier).max(0.005);
+                    let started = state.started.lock().unwrap();
+                    let stragglers: Vec<usize> = (0..num_tasks)
+                        .filter(|&p| {
+                            !speculated[p]
+                                && !state.done[p].load(Ordering::SeqCst)
+                                && started[p]
+                                    .map(|t| t.elapsed().as_secs_f64() > threshold)
+                                    .unwrap_or(false)
+                        })
+                        .collect();
+                    drop(started);
+                    for p in stragglers {
+                        speculated[p] = true;
+                        metrics::global().counter("scheduler.tasks.speculated").inc();
+                        info!(target: "scheduler", "speculative copy of stage {stage_id} partition {p}");
+                        // Speculative attempts start a fresh retry chain at
+                        // a high attempt number so scripted faults keyed on
+                        // attempt 0 don't re-fire.
+                        submit(self, &state, &task, stage_id, p, 1000, 1001 + retries);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_engine() -> Arc<Engine> {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.worker.slots", "4");
+        Engine::new(conf).unwrap()
+    }
+
+    #[test]
+    fn run_task_set_executes_every_task() {
+        let engine = test_engine();
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = counter.clone();
+        engine
+            .run_task_set(1, 20, move |_part| {
+                c2.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn failed_task_is_retried_and_succeeds() {
+        let engine = test_engine();
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let a2 = attempts.clone();
+        engine
+            .run_task_set(2, 1, move |_part| {
+                if a2.fetch_add(1, Ordering::SeqCst) == 0 {
+                    Err(IgniteError::Task("flaky".into()))
+                } else {
+                    Ok(())
+                }
+            })
+            .unwrap();
+        assert_eq!(attempts.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn persistent_failure_exhausts_retries() {
+        let engine = test_engine();
+        let err = engine
+            .run_task_set(3, 2, |part| {
+                if part == 1 {
+                    Err(IgniteError::Task("always broken".into()))
+                } else {
+                    Ok(())
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("failed after"), "got: {err}");
+    }
+
+    #[test]
+    fn injected_fault_consumed_by_retry() {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.worker.slots", "2");
+        let engine = Engine::new(conf).unwrap();
+        engine.fault.fail_task(7, 0, 0);
+        let runs = Arc::new(AtomicUsize::new(0));
+        let r2 = runs.clone();
+        engine
+            .run_task_set(7, 1, move |_| {
+                r2.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+        // Attempt 0 was killed by the injector before the body ran;
+        // attempt 1 ran the body once.
+        assert_eq!(runs.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn speculation_rescues_a_straggler() {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.worker.slots", "8");
+        conf.set("ignite.task.speculation", "true");
+        conf.set("ignite.task.speculation.multiplier", "3.0");
+        let engine = Engine::new(conf).unwrap();
+        // Partition 0 stalls 400ms on its first attempt only; others are
+        // instant. Speculation should finish the set well before 400ms.
+        engine.fault.delay_task(9, 0, Duration::from_millis(400));
+        let t0 = Instant::now();
+        let first_attempt_blocked = Arc::new(AtomicBool::new(false));
+        engine
+            .run_task_set(9, 8, move |_part| Ok(()))
+            .unwrap();
+        let elapsed = t0.elapsed();
+        let _ = first_attempt_blocked;
+        assert!(
+            elapsed < Duration::from_millis(380),
+            "speculative copy should beat the 400ms straggler, took {elapsed:?}"
+        );
+        assert!(metrics::global().counter("scheduler.tasks.speculated").get() >= 1);
+    }
+
+    #[test]
+    fn run_job_orders_results_by_partition() {
+        let engine = test_engine();
+        let out: Vec<usize> = engine
+            .run_job(
+                Vec::new(),
+                8,
+                |part, _| Ok(vec![part * 10]),
+                |_, v: Vec<usize>| v[0],
+            )
+            .unwrap();
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    fn run_stages_skips_completed_shuffles() {
+        let engine = test_engine();
+        let runs = Arc::new(AtomicUsize::new(0));
+        let r2 = runs.clone();
+        let stage = StageSpec {
+            shuffle_id: 55,
+            num_tasks: 2,
+            run_task: Arc::new(move |map_idx, eng: &Engine| {
+                r2.fetch_add(1, Ordering::SeqCst);
+                eng.shuffle.put_bucket(55, map_idx, 0, vec![map_idx]);
+                eng.shuffle.map_done(55, map_idx, 2);
+                Ok(())
+            }),
+        };
+        engine.run_stages(std::slice::from_ref(&stage)).unwrap();
+        assert_eq!(runs.load(Ordering::SeqCst), 2);
+        // Second run: shuffle 55 already complete → no re-execution.
+        engine.run_stages(std::slice::from_ref(&stage)).unwrap();
+        assert_eq!(runs.load(Ordering::SeqCst), 2);
+        // Fault wipes one map output → only that map re-runs.
+        engine.shuffle.lose_map_output(55, 1);
+        engine.run_stages(std::slice::from_ref(&stage)).unwrap();
+        assert_eq!(runs.load(Ordering::SeqCst), 4, "stage re-ran (both tasks) after loss");
+    }
+
+    #[test]
+    fn empty_task_set_is_ok() {
+        let engine = test_engine();
+        engine.run_task_set(0, 0, |_| Ok(())).unwrap();
+    }
+
+    #[test]
+    fn chaos_seed_jobs_still_complete() {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.fault.inject.seed", "1234");
+        conf.set("ignite.worker.slots", "4");
+        let engine = Engine::new(conf).unwrap();
+        assert!(engine.fault.is_active());
+        // 5% chaos on first attempts; retries absorb all of it.
+        let out: Vec<usize> = engine
+            .run_job(Vec::new(), 50, |p, _| Ok(vec![p]), |_, v: Vec<usize>| v[0])
+            .unwrap();
+        assert_eq!(out.len(), 50);
+    }
+}

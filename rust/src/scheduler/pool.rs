@@ -1,0 +1,142 @@
+//! Fixed-size worker-thread pool: the "task slots" of a worker. Tasks are
+//! `FnOnce` jobs pulled from a shared queue — the same execution shape as
+//! Spark executors running tasks in threads (paper §2.2: "tasks are
+//! executed asynchronously in threads").
+
+use crate::metrics;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+type Job = Box<dyn FnOnce() + Send>;
+
+/// A fixed pool of worker threads.
+pub struct TaskPool {
+    tx: Sender<Job>,
+    slots: usize,
+    queued: Arc<AtomicUsize>,
+}
+
+impl TaskPool {
+    /// Spawn `slots` worker threads.
+    pub fn new(slots: usize) -> Self {
+        assert!(slots > 0, "pool needs at least one slot");
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        for i in 0..slots {
+            let rx = Arc::clone(&rx);
+            let queued = Arc::clone(&queued);
+            std::thread::Builder::new()
+                .name(format!("ignite-slot-{i}"))
+                .spawn(move || worker_loop(rx, queued))
+                .expect("spawn pool worker");
+        }
+        TaskPool { tx, slots, queued }
+    }
+
+    /// Enqueue a job; a free slot picks it up.
+    pub fn submit(&self, job: Job) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        metrics::global().gauge("scheduler.pool.queued").add(1);
+        // Send fails only if all workers are gone (process teardown).
+        let _ = self.tx.send(job);
+    }
+
+    /// Number of worker slots.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Jobs submitted but not yet started.
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, queued: Arc<AtomicUsize>) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(job) => {
+                queued.fetch_sub(1, Ordering::SeqCst);
+                metrics::global().gauge("scheduler.pool.queued").add(-1);
+                // A panicking job must not kill the slot: isolate it.
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                if result.is_err() {
+                    metrics::global().counter("scheduler.pool.panics").inc();
+                    log::warn!(target: "scheduler", "task panicked in pool worker");
+                }
+            }
+            Err(_) => return, // pool dropped
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn executes_submitted_jobs() {
+        let pool = TaskPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while counter.load(Ordering::SeqCst) < 100 {
+            assert!(std::time::Instant::now() < deadline, "jobs did not finish");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn jobs_run_concurrently() {
+        let pool = TaskPool::new(4);
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let inf = in_flight.clone();
+            let max = max_seen.clone();
+            pool.submit(Box::new(move || {
+                let now = inf.fetch_add(1, Ordering::SeqCst) + 1;
+                max.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(30));
+                inf.fetch_sub(1, Ordering::SeqCst);
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(max_seen.load(Ordering::SeqCst) >= 2, "expected parallel execution");
+        assert!(max_seen.load(Ordering::SeqCst) <= 4, "no more than slot count");
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_pool() {
+        let pool = TaskPool::new(1);
+        pool.submit(Box::new(|| panic!("task bug")));
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = done.clone();
+        pool.submit(Box::new(move || {
+            d.store(1, Ordering::SeqCst);
+        }));
+        let deadline = std::time::Instant::now() + Duration::from_secs(3);
+        while done.load(Ordering::SeqCst) == 0 {
+            assert!(std::time::Instant::now() < deadline, "pool died after panic");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn slots_reported() {
+        let pool = TaskPool::new(3);
+        assert_eq!(pool.slots(), 3);
+    }
+}

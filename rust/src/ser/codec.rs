@@ -1,0 +1,364 @@
+//! The wire codec: little-endian numerics, LEB128 varint lengths.
+
+use crate::error::{IgniteError, Result};
+use std::collections::HashMap;
+
+/// Serialize `self` onto the end of `buf`.
+pub trait Encode {
+    fn encode(&self, buf: &mut Vec<u8>);
+}
+
+/// Deserialize from a [`Reader`].
+pub trait Decode: Sized {
+    fn decode(r: &mut Reader<'_>) -> Result<Self>;
+}
+
+/// Cursor over a byte slice with bounds-checked primitives.
+pub struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Reader { bytes, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    pub fn expect_end(&self) -> Result<()> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(IgniteError::Codec(format!("{} trailing bytes", self.remaining())))
+        }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(IgniteError::Codec(format!(
+                "need {n} bytes, {} remain",
+                self.remaining()
+            )));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// LEB128 varint.
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut out: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.u8()?;
+            if shift >= 64 {
+                return Err(IgniteError::Codec("varint overflow".into()));
+            }
+            out |= u64::from(byte & 0x7F) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(out);
+            }
+            shift += 7;
+        }
+    }
+
+    /// Varint length with a sanity cap, for collection sizes.
+    pub fn len(&mut self) -> Result<usize> {
+        let n = self.varint()? as usize;
+        if n > self.remaining().max(1 << 20) {
+            return Err(IgniteError::Codec(format!("implausible length {n}")));
+        }
+        Ok(n)
+    }
+}
+
+/// Append a LEB128 varint.
+pub fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+// ---- primitive impls -------------------------------------------------
+
+macro_rules! impl_le_num {
+    ($($t:ty),*) => {$(
+        impl Encode for $t {
+            fn encode(&self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(&self.to_le_bytes());
+            }
+        }
+        impl Decode for $t {
+            fn decode(r: &mut Reader<'_>) -> Result<Self> {
+                let b = r.take(std::mem::size_of::<$t>())?;
+                Ok(<$t>::from_le_bytes(b.try_into().unwrap()))
+            }
+        }
+    )*};
+}
+
+impl_le_num!(u16, u32, u64, i16, i32, i64, f32, f64);
+
+impl Encode for u8 {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.push(*self);
+    }
+}
+impl Decode for u8 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        r.u8()
+    }
+}
+
+impl Encode for bool {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.push(u8::from(*self));
+    }
+}
+impl Decode for bool {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        match r.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(IgniteError::Codec(format!("bad bool byte {b}"))),
+        }
+    }
+}
+
+impl Encode for usize {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_varint(buf, *self as u64);
+    }
+}
+impl Decode for usize {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(r.varint()? as usize)
+    }
+}
+
+impl Encode for String {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.as_str().encode(buf);
+    }
+}
+impl Encode for str {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_varint(buf, self.len() as u64);
+        buf.extend_from_slice(self.as_bytes());
+    }
+}
+impl Decode for String {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = r.len()?;
+        let bytes = r.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|e| IgniteError::Codec(format!("bad utf8: {e}")))
+    }
+}
+
+impl<T: Encode> Encode for Vec<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_varint(buf, self.len() as u64);
+        for item in self {
+            item.encode(buf);
+        }
+    }
+}
+impl<T: Decode> Decode for Vec<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = r.len()?;
+        let mut out = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            out.push(T::decode(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: Encode> Encode for Option<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            None => buf.push(0),
+            Some(v) => {
+                buf.push(1);
+                v.encode(buf);
+            }
+        }
+    }
+}
+impl<T: Decode> Decode for Option<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        match r.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            b => Err(IgniteError::Codec(format!("bad option tag {b}"))),
+        }
+    }
+}
+
+impl<A: Encode, B: Encode> Encode for (A, B) {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.0.encode(buf);
+        self.1.encode(buf);
+    }
+}
+impl<A: Decode, B: Decode> Decode for (A, B) {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok((A::decode(r)?, B::decode(r)?))
+    }
+}
+
+impl<A: Encode, B: Encode, C: Encode> Encode for (A, B, C) {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.0.encode(buf);
+        self.1.encode(buf);
+        self.2.encode(buf);
+    }
+}
+impl<A: Decode, B: Decode, C: Decode> Decode for (A, B, C) {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok((A::decode(r)?, B::decode(r)?, C::decode(r)?))
+    }
+}
+
+impl<K: Encode + Ord + std::hash::Hash + Eq, V: Encode> Encode for HashMap<K, V> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        // Deterministic output: encode entries sorted by key.
+        put_varint(buf, self.len() as u64);
+        let mut keys: Vec<&K> = self.keys().collect();
+        keys.sort();
+        for k in keys {
+            k.encode(buf);
+            self[k].encode(buf);
+        }
+    }
+}
+impl<K: Decode + std::hash::Hash + Eq, V: Decode> Decode for HashMap<K, V> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = r.len()?;
+        let mut out = HashMap::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let k = K::decode(r)?;
+            let v = V::decode(r)?;
+            out.insert(k, v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::{from_bytes, to_bytes};
+
+    fn rt<T: Encode + Decode + PartialEq + std::fmt::Debug>(v: T) {
+        let bytes = to_bytes(&v);
+        let back: T = from_bytes(&bytes).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn primitives_round_trip() {
+        rt(0u8);
+        rt(255u8);
+        rt(u16::MAX);
+        rt(123456789u32);
+        rt(u64::MAX);
+        rt(-42i32);
+        rt(i64::MIN);
+        rt(3.5f32);
+        rt(-0.125f64);
+        rt(true);
+        rt(false);
+        rt(usize::MAX);
+    }
+
+    #[test]
+    fn strings_round_trip() {
+        rt(String::new());
+        rt("hello".to_string());
+        rt("ünïcødé 🎇".to_string());
+    }
+
+    #[test]
+    fn collections_round_trip() {
+        rt(Vec::<u64>::new());
+        rt(vec![1u64, 2, 3]);
+        rt(Some(7i64));
+        rt(Option::<i64>::None);
+        rt((1u32, "pair".to_string()));
+        rt((1u32, 2u64, "triple".to_string()));
+        let mut m = HashMap::new();
+        m.insert("a".to_string(), 1u64);
+        m.insert("b".to_string(), 2u64);
+        rt(m);
+    }
+
+    #[test]
+    fn hashmap_encoding_is_deterministic() {
+        let mut m1 = HashMap::new();
+        let mut m2 = HashMap::new();
+        for i in 0..32u64 {
+            m1.insert(format!("k{i}"), i);
+        }
+        for i in (0..32u64).rev() {
+            m2.insert(format!("k{i}"), i);
+        }
+        assert_eq!(to_bytes(&m1), to_bytes(&m2));
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u64, 127, 128, 16383, 16384, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut r = Reader::new(&buf);
+            assert_eq!(r.varint().unwrap(), v);
+            assert_eq!(r.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let bytes = to_bytes(&"hello".to_string());
+        for cut in 0..bytes.len() {
+            assert!(from_bytes::<String>(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn bad_bool_and_option_tags_error() {
+        assert!(from_bytes::<bool>(&[2]).is_err());
+        assert!(from_bytes::<Option<u8>>(&[9]).is_err());
+    }
+
+    #[test]
+    fn varint_overflow_detected() {
+        let buf = [0xFFu8; 11];
+        let mut r = Reader::new(&buf);
+        assert!(r.varint().is_err());
+    }
+}

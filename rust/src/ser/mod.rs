@@ -1,0 +1,58 @@
+//! Binary serialization substrate.
+//!
+//! The paper (§3.4) sends *first-class Scala objects* as message payloads,
+//! relying on JVM serialization. The vendor set here has no `serde`, so
+//! this module is a from-scratch codec with two halves:
+//!
+//! * [`Encode`] / [`Decode`] — a compact, deterministic binary format
+//!   (little-endian numerics, varint lengths) implemented for primitives,
+//!   strings, tuples, `Option`, `Vec` and maps. Used for RPC envelopes,
+//!   shuffle blocks and task descriptors.
+//! * [`Value`] — a dynamic, self-describing object used as the payload of
+//!   peer messages, playing the role of "any serializable Scala object".
+//!   Typed `receive::<T>()` in the comm layer goes through [`FromValue`],
+//!   mirroring MPIgnite's `receive[T]` type parameter ("necessary to
+//!   permit proper deserialization and casting").
+
+mod codec;
+mod value;
+
+pub use codec::{put_varint, Decode, Encode, Reader};
+pub use value::{FromValue, IntoValue, Value};
+
+use crate::error::Result;
+
+/// Encode any `Encode` into a fresh buffer.
+pub fn to_bytes<T: Encode + ?Sized>(v: &T) -> Vec<u8> {
+    let mut buf = Vec::new();
+    v.encode(&mut buf);
+    buf
+}
+
+/// Decode a `Decode` from a byte slice, requiring full consumption.
+pub fn from_bytes<T: Decode>(bytes: &[u8]) -> Result<T> {
+    let mut r = Reader::new(bytes);
+    let v = T::decode(&mut r)?;
+    r.expect_end()?;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_through_helpers() {
+        let v = vec![(1u64, "one".to_string()), (2, "two".to_string())];
+        let bytes = to_bytes(&v);
+        let back: Vec<(u64, String)> = from_bytes(&bytes).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn trailing_garbage_is_an_error() {
+        let mut bytes = to_bytes(&7u64);
+        bytes.push(0xFF);
+        assert!(from_bytes::<u64>(&bytes).is_err());
+    }
+}

@@ -1,0 +1,441 @@
+//! [`Value`] — the dynamic message payload.
+//!
+//! MPIgnite messages carry "true Scala objects ... provided those objects
+//! are serializable" (§3.4). Rust has no runtime reflection, so peer
+//! messages carry a self-describing [`Value`]; the typed `receive[T]` of
+//! the paper maps to `receive::<T>()` with `T: FromValue`, and a type
+//! mismatch surfaces as a `Codec` error — the analogue of a failed cast.
+
+use super::codec::{put_varint, Decode, Encode, Reader};
+use crate::error::{IgniteError, Result};
+
+/// A dynamically-typed, serializable object.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Unit,
+    Bool(bool),
+    I64(i64),
+    F64(f64),
+    Str(String),
+    Bytes(Vec<u8>),
+    /// Heterogeneous list (also used for tuples).
+    List(Vec<Value>),
+    /// String-keyed record.
+    Map(Vec<(String, Value)>),
+    /// Dense numeric vectors get dedicated variants so bulk payloads
+    /// (matrix tiles, gradient shards) avoid per-element tags.
+    F32Vec(Vec<f32>),
+    F64Vec(Vec<f64>),
+    I64Vec(Vec<i64>),
+}
+
+const TAG_UNIT: u8 = 0;
+const TAG_BOOL: u8 = 1;
+const TAG_I64: u8 = 2;
+const TAG_F64: u8 = 3;
+const TAG_STR: u8 = 4;
+const TAG_BYTES: u8 = 5;
+const TAG_LIST: u8 = 6;
+const TAG_MAP: u8 = 7;
+const TAG_F32VEC: u8 = 8;
+const TAG_F64VEC: u8 = 9;
+const TAG_I64VEC: u8 = 10;
+
+impl Value {
+    /// Human-readable type name, used in cast-error messages.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Unit => "unit",
+            Value::Bool(_) => "bool",
+            Value::I64(_) => "i64",
+            Value::F64(_) => "f64",
+            Value::Str(_) => "str",
+            Value::Bytes(_) => "bytes",
+            Value::List(_) => "list",
+            Value::Map(_) => "map",
+            Value::F32Vec(_) => "f32vec",
+            Value::F64Vec(_) => "f64vec",
+            Value::I64Vec(_) => "i64vec",
+        }
+    }
+
+    /// Approximate serialized size in bytes, used by the metrics layer and
+    /// the shuffle spill threshold.
+    pub fn approx_size(&self) -> usize {
+        match self {
+            Value::Unit => 1,
+            Value::Bool(_) => 2,
+            Value::I64(_) | Value::F64(_) => 9,
+            Value::Str(s) => 1 + 5 + s.len(),
+            Value::Bytes(b) => 1 + 5 + b.len(),
+            Value::List(l) => 1 + 5 + l.iter().map(Value::approx_size).sum::<usize>(),
+            Value::Map(m) => {
+                1 + 5 + m.iter().map(|(k, v)| 5 + k.len() + v.approx_size()).sum::<usize>()
+            }
+            Value::F32Vec(v) => 1 + 5 + v.len() * 4,
+            Value::F64Vec(v) => 1 + 5 + v.len() * 8,
+            Value::I64Vec(v) => 1 + 5 + v.len() * 8,
+        }
+    }
+
+    /// Fetch a field from a `Map` value.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Map(m) => m.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+}
+
+impl Encode for Value {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Value::Unit => buf.push(TAG_UNIT),
+            Value::Bool(b) => {
+                buf.push(TAG_BOOL);
+                b.encode(buf);
+            }
+            Value::I64(v) => {
+                buf.push(TAG_I64);
+                v.encode(buf);
+            }
+            Value::F64(v) => {
+                buf.push(TAG_F64);
+                v.encode(buf);
+            }
+            Value::Str(s) => {
+                buf.push(TAG_STR);
+                s.encode(buf);
+            }
+            Value::Bytes(b) => {
+                buf.push(TAG_BYTES);
+                put_varint(buf, b.len() as u64);
+                buf.extend_from_slice(b);
+            }
+            Value::List(l) => {
+                buf.push(TAG_LIST);
+                put_varint(buf, l.len() as u64);
+                for v in l {
+                    v.encode(buf);
+                }
+            }
+            Value::Map(m) => {
+                buf.push(TAG_MAP);
+                put_varint(buf, m.len() as u64);
+                for (k, v) in m {
+                    k.encode(buf);
+                    v.encode(buf);
+                }
+            }
+            Value::F32Vec(v) => {
+                buf.push(TAG_F32VEC);
+                put_varint(buf, v.len() as u64);
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Value::F64Vec(v) => {
+                buf.push(TAG_F64VEC);
+                put_varint(buf, v.len() as u64);
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Value::I64Vec(v) => {
+                buf.push(TAG_I64VEC);
+                put_varint(buf, v.len() as u64);
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+impl Decode for Value {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(match r.u8()? {
+            TAG_UNIT => Value::Unit,
+            TAG_BOOL => Value::Bool(bool::decode(r)?),
+            TAG_I64 => Value::I64(i64::decode(r)?),
+            TAG_F64 => Value::F64(f64::decode(r)?),
+            TAG_STR => Value::Str(String::decode(r)?),
+            TAG_BYTES => {
+                let n = r.len()?;
+                Value::Bytes(r.take(n)?.to_vec())
+            }
+            TAG_LIST => {
+                let n = r.len()?;
+                let mut out = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    out.push(Value::decode(r)?);
+                }
+                Value::List(out)
+            }
+            TAG_MAP => {
+                let n = r.len()?;
+                let mut out = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    out.push((String::decode(r)?, Value::decode(r)?));
+                }
+                Value::Map(out)
+            }
+            TAG_F32VEC => {
+                let n = r.len()?;
+                let mut out = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    out.push(f32::decode(r)?);
+                }
+                Value::F32Vec(out)
+            }
+            TAG_F64VEC => {
+                let n = r.len()?;
+                let mut out = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    out.push(f64::decode(r)?);
+                }
+                Value::F64Vec(out)
+            }
+            TAG_I64VEC => {
+                let n = r.len()?;
+                let mut out = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    out.push(i64::decode(r)?);
+                }
+                Value::I64Vec(out)
+            }
+            t => return Err(IgniteError::Codec(format!("unknown Value tag {t}"))),
+        })
+    }
+}
+
+// ---- conversions into Value -------------------------------------------
+
+/// Rust type → [`Value`] (the send side of the paper's "send any object").
+pub trait IntoValue {
+    fn into_value(self) -> Value;
+}
+
+/// [`Value`] → Rust type (the typed `receive[T]` side).
+pub trait FromValue: Sized {
+    fn from_value(v: Value) -> Result<Self>;
+}
+
+fn cast_err(want: &str, got: &Value) -> IgniteError {
+    IgniteError::Codec(format!("cannot cast {} to {want}", got.type_name()))
+}
+
+macro_rules! simple_conv {
+    ($t:ty, $variant:ident, $name:expr) => {
+        impl IntoValue for $t {
+            fn into_value(self) -> Value {
+                Value::$variant(self)
+            }
+        }
+        impl FromValue for $t {
+            fn from_value(v: Value) -> Result<Self> {
+                match v {
+                    Value::$variant(x) => Ok(x),
+                    other => Err(cast_err($name, &other)),
+                }
+            }
+        }
+    };
+}
+
+simple_conv!(bool, Bool, "bool");
+simple_conv!(i64, I64, "i64");
+simple_conv!(f64, F64, "f64");
+simple_conv!(String, Str, "str");
+simple_conv!(Vec<f32>, F32Vec, "f32vec");
+simple_conv!(Vec<f64>, F64Vec, "f64vec");
+simple_conv!(Vec<i64>, I64Vec, "i64vec");
+
+impl IntoValue for () {
+    fn into_value(self) -> Value {
+        Value::Unit
+    }
+}
+impl FromValue for () {
+    fn from_value(v: Value) -> Result<Self> {
+        match v {
+            Value::Unit => Ok(()),
+            other => Err(cast_err("unit", &other)),
+        }
+    }
+}
+
+impl IntoValue for Value {
+    fn into_value(self) -> Value {
+        self
+    }
+}
+impl FromValue for Value {
+    fn from_value(v: Value) -> Result<Self> {
+        Ok(v)
+    }
+}
+
+impl IntoValue for i32 {
+    fn into_value(self) -> Value {
+        Value::I64(self as i64)
+    }
+}
+impl FromValue for i32 {
+    fn from_value(v: Value) -> Result<Self> {
+        match v {
+            Value::I64(x) => i32::try_from(x)
+                .map_err(|_| IgniteError::Codec(format!("{x} does not fit in i32"))),
+            other => Err(cast_err("i32", &other)),
+        }
+    }
+}
+
+impl IntoValue for usize {
+    fn into_value(self) -> Value {
+        Value::I64(self as i64)
+    }
+}
+impl FromValue for usize {
+    fn from_value(v: Value) -> Result<Self> {
+        match v {
+            Value::I64(x) if x >= 0 => Ok(x as usize),
+            Value::I64(x) => Err(IgniteError::Codec(format!("negative {x} as usize"))),
+            other => Err(cast_err("usize", &other)),
+        }
+    }
+}
+
+impl IntoValue for &str {
+    fn into_value(self) -> Value {
+        Value::Str(self.to_string())
+    }
+}
+
+impl IntoValue for Vec<u8> {
+    fn into_value(self) -> Value {
+        Value::Bytes(self)
+    }
+}
+impl FromValue for Vec<u8> {
+    fn from_value(v: Value) -> Result<Self> {
+        match v {
+            Value::Bytes(b) => Ok(b),
+            other => Err(cast_err("bytes", &other)),
+        }
+    }
+}
+
+impl<A: IntoValue, B: IntoValue> IntoValue for (A, B) {
+    fn into_value(self) -> Value {
+        Value::List(vec![self.0.into_value(), self.1.into_value()])
+    }
+}
+impl<A: FromValue, B: FromValue> FromValue for (A, B) {
+    fn from_value(v: Value) -> Result<Self> {
+        match v {
+            Value::List(mut l) if l.len() == 2 => {
+                let b = l.pop().unwrap();
+                let a = l.pop().unwrap();
+                Ok((A::from_value(a)?, B::from_value(b)?))
+            }
+            other => Err(cast_err("pair", &other)),
+        }
+    }
+}
+
+impl<T: IntoValue> IntoValue for Option<T> {
+    fn into_value(self) -> Value {
+        match self {
+            None => Value::Unit,
+            Some(v) => Value::List(vec![v.into_value()]),
+        }
+    }
+}
+impl<T: FromValue> FromValue for Option<T> {
+    fn from_value(v: Value) -> Result<Self> {
+        match v {
+            Value::Unit => Ok(None),
+            Value::List(mut l) if l.len() == 1 => Ok(Some(T::from_value(l.pop().unwrap())?)),
+            other => Err(cast_err("option", &other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::{from_bytes, to_bytes};
+
+    fn rt(v: Value) {
+        let bytes = to_bytes(&v);
+        let back: Value = from_bytes(&bytes).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn all_variants_round_trip() {
+        rt(Value::Unit);
+        rt(Value::Bool(true));
+        rt(Value::I64(-7));
+        rt(Value::F64(2.75));
+        rt(Value::Str("msg".into()));
+        rt(Value::Bytes(vec![0, 1, 255]));
+        rt(Value::List(vec![Value::I64(1), Value::Str("x".into())]));
+        rt(Value::Map(vec![("k".into(), Value::F64(1.5))]));
+        rt(Value::F32Vec(vec![1.0, -2.5]));
+        rt(Value::F64Vec(vec![0.1, 0.2]));
+        rt(Value::I64Vec(vec![9, -9]));
+    }
+
+    #[test]
+    fn nested_structures_round_trip() {
+        rt(Value::Map(vec![
+            ("rows".into(), Value::List(vec![Value::F32Vec(vec![1.0]), Value::F32Vec(vec![2.0])])),
+            ("meta".into(), Value::Map(vec![("n".into(), Value::I64(2))])),
+        ]));
+    }
+
+    #[test]
+    fn typed_casts_succeed() {
+        assert_eq!(i64::from_value(5i64.into_value()).unwrap(), 5);
+        assert_eq!(bool::from_value(true.into_value()).unwrap(), true);
+        assert_eq!(String::from_value("hi".into_value()).unwrap(), "hi");
+        assert_eq!(<(i64, bool)>::from_value((3i64, false).into_value()).unwrap(), (3, false));
+        assert_eq!(Option::<i64>::from_value(None::<i64>.into_value()).unwrap(), None);
+        assert_eq!(Option::<i64>::from_value(Some(4i64).into_value()).unwrap(), Some(4));
+    }
+
+    #[test]
+    fn typed_cast_mismatch_is_error() {
+        let err = i64::from_value(Value::Str("nope".into())).unwrap_err();
+        assert!(err.to_string().contains("cannot cast str to i64"));
+    }
+
+    #[test]
+    fn i32_overflow_detected() {
+        let v = Value::I64(i64::MAX);
+        assert!(i32::from_value(v).is_err());
+    }
+
+    #[test]
+    fn map_get() {
+        let v = Value::Map(vec![("a".into(), Value::I64(1))]);
+        assert_eq!(v.get("a"), Some(&Value::I64(1)));
+        assert_eq!(v.get("b"), None);
+        assert_eq!(Value::Unit.get("a"), None);
+    }
+
+    #[test]
+    fn unknown_tag_is_error() {
+        assert!(from_bytes::<Value>(&[99]).is_err());
+    }
+
+    #[test]
+    fn approx_size_tracks_payload() {
+        let small = Value::I64(1).approx_size();
+        let big = Value::F32Vec(vec![0.0; 1024]).approx_size();
+        assert!(big > small);
+        assert!(big >= 4096);
+    }
+}

@@ -1,0 +1,224 @@
+//! Shuffle manager — materializes the stage boundaries the DAG scheduler
+//! cuts ("a stage boundary is determined by when data needs to be shuffled
+//! through the cluster", paper §2.2).
+//!
+//! Map tasks partition their output by key hash into `reduce`-side buckets
+//! registered here; reduce tasks fetch every map task's bucket for their
+//! partition. Buckets are typed (`Arc<dyn Any>`), kept in memory, and the
+//! manager tracks per-shuffle completion so a finished map stage is never
+//! re-run (and can be, if a fault wipes it — lineage recomputation).
+
+use crate::error::{IgniteError, Result};
+use crate::metrics;
+use std::any::Any;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::sync::{Mutex, RwLock};
+
+/// Deterministic hash partitioner (Spark's default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HashPartitioner {
+    pub partitions: usize,
+}
+
+impl HashPartitioner {
+    pub fn new(partitions: usize) -> Self {
+        assert!(partitions > 0, "need at least one partition");
+        HashPartitioner { partitions }
+    }
+
+    pub fn partition<K: Hash>(&self, key: &K) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() % self.partitions as u64) as usize
+    }
+}
+
+type Bucket = std::sync::Arc<dyn Any + Send + Sync>;
+
+/// In-memory shuffle block registry.
+#[derive(Default)]
+pub struct ShuffleManager {
+    buckets: RwLock<HashMap<(u64, usize, usize), Bucket>>,
+    /// Completed map tasks per shuffle.
+    done_maps: Mutex<HashMap<u64, HashSet<usize>>>,
+    /// Shuffles whose map stage has fully completed (with map count).
+    complete: Mutex<HashMap<u64, usize>>,
+}
+
+impl ShuffleManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register map task `map_idx`'s bucket for reduce partition
+    /// `reduce_idx`. Idempotent: speculative duplicates overwrite with
+    /// identical content.
+    pub fn put_bucket<T: Send + Sync + 'static>(
+        &self,
+        shuffle: u64,
+        map_idx: usize,
+        reduce_idx: usize,
+        bucket: Vec<T>,
+    ) {
+        metrics::global().counter("shuffle.buckets.written").inc();
+        self.buckets
+            .write()
+            .unwrap()
+            .insert((shuffle, map_idx, reduce_idx), std::sync::Arc::new(bucket));
+    }
+
+    /// Mark map task finished (all its buckets registered).
+    pub fn map_done(&self, shuffle: u64, map_idx: usize, total_maps: usize) {
+        let mut done = self.done_maps.lock().unwrap();
+        let set = done.entry(shuffle).or_default();
+        set.insert(map_idx);
+        if set.len() == total_maps {
+            self.complete.lock().unwrap().insert(shuffle, total_maps);
+        }
+    }
+
+    /// Is the map stage of `shuffle` fully materialized?
+    pub fn is_complete(&self, shuffle: u64) -> bool {
+        self.complete.lock().unwrap().contains_key(&shuffle)
+    }
+
+    /// Number of map outputs for a completed shuffle.
+    pub fn map_count(&self, shuffle: u64) -> Option<usize> {
+        self.complete.lock().unwrap().get(&shuffle).copied()
+    }
+
+    /// Fetch one bucket; `Err` when missing (triggers stage recompute).
+    pub fn get_bucket<T: Send + Sync + 'static>(
+        &self,
+        shuffle: u64,
+        map_idx: usize,
+        reduce_idx: usize,
+    ) -> Result<std::sync::Arc<Vec<T>>> {
+        metrics::global().counter("shuffle.buckets.read").inc();
+        let guard = self.buckets.read().unwrap();
+        let bucket = guard.get(&(shuffle, map_idx, reduce_idx)).cloned().ok_or_else(|| {
+            IgniteError::Storage(format!(
+                "missing shuffle bucket ({shuffle}, map {map_idx}, reduce {reduce_idx})"
+            ))
+        })?;
+        bucket.downcast::<Vec<T>>().map_err(|_| {
+            IgniteError::Storage(format!("shuffle bucket ({shuffle}, {map_idx}, {reduce_idx}) has wrong type"))
+        })
+    }
+
+    /// Drop a whole shuffle (fault injection: lose the map outputs, or
+    /// normal cleanup after a job).
+    pub fn clear_shuffle(&self, shuffle: u64) {
+        self.buckets.write().unwrap().retain(|(s, _, _), _| *s != shuffle);
+        self.done_maps.lock().unwrap().remove(&shuffle);
+        self.complete.lock().unwrap().remove(&shuffle);
+    }
+
+    /// Drop a single map task's outputs (models losing one worker's local
+    /// shuffle files).
+    pub fn lose_map_output(&self, shuffle: u64, map_idx: usize) {
+        self.buckets
+            .write()
+            .unwrap()
+            .retain(|(s, m, _), _| !(*s == shuffle && *m == map_idx));
+        let mut done = self.done_maps.lock().unwrap();
+        if let Some(set) = done.get_mut(&shuffle) {
+            set.remove(&map_idx);
+        }
+        self.complete.lock().unwrap().remove(&shuffle);
+    }
+
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.read().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitioner_is_deterministic_and_in_range() {
+        let p = HashPartitioner::new(7);
+        for key in 0..1000u64 {
+            let a = p.partition(&key);
+            let b = p.partition(&key);
+            assert_eq!(a, b);
+            assert!(a < 7);
+        }
+    }
+
+    #[test]
+    fn partitioner_spreads_keys() {
+        let p = HashPartitioner::new(4);
+        let mut counts = [0usize; 4];
+        for key in 0..1000u64 {
+            counts[p.partition(&key)] += 1;
+        }
+        for c in counts {
+            assert!(c > 150, "partition badly skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn bucket_roundtrip_and_completion() {
+        let sm = ShuffleManager::new();
+        sm.put_bucket(1, 0, 0, vec![("a".to_string(), 1u64)]);
+        sm.put_bucket(1, 0, 1, vec![("b".to_string(), 2u64)]);
+        sm.map_done(1, 0, 2);
+        assert!(!sm.is_complete(1), "one of two maps done");
+        sm.put_bucket(1, 1, 0, vec![("c".to_string(), 3u64)]);
+        sm.put_bucket(1, 1, 1, Vec::<(String, u64)>::new());
+        sm.map_done(1, 1, 2);
+        assert!(sm.is_complete(1));
+        assert_eq!(sm.map_count(1), Some(2));
+
+        let b = sm.get_bucket::<(String, u64)>(1, 0, 1).unwrap();
+        assert_eq!(*b, vec![("b".to_string(), 2)]);
+    }
+
+    #[test]
+    fn missing_bucket_is_an_error() {
+        let sm = ShuffleManager::new();
+        assert!(sm.get_bucket::<(u64, u64)>(9, 0, 0).is_err());
+    }
+
+    #[test]
+    fn wrong_type_is_an_error() {
+        let sm = ShuffleManager::new();
+        sm.put_bucket(2, 0, 0, vec![1u64]);
+        assert!(sm.get_bucket::<(String, u64)>(2, 0, 0).is_err());
+    }
+
+    #[test]
+    fn lose_map_output_invalidates_completion() {
+        let sm = ShuffleManager::new();
+        sm.put_bucket(3, 0, 0, vec![1u64]);
+        sm.map_done(3, 0, 1);
+        assert!(sm.is_complete(3));
+        sm.lose_map_output(3, 0);
+        assert!(!sm.is_complete(3));
+        assert!(sm.get_bucket::<u64>(3, 0, 0).is_err());
+    }
+
+    #[test]
+    fn clear_shuffle_removes_only_that_shuffle() {
+        let sm = ShuffleManager::new();
+        sm.put_bucket(4, 0, 0, vec![1u64]);
+        sm.put_bucket(5, 0, 0, vec![2u64]);
+        sm.clear_shuffle(4);
+        assert!(sm.get_bucket::<u64>(4, 0, 0).is_err());
+        assert!(sm.get_bucket::<u64>(5, 0, 0).is_ok());
+    }
+
+    #[test]
+    fn speculative_duplicate_put_is_idempotent() {
+        let sm = ShuffleManager::new();
+        sm.put_bucket(6, 0, 0, vec![1u64, 2]);
+        sm.put_bucket(6, 0, 0, vec![1u64, 2]); // same content, second attempt
+        let b = sm.get_bucket::<u64>(6, 0, 0).unwrap();
+        assert_eq!(*b, vec![1, 2]);
+    }
+}

@@ -1,0 +1,326 @@
+//! Block storage — the engine's analogue of Spark's BlockManager.
+//!
+//! Two stores compose:
+//!
+//! * [`MemoryStore`] — typed in-memory blocks (`Arc<dyn Any>`) with a byte
+//!   budget and LRU eviction. Evicting a cached RDD partition is safe:
+//!   lineage recomputes it on the next miss (Spark `MEMORY_ONLY`
+//!   semantics, which is what the paper's Spark 2.1 defaults to).
+//! * [`DiskStore`] — byte blocks spilled to a per-instance directory
+//!   (shuffle spill, large broadcast payloads).
+//!
+//! [`BlockManager`] fronts both and feeds the metrics registry.
+
+use crate::error::{IgniteError, Result};
+use crate::metrics;
+use std::any::Any;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A typed in-memory block.
+type AnyBlock = Arc<dyn Any + Send + Sync>;
+
+struct MemEntry {
+    data: AnyBlock,
+    size: usize,
+    last_use: u64,
+}
+
+/// In-memory store with byte budget + LRU eviction.
+pub struct MemoryStore {
+    entries: Mutex<HashMap<String, MemEntry>>,
+    budget: usize,
+    used: AtomicU64,
+    clock: AtomicU64,
+}
+
+impl MemoryStore {
+    pub fn new(budget: usize) -> Self {
+        MemoryStore {
+            entries: Mutex::new(HashMap::new()),
+            budget,
+            used: AtomicU64::new(0),
+            clock: AtomicU64::new(0),
+        }
+    }
+
+    /// Insert a block with an explicit size estimate; evicts LRU blocks
+    /// until it fits. A block larger than the whole budget is rejected.
+    pub fn put(&self, id: &str, data: AnyBlock, size: usize) -> Result<()> {
+        if size > self.budget {
+            return Err(IgniteError::Storage(format!(
+                "block {id} ({size} B) exceeds memory budget ({} B)",
+                self.budget
+            )));
+        }
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(old) = entries.remove(id) {
+            self.used.fetch_sub(old.size as u64, Ordering::Relaxed);
+        }
+        // Evict least-recently-used entries until the new block fits.
+        while self.used.load(Ordering::Relaxed) as usize + size > self.budget {
+            let victim = entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    let e = entries.remove(&k).unwrap();
+                    self.used.fetch_sub(e.size as u64, Ordering::Relaxed);
+                    metrics::global().counter("storage.evictions").inc();
+                }
+                None => break,
+            }
+        }
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed);
+        entries.insert(id.to_string(), MemEntry { data, size, last_use: tick });
+        self.used.fetch_add(size as u64, Ordering::Relaxed);
+        metrics::global().gauge("storage.memory.used").set(self.used.load(Ordering::Relaxed) as i64);
+        Ok(())
+    }
+
+    pub fn get(&self, id: &str) -> Option<AnyBlock> {
+        let mut entries = self.entries.lock().unwrap();
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed);
+        entries.get_mut(id).map(|e| {
+            e.last_use = tick;
+            e.data.clone()
+        })
+    }
+
+    pub fn remove(&self, id: &str) {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.remove(id) {
+            self.used.fetch_sub(e.size as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.entries.lock().unwrap().contains_key(id)
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Byte blocks on disk under a unique per-instance directory.
+pub struct DiskStore {
+    dir: PathBuf,
+}
+
+impl DiskStore {
+    pub fn new(base: &str) -> Result<Self> {
+        let dir = PathBuf::from(base).join(format!(
+            "inst-{}-{}",
+            std::process::id(),
+            crate::util::next_id()
+        ));
+        std::fs::create_dir_all(&dir)?;
+        Ok(DiskStore { dir })
+    }
+
+    fn path_for(&self, id: &str) -> PathBuf {
+        // Sanitize: block ids may contain '/' etc.
+        let safe: String = id
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+            .collect();
+        self.dir.join(safe)
+    }
+
+    pub fn put_bytes(&self, id: &str, bytes: &[u8]) -> Result<()> {
+        std::fs::write(self.path_for(id), bytes)?;
+        metrics::global().counter("storage.disk.writes").inc();
+        metrics::global().counter("storage.disk.bytes_written").add(bytes.len() as u64);
+        Ok(())
+    }
+
+    pub fn get_bytes(&self, id: &str) -> Option<Vec<u8>> {
+        let out = std::fs::read(self.path_for(id)).ok();
+        if out.is_some() {
+            metrics::global().counter("storage.disk.reads").inc();
+        }
+        out
+    }
+
+    pub fn remove(&self, id: &str) {
+        let _ = std::fs::remove_file(self.path_for(id));
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.path_for(id).exists()
+    }
+}
+
+impl Drop for DiskStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Unified front: typed blocks in memory, byte blocks in memory with disk
+/// overflow.
+pub struct BlockManager {
+    pub memory: MemoryStore,
+    pub disk: DiskStore,
+}
+
+impl BlockManager {
+    pub fn new(memory_budget: usize, spill_dir: &str) -> Result<Self> {
+        Ok(BlockManager {
+            memory: MemoryStore::new(memory_budget),
+            disk: DiskStore::new(spill_dir)?,
+        })
+    }
+
+    /// Cache a typed block (e.g. an RDD partition). `size` is an estimate.
+    pub fn put_typed<T: Send + Sync + 'static>(
+        &self,
+        id: &str,
+        value: Arc<T>,
+        size: usize,
+    ) -> Result<()> {
+        self.memory.put(id, value, size)
+    }
+
+    /// Fetch a typed block, downcasting.
+    pub fn get_typed<T: Send + Sync + 'static>(&self, id: &str) -> Option<Arc<T>> {
+        self.memory.get(id).and_then(|any| any.downcast::<T>().ok())
+    }
+
+    /// Store bytes: memory first, spilling to disk when the memory put is
+    /// rejected or would thrash (> 1/4 of budget goes straight to disk).
+    pub fn put_bytes(&self, id: &str, bytes: Vec<u8>) -> Result<()> {
+        let size = bytes.len();
+        if size * 4 > self.memory.budget {
+            metrics::global().counter("storage.spills").inc();
+            return self.disk.put_bytes(id, &bytes);
+        }
+        self.memory.put(id, Arc::new(bytes), size)
+    }
+
+    pub fn get_bytes(&self, id: &str) -> Option<Vec<u8>> {
+        if let Some(any) = self.memory.get(id) {
+            if let Ok(v) = any.downcast::<Vec<u8>>() {
+                return Some((*v).clone());
+            }
+        }
+        self.disk.get_bytes(id)
+    }
+
+    pub fn remove(&self, id: &str) {
+        self.memory.remove(id);
+        self.disk.remove(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_put_get_roundtrip() {
+        let store = MemoryStore::new(1024);
+        store.put("a", Arc::new(vec![1u64, 2, 3]), 24).unwrap();
+        let got = store.get("a").unwrap().downcast::<Vec<u64>>().unwrap();
+        assert_eq!(*got, vec![1, 2, 3]);
+        assert!(store.contains("a"));
+        assert_eq!(store.used_bytes(), 24);
+    }
+
+    #[test]
+    fn memory_lru_eviction() {
+        let store = MemoryStore::new(100);
+        store.put("a", Arc::new(1u8), 40).unwrap();
+        store.put("b", Arc::new(2u8), 40).unwrap();
+        // Touch "a" so "b" becomes LRU.
+        store.get("a");
+        store.put("c", Arc::new(3u8), 40).unwrap();
+        assert!(store.contains("a"), "recently used survives");
+        assert!(!store.contains("b"), "LRU evicted");
+        assert!(store.contains("c"));
+        assert!(store.used_bytes() <= 100);
+    }
+
+    #[test]
+    fn oversized_block_rejected() {
+        let store = MemoryStore::new(10);
+        assert!(store.put("big", Arc::new(0u8), 11).is_err());
+    }
+
+    #[test]
+    fn replacing_a_block_updates_accounting() {
+        let store = MemoryStore::new(100);
+        store.put("a", Arc::new(1u8), 60).unwrap();
+        store.put("a", Arc::new(2u8), 30).unwrap();
+        assert_eq!(store.used_bytes(), 30);
+    }
+
+    #[test]
+    fn disk_store_roundtrip_and_cleanup() {
+        let dir;
+        {
+            let store = DiskStore::new("/tmp/mpignite-test-spill").unwrap();
+            dir = store.dir.clone();
+            store.put_bytes("block-1", b"hello").unwrap();
+            assert_eq!(store.get_bytes("block-1").unwrap(), b"hello");
+            assert!(store.contains("block-1"));
+            store.remove("block-1");
+            assert!(!store.contains("block-1"));
+            store.put_bytes("block-2", b"x").unwrap();
+        }
+        assert!(!dir.exists(), "instance dir removed on drop");
+    }
+
+    #[test]
+    fn disk_store_sanitizes_ids() {
+        let store = DiskStore::new("/tmp/mpignite-test-spill").unwrap();
+        store.put_bytes("shuffle/0/1::2", b"data").unwrap();
+        assert_eq!(store.get_bytes("shuffle/0/1::2").unwrap(), b"data");
+    }
+
+    #[test]
+    fn block_manager_typed_blocks() {
+        let bm = BlockManager::new(1 << 20, "/tmp/mpignite-test-spill").unwrap();
+        bm.put_typed("rdd_1_0", Arc::new(vec!["x".to_string()]), 16).unwrap();
+        let got: Arc<Vec<String>> = bm.get_typed("rdd_1_0").unwrap();
+        assert_eq!(*got, vec!["x".to_string()]);
+        // Wrong type → None, not panic.
+        assert!(bm.get_typed::<Vec<u64>>("rdd_1_0").is_none());
+    }
+
+    #[test]
+    fn block_manager_bytes_spill_large_to_disk() {
+        let bm = BlockManager::new(100, "/tmp/mpignite-test-spill").unwrap();
+        let big = vec![7u8; 80]; // > 1/4 of budget → disk
+        bm.put_bytes("big", big.clone()).unwrap();
+        assert!(bm.disk.contains("big"), "large block went to disk");
+        assert_eq!(bm.get_bytes("big").unwrap(), big);
+        let small = vec![1u8; 10];
+        bm.put_bytes("small", small.clone()).unwrap();
+        assert!(bm.memory.contains("small"));
+        assert_eq!(bm.get_bytes("small").unwrap(), small);
+    }
+
+    #[test]
+    fn block_manager_remove_both_tiers() {
+        let bm = BlockManager::new(100, "/tmp/mpignite-test-spill").unwrap();
+        bm.put_bytes("big", vec![0u8; 80]).unwrap();
+        bm.put_bytes("small", vec![0u8; 4]).unwrap();
+        bm.remove("big");
+        bm.remove("small");
+        assert!(bm.get_bytes("big").is_none());
+        assert!(bm.get_bytes("small").is_none());
+    }
+}

@@ -1,0 +1,236 @@
+//! `quickprop` — a small property-based testing framework (the vendor set
+//! has no `proptest`). Deterministic: every case derives from a seed, and
+//! a failing case reports the seed so it can be replayed. Includes greedy
+//! shrinking for integer/vector inputs.
+//!
+//! Used by the comm/scheduler/rdd test suites to check invariants such as
+//! "split produces a partition of ranks", "matching preserves per-channel
+//! FIFO order" and "lineage recompute equals first compute".
+
+use crate::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+    /// Maximum shrink iterations after a failure.
+    pub max_shrink: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 128, seed: 0xC0FFEE, max_shrink: 512 }
+    }
+}
+
+/// Generate a random input of type `T` from a PRNG.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Xoshiro256) -> T;
+    /// Candidate "smaller" inputs for shrinking, best-first.
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` random inputs; panic with seed + shrunk input on
+/// the first failure.
+pub fn check<T, G, P>(config: PropConfig, gen: &G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        let case_seed = config.seed.wrapping_add(case as u64);
+        let mut rng = Xoshiro256::seeded(case_seed);
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink greedily: keep the first failing candidate each round.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = config.max_shrink;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&best) {
+                    budget = budget.saturating_sub(1);
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}):\n  input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Uniform integer in `[lo, hi]`, shrinking toward `lo`.
+pub struct IntGen {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Gen<i64> for IntGen {
+    fn generate(&self, rng: &mut Xoshiro256) -> i64 {
+        self.lo + rng.next_below((self.hi - self.lo + 1) as u64) as i64
+    }
+
+    fn shrink(&self, value: &i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        if *value != self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (*value - self.lo) / 2;
+            if mid != *value {
+                out.push(mid);
+            }
+            out.push(value - 1);
+        }
+        out
+    }
+}
+
+/// Vector of `inner` with a random length in `[0, max_len]`, shrinking by
+/// halving length and shrinking elements.
+pub struct VecGen<G> {
+    pub inner: G,
+    pub max_len: usize,
+}
+
+impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecGen<G> {
+    fn generate(&self, rng: &mut Xoshiro256) -> Vec<T> {
+        let len = rng.next_below(self.max_len as u64 + 1) as usize;
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+
+    fn shrink(&self, value: &Vec<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if value.is_empty() {
+            return out;
+        }
+        out.push(Vec::new());
+        out.push(value[..value.len() / 2].to_vec());
+        out.push(value[1..].to_vec());
+        out.push(value[..value.len() - 1].to_vec());
+        // Shrink one element at a time (first position only, to bound cost).
+        for cand in self.inner.shrink(&value[0]) {
+            let mut v = value.clone();
+            v[0] = cand;
+            out.push(v);
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct PairGen<G1, G2>(pub G1, pub G2);
+
+impl<A: Clone, B: Clone, G1: Gen<A>, G2: Gen<B>> Gen<(A, B)> for PairGen<G1, G2> {
+    fn generate(&self, rng: &mut Xoshiro256) -> (A, B) {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, value: &(A, B)) -> Vec<(A, B)> {
+        let mut out = Vec::new();
+        for a in self.0.shrink(&value.0) {
+            out.push((a, value.1.clone()));
+        }
+        for b in self.1.shrink(&value.1) {
+            out.push((value.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Generator from a closure (no shrinking).
+pub struct FnGen<F>(pub F);
+
+impl<T, F: Fn(&mut Xoshiro256) -> T> Gen<T> for FnGen<F> {
+    fn generate(&self, rng: &mut Xoshiro256) -> T {
+        (self.0)(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counted = std::cell::Cell::new(0usize);
+        check(PropConfig { cases: 50, ..Default::default() }, &IntGen { lo: 0, hi: 100 }, |v| {
+            counted.set(counted.get() + 1);
+            if *v >= 0 {
+                Ok(())
+            } else {
+                Err("negative".into())
+            }
+        });
+        assert_eq!(counted.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(PropConfig::default(), &IntGen { lo: 0, hi: 1000 }, |v| {
+            if *v < 900 {
+                Ok(())
+            } else {
+                Err(format!("{v} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property fails for v >= 10; shrinking should land near 10.
+        let result = std::panic::catch_unwind(|| {
+            check(PropConfig::default(), &IntGen { lo: 0, hi: 10_000 }, |v| {
+                if *v < 10 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Extract the reported input value.
+        let input: i64 = msg
+            .lines()
+            .find(|l| l.trim_start().starts_with("input:"))
+            .and_then(|l| l.split(':').nth(1))
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap();
+        assert!(input >= 10, "counterexample {input} must still fail");
+        assert!(input <= 20, "shrinking should approach 10, got {input}");
+    }
+
+    #[test]
+    fn vec_gen_respects_max_len() {
+        let gen = VecGen { inner: IntGen { lo: 0, hi: 5 }, max_len: 8 };
+        check(PropConfig { cases: 64, ..Default::default() }, &gen, |v| {
+            if v.len() <= 8 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = IntGen { lo: 0, hi: 1_000_000 };
+        let mut r1 = Xoshiro256::seeded(9);
+        let mut r2 = Xoshiro256::seeded(9);
+        assert_eq!(gen.generate(&mut r1), gen.generate(&mut r2));
+    }
+}

@@ -1,0 +1,67 @@
+//! Minimal `log`-facade backend (the vendor set has no `env_logger`).
+//!
+//! Writes `LEVEL target: message` lines to stderr; level is chosen by the
+//! `MPIGNITE_LOG` environment variable (`error|warn|info|debug|trace`,
+//! default `warn` so tests stay quiet).
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::Once;
+
+struct StderrLogger {
+    level: LevelFilter,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record<'_>) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("{lvl} {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the logger once; later calls are no-ops. Returns the level.
+pub fn init_logger() -> LevelFilter {
+    let level = match std::env::var("MPIGNITE_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("info") => LevelFilter::Info,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Warn,
+    };
+    INIT.call_once(|| {
+        let logger = Box::leak(Box::new(StderrLogger { level }));
+        let _ = log::set_logger(logger);
+        log::set_max_level(level);
+    });
+    level
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        let a = init_logger();
+        let b = init_logger();
+        assert_eq!(a, b);
+        log::info!("logger smoke message");
+    }
+}

@@ -1,0 +1,146 @@
+//! Small utilities shared by every layer: a `log`-facade logger, monotonic
+//! ids, wall-clock helpers, human-readable byte/duration formatting and a
+//! plain-text table printer used by the bench harness and `api_table`.
+
+mod logger;
+mod table;
+
+pub use logger::init_logger;
+pub use table::Table;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Process-wide monotonically increasing id source (tasks, jobs, blocks...).
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Return a fresh process-unique id.
+pub fn next_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Milliseconds since the unix epoch (used in heartbeats and metrics).
+pub fn now_millis() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// A tiny stopwatch for coarse timing in examples and the scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_millis(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Format a byte count as a human-readable string (`1.5 KiB`, `3.2 MiB`).
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[unit])
+    }
+}
+
+/// Format a duration in the most natural unit (`412 ns`, `1.3 ms`, `2.1 s`).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.1} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// Split `total` items into `parts` near-equal contiguous ranges, the same
+/// slicing Spark's `parallelize` applies to a local collection.
+pub fn split_ranges(total: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(parts > 0, "parts must be positive");
+    let base = total / parts;
+    let rem = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_increasing() {
+        let a = next_id();
+        let b = next_id();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(12), "12 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.0 MiB");
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.5 ms");
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+    }
+
+    #[test]
+    fn split_ranges_covers_everything() {
+        let ranges = split_ranges(10, 3);
+        assert_eq!(ranges.len(), 3);
+        assert_eq!(ranges[0], 0..4);
+        assert_eq!(ranges[1], 4..7);
+        assert_eq!(ranges[2], 7..10);
+        let total: usize = ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn split_ranges_more_parts_than_items() {
+        let ranges = split_ranges(2, 5);
+        let total: usize = ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 2);
+        assert_eq!(ranges.len(), 5);
+    }
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_millis() >= 1.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Cluster integration: multi-worker jobs over real sockets, worker loss
+//! mid-job with the paper's p2p→relay recovery, rank placement, and
+//! back-to-back job isolation.
+
+use mpignite::cluster::{Master, Worker};
+use mpignite::closure::register_parallel_fn;
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// These tests rely on heartbeat timing (hundreds of ms); running five
+/// clusters concurrently in one test process oversubscribes the CPU and
+/// turns timing assumptions into flakes. Serialize them.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn conf() -> IgniteConf {
+    let mut c = IgniteConf::new();
+    c.set("ignite.worker.heartbeat.ms", "50");
+    c.set("ignite.worker.timeout.ms", "600");
+    c.set("ignite.comm.recv.timeout.ms", "8000");
+    c
+}
+
+fn setup(n: usize, c: &IgniteConf) -> (Arc<Master>, Vec<Arc<Worker>>) {
+    let master = Master::start(c, 0).unwrap();
+    let workers = (0..n).map(|_| Worker::start(c, master.address()).unwrap()).collect();
+    master.wait_for_workers(n, Duration::from_secs(5)).unwrap();
+    (master, workers)
+}
+
+#[test]
+fn wide_job_spans_many_workers() {
+    let _serial = lock();
+    register_parallel_fn("ic.wide", |comm, _| {
+        // Every rank exchanges with its mirror; then a global barrier.
+        let other = comm.size() - 1 - comm.rank();
+        let got: i64 = if other == comm.rank() {
+            comm.rank() as i64
+        } else {
+            comm.sendrecv(other, other as i64, 0, comm.rank() as i64)?
+        };
+        comm.barrier()?;
+        Ok(Value::I64(got))
+    });
+    let c = conf();
+    let (master, _workers) = setup(4, &c);
+    let out = master.execute_named("ic.wide", 12, Value::Unit).unwrap();
+    for (rank, v) in out.iter().enumerate() {
+        assert_eq!(*v, Value::I64((12 - 1 - rank) as i64));
+    }
+    master.shutdown();
+}
+
+#[test]
+fn worker_killed_mid_job_recovers_over_relay() {
+    let _serial = lock();
+    mpignite::util::init_logger();
+    // Rank 0 stalls until a deadline so the job is in flight when the
+    // worker dies; the master detects the loss and re-runs on survivors
+    // with the relay fallback.
+    register_parallel_fn("ic.slow_allreduce", |comm, arg| {
+        let delay_ms = match arg {
+            Value::I64(d) => *d,
+            _ => 0,
+        };
+        if comm.rank() == 0 {
+            std::thread::sleep(Duration::from_millis(delay_ms as u64));
+        }
+        let v = comm.all_reduce(1i64, |a, b| a + b)?;
+        Ok(Value::I64(v))
+    });
+    let c = conf();
+    let (master, workers) = setup(3, &c);
+
+    // Kill a worker shortly after the job starts.
+    let victim = workers[1].clone();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        victim.kill();
+    });
+    let before = mpignite::metrics::global().counter("cluster.jobs.recovered").get();
+    let out = master
+        .execute_named("ic.slow_allreduce", 6, Value::I64(1500))
+        .unwrap();
+    killer.join().unwrap();
+    assert_eq!(out, vec![Value::I64(6); 6], "job completed after recovery");
+    let after = mpignite::metrics::global().counter("cluster.jobs.recovered").get();
+    assert!(after > before, "recovery path must have been taken");
+    master.shutdown();
+}
+
+#[test]
+fn rank_tables_route_correctly_with_uneven_workers() {
+    let _serial = lock();
+    // More ranks than workers: round-robin placement, cross-worker ring.
+    register_parallel_fn("ic.ring", |world, _| {
+        let (rank, size) = (world.rank(), world.size());
+        let token = if rank == 0 {
+            world.send(1 % size, 0, 99i64)?;
+            world.receive::<i64>((size - 1) as i64, 0)?
+        } else {
+            let t = world.receive::<i64>((rank - 1) as i64, 0)?;
+            world.send((rank + 1) % size, 0, t)?;
+            t
+        };
+        Ok(Value::I64(token))
+    });
+    let c = conf();
+    let (master, _workers) = setup(2, &c);
+    for n in [2usize, 5, 9] {
+        let out = master.execute_named("ic.ring", n, Value::Unit).unwrap();
+        assert_eq!(out, vec![Value::I64(99); n], "ring of {n}");
+    }
+    master.shutdown();
+}
+
+#[test]
+fn errors_in_one_rank_fail_the_job_with_context() {
+    let _serial = lock();
+    register_parallel_fn("ic.partial_fail", |comm, _| {
+        if comm.rank() == 2 {
+            return Err(IgniteError::Invalid("rank 2 business logic error".into()));
+        }
+        Ok(Value::Unit)
+    });
+    let c = conf();
+    let (master, _workers) = setup(2, &c);
+    let err = master.execute_named("ic.partial_fail", 4, Value::Unit).unwrap_err();
+    assert!(err.to_string().contains("rank 2"), "got: {err}");
+    master.shutdown();
+
+    // Note: ranks 0,1,3 may block in collectives with rank 2 gone — this
+    // function has none, so threads exit cleanly.
+}
+
+#[test]
+fn many_sequential_jobs_contexts_isolated() {
+    let _serial = lock();
+    register_parallel_fn("ic.seq", |comm, arg| {
+        let round = match arg {
+            Value::I64(r) => *r,
+            _ => 0,
+        };
+        // Deliberately leave an unreceived message dangling each round:
+        // context isolation must prevent it leaking into the next job.
+        if comm.rank() == 0 {
+            comm.send(1, 5, round * 100)?;
+            comm.send(1, 6, -1i64)?; // never received
+        }
+        let got = if comm.rank() == 1 {
+            comm.receive::<i64>(0, 5)?
+        } else {
+            0
+        };
+        let sum = comm.all_reduce(got, |a, b| a + b)?;
+        Ok(Value::I64(sum))
+    });
+    let c = conf();
+    let (master, _workers) = setup(2, &c);
+    for round in 0..5i64 {
+        let out = master.execute_named("ic.seq", 3, Value::I64(round)).unwrap();
+        assert_eq!(out, vec![Value::I64(round * 100); 3], "round {round}");
+    }
+    master.shutdown();
+}

@@ -1,0 +1,314 @@
+//! Integration tests for the comm layer through the public API: the four
+//! paper listings, collectives composed with splits, cross-communicator
+//! isolation, and the relay/p2p transports over real TCP.
+
+use mpignite::cluster::{Master, Worker};
+use mpignite::comm::{run_local_world, CollectiveAlgo, ANY_SOURCE};
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use std::time::Duration;
+
+#[test]
+fn listing1_matvec_closure() {
+    let sc = IgniteContext::local(8);
+    let mat = vec![vec![1i64, 2, 3], vec![4, 5, 6], vec![7, 8, 9]];
+    let v = vec![1i64, 2, 3];
+    let res: i64 = sc
+        .parallelize_func(move |world: &SparkComm| {
+            let rank = world.get_rank();
+            if rank < mat.len() {
+                mat[rank].iter().zip(&v).map(|(a, b)| a * b).sum()
+            } else {
+                0
+            }
+        })
+        .execute(8)
+        .unwrap()
+        .into_iter()
+        .sum();
+    assert_eq!(res, 96);
+}
+
+#[test]
+fn listing2_ring_many_sizes() {
+    for n in [2usize, 3, 16, 33] {
+        let out = run_local_world(n, move |world| {
+            let (rank, size) = (world.rank(), world.size());
+            if rank == 0 {
+                world.send((rank + 1) % size, 0, 7i64)?;
+                world.receive::<i64>((size - 1) as i64, 0)
+            } else {
+                let t = world.receive::<i64>((rank - 1) as i64, 0)?;
+                world.send((rank + 1) % size, 0, t)?;
+                Ok(t)
+            }
+        })
+        .unwrap();
+        assert!(out.iter().all(|&t| t == 7), "n={n}");
+    }
+}
+
+#[test]
+fn listing3_nonblocking_future_chain() {
+    let out = run_local_world(10, |world| {
+        let (size, rank) = (world.size(), world.rank());
+        let half = size / 2;
+        if rank < half {
+            world.send(rank + half, 0, rank as i64)?;
+            let f = world.receive_async::<bool>((rank + half) as i64, 0)?;
+            assert!(!f.is_ready() || true); // may race; just exercises API
+            f.wait_timeout(Duration::from_secs(5)).map(Some)
+        } else {
+            let r = world.receive::<i64>((rank - half) as i64, 0)?;
+            world.send(rank - half, 0, r % 2 == 0)?;
+            Ok(None)
+        }
+    })
+    .unwrap();
+    for (rank, v) in out.iter().enumerate().take(5) {
+        assert_eq!(*v, Some(rank % 2 == 0));
+    }
+}
+
+#[test]
+fn listing4_full_grid() {
+    let out = run_local_world(9, |world| {
+        let wr = world.rank();
+        let row = world.split((wr / 3) as i64, wr as i64)?;
+        let col = world.split((wr % 3) as i64, wr as i64)?;
+        let a = (wr + 1) as i64;
+        if row.rank() == row.size() - 1 {
+            row.send(col.rank(), 0, 1 + col.rank() as i64)?;
+        }
+        let x_row = if row.rank() == col.rank() {
+            Some(row.receive::<i64>((row.size() - 1) as i64, 0)?)
+        } else {
+            None
+        };
+        let x = match x_row {
+            Some(x) => col.broadcast(col.rank(), Some(x))?,
+            None => col.broadcast::<i64>(row.rank(), None)?,
+        };
+        row.all_reduce(a * x, |p, q| p + q)
+    })
+    .unwrap();
+    assert_eq!(out[0], 14);
+    assert_eq!(out[3], 32);
+    assert_eq!(out[6], 50);
+}
+
+#[test]
+fn collectives_inside_subcommunicators() {
+    // allReduce within each split half must not leak across halves.
+    let out = run_local_world(8, |world| {
+        let half = world.split((world.rank() / 4) as i64, world.rank() as i64)?;
+        half.all_reduce(world.rank() as i64, |a, b| a + b)
+    })
+    .unwrap();
+    for r in 0..4 {
+        assert_eq!(out[r], 0 + 1 + 2 + 3);
+    }
+    for r in 4..8 {
+        assert_eq!(out[r], 4 + 5 + 6 + 7);
+    }
+}
+
+#[test]
+fn wildcard_receive_across_collective_traffic() {
+    // User ANY_SOURCE receives must not capture internal collective
+    // messages (negative tags).
+    let out = run_local_world(4, |world| {
+        if world.rank() != 0 {
+            world.send(0, 9, world.rank() as i64)?;
+        }
+        let b = world.broadcast(0, if world.rank() == 0 { Some(1i64) } else { None })?;
+        assert_eq!(b, 1);
+        if world.rank() == 0 {
+            let mut sum = 0;
+            for _ in 0..3 {
+                sum += world.receive::<i64>(ANY_SOURCE, 9)?;
+            }
+            Ok(sum)
+        } else {
+            Ok(0)
+        }
+    })
+    .unwrap();
+    assert_eq!(out[0], 6);
+}
+
+#[test]
+fn all_algorithms_agree_on_same_input() {
+    for n in [3usize, 8] {
+        let mut answers = Vec::new();
+        for algo in [CollectiveAlgo::Linear, CollectiveAlgo::Tree, CollectiveAlgo::Ring] {
+            let out = run_local_world(n, move |world| {
+                world.all_reduce_with(algo, (world.rank() * world.rank()) as i64, |a, b| a + b)
+            })
+            .unwrap();
+            answers.push(out[0]);
+        }
+        assert!(answers.windows(2).all(|w| w[0] == w[1]), "algos disagree: {answers:?}");
+    }
+}
+
+#[test]
+fn tcp_cluster_split_and_collectives() {
+    // The full Listing-4 communication pattern over real worker processes
+    // (in-process envs, real sockets).
+    mpignite::closure::register_parallel_fn("it.comm.grid", |world, _| {
+        let wr = world.rank();
+        let row = world.split((wr / 2) as i64, wr as i64)?;
+        let col = world.split((wr % 2) as i64, wr as i64)?;
+        let r = row.all_reduce((wr + 1) as i64, |a, b| a + b)?;
+        let c = col.all_reduce((wr + 1) as i64, |a, b| a + b)?;
+        Ok(Value::I64Vec(vec![r, c]))
+    });
+    let mut conf = IgniteConf::new();
+    conf.set("ignite.worker.heartbeat.ms", "50");
+    let master = Master::start(&conf, 0).unwrap();
+    let _w1 = Worker::start(&conf, master.address()).unwrap();
+    let _w2 = Worker::start(&conf, master.address()).unwrap();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+    let out = master.execute_named("it.comm.grid", 4, Value::Unit).unwrap();
+    // Grid ranks: 0 1 / 2 3 (value rank+1). Row sums: {1+2, 3+4}; col {1+3, 2+4}.
+    assert_eq!(out[0], Value::I64Vec(vec![3, 4]));
+    assert_eq!(out[1], Value::I64Vec(vec![3, 6]));
+    assert_eq!(out[2], Value::I64Vec(vec![7, 4]));
+    assert_eq!(out[3], Value::I64Vec(vec![7, 6]));
+    master.shutdown();
+}
+
+#[test]
+fn relay_and_p2p_give_identical_results() {
+    mpignite::closure::register_parallel_fn("it.comm.exchange", |world, _| {
+        let other = world.size() - 1 - world.rank();
+        if other == world.rank() {
+            return Ok(Value::I64(world.rank() as i64));
+        }
+        let got: i64 = world.sendrecv(other, other as i64, 4, world.rank() as i64)?;
+        Ok(Value::I64(got))
+    });
+    let mut results = Vec::new();
+    for mode in ["p2p", "relay"] {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.comm.mode", mode);
+        conf.set("ignite.worker.heartbeat.ms", "50");
+        let master = Master::start(&conf, 0).unwrap();
+        let _w1 = Worker::start(&conf, master.address()).unwrap();
+        let _w2 = Worker::start(&conf, master.address()).unwrap();
+        master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+        let out = master.execute_named("it.comm.exchange", 4, Value::Unit).unwrap();
+        results.push(out);
+        master.shutdown();
+    }
+    assert_eq!(results[0], results[1], "transport mode must not change semantics");
+    assert_eq!(results[0], vec![Value::I64(3), Value::I64(2), Value::I64(1), Value::I64(0)]);
+}
+
+#[test]
+fn stress_many_small_messages() {
+    // 4 ranks, all-to-all bursts with tag fan-out; checks matching under
+    // concurrency and receiver-side buffering depth.
+    let per_pair = 50;
+    let out = run_local_world(4, move |world| {
+        let me = world.rank();
+        for dst in 0..world.size() {
+            if dst != me {
+                for i in 0..per_pair {
+                    world.send(dst, (i % 5) as i64, (me * 1000 + i) as i64)?;
+                }
+            }
+        }
+        let mut received = 0usize;
+        let mut sum = 0i64;
+        for src in 0..world.size() {
+            if src != me {
+                for i in 0..per_pair {
+                    let v: i64 = world.receive(src as i64, (i % 5) as i64)?;
+                    assert_eq!(v, (src * 1000 + i) as i64, "FIFO per (src, tag)");
+                    sum += v;
+                    received += 1;
+                }
+            }
+        }
+        assert_eq!(received, 3 * per_pair);
+        Ok(sum)
+    })
+    .unwrap();
+    assert_eq!(out.len(), 4);
+}
+
+#[test]
+fn probe_sees_buffered_without_consuming() {
+    let out = run_local_world(2, |comm| {
+        if comm.rank() == 0 {
+            comm.send(1, 4, 77i64)?;
+            Ok(None)
+        } else {
+            // Wait for the message to be buffered.
+            let deadline = std::time::Instant::now() + Duration::from_secs(2);
+            while comm.probe(0, 4)?.is_none() {
+                assert!(std::time::Instant::now() < deadline, "probe never saw message");
+                std::thread::yield_now();
+            }
+            let hit = comm.probe(0, 4)?;
+            assert_eq!(hit, Some((0, 4)));
+            // Probing did not consume: receive still works.
+            let v: i64 = comm.receive(0, 4)?;
+            assert_eq!(comm.probe(0, 4)?, None, "consumed after receive");
+            Ok(Some(v))
+        }
+    })
+    .unwrap();
+    assert_eq!(out[1], Some(77));
+}
+
+#[test]
+fn dup_isolates_tag_space() {
+    // Same ranks, two communicators: a library using the dup cannot steal
+    // the application's messages even with identical (src, tag).
+    let out = run_local_world(2, |comm| {
+        let lib = comm.dup()?;
+        assert_eq!(lib.rank(), comm.rank());
+        assert_eq!(lib.size(), comm.size());
+        assert_ne!(lib.context_id(), comm.context_id());
+        if comm.rank() == 0 {
+            comm.send(1, 0, 1i64)?;
+            lib.send(1, 0, 2i64)?;
+            Ok((0, 0))
+        } else {
+            // Receive library message first — must NOT get the app one.
+            let from_lib: i64 = lib.receive(0, 0)?;
+            let from_app: i64 = comm.receive(0, 0)?;
+            Ok((from_app, from_lib))
+        }
+    })
+    .unwrap();
+    assert_eq!(out[1], (1, 2));
+}
+
+#[test]
+fn all_to_all_transposes() {
+    let n = 4;
+    let out = run_local_world(n, move |comm| {
+        // data[i] = rank*10 + i  →  received[src] = src*10 + my_rank.
+        let data: Vec<i64> = (0..n).map(|i| (comm.rank() * 10 + i) as i64).collect();
+        comm.all_to_all(data)
+    })
+    .unwrap();
+    for (rank, received) in out.iter().enumerate() {
+        let expect: Vec<i64> = (0..n).map(|src| (src * 10 + rank) as i64).collect();
+        assert_eq!(*received, expect, "rank {rank}");
+    }
+}
+
+#[test]
+fn all_to_all_wrong_count_errors() {
+    let err = run_local_world(3, |comm| {
+        comm.all_to_all(vec![1i64])?;
+        Ok(())
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("needs 3 items"));
+}

@@ -1,0 +1,263 @@
+//! Integration tests for the data-parallel engine: multi-stage pipelines,
+//! caching + eviction recompute, shuffle-loss recomputation, fault
+//! injection through whole jobs, and RDD/closure interop.
+
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+#[test]
+fn multi_stage_pipeline_two_shuffles() {
+    let sc = IgniteContext::local(4);
+    // wordcount → count-by-count (two shuffle boundaries).
+    let words: Vec<String> = ["a", "b", "a", "c", "b", "a", "d", "e", "d"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let counts = sc
+        .parallelize(words)
+        .map(|w| (w, 1i64))
+        .reduce_by_key(4, |a, b| a + b) // {a:3, b:2, c:1, d:2, e:1}
+        .map(|(_, c)| (c, 1i64))
+        .reduce_by_key(4, |a, b| a + b) // {3:1, 2:2, 1:2}
+        .collect_map()
+        .unwrap();
+    assert_eq!(counts[&3], 1);
+    assert_eq!(counts[&2], 2);
+    assert_eq!(counts[&1], 2);
+}
+
+#[test]
+fn cache_computes_once_then_hits() {
+    let sc = IgniteContext::local(2);
+    let computed = Arc::new(AtomicUsize::new(0));
+    let c2 = computed.clone();
+    let rdd = sc
+        .parallelize_with((0..100i64).collect(), 4)
+        .map(move |x| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            x * 2
+        })
+        .cache();
+    assert_eq!(rdd.count().unwrap(), 100);
+    let first = computed.load(Ordering::SeqCst);
+    assert_eq!(first, 100, "computed each element once");
+    // Second action: served from cache.
+    assert_eq!(rdd.collect().unwrap().len(), 100);
+    assert_eq!(computed.load(Ordering::SeqCst), first, "no recompute on cache hit");
+}
+
+#[test]
+fn cache_eviction_recomputes_from_lineage() {
+    let mut conf = IgniteConf::new();
+    conf.set("ignite.storage.memory.max", "4096"); // tiny budget
+    conf.set("ignite.worker.slots", "2");
+    let sc = IgniteContext::with_conf(conf).unwrap();
+    let computed = Arc::new(AtomicUsize::new(0));
+    let c2 = computed.clone();
+    // Each partition ~2000 bytes of i64 → several partitions can't all fit.
+    let rdd = sc
+        .parallelize_with((0..1000i64).collect(), 8)
+        .map(move |x| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            x
+        })
+        .cache();
+    assert_eq!(rdd.count().unwrap(), 1000);
+    let first = computed.load(Ordering::SeqCst);
+    // Re-run: some partitions were evicted and recompute transparently.
+    assert_eq!(rdd.count().unwrap(), 1000);
+    let second = computed.load(Ordering::SeqCst);
+    assert!(second > first, "eviction should force some recomputation");
+    assert_eq!(rdd.collect().unwrap(), (0..1000i64).collect::<Vec<_>>());
+}
+
+#[test]
+fn shuffle_output_loss_recovers_via_lineage() {
+    let sc = IgniteContext::local(4);
+    let rdd = sc
+        .parallelize((0..200i64).collect())
+        .map(|x| (x % 10, x))
+        .reduce_by_key(4, |a, b| a + b);
+    let before = rdd.collect_map().unwrap();
+    // Wipe one map task's shuffle output, as a failed worker would.
+    let shuffles_cleared = {
+        // Find the shuffle id by re-running stage deps through a fresh
+        // action after losing data — simplest: clear everything.
+        sc.engine().shuffle.bucket_count()
+    };
+    assert!(shuffles_cleared > 0);
+    // Lose all outputs of every shuffle (worst case).
+    for shuffle_id in 0..10_000u64 {
+        sc.engine().shuffle.clear_shuffle(shuffle_id);
+    }
+    let after = rdd.collect_map().unwrap();
+    assert_eq!(before, after, "recomputed results must match");
+}
+
+#[test]
+fn chaos_fault_injection_whole_pipeline() {
+    let mut conf = IgniteConf::new();
+    conf.set("ignite.fault.inject.seed", "99");
+    conf.set("ignite.worker.slots", "4");
+    conf.set("ignite.task.retries", "5");
+    let sc = IgniteContext::with_conf(conf).unwrap();
+    let total: i64 = sc
+        .parallelize_with((1..=500i64).collect(), 16)
+        .map(|x| x * 3)
+        .filter(|x| x % 2 == 1)
+        .reduce(|a, b| a + b)
+        .unwrap();
+    let expect: i64 = (1..=500i64).map(|x| x * 3).filter(|x| x % 2 == 1).sum();
+    assert_eq!(total, expect, "retries must absorb chaos faults");
+}
+
+#[test]
+fn union_sample_distinct_zip_with_index() {
+    let sc = IgniteContext::local(4);
+    let a = sc.parallelize((0..50i64).collect());
+    let b = sc.parallelize((25..75i64).collect());
+    let u = a.union(&b);
+    assert_eq!(u.count().unwrap(), 100);
+    let d = u.distinct(4);
+    assert_eq!(d.count().unwrap(), 75);
+
+    let sampled = sc.parallelize((0..10_000i64).collect()).sample(0.1, 7);
+    let n = sampled.count().unwrap();
+    assert!(n > 700 && n < 1300, "10% sample of 10k gave {n}");
+    // Deterministic: same seed, same sample.
+    assert_eq!(sampled.count().unwrap(), n);
+
+    let idx = sc.parallelize_with(vec!["a", "b", "c", "d", "e"], 2).zip_with_index();
+    let pairs = idx.collect().unwrap();
+    assert_eq!(pairs.iter().map(|(_, i)| *i).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+}
+
+#[test]
+fn group_by_key_and_count_by_key() {
+    let sc = IgniteContext::local(4);
+    let pairs: Vec<(i64, i64)> = (0..60).map(|x| (x % 3, x)).collect();
+    let grouped = sc.parallelize(pairs.clone()).group_by_key(4).collect_map().unwrap();
+    assert_eq!(grouped.len(), 3);
+    for (k, vs) in &grouped {
+        assert_eq!(vs.len(), 20, "key {k}");
+        for v in vs {
+            assert_eq!(v % 3, *k);
+        }
+    }
+    let counted = sc.parallelize(pairs).count_by_key(4).collect_map().unwrap();
+    assert_eq!(counted[&0], 20);
+    assert_eq!(counted[&1], 20);
+    assert_eq!(counted[&2], 20);
+}
+
+#[test]
+fn fold_take_first_mean() {
+    let sc = IgniteContext::local(3);
+    let rdd = sc.parallelize((1..=10i64).collect());
+    assert_eq!(rdd.fold(0, |a, b| a + b).unwrap(), 55);
+    assert_eq!(rdd.take(3).unwrap(), vec![1, 2, 3]);
+    assert_eq!(rdd.first().unwrap(), 1);
+    let means = sc.parallelize(vec![1.0f64, 2.0, 3.0, 4.0]);
+    assert!((means.mean().unwrap() - 2.5).abs() < 1e-9);
+    assert!((means.sum().unwrap() - 10.0).abs() < 1e-9);
+}
+
+#[test]
+fn empty_rdd_edge_cases() {
+    let sc = IgniteContext::local(2);
+    let empty = sc.parallelize(Vec::<i64>::new());
+    assert_eq!(empty.count().unwrap(), 0);
+    assert!(empty.reduce(|a, b| a + b).is_err());
+    assert!(empty.first().is_err());
+    assert_eq!(empty.fold(0, |a, b| a + b).unwrap(), 0);
+    assert_eq!(empty.collect().unwrap(), Vec::<i64>::new());
+}
+
+#[test]
+fn rdd_feeding_parallel_closure_feeding_rdd() {
+    // Full interop loop: RDD → closure (collectives) → RDD.
+    let sc = IgniteContext::local(4);
+    let squares = sc.parallelize((1..=16i64).collect()).map(|x| x * x).collect().unwrap();
+    let squares = Arc::new(squares);
+    let partials = sc
+        .parallelize_func(move |world: &SparkComm| {
+            let chunk = squares.len() / world.size();
+            let r0 = world.rank() * chunk;
+            let local: i64 = squares[r0..r0 + chunk].iter().sum();
+            world.scan(local, |a, b| a + b).unwrap() // prefix sums
+        })
+        .execute(4)
+        .unwrap();
+    // Feed the per-rank prefix sums back into an RDD.
+    let final_sum = sc.parallelize(partials.clone()).reduce(|a, b| a.max(b)).unwrap();
+    let expect: i64 = (1..=16i64).map(|x| x * x).sum();
+    assert_eq!(final_sum, expect);
+    assert_eq!(*partials.last().unwrap(), expect);
+}
+
+#[test]
+fn text_file_pipeline() {
+    let path = "/tmp/mpignite-test-corpus.txt";
+    std::fs::write(path, "one two\nthree\nfour five six\n").unwrap();
+    let sc = IgniteContext::local(2);
+    let words = sc
+        .text_file(path)
+        .unwrap()
+        .flat_map(|l| l.split_whitespace().map(String::from).collect())
+        .count()
+        .unwrap();
+    assert_eq!(words, 6);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn join_and_cogroup() {
+    let sc = IgniteContext::local(4);
+    let users: Vec<(i64, String)> =
+        vec![(1, "ada".into()), (2, "bob".into()), (3, "cyd".into())];
+    let orders: Vec<(i64, i64)> = vec![(1, 100), (1, 101), (3, 300), (9, 900)];
+    let joined = sc
+        .parallelize(users.clone())
+        .join(&sc.parallelize(orders.clone()), 4)
+        .collect()
+        .unwrap();
+    let mut joined: Vec<(i64, (String, i64))> = joined;
+    joined.sort_by_key(|(k, (_, o))| (*k, *o));
+    assert_eq!(
+        joined,
+        vec![
+            (1, ("ada".to_string(), 100)),
+            (1, ("ada".to_string(), 101)),
+            (3, ("cyd".to_string(), 300)),
+        ],
+        "inner join drops unmatched keys on both sides"
+    );
+
+    let cg = sc
+        .parallelize(users)
+        .cogroup(&sc.parallelize(orders), 4)
+        .collect_map()
+        .unwrap();
+    assert_eq!(cg[&2], (vec!["bob".to_string()], vec![]));
+    assert_eq!(cg[&9], (vec![], vec![900]));
+    assert_eq!(cg[&1].1.len(), 2);
+}
+
+#[test]
+fn sort_by_orders_globally() {
+    let sc = IgniteContext::local(4);
+    let data: Vec<i64> = vec![5, 3, 9, 1, 7, 2, 8, 4, 6, 0];
+    let sorted = sc.parallelize(data).sort_by(|x| *x, 3).unwrap();
+    assert_eq!(sorted.collect().unwrap(), (0..10i64).collect::<Vec<_>>());
+    assert_eq!(sorted.num_partitions(), 3);
+    // Descending via key transform.
+    let desc = sc
+        .parallelize(vec![1i64, 3, 2])
+        .sort_by(|x| std::cmp::Reverse(*x), 2)
+        .unwrap()
+        .collect()
+        .unwrap();
+    assert_eq!(desc, vec![3, 2, 1]);
+}

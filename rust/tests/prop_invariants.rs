@@ -1,0 +1,329 @@
+//! Property-based tests (quickprop) on coordinator invariants:
+//!
+//! * codec round-trips for arbitrary `Value` trees;
+//! * communicator `split` always yields a partition of the parent's
+//!   ranks with key-ordered sub-ranks and color-consistent contexts;
+//! * collectives equal their sequential oracles for random shapes;
+//! * mailbox matching preserves per-channel FIFO under random interleave;
+//! * RDD pipelines equal their `Vec` oracles for random data;
+//! * the hash partitioner is a total, stable assignment.
+
+use mpignite::comm::{run_local_world, Mailbox, Message, Pattern};
+use mpignite::rng::Xoshiro256;
+use mpignite::ser::{from_bytes, to_bytes, Value};
+use mpignite::shuffle::HashPartitioner;
+use mpignite::testkit::{check, FnGen, IntGen, PropConfig, VecGen};
+use mpignite::IgniteContext;
+use std::time::Duration;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig { cases, seed: 0xFEED, max_shrink: 128 }
+}
+
+// ------------------------------------------------------------- codec --
+
+fn arbitrary_value(rng: &mut Xoshiro256, depth: usize) -> Value {
+    let pick = if depth == 0 { rng.next_below(7) } else { rng.next_below(9) };
+    match pick {
+        0 => Value::Unit,
+        1 => Value::Bool(rng.chance(0.5)),
+        2 => Value::I64(rng.next_u64() as i64),
+        3 => Value::F64(rng.next_f64() * 1e6 - 5e5),
+        4 => Value::Str(rng.word(0, 12)),
+        5 => Value::Bytes((0..rng.range(0, 16)).map(|_| rng.next_below(256) as u8).collect()),
+        6 => Value::F32Vec((0..rng.range(0, 8)).map(|_| rng.next_f32()).collect()),
+        7 => Value::List((0..rng.range(0, 4)).map(|_| arbitrary_value(rng, depth - 1)).collect()),
+        _ => Value::Map(
+            (0..rng.range(0, 4))
+                .map(|i| (format!("k{i}"), arbitrary_value(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_value_codec_round_trip() {
+    let gen = FnGen(|rng: &mut Xoshiro256| arbitrary_value(rng, 3));
+    check(cfg(300), &gen, |v| {
+        let bytes = to_bytes(v);
+        let back: Value = from_bytes(&bytes).map_err(|e| e.to_string())?;
+        if &back == v {
+            Ok(())
+        } else {
+            Err(format!("decoded {back:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_message_codec_round_trip() {
+    let gen = FnGen(|rng: &mut Xoshiro256| Message {
+        context: rng.next_u64(),
+        src: rng.range(0, 64),
+        dst_world: rng.range(0, 64),
+        tag: rng.next_u64() as i64 % 1000,
+        payload: arbitrary_value(rng, 2),
+    });
+    check(cfg(200), &gen, |m| {
+        let back: Message = from_bytes(&to_bytes(m)).map_err(|e| e.to_string())?;
+        if &back == m {
+            Ok(())
+        } else {
+            Err("message changed".into())
+        }
+    });
+}
+
+// ------------------------------------------------------------- split --
+
+#[test]
+fn prop_split_partitions_ranks() {
+    // Random world size, colors, keys: the union of sub-communicators is
+    // a partition of the world, sub-ranks are dense 0..group_size, and
+    // ordering follows (key, parent rank).
+    #[derive(Debug, Clone)]
+    struct Case {
+        n: usize,
+        colors: Vec<i64>,
+        keys: Vec<i64>,
+    }
+    let gen = FnGen(|rng: &mut Xoshiro256| {
+        let n = rng.range(1, 10);
+        Case {
+            n,
+            colors: (0..n).map(|_| rng.next_below(3) as i64).collect(),
+            keys: (0..n).map(|_| rng.next_u64() as i64 % 100).collect(),
+        }
+    });
+    check(cfg(40), &gen, |case| {
+        let colors = case.colors.clone();
+        let keys = case.keys.clone();
+        let n = case.n;
+        let out = run_local_world(n, move |world| {
+            let r = world.rank();
+            let sub = world.split(colors[r], keys[r])?;
+            Ok((sub.rank(), sub.size(), sub.context_id()))
+        })
+        .map_err(|e| e.to_string())?;
+
+        // Group world ranks by color and verify.
+        for color in 0..3i64 {
+            let members: Vec<usize> =
+                (0..n).filter(|&r| case.colors[r] == color).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut expected = members.clone();
+            expected.sort_by_key(|&r| (case.keys[r], r));
+            for (expect_rank, &world_rank) in expected.iter().enumerate() {
+                let (sub_rank, sub_size, _) = out[world_rank];
+                if sub_rank != expect_rank {
+                    return Err(format!(
+                        "world rank {world_rank} got sub rank {sub_rank}, want {expect_rank}"
+                    ));
+                }
+                if sub_size != members.len() {
+                    return Err(format!("bad group size {sub_size}"));
+                }
+            }
+            // Context ids agree within the group and differ across groups.
+            let ctx0 = out[members[0]].2;
+            for &m in &members {
+                if out[m].2 != ctx0 {
+                    return Err("context mismatch within color".into());
+                }
+            }
+            for other in 0..3i64 {
+                if other != color {
+                    if let Some(&m) = (0..n).find(|&r| case.colors[r] == other).as_ref() {
+                        if out[m].2 == ctx0 {
+                            return Err("context collision across colors".into());
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------- collectives --
+
+#[test]
+fn prop_allreduce_equals_sequential_fold() {
+    let gen = FnGen(|rng: &mut Xoshiro256| {
+        let n = rng.range(1, 9);
+        let values: Vec<i64> = (0..n).map(|_| rng.next_u64() as i64 % 1000).collect();
+        values
+    });
+    check(cfg(30), &gen, |values| {
+        let n = values.len();
+        let vals = values.clone();
+        let out = run_local_world(n, move |world| {
+            world.all_reduce(vals[world.rank()], |a, b| a + b)
+        })
+        .map_err(|e| e.to_string())?;
+        let want: i64 = values.iter().sum();
+        if out.iter().all(|&v| v == want) {
+            Ok(())
+        } else {
+            Err(format!("got {out:?}, want {want}"))
+        }
+    });
+}
+
+#[test]
+fn prop_scan_equals_prefix_sums() {
+    let gen = VecGen { inner: IntGen { lo: -50, hi: 50 }, max_len: 8 };
+    check(cfg(30), &gen, |values| {
+        if values.is_empty() {
+            return Ok(());
+        }
+        let n = values.len();
+        let vals = values.clone();
+        let out =
+            run_local_world(n, move |world| world.scan(vals[world.rank()], |a, b| a + b))
+                .map_err(|e| e.to_string())?;
+        let mut acc = 0;
+        for (r, v) in values.iter().enumerate() {
+            acc += v;
+            if out[r] != acc {
+                return Err(format!("rank {r}: {} != {acc}", out[r]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gather_preserves_rank_order() {
+    let gen = FnGen(|rng: &mut Xoshiro256| rng.range(1, 10));
+    check(cfg(20), &gen, |&n| {
+        let out = run_local_world(n, move |world| world.gather(0, world.rank() as i64))
+            .map_err(|e| e.to_string())?;
+        let want: Vec<i64> = (0..n as i64).collect();
+        match &out[0] {
+            Some(v) if *v == want => Ok(()),
+            other => Err(format!("root got {other:?}")),
+        }
+    });
+}
+
+// ----------------------------------------------------------- mailbox --
+
+#[test]
+fn prop_mailbox_fifo_per_channel_random_interleave() {
+    // Random sequence of (channel, value) deliveries; receives per channel
+    // must observe values in delivery order regardless of interleaving.
+    #[derive(Debug, Clone)]
+    struct Case {
+        events: Vec<(usize, i64)>, // (channel 0..3, value)
+    }
+    let gen = FnGen(|rng: &mut Xoshiro256| {
+        let n = rng.range(1, 40);
+        let mut next_val = [0i64; 3];
+        Case {
+            events: (0..n)
+                .map(|_| {
+                    let ch = rng.range(0, 3);
+                    let v = next_val[ch];
+                    next_val[ch] += 1;
+                    (ch, v)
+                })
+                .collect(),
+        }
+    });
+    check(cfg(100), &gen, |case| {
+        let mb = Mailbox::new(1 << 20);
+        for &(ch, v) in &case.events {
+            mb.deliver(Message {
+                context: 0,
+                src: ch,
+                dst_world: 0,
+                tag: 0,
+                payload: Value::I64(v),
+            });
+        }
+        for ch in 0..3usize {
+            let expected: Vec<i64> =
+                case.events.iter().filter(|(c, _)| *c == ch).map(|(_, v)| *v).collect();
+            for want in expected {
+                let got: i64 = mb
+                    .recv_blocking(
+                        Pattern { context: 0, src: ch as i64, tag: 0 },
+                        Duration::from_millis(100),
+                    )
+                    .map_err(|e| e.to_string())?;
+                if got != want {
+                    return Err(format!("channel {ch}: got {got}, want {want}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- rdd ----
+
+#[test]
+fn prop_rdd_pipeline_equals_vec_oracle() {
+    let gen = VecGen { inner: IntGen { lo: -1000, hi: 1000 }, max_len: 200 };
+    check(cfg(25), &gen, |data| {
+        let sc = IgniteContext::local(4);
+        let got: Vec<i64> = sc
+            .parallelize_with(data.clone(), 5)
+            .map(|x| x * 2)
+            .filter(|x| x % 3 != 0)
+            .collect()
+            .map_err(|e| e.to_string())?;
+        let want: Vec<i64> =
+            data.iter().map(|x| x * 2).filter(|x| x % 3 != 0).collect();
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("{} vs {} elements", got.len(), want.len()))
+        }
+    });
+}
+
+#[test]
+fn prop_reduce_by_key_equals_hashmap_oracle() {
+    let gen = VecGen { inner: IntGen { lo: 0, hi: 500 }, max_len: 150 };
+    check(cfg(20), &gen, |data| {
+        let sc = IgniteContext::local(4);
+        let pairs: Vec<(i64, i64)> = data.iter().map(|&x| (x % 7, x)).collect();
+        let got = sc
+            .parallelize(pairs.clone())
+            .reduce_by_key(3, |a, b| a + b)
+            .collect_map()
+            .map_err(|e| e.to_string())?;
+        let mut want = std::collections::HashMap::new();
+        for (k, v) in pairs {
+            *want.entry(k).or_insert(0) += v;
+        }
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("{got:?} vs {want:?}"))
+        }
+    });
+}
+
+// ------------------------------------------------------- partitioner --
+
+#[test]
+fn prop_partitioner_total_and_stable() {
+    let gen = FnGen(|rng: &mut Xoshiro256| (rng.range(1, 33), rng.next_u64()));
+    check(cfg(200), &gen, |&(parts, key)| {
+        let p = HashPartitioner::new(parts);
+        let a = p.partition(&key);
+        let b = p.partition(&key);
+        if a != b {
+            return Err("unstable".into());
+        }
+        if a >= parts {
+            return Err(format!("{a} out of range {parts}"));
+        }
+        Ok(())
+    });
+}

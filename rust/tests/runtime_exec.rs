@@ -1,0 +1,160 @@
+//! Runtime integration: execute the real AOT artifacts via PJRT and check
+//! numerics against pure-Rust references. Skips (with a notice) when
+//! `make artifacts` has not run — CI runs it first.
+
+use mpignite::rng::Xoshiro256;
+use mpignite::runtime::{shared_service, TensorF32, XlaServiceHandle};
+use std::sync::Arc;
+
+fn svc() -> Option<Arc<XlaServiceHandle>> {
+    match shared_service("artifacts") {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping runtime_exec tests: {e}");
+            None
+        }
+    }
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n).map(|_| rng.next_f32() - 0.5).collect()
+}
+
+fn naive_matvec(a: &[f32], x: &[f32], m: usize, k: usize) -> Vec<f32> {
+    (0..m)
+        .map(|i| (0..k).map(|j| a[i * k + j] * x[j]).sum())
+        .collect()
+}
+
+#[test]
+fn manifest_lists_required_artifacts() {
+    let Some(svc) = svc() else { return };
+    for name in [
+        "matvec_f32_64x64",
+        "matvec_f32_256x256",
+        "matvec_f32_1024x1024",
+        "matvec_f32_256x1024",
+        "matvec_f32_128x1024",
+        "dot_f32_1024",
+        "power_step_f32_1024",
+    ] {
+        assert!(svc.has(name), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn matvec_artifact_matches_naive_reference() {
+    let Some(svc) = svc() else { return };
+    for n in [64usize, 256] {
+        let a = rand_vec(n * n, 1);
+        let x = rand_vec(n, 2);
+        let y = svc
+            .matvec(
+                &format!("matvec_f32_{n}x{n}"),
+                TensorF32::matrix(a.clone(), n, n),
+                TensorF32::vec(x.clone()),
+            )
+            .unwrap();
+        let want = naive_matvec(&a, &x, n, n);
+        for i in 0..n {
+            assert!(
+                (y[i] - want[i]).abs() < 1e-3 * (1.0 + want[i].abs()),
+                "n={n} i={i}: {} vs {}",
+                y[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn rectangular_tile_artifact() {
+    let Some(svc) = svc() else { return };
+    let (m, k) = (128usize, 1024usize);
+    let a = rand_vec(m * k, 3);
+    let x = rand_vec(k, 4);
+    let y = svc
+        .matvec("matvec_f32_128x1024", TensorF32::matrix(a.clone(), m, k), TensorF32::vec(x.clone()))
+        .unwrap();
+    let want = naive_matvec(&a, &x, m, k);
+    for i in 0..m {
+        assert!((y[i] - want[i]).abs() < 2e-3 * (1.0 + want[i].abs()), "i={i}");
+    }
+}
+
+#[test]
+fn dot_artifact() {
+    let Some(svc) = svc() else { return };
+    let x = rand_vec(1024, 5);
+    let y = rand_vec(1024, 6);
+    let out = svc
+        .exec("dot_f32_1024", vec![TensorF32::vec(x.clone()), TensorF32::vec(y.clone())])
+        .unwrap();
+    let want: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+    assert!(out[0].dims.is_empty(), "dot returns a scalar");
+    assert!((out[0].data[0] - want).abs() < 1e-2 * (1.0 + want.abs()));
+}
+
+#[test]
+fn power_step_artifact_two_outputs() {
+    let Some(svc) = svc() else { return };
+    let n = 1024usize;
+    // Symmetric-ish matrix via the apps generator.
+    let a = mpignite::apps::gen_row_block(n, 0, n, 7);
+    let x = vec![1.0f32 / (n as f32).sqrt(); n];
+    let out = svc
+        .exec(
+            "power_step_f32_1024",
+            vec![TensorF32::matrix(a, n, n), TensorF32::vec(x)],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2, "x_next and eigenvalue estimate");
+    assert_eq!(out[0].dims, vec![n]);
+    // x_next has unit norm.
+    let norm: f32 = out[0].data.iter().map(|v| v * v).sum::<f32>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
+    // Rayleigh estimate in a plausible band around the planted eig.
+    let eig = out[1].data[0];
+    assert!(eig > 1.0 && eig < 10.0, "eig {eig}");
+}
+
+#[test]
+fn shape_validation_rejects_wrong_inputs() {
+    let Some(svc) = svc() else { return };
+    let err = svc
+        .exec("matvec_f32_64x64", vec![TensorF32::vec(vec![0.0; 64])])
+        .unwrap_err();
+    assert!(err.to_string().contains("expected 2 inputs"));
+    let err = svc
+        .exec(
+            "matvec_f32_64x64",
+            vec![TensorF32::matrix(vec![0.0; 32 * 64], 32, 64), TensorF32::vec(vec![0.0; 64])],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"), "got: {err}");
+    assert!(svc.exec("no_such_artifact", vec![]).is_err());
+}
+
+#[test]
+fn concurrent_execution_from_many_threads() {
+    let Some(svc) = svc() else { return };
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let a = rand_vec(64 * 64, 10 + t);
+            let x = rand_vec(64, 20 + t);
+            let y = svc
+                .matvec("matvec_f32_64x64", TensorF32::matrix(a.clone(), 64, 64), TensorF32::vec(x.clone()))
+                .unwrap();
+            let want = naive_matvec(&a, &x, 64, 64);
+            for i in 0..64 {
+                assert!((y[i] - want[i]).abs() < 1e-3 * (1.0 + want[i].abs()));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
