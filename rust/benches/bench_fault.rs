@@ -84,8 +84,7 @@ fn main() {
             run_task: Arc::new(|map_idx, eng: &Engine| {
                 std::hint::black_box((0..50_000u64).sum::<u64>());
                 eng.shuffle.put_bucket(77, map_idx, 0, vec![map_idx as u64]);
-                eng.shuffle.map_done(77, map_idx, 8);
-                Ok(())
+                eng.shuffle.map_done(77, map_idx, 8)
             }),
         };
         let sw = Stopwatch::start();

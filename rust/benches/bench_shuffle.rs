@@ -1,0 +1,118 @@
+//! E9 — shuffle tier throughput: reading a full shuffle's buckets from
+//! the in-memory tier vs forced-spill disk read-back vs remote fetch over
+//! the `shuffle.fetch` RPC endpoint.
+//!
+//! Expected shape: memory ≫ disk > remote; the remote path adds one RPC
+//! round trip per bucket on top of the serving worker's local read, so
+//! its gap versus disk is the network/framing cost the DataMPI line of
+//! work identifies as the dominant shuffle term.
+//!
+//! Run: `cargo bench --bench bench_shuffle` (MPIGNITE_BENCH_FAST=1 to
+//! smoke). CSV block feeds CHANGES.md baselines.
+
+use mpignite::bench::{black_box, BenchSuite, Throughput};
+use mpignite::cluster::{Master, Worker};
+use mpignite::config::IgniteConf;
+use mpignite::ser::to_bytes;
+use mpignite::shuffle::ShuffleManager;
+use mpignite::storage::DiskStore;
+use std::sync::Arc;
+use std::time::Duration;
+
+const MAPS: usize = 8;
+const REDUCES: usize = 4;
+const PAIRS_PER_BUCKET: usize = 128;
+
+/// Deterministic bucket payload for (map, reduce).
+fn bucket(map: usize, reduce: usize) -> Vec<(u64, u64)> {
+    (0..PAIRS_PER_BUCKET)
+        .map(|i| {
+            let k = (map * 1_000 + reduce * 100 + i) as u64;
+            (k, k.wrapping_mul(0x9E37_79B9))
+        })
+        .collect()
+}
+
+/// Total encoded bytes of one full shuffle (the throughput denominator).
+fn shuffle_bytes() -> u64 {
+    let mut total = 0u64;
+    for m in 0..MAPS {
+        for r in 0..REDUCES {
+            total += to_bytes(&bucket(m, r)).len() as u64;
+        }
+    }
+    total
+}
+
+fn fill(sm: &ShuffleManager, shuffle: u64) {
+    for m in 0..MAPS {
+        for r in 0..REDUCES {
+            sm.put_bucket(shuffle, m, r, bucket(m, r));
+        }
+        sm.map_done(shuffle, m, MAPS).unwrap();
+    }
+}
+
+/// Read every bucket of the shuffle back, whatever tier it lives in.
+fn drain(sm: &ShuffleManager, shuffle: u64) -> u64 {
+    let mut acc = 0u64;
+    for m in 0..MAPS {
+        for r in 0..REDUCES {
+            let b: Vec<(u64, u64)> = sm.fetch_bucket(shuffle, m, r).unwrap();
+            acc = acc.wrapping_add(b.len() as u64);
+        }
+    }
+    acc
+}
+
+fn main() {
+    mpignite::util::init_logger();
+    let bytes = shuffle_bytes();
+    let mut suite = BenchSuite::new(format!(
+        "E9: shuffle tier read throughput ({MAPS} maps x {REDUCES} reduces, {} B/shuffle)",
+        bytes
+    ));
+
+    // --- tier 1: in-memory (unbounded budget, no disk) ----------------
+    {
+        let sm = ShuffleManager::default();
+        fill(&sm, 1);
+        assert_eq!(sm.spilled_count(), 0);
+        suite.bench_throughput("read_in_memory", Throughput::Bytes(bytes), move || {
+            black_box(drain(&sm, 1));
+        });
+    }
+
+    // --- tier 2: forced spill (budget 0, every read hits disk) --------
+    {
+        let disk = Arc::new(DiskStore::new("/tmp/mpignite-bench-shuffle").unwrap());
+        let sm = ShuffleManager::new(0, Some(disk));
+        fill(&sm, 2);
+        assert_eq!(sm.spilled_count(), MAPS * REDUCES, "budget 0 spills every bucket");
+        suite.bench_throughput("read_forced_spill", Throughput::Bytes(bytes), move || {
+            black_box(drain(&sm, 2));
+        });
+    }
+
+    // --- tier 3: remote fetch over shuffle.fetch RPC -------------------
+    {
+        let conf = IgniteConf::new();
+        let master = Master::start(&conf, 0).expect("master");
+        let producer = Worker::start(&conf, master.address()).expect("producer worker");
+        let consumer = Worker::start(&conf, master.address()).expect("consumer worker");
+        master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+        // The producer holds every map output; the consumer holds none,
+        // so each drained bucket crosses the RPC plane.
+        fill(&producer.engine().shuffle, 3);
+        let consumer_sm = consumer.engine().clone();
+        suite.bench_throughput("read_remote_fetch", Throughput::Bytes(bytes), move || {
+            black_box(drain(&consumer_sm.shuffle, 3));
+        });
+        let remote = mpignite::metrics::global().counter("shuffle.remote.fetches").get();
+        assert!(remote >= (MAPS * REDUCES) as u64, "remote tier must be exercised");
+        master.shutdown();
+    }
+
+    suite.report();
+}

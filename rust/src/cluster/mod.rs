@@ -28,7 +28,7 @@ use crate::metrics;
 use crate::rpc::{Envelope, RpcAddress, RpcEnv};
 use crate::ser::{from_bytes, to_bytes, Value};
 use log::{info, warn};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
@@ -37,11 +37,19 @@ use std::time::Duration;
 pub const EP_REGISTER: &str = "master.register";
 pub const EP_HEARTBEAT: &str = "master.heartbeat";
 pub const EP_TASK_RESULT: &str = "master.task_result";
+/// Master map-output table (the driver-side shuffle location registry):
+/// workers announce completed map outputs, reduce tasks ask where a
+/// shuffle's blocks live.
+pub const EP_SHUFFLE_REGISTER: &str = "master.shuffle.register";
+pub const EP_SHUFFLE_LOCATE: &str = "master.shuffle.locate";
 /// Worker endpoints. Launch is two-phase: `prepare` hosts the ranks'
 /// mailboxes (so no rank thread anywhere can race a message past an
 /// un-hosted or stale-hosted destination), `launch` starts the threads.
 pub const EP_PREPARE: &str = "worker.prepare";
 pub const EP_LAUNCH: &str = "worker.launch";
+/// Worker shuffle service: serves locally-held (in-memory or spilled)
+/// shuffle buckets to remote reduce tasks by block id.
+pub const EP_SHUFFLE_FETCH: &str = "shuffle.fetch";
 
 struct WorkerInfo {
     addr: RpcAddress,
@@ -69,6 +77,8 @@ pub struct Master {
     /// Serializes jobs: the prototype runs one parallel execution at a
     /// time (each `execute` is an implicit barrier anyway).
     job_serial: Mutex<()>,
+    /// Map-output table: shuffle → (total maps, map index → worker addr).
+    map_outputs: Mutex<HashMap<u64, (usize, HashMap<usize, String>)>>,
 }
 
 impl Master {
@@ -87,6 +97,7 @@ impl Master {
             next_worker: AtomicU64::new(1),
             next_job: AtomicU64::new(1),
             job_serial: Mutex::new(()),
+            map_outputs: Mutex::new(HashMap::new()),
         });
 
         let m = Arc::clone(&master);
@@ -137,6 +148,53 @@ impl Master {
                     }
                 }
                 Ok(None)
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_SHUFFLE_REGISTER,
+            Arc::new(move |envelope: &Envelope| {
+                let reg: ShuffleRegister = from_bytes(&envelope.body)?;
+                let mut table = m.map_outputs.lock().unwrap();
+                let entry = table
+                    .entry(reg.shuffle)
+                    .or_insert_with(|| (reg.total_maps as usize, HashMap::new()));
+                entry.0 = reg.total_maps as usize;
+                entry.1.insert(reg.map_idx as usize, reg.addr);
+                metrics::global().counter("cluster.shuffle.registrations").inc();
+                Ok(Some(Vec::new())) // ack
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_SHUFFLE_LOCATE,
+            Arc::new(move |envelope: &Envelope| {
+                let req: ShuffleLocateReq = from_bytes(&envelope.body)?;
+                // Only advertise blocks on live (heartbeating) workers: a
+                // location on a dead worker would burn the fetch timeout,
+                // while an incomplete answer sends the reducer through the
+                // lineage-recompute path immediately.
+                let live: HashSet<String> = m
+                    .live_workers()
+                    .into_iter()
+                    .map(|(_, addr)| addr.0)
+                    .collect();
+                let table = m.map_outputs.lock().unwrap();
+                let resp = match table.get(&req.shuffle) {
+                    Some((total, locs)) => {
+                        let mut locations: Vec<(u64, String)> = locs
+                            .iter()
+                            .filter(|(_, a)| live.contains(*a))
+                            .map(|(m, a)| (*m as u64, a.clone()))
+                            .collect();
+                        locations.sort_by_key(|(m, _)| *m);
+                        ShuffleLocateResp { total_maps: *total as u64, locations }
+                    }
+                    None => ShuffleLocateResp { total_maps: 0, locations: Vec::new() },
+                };
+                Ok(Some(to_bytes(&resp)))
             }),
         );
 
@@ -326,11 +384,114 @@ impl Master {
     }
 }
 
+/// [`crate::shuffle::ShuffleNet`] over the cluster RPC plane: map-output
+/// registration and location via the master's table, bucket pulls via the
+/// owning worker's `shuffle.fetch` endpoint.
+pub struct RpcShuffleNet {
+    env: RpcEnv,
+    master: RpcAddress,
+    timeout: Duration,
+}
+
+impl RpcShuffleNet {
+    pub fn new(env: RpcEnv, master: RpcAddress, timeout: Duration) -> Self {
+        RpcShuffleNet { env, master, timeout }
+    }
+}
+
+impl crate::shuffle::ShuffleNet for RpcShuffleNet {
+    fn register(&self, shuffle: u64, map_idx: usize, total_maps: usize) -> Result<()> {
+        let req = ShuffleRegister {
+            shuffle,
+            map_idx: map_idx as u64,
+            total_maps: total_maps as u64,
+            addr: self.env.address().0.clone(),
+        };
+        // Ask (not send): registration must be in the master's table
+        // before this map task is reported done, or a remote reduce task
+        // could race locate() past it.
+        self.env.ask(&self.master, EP_SHUFFLE_REGISTER, to_bytes(&req), self.timeout)?;
+        Ok(())
+    }
+
+    fn locate(&self, shuffle: u64) -> Result<crate::shuffle::MapOutputs> {
+        let resp = self.env.ask(
+            &self.master,
+            EP_SHUFFLE_LOCATE,
+            to_bytes(&ShuffleLocateReq { shuffle }),
+            self.timeout,
+        )?;
+        let resp: ShuffleLocateResp = from_bytes(&resp)?;
+        Ok(crate::shuffle::MapOutputs {
+            total_maps: resp.total_maps as usize,
+            locations: resp
+                .locations
+                .into_iter()
+                .map(|(m, a)| (m as usize, a))
+                .collect(),
+        })
+    }
+
+    fn fetch(&self, addr: &str, shuffle: u64, map_idx: usize, reduce_idx: usize) -> Result<Vec<u8>> {
+        let req = ShuffleFetchReq {
+            shuffle,
+            map_idx: map_idx as u64,
+            reduce_idx: reduce_idx as u64,
+        };
+        let resp = self.env.ask(
+            &RpcAddress(addr.to_string()),
+            EP_SHUFFLE_FETCH,
+            to_bytes(&req),
+            self.timeout,
+        )?;
+        let resp: ShuffleFetchResp = from_bytes(&resp)?;
+        resp.bytes.ok_or_else(|| {
+            IgniteError::Storage(format!(
+                "worker {addr} no longer holds bucket ({shuffle}, {map_idx}, {reduce_idx})"
+            ))
+        })
+    }
+
+    fn local_addr(&self) -> String {
+        self.env.address().0.clone()
+    }
+}
+
+/// Install the worker half of the shuffle plane on an RPC env: serve
+/// locally-held buckets on [`EP_SHUFFLE_FETCH`] and wire the engine's
+/// shuffle manager to the master's map-output table.
+pub fn install_shuffle_service(
+    env: &RpcEnv,
+    master: RpcAddress,
+    engine: &Arc<crate::scheduler::Engine>,
+    timeout: Duration,
+) {
+    let serve = engine.clone();
+    env.register(
+        EP_SHUFFLE_FETCH,
+        Arc::new(move |envelope: &Envelope| {
+            let req: ShuffleFetchReq = from_bytes(&envelope.body)?;
+            let bytes = serve
+                .shuffle
+                .local_bucket_bytes(req.shuffle, req.map_idx as usize, req.reduce_idx as usize)
+                .map(|b| (*b).clone());
+            metrics::global().counter("cluster.shuffle.fetches.served").inc();
+            Ok(Some(to_bytes(&ShuffleFetchResp { bytes })))
+        }),
+    );
+    engine
+        .shuffle
+        .set_net(Arc::new(RpcShuffleNet::new(env.clone(), master, timeout)));
+}
+
 /// A worker process (or in-process worker for tests).
 pub struct Worker {
     pub worker_id: u64,
     env: RpcEnv,
     transport: Arc<ClusterTransport>,
+    /// The worker's local execution engine; its shuffle manager is wired
+    /// into the cluster shuffle plane (spill + remote fetch).
+    engine: Arc<crate::scheduler::Engine>,
     stop: Arc<AtomicBool>,
 }
 
@@ -354,11 +515,23 @@ impl Worker {
         )?;
         let RegisterResp { worker_id } = from_bytes(&resp)?;
 
+        // The worker's engine: shuffle buckets land here (memory within
+        // the budget, spilled to disk past it) and are served to remote
+        // reduce tasks over `shuffle.fetch`.
+        let engine = crate::scheduler::Engine::new(conf.clone())?;
+        install_shuffle_service(
+            &env,
+            master_addr.clone(),
+            &engine,
+            conf.get_duration_ms("ignite.shuffle.fetch.timeout.ms")?,
+        );
+
         let stop = Arc::new(AtomicBool::new(false));
         let worker = Arc::new(Worker {
             worker_id,
             env: env.clone(),
             transport: transport.clone(),
+            engine,
             stop: stop.clone(),
         });
 
@@ -503,6 +676,11 @@ impl Worker {
 
     pub fn transport(&self) -> &Arc<ClusterTransport> {
         &self.transport
+    }
+
+    /// This worker's execution engine (cluster-wired shuffle manager).
+    pub fn engine(&self) -> &Arc<crate::scheduler::Engine> {
+        &self.engine
     }
 
     /// Simulate a crash: stop heartbeats and drop the RPC env.

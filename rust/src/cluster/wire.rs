@@ -129,6 +129,118 @@ impl Decode for TaskResult {
     }
 }
 
+/// Worker → master: a completed map output of a shuffle lives here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShuffleRegister {
+    pub shuffle: u64,
+    pub map_idx: u64,
+    pub total_maps: u64,
+    /// The worker's RPC address serving `shuffle.fetch` for this block.
+    pub addr: String,
+}
+
+impl Encode for ShuffleRegister {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.shuffle.encode(buf);
+        self.map_idx.encode(buf);
+        self.total_maps.encode(buf);
+        self.addr.encode(buf);
+    }
+}
+impl Decode for ShuffleRegister {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ShuffleRegister {
+            shuffle: u64::decode(r)?,
+            map_idx: u64::decode(r)?,
+            total_maps: u64::decode(r)?,
+            addr: String::decode(r)?,
+        })
+    }
+}
+
+/// Worker → master: where do the map outputs of `shuffle` live?
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShuffleLocateReq {
+    pub shuffle: u64,
+}
+
+impl Encode for ShuffleLocateReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.shuffle.encode(buf);
+    }
+}
+impl Decode for ShuffleLocateReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ShuffleLocateReq { shuffle: u64::decode(r)? })
+    }
+}
+
+/// Master → worker: the map-output table for one shuffle (possibly still
+/// incomplete — the caller checks `locations.len()` against `total_maps`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShuffleLocateResp {
+    pub total_maps: u64,
+    pub locations: Vec<(u64, String)>,
+}
+
+impl Encode for ShuffleLocateResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.total_maps.encode(buf);
+        self.locations.encode(buf);
+    }
+}
+impl Decode for ShuffleLocateResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ShuffleLocateResp {
+            total_maps: u64::decode(r)?,
+            locations: Vec::<(u64, String)>::decode(r)?,
+        })
+    }
+}
+
+/// Reduce task → remote worker: pull one shuffle bucket by block id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShuffleFetchReq {
+    pub shuffle: u64,
+    pub map_idx: u64,
+    pub reduce_idx: u64,
+}
+
+impl Encode for ShuffleFetchReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.shuffle.encode(buf);
+        self.map_idx.encode(buf);
+        self.reduce_idx.encode(buf);
+    }
+}
+impl Decode for ShuffleFetchReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ShuffleFetchReq {
+            shuffle: u64::decode(r)?,
+            map_idx: u64::decode(r)?,
+            reduce_idx: u64::decode(r)?,
+        })
+    }
+}
+
+/// Remote worker → reduce task: the bucket's encoded bytes, or `None`
+/// when the worker no longer holds the block (triggers recompute).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShuffleFetchResp {
+    pub bytes: Option<Vec<u8>>,
+}
+
+impl Encode for ShuffleFetchResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.bytes.encode(buf);
+    }
+}
+impl Decode for ShuffleFetchResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ShuffleFetchResp { bytes: Option::<Vec<u8>>::decode(r)? })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +271,34 @@ mod tests {
             let tr = TaskResult { job_id: 1, rank: 7, ok, value, error };
             let back: TaskResult = from_bytes(&to_bytes(&tr)).unwrap();
             assert_eq!(back, tr);
+        }
+    }
+
+    #[test]
+    fn shuffle_plane_messages_round_trip() {
+        let reg = ShuffleRegister {
+            shuffle: 9,
+            map_idx: 2,
+            total_maps: 4,
+            addr: "127.0.0.1:4000".into(),
+        };
+        assert_eq!(from_bytes::<ShuffleRegister>(&to_bytes(&reg)).unwrap(), reg);
+
+        let req = ShuffleLocateReq { shuffle: 9 };
+        assert_eq!(from_bytes::<ShuffleLocateReq>(&to_bytes(&req)).unwrap(), req);
+
+        let resp = ShuffleLocateResp {
+            total_maps: 4,
+            locations: vec![(0, "127.0.0.1:1".into()), (2, "127.0.0.1:2".into())],
+        };
+        assert_eq!(from_bytes::<ShuffleLocateResp>(&to_bytes(&resp)).unwrap(), resp);
+
+        let fetch = ShuffleFetchReq { shuffle: 9, map_idx: 1, reduce_idx: 3 };
+        assert_eq!(from_bytes::<ShuffleFetchReq>(&to_bytes(&fetch)).unwrap(), fetch);
+
+        for bytes in [None, Some(vec![1u8, 2, 3])] {
+            let resp = ShuffleFetchResp { bytes };
+            assert_eq!(from_bytes::<ShuffleFetchResp>(&to_bytes(&resp)).unwrap(), resp);
         }
     }
 

@@ -28,6 +28,8 @@ pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
     ("ignite.rpc.connect.timeout.ms", "2000", "TCP connect timeout"),
     ("ignite.rpc.frame.max", "67108864", "Max RPC frame size (bytes)"),
     ("ignite.shuffle.partitions", "8", "Default reduce-side partition count"),
+    ("ignite.shuffle.memory.bytes", "67108864", "In-memory shuffle bucket budget; overflow spills to disk"),
+    ("ignite.shuffle.fetch.timeout.ms", "5000", "Remote shuffle.fetch RPC timeout"),
     ("ignite.storage.memory.max", "268435456", "Block store budget (bytes)"),
     ("ignite.storage.spill.dir", "/tmp/mpignite-spill", "Spill directory"),
     ("ignite.artifacts.dir", "artifacts", "AOT HLO artifact directory"),

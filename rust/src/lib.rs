@@ -20,6 +20,36 @@
 //!    to HLO text at build time and executed from Rust via PJRT
 //!    ([`runtime`]); Python is never on the request path.
 //!
+//! ## Shuffle architecture (memory → disk → remote)
+//!
+//! Shuffle buckets are **byte-oriented and tiered** ([`shuffle`]): map
+//! tasks encode each reduce-side bucket through the [`ser`] codec and
+//! register it with the engine's [`shuffle::ShuffleManager`], which
+//!
+//! 1. holds encoded buckets **in memory** while the
+//!    `ignite.shuffle.memory.bytes` budget allows (the [`scheduler::Engine`]
+//!    owns the budget),
+//! 2. **spills** over-budget buckets to the engine's per-instance
+//!    [`storage::DiskStore`], keyed by `(shuffle, map, reduce)`, with
+//!    transparent read-back, and
+//! 3. in cluster mode **fetches remote buckets** over the worker-hosted
+//!    `shuffle.fetch` RPC endpoint, locating them through the master's
+//!    map-output table ([`cluster`]).
+//!
+//! Reduce tasks read through one API —
+//! [`shuffle::ShuffleManager::fetch_bucket`] — regardless of tier, and
+//! partition assignment uses a fixed-seed [`shuffle::StableHasher`] so
+//! every process in a cluster buckets keys identically. Lost outputs
+//! (any tier) are recomputed from lineage and re-registered through the
+//! same put path. The whole pipeline is instrumented in [`metrics`]
+//! (`shuffle.bytes.spilled`, `shuffle.fetch.latency`,
+//! `shuffle.merge.passes`, ...); `rust/benches/bench_shuffle.rs` compares
+//! the three tiers' read throughput.
+//!
+//! Key config: `ignite.shuffle.memory.bytes` (in-memory bucket budget;
+//! `0` forces all-spill), `ignite.shuffle.fetch.timeout.ms` (remote
+//! fetch RPC timeout), `ignite.storage.spill.dir` (spill directory).
+//!
 //! ## Quickstart (Listing 1 of the paper)
 //!
 //! ```

@@ -14,6 +14,7 @@ pub use nodes::*;
 
 use crate::error::Result;
 use crate::scheduler::{Engine, StageSpec};
+use crate::ser::{Decode, Encode};
 use crate::shuffle::HashPartitioner;
 use std::collections::HashSet;
 use std::hash::Hash;
@@ -274,6 +275,25 @@ where
     K: Data + Hash + Eq,
     V: Data,
 {
+    /// Map values, keeping keys (no shuffle).
+    pub fn map_values<U: Data, F: Fn(V) -> U + Send + Sync + 'static>(&self, f: F) -> Rdd<(K, U)> {
+        self.map(move |(k, v)| (k, f(v)))
+    }
+
+    /// Collect as a hash map (action).
+    pub fn collect_map(&self) -> Result<std::collections::HashMap<K, V>> {
+        Ok(self.collect()?.into_iter().collect())
+    }
+}
+
+// Shuffle-backed pair ops. Since the byte-oriented shuffle pipeline
+// (buckets travel through the `ser` codec so they can spill to disk and
+// cross the network), keys and values must be `Encode + Decode`.
+impl<K, V> Rdd<(K, V)>
+where
+    K: Data + Hash + Eq + Encode + Decode,
+    V: Data + Encode + Decode,
+{
     /// Shuffle + combine values per key (Spark `reduceByKey`). Cuts a
     /// stage boundary: map tasks bucket by key hash, reduce tasks merge.
     pub fn reduce_by_key<F: Fn(V, V) -> V + Send + Sync + 'static>(
@@ -301,30 +321,20 @@ where
         })
     }
 
-    /// Map values, keeping keys (no shuffle).
-    pub fn map_values<U: Data, F: Fn(V) -> U + Send + Sync + 'static>(&self, f: F) -> Rdd<(K, U)> {
-        self.map(move |(k, v)| (k, f(v)))
-    }
-
     /// Count elements per key.
     pub fn count_by_key(&self, num_partitions: usize) -> Rdd<(K, usize)> {
         self.map(|(k, _)| (k, 1usize)).reduce_by_key(num_partitions, |a, b| a + b)
-    }
-
-    /// Collect as a hash map (action).
-    pub fn collect_map(&self) -> Result<std::collections::HashMap<K, V>> {
-        Ok(self.collect()?.into_iter().collect())
     }
 }
 
 impl<K, V> Rdd<(K, V)>
 where
-    K: Data + Hash + Eq,
-    V: Data,
+    K: Data + Hash + Eq + Encode + Decode,
+    V: Data + Encode + Decode,
 {
     /// Group this RDD with another by key (Spark `cogroup`): for every
     /// key present in either side, the pair of value lists.
-    pub fn cogroup<W: Data>(
+    pub fn cogroup<W: Data + Encode + Decode>(
         &self,
         other: &Rdd<(K, W)>,
         num_partitions: usize,
@@ -340,7 +350,11 @@ where
 
     /// Inner join by key (Spark `join`): the cross product of both sides'
     /// values per shared key.
-    pub fn join<W: Data>(&self, other: &Rdd<(K, W)>, num_partitions: usize) -> Rdd<(K, (V, W))> {
+    pub fn join<W: Data + Encode + Decode>(
+        &self,
+        other: &Rdd<(K, W)>,
+        num_partitions: usize,
+    ) -> Rdd<(K, (V, W))> {
         self.cogroup(other, num_partitions).flat_map(|(k, (vs, ws))| {
             let mut out = Vec::with_capacity(vs.len() * ws.len());
             for v in &vs {
@@ -353,7 +367,7 @@ where
     }
 }
 
-impl<T: Data + Hash + Eq> Rdd<T> {
+impl<T: Data + Hash + Eq + Encode + Decode> Rdd<T> {
     /// Remove duplicates (shuffles).
     pub fn distinct(&self, num_partitions: usize) -> Rdd<T> {
         self.map(|t| (t, ()))

@@ -6,6 +6,7 @@ use super::{Data, RddNode};
 use crate::error::Result;
 use crate::rng::Xoshiro256;
 use crate::scheduler::{Engine, StageSpec};
+use crate::ser::{Decode, Encode};
 use crate::shuffle::HashPartitioner;
 use std::collections::{HashMap, HashSet};
 use std::hash::Hash;
@@ -269,12 +270,16 @@ impl<T: Data> RddNode<T> for CacheNode<T> {
 }
 
 /// Shuffle boundary: `reduce_by_key`. The map side buckets parent
-/// partitions by key hash with map-side combining; the reduce side merges
-/// every map's bucket for its partition.
+/// partitions by key hash with map-side combining and registers each
+/// bucket as **encoded bytes** with the shuffle manager (which may hold
+/// them in memory, spill them to disk, or serve them to remote workers);
+/// the reduce side merges every map's bucket for its partition through
+/// the one tier-transparent `fetch_bucket` API, one external merge pass
+/// per map output.
 pub struct ShuffledNode<K, V>
 where
-    K: Data + Hash + Eq,
-    V: Data,
+    K: Data + Hash + Eq + Encode + Decode,
+    V: Data + Encode + Decode,
 {
     pub id: u64,
     pub shuffle_id: u64,
@@ -285,8 +290,8 @@ where
 
 impl<K, V> RddNode<(K, V)> for ShuffledNode<K, V>
 where
-    K: Data + Hash + Eq,
-    V: Data,
+    K: Data + Hash + Eq + Encode + Decode,
+    V: Data + Encode + Decode,
 {
     fn id(&self) -> u64 {
         self.id
@@ -297,7 +302,9 @@ where
     }
 
     fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<(K, V)>> {
-        // Reduce side: merge this partition's bucket from every map task.
+        // Reduce side: merge this partition's bucket from every map task,
+        // decoding one bucket at a time (memory, spilled, or remote) so
+        // at most one encoded bucket is resident per merge pass.
         let n_maps = engine.shuffle.map_count(self.shuffle_id).ok_or_else(|| {
             crate::error::IgniteError::Storage(format!(
                 "shuffle {} not materialized (stage skipped?)",
@@ -306,14 +313,16 @@ where
         })?;
         let mut merged: HashMap<K, V> = HashMap::new();
         for map_idx in 0..n_maps {
-            let bucket = engine.shuffle.get_bucket::<(K, V)>(self.shuffle_id, map_idx, part)?;
-            for (k, v) in bucket.iter() {
-                match merged.remove(k) {
+            let bucket: Vec<(K, V)> =
+                engine.shuffle.fetch_bucket(self.shuffle_id, map_idx, part)?;
+            crate::metrics::global().counter("shuffle.merge.passes").inc();
+            for (k, v) in bucket {
+                match merged.remove(&k) {
                     Some(acc) => {
-                        merged.insert(k.clone(), (self.agg)(acc, v.clone()));
+                        merged.insert(k, (self.agg)(acc, v));
                     }
                     None => {
-                        merged.insert(k.clone(), v.clone());
+                        merged.insert(k, v);
                     }
                 }
             }
@@ -359,8 +368,7 @@ where
                         bucket.into_iter().collect::<Vec<(K, V)>>(),
                     );
                 }
-                engine.shuffle.map_done(shuffle_id, map_idx, num_maps);
-                Ok(())
+                engine.shuffle.map_done(shuffle_id, map_idx, num_maps)
             }),
         });
     }

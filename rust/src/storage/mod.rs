@@ -170,17 +170,18 @@ impl Drop for DiskStore {
 }
 
 /// Unified front: typed blocks in memory, byte blocks in memory with disk
-/// overflow.
+/// overflow. The disk tier is shared (`Arc`) so the shuffle manager can
+/// spill into the same per-instance directory.
 pub struct BlockManager {
     pub memory: MemoryStore,
-    pub disk: DiskStore,
+    pub disk: Arc<DiskStore>,
 }
 
 impl BlockManager {
     pub fn new(memory_budget: usize, spill_dir: &str) -> Result<Self> {
         Ok(BlockManager {
             memory: MemoryStore::new(memory_budget),
-            disk: DiskStore::new(spill_dir)?,
+            disk: Arc::new(DiskStore::new(spill_dir)?),
         })
     }
 

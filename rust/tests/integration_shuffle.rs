@@ -1,0 +1,179 @@
+//! Integration tests for the tiered shuffle pipeline (PR 1): a
+//! cluster-mode `reduce_by_key` whose reduce tasks pull buckets from a
+//! *different worker* over the `shuffle.fetch` RPC endpoint, and a local
+//! job with the memory budget forced to zero so every bucket spills to
+//! the `DiskStore` and is read back — both compared against the pure
+//! in-memory path.
+
+use mpignite::cluster::{Master, Worker};
+use mpignite::config::IgniteConf;
+use mpignite::rdd::{ParallelCollectionNode, RddNode, ShuffledNode};
+use mpignite::shuffle::HashPartitioner;
+use mpignite::IgniteContext;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn conf() -> IgniteConf {
+    let mut c = IgniteConf::new();
+    c.set("ignite.worker.heartbeat.ms", "50");
+    c.set("ignite.worker.timeout.ms", "2000");
+    c
+}
+
+/// The wordcount corpus used by the cluster test, pre-split into four map
+/// partitions.
+fn corpus() -> Vec<Vec<(String, u64)>> {
+    let parts: [&[&str]; 4] = [
+        &["apple", "pear", "apple", "plum"],
+        &["pear", "pear", "kiwi"],
+        &["apple", "plum", "plum", "kiwi", "apple"],
+        &["kiwi", "apple", "fig"],
+    ];
+    parts
+        .iter()
+        .map(|words| words.iter().map(|w| (w.to_string(), 1u64)).collect())
+        .collect()
+}
+
+fn oracle(parts: &[Vec<(String, u64)>]) -> HashMap<String, u64> {
+    let mut out = HashMap::new();
+    for part in parts {
+        for (w, n) in part {
+            *out.entry(w.clone()).or_insert(0) += n;
+        }
+    }
+    out
+}
+
+/// Identical reduce_by_key lineage built against a given engine's data.
+/// Ids are pinned so two workers agree on the shuffle identity, the way a
+/// driver shipping one DAG to every worker would.
+fn wordcount_node(shuffle_id: u64) -> ShuffledNode<String, u64> {
+    ShuffledNode {
+        id: shuffle_id + 1,
+        shuffle_id,
+        parent: Arc::new(ParallelCollectionNode {
+            id: shuffle_id + 2,
+            partitions: Arc::new(corpus()),
+        }),
+        partitioner: HashPartitioner::new(2),
+        agg: Arc::new(|a, b| a + b),
+    }
+}
+
+#[test]
+fn cluster_reduce_fetches_buckets_from_remote_worker() {
+    let c = conf();
+    let master = Master::start(&c, 0).unwrap();
+    let worker_a = Worker::start(&c, master.address()).unwrap();
+    let worker_b = Worker::start(&c, master.address()).unwrap();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    // One shuffle id shared by both workers (a driver would ship it).
+    let shuffle_id = 0xB00C_0001;
+    let node_a = wordcount_node(shuffle_id);
+    let node_b = wordcount_node(shuffle_id);
+
+    // Extract the map stage from lineage on each worker and run a subset
+    // of its tasks there: maps 0,1 on worker A; maps 2,3 on worker B.
+    let mut stages_a = Vec::new();
+    node_a.stage_deps(&mut stages_a, &mut HashSet::new());
+    let mut stages_b = Vec::new();
+    node_b.stage_deps(&mut stages_b, &mut HashSet::new());
+    assert_eq!(stages_a.len(), 1);
+    for map_idx in [0usize, 1] {
+        (stages_a[0].run_task)(map_idx, worker_a.engine()).unwrap();
+    }
+    for map_idx in [2usize, 3] {
+        (stages_b[0].run_task)(map_idx, worker_b.engine()).unwrap();
+    }
+
+    // Worker B only ran maps 2,3 locally; completion must resolve
+    // through the master's map-output table.
+    assert!(!worker_b.engine().shuffle.is_complete(shuffle_id));
+    assert_eq!(worker_b.engine().shuffle.map_count(shuffle_id), Some(4));
+
+    // Reduce both partitions on worker B: buckets of maps 0 and 1 are
+    // only on worker A and must arrive via the shuffle.fetch endpoint.
+    let fetches_before = mpignite::metrics::global().counter("shuffle.remote.fetches").get();
+    let served_before =
+        mpignite::metrics::global().counter("cluster.shuffle.fetches.served").get();
+    let mut merged: HashMap<String, u64> = HashMap::new();
+    for part in 0..2 {
+        for (k, v) in node_b.compute(part, worker_b.engine()).unwrap() {
+            assert!(merged.insert(k, v).is_none(), "keys are disjoint across partitions");
+        }
+    }
+    let fetched =
+        mpignite::metrics::global().counter("shuffle.remote.fetches").get() - fetches_before;
+    let served =
+        mpignite::metrics::global().counter("cluster.shuffle.fetches.served").get() - served_before;
+    assert!(fetched >= 2, "maps 0,1 x 2 partitions should fetch remotely, got {fetched}");
+    assert!(served >= 2, "worker A must have served the fetched buckets, got {served}");
+
+    assert_eq!(merged, oracle(&corpus()), "distributed result matches the sequential oracle");
+
+    // Cross-check against the pure in-memory single-process path.
+    let sc = IgniteContext::local(4);
+    let local = sc
+        .parallelize_with(corpus().into_iter().flatten().collect(), 4)
+        .reduce_by_key(2, |a, b| a + b)
+        .collect_map()
+        .unwrap();
+    assert_eq!(merged, local, "remote-fetch result identical to in-memory path");
+
+    master.shutdown();
+}
+
+#[test]
+fn zero_budget_job_spills_every_bucket_and_matches_in_memory() {
+    let pairs: Vec<(i64, i64)> = (0..500).map(|x| (x % 13, x)).collect();
+
+    // Reference: effectively-unbounded budget, nothing spills.
+    let mut mem_conf = IgniteConf::new();
+    mem_conf.set("ignite.shuffle.memory.bytes", usize::MAX.to_string());
+    let sc_mem = IgniteContext::with_conf(mem_conf).unwrap();
+    let want = sc_mem
+        .parallelize_with(pairs.clone(), 8)
+        .reduce_by_key(4, |a, b| a + b)
+        .collect_map()
+        .unwrap();
+    assert_eq!(sc_mem.engine().shuffle.spilled_count(), 0, "unbounded budget never spills");
+
+    // Forced spill: budget 0 pushes every bucket through the DiskStore.
+    let mut spill_conf = IgniteConf::new();
+    spill_conf.set("ignite.shuffle.memory.bytes", "0");
+    let sc_spill = IgniteContext::with_conf(spill_conf).unwrap();
+    let got = sc_spill
+        .parallelize_with(pairs, 8)
+        .reduce_by_key(4, |a, b| a + b)
+        .collect_map()
+        .unwrap();
+    assert!(
+        sc_spill.engine().shuffle.spilled_count() > 0,
+        "budget 0 must spill buckets to disk"
+    );
+    assert_eq!(sc_spill.engine().shuffle.mem_used(), 0, "no bucket bytes resident in memory");
+
+    assert_eq!(got, want, "all-spilled result identical to in-memory path");
+}
+
+#[test]
+fn spilled_shuffle_survives_map_output_loss_via_lineage() {
+    // Lose one map task's (spilled) output mid-lineage; the scheduler's
+    // recompute path must re-register the spilled blocks transparently.
+    let mut c = IgniteConf::new();
+    c.set("ignite.shuffle.memory.bytes", "0");
+    let sc = IgniteContext::with_conf(c).unwrap();
+    let rdd = sc
+        .parallelize_with((0..200i64).collect(), 4)
+        .map(|x| (x % 10, x))
+        .reduce_by_key(4, |a, b| a + b);
+    let before = rdd.collect_map().unwrap();
+    for shuffle_id in 0..10_000u64 {
+        sc.engine().shuffle.lose_map_output(shuffle_id, 0);
+    }
+    let after = rdd.collect_map().unwrap();
+    assert_eq!(before, after, "recomputed spilled shuffle matches");
+}

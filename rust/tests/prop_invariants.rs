@@ -9,6 +9,7 @@
 //! * the hash partitioner is a total, stable assignment.
 
 use mpignite::comm::{run_local_world, Mailbox, Message, Pattern};
+use mpignite::config::IgniteConf;
 use mpignite::rng::Xoshiro256;
 use mpignite::ser::{from_bytes, to_bytes, Value};
 use mpignite::shuffle::HashPartitioner;
@@ -305,6 +306,50 @@ fn prop_reduce_by_key_equals_hashmap_oracle() {
             Ok(())
         } else {
             Err(format!("{got:?} vs {want:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_reduce_by_key_identical_across_spill_budgets() {
+    // The tiered shuffle pipeline must be invisible to results: budget 0
+    // (every bucket spills to disk), the default budget, and usize::MAX
+    // (nothing ever spills) all produce the same reduce_by_key output.
+    let gen = VecGen { inner: IntGen { lo: 0, hi: 400 }, max_len: 120 };
+    check(cfg(8), &gen, |data| {
+        let pairs: Vec<(i64, i64)> = data.iter().map(|&x| (x % 11, x)).collect();
+        let budgets =
+            ["0".to_string(), "67108864".to_string(), usize::MAX.to_string()];
+        let mut results = Vec::new();
+        for budget in &budgets {
+            let mut conf = IgniteConf::new();
+            conf.set("ignite.worker.slots", "4");
+            conf.set("ignite.shuffle.memory.bytes", budget.clone());
+            let sc = IgniteContext::with_conf(conf).map_err(|e| e.to_string())?;
+            let got = sc
+                .parallelize_with(pairs.clone(), 5)
+                .reduce_by_key(3, |a, b| a + b)
+                .collect_map()
+                .map_err(|e| e.to_string())?;
+            if budget == "0" && !pairs.is_empty() {
+                if sc.engine().shuffle.spilled_count() == 0 {
+                    return Err("budget 0 did not spill".into());
+                }
+            }
+            if budget == &usize::MAX.to_string()
+                && sc.engine().shuffle.spilled_count() != 0
+            {
+                return Err("unbounded budget spilled".into());
+            }
+            results.push(got);
+        }
+        if results[0] == results[1] && results[1] == results[2] {
+            Ok(())
+        } else {
+            Err(format!(
+                "spill tiers diverged: all-spill {:?} vs default {:?} vs in-memory {:?}",
+                results[0], results[1], results[2]
+            ))
         }
     });
 }

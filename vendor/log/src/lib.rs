@@ -1,0 +1,288 @@
+//! Minimal in-tree implementation of the `log` facade.
+//!
+//! The build environment for this repository has no crates.io access, so
+//! this vendor crate re-implements the subset of `log` 0.4 the engine
+//! uses: the five severity macros (with and without `target:`), the
+//! [`Log`] trait, [`set_logger`] / [`set_max_level`], and the
+//! [`Level`] / [`LevelFilter`] enums with the cross-type comparisons the
+//! standard facade provides.
+
+use std::fmt;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+
+/// Logging severity, most severe first (matches `log` 0.4 ordering:
+/// `Error < Warn < ... < Trace` so "more verbose" compares greater).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// A level filter: `Off` plus every [`Level`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    fn as_usize(self) -> usize {
+        self as usize
+    }
+}
+
+impl LevelFilter {
+    fn as_usize(self) -> usize {
+        self as usize
+    }
+
+    fn from_usize(v: usize) -> LevelFilter {
+        match v {
+            0 => LevelFilter::Off,
+            1 => LevelFilter::Error,
+            2 => LevelFilter::Warn,
+            3 => LevelFilter::Info,
+            4 => LevelFilter::Debug,
+            _ => LevelFilter::Trace,
+        }
+    }
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        self.as_usize() == other.as_usize()
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        self.as_usize().partial_cmp(&other.as_usize())
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        self.as_usize() == other.as_usize()
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        self.as_usize().partial_cmp(&other.as_usize())
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Metadata about a log record (level + target).
+#[derive(Debug, Clone)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record, handed to [`Log::log`].
+#[derive(Debug, Clone)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+}
+
+/// A logging backend.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool;
+    fn log(&self, record: &Record<'_>);
+    fn flush(&self);
+}
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+static LOGGER: AtomicPtr<&'static dyn Log> = AtomicPtr::new(std::ptr::null_mut());
+
+/// Install the global logger (first caller wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    // Double-box so the atomic stores a thin pointer to the fat one.
+    let boxed: Box<&'static dyn Log> = Box::new(logger);
+    let raw = Box::into_raw(boxed);
+    match LOGGER.compare_exchange(
+        std::ptr::null_mut(),
+        raw,
+        Ordering::SeqCst,
+        Ordering::SeqCst,
+    ) {
+        Ok(_) => Ok(()),
+        Err(_) => {
+            // Lost the race: reclaim our box, report failure.
+            unsafe { drop(Box::from_raw(raw)) };
+            Err(SetLoggerError(()))
+        }
+    }
+}
+
+/// Set the most-verbose level that reaches the logger.
+pub fn set_max_level(level: LevelFilter) {
+    MAX_LEVEL.store(level.as_usize(), Ordering::SeqCst);
+}
+
+/// The currently configured maximum level.
+pub fn max_level() -> LevelFilter {
+    LevelFilter::from_usize(MAX_LEVEL.load(Ordering::SeqCst))
+}
+
+/// Macro plumbing: dispatch one record to the installed logger.
+#[doc(hidden)]
+pub fn __private_api_log(args: fmt::Arguments<'_>, level: Level, target: &str) {
+    let ptr = LOGGER.load(Ordering::SeqCst);
+    if ptr.is_null() {
+        return;
+    }
+    let logger: &'static dyn Log = unsafe { *ptr };
+    let metadata = Metadata { level, target };
+    if logger.enabled(&metadata) {
+        logger.log(&Record { metadata, args });
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    (target: $target:expr, $lvl:expr, $($arg:tt)+) => {{
+        let lvl = $lvl;
+        if lvl <= $crate::max_level() {
+            $crate::__private_api_log(format_args!($($arg)+), lvl, $target);
+        }
+    }};
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::log!(target: module_path!(), $lvl, $($arg)+)
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    (target: $target:expr, $($arg:tt)+) => { $crate::log!(target: $target, $crate::Level::Error, $($arg)+) };
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    (target: $target:expr, $($arg:tt)+) => { $crate::log!(target: $target, $crate::Level::Warn, $($arg)+) };
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    (target: $target:expr, $($arg:tt)+) => { $crate::log!(target: $target, $crate::Level::Info, $($arg)+) };
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    (target: $target:expr, $($arg:tt)+) => { $crate::log!(target: $target, $crate::Level::Debug, $($arg)+) };
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    (target: $target:expr, $($arg:tt)+) => { $crate::log!(target: $target, $crate::Level::Trace, $($arg)+) };
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    struct CountingLogger {
+        hits: AtomicUsize,
+    }
+
+    impl Log for CountingLogger {
+        fn enabled(&self, metadata: &Metadata<'_>) -> bool {
+            metadata.level() <= LevelFilter::Info
+        }
+
+        fn log(&self, record: &Record<'_>) {
+            if self.enabled(record.metadata()) {
+                self.hits.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn level_filter_comparisons() {
+        assert!(Level::Error <= LevelFilter::Warn);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(LevelFilter::Trace >= Level::Trace);
+        assert_eq!(Level::Info, LevelFilter::Info);
+    }
+
+    #[test]
+    fn macros_respect_max_level() {
+        let logger = Box::leak(Box::new(CountingLogger { hits: AtomicUsize::new(0) }));
+        let _ = set_logger(logger);
+        set_max_level(LevelFilter::Info);
+        info!(target: "t", "counted {}", 1);
+        debug!(target: "t", "not counted");
+        // The global logger may have been installed by another test first;
+        // just assert the macro path doesn't panic and filtering compiles.
+        let _ = max_level();
+    }
+}

@@ -1,0 +1,55 @@
+//! Minimal in-tree `once_cell` replacement for the offline vendor set:
+//! just `sync::Lazy`, backed by `std::sync::OnceLock`. The initializer is
+//! restricted to `Fn` (not `FnOnce`) — every use in this repository is a
+//! capture-free closure or function pointer, so the restriction is free.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        /// Force initialization and return the value.
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(&this.init)
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        static GLOBAL: Lazy<Vec<u32>> = Lazy::new(|| vec![1, 2, 3]);
+
+        #[test]
+        fn lazy_initializes_once() {
+            assert_eq!(GLOBAL.len(), 3);
+            assert_eq!(GLOBAL[0], 1);
+        }
+
+        #[test]
+        fn lazy_with_closure() {
+            let l: Lazy<u64> = Lazy::new(|| 40 + 2);
+            assert_eq!(*l, 42);
+        }
+    }
+}
