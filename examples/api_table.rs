@@ -13,8 +13,8 @@ fn main() -> Result<()> {
 
     // Exercise every method in the table on a 4-rank world.
     let checks = run_local_world(4, |comm: &SparkComm| {
-        let rank = comm.get_rank(); // MPI_Comm_rank
-        let size = comm.get_size(); // MPI_Comm_size
+        let rank = comm.rank(); // MPI_Comm_rank
+        let size = comm.size(); // MPI_Comm_size
         assert_eq!(size, 4);
 
         // MPI_Send / MPI_Recv
@@ -34,7 +34,7 @@ fn main() -> Result<()> {
         }
         // MPI_Comm_split
         let sub = comm.split((rank % 2) as i64, rank as i64)?;
-        assert_eq!(sub.get_size(), 2);
+        assert_eq!(sub.size(), 2);
         // MPI_Bcast
         let b = comm.broadcast(0, if rank == 0 { Some(9i64) } else { None })?;
         assert_eq!(b, 9);
@@ -84,8 +84,8 @@ fn main() -> Result<()> {
         ("comm.receive::<T>(sender, tag) -> T", "MPI_Recv", "paper"),
         ("comm.receive_async::<T>(sender, tag) -> CommFuture<T>", "MPI_Irecv", "paper"),
         ("future.wait() -> T", "MPI_Wait", "paper"),
-        ("comm.get_rank()", "MPI_Comm_rank", "paper"),
-        ("comm.get_size()", "MPI_Comm_size", "paper"),
+        ("comm.rank()", "MPI_Comm_rank", "paper"),
+        ("comm.size()", "MPI_Comm_size", "paper"),
         ("comm.split(color, key) -> SparkComm", "MPI_Comm_split", "paper"),
         ("comm.broadcast::<T>(root, data) -> T", "MPI_Bcast", "paper"),
         ("comm.all_reduce::<T>(data, f) -> T", "MPI_Allreduce", "paper"),

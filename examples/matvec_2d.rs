@@ -17,19 +17,19 @@ use mpignite::runtime::{shared_service, TensorF32};
 /// Phase 1 — the listing verbatim: A[i][j] = worldRank+1, x = [1,2,3].
 fn listing4_scalar(sc: &IgniteContext) -> Result<Vec<i64>> {
     sc.parallelize_func(|world: &SparkComm| {
-        let world_rank = world.get_rank();
+        let world_rank = world.rank();
         let row = world.split((world_rank / 3) as i64, world_rank as i64).expect("split row");
         let col = world.split((world_rank % 3) as i64, world_rank as i64).expect("split col");
         let a = (world_rank + 1) as i64;
-        let row_rank = row.get_rank();
-        let col_rank = col.get_rank();
+        let row_rank = row.rank();
+        let col_rank = col.rank();
 
         // Distribute the vector to the diagonal from the last column.
-        if row_rank == row.get_size() - 1 {
-            row.send(col.get_rank(), 0, 1 + col.get_rank() as i64).expect("send x_j");
+        if row_rank == row.size() - 1 {
+            row.send(col.rank(), 0, 1 + col.rank() as i64).expect("send x_j");
         }
         let x_row = if row_rank == col_rank {
-            Some(row.receive::<i64>((row.get_size() - 1) as i64, 0).expect("receive x_j"))
+            Some(row.receive::<i64>((row.size() - 1) as i64, 0).expect("receive x_j"))
         } else {
             None
         };
@@ -56,7 +56,7 @@ fn blocked_with_xla(sc: &IgniteContext) -> Result<Option<Vec<f32>>> {
     const B: usize = 4; // tile edge; grid is 3x3 tiles → 12x12 matrix
     let results = sc
         .parallelize_func(move |world: &SparkComm| {
-            let world_rank = world.get_rank();
+            let world_rank = world.rank();
             let (ti, tj) = (world_rank / 3, world_rank % 3);
             let row = world.split(ti as i64, world_rank as i64).expect("split row");
             let col = world.split(tj as i64, world_rank as i64).expect("split col");
@@ -69,14 +69,14 @@ fn blocked_with_xla(sc: &IgniteContext) -> Result<Option<Vec<f32>>> {
                 })
                 .collect();
             // x segment owned by the diagonal of column tj: x_j = j+1.
-            let col_rank = col.get_rank();
-            let row_rank = row.get_rank();
-            if row_rank == row.get_size() - 1 {
+            let col_rank = col.rank();
+            let row_rank = row.rank();
+            if row_rank == row.size() - 1 {
                 let seg: Vec<f32> = (0..B).map(|v| (4 * col_rank + v + 1) as f32).collect();
                 row.send(col_rank, 0, seg).expect("send x seg");
             }
             let x_seg = if row_rank == col_rank {
-                Some(row.receive::<Vec<f32>>((row.get_size() - 1) as i64, 0).expect("recv"))
+                Some(row.receive::<Vec<f32>>((row.size() - 1) as i64, 0).expect("recv"))
             } else {
                 None
             };

@@ -15,7 +15,7 @@ static CALLBACKS_FIRED: AtomicUsize = AtomicUsize::new(0);
 
 fn even_or_odd(sc: &IgniteContext) -> Result<Vec<Option<bool>>> {
     sc.parallelize_func(|world: &SparkComm| {
-        let (size, rank) = (world.get_size(), world.get_rank());
+        let (size, rank) = (world.size(), world.rank());
         let half = size / 2;
         if rank < half {
             world.send(rank + half, 0, rank as i64).expect("send");

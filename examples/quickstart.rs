@@ -20,7 +20,7 @@ fn main() -> Result<()> {
 
     let res: i64 = sc
         .parallelize_func(move |world: &SparkComm| {
-            let rank = world.get_rank();
+            let rank = world.rank();
             if rank < mat.len() {
                 mat[rank].iter().zip(&vec_).map(|(a, b)| a * b).sum()
             } else {

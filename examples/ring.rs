@@ -8,8 +8,8 @@ use mpignite::prelude::*;
 /// The `ring` function from Listing 2, "defined explicitly before
 /// parallelizing it".
 fn ring(world: &SparkComm) -> i64 {
-    let rank = world.get_rank();
-    let size = world.get_size();
+    let rank = world.rank();
+    let size = world.size();
     let token;
     if rank == 0 {
         token = 42;

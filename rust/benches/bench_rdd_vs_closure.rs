@@ -6,9 +6,16 @@
 //! are within a small constant of each other for compute-bound work —
 //! the closure model's overhead is rank/world setup, the RDD model's is
 //! scheduler bookkeeping.
+//!
+//! The `plan_ir_decoded` lane tracks the serializable plan IR's
+//! interpretation overhead: the same matvec expressed as a `PlanSpec`
+//! (named dot-product op + built-in `SumF64`), freshly decoded from its
+//! wire encoding each iteration — i.e. exactly what a worker executing a
+//! shipped stage pays, minus the network.
 
 use mpignite::bench::{black_box, BenchSuite, Throughput};
 use mpignite::prelude::*;
+use mpignite::ser::from_bytes;
 use std::sync::Arc;
 
 const ROWS: usize = 128;
@@ -65,6 +72,31 @@ fn main() {
                 .execute(4)
                 .unwrap();
             black_box(partials[0]);
+        });
+    }
+
+    // --- plan IR: decoded-plan execution on the same workload ----------
+    {
+        let x_dot = x.clone();
+        register_op("bench.dot", move |v| match v {
+            Value::F64Vec(row) => {
+                Ok(Value::F64(row.iter().zip(x_dot.iter()).map(|(a, b)| a * b).sum()))
+            }
+            other => Err(IgniteError::Invalid(format!(
+                "bench.dot wants f64vec, got {}",
+                other.type_name()
+            ))),
+        });
+        let sc_plan = IgniteContext::local(4);
+        let rows: Vec<Value> = mat.iter().map(|row| Value::F64Vec(row.clone())).collect();
+        let plan_bytes = sc_plan
+            .parallelize_values_with(rows, 4)
+            .map_named("bench.dot")
+            .encoded();
+        suite.bench_throughput("plan_ir_decoded", Throughput::Items(ROWS as u64), move || {
+            let decoded: PlanSpec = from_bytes(&plan_bytes).unwrap();
+            let total = sc_plan.plan_rdd(decoded).sum_f64().unwrap();
+            black_box(total);
         });
     }
 

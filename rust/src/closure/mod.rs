@@ -122,12 +122,25 @@ impl<R: Send + 'static> ExecHandle<R> {
 /// Signature of a registered (cluster-executable) parallel function.
 pub type NamedParallelFn = Arc<dyn Fn(&SparkComm, &Value) -> Result<Value> + Send + Sync>;
 
-/// Global registry of named parallel functions. Worker binaries register
-/// the same names as the driver (both link the same application crate),
-/// which is how cluster mode replaces closure serialization.
+/// Signature of a registered plan operator: one [`Value`] in, one out.
+/// The calling convention depends on the [`crate::rdd::OpSpec`] variant
+/// that names the op: map ops return the mapped element, filter ops
+/// return `Value::Bool`, flat-map ops return `Value::List` of outputs,
+/// partition ops receive and return `Value::List` of the whole partition,
+/// and aggregation ops receive `Value::List([a, b])` and return the
+/// combined value.
+pub type NamedOpFn = Arc<dyn Fn(Value) -> Result<Value> + Send + Sync>;
+
+/// Global registry of named parallel functions and plan operators.
+/// Worker binaries register the same names as the driver (both link the
+/// same application crate), which is how cluster mode replaces closure
+/// serialization — for whole parallel sections (`register_parallel_fn`)
+/// and for the per-element operators referenced by a shipped
+/// [`crate::rdd::PlanSpec`] (`register_op`).
 #[derive(Default)]
 pub struct FuncRegistry {
     fns: Mutex<HashMap<String, NamedParallelFn>>,
+    ops: Mutex<HashMap<String, NamedOpFn>>,
 }
 
 impl FuncRegistry {
@@ -149,6 +162,28 @@ impl FuncRegistry {
         names.sort();
         names
     }
+
+    /// Register a named plan operator (driver + workers must agree).
+    pub fn register_op(&self, name: &str, f: NamedOpFn) {
+        self.ops.lock().unwrap().insert(name.to_string(), f);
+    }
+
+    /// Resolve a named plan operator; the error names the missing op so a
+    /// worker lacking the application library fails loudly.
+    pub fn get_op(&self, name: &str) -> Result<NamedOpFn> {
+        self.ops
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| IgniteError::Invalid(format!("no registered plan op '{name}'")))
+    }
+
+    pub fn op_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.ops.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
 }
 
 static REGISTRY: Lazy<FuncRegistry> = Lazy::new(FuncRegistry::default);
@@ -164,6 +199,14 @@ pub fn register_parallel_fn(
     f: impl Fn(&SparkComm, &Value) -> Result<Value> + Send + Sync + 'static,
 ) {
     registry().register(name, Arc::new(f));
+}
+
+/// Register a named plan operator (driver + workers must agree). This is
+/// what makes a [`crate::rdd::PlanSpec`] node like `MapNamed { name }`
+/// executable on a remote worker: the plan ships the *name*, the worker
+/// resolves the function from its own registry.
+pub fn register_op(name: &str, f: impl Fn(Value) -> Result<Value> + Send + Sync + 'static) {
+    registry().register_op(name, Arc::new(f));
 }
 
 #[cfg(test)]
@@ -232,6 +275,19 @@ mod tests {
         let rdd = FuncRdd::new(local_factory(), Arc::new(|c: &SparkComm| c.size()));
         assert_eq!(rdd.execute(2).unwrap(), vec![2, 2]);
         assert_eq!(rdd.clone().execute(5).unwrap(), vec![5; 5]);
+    }
+
+    #[test]
+    fn op_registry_round_trip() {
+        register_op("test.op.double", |v| match v {
+            Value::I64(x) => Ok(Value::I64(x.wrapping_mul(2))),
+            other => Err(IgniteError::Invalid(format!("want i64, got {}", other.type_name()))),
+        });
+        let f = registry().get_op("test.op.double").unwrap();
+        assert_eq!(f(Value::I64(21)).unwrap(), Value::I64(42));
+        assert!(f(Value::Str("x".into())).is_err());
+        assert!(registry().get_op("test.op.ghost").is_err());
+        assert!(registry().op_names().contains(&"test.op.double".to_string()));
     }
 
     #[test]

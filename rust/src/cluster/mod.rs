@@ -25,6 +25,7 @@ use crate::config::IgniteConf;
 use crate::error::{IgniteError, Result};
 use crate::fault::HeartbeatMonitor;
 use crate::metrics;
+use crate::rdd::{run_shuffle_map_task, PlanSpec};
 use crate::rpc::{Envelope, RpcAddress, RpcEnv};
 use crate::ser::{from_bytes, to_bytes, Value};
 use log::{info, warn};
@@ -50,6 +51,16 @@ pub const EP_LAUNCH: &str = "worker.launch";
 /// Worker shuffle service: serves locally-held (in-memory or spilled)
 /// shuffle buckets to remote reduce tasks by block id.
 pub const EP_SHUFFLE_FETCH: &str = "shuffle.fetch";
+/// Worker stage execution: the driver ships an encoded plan stage plus a
+/// task-index assignment; the worker acks, runs the tasks on its local
+/// engine, and reports the batch through [`EP_PLAN_RESULT`].
+pub const EP_TASK_RUN: &str = "task.run";
+/// Worker → master: a `task.run` batch finished (rows for result stages).
+pub const EP_PLAN_RESULT: &str = "master.plan_result";
+/// Map-output GC, registered on *both* envs: the driver asks the master
+/// to prune finished shuffles from its location table; the master fans
+/// the same message out to live workers, which drop their local buckets.
+pub const EP_SHUFFLE_CLEAR: &str = "shuffle.clear";
 
 struct WorkerInfo {
     addr: RpcAddress,
@@ -64,6 +75,19 @@ struct JobState {
     wake_lock: Mutex<()>,
 }
 
+/// Driver-side state of one in-flight plan stage: per-task result slots
+/// plus a countdown of outstanding worker batches. A failure keeps the
+/// worker-side recoverability classification (the typed error does not
+/// survive the wire) so the driver can decide between retrying the stage
+/// on survivors and failing the job.
+struct PlanJobState {
+    results: Mutex<Vec<Option<Vec<Value>>>>,
+    remaining: AtomicU64,
+    error: Mutex<Option<(String, bool)>>,
+    wake: Condvar,
+    wake_lock: Mutex<()>,
+}
+
 /// The embedded cluster master.
 pub struct Master {
     env: RpcEnv,
@@ -72,6 +96,7 @@ pub struct Master {
     monitor: HeartbeatMonitor,
     rank_table: RankTable,
     jobs: Mutex<HashMap<u64, Arc<JobState>>>,
+    plan_jobs: Mutex<HashMap<u64, Arc<PlanJobState>>>,
     next_worker: AtomicU64,
     next_job: AtomicU64,
     /// Serializes jobs: the prototype runs one parallel execution at a
@@ -94,6 +119,7 @@ impl Master {
             monitor: HeartbeatMonitor::new(conf.get_duration_ms("ignite.worker.timeout.ms")?),
             rank_table,
             jobs: Mutex::new(HashMap::new()),
+            plan_jobs: Mutex::new(HashMap::new()),
             next_worker: AtomicU64::new(1),
             next_job: AtomicU64::new(1),
             job_serial: Mutex::new(()),
@@ -195,6 +221,60 @@ impl Master {
                     None => ShuffleLocateResp { total_maps: 0, locations: Vec::new() },
                 };
                 Ok(Some(to_bytes(&resp)))
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_PLAN_RESULT,
+            Arc::new(move |envelope: &Envelope| {
+                let pr: PlanTaskResult = from_bytes(&envelope.body)?;
+                let job = m.plan_jobs.lock().unwrap().get(&pr.job_id).cloned();
+                if let Some(job) = job {
+                    if pr.ok {
+                        let mut slots = job.results.lock().unwrap();
+                        for (idx, rows) in pr.results {
+                            let idx = idx as usize;
+                            if idx < slots.len() && slots[idx].is_none() {
+                                slots[idx] = Some(rows);
+                            }
+                        }
+                    } else {
+                        let mut err = job.error.lock().unwrap();
+                        if err.is_none() {
+                            *err = Some((
+                                format!("worker {}: {}", pr.worker_id, pr.error),
+                                pr.recoverable,
+                            ));
+                        }
+                    }
+                    job.remaining.fetch_sub(1, Ordering::SeqCst);
+                    let _g = job.wake_lock.lock().unwrap();
+                    job.wake.notify_all();
+                }
+                Ok(None)
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_SHUFFLE_CLEAR,
+            Arc::new(move |envelope: &Envelope| {
+                let req: ShuffleClear = from_bytes(&envelope.body)?;
+                {
+                    let mut table = m.map_outputs.lock().unwrap();
+                    for id in &req.shuffles {
+                        table.remove(id);
+                    }
+                }
+                metrics::global().counter("cluster.shuffle.clears").inc();
+                // Fan out to live workers so their local buckets (memory
+                // and spilled tiers) are dropped too; one-way, best-effort.
+                let body = to_bytes(&req);
+                for (_, addr) in m.live_workers() {
+                    let _ = m.env.send(&addr, EP_SHUFFLE_CLEAR, body.clone());
+                }
+                Ok(Some(Vec::new())) // ack
             }),
         );
 
@@ -378,6 +458,212 @@ impl Master {
             .collect()
     }
 
+    /// Execute a serializable [`PlanSpec`] across the cluster and return
+    /// the final partitions' rows, in partition order.
+    ///
+    /// This is the distributed half of the plan IR: the driver cuts the
+    /// plan at shuffle boundaries exactly like the local scheduler, then
+    /// for each map stage — and finally for the result stage — ships the
+    /// encoded plan plus a round-robin task assignment to every live
+    /// worker over the `task.run` RPC. Workers decode, resolve named ops
+    /// from their registry, and run their share on their local engine:
+    /// map tasks register buckets + completion with the shuffle plane
+    /// (visible cluster-wide through the master's map-output table),
+    /// result tasks compute partitions whose reduce-side reads pull
+    /// remote buckets through `shuffle.fetch`. On completion the driver
+    /// piggybacks a `shuffle.clear` so the map-output table and the
+    /// workers' buckets for this job's shuffles are pruned.
+    pub fn run_plan(&self, plan: &PlanSpec) -> Result<Vec<Vec<Value>>> {
+        let _serial = self.job_serial.lock().unwrap();
+        metrics::global().counter("cluster.plans.launched").inc();
+        let plan_bytes = to_bytes(plan);
+        let stages = plan.shuffle_stages();
+        let shuffles = plan.shuffle_ids();
+
+        // Recoverable failures (worker lost, timeout, worker-reported
+        // recoverable errors) retry the WHOLE job — not just the failing
+        // stage — because a worker lost after its map stage completed
+        // takes its registered map outputs with it, and only re-running
+        // the map stages on the survivors regenerates them. Safe because
+        // bucket registration and result slots are idempotent, and
+        // workers' stale locate caches self-heal on fetch failure.
+        let budget = self.conf.get_usize("ignite.task.retries").unwrap_or(3).max(1);
+        let mut last_err = None;
+        let mut outcome = None;
+        for attempt in 0..budget {
+            match self.try_plan_job(&plan_bytes, &stages, plan.num_partitions()) {
+                Ok(parts) => {
+                    outcome = Some(Ok(parts));
+                    break;
+                }
+                Err(e) if e.is_recoverable() && attempt + 1 < budget => {
+                    warn!(target: "cluster", "plan job failed ({e}); retrying on survivors");
+                    metrics::global().counter("cluster.plan.jobs.retried").inc();
+                    last_err = Some(e);
+                }
+                Err(e) => {
+                    outcome = Some(Err(e));
+                    break;
+                }
+            }
+        }
+        let outcome = outcome.unwrap_or_else(|| {
+            Err(last_err
+                .unwrap_or_else(|| IgniteError::Task("plan job retries exhausted".into())))
+        });
+
+        // GC on success AND failure: a failed job's already-registered map
+        // outputs would otherwise sit in the master's table and the
+        // workers' bucket tiers forever. Driver-issued RPC so remote
+        // drivers exercise the same path as an embedded one.
+        if !shuffles.is_empty() {
+            if let Err(e) = self.env.ask(
+                &self.env.address(),
+                EP_SHUFFLE_CLEAR,
+                to_bytes(&ShuffleClear { shuffles }),
+                Duration::from_secs(5),
+            ) {
+                warn!(target: "cluster", "shuffle.clear after plan job failed: {e}");
+            }
+        }
+        outcome
+    }
+
+    /// One attempt at a full plan job: every map stage in lineage order,
+    /// then the result stage.
+    fn try_plan_job(
+        &self,
+        plan_bytes: &[u8],
+        stages: &[(u64, usize)],
+        num_result_tasks: usize,
+    ) -> Result<Vec<Vec<Value>>> {
+        for (shuffle_id, num_maps) in stages {
+            info!(target: "cluster", "plan map stage shuffle {shuffle_id} ({num_maps} tasks)");
+            self.try_plan_stage(plan_bytes, Some(*shuffle_id), *num_maps)?;
+        }
+        self.try_plan_stage(plan_bytes, None, num_result_tasks)
+    }
+
+    fn try_plan_stage(
+        &self,
+        plan_bytes: &[u8],
+        shuffle_id: Option<u64>,
+        num_tasks: usize,
+    ) -> Result<Vec<Vec<Value>>> {
+        if num_tasks == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = self.live_workers();
+        if workers.is_empty() {
+            return Err(IgniteError::Invalid("no live workers".into()));
+        }
+        let job_id = self.next_job.fetch_add(1, Ordering::SeqCst);
+
+        // Round-robin task placement, batched per worker.
+        let mut assignment: HashMap<u64, (RpcAddress, Vec<u64>)> = HashMap::new();
+        for task in 0..num_tasks {
+            let (wid, addr) = &workers[task % workers.len()];
+            assignment
+                .entry(*wid)
+                .or_insert_with(|| (addr.clone(), Vec::new()))
+                .1
+                .push(task as u64);
+        }
+        let assigned_workers: Vec<u64> = assignment.keys().copied().collect();
+
+        let job = Arc::new(PlanJobState {
+            results: Mutex::new((0..num_tasks).map(|_| None).collect()),
+            remaining: AtomicU64::new(assignment.len() as u64),
+            error: Mutex::new(None),
+            wake: Condvar::new(),
+            wake_lock: Mutex::new(()),
+        });
+        self.plan_jobs.lock().unwrap().insert(job_id, job.clone());
+
+        let launch_timeout = Duration::from_secs(5);
+        for (wid, (addr, tasks)) in &assignment {
+            let req = PlanTaskReq {
+                job_id,
+                plan: plan_bytes.to_vec(),
+                shuffle_id,
+                tasks: tasks.clone(),
+            };
+            if let Err(e) = self.env.ask(addr, EP_TASK_RUN, to_bytes(&req), launch_timeout) {
+                self.plan_jobs.lock().unwrap().remove(&job_id);
+                return Err(IgniteError::WorkerLost {
+                    worker: *wid,
+                    reason: format!("task.run launch failed: {e}"),
+                });
+            }
+        }
+
+        let stage_timeout = self
+            .conf
+            .get_duration_ms("ignite.task.run.timeout.ms")
+            .unwrap_or(Duration::from_secs(30));
+        let deadline = std::time::Instant::now() + stage_timeout;
+        let outcome = loop {
+            // Sample `remaining` BEFORE checking the error flag: a failing
+            // batch sets the error and then decrements, so observing
+            // remaining==0 here guarantees any failure is already visible
+            // at the error check below — checking remaining first and
+            // breaking Ok on it directly would mask a failure reported by
+            // the last batch and declare the stage successful with missing
+            // outputs.
+            let all_reported = job.remaining.load(Ordering::SeqCst) == 0;
+            if let Some((msg, recoverable)) = job.error.lock().unwrap().clone() {
+                break Err(if recoverable {
+                    // Typed errors don't survive the wire; Rpc carries the
+                    // worker's recoverable classification into
+                    // `is_recoverable()` so the stage retries on survivors.
+                    IgniteError::Rpc(msg)
+                } else {
+                    IgniteError::Task(msg)
+                });
+            }
+            if all_reported {
+                break Ok(());
+            }
+            let lost = self.monitor.lost_workers();
+            if let Some(&w) = lost.iter().find(|w| assigned_workers.contains(w)) {
+                break Err(IgniteError::WorkerLost {
+                    worker: w,
+                    reason: "heartbeat timeout mid-stage".into(),
+                });
+            }
+            if std::time::Instant::now() > deadline {
+                break Err(IgniteError::Timeout(format!(
+                    "plan job {job_id}: stage incomplete after {stage_timeout:?}"
+                )));
+            }
+            let g = job.wake_lock.lock().unwrap();
+            let _ = job.wake.wait_timeout(g, Duration::from_millis(20)).unwrap();
+        };
+        self.plan_jobs.lock().unwrap().remove(&job_id);
+        outcome?;
+
+        if shuffle_id.is_some() {
+            // Map stage: output lives in the shuffle plane, not here.
+            return Ok(Vec::new());
+        }
+        let mut slots = job.results.lock().unwrap();
+        slots
+            .iter_mut()
+            .enumerate()
+            .map(|(part, slot)| {
+                slot.take().ok_or_else(|| {
+                    IgniteError::Task(format!("plan job {job_id}: partition {part} missing"))
+                })
+            })
+            .collect()
+    }
+
+    /// Number of shuffles currently tracked by the map-output table
+    /// (post-job GC leaves this at zero; see `shuffle.clear`).
+    pub fn shuffle_table_len(&self) -> usize {
+        self.map_outputs.lock().unwrap().len()
+    }
+
     /// Shut the master down.
     pub fn shutdown(&self) {
         self.env.shutdown();
@@ -484,6 +770,56 @@ pub fn install_shuffle_service(
         .set_net(Arc::new(RpcShuffleNet::new(env.clone(), master, timeout)));
 }
 
+/// The metric name of one worker's task-execution counter (how many
+/// shipped plan-stage tasks it has run). Per-worker so tests — and
+/// operators — can assert *where* tasks ran, not just that they ran.
+pub fn worker_task_counter(worker_id: u64) -> String {
+    format!("cluster.worker.{worker_id}.tasks.executed")
+}
+
+/// Worker half of `task.run`: decode the plan, run the assigned task
+/// indices through the local engine's pool, and return `(task, rows)`
+/// pairs for result stages (map stages write to the shuffle plane and
+/// return no rows).
+fn run_plan_tasks(
+    engine: &Arc<crate::scheduler::Engine>,
+    worker_id: u64,
+    req: &PlanTaskReq,
+) -> Result<Vec<(u64, Vec<Value>)>> {
+    let plan: PlanSpec = from_bytes(&req.plan)?;
+    let plan = Arc::new(plan);
+    let indices: Vec<usize> = req.tasks.iter().map(|&t| t as usize).collect();
+    let collected: Arc<Mutex<HashMap<usize, Vec<Value>>>> = Arc::new(Mutex::new(HashMap::new()));
+    let shuffle_id = req.shuffle_id;
+    {
+        let plan = plan.clone();
+        let engine2 = engine.clone();
+        let collected = collected.clone();
+        engine.run_task_indices(req.job_id, indices, move |task_idx| {
+            metrics::global().counter("cluster.tasks.executed").inc();
+            metrics::global().counter(&worker_task_counter(worker_id)).inc();
+            match shuffle_id {
+                Some(sid) => run_shuffle_map_task(&plan, sid, task_idx, &engine2),
+                None => {
+                    let rows = plan.compute(task_idx, &engine2)?;
+                    let mut slots = collected.lock().unwrap();
+                    // First finisher wins (a retried attempt is benign).
+                    slots.entry(task_idx).or_insert(rows);
+                    Ok(())
+                }
+            }
+        })?;
+    }
+    let mut out: Vec<(u64, Vec<Value>)> = collected
+        .lock()
+        .unwrap()
+        .drain()
+        .map(|(task, rows)| (task as u64, rows))
+        .collect();
+    out.sort_by_key(|(task, _)| *task);
+    Ok(out)
+}
+
 /// A worker process (or in-process worker for tests).
 pub struct Worker {
     pub worker_id: u64,
@@ -525,6 +861,69 @@ impl Worker {
             &engine,
             conf.get_duration_ms("ignite.shuffle.fetch.timeout.ms")?,
         );
+
+        // Stage execution endpoint: decode the shipped plan, run the
+        // assigned tasks on this worker's engine (pool, retries,
+        // speculation), report the batch back asynchronously. The handler
+        // itself only spawns — RPC handlers must never block, and stage
+        // tasks call back into the master (shuffle.register / locate)
+        // over the very connection this handler runs on.
+        {
+            let engine = engine.clone();
+            let env2 = env.clone();
+            let master = master_addr.clone();
+            env.register(
+                EP_TASK_RUN,
+                Arc::new(move |envelope: &Envelope| {
+                    let req: PlanTaskReq = from_bytes(&envelope.body)?;
+                    let engine = engine.clone();
+                    let env3 = env2.clone();
+                    let master = master.clone();
+                    std::thread::Builder::new()
+                        .name(format!("plan-job{}-w{worker_id}", req.job_id))
+                        .spawn(move || {
+                            let outcome = run_plan_tasks(&engine, worker_id, &req);
+                            let msg = match outcome {
+                                Ok(results) => PlanTaskResult {
+                                    job_id: req.job_id,
+                                    worker_id,
+                                    ok: true,
+                                    error: String::new(),
+                                    recoverable: false,
+                                    results,
+                                },
+                                Err(e) => PlanTaskResult {
+                                    job_id: req.job_id,
+                                    worker_id,
+                                    ok: false,
+                                    error: e.to_string(),
+                                    recoverable: e.is_recoverable(),
+                                    results: Vec::new(),
+                                },
+                            };
+                            let _ = env3.send(&master, EP_PLAN_RESULT, to_bytes(&msg));
+                        })
+                        .expect("spawn plan task batch");
+                    Ok(Some(Vec::new())) // launch ack
+                }),
+            );
+        }
+
+        // Map-output GC: the master relays the driver's `shuffle.clear`
+        // here so finished shuffles free this worker's memory/disk tiers.
+        {
+            let engine = engine.clone();
+            env.register(
+                EP_SHUFFLE_CLEAR,
+                Arc::new(move |envelope: &Envelope| {
+                    let req: ShuffleClear = from_bytes(&envelope.body)?;
+                    for id in req.shuffles {
+                        engine.shuffle.clear_shuffle(id);
+                    }
+                    Ok(None)
+                }),
+            );
+        }
 
         let stop = Arc::new(AtomicBool::new(false));
         let worker = Arc::new(Worker {
@@ -681,6 +1080,12 @@ impl Worker {
     /// This worker's execution engine (cluster-wired shuffle manager).
     pub fn engine(&self) -> &Arc<crate::scheduler::Engine> {
         &self.engine
+    }
+
+    /// How many shipped plan-stage tasks this worker has executed
+    /// (reads its [`worker_task_counter`] metric).
+    pub fn tasks_executed(&self) -> u64 {
+        metrics::global().counter(&worker_task_counter(self.worker_id)).get()
     }
 
     /// Simulate a crash: stop heartbeats and drop the RPC env.

@@ -241,6 +241,101 @@ impl Decode for ShuffleFetchResp {
     }
 }
 
+/// Master → worker (`task.run`): run a batch of stage tasks of a shipped
+/// plan. `plan` is the canonical encoding of the whole
+/// [`crate::rdd::PlanSpec`]; `shuffle_id` selects which stage to run —
+/// `Some(id)` means "run map tasks of that shuffle node", `None` means
+/// "compute final partitions and return their rows". `tasks` are the
+/// global partition indices assigned to this worker. The handler acks
+/// immediately and executes asynchronously, reporting through
+/// [`PlanTaskResult`] (the launch/result split every long-running worker
+/// endpoint uses, because RPC handlers must not block).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanTaskReq {
+    pub job_id: u64,
+    pub plan: Vec<u8>,
+    pub shuffle_id: Option<u64>,
+    pub tasks: Vec<u64>,
+}
+
+impl Encode for PlanTaskReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.job_id.encode(buf);
+        self.plan.encode(buf);
+        self.shuffle_id.encode(buf);
+        self.tasks.encode(buf);
+    }
+}
+impl Decode for PlanTaskReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(PlanTaskReq {
+            job_id: u64::decode(r)?,
+            plan: Vec::<u8>::decode(r)?,
+            shuffle_id: Option::<u64>::decode(r)?,
+            tasks: Vec::<u64>::decode(r)?,
+        })
+    }
+}
+
+/// Worker → master (`master.plan_result`): one worker's whole `task.run`
+/// batch finished. `results` carries `(task index, rows)` pairs for
+/// result stages and is empty for map stages (whose output went into the
+/// shuffle plane instead). `recoverable` classifies a failure on the
+/// worker side (where the typed error still exists): `true` means the
+/// driver may re-run the stage on the surviving workers, `false` means a
+/// deterministic task failure that retrying cannot fix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanTaskResult {
+    pub job_id: u64,
+    pub worker_id: u64,
+    pub ok: bool,
+    pub error: String,
+    pub recoverable: bool,
+    pub results: Vec<(u64, Vec<Value>)>,
+}
+
+impl Encode for PlanTaskResult {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.job_id.encode(buf);
+        self.worker_id.encode(buf);
+        self.ok.encode(buf);
+        self.error.encode(buf);
+        self.recoverable.encode(buf);
+        self.results.encode(buf);
+    }
+}
+impl Decode for PlanTaskResult {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(PlanTaskResult {
+            job_id: u64::decode(r)?,
+            worker_id: u64::decode(r)?,
+            ok: bool::decode(r)?,
+            error: String::decode(r)?,
+            recoverable: bool::decode(r)?,
+            results: Vec::<(u64, Vec<Value>)>::decode(r)?,
+        })
+    }
+}
+
+/// Driver → master and master → workers (`shuffle.clear`): the shuffles
+/// of a finished job — prune the master's map-output table and drop the
+/// workers' local buckets so long-lived clusters don't grow unboundedly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShuffleClear {
+    pub shuffles: Vec<u64>,
+}
+
+impl Encode for ShuffleClear {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.shuffles.encode(buf);
+    }
+}
+impl Decode for ShuffleClear {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ShuffleClear { shuffles: Vec::<u64>::decode(r)? })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +395,40 @@ mod tests {
             let resp = ShuffleFetchResp { bytes };
             assert_eq!(from_bytes::<ShuffleFetchResp>(&to_bytes(&resp)).unwrap(), resp);
         }
+    }
+
+    #[test]
+    fn plan_task_messages_round_trip() {
+        for shuffle_id in [None, Some(77u64)] {
+            let req = PlanTaskReq {
+                job_id: 5,
+                plan: vec![1, 2, 3, 4],
+                shuffle_id,
+                tasks: vec![0, 2, 5],
+            };
+            assert_eq!(from_bytes::<PlanTaskReq>(&to_bytes(&req)).unwrap(), req);
+        }
+        let ok = PlanTaskResult {
+            job_id: 5,
+            worker_id: 2,
+            ok: true,
+            error: String::new(),
+            recoverable: false,
+            results: vec![(0, vec![Value::I64(1)]), (2, Vec::new())],
+        };
+        assert_eq!(from_bytes::<PlanTaskResult>(&to_bytes(&ok)).unwrap(), ok);
+        let failed = PlanTaskResult {
+            job_id: 6,
+            worker_id: 1,
+            ok: false,
+            error: "op not registered".into(),
+            recoverable: true,
+            results: Vec::new(),
+        };
+        assert_eq!(from_bytes::<PlanTaskResult>(&to_bytes(&failed)).unwrap(), failed);
+
+        let clear = ShuffleClear { shuffles: vec![9, 11] };
+        assert_eq!(from_bytes::<ShuffleClear>(&to_bytes(&clear)).unwrap(), clear);
     }
 
     #[test]

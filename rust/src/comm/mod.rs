@@ -15,8 +15,8 @@
 //! | `comm.receive::<T>(sender, tag)`              | `MPI_Recv`         |
 //! | `comm.receive_async::<T>(sender, tag)`        | `MPI_Irecv`        |
 //! | `future.wait()`                               | `MPI_Wait`         |
-//! | `comm.rank()` / `comm.get_rank()`             | `MPI_Comm_rank`    |
-//! | `comm.size()` / `comm.get_size()`             | `MPI_Comm_size`    |
+//! | `comm.rank()`                                 | `MPI_Comm_rank`    |
+//! | `comm.size()`                                 | `MPI_Comm_size`    |
 //! | `comm.split(color, key)`                      | `MPI_Comm_split`   |
 //! | `comm.broadcast::<T>(root, data)`             | `MPI_Bcast`        |
 //! | `comm.all_reduce::<T>(data, f)`               | `MPI_Allreduce`    |
@@ -207,8 +207,9 @@ impl SparkComm {
     }
 
     /// Paper-style alias for [`rank`](Self::rank).
+    #[deprecated(since = "0.2.0", note = "use `rank()`; kept as a paper-style alias only")]
     pub fn get_rank(&self) -> usize {
-        self.my_rank
+        self.rank()
     }
 
     /// Number of ranks in this communicator (paper: `world.getSize`).
@@ -217,8 +218,9 @@ impl SparkComm {
     }
 
     /// Paper-style alias for [`size`](Self::size).
+    #[deprecated(since = "0.2.0", note = "use `size()`; kept as a paper-style alias only")]
     pub fn get_size(&self) -> usize {
-        self.ranks.len()
+        self.size()
     }
 
     /// Context identifier (0 for the world communicator).
@@ -415,6 +417,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // the deprecated aliases must keep working
     fn paper_aliases() {
         let out = run_local_world(2, |comm| Ok((comm.get_rank(), comm.get_size()))).unwrap();
         assert_eq!(out, vec![(0, 2), (1, 2)]);

@@ -18,6 +18,7 @@ pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
     ("ignite.worker.heartbeat.ms", "200", "Worker heartbeat interval"),
     ("ignite.worker.timeout.ms", "2000", "Master marks worker lost after this"),
     ("ignite.task.retries", "3", "Per-task retry budget"),
+    ("ignite.task.run.timeout.ms", "30000", "Distributed plan stage (task.run) deadline"),
     ("ignite.task.speculation", "true", "Re-run straggler tasks elsewhere"),
     ("ignite.task.speculation.multiplier", "4.0", "Straggler = multiplier x median"),
     ("ignite.comm.mode", "p2p", "p2p | relay (paper's two iterations)"),

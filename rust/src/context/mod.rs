@@ -9,7 +9,7 @@ use crate::cluster::Master;
 use crate::comm::{CommWorld, SparkComm};
 use crate::config::{IgniteConf, MasterSpec};
 use crate::error::{IgniteError, Result};
-use crate::rdd::{ParallelCollectionNode, Rdd};
+use crate::rdd::{ParallelCollectionNode, PlanRdd, PlanSpec, Rdd};
 use crate::scheduler::Engine;
 use crate::ser::Value;
 use crate::util::split_ranges;
@@ -106,6 +106,34 @@ impl IgniteContext {
         )
     }
 
+    /// Create a shippable plan source from dynamic [`Value`] rows — the
+    /// plan-IR analogue of [`parallelize`](Self::parallelize). Unlike the
+    /// closure-based [`Rdd`], the resulting [`PlanRdd`]'s lineage encodes
+    /// through the `ser` codec, so in cluster mode its stages execute on
+    /// worker processes instead of the driver.
+    pub fn parallelize_values(&self, rows: Vec<Value>) -> PlanRdd {
+        self.parallelize_values_with(rows, self.default_parallelism)
+    }
+
+    /// Plan source with an explicit partition count.
+    pub fn parallelize_values_with(&self, rows: Vec<Value>, parts: usize) -> PlanRdd {
+        let parts = parts.max(1);
+        let ranges = split_ranges(rows.len(), parts);
+        let mut partitions: Vec<Vec<Value>> = Vec::with_capacity(parts);
+        let mut iter = rows.into_iter();
+        for r in ranges {
+            partitions.push(iter.by_ref().take(r.len()).collect());
+        }
+        self.plan_rdd(PlanSpec::Source { partitions })
+    }
+
+    /// Wrap an existing plan tree (e.g. one decoded from its wire
+    /// encoding) in a handle bound to this context's engine and, in
+    /// cluster mode, its master.
+    pub fn plan_rdd(&self, plan: PlanSpec) -> PlanRdd {
+        PlanRdd::new(plan, self.engine.clone(), self.master.clone())
+    }
+
     /// Create an RDD of lines from a text file.
     pub fn text_file(&self, path: &str) -> Result<Rdd<String>> {
         let text = std::fs::read_to_string(path)
@@ -162,7 +190,7 @@ mod tests {
         let vec_ = vec![1i64, 2, 3];
         let res: i64 = sc
             .parallelize_func(move |world: &SparkComm| {
-                let rank = world.get_rank();
+                let rank = world.rank();
                 if rank < mat.len() {
                     mat[rank].iter().zip(&vec_).map(|(a, b)| a * b).sum()
                 } else {
@@ -261,6 +289,18 @@ mod tests {
         let sc = IgniteContext::local(4);
         let out = sc.execute_named("ctx.test.sum_ranks", 4, Value::I64(100)).unwrap();
         assert_eq!(out, vec![Value::I64(106); 4]);
+    }
+
+    #[test]
+    fn parallelize_values_splits_and_collects() {
+        let sc = IgniteContext::local(4);
+        let rows: Vec<Value> = (0..10i64).map(Value::I64).collect();
+        let plan = sc.parallelize_values(rows.clone());
+        assert_eq!(plan.num_partitions(), 4);
+        assert_eq!(plan.collect().unwrap(), rows);
+        // A decoded copy executes identically through plan_rdd().
+        let decoded: PlanSpec = crate::ser::from_bytes(&plan.encoded()).unwrap();
+        assert_eq!(sc.plan_rdd(decoded).collect().unwrap(), rows);
     }
 
     #[test]

@@ -6,10 +6,11 @@
 //! The crate contains three things:
 //!
 //! 1. **`ignite` engine** — a Spark-like data-parallel engine built from
-//!    scratch: lazy [`rdd::Rdd`] lineage, a DAG scheduler that cuts stages
-//!    at shuffle boundaries ([`scheduler`]), a block manager ([`storage`]),
-//!    and a master/worker cluster runtime over framed TCP ([`rpc`],
-//!    [`cluster`]).
+//!    scratch: lazy [`rdd::Rdd`] lineage, a serializable [`rdd::PlanSpec`]
+//!    operator IR whose stages execute on workers, a DAG scheduler that
+//!    cuts stages at shuffle boundaries ([`scheduler`]), a block manager
+//!    ([`storage`]), and a master/worker cluster runtime over framed TCP
+//!    ([`rpc`], [`cluster`]).
 //! 2. **The paper's contribution** — MPI-style peer and collective
 //!    communication *inside* engine tasks: [`comm::SparkComm`] with ranks,
 //!    tags, blocking/non-blocking receive, communicator `split`, and
@@ -49,6 +50,48 @@
 //! Key config: `ignite.shuffle.memory.bytes` (in-memory bucket budget;
 //! `0` forces all-spill), `ignite.shuffle.fetch.timeout.ms` (remote
 //! fetch RPC timeout), `ignite.storage.spill.dir` (spill directory).
+//!
+//! ## Plan IR: distributed RDD execution
+//!
+//! Lineage comes in two representations:
+//!
+//! * the **closure fast path** — [`rdd::Rdd`]'s `map`/`filter`/
+//!   `reduce_by_key` capture arbitrary Rust closures. Maximally
+//!   expressive, but boxed `Fn`s cannot cross a process boundary, so
+//!   these jobs always run on the driver's local engine (with the tiered
+//!   shuffle plane underneath);
+//! * the **serializable plan IR** — [`rdd::PlanRdd`] builds a
+//!   [`rdd::PlanSpec`] tree over dynamic [`ser::Value`] rows whose nodes
+//!   are built-in operators ([`rdd::OpSpec`]) or *named* operators
+//!   resolved through [`closure::register_op`] (the same named-function
+//!   registry pattern cluster-mode `parallelize_func` uses). The tree
+//!   encodes deterministically through the [`ser`] codec (encode → decode
+//!   → re-encode is byte-identical), so in cluster mode the driver cuts
+//!   stages as usual and ships each stage — encoded plan + task
+//!   assignment — to workers over the `task.run` RPC. Workers decode,
+//!   resolve ops from their registry, run map tasks on their local
+//!   engines (registering map outputs with the master's map-output
+//!   table), and reduce/result tasks pull buckets through `shuffle.fetch`.
+//!   Job completion piggybacks a `shuffle.clear` RPC that prunes the
+//!   master's map-output table and the workers' local buckets.
+//!
+//! Which operations are shippable:
+//!
+//! | operation                                  | shippable? |
+//! |--------------------------------------------|------------|
+//! | `PlanRdd::map_named` / `filter_named` / `flat_map_named` / `map_partitions_named` | yes (named op, resolved on workers) |
+//! | `PlanRdd::key_by_hash`, `sample`, `union`, `count`, `sum_i64`, `sum_f64` | yes (built-in) |
+//! | `PlanRdd::reduce_by_key` (built-in or named [`rdd::AggSpec`]) | yes |
+//! | `Rdd::map` / `filter` / `flat_map` / `reduce_by_key` (closures) | no — driver-local fast path |
+//! | `Rdd::sort_by`, `zip_with_index`, `cache` | no — driver-local |
+//!
+//! Both paths share one interpreter contract, property-tested in
+//! `rust/tests/prop_plan.rs`: a decoded plan executed locally matches the
+//! closure fast path on the same input, and distributed word-count
+//! results match local mode (`rust/tests/integration_plan.rs`).
+//!
+//! Key config: `ignite.task.run.timeout.ms` (distributed stage deadline),
+//! `ignite.task.retries` (stage re-run budget on worker loss).
 //!
 //! ## Quickstart (Listing 1 of the paper)
 //!
@@ -100,11 +143,11 @@ pub use error::{IgniteError, Result};
 
 /// Convenience re-exports for applications and examples.
 pub mod prelude {
-    pub use crate::closure::{register_parallel_fn, FuncRdd};
+    pub use crate::closure::{register_op, register_parallel_fn, FuncRdd};
     pub use crate::comm::{CommFuture, SparkComm, ANY_SOURCE, ANY_TAG};
     pub use crate::config::IgniteConf;
     pub use crate::context::IgniteContext;
     pub use crate::error::{IgniteError, Result};
-    pub use crate::rdd::Rdd;
+    pub use crate::rdd::{AggSpec, OpSpec, PlanRdd, PlanSpec, Rdd};
     pub use crate::ser::{FromValue, IntoValue, Value};
 }

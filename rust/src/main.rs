@@ -140,8 +140,8 @@ pub fn api_table_rows() -> Vec<(&'static str, &'static str)> {
         ("comm.receive::<T>(sender, tag) -> T", "MPI_Recv"),
         ("comm.receive_async::<T>(sender, tag) -> CommFuture<T>", "MPI_Irecv"),
         ("future.wait() -> T", "MPI_Wait"),
-        ("comm.get_rank()", "MPI_Comm_rank"),
-        ("comm.get_size()", "MPI_Comm_size"),
+        ("comm.rank()", "MPI_Comm_rank"),
+        ("comm.size()", "MPI_Comm_size"),
         ("comm.split(color, key) -> SparkComm", "MPI_Comm_split"),
         ("comm.broadcast::<T>(root, data) -> T", "MPI_Bcast"),
         ("comm.all_reduce::<T>(data, f) -> T", "MPI_Allreduce"),

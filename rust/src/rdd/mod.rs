@@ -7,10 +7,20 @@
 //!
 //! Parallel closures ([`crate::closure`]) interoperate with these RDDs in
 //! one application — the paper's central interop claim (§3.2, §5).
+//!
+//! Two lineage representations coexist: the closure-based [`Rdd`] below
+//! (driver-local fast path — boxed `Fn`s cannot cross processes) and the
+//! serializable [`PlanRdd`] / [`PlanSpec`] operator IR, which encodes
+//! through the [`crate::ser`] codec and is what cluster mode ships to
+//! workers for genuinely distributed stage execution.
 
 mod nodes;
+mod plan;
 
 pub use nodes::*;
+pub use plan::{
+    run_shuffle_map_task, stable_value_hash, value_partition, AggSpec, OpSpec, PlanRdd, PlanSpec,
+};
 
 use crate::error::Result;
 use crate::scheduler::{Engine, StageSpec};

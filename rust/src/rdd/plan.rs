@@ -1,0 +1,1036 @@
+//! Serializable operator plans — the wire-encodable half of the lineage
+//! layer.
+//!
+//! The closure-based [`super::Rdd`] API captures opaque `Fn` values that
+//! cannot cross a process boundary, so (before this module) every RDD
+//! task ran on the driver's local engine and only shuffle *blocks* were
+//! distributed. [`PlanSpec`] is the redesign: a lineage tree whose nodes
+//! are either **built-in operators** ([`OpSpec`]: identity, key-by-hash,
+//! count, sums, sample-with-seed, union, shuffle) or **named operators**
+//! resolved through the [`crate::closure::FuncRegistry`]
+//! (`register_op(name, fn)` — the same registry pattern
+//! `parallelize_func`'s cluster mode already uses). The whole tree
+//! encodes/decodes through the [`crate::ser`] codec, deterministically:
+//! encode → decode → re-encode is byte-identical, which is what lets a
+//! driver ship a stage to workers over the `task.run` RPC and lets both
+//! sides agree on shuffle identity.
+//!
+//! Rows of a plan are dynamic [`Value`]s (the same "first-class
+//! serializable object" the comm layer sends). Shuffle boundaries
+//! require pair rows encoded as `Value::List([key, value])`; partition
+//! assignment hashes the *encoded key bytes* through the fixed-seed
+//! [`StableHasher`], so every process — driver or worker, any
+//! architecture — buckets a key identically.
+//!
+//! Execution comes in two flavors sharing one interpreter:
+//!
+//! * **driver-local** ([`PlanRdd::collect_local`]): the plan is cut into
+//!   the same [`StageSpec`]s closure lineage produces and runs on the
+//!   local [`Engine`] — this is the fast path the round-trip property
+//!   tests compare against;
+//! * **distributed** ([`crate::cluster::Master::run_plan`]): each stage's
+//!   encoded plan plus a task-index assignment is shipped to workers via
+//!   the `task.run` RPC; workers decode, resolve named ops from their
+//!   registry, run map tasks on their local engine (registering map
+//!   outputs with the master exactly as the shuffle plane expects) and
+//!   compute result partitions whose reduce-side reads pull buckets
+//!   through the tiered `shuffle.fetch` path.
+//!
+//! Shuffle ids inside a plan are minted by the driver
+//! ([`crate::util::next_id`]) and are authoritative: workers never mint
+//! shuffle ids for shipped plans, they reuse the ones in the tree.
+
+use crate::closure::registry;
+use crate::error::{IgniteError, Result};
+use crate::metrics;
+use crate::rng::Xoshiro256;
+use crate::scheduler::{Engine, StageSpec};
+use crate::ser::{to_bytes, Decode, Encode, Reader, Value};
+use crate::shuffle::StableHasher;
+use std::collections::{HashMap, HashSet};
+use std::hash::Hasher;
+use std::sync::Arc;
+
+// ------------------------------------------------------------- hashing --
+
+/// Stable 64-bit hash of a [`Value`]: the fixed-seed [`StableHasher`] over
+/// the value's canonical encoding. Cross-process stable by construction
+/// (the codec is deterministic and endian-pinned).
+pub fn stable_value_hash(v: &Value) -> u64 {
+    let mut h = StableHasher::new();
+    h.write(&to_bytes(v));
+    h.finish()
+}
+
+/// Reduce partition for an already-encoded shuffle key. THE partition
+/// function of the plan shuffle plane: map-side bucketing routes through
+/// here, so any other participant (tests, future locality-aware
+/// scheduling) must too — two implementations drifting apart would
+/// silently misroute buckets cross-process.
+pub fn partition_for_key_bytes(key_bytes: &[u8], partitions: usize) -> usize {
+    let mut h = StableHasher::new();
+    h.write(key_bytes);
+    (h.finish() % partitions.max(1) as u64) as usize
+}
+
+/// Reduce partition for a shuffle key (encodes, then
+/// [`partition_for_key_bytes`]).
+pub fn value_partition(key: &Value, partitions: usize) -> usize {
+    partition_for_key_bytes(&to_bytes(key), partitions)
+}
+
+/// Fold one `(key, value)` pair into a merge map keyed by the encoded key
+/// bytes (`Value` has no `Eq`/`Hash` — f64 — but its canonical encoding
+/// does). THE combine step of the plan shuffle plane, shared by map-side
+/// combining and reduce-side merging so the former stays a pure
+/// optimization of the latter; requires `agg` to be associative and
+/// commutative.
+fn merge_pair(
+    map: &mut HashMap<Vec<u8>, (Value, Value)>,
+    key_bytes: Vec<u8>,
+    key: Value,
+    value: Value,
+    agg: &AggSpec,
+) -> Result<()> {
+    match map.remove(&key_bytes) {
+        Some((k0, acc)) => {
+            map.insert(key_bytes, (k0, agg.combine(acc, value)?));
+        }
+        None => {
+            map.insert(key_bytes, (key, value));
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ operators --
+
+/// One serializable operator. Variants carrying a `name` resolve it at
+/// execution time through [`crate::closure::FuncRegistry::get_op`]; the
+/// rest are self-contained built-ins.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpSpec {
+    /// Pass the partition through unchanged.
+    Identity,
+    /// Element-wise map via the named op (`v -> v'`).
+    MapNamed { name: String },
+    /// Keep elements for which the named op returns `Value::Bool(true)`.
+    FilterNamed { name: String },
+    /// Element → zero or more outputs: the named op returns `Value::List`.
+    FlatMapNamed { name: String },
+    /// Whole-partition map: the named op receives and returns `Value::List`.
+    MapPartitionsNamed { name: String },
+    /// Key each element by its stable hash: `v -> List([I64(hash), v])`.
+    KeyByHash,
+    /// Deterministic Bernoulli sample. The fraction is stored as raw
+    /// `f64` bits so round-trips are byte-identical; the per-partition
+    /// RNG seeding matches [`super::SampleNode`] exactly.
+    Sample { fraction_bits: u64, seed: u64 },
+    /// Partition → single-element partition `[I64(len)]` (count partial).
+    Count,
+    /// Partition of `I64` rows → `[I64(wrapping sum)]`.
+    SumI64,
+    /// Partition of `F64` rows → `[F64(sum)]`.
+    SumF64,
+}
+
+fn op_type_err(op: &str, want: &str, got: &Value) -> IgniteError {
+    IgniteError::Invalid(format!("{op}: expected {want}, got {}", got.type_name()))
+}
+
+impl OpSpec {
+    /// Apply this operator to one partition's rows. `part` feeds the
+    /// sample RNG so recomputation is deterministic per partition.
+    pub fn apply(&self, part: usize, rows: Vec<Value>) -> Result<Vec<Value>> {
+        match self {
+            OpSpec::Identity => Ok(rows),
+            OpSpec::MapNamed { name } => {
+                let f = registry().get_op(name)?;
+                rows.into_iter().map(|v| f(v)).collect()
+            }
+            OpSpec::FilterNamed { name } => {
+                let f = registry().get_op(name)?;
+                let mut out = Vec::with_capacity(rows.len());
+                for v in rows {
+                    match f(v.clone())? {
+                        Value::Bool(true) => out.push(v),
+                        Value::Bool(false) => {}
+                        other => return Err(op_type_err(name, "bool", &other)),
+                    }
+                }
+                Ok(out)
+            }
+            OpSpec::FlatMapNamed { name } => {
+                let f = registry().get_op(name)?;
+                let mut out = Vec::new();
+                for v in rows {
+                    match f(v)? {
+                        Value::List(items) => out.extend(items),
+                        other => return Err(op_type_err(name, "list", &other)),
+                    }
+                }
+                Ok(out)
+            }
+            OpSpec::MapPartitionsNamed { name } => {
+                let f = registry().get_op(name)?;
+                match f(Value::List(rows))? {
+                    Value::List(out) => Ok(out),
+                    other => Err(op_type_err(name, "list", &other)),
+                }
+            }
+            OpSpec::KeyByHash => Ok(rows
+                .into_iter()
+                .map(|v| {
+                    let h = stable_value_hash(&v) as i64;
+                    Value::List(vec![Value::I64(h), v])
+                })
+                .collect()),
+            OpSpec::Sample { fraction_bits, seed } => {
+                let fraction = f64::from_bits(*fraction_bits);
+                // Same per-(seed, partition) derivation as SampleNode so
+                // plan and closure fast paths sample identically.
+                let mut rng = Xoshiro256::seeded(seed ^ (part as u64).wrapping_mul(0x9E37));
+                Ok(rows.into_iter().filter(|_| rng.chance(fraction)).collect())
+            }
+            OpSpec::Count => Ok(vec![Value::I64(rows.len() as i64)]),
+            OpSpec::SumI64 => {
+                let mut total = 0i64;
+                for v in &rows {
+                    match v {
+                        Value::I64(x) => total = total.wrapping_add(*x),
+                        other => return Err(op_type_err("sum_i64", "i64", other)),
+                    }
+                }
+                Ok(vec![Value::I64(total)])
+            }
+            OpSpec::SumF64 => {
+                let mut total = 0f64;
+                for v in &rows {
+                    match v {
+                        Value::F64(x) => total += x,
+                        other => return Err(op_type_err("sum_f64", "f64", other)),
+                    }
+                }
+                Ok(vec![Value::F64(total)])
+            }
+        }
+    }
+}
+
+const OP_IDENTITY: u8 = 0;
+const OP_MAP: u8 = 1;
+const OP_FILTER: u8 = 2;
+const OP_FLAT_MAP: u8 = 3;
+const OP_MAP_PARTITIONS: u8 = 4;
+const OP_KEY_BY_HASH: u8 = 5;
+const OP_SAMPLE: u8 = 6;
+const OP_COUNT: u8 = 7;
+const OP_SUM_I64: u8 = 8;
+const OP_SUM_F64: u8 = 9;
+
+impl Encode for OpSpec {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            OpSpec::Identity => buf.push(OP_IDENTITY),
+            OpSpec::MapNamed { name } => {
+                buf.push(OP_MAP);
+                name.encode(buf);
+            }
+            OpSpec::FilterNamed { name } => {
+                buf.push(OP_FILTER);
+                name.encode(buf);
+            }
+            OpSpec::FlatMapNamed { name } => {
+                buf.push(OP_FLAT_MAP);
+                name.encode(buf);
+            }
+            OpSpec::MapPartitionsNamed { name } => {
+                buf.push(OP_MAP_PARTITIONS);
+                name.encode(buf);
+            }
+            OpSpec::KeyByHash => buf.push(OP_KEY_BY_HASH),
+            OpSpec::Sample { fraction_bits, seed } => {
+                buf.push(OP_SAMPLE);
+                fraction_bits.encode(buf);
+                seed.encode(buf);
+            }
+            OpSpec::Count => buf.push(OP_COUNT),
+            OpSpec::SumI64 => buf.push(OP_SUM_I64),
+            OpSpec::SumF64 => buf.push(OP_SUM_F64),
+        }
+    }
+}
+
+impl Decode for OpSpec {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(match r.u8()? {
+            OP_IDENTITY => OpSpec::Identity,
+            OP_MAP => OpSpec::MapNamed { name: String::decode(r)? },
+            OP_FILTER => OpSpec::FilterNamed { name: String::decode(r)? },
+            OP_FLAT_MAP => OpSpec::FlatMapNamed { name: String::decode(r)? },
+            OP_MAP_PARTITIONS => OpSpec::MapPartitionsNamed { name: String::decode(r)? },
+            OP_KEY_BY_HASH => OpSpec::KeyByHash,
+            OP_SAMPLE => {
+                OpSpec::Sample { fraction_bits: u64::decode(r)?, seed: u64::decode(r)? }
+            }
+            OP_COUNT => OpSpec::Count,
+            OP_SUM_I64 => OpSpec::SumI64,
+            OP_SUM_F64 => OpSpec::SumF64,
+            t => return Err(IgniteError::Codec(format!("unknown OpSpec tag {t}"))),
+        })
+    }
+}
+
+// ---------------------------------------------------------- aggregation --
+
+/// How a shuffle combines two values of the same key. Built-ins cover the
+/// common monoids; `Named` resolves an associative `List([a, b]) -> v`
+/// op from the registry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AggSpec {
+    /// Keep the first value seen (set semantics / distinct).
+    First,
+    /// Wrapping integer sum (total on all inputs — never panics).
+    SumI64,
+    /// Floating-point sum.
+    SumF64,
+    /// Both values are `Value::List`; append (group-by-key).
+    Concat,
+    /// Named associative op: called as `f(List([a, b]))`.
+    Named { name: String },
+}
+
+impl AggSpec {
+    pub fn combine(&self, a: Value, b: Value) -> Result<Value> {
+        match self {
+            AggSpec::First => Ok(a),
+            AggSpec::SumI64 => match (a, b) {
+                (Value::I64(x), Value::I64(y)) => Ok(Value::I64(x.wrapping_add(y))),
+                (a, b) => Err(IgniteError::Invalid(format!(
+                    "agg sum_i64: want i64 values, got {} and {}",
+                    a.type_name(),
+                    b.type_name()
+                ))),
+            },
+            AggSpec::SumF64 => match (a, b) {
+                (Value::F64(x), Value::F64(y)) => Ok(Value::F64(x + y)),
+                (a, b) => Err(IgniteError::Invalid(format!(
+                    "agg sum_f64: want f64 values, got {} and {}",
+                    a.type_name(),
+                    b.type_name()
+                ))),
+            },
+            AggSpec::Concat => match (a, b) {
+                (Value::List(mut x), Value::List(mut y)) => {
+                    x.append(&mut y);
+                    Ok(Value::List(x))
+                }
+                (a, b) => Err(IgniteError::Invalid(format!(
+                    "agg concat: want list values, got {} and {}",
+                    a.type_name(),
+                    b.type_name()
+                ))),
+            },
+            AggSpec::Named { name } => {
+                let f = registry().get_op(name)?;
+                f(Value::List(vec![a, b]))
+            }
+        }
+    }
+}
+
+const AGG_FIRST: u8 = 0;
+const AGG_SUM_I64: u8 = 1;
+const AGG_SUM_F64: u8 = 2;
+const AGG_CONCAT: u8 = 3;
+const AGG_NAMED: u8 = 4;
+
+impl Encode for AggSpec {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            AggSpec::First => buf.push(AGG_FIRST),
+            AggSpec::SumI64 => buf.push(AGG_SUM_I64),
+            AggSpec::SumF64 => buf.push(AGG_SUM_F64),
+            AggSpec::Concat => buf.push(AGG_CONCAT),
+            AggSpec::Named { name } => {
+                buf.push(AGG_NAMED);
+                name.encode(buf);
+            }
+        }
+    }
+}
+
+impl Decode for AggSpec {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(match r.u8()? {
+            AGG_FIRST => AggSpec::First,
+            AGG_SUM_I64 => AggSpec::SumI64,
+            AGG_SUM_F64 => AggSpec::SumF64,
+            AGG_CONCAT => AggSpec::Concat,
+            AGG_NAMED => AggSpec::Named { name: String::decode(r)? },
+            t => return Err(IgniteError::Codec(format!("unknown AggSpec tag {t}"))),
+        })
+    }
+}
+
+// -------------------------------------------------------------- the plan --
+
+/// A serializable lineage tree. Unlike [`super::RddNode`] object graphs,
+/// a `PlanSpec` can cross process boundaries: encode it, ship it, decode
+/// it, execute it against any engine whose registry knows the named ops.
+///
+/// Children are `Arc`s so builder chains share structure instead of
+/// deep-cloning parent trees (a `Source` holds the whole dataset — copying
+/// it per appended operator would make plan construction O(data × ops)).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanSpec {
+    /// In-memory source, pre-split into partitions (`parallelize`). The
+    /// rows travel inside the plan, the way Spark ships a parallelized
+    /// collection's partition data inside the task.
+    Source { partitions: Vec<Vec<Value>> },
+    /// One operator applied to the parent's partitions.
+    Op { op: OpSpec, parent: Arc<PlanSpec> },
+    /// Concatenate two plans' partition lists.
+    Union { left: Arc<PlanSpec>, right: Arc<PlanSpec> },
+    /// Shuffle boundary: parent rows must be `List([key, value])` pairs;
+    /// map tasks bucket by the stable hash of the encoded key, combining
+    /// map-side with `agg`; reduce partitions merge every map's bucket.
+    Shuffle { shuffle_id: u64, partitions: u64, agg: AggSpec, parent: Arc<PlanSpec> },
+}
+
+const PLAN_SOURCE: u8 = 0;
+const PLAN_OP: u8 = 1;
+const PLAN_UNION: u8 = 2;
+const PLAN_SHUFFLE: u8 = 3;
+
+impl Encode for PlanSpec {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            PlanSpec::Source { partitions } => {
+                buf.push(PLAN_SOURCE);
+                partitions.encode(buf);
+            }
+            PlanSpec::Op { op, parent } => {
+                buf.push(PLAN_OP);
+                op.encode(buf);
+                parent.encode(buf);
+            }
+            PlanSpec::Union { left, right } => {
+                buf.push(PLAN_UNION);
+                left.encode(buf);
+                right.encode(buf);
+            }
+            PlanSpec::Shuffle { shuffle_id, partitions, agg, parent } => {
+                buf.push(PLAN_SHUFFLE);
+                shuffle_id.encode(buf);
+                partitions.encode(buf);
+                agg.encode(buf);
+                parent.encode(buf);
+            }
+        }
+    }
+}
+
+impl Decode for PlanSpec {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(match r.u8()? {
+            PLAN_SOURCE => PlanSpec::Source { partitions: Vec::<Vec<Value>>::decode(r)? },
+            PLAN_OP => {
+                PlanSpec::Op { op: OpSpec::decode(r)?, parent: Arc::new(PlanSpec::decode(r)?) }
+            }
+            PLAN_UNION => PlanSpec::Union {
+                left: Arc::new(PlanSpec::decode(r)?),
+                right: Arc::new(PlanSpec::decode(r)?),
+            },
+            PLAN_SHUFFLE => PlanSpec::Shuffle {
+                shuffle_id: u64::decode(r)?,
+                partitions: u64::decode(r)?,
+                agg: AggSpec::decode(r)?,
+                parent: Arc::new(PlanSpec::decode(r)?),
+            },
+            t => return Err(IgniteError::Codec(format!("unknown PlanSpec tag {t}"))),
+        })
+    }
+}
+
+impl PlanSpec {
+    /// Number of output partitions of this node.
+    pub fn num_partitions(&self) -> usize {
+        match self {
+            PlanSpec::Source { partitions } => partitions.len(),
+            PlanSpec::Op { parent, .. } => parent.num_partitions(),
+            PlanSpec::Union { left, right } => left.num_partitions() + right.num_partitions(),
+            PlanSpec::Shuffle { partitions, .. } => *partitions as usize,
+        }
+    }
+
+    /// Compute partition `part` against `engine`. The reduce side of a
+    /// `Shuffle` node reads through the tier-transparent
+    /// `ShuffleManager::fetch_bucket` (memory → disk → remote), so the
+    /// same interpreter serves local runs and worker-side stage tasks.
+    pub fn compute(&self, part: usize, engine: &Engine) -> Result<Vec<Value>> {
+        match self {
+            PlanSpec::Source { partitions } => partitions.get(part).cloned().ok_or_else(|| {
+                IgniteError::Invalid(format!(
+                    "source partition {part} out of range ({})",
+                    partitions.len()
+                ))
+            }),
+            PlanSpec::Op { op, parent } => op.apply(part, parent.compute(part, engine)?),
+            PlanSpec::Union { left, right } => {
+                let nl = left.num_partitions();
+                if part < nl {
+                    left.compute(part, engine)
+                } else {
+                    right.compute(part - nl, engine)
+                }
+            }
+            PlanSpec::Shuffle { shuffle_id, agg, .. } => {
+                let n_maps = engine.shuffle.map_count(*shuffle_id).ok_or_else(|| {
+                    IgniteError::Storage(format!(
+                        "shuffle {shuffle_id} not materialized (stage skipped?)"
+                    ))
+                })?;
+                let mut merged: HashMap<Vec<u8>, (Value, Value)> = HashMap::new();
+                for map_idx in 0..n_maps {
+                    let bucket: Vec<(Value, Value)> =
+                        engine.shuffle.fetch_bucket(*shuffle_id, map_idx, part)?;
+                    metrics::global().counter("shuffle.merge.passes").inc();
+                    for (k, v) in bucket {
+                        let kb = to_bytes(&k);
+                        merge_pair(&mut merged, kb, k, v, agg)?;
+                    }
+                }
+                Ok(merged
+                    .into_values()
+                    .map(|(k, v)| Value::List(vec![k, v]))
+                    .collect())
+            }
+        }
+    }
+
+    /// Find the `Shuffle` node with the given id anywhere in the tree.
+    pub fn find_shuffle(&self, id: u64) -> Option<&PlanSpec> {
+        match self {
+            PlanSpec::Source { .. } => None,
+            PlanSpec::Op { parent, .. } => parent.find_shuffle(id),
+            PlanSpec::Union { left, right } => {
+                left.find_shuffle(id).or_else(|| right.find_shuffle(id))
+            }
+            PlanSpec::Shuffle { shuffle_id, parent, .. } => {
+                if *shuffle_id == id {
+                    Some(self)
+                } else {
+                    parent.find_shuffle(id)
+                }
+            }
+        }
+    }
+
+    /// Shuffle stages in lineage order (parents first, deduped):
+    /// `(shuffle_id, num_map_tasks)` per stage — the unit the driver
+    /// ships to workers and the unit [`local_stages`](Self::local_stages)
+    /// wraps for the local engine.
+    pub fn shuffle_stages(&self) -> Vec<(u64, usize)> {
+        let mut out = Vec::new();
+        let mut seen = HashSet::new();
+        self.collect_stages(&mut out, &mut seen);
+        out
+    }
+
+    fn collect_stages(&self, out: &mut Vec<(u64, usize)>, seen: &mut HashSet<u64>) {
+        match self {
+            PlanSpec::Source { .. } => {}
+            PlanSpec::Op { parent, .. } => parent.collect_stages(out, seen),
+            PlanSpec::Union { left, right } => {
+                left.collect_stages(out, seen);
+                right.collect_stages(out, seen);
+            }
+            PlanSpec::Shuffle { shuffle_id, parent, .. } => {
+                parent.collect_stages(out, seen);
+                if seen.insert(*shuffle_id) {
+                    out.push((*shuffle_id, parent.num_partitions()));
+                }
+            }
+        }
+    }
+
+    /// Ids of every shuffle in the plan (for `shuffle.clear` GC).
+    pub fn shuffle_ids(&self) -> Vec<u64> {
+        self.shuffle_stages().into_iter().map(|(id, _)| id).collect()
+    }
+}
+
+/// Execute map task `map_idx` of shuffle `shuffle_id` within `plan`:
+/// compute the parent partition, bucket pairs by the stable key hash with
+/// map-side combining, and register buckets + completion with the
+/// engine's shuffle manager (which announces the output to the master's
+/// map-output table in cluster mode). Shared verbatim by the driver-local
+/// stage path and the worker-side `task.run` handler.
+pub fn run_shuffle_map_task(
+    plan: &PlanSpec,
+    shuffle_id: u64,
+    map_idx: usize,
+    engine: &Engine,
+) -> Result<()> {
+    let (parent, partitions, agg) = match plan.find_shuffle(shuffle_id) {
+        Some(PlanSpec::Shuffle { partitions, agg, parent, .. }) => {
+            (parent.as_ref(), (*partitions).max(1) as usize, agg)
+        }
+        _ => {
+            return Err(IgniteError::Invalid(format!(
+                "plan has no shuffle node {shuffle_id}"
+            )))
+        }
+    };
+    let num_maps = parent.num_partitions();
+    let rows = parent.compute(map_idx, engine)?;
+    let mut buckets: Vec<HashMap<Vec<u8>, (Value, Value)>> =
+        (0..partitions).map(|_| HashMap::new()).collect();
+    for row in rows {
+        let (k, v) = match row {
+            Value::List(mut l) if l.len() == 2 => {
+                let v = l.pop().unwrap();
+                let k = l.pop().unwrap();
+                (k, v)
+            }
+            other => {
+                return Err(IgniteError::Invalid(format!(
+                    "shuffle {shuffle_id} input rows must be List([key, value]), got {}",
+                    other.type_name()
+                )))
+            }
+        };
+        let kb = to_bytes(&k);
+        let bucket = &mut buckets[partition_for_key_bytes(&kb, partitions)];
+        merge_pair(bucket, kb, k, v, agg)?;
+    }
+    for (reduce_idx, bucket) in buckets.into_iter().enumerate() {
+        let pairs: Vec<(Value, Value)> = bucket.into_values().collect();
+        engine.shuffle.put_bucket(shuffle_id, map_idx, reduce_idx, pairs);
+    }
+    engine.shuffle.map_done(shuffle_id, map_idx, num_maps)
+}
+
+// --------------------------------------------------------------- handle --
+
+/// Handle to a serializable plan plus the context that executes it — the
+/// shippable analogue of [`super::Rdd`]. Builder methods are lazy (they
+/// grow the tree); actions execute it, distributed when the context has a
+/// cluster master with live workers, driver-local otherwise.
+#[derive(Clone)]
+pub struct PlanRdd {
+    plan: Arc<PlanSpec>,
+    engine: Arc<Engine>,
+    master: Option<Arc<crate::cluster::Master>>,
+}
+
+impl PlanRdd {
+    pub(crate) fn new(
+        plan: PlanSpec,
+        engine: Arc<Engine>,
+        master: Option<Arc<crate::cluster::Master>>,
+    ) -> Self {
+        PlanRdd { plan: Arc::new(plan), engine, master }
+    }
+
+    /// The underlying plan tree.
+    pub fn plan(&self) -> &PlanSpec {
+        &self.plan
+    }
+
+    /// The plan's canonical wire encoding.
+    pub fn encoded(&self) -> Vec<u8> {
+        to_bytes(self.plan.as_ref())
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.plan.num_partitions()
+    }
+
+    // ------------------------------------------------ transformations --
+
+    /// Append an arbitrary operator (the generic builder every named /
+    /// built-in shorthand below goes through).
+    pub fn op(&self, op: OpSpec) -> PlanRdd {
+        PlanRdd {
+            plan: Arc::new(PlanSpec::Op { op, parent: self.plan.clone() }),
+            engine: self.engine.clone(),
+            master: self.master.clone(),
+        }
+    }
+
+    /// Element-wise map via a registered op (shippable `map`).
+    pub fn map_named(&self, name: &str) -> PlanRdd {
+        self.op(OpSpec::MapNamed { name: name.to_string() })
+    }
+
+    /// Filter via a registered op returning `Value::Bool`.
+    pub fn filter_named(&self, name: &str) -> PlanRdd {
+        self.op(OpSpec::FilterNamed { name: name.to_string() })
+    }
+
+    /// Flat-map via a registered op returning `Value::List`.
+    pub fn flat_map_named(&self, name: &str) -> PlanRdd {
+        self.op(OpSpec::FlatMapNamed { name: name.to_string() })
+    }
+
+    /// Whole-partition map via a registered op (`List -> List`).
+    pub fn map_partitions_named(&self, name: &str) -> PlanRdd {
+        self.op(OpSpec::MapPartitionsNamed { name: name.to_string() })
+    }
+
+    /// Key every element by its stable hash (built-in).
+    pub fn key_by_hash(&self) -> PlanRdd {
+        self.op(OpSpec::KeyByHash)
+    }
+
+    /// Deterministic Bernoulli sample with a fixed seed (built-in).
+    pub fn sample(&self, fraction: f64, seed: u64) -> PlanRdd {
+        self.op(OpSpec::Sample { fraction_bits: fraction.to_bits(), seed })
+    }
+
+    /// Concatenate two plans' partitions.
+    pub fn union(&self, other: &PlanRdd) -> PlanRdd {
+        PlanRdd {
+            plan: Arc::new(PlanSpec::Union {
+                left: self.plan.clone(),
+                right: other.plan.clone(),
+            }),
+            engine: self.engine.clone(),
+            master: self.master.clone(),
+        }
+    }
+
+    /// Shuffle + combine values per key. Rows must be `List([key, value])`
+    /// pairs. The shuffle id is minted here, on the driver — it is the
+    /// identity workers and the master's map-output table agree on.
+    pub fn reduce_by_key(&self, num_partitions: usize, agg: AggSpec) -> PlanRdd {
+        PlanRdd {
+            plan: Arc::new(PlanSpec::Shuffle {
+                shuffle_id: crate::util::next_id(),
+                partitions: num_partitions.max(1) as u64,
+                agg,
+                parent: self.plan.clone(),
+            }),
+            engine: self.engine.clone(),
+            master: self.master.clone(),
+        }
+    }
+
+    // ------------------------------------------------------- actions ---
+
+    /// Materialize every partition and concatenate. Runs distributed
+    /// (stages shipped to workers over `task.run`, map-output GC
+    /// piggybacked on completion) when the context has a cluster master
+    /// with live workers; falls back to the driver-local engine otherwise.
+    pub fn collect(&self) -> Result<Vec<Value>> {
+        if let Some(master) = &self.master {
+            if !master.live_workers().is_empty() {
+                let parts = master.run_plan(&self.plan)?;
+                return Ok(parts.into_iter().flatten().collect());
+            }
+        }
+        self.collect_local()
+    }
+
+    /// Driver-local execution: cut the plan into the same stages closure
+    /// lineage produces and run them on the local engine.
+    pub fn collect_local(&self) -> Result<Vec<Value>> {
+        let stages = self.local_stages();
+        let plan = self.plan.clone();
+        let parts: Vec<Vec<Value>> = self.engine.run_job(
+            stages,
+            self.plan.num_partitions(),
+            move |part, engine| plan.compute(part, engine),
+            |_, rows| rows,
+        )?;
+        Ok(parts.into_iter().flatten().collect())
+    }
+
+    /// Count elements (via the shippable `Count` partial + driver sum).
+    pub fn count(&self) -> Result<usize> {
+        let mut total = 0usize;
+        for v in self.op(OpSpec::Count).collect()? {
+            match v {
+                Value::I64(n) if n >= 0 => total += n as usize,
+                other => {
+                    return Err(IgniteError::Invalid(format!(
+                        "count partial must be non-negative i64, got {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(total)
+    }
+
+    /// Wrapping sum of an `I64` plan.
+    pub fn sum_i64(&self) -> Result<i64> {
+        let mut total = 0i64;
+        for v in self.op(OpSpec::SumI64).collect()? {
+            match v {
+                Value::I64(n) => total = total.wrapping_add(n),
+                other => return Err(op_type_err("sum_i64", "i64", &other)),
+            }
+        }
+        Ok(total)
+    }
+
+    /// Sum of an `F64` plan.
+    pub fn sum_f64(&self) -> Result<f64> {
+        let mut total = 0f64;
+        for v in self.op(OpSpec::SumF64).collect()? {
+            match v {
+                Value::F64(n) => total += n,
+                other => return Err(op_type_err("sum_f64", "f64", &other)),
+            }
+        }
+        Ok(total)
+    }
+
+    /// The plan's shuffle map stages as engine [`StageSpec`]s (the local
+    /// fast-path equivalent of shipping them to workers).
+    pub fn local_stages(&self) -> Vec<StageSpec> {
+        self.plan
+            .shuffle_stages()
+            .into_iter()
+            .map(|(shuffle_id, num_maps)| {
+                let plan = self.plan.clone();
+                StageSpec {
+                    shuffle_id,
+                    num_tasks: num_maps,
+                    run_task: Arc::new(move |map_idx, engine: &Engine| {
+                        run_shuffle_map_task(&plan, shuffle_id, map_idx, engine)
+                    }),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::closure::register_op;
+    use crate::ser::from_bytes;
+    use crate::IgniteContext;
+
+    fn register_test_ops() {
+        register_op("plan.test.double", |v| match v {
+            Value::I64(x) => Ok(Value::I64(x.wrapping_mul(2))),
+            other => Err(IgniteError::Invalid(format!("want i64, got {}", other.type_name()))),
+        });
+        register_op("plan.test.even", |v| match v {
+            Value::I64(x) => Ok(Value::Bool(x % 2 == 0)),
+            other => Err(IgniteError::Invalid(format!("want i64, got {}", other.type_name()))),
+        });
+        register_op("plan.test.split", |v| match v {
+            Value::Str(s) => Ok(Value::List(
+                s.split_whitespace().map(|w| Value::Str(w.to_string())).collect(),
+            )),
+            other => Err(IgniteError::Invalid(format!("want str, got {}", other.type_name()))),
+        });
+        register_op("plan.test.pair1", |v| Ok(Value::List(vec![v, Value::I64(1)])));
+    }
+
+    fn i64_rows(xs: std::ops::Range<i64>) -> Vec<Value> {
+        xs.map(Value::I64).collect()
+    }
+
+    #[test]
+    fn plan_codec_round_trips_every_node_kind() {
+        let plan = PlanSpec::Shuffle {
+            shuffle_id: 9,
+            partitions: 3,
+            agg: AggSpec::Named { name: "agg".into() },
+            parent: Arc::new(PlanSpec::Union {
+                left: Arc::new(PlanSpec::Op {
+                    op: OpSpec::Sample { fraction_bits: 0.25f64.to_bits(), seed: 7 },
+                    parent: Arc::new(PlanSpec::Source {
+                        partitions: vec![vec![Value::I64(1)], vec![Value::Str("x".into())]],
+                    }),
+                }),
+                right: Arc::new(PlanSpec::Op {
+                    op: OpSpec::MapNamed { name: "m".into() },
+                    parent: Arc::new(PlanSpec::Source { partitions: vec![vec![]] }),
+                }),
+            }),
+        };
+        let bytes = to_bytes(&plan);
+        let back: PlanSpec = from_bytes(&bytes).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(to_bytes(&back), bytes, "re-encode must be byte-identical");
+        for op in [
+            OpSpec::Identity,
+            OpSpec::FilterNamed { name: "f".into() },
+            OpSpec::FlatMapNamed { name: "fm".into() },
+            OpSpec::MapPartitionsNamed { name: "mp".into() },
+            OpSpec::KeyByHash,
+            OpSpec::Count,
+            OpSpec::SumI64,
+            OpSpec::SumF64,
+        ] {
+            let b = to_bytes(&op);
+            assert_eq!(from_bytes::<OpSpec>(&b).unwrap(), op);
+        }
+        for agg in [AggSpec::First, AggSpec::SumI64, AggSpec::SumF64, AggSpec::Concat] {
+            let b = to_bytes(&agg);
+            assert_eq!(from_bytes::<AggSpec>(&b).unwrap(), agg);
+        }
+        assert!(from_bytes::<PlanSpec>(&[200]).is_err());
+        assert!(from_bytes::<OpSpec>(&[200]).is_err());
+        assert!(from_bytes::<AggSpec>(&[200]).is_err());
+    }
+
+    #[test]
+    fn local_plan_matches_closure_pipeline() {
+        register_test_ops();
+        let sc = IgniteContext::local(4);
+        let got = sc
+            .parallelize_values_with(i64_rows(0..100), 4)
+            .map_named("plan.test.double")
+            .filter_named("plan.test.even")
+            .sum_i64()
+            .unwrap();
+        let want = sc
+            .parallelize_with((0..100i64).collect(), 4)
+            .map(|x| x * 2)
+            .filter(|x| x % 2 == 0)
+            .fold(0, |a, b| a + b)
+            .unwrap();
+        assert_eq!(got, want);
+        assert_eq!(
+            sc.parallelize_values_with(i64_rows(0..100), 4).count().unwrap(),
+            100
+        );
+    }
+
+    #[test]
+    fn plan_wordcount_matches_closure_wordcount() {
+        register_test_ops();
+        let lines =
+            ["the quick brown fox", "the lazy dog", "the fox"].map(String::from).to_vec();
+        let sc = IgniteContext::local(4);
+        let rows: Vec<Value> = lines.iter().cloned().map(Value::Str).collect();
+        let pairs = sc
+            .parallelize_values_with(rows, 3)
+            .flat_map_named("plan.test.split")
+            .map_named("plan.test.pair1")
+            .reduce_by_key(2, AggSpec::SumI64)
+            .collect()
+            .unwrap();
+        let mut got: std::collections::HashMap<String, i64> = std::collections::HashMap::new();
+        for row in pairs {
+            match row {
+                Value::List(l) => match (&l[0], &l[1]) {
+                    (Value::Str(w), Value::I64(n)) => {
+                        got.insert(w.clone(), *n);
+                    }
+                    other => panic!("bad pair {other:?}"),
+                },
+                other => panic!("bad row {other:?}"),
+            }
+        }
+        let want = sc
+            .parallelize_with(lines, 3)
+            .flat_map(|l| l.split_whitespace().map(String::from).collect())
+            .map(|w| (w, 1i64))
+            .reduce_by_key(2, |a, b| a + b)
+            .collect_map()
+            .unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sample_matches_closure_sample_exactly() {
+        let sc = IgniteContext::local(4);
+        let got: Vec<i64> = sc
+            .parallelize_values_with(i64_rows(0..500), 4)
+            .sample(0.3, 42)
+            .collect_local()
+            .unwrap()
+            .into_iter()
+            .map(|v| match v {
+                Value::I64(x) => x,
+                other => panic!("bad row {other:?}"),
+            })
+            .collect();
+        let want = sc
+            .parallelize_with((0..500i64).collect(), 4)
+            .sample(0.3, 42)
+            .collect()
+            .unwrap();
+        assert_eq!(got, want, "plan sample must reproduce SampleNode exactly");
+    }
+
+    #[test]
+    fn key_by_hash_and_first_agg_dedupe() {
+        register_test_ops();
+        let sc = IgniteContext::local(2);
+        let rows: Vec<Value> = [1i64, 2, 1, 3, 2, 1].iter().map(|&x| Value::I64(x)).collect();
+        let distinct = sc
+            .parallelize_values_with(rows, 2)
+            .map_named("plan.test.pair1")
+            .reduce_by_key(2, AggSpec::First)
+            .collect()
+            .unwrap();
+        assert_eq!(distinct.len(), 3, "First agg keeps one value per key");
+        let keyed = sc
+            .parallelize_values_with(vec![Value::I64(7)], 1)
+            .key_by_hash()
+            .collect_local()
+            .unwrap();
+        match &keyed[0] {
+            Value::List(l) => {
+                assert_eq!(l.len(), 2);
+                assert_eq!(l[0], Value::I64(stable_value_hash(&Value::I64(7)) as i64));
+                assert_eq!(l[1], Value::I64(7));
+            }
+            other => panic!("bad keyed row {other:?}"),
+        }
+    }
+
+    #[test]
+    fn union_and_stage_order() {
+        register_test_ops();
+        let sc = IgniteContext::local(2);
+        let a = sc.parallelize_values_with(i64_rows(0..10), 2);
+        let b = sc.parallelize_values_with(i64_rows(10..20), 3);
+        let u = a.union(&b);
+        assert_eq!(u.num_partitions(), 5);
+        assert_eq!(u.count().unwrap(), 20);
+        // Chained shuffles appear parents-first.
+        let chained = u
+            .map_named("plan.test.pair1")
+            .reduce_by_key(3, AggSpec::SumI64)
+            .reduce_by_key(2, AggSpec::SumI64);
+        let stages = chained.plan().shuffle_stages();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].1, 5, "first stage maps over union partitions");
+        assert_eq!(stages[1].1, 3, "second stage maps over first shuffle's output");
+        assert!(chained.plan().find_shuffle(stages[0].0).is_some());
+        assert!(chained.plan().find_shuffle(u64::MAX).is_none());
+    }
+
+    #[test]
+    fn missing_named_op_is_a_clean_error() {
+        let sc = IgniteContext::local(2);
+        let err = sc
+            .parallelize_values_with(i64_rows(0..4), 2)
+            .map_named("plan.test.not_registered")
+            .collect_local()
+            .unwrap_err();
+        assert!(err.to_string().contains("not_registered"), "got: {err}");
+    }
+
+    #[test]
+    fn non_pair_rows_into_shuffle_error() {
+        let sc = IgniteContext::local(2);
+        let err = sc
+            .parallelize_values_with(i64_rows(0..4), 2)
+            .reduce_by_key(2, AggSpec::SumI64)
+            .collect_local()
+            .unwrap_err();
+        assert!(err.to_string().contains("List([key, value])"), "got: {err}");
+    }
+}

@@ -144,9 +144,47 @@ impl Engine {
             .collect())
     }
 
+    /// Run an explicit set of task indices through the pool — a worker's
+    /// share of a stage shipped by the driver (`task.run`), which names
+    /// global partition indices rather than a dense `0..n` range. Each
+    /// index gets the usual retry machinery, but speculation is
+    /// deliberately OFF: a speculative duplicate can outlive the set
+    /// (first success wins, copies are never joined), and a shipped
+    /// stage's duplicate finishing after the driver's job-completion GC
+    /// would re-register already-cleared shuffle state. Stragglers of
+    /// shipped stages are covered by the driver's stage retry instead.
+    pub fn run_task_indices<F>(
+        self: &Arc<Self>,
+        stage_id: u64,
+        indices: Vec<usize>,
+        task: F,
+    ) -> Result<()>
+    where
+        F: Fn(usize) -> Result<()> + Send + Sync + 'static,
+    {
+        if indices.is_empty() {
+            return Ok(());
+        }
+        let n = indices.len();
+        self.run_task_set_inner(stage_id, n, false, move |i| task(indices[i]))
+    }
+
     /// Run `num_tasks` tasks through the pool with retry + speculation.
     /// Blocks until all succeed or one exhausts its retries.
     pub fn run_task_set<F>(self: &Arc<Self>, stage_id: u64, num_tasks: usize, task: F) -> Result<()>
+    where
+        F: Fn(usize) -> Result<()> + Send + Sync + 'static,
+    {
+        self.run_task_set_inner(stage_id, num_tasks, self.speculation, task)
+    }
+
+    fn run_task_set_inner<F>(
+        self: &Arc<Self>,
+        stage_id: u64,
+        num_tasks: usize,
+        speculate: bool,
+        task: F,
+    ) -> Result<()>
     where
         F: Fn(usize) -> Result<()> + Send + Sync + 'static,
     {
@@ -260,7 +298,7 @@ impl Engine {
                 let g = state.wake_lock.lock().unwrap();
                 let _ = state.wake.wait_timeout(g, Duration::from_millis(10)).unwrap();
             }
-            if self.speculation {
+            if speculate {
                 let durations = state.durations.lock().unwrap();
                 if durations.len() >= num_tasks / 2 && !durations.is_empty() {
                     let mut sorted = durations.clone();
@@ -436,6 +474,24 @@ mod tests {
     fn empty_task_set_is_ok() {
         let engine = test_engine();
         engine.run_task_set(0, 0, |_| Ok(())).unwrap();
+        engine.run_task_indices(0, Vec::new(), |_| Ok(())).unwrap();
+    }
+
+    #[test]
+    fn run_task_indices_executes_exactly_the_given_partitions() {
+        let engine = test_engine();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let s2 = seen.clone();
+        engine
+            .run_task_indices(11, vec![3, 7, 12], move |part| {
+                s2.lock().unwrap().push(part);
+                Ok(())
+            })
+            .unwrap();
+        let mut got = seen.lock().unwrap().clone();
+        got.sort_unstable();
+        got.dedup(); // a speculative duplicate is legal; the set is not
+        assert_eq!(got, vec![3, 7, 12]);
     }
 
     #[test]

@@ -399,7 +399,7 @@ mod tests {
     #[test]
     fn typed_casts_succeed() {
         assert_eq!(i64::from_value(5i64.into_value()).unwrap(), 5);
-        assert_eq!(bool::from_value(true.into_value()).unwrap(), true);
+        assert!(bool::from_value(true.into_value()).unwrap());
         assert_eq!(String::from_value("hi".into_value()).unwrap(), "hi");
         assert_eq!(<(i64, bool)>::from_value((3i64, false).into_value()).unwrap(), (3, false));
         assert_eq!(Option::<i64>::from_value(None::<i64>.into_value()).unwrap(), None);

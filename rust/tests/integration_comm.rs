@@ -15,7 +15,7 @@ fn listing1_matvec_closure() {
     let v = vec![1i64, 2, 3];
     let res: i64 = sc
         .parallelize_func(move |world: &SparkComm| {
-            let rank = world.get_rank();
+            let rank = world.rank();
             if rank < mat.len() {
                 mat[rank].iter().zip(&v).map(|(a, b)| a * b).sum()
             } else {

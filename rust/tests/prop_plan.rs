@@ -1,0 +1,196 @@
+//! Property tests for the serializable plan IR:
+//!
+//! * any `PlanSpec` built from the public `PlanRdd` API round-trips
+//!   encode → decode → re-encode **byte-identically** (the invariant that
+//!   lets drivers and workers agree on a plan's identity);
+//! * a decoded plan executed on the local engine produces exactly the
+//!   same result as the equivalent closure-based `Rdd` pipeline (the
+//!   driver-local fast path) on the same input.
+
+use mpignite::closure::register_op;
+use mpignite::rdd::{AggSpec, PlanRdd, PlanSpec};
+use mpignite::rng::Xoshiro256;
+use mpignite::ser::{from_bytes, to_bytes, Value};
+use mpignite::rdd::Rdd;
+use mpignite::testkit::{check, FnGen, PropConfig};
+use mpignite::{IgniteContext, IgniteError};
+use std::collections::HashMap;
+use std::sync::Once;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig { cases, seed: 0x914A_17E5, max_shrink: 64 }
+}
+
+static OPS: Once = Once::new();
+
+fn register_ops() {
+    OPS.call_once(|| {
+        register_op("prop.double", |v| match v {
+            Value::I64(x) => Ok(Value::I64(x.wrapping_mul(2))),
+            other => Err(IgniteError::Invalid(format!("want i64, got {}", other.type_name()))),
+        });
+        register_op("prop.inc", |v| match v {
+            Value::I64(x) => Ok(Value::I64(x.wrapping_add(1))),
+            other => Err(IgniteError::Invalid(format!("want i64, got {}", other.type_name()))),
+        });
+        register_op("prop.even", |v| match v {
+            Value::I64(x) => Ok(Value::Bool(x % 2 == 0)),
+            other => Err(IgniteError::Invalid(format!("want i64, got {}", other.type_name()))),
+        });
+        register_op("prop.dup", |v| Ok(Value::List(vec![v.clone(), v])));
+        register_op("prop.pair_mod7", |v| match v {
+            Value::I64(x) => Ok(Value::List(vec![Value::I64(x.rem_euclid(7)), Value::I64(x)])),
+            other => Err(IgniteError::Invalid(format!("want i64, got {}", other.type_name()))),
+        });
+    });
+}
+
+/// One step of a random pipeline, applicable to both lineage flavors.
+#[derive(Debug, Clone, Copy)]
+enum Step {
+    Double,
+    Inc,
+    FilterEven,
+    DupFlatMap,
+    Sample(u64),
+}
+
+/// A random script: source data, partitioning, element steps, and
+/// whether the pipeline ends in a shuffle (`reduce_by_key` mod 7).
+#[derive(Debug, Clone)]
+struct Script {
+    data: Vec<i64>,
+    parts: usize,
+    steps: Vec<Step>,
+    shuffle: bool,
+}
+
+fn arbitrary_script(rng: &mut Xoshiro256) -> Script {
+    let n = rng.range(0, 40);
+    let data: Vec<i64> = (0..n).map(|_| rng.next_below(2000) as i64 - 1000).collect();
+    let parts = rng.range(1, 6);
+    let steps = (0..rng.range(0, 5))
+        .map(|_| match rng.next_below(5) {
+            0 => Step::Double,
+            1 => Step::Inc,
+            2 => Step::FilterEven,
+            3 => Step::DupFlatMap,
+            _ => Step::Sample(rng.next_u64()),
+        })
+        .collect();
+    Script { data, parts, steps, shuffle: rng.chance(0.5) }
+}
+
+fn build_plan(sc: &IgniteContext, script: &Script) -> PlanRdd {
+    let rows: Vec<Value> = script.data.iter().map(|&x| Value::I64(x)).collect();
+    let mut plan = sc.parallelize_values_with(rows, script.parts);
+    for step in &script.steps {
+        plan = match step {
+            Step::Double => plan.map_named("prop.double"),
+            Step::Inc => plan.map_named("prop.inc"),
+            Step::FilterEven => plan.filter_named("prop.even"),
+            Step::DupFlatMap => plan.flat_map_named("prop.dup"),
+            Step::Sample(seed) => plan.sample(0.5, *seed),
+        };
+    }
+    if script.shuffle {
+        plan = plan.map_named("prop.pair_mod7").reduce_by_key(3, AggSpec::SumI64);
+    }
+    plan
+}
+
+fn build_closure_rdd(sc: &IgniteContext, script: &Script) -> Rdd<i64> {
+    let mut rdd = sc.parallelize_with(script.data.clone(), script.parts);
+    for step in &script.steps {
+        rdd = match step {
+            Step::Double => rdd.map(|x| x.wrapping_mul(2)),
+            Step::Inc => rdd.map(|x| x.wrapping_add(1)),
+            Step::FilterEven => rdd.filter(|x| x % 2 == 0),
+            Step::DupFlatMap => rdd.flat_map(|x| vec![x, x]),
+            Step::Sample(seed) => rdd.sample(0.5, *seed),
+        };
+    }
+    rdd
+}
+
+fn plan_rows_as_i64(rows: Vec<Value>) -> Result<Vec<i64>, String> {
+    rows.into_iter()
+        .map(|v| match v {
+            Value::I64(x) => Ok(x),
+            other => Err(format!("expected i64 row, got {other:?}")),
+        })
+        .collect()
+}
+
+fn plan_rows_as_pairs(rows: Vec<Value>) -> Result<HashMap<i64, i64>, String> {
+    let mut out = HashMap::new();
+    for row in rows {
+        match row {
+            Value::List(l) if l.len() == 2 => match (&l[0], &l[1]) {
+                (Value::I64(k), Value::I64(v)) => {
+                    if out.insert(*k, *v).is_some() {
+                        return Err(format!("duplicate key {k}"));
+                    }
+                }
+                other => return Err(format!("bad pair {other:?}")),
+            },
+            other => return Err(format!("bad row {other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+#[test]
+fn prop_plan_round_trips_byte_identically() {
+    register_ops();
+    let sc = IgniteContext::local(2);
+    let gen = FnGen(|rng: &mut Xoshiro256| arbitrary_script(rng));
+    check(cfg(150), &gen, |script| {
+        let plan = build_plan(&sc, script);
+        let bytes = plan.encoded();
+        let decoded: PlanSpec = from_bytes(&bytes).map_err(|e| e.to_string())?;
+        if &decoded != plan.plan() {
+            return Err(format!("decoded tree differs: {decoded:?}"));
+        }
+        let re = to_bytes(&decoded);
+        if re != bytes {
+            return Err(format!(
+                "re-encode not byte-identical ({} vs {} bytes)",
+                re.len(),
+                bytes.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decoded_plan_matches_closure_fast_path() {
+    register_ops();
+    let sc = IgniteContext::local(4);
+    let gen = FnGen(|rng: &mut Xoshiro256| arbitrary_script(rng));
+    check(cfg(60), &gen, |script| {
+        // Ship-shaped: encode, decode, execute the *decoded* plan.
+        let decoded: PlanSpec =
+            from_bytes(&build_plan(&sc, script).encoded()).map_err(|e| e.to_string())?;
+        let got = sc.plan_rdd(decoded).collect().map_err(|e| e.to_string())?;
+        if script.shuffle {
+            let got = plan_rows_as_pairs(got)?;
+            let want = build_closure_rdd(&sc, script)
+                .map(|x| (x.rem_euclid(7), x))
+                .reduce_by_key(3, |a, b| a.wrapping_add(b))
+                .collect_map()
+                .map_err(|e| e.to_string())?;
+            if got != want {
+                return Err(format!("shuffled mismatch: got {got:?}, want {want:?}"));
+            }
+        } else {
+            let got = plan_rows_as_i64(got)?;
+            let want = build_closure_rdd(&sc, script).collect().map_err(|e| e.to_string())?;
+            if got != want {
+                return Err(format!("mismatch: got {got:?}, want {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
