@@ -106,6 +106,20 @@ fn main() -> Result<()> {
     }
     println!("Figure 1 — MPIgnite-RS ↔ MPI correspondence (all rows verified live):\n");
     print!("{}", t.render());
+
+    // The broadcast plane's config surface (`ignite.broadcast.*`),
+    // pulled straight from the KNOWN_KEYS table so it can't drift.
+    let mut bt = Table::new(vec!["key", "default", "meaning"]);
+    for (key, default, meaning) in mpignite::config::KNOWN_KEYS
+        .iter()
+        .filter(|(key, _, _)| key.starts_with("ignite.broadcast."))
+    {
+        bt.row(vec![*key, *default, *meaning]);
+    }
+    assert!(!bt.is_empty(), "broadcast config keys must exist");
+    println!("\nBroadcast plane — ignite.broadcast.* configuration:\n");
+    print!("{}", bt.render());
+
     println!("\napi_table OK ({} methods verified)", rows.len());
     Ok(())
 }

@@ -45,6 +45,11 @@ fn listing4_scalar(sc: &IgniteContext) -> Result<Vec<i64>> {
 }
 
 /// Phase 2 — same decomposition, 4×4 tiles through the Pallas artifact.
+/// The full matrix is built once on the driver and **broadcast** through
+/// the block-distribution plane (`IgniteContext::broadcast`); each rank
+/// slices its tile out of the shared copy instead of rebuilding it —
+/// the matrix crosses each worker's wire at most once, however many
+/// ranks read it.
 fn blocked_with_xla(sc: &IgniteContext) -> Result<Option<Vec<f32>>> {
     let svc = match shared_service("artifacts") {
         Ok(s) => s,
@@ -54,6 +59,12 @@ fn blocked_with_xla(sc: &IgniteContext) -> Result<Option<Vec<f32>>> {
         }
     };
     const B: usize = 4; // tile edge; grid is 3x3 tiles → 12x12 matrix
+    const N: usize = 12;
+    // A[i][j] = i + 0.1*j, row-major, broadcast once.
+    let matrix: Vec<f32> = (0..N * N)
+        .map(|idx| ((idx / N) as f32) + 0.1 * ((idx % N) as f32))
+        .collect();
+    let mat = sc.broadcast(Value::F32Vec(matrix))?;
     let results = sc
         .parallelize_func(move |world: &SparkComm| {
             let world_rank = world.rank();
@@ -61,11 +72,16 @@ fn blocked_with_xla(sc: &IgniteContext) -> Result<Option<Vec<f32>>> {
             let row = world.split(ti as i64, world_rank as i64).expect("split row");
             let col = world.split(tj as i64, world_rank as i64).expect("split col");
 
-            // Tile A_{ti,tj}[u][v] = global (4ti+u, 4tj+v) pattern.
+            // Tile A_{ti,tj} sliced out of the broadcast matrix.
+            let shared = mat.value().expect("broadcast matrix");
+            let full = match shared.as_ref() {
+                Value::F32Vec(m) => m,
+                other => panic!("unexpected broadcast payload {other:?}"),
+            };
             let tile: Vec<f32> = (0..B * B)
                 .map(|idx| {
                     let (u, v) = (idx / B, idx % B);
-                    ((4 * ti + u) as f32) + 0.1 * ((4 * tj + v) as f32)
+                    full[(B * ti + u) * N + (B * tj + v)]
                 })
                 .collect();
             // x segment owned by the diagonal of column tj: x_j = j+1.

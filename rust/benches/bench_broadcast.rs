@@ -1,0 +1,90 @@
+//! E11 — broadcast plane: stage shipping with inline sources vs
+//! broadcast `SourceRef` sources, on a real 2-worker in-process cluster.
+//!
+//! The inline lane re-ships the full encoded source inside every
+//! stage's `task.run` RPC (once per stage per worker); the broadcast
+//! lane ships a plan skeleton and each worker pulls the source's blocks
+//! over its wire once per job (peer-preferring, cached across stages).
+//! Expected shape: broadcast wins and its margin grows with stage count
+//! and worker count; the printed `broadcast.bytes.fetched.*` split
+//! shows how much of the traffic the peers absorbed from the driver.
+//!
+//! Run: `cargo bench --bench bench_broadcast` (MPIGNITE_BENCH_FAST=1 to
+//! smoke). CSV block feeds CHANGES.md baselines.
+
+use mpignite::bench::{black_box, BenchSuite, Throughput};
+use mpignite::closure::register_op;
+use mpignite::cluster::Worker;
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use mpignite::rdd::AggSpec;
+use std::sync::Arc;
+use std::time::Duration;
+
+const ROWS: usize = 2000;
+const PARTS: usize = 4;
+
+fn register_ops() {
+    register_op("bench.bcast.pair", |v| Ok(Value::List(vec![v, Value::I64(1)])));
+}
+
+fn source_rows() -> Vec<Value> {
+    (0..ROWS as i64).map(|x| Value::Str(format!("key-{:05}", x % 97))).collect()
+}
+
+/// One multi-stage plan job: map → reduce_by_key → reduce_by_key.
+fn run_job(sc: &IgniteContext) -> usize {
+    sc.parallelize_values_with(source_rows(), PARTS)
+        .map_named("bench.bcast.pair")
+        .reduce_by_key(3, AggSpec::SumI64)
+        .reduce_by_key(2, AggSpec::First)
+        .collect()
+        .expect("bench job")
+        .len()
+}
+
+fn cluster(auto_min_bytes: &str) -> (IgniteContext, Vec<Arc<Worker>>) {
+    let mut conf = IgniteConf::new();
+    conf.set("ignite.worker.heartbeat.ms", "50");
+    conf.set("ignite.broadcast.auto.min.bytes", auto_min_bytes);
+    let sc = IgniteContext::cluster_driver(conf.clone(), 0).expect("driver");
+    let master = sc.master().unwrap().clone();
+    let workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&conf, master.address()).expect("worker")).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+    (sc, workers)
+}
+
+fn main() {
+    mpignite::util::init_logger();
+    register_ops();
+    let src_bytes = mpignite::ser::to_bytes(&source_rows()).len() as u64;
+    let mut suite = BenchSuite::new(format!(
+        "E11: plan stage shipping, inline vs broadcast source ({ROWS} rows, {src_bytes} B encoded, 2 workers, 3 stages)"
+    ));
+
+    // --- lane 1: inline sources (threshold never reached) --------------
+    {
+        let (sc, _workers) = cluster("1073741824");
+        suite.bench_throughput("job_inline_source", Throughput::Bytes(src_bytes), || {
+            black_box(run_job(&sc));
+        });
+        sc.master().unwrap().shutdown();
+    }
+
+    // --- lane 2: broadcast SourceRef (every source ships by id) --------
+    {
+        let (sc, _workers) = cluster("1");
+        suite.bench_throughput("job_broadcast_source", Throughput::Bytes(src_bytes), || {
+            black_box(run_job(&sc));
+        });
+        let peer = mpignite::metrics::global().counter("broadcast.bytes.fetched.peer").get();
+        let master = mpignite::metrics::global().counter("broadcast.bytes.fetched.master").get();
+        println!(
+            "broadcast fetch split: {peer} B from peers, {master} B from the master/driver"
+        );
+        sc.master().unwrap().shutdown();
+    }
+
+    suite.report();
+}

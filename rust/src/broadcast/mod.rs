@@ -1,0 +1,656 @@
+//! Cluster-wide broadcast plane — chunked block distribution with peer
+//! fetch (the engine's analogue of Spark's TorrentBroadcast, and the
+//! distributed realization of the `blockstore` strategy the
+//! `ignite.comm.bcast.algo` config has advertised since the seed).
+//!
+//! A broadcast value's life cycle:
+//!
+//! 1. **encode + chunk** — the driver encodes the value through the
+//!    [`crate::ser`] codec and splits the bytes into fixed-size blocks
+//!    (`ignite.broadcast.block.bytes`, [`chunk_bytes`]);
+//! 2. **register** — the blocks are stored with the embedded master
+//!    (served over its `broadcast.fetch` endpoint) and recorded in the
+//!    master's broadcast block-location table
+//!    (`master.broadcast.register` / `master.broadcast.locate` — the
+//!    broadcast twin of the PR 1 shuffle map-output table);
+//! 3. **fetch** — the first task on a worker that needs the value asks
+//!    the master where each block lives and pulls it **preferentially
+//!    from peers that already hold it** (torrent-style, spreading load
+//!    across the cluster), falling back to the driver/master copy when a
+//!    peer is gone; fetched blocks are cached in the worker's
+//!    [`BroadcastManager`] and the worker announces itself as a holder,
+//!    so later workers fetch from it instead of the driver;
+//! 4. **reassemble + cache** — the blocks are concatenated, decoded, and
+//!    the decoded value is cached in the worker's
+//!    [`crate::storage::BlockManager`] (see
+//!    [`crate::scheduler::Engine::broadcast_value`]), so a value crosses
+//!    each worker's wire **exactly once per job** regardless of how many
+//!    stages or tasks read it;
+//! 5. **clear** — job completion (success or failure) piggybacks one
+//!    driver-issued `job.clear` RPC that prunes the master's shuffle
+//!    *and* broadcast tables and fans out to workers, which drop their
+//!    cached blocks; `broadcast.clear` does the same for explicitly
+//!    destroyed [`Broadcast`] handles.
+//!
+//! The plan IR integrates through [`crate::rdd::PlanSpec::SourceRef`]:
+//! `Master::run_plan` rewrites `Source` nodes at or above
+//! `ignite.broadcast.auto.min.bytes` into broadcast references, so a
+//! multi-stage job ships each stage as a tiny plan skeleton instead of
+//! inlining the full dataset into every `task.run` RPC.
+//!
+//! Instrumentation: `broadcast.bytes.fetched.peer` /
+//! `broadcast.bytes.fetched.master` split where bytes actually came
+//! from, `broadcast.blocks.cached` counts locally-held blocks, and
+//! `broadcast.fetch.latency` records per-block pull latency.
+
+use crate::error::{IgniteError, Result};
+use crate::metrics;
+use crate::ser::Value;
+use crate::shuffle::StableHasher;
+use std::collections::HashMap;
+use std::hash::Hasher;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Default block size when `ignite.broadcast.block.bytes` is absent.
+pub const DEFAULT_BLOCK_BYTES: usize = 256 * 1024;
+
+/// `(broadcast id, block index)` — the unit of distribution.
+type BlockKey = (u64, usize);
+
+/// Split encoded bytes into `block_bytes`-sized chunks (the last block
+/// may be shorter; an empty payload still yields one empty block so every
+/// value has at least one fetchable unit).
+pub fn chunk_bytes(bytes: &[u8], block_bytes: usize) -> Vec<Vec<u8>> {
+    if bytes.is_empty() {
+        return vec![Vec::new()];
+    }
+    bytes.chunks(block_bytes.max(1)).map(|c| c.to_vec()).collect()
+}
+
+/// BlockManager cache key of a broadcast's decoded [`Value`].
+pub fn value_cache_key(id: u64) -> String {
+    format!("broadcast-val-{id}")
+}
+
+/// BlockManager cache key of a broadcast's decoded partition set
+/// (the `SourceRef` payload).
+pub fn partitions_cache_key(id: u64) -> String {
+    format!("broadcast-parts-{id}")
+}
+
+/// Shape of one fully-registered broadcast value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BroadcastMeta {
+    pub num_blocks: usize,
+    pub total_bytes: usize,
+}
+
+/// The master's answer to `master.broadcast.locate`: per-block holder
+/// addresses (the driver/master copy is always included; worker holders
+/// are filtered to live ones, though a worker that died between
+/// heartbeats may still be listed — the fetch path falls back past it).
+#[derive(Debug, Clone, Default)]
+pub struct BroadcastLocations {
+    pub num_blocks: usize,
+    pub total_bytes: usize,
+    pub holders: HashMap<usize, Vec<String>>,
+}
+
+/// Network hooks wiring a [`BroadcastManager`] into a cluster — the
+/// broadcast twin of [`crate::shuffle::ShuffleNet`]. Implemented over RPC
+/// by [`crate::cluster::RpcBroadcastNet`]; absent in pure local mode.
+pub trait BroadcastNet: Send + Sync {
+    /// Announce that this process holds every block of broadcast `id`
+    /// (workers register after assembling a value, making themselves
+    /// peers for later fetchers).
+    fn register(&self, id: u64, num_blocks: usize, total_bytes: usize) -> Result<()>;
+    /// Ask the master where broadcast `id`'s blocks live.
+    fn locate(&self, id: u64) -> Result<BroadcastLocations>;
+    /// Fetch one block's bytes from the holder at `addr`.
+    fn fetch(&self, addr: &str, id: u64, block: usize) -> Result<Vec<u8>>;
+    /// This process's own broadcast-serving address (skip self-fetch).
+    fn local_addr(&self) -> String;
+    /// The master/driver address — the always-available fallback holder.
+    fn master_addr(&self) -> String;
+}
+
+/// Per-process broadcast block cache with a peer-preferring remote tier.
+///
+/// Lives on every [`crate::scheduler::Engine`]; in cluster mode the
+/// worker wires it to the RPC plane via [`BroadcastManager::set_net`]
+/// (see `crate::cluster::install_broadcast_service`).
+pub struct BroadcastManager {
+    block_bytes: usize,
+    /// Locally-held blocks (driver-registered or fetched).
+    blocks: RwLock<HashMap<BlockKey, Arc<Vec<u8>>>>,
+    /// Fully-assembled values known locally.
+    meta: Mutex<HashMap<u64, BroadcastMeta>>,
+    /// Single-flight gates: concurrent tasks wanting the same value must
+    /// not each pull it over the wire (that would break the
+    /// once-per-worker guarantee the whole plane exists for).
+    fetch_gates: Mutex<HashMap<u64, Arc<Mutex<()>>>>,
+    /// Cluster plane; `None` in local mode.
+    net: RwLock<Option<Arc<dyn BroadcastNet>>>,
+}
+
+impl Default for BroadcastManager {
+    fn default() -> Self {
+        BroadcastManager::new(DEFAULT_BLOCK_BYTES)
+    }
+}
+
+impl BroadcastManager {
+    pub fn new(block_bytes: usize) -> Self {
+        BroadcastManager {
+            block_bytes: block_bytes.max(1),
+            blocks: RwLock::new(HashMap::new()),
+            meta: Mutex::new(HashMap::new()),
+            fetch_gates: Mutex::new(HashMap::new()),
+            net: RwLock::new(None),
+        }
+    }
+
+    /// Configured block (chunk) size in bytes.
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes
+    }
+
+    /// Wire this manager into a cluster (worker startup).
+    pub fn set_net(&self, net: Arc<dyn BroadcastNet>) {
+        *self.net.write().unwrap() = Some(net);
+    }
+
+    fn net(&self) -> Option<Arc<dyn BroadcastNet>> {
+        self.net.read().unwrap().clone()
+    }
+
+    /// Chunk and store a value's encoded bytes locally (driver-side
+    /// registration, or a test staging blocks for a `SourceRef` plan).
+    /// Returns the number of blocks.
+    pub fn put_value_bytes(&self, id: u64, bytes: &[u8]) -> usize {
+        let chunks = chunk_bytes(bytes, self.block_bytes);
+        let n = chunks.len();
+        {
+            let mut blocks = self.blocks.write().unwrap();
+            for (i, c) in chunks.into_iter().enumerate() {
+                blocks.insert((id, i), Arc::new(c));
+            }
+        }
+        self.meta
+            .lock()
+            .unwrap()
+            .insert(id, BroadcastMeta { num_blocks: n, total_bytes: bytes.len() });
+        metrics::global().counter("broadcast.blocks.cached").add(n as u64);
+        n
+    }
+
+    /// One locally-held block — what the worker's `broadcast.fetch`
+    /// endpoint serves. Remote requests must never recurse into the
+    /// remote tier.
+    pub fn local_block(&self, id: u64, block: usize) -> Option<Arc<Vec<u8>>> {
+        self.blocks.read().unwrap().get(&(id, block)).cloned()
+    }
+
+    /// Reassemble a fully locally-held value; `None` when any block (or
+    /// the value itself) is unknown here.
+    pub fn local_value_bytes(&self, id: u64) -> Option<Vec<u8>> {
+        let meta = self.meta.lock().unwrap().get(&id).copied()?;
+        let blocks = self.blocks.read().unwrap();
+        let mut out = Vec::with_capacity(meta.total_bytes);
+        for b in 0..meta.num_blocks {
+            out.extend_from_slice(blocks.get(&(id, b))?);
+        }
+        Some(out)
+    }
+
+    /// Fetch a value's encoded bytes: local cache first, then the remote
+    /// plane block by block (peers preferred, master/driver fallback).
+    /// After assembly the blocks are cached and this process announces
+    /// itself as a holder, so the value crosses this process's wire at
+    /// most once.
+    pub fn fetch_value_bytes(&self, id: u64) -> Result<Vec<u8>> {
+        // Single-flight per id: the loser of the gate race finds the
+        // winner's blocks in the local cache. The gate entry doubles as
+        // a liveness token — `clear` removes it, and an assembly only
+        // publishes its blocks while its own entry is still present, so
+        // a straggler fetch racing a job-end clear cannot resurrect
+        // freed state (which no future GC would ever name again).
+        let gate = {
+            let mut gates = self.fetch_gates.lock().unwrap();
+            gates.entry(id).or_insert_with(|| Arc::new(Mutex::new(()))).clone()
+        };
+        let _flight = gate.lock().unwrap();
+        if let Some(bytes) = self.local_value_bytes(id) {
+            return Ok(bytes);
+        }
+        let net = self.net().ok_or_else(|| {
+            IgniteError::Storage(format!(
+                "broadcast {id} not present locally and no cluster plane to fetch it from"
+            ))
+        })?;
+        let loc = net.locate(id)?;
+        if loc.num_blocks == 0 {
+            return Err(IgniteError::Storage(format!(
+                "broadcast {id} unknown to the master (cleared or never registered)"
+            )));
+        }
+        // Deterministic per-process offset so a fleet of workers spreads
+        // its peer picks instead of stampeding one holder.
+        let me = net.local_addr();
+        let mut h = StableHasher::new();
+        h.write(me.as_bytes());
+        let spread = h.finish() as usize;
+
+        // Assemble into a staging buffer; nothing is visible to peers or
+        // local readers until the publish step below, so an error mid-way
+        // leaves no partial state behind.
+        let mut staged: Vec<Vec<u8>> = Vec::with_capacity(loc.num_blocks);
+        let mut out = Vec::with_capacity(loc.total_bytes);
+        for block in 0..loc.num_blocks {
+            let bytes = self.fetch_block(net.as_ref(), &loc, id, block, spread)?;
+            out.extend_from_slice(&bytes);
+            staged.push(bytes);
+        }
+        if out.len() != loc.total_bytes {
+            return Err(IgniteError::Storage(format!(
+                "broadcast {id}: reassembled {} bytes, expected {}",
+                out.len(),
+                loc.total_bytes
+            )));
+        }
+        // Publish under the gate-map lock (lock order gates → blocks →
+        // meta, matching `clear`): if a clear raced the assembly, the
+        // gate entry is gone and the blocks are dropped instead of
+        // cached. The caller still gets its bytes either way.
+        let published = {
+            let gates = self.fetch_gates.lock().unwrap();
+            if gates.get(&id).map(|g| Arc::ptr_eq(g, &gate)).unwrap_or(false) {
+                {
+                    let mut blocks = self.blocks.write().unwrap();
+                    for (i, bytes) in staged.into_iter().enumerate() {
+                        blocks.insert((id, i), Arc::new(bytes));
+                    }
+                }
+                self.meta.lock().unwrap().insert(
+                    id,
+                    BroadcastMeta { num_blocks: loc.num_blocks, total_bytes: loc.total_bytes },
+                );
+                metrics::global()
+                    .counter("broadcast.blocks.cached")
+                    .add(loc.num_blocks as u64);
+                true
+            } else {
+                log::debug!(target: "broadcast", "broadcast {id} cleared mid-fetch; dropping assembled blocks");
+                false
+            }
+        };
+        // Peer announcement outside every lock (it is an RPC). Best
+        // effort: failing to register only costs future fetchers the
+        // peer shortcut, never correctness; a registration racing a
+        // clear is ignored by the master (unknown id).
+        if published {
+            if let Err(e) = net.register(id, loc.num_blocks, loc.total_bytes) {
+                log::warn!(target: "broadcast", "peer registration of broadcast {id} failed: {e}");
+            }
+        }
+        Ok(out)
+    }
+
+    /// Pull one block: every live peer holder in spread order, then the
+    /// master/driver copy. A dead peer costs one failed RPC, not the job.
+    fn fetch_block(
+        &self,
+        net: &dyn BroadcastNet,
+        loc: &BroadcastLocations,
+        id: u64,
+        block: usize,
+        spread: usize,
+    ) -> Result<Vec<u8>> {
+        let me = net.local_addr();
+        let master = net.master_addr();
+        let empty: Vec<String> = Vec::new();
+        let holders = loc.holders.get(&block).unwrap_or(&empty);
+        let mut peers: Vec<&String> =
+            holders.iter().filter(|a| **a != me && **a != master).collect();
+        if !peers.is_empty() {
+            let n = peers.len();
+            peers.rotate_left(spread.wrapping_add(block) % n);
+        }
+        let t0 = std::time::Instant::now();
+        for addr in peers {
+            match net.fetch(addr, id, block) {
+                Ok(bytes) => {
+                    metrics::global().counter("broadcast.fetches.peer").inc();
+                    metrics::global()
+                        .counter("broadcast.bytes.fetched.peer")
+                        .add(bytes.len() as u64);
+                    metrics::global().histogram("broadcast.fetch.latency").record(t0.elapsed());
+                    return Ok(bytes);
+                }
+                Err(e) => {
+                    metrics::global().counter("broadcast.fetch.peer.failures").inc();
+                    log::warn!(
+                        target: "broadcast",
+                        "peer {addr} failed for broadcast {id} block {block} ({e}); trying next holder"
+                    );
+                }
+            }
+        }
+        let bytes = net.fetch(&master, id, block)?;
+        metrics::global().counter("broadcast.fetches.master").inc();
+        metrics::global().counter("broadcast.bytes.fetched.master").add(bytes.len() as u64);
+        metrics::global().histogram("broadcast.fetch.latency").record(t0.elapsed());
+        Ok(bytes)
+    }
+
+    /// Drop one broadcast's blocks and bookkeeping (job-end GC or an
+    /// explicit [`Broadcast::destroy`]). Holding the gate-map lock
+    /// across the drop (same gates → blocks → meta order as the publish
+    /// step in [`fetch_value_bytes`](Self::fetch_value_bytes)) means an
+    /// in-flight assembly either published before this clear — and is
+    /// removed here — or finds its gate entry gone and never publishes.
+    pub fn clear(&self, id: u64) {
+        let mut gates = self.fetch_gates.lock().unwrap();
+        gates.remove(&id);
+        self.blocks.write().unwrap().retain(|(bid, _), _| *bid != id);
+        self.meta.lock().unwrap().remove(&id);
+    }
+
+    /// Is this value fully assembled (and not cleared) locally?
+    pub fn contains(&self, id: u64) -> bool {
+        self.meta.lock().unwrap().contains_key(&id)
+    }
+
+    /// Fully-assembled values held locally.
+    pub fn value_count(&self) -> usize {
+        self.meta.lock().unwrap().len()
+    }
+
+    /// Blocks held locally (any value, including partial fetches).
+    pub fn block_count(&self) -> usize {
+        self.blocks.read().unwrap().len()
+    }
+}
+
+/// Driver-side handle to a broadcast value, returned by
+/// [`crate::context::IgniteContext::broadcast`]. Cheap to clone and to
+/// capture in parallel closures; [`Broadcast::value`] resolves through
+/// the engine's cached-decode path, so repeated reads cost one decode at
+/// most per process.
+#[derive(Clone)]
+pub struct Broadcast {
+    id: u64,
+    total_bytes: usize,
+    engine: Arc<crate::scheduler::Engine>,
+    master: Option<Arc<crate::cluster::Master>>,
+}
+
+impl Broadcast {
+    pub(crate) fn new(
+        id: u64,
+        total_bytes: usize,
+        engine: Arc<crate::scheduler::Engine>,
+        master: Option<Arc<crate::cluster::Master>>,
+    ) -> Self {
+        Broadcast { id, total_bytes, engine, master }
+    }
+
+    /// The broadcast's cluster-wide identity.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Encoded size of the value (what each worker's wire carries once).
+    pub fn total_bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    /// The broadcast value. Resolution: the engine's decoded cache and
+    /// block tiers first; on an embedded driver (whose engine holds no
+    /// raw copy — the master's store is the authoritative one) the
+    /// master's blocks are read directly, same process, no RPC.
+    pub fn value(&self) -> Result<Arc<Value>> {
+        match self.engine.broadcast_value(self.id) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                if let Some(master) = &self.master {
+                    if let Some(bytes) = master.broadcast_store().local_value_bytes(self.id) {
+                        return Ok(Arc::new(crate::ser::from_bytes(&bytes)?));
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Explicitly release the value everywhere: the master prunes its
+    /// table and fans `broadcast.clear` out to workers; the local engine
+    /// drops its blocks and cached decode.
+    pub fn destroy(&self) {
+        if let Some(master) = &self.master {
+            master.clear_broadcasts(&[self.id]);
+        }
+        self.engine.clear_broadcast(self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::to_bytes;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunking_splits_and_covers() {
+        let bytes: Vec<u8> = (0..=255u8).collect();
+        let chunks = chunk_bytes(&bytes, 100);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].len(), 100);
+        assert_eq!(chunks[2].len(), 56);
+        let joined: Vec<u8> = chunks.concat();
+        assert_eq!(joined, bytes);
+        // Exact multiple: no empty trailing block.
+        assert_eq!(chunk_bytes(&bytes[..200], 100).len(), 2);
+        // Empty payload still has one (empty) block.
+        assert_eq!(chunk_bytes(&[], 100), vec![Vec::<u8>::new()]);
+    }
+
+    #[test]
+    fn put_and_reassemble_locally() {
+        let bm = BroadcastManager::new(8);
+        let payload = to_bytes(&Value::Str("broadcast me, several blocks worth".into()));
+        let n = bm.put_value_bytes(7, &payload);
+        assert!(n > 1, "payload must span multiple 8-byte blocks");
+        assert_eq!(bm.value_count(), 1);
+        assert_eq!(bm.block_count(), n);
+        assert_eq!(bm.local_value_bytes(7).unwrap(), payload);
+        assert_eq!(bm.fetch_value_bytes(7).unwrap(), payload, "local hit needs no net");
+        assert!(bm.local_block(7, 0).is_some());
+        assert!(bm.local_block(7, n).is_none());
+        bm.clear(7);
+        assert_eq!(bm.value_count(), 0);
+        assert_eq!(bm.block_count(), 0);
+        assert!(bm.fetch_value_bytes(7).is_err(), "cleared + no net is an error");
+    }
+
+    /// Fake cluster plane: the master always holds every block; a single
+    /// peer optionally holds them too and can be made to fail.
+    struct FakeNet {
+        chunks: Vec<Vec<u8>>,
+        peer_listed: bool,
+        peer_ok: bool,
+        peer_fetches: AtomicUsize,
+        master_fetches: AtomicUsize,
+    }
+
+    impl FakeNet {
+        fn new(payload: &[u8], block: usize, peer_listed: bool, peer_ok: bool) -> Self {
+            FakeNet {
+                chunks: chunk_bytes(payload, block),
+                peer_listed,
+                peer_ok,
+                peer_fetches: AtomicUsize::new(0),
+                master_fetches: AtomicUsize::new(0),
+            }
+        }
+    }
+
+    impl BroadcastNet for FakeNet {
+        fn register(&self, _id: u64, _n: usize, _t: usize) -> Result<()> {
+            Ok(())
+        }
+
+        fn locate(&self, _id: u64) -> Result<BroadcastLocations> {
+            let mut holders = HashMap::new();
+            for b in 0..self.chunks.len() {
+                let mut v = vec!["master:0".to_string()];
+                if self.peer_listed {
+                    v.push("peer:1".to_string());
+                }
+                holders.insert(b, v);
+            }
+            Ok(BroadcastLocations {
+                num_blocks: self.chunks.len(),
+                total_bytes: self.chunks.iter().map(Vec::len).sum(),
+                holders,
+            })
+        }
+
+        fn fetch(&self, addr: &str, _id: u64, block: usize) -> Result<Vec<u8>> {
+            match addr {
+                "peer:1" => {
+                    self.peer_fetches.fetch_add(1, Ordering::SeqCst);
+                    if self.peer_ok {
+                        Ok(self.chunks[block].clone())
+                    } else {
+                        Err(IgniteError::Rpc("peer is gone".into()))
+                    }
+                }
+                "master:0" => {
+                    self.master_fetches.fetch_add(1, Ordering::SeqCst);
+                    Ok(self.chunks[block].clone())
+                }
+                other => panic!("unexpected fetch target {other}"),
+            }
+        }
+
+        fn local_addr(&self) -> String {
+            "self:2".to_string()
+        }
+
+        fn master_addr(&self) -> String {
+            "master:0".to_string()
+        }
+    }
+
+    #[test]
+    fn remote_fetch_prefers_peers_and_caches() {
+        let payload = to_bytes(&Value::I64Vec((0..64).collect()));
+        let bm = BroadcastManager::new(16);
+        let net = Arc::new(FakeNet::new(&payload, 16, true, true));
+        bm.set_net(net.clone());
+        assert_eq!(bm.fetch_value_bytes(11).unwrap(), payload);
+        let n = chunk_bytes(&payload, 16).len();
+        assert_eq!(net.peer_fetches.load(Ordering::SeqCst), n, "every block from the peer");
+        assert_eq!(net.master_fetches.load(Ordering::SeqCst), 0);
+        // Second read is a pure local hit.
+        assert_eq!(bm.fetch_value_bytes(11).unwrap(), payload);
+        assert_eq!(net.peer_fetches.load(Ordering::SeqCst), n);
+        assert_eq!(bm.value_count(), 1);
+    }
+
+    #[test]
+    fn dead_peer_falls_back_to_master_per_block() {
+        let payload = to_bytes(&Value::Str("fallback payload across blocks".into()));
+        let bm = BroadcastManager::new(8);
+        let net = Arc::new(FakeNet::new(&payload, 8, true, false));
+        bm.set_net(net.clone());
+        assert_eq!(bm.fetch_value_bytes(12).unwrap(), payload);
+        let n = chunk_bytes(&payload, 8).len();
+        assert_eq!(net.peer_fetches.load(Ordering::SeqCst), n, "dead peer tried per block");
+        assert_eq!(net.master_fetches.load(Ordering::SeqCst), n, "master served every block");
+    }
+
+    #[test]
+    fn clear_racing_an_assembly_drops_instead_of_resurrecting() {
+        let payload = to_bytes(&Value::I64Vec((0..32).collect()));
+        let bm = Arc::new(BroadcastManager::new(16));
+
+        /// Delegates to [`FakeNet`] but fires a `clear` (the job-end GC)
+        /// while the last block is still in flight.
+        struct ClearingNet {
+            inner: FakeNet,
+            bm: Mutex<Option<Arc<BroadcastManager>>>,
+        }
+
+        impl BroadcastNet for ClearingNet {
+            fn register(&self, id: u64, n: usize, t: usize) -> Result<()> {
+                self.inner.register(id, n, t)
+            }
+            fn locate(&self, id: u64) -> Result<BroadcastLocations> {
+                self.inner.locate(id)
+            }
+            fn fetch(&self, addr: &str, id: u64, block: usize) -> Result<Vec<u8>> {
+                let bytes = self.inner.fetch(addr, id, block)?;
+                if block + 1 == self.inner.chunks.len() {
+                    if let Some(bm) = self.bm.lock().unwrap().take() {
+                        bm.clear(id); // GC lands mid-assembly
+                    }
+                }
+                Ok(bytes)
+            }
+            fn local_addr(&self) -> String {
+                self.inner.local_addr()
+            }
+            fn master_addr(&self) -> String {
+                self.inner.master_addr()
+            }
+        }
+
+        bm.set_net(Arc::new(ClearingNet {
+            inner: FakeNet::new(&payload, 16, false, true),
+            bm: Mutex::new(Some(bm.clone())),
+        }));
+        let got = bm.fetch_value_bytes(44).unwrap();
+        assert_eq!(got, payload, "the caller still gets its bytes");
+        assert_eq!(bm.value_count(), 0, "cleared mid-fetch: nothing may be published");
+        assert_eq!(bm.block_count(), 0, "cleared mid-fetch: no resurrected blocks");
+    }
+
+    #[test]
+    fn no_peers_means_master_only() {
+        let payload = to_bytes(&Value::F64(1.25));
+        let bm = BroadcastManager::new(4);
+        let net = Arc::new(FakeNet::new(&payload, 4, false, true));
+        bm.set_net(net.clone());
+        assert_eq!(bm.fetch_value_bytes(13).unwrap(), payload);
+        assert_eq!(net.peer_fetches.load(Ordering::SeqCst), 0);
+        assert!(net.master_fetches.load(Ordering::SeqCst) > 0);
+    }
+
+    #[test]
+    fn unknown_id_is_a_storage_error() {
+        let bm = BroadcastManager::new(4);
+        struct EmptyNet;
+        impl BroadcastNet for EmptyNet {
+            fn register(&self, _: u64, _: usize, _: usize) -> Result<()> {
+                Ok(())
+            }
+            fn locate(&self, _: u64) -> Result<BroadcastLocations> {
+                Ok(BroadcastLocations::default())
+            }
+            fn fetch(&self, _: &str, _: u64, _: usize) -> Result<Vec<u8>> {
+                unreachable!("nothing to fetch")
+            }
+            fn local_addr(&self) -> String {
+                "self:0".into()
+            }
+            fn master_addr(&self) -> String {
+                "master:0".into()
+            }
+        }
+        bm.set_net(Arc::new(EmptyNet));
+        let err = bm.fetch_value_bytes(99).unwrap_err();
+        assert!(err.to_string().contains("unknown to the master"), "got: {err}");
+    }
+}

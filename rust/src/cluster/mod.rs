@@ -60,7 +60,27 @@ pub const EP_PLAN_RESULT: &str = "master.plan_result";
 /// Map-output GC, registered on *both* envs: the driver asks the master
 /// to prune finished shuffles from its location table; the master fans
 /// the same message out to live workers, which drop their local buckets.
+/// Plan-job-end cleanup goes through the combined [`EP_JOB_CLEAR`]; this
+/// narrower endpoint remains for shuffle-only callers.
 pub const EP_SHUFFLE_CLEAR: &str = "shuffle.clear";
+/// Master broadcast block-location table (the broadcast twin of the
+/// map-output table): holders announce assembled values, fetchers ask
+/// where a broadcast's blocks live.
+pub const EP_BROADCAST_REGISTER: &str = "master.broadcast.register";
+pub const EP_BROADCAST_LOCATE: &str = "master.broadcast.locate";
+/// Block service, registered on the master env (serving the
+/// driver-registered authoritative copy) *and* on every worker env
+/// (serving blocks the worker has cached) — that is what makes peer
+/// fetch possible.
+pub const EP_BROADCAST_FETCH: &str = "broadcast.fetch";
+/// Broadcast GC, registered on both envs (explicit `Broadcast::destroy`):
+/// the master prunes its table + blocks and fans out to workers, which
+/// drop cached blocks and decoded values.
+pub const EP_BROADCAST_CLEAR: &str = "broadcast.clear";
+/// Combined job-end GC, registered on both envs: ONE driver RPC carries
+/// the finished plan job's shuffle ids and auto-created broadcast ids,
+/// so a failed job cannot clean one table and leak the other.
+pub const EP_JOB_CLEAR: &str = "job.clear";
 
 struct WorkerInfo {
     addr: RpcAddress,
@@ -104,6 +124,21 @@ pub struct Master {
     job_serial: Mutex<()>,
     /// Map-output table: shuffle → (total maps, map index → worker addr).
     map_outputs: Mutex<HashMap<u64, (usize, HashMap<usize, String>)>>,
+    /// Broadcast block-location table: id → shape + per-block holders.
+    broadcasts: Mutex<HashMap<u64, BroadcastEntry>>,
+    /// The driver-registered authoritative block copies this master
+    /// serves over [`EP_BROADCAST_FETCH`] (the always-available fallback
+    /// when every peer holding a block is gone). Same chunk/store/serve
+    /// machinery the workers use, never wired to a net.
+    broadcast_store: crate::broadcast::BroadcastManager,
+}
+
+/// One broadcast value in the master's location table.
+struct BroadcastEntry {
+    num_blocks: usize,
+    total_bytes: usize,
+    /// block index → addresses announcing they hold it.
+    holders: HashMap<usize, HashSet<String>>,
 }
 
 impl Master {
@@ -124,6 +159,11 @@ impl Master {
             next_job: AtomicU64::new(1),
             job_serial: Mutex::new(()),
             map_outputs: Mutex::new(HashMap::new()),
+            broadcasts: Mutex::new(HashMap::new()),
+            broadcast_store: crate::broadcast::BroadcastManager::new(
+                conf.get_usize("ignite.broadcast.block.bytes")
+                    .unwrap_or(crate::broadcast::DEFAULT_BLOCK_BYTES),
+            ),
         });
 
         let m = Arc::clone(&master);
@@ -273,6 +313,120 @@ impl Master {
                 let body = to_bytes(&req);
                 for (_, addr) in m.live_workers() {
                     let _ = m.env.send(&addr, EP_SHUFFLE_CLEAR, body.clone());
+                }
+                Ok(Some(Vec::new())) // ack
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_BROADCAST_REGISTER,
+            Arc::new(move |envelope: &Envelope| {
+                let reg: BroadcastRegister = from_bytes(&envelope.body)?;
+                // Peer registrations only ADD holders to broadcasts the
+                // driver registered: the master is the authority on what
+                // exists, so a late announcement racing a clear cannot
+                // resurrect a pruned table entry.
+                let mut table = m.broadcasts.lock().unwrap();
+                if let Some(entry) = table.get_mut(&reg.id) {
+                    for block in 0..reg.num_blocks as usize {
+                        entry.holders.entry(block).or_default().insert(reg.addr.clone());
+                    }
+                    metrics::global().counter("cluster.broadcast.registrations").inc();
+                }
+                Ok(Some(Vec::new())) // ack: the fetcher is now a peer
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_BROADCAST_LOCATE,
+            Arc::new(move |envelope: &Envelope| {
+                let req: BroadcastLocateReq = from_bytes(&envelope.body)?;
+                // Worker holders are filtered to live (heartbeating) ones;
+                // the master's own copy is always advertised. A worker
+                // that died since its last heartbeat may still be listed —
+                // the fetch path skips past it to the next holder.
+                let live: HashSet<String> = m
+                    .live_workers()
+                    .into_iter()
+                    .map(|(_, addr)| addr.0)
+                    .collect();
+                let self_addr = m.env.address().0;
+                let table = m.broadcasts.lock().unwrap();
+                let resp = match table.get(&req.id) {
+                    Some(entry) => {
+                        let mut locations: Vec<(u64, Vec<String>)> = entry
+                            .holders
+                            .iter()
+                            .map(|(block, addrs)| {
+                                let mut held: Vec<String> = addrs
+                                    .iter()
+                                    .filter(|a| live.contains(*a) || **a == self_addr)
+                                    .cloned()
+                                    .collect();
+                                held.sort();
+                                (*block as u64, held)
+                            })
+                            .collect();
+                        locations.sort_by_key(|(block, _)| *block);
+                        BroadcastLocateResp {
+                            num_blocks: entry.num_blocks as u64,
+                            total_bytes: entry.total_bytes as u64,
+                            locations,
+                        }
+                    }
+                    None => BroadcastLocateResp {
+                        num_blocks: 0,
+                        total_bytes: 0,
+                        locations: Vec::new(),
+                    },
+                };
+                Ok(Some(to_bytes(&resp)))
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_BROADCAST_FETCH,
+            Arc::new(move |envelope: &Envelope| {
+                serve_broadcast_fetch(&m.broadcast_store, envelope)
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_BROADCAST_CLEAR,
+            Arc::new(move |envelope: &Envelope| {
+                let req: BroadcastClear = from_bytes(&envelope.body)?;
+                m.drop_broadcasts(&req.broadcasts);
+                metrics::global().counter("cluster.broadcast.clears").inc();
+                let body = to_bytes(&req);
+                for (_, addr) in m.live_workers() {
+                    let _ = m.env.send(&addr, EP_BROADCAST_CLEAR, body.clone());
+                }
+                Ok(Some(Vec::new())) // ack
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_JOB_CLEAR,
+            Arc::new(move |envelope: &Envelope| {
+                let req: JobClear = from_bytes(&envelope.body)?;
+                {
+                    let mut table = m.map_outputs.lock().unwrap();
+                    for id in &req.shuffles {
+                        table.remove(id);
+                    }
+                }
+                m.drop_broadcasts(&req.broadcasts);
+                metrics::global().counter("cluster.job.clears").inc();
+                // One fan-out message per worker covering both kinds of
+                // job state; one-way, best-effort like shuffle.clear.
+                let body = to_bytes(&req);
+                for (_, addr) in m.live_workers() {
+                    let _ = m.env.send(&addr, EP_JOB_CLEAR, body.clone());
                 }
                 Ok(Some(Vec::new())) // ack
             }),
@@ -470,13 +624,57 @@ impl Master {
     /// map tasks register buckets + completion with the shuffle plane
     /// (visible cluster-wide through the master's map-output table),
     /// result tasks compute partitions whose reduce-side reads pull
-    /// remote buckets through `shuffle.fetch`. On completion the driver
-    /// piggybacks a `shuffle.clear` so the map-output table and the
-    /// workers' buckets for this job's shuffles are pruned.
+    /// remote buckets through `shuffle.fetch`. Sources at or above
+    /// `ignite.broadcast.auto.min.bytes` ship by reference through the
+    /// broadcast plane (see the rewrite below). On completion — success
+    /// or failure — the driver piggybacks one `job.clear` so the
+    /// map-output table, the broadcast table, and the workers' buckets
+    /// and broadcast blocks for this job are all pruned together.
     pub fn run_plan(&self, plan: &PlanSpec) -> Result<Vec<Vec<Value>>> {
         let _serial = self.job_serial.lock().unwrap();
         metrics::global().counter("cluster.plans.launched").inc();
-        let plan_bytes = to_bytes(plan);
+
+        // Ship large sources by reference: every `Source` node whose
+        // encoded partitions reach `ignite.broadcast.auto.min.bytes` is
+        // registered with the broadcast plane once and replaced by a
+        // `SourceRef`, so each stage's `task.run` carries a plan skeleton
+        // and each worker pulls the data over its wire at most once
+        // (first peer-preferring fetch, cached for every later stage).
+        let auto_min = self.conf.get_usize("ignite.broadcast.auto.min.bytes").unwrap_or(65536);
+        let mut auto_broadcasts: Vec<u64> = Vec::new();
+        let plan = plan.rewrite_sources(&mut |src| {
+            let PlanSpec::Source { partitions } = src else { return None };
+            if partitions.is_empty() {
+                return None;
+            }
+            // Cheap allocation-free gate first (the same `approx_size`
+            // discipline the blockstore collective uses), so sources that
+            // stay inline are not serialized twice per job — once here
+            // and once in the stage shipping encode below.
+            let approx: usize =
+                partitions.iter().flat_map(|p| p.iter()).map(Value::approx_size).sum();
+            if approx < auto_min {
+                return None;
+            }
+            let bytes = to_bytes(partitions);
+            if bytes.len() < auto_min {
+                return None;
+            }
+            let id = crate::util::next_id();
+            let blocks = self.register_broadcast_bytes(id, &bytes);
+            auto_broadcasts.push(id);
+            metrics::global().counter("cluster.broadcast.sources.rewritten").inc();
+            info!(
+                target: "cluster",
+                "plan source ({} B) ships as broadcast {id} ({blocks} blocks)",
+                bytes.len()
+            );
+            Some(PlanSpec::SourceRef {
+                broadcast_id: id,
+                num_partitions: partitions.len() as u64,
+            })
+        });
+        let plan_bytes = to_bytes(&plan);
         let stages = plan.shuffle_stages();
         let shuffles = plan.shuffle_ids();
 
@@ -512,18 +710,23 @@ impl Master {
                 .unwrap_or_else(|| IgniteError::Task("plan job retries exhausted".into())))
         });
 
-        // GC on success AND failure: a failed job's already-registered map
-        // outputs would otherwise sit in the master's table and the
-        // workers' bucket tiers forever. Driver-issued RPC so remote
-        // drivers exercise the same path as an embedded one.
-        if !shuffles.is_empty() {
+        // GC on success AND failure, in ONE driver RPC covering both the
+        // job's shuffles and its auto-created broadcasts: a failed job's
+        // registered map outputs — or its broadcast blocks on workers —
+        // would otherwise leak forever, and two separate clears could
+        // leave the tables inconsistent if the second were lost.
+        // Driver-issued RPC so remote drivers exercise the same path as
+        // an embedded one. (Broadcasts created via
+        // `IgniteContext::broadcast` are user-managed and NOT cleared
+        // here — only the sources this job inlined into the plane.)
+        if !shuffles.is_empty() || !auto_broadcasts.is_empty() {
             if let Err(e) = self.env.ask(
                 &self.env.address(),
-                EP_SHUFFLE_CLEAR,
-                to_bytes(&ShuffleClear { shuffles }),
+                EP_JOB_CLEAR,
+                to_bytes(&JobClear { shuffles, broadcasts: auto_broadcasts }),
                 Duration::from_secs(5),
             ) {
-                warn!(target: "cluster", "shuffle.clear after plan job failed: {e}");
+                warn!(target: "cluster", "job.clear after plan job failed: {e}");
             }
         }
         outcome
@@ -664,6 +867,75 @@ impl Master {
         self.map_outputs.lock().unwrap().len()
     }
 
+    /// Chunk an encoded broadcast value into blocks, hold the
+    /// authoritative copies (served over `broadcast.fetch` on this env),
+    /// and record this master as holder of every block in the location
+    /// table. Returns the number of blocks.
+    pub fn register_broadcast_bytes(&self, id: u64, bytes: &[u8]) -> usize {
+        let num_blocks = self.broadcast_store.put_value_bytes(id, bytes);
+        let addr = self.env.address().0;
+        let mut table = self.broadcasts.lock().unwrap();
+        let entry = table.entry(id).or_insert_with(|| BroadcastEntry {
+            num_blocks,
+            total_bytes: bytes.len(),
+            holders: HashMap::new(),
+        });
+        entry.num_blocks = num_blocks;
+        entry.total_bytes = bytes.len();
+        for block in 0..num_blocks {
+            entry.holders.entry(block).or_default().insert(addr.clone());
+        }
+        metrics::global().counter("cluster.broadcast.values.registered").inc();
+        metrics::global().counter("cluster.broadcast.bytes.registered").add(bytes.len() as u64);
+        num_blocks
+    }
+
+    /// Prune broadcasts from the location table and the master-held
+    /// block copies (the shared half of `broadcast.clear` / `job.clear`).
+    fn drop_broadcasts(&self, ids: &[u64]) {
+        if ids.is_empty() {
+            return;
+        }
+        {
+            let mut table = self.broadcasts.lock().unwrap();
+            for id in ids {
+                table.remove(id);
+            }
+        }
+        for id in ids {
+            self.broadcast_store.clear(*id);
+        }
+    }
+
+    /// Number of broadcasts currently tracked by the block-location
+    /// table (post-job GC leaves auto-created ones at zero).
+    pub fn broadcast_table_len(&self) -> usize {
+        self.broadcasts.lock().unwrap().len()
+    }
+
+    /// The master's authoritative block copies (read directly by
+    /// same-process [`crate::broadcast::Broadcast`] handles).
+    pub(crate) fn broadcast_store(&self) -> &crate::broadcast::BroadcastManager {
+        &self.broadcast_store
+    }
+
+    /// Driver-issued broadcast GC: prune the master's table and fan
+    /// `broadcast.clear` out to live workers (explicit
+    /// [`crate::broadcast::Broadcast::destroy`]).
+    pub fn clear_broadcasts(&self, ids: &[u64]) {
+        if ids.is_empty() {
+            return;
+        }
+        if let Err(e) = self.env.ask(
+            &self.env.address(),
+            EP_BROADCAST_CLEAR,
+            to_bytes(&BroadcastClear { broadcasts: ids.to_vec() }),
+            Duration::from_secs(5),
+        ) {
+            warn!(target: "cluster", "broadcast.clear of {ids:?} failed: {e}");
+        }
+    }
+
     /// Shut the master down.
     pub fn shutdown(&self) {
         self.env.shutdown();
@@ -770,6 +1042,118 @@ pub fn install_shuffle_service(
         .set_net(Arc::new(RpcShuffleNet::new(env.clone(), master, timeout)));
 }
 
+/// [`crate::broadcast::BroadcastNet`] over the cluster RPC plane: value
+/// registration and block location via the master's broadcast table,
+/// block pulls via any holder's `broadcast.fetch` endpoint.
+pub struct RpcBroadcastNet {
+    env: RpcEnv,
+    master: RpcAddress,
+    timeout: Duration,
+}
+
+impl RpcBroadcastNet {
+    pub fn new(env: RpcEnv, master: RpcAddress, timeout: Duration) -> Self {
+        RpcBroadcastNet { env, master, timeout }
+    }
+}
+
+impl crate::broadcast::BroadcastNet for RpcBroadcastNet {
+    fn register(&self, id: u64, num_blocks: usize, total_bytes: usize) -> Result<()> {
+        let req = BroadcastRegister {
+            id,
+            num_blocks: num_blocks as u64,
+            total_bytes: total_bytes as u64,
+            addr: self.env.address().0,
+        };
+        // Ask (not send): once this returns, the master lists us as a
+        // peer — later fetchers on other workers can offload the master.
+        self.env.ask(&self.master, EP_BROADCAST_REGISTER, to_bytes(&req), self.timeout)?;
+        Ok(())
+    }
+
+    fn locate(&self, id: u64) -> Result<crate::broadcast::BroadcastLocations> {
+        let resp = self.env.ask(
+            &self.master,
+            EP_BROADCAST_LOCATE,
+            to_bytes(&BroadcastLocateReq { id }),
+            self.timeout,
+        )?;
+        let resp: BroadcastLocateResp = from_bytes(&resp)?;
+        Ok(crate::broadcast::BroadcastLocations {
+            num_blocks: resp.num_blocks as usize,
+            total_bytes: resp.total_bytes as usize,
+            holders: resp
+                .locations
+                .into_iter()
+                .map(|(block, addrs)| (block as usize, addrs))
+                .collect(),
+        })
+    }
+
+    fn fetch(&self, addr: &str, id: u64, block: usize) -> Result<Vec<u8>> {
+        let resp = self.env.ask(
+            &RpcAddress(addr.to_string()),
+            EP_BROADCAST_FETCH,
+            to_bytes(&BroadcastFetchReq { id, block: block as u64 }),
+            self.timeout,
+        )?;
+        let resp: BroadcastFetchResp = from_bytes(&resp)?;
+        resp.bytes.ok_or_else(|| {
+            IgniteError::Storage(format!(
+                "holder {addr} no longer has broadcast {id} block {block}"
+            ))
+        })
+    }
+
+    fn local_addr(&self) -> String {
+        self.env.address().0
+    }
+
+    fn master_addr(&self) -> String {
+        self.master.0.clone()
+    }
+}
+
+/// Install the worker half of the broadcast plane on an RPC env: serve
+/// locally-cached blocks on [`EP_BROADCAST_FETCH`] (peer fetch) and wire
+/// the engine's broadcast manager to the master's block-location table.
+pub fn install_broadcast_service(
+    env: &RpcEnv,
+    master: RpcAddress,
+    engine: &Arc<crate::scheduler::Engine>,
+    timeout: Duration,
+) {
+    let serve = engine.clone();
+    env.register(
+        EP_BROADCAST_FETCH,
+        Arc::new(move |envelope: &Envelope| serve_broadcast_fetch(&serve.broadcast, envelope)),
+    );
+    engine
+        .broadcast
+        .set_net(Arc::new(RpcBroadcastNet::new(env.clone(), master, timeout)));
+}
+
+/// Shared `broadcast.fetch` handler body, used by the master (serving
+/// the driver-registered authoritative copies) and by every worker
+/// (serving blocks it has cached): look one block up, count it as
+/// served or missed, and encode the response. A miss is not an error at
+/// this layer — the fetcher falls back to the next holder.
+fn serve_broadcast_fetch(
+    store: &crate::broadcast::BroadcastManager,
+    envelope: &Envelope,
+) -> Result<Option<Vec<u8>>> {
+    let req: BroadcastFetchReq = from_bytes(&envelope.body)?;
+    let bytes = store.local_block(req.id, req.block as usize).map(|b| (*b).clone());
+    metrics::global()
+        .counter(if bytes.is_some() {
+            "cluster.broadcast.fetches.served"
+        } else {
+            "cluster.broadcast.fetches.missed"
+        })
+        .inc();
+    Ok(Some(to_bytes(&BroadcastFetchResp { bytes })))
+}
+
 /// The metric name of one worker's task-execution counter (how many
 /// shipped plan-stage tasks it has run). Per-worker so tests — and
 /// operators — can assert *where* tasks ran, not just that they ran.
@@ -861,6 +1245,15 @@ impl Worker {
             &engine,
             conf.get_duration_ms("ignite.shuffle.fetch.timeout.ms")?,
         );
+        // Broadcast plane: serve cached blocks to peers over
+        // `broadcast.fetch` and resolve values through the master's
+        // block-location table (peer-preferring fetch on miss).
+        install_broadcast_service(
+            &env,
+            master_addr.clone(),
+            &engine,
+            conf.get_duration_ms("ignite.broadcast.fetch.timeout.ms")?,
+        );
 
         // Stage execution endpoint: decode the shipped plan, run the
         // assigned tasks on this worker's engine (pool, retries,
@@ -919,6 +1312,42 @@ impl Worker {
                     let req: ShuffleClear = from_bytes(&envelope.body)?;
                     for id in req.shuffles {
                         engine.shuffle.clear_shuffle(id);
+                    }
+                    Ok(None)
+                }),
+            );
+        }
+
+        // Broadcast GC (explicit destroy): drop cached blocks and the
+        // decoded-value caches for the named broadcasts.
+        {
+            let engine = engine.clone();
+            env.register(
+                EP_BROADCAST_CLEAR,
+                Arc::new(move |envelope: &Envelope| {
+                    let req: BroadcastClear = from_bytes(&envelope.body)?;
+                    for id in req.broadcasts {
+                        engine.clear_broadcast(id);
+                    }
+                    Ok(None)
+                }),
+            );
+        }
+
+        // Combined job-end GC: one relayed message frees both this
+        // worker's shuffle buckets and its broadcast blocks, so a failed
+        // plan job cannot leak one while cleaning the other.
+        {
+            let engine = engine.clone();
+            env.register(
+                EP_JOB_CLEAR,
+                Arc::new(move |envelope: &Envelope| {
+                    let req: JobClear = from_bytes(&envelope.body)?;
+                    for id in req.shuffles {
+                        engine.shuffle.clear_shuffle(id);
+                    }
+                    for id in req.broadcasts {
+                        engine.clear_broadcast(id);
                     }
                     Ok(None)
                 }),
@@ -1204,6 +1633,33 @@ mod tests {
         assert_eq!(out, vec![Value::I64(4); 4]);
         let _ = recovered_before; // recovery only triggers if loss raced the launch
         assert_eq!(master.live_workers().len(), 2);
+        master.shutdown();
+    }
+
+    #[test]
+    fn master_broadcast_table_serves_and_clears() {
+        let (master, workers) = setup(1);
+        let bytes: Vec<u8> = (0..200u8).collect();
+        let blocks = master.register_broadcast_bytes(7001, &bytes);
+        assert!(blocks >= 1);
+        assert_eq!(master.broadcast_table_len(), 1);
+        // The worker resolves the value over the RPC plane (master copy)
+        // and becomes a registered peer holder.
+        let got = workers[0].engine().broadcast.fetch_value_bytes(7001).unwrap();
+        assert_eq!(got, bytes);
+        assert_eq!(workers[0].engine().broadcast.value_count(), 1);
+
+        master.clear_broadcasts(&[7001]);
+        assert_eq!(master.broadcast_table_len(), 0);
+        // Worker-side drop arrives via the one-way fan-out; poll briefly.
+        let deadline = std::time::Instant::now() + Duration::from_secs(3);
+        while workers[0].engine().broadcast.value_count() != 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "broadcast.clear fan-out never drained the worker"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
         master.shutdown();
     }
 

@@ -336,6 +336,162 @@ impl Decode for ShuffleClear {
     }
 }
 
+/// Worker (or driver) → master: this process holds every block of a
+/// broadcast value — record it in the block-location table so later
+/// fetchers can pull from it peer-to-peer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BroadcastRegister {
+    pub id: u64,
+    pub num_blocks: u64,
+    pub total_bytes: u64,
+    /// The holder's RPC address serving `broadcast.fetch`.
+    pub addr: String,
+}
+
+impl Encode for BroadcastRegister {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.id.encode(buf);
+        self.num_blocks.encode(buf);
+        self.total_bytes.encode(buf);
+        self.addr.encode(buf);
+    }
+}
+impl Decode for BroadcastRegister {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(BroadcastRegister {
+            id: u64::decode(r)?,
+            num_blocks: u64::decode(r)?,
+            total_bytes: u64::decode(r)?,
+            addr: String::decode(r)?,
+        })
+    }
+}
+
+/// Worker → master: where do the blocks of broadcast `id` live?
+#[derive(Debug, Clone, PartialEq)]
+pub struct BroadcastLocateReq {
+    pub id: u64,
+}
+
+impl Encode for BroadcastLocateReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.id.encode(buf);
+    }
+}
+impl Decode for BroadcastLocateReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(BroadcastLocateReq { id: u64::decode(r)? })
+    }
+}
+
+/// Master → worker: per-block holder addresses of one broadcast
+/// (`num_blocks == 0` means the id is unknown — cleared or never
+/// registered). The master/driver copy is always listed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BroadcastLocateResp {
+    pub num_blocks: u64,
+    pub total_bytes: u64,
+    pub locations: Vec<(u64, Vec<String>)>,
+}
+
+impl Encode for BroadcastLocateResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.num_blocks.encode(buf);
+        self.total_bytes.encode(buf);
+        self.locations.encode(buf);
+    }
+}
+impl Decode for BroadcastLocateResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(BroadcastLocateResp {
+            num_blocks: u64::decode(r)?,
+            total_bytes: u64::decode(r)?,
+            locations: Vec::<(u64, Vec<String>)>::decode(r)?,
+        })
+    }
+}
+
+/// Fetcher → holder (`broadcast.fetch`): pull one block of a broadcast.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BroadcastFetchReq {
+    pub id: u64,
+    pub block: u64,
+}
+
+impl Encode for BroadcastFetchReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.id.encode(buf);
+        self.block.encode(buf);
+    }
+}
+impl Decode for BroadcastFetchReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(BroadcastFetchReq { id: u64::decode(r)?, block: u64::decode(r)? })
+    }
+}
+
+/// Holder → fetcher: the block's bytes, or `None` when the holder no
+/// longer has it (the fetcher falls back to the next holder).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BroadcastFetchResp {
+    pub bytes: Option<Vec<u8>>,
+}
+
+impl Encode for BroadcastFetchResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.bytes.encode(buf);
+    }
+}
+impl Decode for BroadcastFetchResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(BroadcastFetchResp { bytes: Option::<Vec<u8>>::decode(r)? })
+    }
+}
+
+/// Driver → master and master → workers (`broadcast.clear`): drop these
+/// broadcasts everywhere (explicit `Broadcast::destroy`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BroadcastClear {
+    pub broadcasts: Vec<u64>,
+}
+
+impl Encode for BroadcastClear {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.broadcasts.encode(buf);
+    }
+}
+impl Decode for BroadcastClear {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(BroadcastClear { broadcasts: Vec::<u64>::decode(r)? })
+    }
+}
+
+/// Driver → master and master → workers (`job.clear`): one plan job
+/// ended (success or failure) — prune its shuffles from the map-output
+/// table and its auto-created broadcasts from the block-location table,
+/// and fan both out to workers in a single message so a failed job can't
+/// leak one kind of state while cleaning the other.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobClear {
+    pub shuffles: Vec<u64>,
+    pub broadcasts: Vec<u64>,
+}
+
+impl Encode for JobClear {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.shuffles.encode(buf);
+        self.broadcasts.encode(buf);
+    }
+}
+impl Decode for JobClear {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(JobClear {
+            shuffles: Vec::<u64>::decode(r)?,
+            broadcasts: Vec::<u64>::decode(r)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -429,6 +585,43 @@ mod tests {
 
         let clear = ShuffleClear { shuffles: vec![9, 11] };
         assert_eq!(from_bytes::<ShuffleClear>(&to_bytes(&clear)).unwrap(), clear);
+    }
+
+    #[test]
+    fn broadcast_plane_messages_round_trip() {
+        let reg = BroadcastRegister {
+            id: 21,
+            num_blocks: 3,
+            total_bytes: 1000,
+            addr: "127.0.0.1:5000".into(),
+        };
+        assert_eq!(from_bytes::<BroadcastRegister>(&to_bytes(&reg)).unwrap(), reg);
+
+        let req = BroadcastLocateReq { id: 21 };
+        assert_eq!(from_bytes::<BroadcastLocateReq>(&to_bytes(&req)).unwrap(), req);
+
+        let resp = BroadcastLocateResp {
+            num_blocks: 2,
+            total_bytes: 640,
+            locations: vec![
+                (0, vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()]),
+                (1, vec!["127.0.0.1:1".into()]),
+            ],
+        };
+        assert_eq!(from_bytes::<BroadcastLocateResp>(&to_bytes(&resp)).unwrap(), resp);
+
+        let fetch = BroadcastFetchReq { id: 21, block: 1 };
+        assert_eq!(from_bytes::<BroadcastFetchReq>(&to_bytes(&fetch)).unwrap(), fetch);
+        for bytes in [None, Some(vec![9u8, 8, 7])] {
+            let resp = BroadcastFetchResp { bytes };
+            assert_eq!(from_bytes::<BroadcastFetchResp>(&to_bytes(&resp)).unwrap(), resp);
+        }
+
+        let clear = BroadcastClear { broadcasts: vec![21, 22] };
+        assert_eq!(from_bytes::<BroadcastClear>(&to_bytes(&clear)).unwrap(), clear);
+
+        let job = JobClear { shuffles: vec![9], broadcasts: vec![21] };
+        assert_eq!(from_bytes::<JobClear>(&to_bytes(&job)).unwrap(), job);
     }
 
     #[test]

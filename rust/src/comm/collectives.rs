@@ -25,9 +25,11 @@ impl SparkComm {
     /// Broadcast from `root`: the root passes `Some(data)`, the others
     /// `None`; everyone returns the broadcast value (the paper's
     /// `comm.broadcast[T](root, data?)`: "recipients of a broadcast
-    /// message only need to indicate the root rank").
+    /// message only need to indicate the root rank"). An invalid
+    /// `ignite.comm.bcast.algo` is a config error here — never a silent
+    /// fallback to the default algorithm.
     pub fn broadcast<T: IntoValue + FromValue>(&self, root: usize, data: Option<T>) -> Result<T> {
-        self.broadcast_with(self.bcast_algo(), root, data)
+        self.broadcast_with(self.bcast_algo()?, root, data)
     }
 
     /// Broadcast with an explicit algorithm (used by the E3 ablation).
@@ -134,13 +136,15 @@ impl SparkComm {
     // ------------------------------------------------------ allreduce --
 
     /// All-reduce with an arbitrary reduction closure (the paper's
-    /// signature enhancement over MPI's fixed op set).
+    /// signature enhancement over MPI's fixed op set). An invalid
+    /// `ignite.comm.allreduce.algo` is a config error here, like
+    /// [`broadcast`](Self::broadcast)'s algo key.
     pub fn all_reduce<T, F>(&self, data: T, f: F) -> Result<T>
     where
         T: IntoValue + FromValue + Clone,
         F: Fn(T, T) -> T,
     {
-        self.all_reduce_with(self.allreduce_algo(), data, f)
+        self.all_reduce_with(self.allreduce_algo()?, data, f)
     }
 
     /// All-reduce with an explicit algorithm.
@@ -465,10 +469,73 @@ impl SparkComm {
 
 #[cfg(test)]
 mod tests {
-    use super::super::{run_local_world, CollectiveAlgo};
+    use super::super::{run_local_world, CollectiveAlgo, CommWorld};
+    use crate::config::IgniteConf;
 
     const ALGOS: [CollectiveAlgo; 3] =
         [CollectiveAlgo::Linear, CollectiveAlgo::Tree, CollectiveAlgo::BlockStore];
+
+    #[test]
+    fn unknown_bcast_algo_is_a_config_error_not_a_default() {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.comm.bcast.algo", "telepathy");
+        let world = CommWorld::local_with_conf(2, &conf);
+        let comm = world.comm_for_rank(0);
+        let err = comm.broadcast(0, Some(1i64)).unwrap_err();
+        assert!(err.to_string().contains("bcast.algo"), "got: {err}");
+        // Explicit-algorithm broadcasts are unaffected by the bad key
+        // (single-rank world: no peers needed).
+        let solo = CommWorld::local_with_conf(1, &conf);
+        let c = solo.comm_for_rank(0);
+        assert_eq!(c.broadcast_with(CollectiveAlgo::Tree, 0, Some(5i64)).unwrap(), 5);
+
+        // Same discipline for the allreduce key.
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.comm.allreduce.algo", "rng"); // typo of "ring"
+        let world = CommWorld::local_with_conf(1, &conf);
+        let comm = world.comm_for_rank(0);
+        let err = comm.all_reduce(1i64, |a, b| a + b).unwrap_err();
+        assert!(err.to_string().contains("allreduce.algo"), "got: {err}");
+
+        // `ring` for *bcast* is rejected: it would silently run tree.
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.comm.bcast.algo", "ring");
+        let world = CommWorld::local_with_conf(2, &conf);
+        let err = world.comm_for_rank(0).broadcast(0, Some(1i64)).unwrap_err();
+        assert!(err.to_string().contains("bcast.algo"), "got: {err}");
+    }
+
+    #[test]
+    fn blockstore_chunks_large_payloads_through_the_broadcast_plane() {
+        use crate::metrics;
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.comm.bcast.algo", "blockstore");
+        conf.set("ignite.broadcast.block.bytes", "64");
+        let before = metrics::global().counter("comm.bcast.blockstore.chunked").get();
+        let world = CommWorld::local_with_conf(3, &conf);
+        let mut handles = Vec::new();
+        for rank in 0..3usize {
+            let world = std::sync::Arc::clone(&world);
+            handles.push(std::thread::spawn(move || {
+                let comm = world.comm_for_rank(rank);
+                let data: Option<Vec<f32>> = if rank == 0 {
+                    Some((0..256).map(|i| i as f32).collect()) // ≫ 64 B encoded
+                } else {
+                    None
+                };
+                comm.broadcast(0, data)
+            }));
+        }
+        for h in handles {
+            let got: Vec<f32> = h.join().unwrap().unwrap();
+            assert_eq!(got.len(), 256);
+            assert_eq!(got[255], 255.0);
+        }
+        assert!(
+            metrics::global().counter("comm.bcast.blockstore.chunked").get() > before,
+            "large blockstore broadcast must take the chunked path"
+        );
+    }
 
     #[test]
     fn broadcast_all_algorithms_all_roots() {

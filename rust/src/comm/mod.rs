@@ -70,9 +70,19 @@ impl CollectiveAlgo {
     }
 }
 
+/// Payload held in the in-process broadcast block store. Values whose
+/// encoding exceeds the broadcast block size are stored **chunked**
+/// through the same [`crate::broadcast::chunk_bytes`] splitter the
+/// cluster broadcast plane uses; readers reassemble and decode.
+#[derive(Clone)]
+enum BcastPayload {
+    Whole(Value),
+    Chunked { total_bytes: usize, blocks: Arc<Vec<Vec<u8>>> },
+}
+
 /// Entry in the in-process broadcast block store.
 struct BcastEntry {
-    value: Value,
+    payload: BcastPayload,
     remaining_readers: usize,
 }
 
@@ -81,8 +91,16 @@ pub struct CommWorld {
     transport: Arc<dyn CommTransport>,
     size: usize,
     recv_timeout: Duration,
-    bcast_algo: CollectiveAlgo,
-    allreduce_algo: CollectiveAlgo,
+    /// Parsed lazily-surfaced: an invalid `ignite.comm.bcast.algo` is a
+    /// config error raised at the first `broadcast`, never a silent
+    /// default (`IgniteConf::validate` also rejects it at startup).
+    bcast_algo: Result<CollectiveAlgo>,
+    /// Same discipline as `bcast_algo`: surfaced at the first
+    /// `all_reduce` instead of silently defaulting.
+    allreduce_algo: Result<CollectiveAlgo>,
+    /// Chunk threshold/size of the block-store algo
+    /// (`ignite.broadcast.block.bytes` — shared with the cluster plane).
+    bcast_block_bytes: usize,
     /// In-process broadcast store (the `BlockStore` algo; local mode only).
     bcast_store: Mutex<std::collections::HashMap<(u64, u64), BcastEntry>>,
     bcast_ready: Condvar,
@@ -112,14 +130,31 @@ impl CommWorld {
             recv_timeout: conf
                 .get_duration_ms("ignite.comm.recv.timeout.ms")
                 .unwrap_or(Duration::from_secs(30)),
-            bcast_algo: CollectiveAlgo::parse(
-                conf.get_str("ignite.comm.bcast.algo").unwrap_or("tree"),
-            )
-            .unwrap_or(CollectiveAlgo::Tree),
-            allreduce_algo: CollectiveAlgo::parse(
-                conf.get_str("ignite.comm.allreduce.algo").unwrap_or("tree"),
-            )
-            .unwrap_or(CollectiveAlgo::Tree),
+            // A missing key defaults; a *present but invalid* value is a
+            // config error surfaced at the first broadcast. `ring` is
+            // rejected here too: it is an allreduce-only shape, and
+            // accepting it would silently broadcast over tree.
+            bcast_algo: match conf.get("ignite.comm.bcast.algo") {
+                Some(s) => match CollectiveAlgo::parse(s) {
+                    Ok(CollectiveAlgo::Ring) | Err(_) => Err(IgniteError::Config(format!(
+                        "ignite.comm.bcast.algo={s} (want tree|linear|blockstore)"
+                    ))),
+                    Ok(algo) => Ok(algo),
+                },
+                None => Ok(CollectiveAlgo::Tree),
+            },
+            allreduce_algo: match conf.get("ignite.comm.allreduce.algo") {
+                Some(s) => CollectiveAlgo::parse(s).map_err(|_| {
+                    IgniteError::Config(format!(
+                        "ignite.comm.allreduce.algo={s} (want tree|linear|ring|blockstore)"
+                    ))
+                }),
+                None => Ok(CollectiveAlgo::Tree),
+            },
+            bcast_block_bytes: conf
+                .get_usize("ignite.broadcast.block.bytes")
+                .unwrap_or(crate::broadcast::DEFAULT_BLOCK_BYTES)
+                .max(1),
             bcast_store: Mutex::new(std::collections::HashMap::new()),
             bcast_ready: Condvar::new(),
         })
@@ -155,23 +190,23 @@ impl CommWorld {
 
     // -- block-store broadcast primitives (local transport only) --------
 
-    fn bcast_store_put(&self, key: (u64, u64), value: Value, readers: usize) {
+    fn bcast_store_put(&self, key: (u64, u64), payload: BcastPayload, readers: usize) {
         let mut store = self.bcast_store.lock().unwrap();
-        store.insert(key, BcastEntry { value, remaining_readers: readers });
+        store.insert(key, BcastEntry { payload, remaining_readers: readers });
         self.bcast_ready.notify_all();
     }
 
-    fn bcast_store_get(&self, key: (u64, u64), timeout: Duration) -> Result<Value> {
+    fn bcast_store_get(&self, key: (u64, u64), timeout: Duration) -> Result<BcastPayload> {
         let mut store = self.bcast_store.lock().unwrap();
         let deadline = std::time::Instant::now() + timeout;
         loop {
             if let Some(entry) = store.get_mut(&key) {
-                let value = entry.value.clone();
+                let payload = entry.payload.clone();
                 entry.remaining_readers -= 1;
                 if entry.remaining_readers == 0 {
                     store.remove(&key);
                 }
-                return Ok(value);
+                return Ok(payload);
             }
             let now = std::time::Instant::now();
             if now >= deadline {
@@ -324,12 +359,12 @@ impl SparkComm {
 
     // ------------------------------------------------------ internals --
 
-    pub(crate) fn bcast_algo(&self) -> CollectiveAlgo {
-        self.world.bcast_algo
+    pub(crate) fn bcast_algo(&self) -> Result<CollectiveAlgo> {
+        self.world.bcast_algo.clone()
     }
 
-    pub(crate) fn allreduce_algo(&self) -> CollectiveAlgo {
-        self.world.allreduce_algo
+    pub(crate) fn allreduce_algo(&self) -> Result<CollectiveAlgo> {
+        self.world.allreduce_algo.clone()
     }
 
     pub(crate) fn next_split_seq(&self) -> u64 {
@@ -361,12 +396,42 @@ impl SparkComm {
     }
 
     pub(crate) fn bcast_store_put(&self, seq: u64, value: Value) {
+        // Large payloads route through the broadcast plane's chunker —
+        // the in-process realization of the `blockstore` strategy the
+        // cluster plane distributes over RPC. `approx_size` gates the
+        // real encode so the common small-payload collective stays
+        // serialization-free.
+        let block = self.world.bcast_block_bytes;
+        let payload = if value.approx_size() > block {
+            let bytes = crate::ser::to_bytes(&value);
+            if bytes.len() > block {
+                let blocks = crate::broadcast::chunk_bytes(&bytes, block);
+                metrics::global().counter("comm.bcast.blockstore.chunked").inc();
+                metrics::global()
+                    .counter("comm.bcast.blockstore.blocks")
+                    .add(blocks.len() as u64);
+                BcastPayload::Chunked { total_bytes: bytes.len(), blocks: Arc::new(blocks) }
+            } else {
+                BcastPayload::Whole(value)
+            }
+        } else {
+            BcastPayload::Whole(value)
+        };
         // Readers: every member except the root.
-        self.world.bcast_store_put((self.context, seq), value, self.size().saturating_sub(1));
+        self.world.bcast_store_put((self.context, seq), payload, self.size().saturating_sub(1));
     }
 
     pub(crate) fn bcast_store_get(&self, seq: u64) -> Result<Value> {
-        self.world.bcast_store_get((self.context, seq), self.world.recv_timeout)
+        match self.world.bcast_store_get((self.context, seq), self.world.recv_timeout)? {
+            BcastPayload::Whole(v) => Ok(v),
+            BcastPayload::Chunked { total_bytes, blocks } => {
+                let mut bytes = Vec::with_capacity(total_bytes);
+                for b in blocks.iter() {
+                    bytes.extend_from_slice(b);
+                }
+                crate::ser::from_bytes(&bytes)
+            }
+        }
     }
 }
 

@@ -28,6 +28,9 @@ pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
     ("ignite.comm.allreduce.algo", "tree", "tree | linear | ring"),
     ("ignite.rpc.connect.timeout.ms", "2000", "TCP connect timeout"),
     ("ignite.rpc.frame.max", "67108864", "Max RPC frame size (bytes)"),
+    ("ignite.broadcast.block.bytes", "262144", "Broadcast plane block (chunk) size"),
+    ("ignite.broadcast.auto.min.bytes", "65536", "Plan Source nodes at least this large ship as broadcast SourceRef"),
+    ("ignite.broadcast.fetch.timeout.ms", "5000", "Remote broadcast.fetch RPC timeout"),
     ("ignite.shuffle.partitions", "8", "Default reduce-side partition count"),
     ("ignite.shuffle.memory.bytes", "67108864", "In-memory shuffle bucket budget; overflow spills to disk"),
     ("ignite.shuffle.fetch.timeout.ms", "5000", "Remote shuffle.fetch RPC timeout"),
@@ -164,6 +167,26 @@ impl IgniteConf {
         self.get_usize("ignite.worker.slots")?;
         self.get_u64("ignite.rpc.frame.max")?;
         self.get_bool("ignite.task.speculation")?;
+        self.get_usize("ignite.broadcast.block.bytes")?;
+        self.get_usize("ignite.broadcast.auto.min.bytes")?;
+        // Collective algorithm names are validated per key, so a typo'd
+        // algo fails app startup instead of silently defaulting at the
+        // first broadcast (the comm layer double-checks at use time).
+        // `ring` is an allreduce-only shape — accepting it for bcast
+        // would silently run tree, the exact substitution this check
+        // exists to prevent.
+        let bcast = self.get_str("ignite.comm.bcast.algo")?;
+        if !matches!(bcast, "tree" | "linear" | "blockstore") {
+            return Err(IgniteError::Config(format!(
+                "ignite.comm.bcast.algo={bcast} (want tree|linear|blockstore)"
+            )));
+        }
+        let allreduce = self.get_str("ignite.comm.allreduce.algo")?;
+        if !matches!(allreduce, "tree" | "linear" | "ring" | "blockstore") {
+            return Err(IgniteError::Config(format!(
+                "ignite.comm.allreduce.algo={allreduce} (want tree|linear|ring|blockstore)"
+            )));
+        }
         Ok(())
     }
 
@@ -256,6 +279,33 @@ mod tests {
         let mut conf = IgniteConf::new();
         conf.set("ignite.comm.mode", "quantum");
         assert!(conf.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_collective_algo() {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.comm.bcast.algo", "telepathy");
+        let err = conf.validate().unwrap_err();
+        assert!(err.to_string().contains("bcast.algo"), "got: {err}");
+
+        // `ring` is allreduce-only: valid there, rejected for bcast
+        // (a ring "broadcast" would silently run the tree algorithm).
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.comm.bcast.algo", "ring");
+        assert!(conf.validate().is_err());
+
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.comm.bcast.algo", "blockstore");
+        conf.set("ignite.comm.allreduce.algo", "ring");
+        conf.validate().unwrap();
+    }
+
+    #[test]
+    fn broadcast_keys_have_integer_defaults() {
+        let conf = IgniteConf::new();
+        assert!(conf.get_usize("ignite.broadcast.block.bytes").unwrap() > 0);
+        assert!(conf.get_usize("ignite.broadcast.auto.min.bytes").unwrap() > 0);
+        conf.get_duration_ms("ignite.broadcast.fetch.timeout.ms").unwrap();
     }
 
     #[test]

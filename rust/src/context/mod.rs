@@ -4,14 +4,16 @@
 //! (`parallelize_func`), and in cluster mode drives named parallel
 //! functions across worker processes.
 
+use crate::broadcast::Broadcast;
 use crate::closure::FuncRdd;
 use crate::cluster::Master;
 use crate::comm::{CommWorld, SparkComm};
 use crate::config::{IgniteConf, MasterSpec};
 use crate::error::{IgniteError, Result};
+use crate::metrics;
 use crate::rdd::{ParallelCollectionNode, PlanRdd, PlanSpec, Rdd};
 use crate::scheduler::Engine;
-use crate::ser::Value;
+use crate::ser::{to_bytes, Value};
 use crate::util::split_ranges;
 use std::sync::Arc;
 
@@ -132,6 +134,42 @@ impl IgniteContext {
     /// cluster mode, its master.
     pub fn plan_rdd(&self, plan: PlanSpec) -> PlanRdd {
         PlanRdd::new(plan, self.engine.clone(), self.master.clone())
+    }
+
+    /// Broadcast a value cluster-wide through the block-distribution
+    /// plane: the value is encoded once, chunked into
+    /// `ignite.broadcast.block.bytes` blocks, cached on the driver, and
+    /// (in cluster mode) registered with the master's block-location
+    /// table. Workers resolve [`Broadcast::value`] by pulling blocks
+    /// preferentially from peers that already assembled the value,
+    /// falling back to the master — each worker's wire carries the value
+    /// at most once, however many tasks read it. Call
+    /// [`Broadcast::destroy`] to release it cluster-wide.
+    pub fn broadcast(&self, value: Value) -> Result<Broadcast> {
+        let id = crate::util::next_id();
+        let bytes = to_bytes(&value);
+        // One authoritative chunked copy per process: the embedded
+        // master's store in cluster mode (it is what `broadcast.fetch`
+        // serves), the engine's manager in local mode. `Broadcast::value`
+        // resolves through whichever exists.
+        match &self.master {
+            Some(master) => {
+                master.register_broadcast_bytes(id, &bytes);
+            }
+            None => {
+                self.engine.broadcast.put_value_bytes(id, &bytes);
+            }
+        }
+        // Cache the decoded value driver-side too: the handle's value()
+        // should never pay a re-decode on the process that made it.
+        let _ = self.engine.blocks.put_typed(
+            &crate::broadcast::value_cache_key(id),
+            Arc::new(value),
+            bytes.len(),
+        );
+        metrics::global().counter("broadcast.values.created").inc();
+        metrics::global().counter("broadcast.bytes.created").add(bytes.len() as u64);
+        Ok(Broadcast::new(id, bytes.len(), self.engine.clone(), self.master.clone()))
     }
 
     /// Create an RDD of lines from a text file.
@@ -301,6 +339,21 @@ mod tests {
         // A decoded copy executes identically through plan_rdd().
         let decoded: PlanSpec = crate::ser::from_bytes(&plan.encoded()).unwrap();
         assert_eq!(sc.plan_rdd(decoded).collect().unwrap(), rows);
+    }
+
+    #[test]
+    fn broadcast_local_roundtrip_and_destroy() {
+        let sc = IgniteContext::local(4);
+        let value = Value::F32Vec((0..256).map(|i| i as f32).collect());
+        let b = sc.broadcast(value.clone()).unwrap();
+        assert!(b.total_bytes() > 0);
+        assert_eq!(*b.value().unwrap(), value);
+        // Cheap to clone; clones resolve the same value.
+        let b2 = b.clone();
+        assert_eq!(b2.id(), b.id());
+        assert_eq!(*b2.value().unwrap(), value);
+        b.destroy();
+        assert!(b2.value().is_err(), "destroyed broadcast is unresolvable");
     }
 
     #[test]

@@ -93,6 +93,54 @@
 //! Key config: `ignite.task.run.timeout.ms` (distributed stage deadline),
 //! `ignite.task.retries` (stage re-run budget on worker loss).
 //!
+//! ## Broadcast plane: chunked block distribution with peer fetch
+//!
+//! Large shared operands move through a dedicated broadcast plane
+//! ([`broadcast`]) instead of riding inside every shipped stage — the
+//! engine's TorrentBroadcast analogue, and the distributed realization
+//! of the `blockstore` strategy `ignite.comm.bcast.algo` names. Block
+//! lifecycle: the driver **encodes** a value through the [`ser`] codec,
+//! **chunks** it into `ignite.broadcast.block.bytes` blocks, and
+//! registers them with the master's broadcast **block-location table**;
+//! the first task on a worker that needs the value **locates** the
+//! blocks and pulls each one **preferentially from a peer** that
+//! already holds it (spreading load torrent-style), falling back to the
+//! master/driver copy when a peer is gone; the reassembled value is
+//! **cached** (raw blocks in [`broadcast::BroadcastManager`], the
+//! decoded value in the worker's [`storage::BlockManager`]) and the
+//! worker announces itself as a holder — so a value crosses each
+//! worker's wire **at most once per job**, regardless of stage or task
+//! count. Job completion (success or failure) issues one `job.clear`
+//! RPC that prunes the master's shuffle *and* broadcast tables and fans
+//! out to workers.
+//!
+//! Endpoint table:
+//!
+//! | endpoint                    | host           | purpose                                  |
+//! |-----------------------------|----------------|------------------------------------------|
+//! | `master.broadcast.register` | master         | holder announces an assembled value      |
+//! | `master.broadcast.locate`   | master         | per-block holder addresses               |
+//! | `broadcast.fetch`           | master + workers | serve one block (peer fetch)           |
+//! | `broadcast.clear`           | master + workers | explicit `Broadcast::destroy` GC       |
+//! | `job.clear`                 | master + workers | combined shuffle + broadcast job GC    |
+//!
+//! Plan-IR integration: [`rdd::PlanSpec::SourceRef`] references a
+//! broadcast partition set by id. `Master::run_plan` rewrites `Source`
+//! nodes at or above `ignite.broadcast.auto.min.bytes` into `SourceRef`s
+//! before shipping, which changes stage shipping from O(data × stages ×
+//! workers) to a per-stage plan skeleton plus a once-per-worker block
+//! fetch. Applications broadcast explicitly with
+//! [`context::IgniteContext::broadcast`], which returns a cloneable
+//! [`broadcast::Broadcast`] handle resolvable from any task.
+//!
+//! Key config: `ignite.broadcast.block.bytes` (chunk size),
+//! `ignite.broadcast.auto.min.bytes` (auto-`SourceRef` threshold),
+//! `ignite.broadcast.fetch.timeout.ms` (block fetch RPC timeout).
+//! Instrumentation: `broadcast.bytes.fetched.{peer,master}`,
+//! `broadcast.blocks.cached`, `broadcast.fetch.latency`;
+//! `rust/benches/bench_broadcast.rs` compares inline-source vs
+//! broadcast-source stage shipping.
+//!
 //! ## Quickstart (Listing 1 of the paper)
 //!
 //! ```
@@ -119,6 +167,7 @@
 
 pub mod apps;
 pub mod bench;
+pub mod broadcast;
 pub mod closure;
 pub mod cluster;
 pub mod comm;
@@ -143,6 +192,7 @@ pub use error::{IgniteError, Result};
 
 /// Convenience re-exports for applications and examples.
 pub mod prelude {
+    pub use crate::broadcast::Broadcast;
     pub use crate::closure::{register_op, register_parallel_fn, FuncRdd};
     pub use crate::comm::{CommFuture, SparkComm, ANY_SOURCE, ANY_TAG};
     pub use crate::config::IgniteConf;

@@ -388,6 +388,15 @@ pub enum PlanSpec {
     /// rows travel inside the plan, the way Spark ships a parallelized
     /// collection's partition data inside the task.
     Source { partitions: Vec<Vec<Value>> },
+    /// A source shipped **by reference** through the broadcast plane:
+    /// the partition set (`Vec<Vec<Value>>`, encoded) was registered as
+    /// broadcast `broadcast_id`, and workers resolve it through
+    /// [`Engine::broadcast_partitions`] (local block cache → peer fetch →
+    /// master fetch). `Master::run_plan` rewrites `Source` nodes at or
+    /// above `ignite.broadcast.auto.min.bytes` into this, so a
+    /// multi-stage job's `task.run` RPCs carry a plan skeleton instead of
+    /// the full dataset once per stage per worker.
+    SourceRef { broadcast_id: u64, num_partitions: u64 },
     /// One operator applied to the parent's partitions.
     Op { op: OpSpec, parent: Arc<PlanSpec> },
     /// Concatenate two plans' partition lists.
@@ -402,6 +411,7 @@ const PLAN_SOURCE: u8 = 0;
 const PLAN_OP: u8 = 1;
 const PLAN_UNION: u8 = 2;
 const PLAN_SHUFFLE: u8 = 3;
+const PLAN_SOURCE_REF: u8 = 4;
 
 impl Encode for PlanSpec {
     fn encode(&self, buf: &mut Vec<u8>) {
@@ -409,6 +419,11 @@ impl Encode for PlanSpec {
             PlanSpec::Source { partitions } => {
                 buf.push(PLAN_SOURCE);
                 partitions.encode(buf);
+            }
+            PlanSpec::SourceRef { broadcast_id, num_partitions } => {
+                buf.push(PLAN_SOURCE_REF);
+                broadcast_id.encode(buf);
+                num_partitions.encode(buf);
             }
             PlanSpec::Op { op, parent } => {
                 buf.push(PLAN_OP);
@@ -435,6 +450,10 @@ impl Decode for PlanSpec {
     fn decode(r: &mut Reader<'_>) -> Result<Self> {
         Ok(match r.u8()? {
             PLAN_SOURCE => PlanSpec::Source { partitions: Vec::<Vec<Value>>::decode(r)? },
+            PLAN_SOURCE_REF => PlanSpec::SourceRef {
+                broadcast_id: u64::decode(r)?,
+                num_partitions: u64::decode(r)?,
+            },
             PLAN_OP => {
                 PlanSpec::Op { op: OpSpec::decode(r)?, parent: Arc::new(PlanSpec::decode(r)?) }
             }
@@ -458,6 +477,7 @@ impl PlanSpec {
     pub fn num_partitions(&self) -> usize {
         match self {
             PlanSpec::Source { partitions } => partitions.len(),
+            PlanSpec::SourceRef { num_partitions, .. } => *num_partitions as usize,
             PlanSpec::Op { parent, .. } => parent.num_partitions(),
             PlanSpec::Union { left, right } => left.num_partitions() + right.num_partitions(),
             PlanSpec::Shuffle { partitions, .. } => *partitions as usize,
@@ -476,6 +496,21 @@ impl PlanSpec {
                     partitions.len()
                 ))
             }),
+            PlanSpec::SourceRef { broadcast_id, num_partitions } => {
+                let parts = engine.broadcast_partitions(*broadcast_id)?;
+                if part >= *num_partitions as usize {
+                    return Err(IgniteError::Invalid(format!(
+                        "source-ref partition {part} out of range ({num_partitions})"
+                    )));
+                }
+                parts.get(part).cloned().ok_or_else(|| {
+                    IgniteError::Storage(format!(
+                        "broadcast {broadcast_id} has {} partitions, plan expects {}",
+                        parts.len(),
+                        num_partitions
+                    ))
+                })
+            }
             PlanSpec::Op { op, parent } => op.apply(part, parent.compute(part, engine)?),
             PlanSpec::Union { left, right } => {
                 let nl = left.num_partitions();
@@ -512,7 +547,7 @@ impl PlanSpec {
     /// Find the `Shuffle` node with the given id anywhere in the tree.
     pub fn find_shuffle(&self, id: u64) -> Option<&PlanSpec> {
         match self {
-            PlanSpec::Source { .. } => None,
+            PlanSpec::Source { .. } | PlanSpec::SourceRef { .. } => None,
             PlanSpec::Op { parent, .. } => parent.find_shuffle(id),
             PlanSpec::Union { left, right } => {
                 left.find_shuffle(id).or_else(|| right.find_shuffle(id))
@@ -540,7 +575,7 @@ impl PlanSpec {
 
     fn collect_stages(&self, out: &mut Vec<(u64, usize)>, seen: &mut HashSet<u64>) {
         match self {
-            PlanSpec::Source { .. } => {}
+            PlanSpec::Source { .. } | PlanSpec::SourceRef { .. } => {}
             PlanSpec::Op { parent, .. } => parent.collect_stages(out, seen),
             PlanSpec::Union { left, right } => {
                 left.collect_stages(out, seen);
@@ -558,6 +593,58 @@ impl PlanSpec {
     /// Ids of every shuffle in the plan (for `shuffle.clear` GC).
     pub fn shuffle_ids(&self) -> Vec<u64> {
         self.shuffle_stages().into_iter().map(|(id, _)| id).collect()
+    }
+
+    /// Ids of every [`SourceRef`](PlanSpec::SourceRef) in the plan,
+    /// deduped in tree order (for broadcast GC and diagnostics).
+    pub fn broadcast_ids(&self) -> Vec<u64> {
+        fn walk(plan: &PlanSpec, out: &mut Vec<u64>, seen: &mut HashSet<u64>) {
+            match plan {
+                PlanSpec::Source { .. } => {}
+                PlanSpec::SourceRef { broadcast_id, .. } => {
+                    if seen.insert(*broadcast_id) {
+                        out.push(*broadcast_id);
+                    }
+                }
+                PlanSpec::Op { parent, .. } => walk(parent, out, seen),
+                PlanSpec::Union { left, right } => {
+                    walk(left, out, seen);
+                    walk(right, out, seen);
+                }
+                PlanSpec::Shuffle { parent, .. } => walk(parent, out, seen),
+            }
+        }
+        let mut out = Vec::new();
+        let mut seen = HashSet::new();
+        walk(self, &mut out, &mut seen);
+        out
+    }
+
+    /// Rebuild the tree, offering every `Source` node to `f` for
+    /// replacement (e.g. with a [`SourceRef`](PlanSpec::SourceRef) after
+    /// registering its partitions with the broadcast plane); `None`
+    /// keeps the source inline. `f` is only ever called on
+    /// `PlanSpec::Source` nodes. Shuffle ids and all other structure are
+    /// preserved, so the rewritten plan has identical stages.
+    pub fn rewrite_sources(&self, f: &mut dyn FnMut(&PlanSpec) -> Option<PlanSpec>) -> PlanSpec {
+        match self {
+            PlanSpec::Source { .. } => f(self).unwrap_or_else(|| self.clone()),
+            PlanSpec::SourceRef { .. } => self.clone(),
+            PlanSpec::Op { op, parent } => PlanSpec::Op {
+                op: op.clone(),
+                parent: Arc::new(parent.rewrite_sources(f)),
+            },
+            PlanSpec::Union { left, right } => PlanSpec::Union {
+                left: Arc::new(left.rewrite_sources(f)),
+                right: Arc::new(right.rewrite_sources(f)),
+            },
+            PlanSpec::Shuffle { shuffle_id, partitions, agg, parent } => PlanSpec::Shuffle {
+                shuffle_id: *shuffle_id,
+                partitions: *partitions,
+                agg: agg.clone(),
+                parent: Arc::new(parent.rewrite_sources(f)),
+            },
+        }
     }
 }
 
@@ -852,7 +939,10 @@ mod tests {
                 }),
                 right: Arc::new(PlanSpec::Op {
                     op: OpSpec::MapNamed { name: "m".into() },
-                    parent: Arc::new(PlanSpec::Source { partitions: vec![vec![]] }),
+                    parent: Arc::new(PlanSpec::SourceRef {
+                        broadcast_id: 41,
+                        num_partitions: 1,
+                    }),
                 }),
             }),
         };
@@ -1010,6 +1100,65 @@ mod tests {
         assert_eq!(stages[1].1, 3, "second stage maps over first shuffle's output");
         assert!(chained.plan().find_shuffle(stages[0].0).is_some());
         assert!(chained.plan().find_shuffle(u64::MAX).is_none());
+    }
+
+    #[test]
+    fn source_ref_resolves_through_engine_broadcast() {
+        let sc = IgniteContext::local(2);
+        let rows = i64_rows(0..12);
+        let inline = sc.parallelize_values_with(rows.clone(), 3);
+        let partitions = match inline.plan() {
+            PlanSpec::Source { partitions } => partitions.clone(),
+            other => panic!("expected Source, got {other:?}"),
+        };
+        let id = crate::util::next_id();
+        sc.engine().broadcast.put_value_bytes(id, &to_bytes(&partitions));
+
+        let by_ref = PlanSpec::SourceRef { broadcast_id: id, num_partitions: 3 };
+        assert_eq!(by_ref.num_partitions(), 3);
+        assert!(by_ref.find_shuffle(1).is_none());
+        assert_eq!(sc.plan_rdd(by_ref.clone()).collect().unwrap(), rows);
+
+        // Ship-shaped: the decoded copy resolves identically.
+        let decoded: PlanSpec = crate::ser::from_bytes(&to_bytes(&by_ref)).unwrap();
+        assert_eq!(decoded, by_ref);
+        assert_eq!(sc.plan_rdd(decoded).collect().unwrap(), rows);
+        sc.engine().clear_broadcast(id);
+    }
+
+    #[test]
+    fn missing_broadcast_source_is_a_clean_error() {
+        let sc = IgniteContext::local(2);
+        let ghost = PlanSpec::SourceRef { broadcast_id: u64::MAX, num_partitions: 2 };
+        assert!(sc.plan_rdd(ghost).collect().is_err());
+    }
+
+    #[test]
+    fn rewrite_sources_replaces_only_sources_and_keeps_shuffles() {
+        register_test_ops();
+        let sc = IgniteContext::local(2);
+        let a = sc.parallelize_values_with(i64_rows(0..6), 2);
+        let b = sc.parallelize_values_with(i64_rows(6..12), 2);
+        let chained = a
+            .union(&b)
+            .map_named("plan.test.pair1")
+            .reduce_by_key(3, AggSpec::SumI64);
+        let mut next_ref = 100u64;
+        let rewritten = chained.plan().rewrite_sources(&mut |src| {
+            let PlanSpec::Source { partitions } = src else { return None };
+            next_ref += 1;
+            Some(PlanSpec::SourceRef {
+                broadcast_id: next_ref,
+                num_partitions: partitions.len() as u64,
+            })
+        });
+        assert_eq!(rewritten.broadcast_ids(), vec![101, 102]);
+        assert_eq!(rewritten.num_partitions(), chained.plan().num_partitions());
+        assert_eq!(rewritten.shuffle_stages(), chained.plan().shuffle_stages());
+        assert!(chained.plan().broadcast_ids().is_empty(), "original untouched");
+        // A rewrite that declines keeps the tree identical.
+        let same = chained.plan().rewrite_sources(&mut |_| None);
+        assert_eq!(&same, chained.plan());
     }
 
     #[test]

@@ -10,10 +10,12 @@ mod pool;
 
 pub use pool::TaskPool;
 
+use crate::broadcast::BroadcastManager;
 use crate::config::IgniteConf;
 use crate::error::{IgniteError, Result};
 use crate::fault::{FaultInjector, TaskId};
 use crate::metrics;
+use crate::ser::{from_bytes, Value};
 use crate::shuffle::ShuffleManager;
 use crate::storage::BlockManager;
 use log::{debug, info};
@@ -38,6 +40,9 @@ pub struct StageSpec {
 pub struct Engine {
     pub pool: TaskPool,
     pub shuffle: ShuffleManager,
+    /// Broadcast plane block cache (chunked values; peer-fetch remote
+    /// tier in cluster mode). Decoded values cache in `blocks`.
+    pub broadcast: BroadcastManager,
     pub blocks: BlockManager,
     pub fault: FaultInjector,
     pub conf: IgniteConf,
@@ -67,9 +72,11 @@ impl Engine {
         // put path after a loss.
         let shuffle_budget = conf.get_usize("ignite.shuffle.memory.bytes")?;
         let shuffle = ShuffleManager::new(shuffle_budget, Some(blocks.disk.clone()));
+        let broadcast = BroadcastManager::new(conf.get_usize("ignite.broadcast.block.bytes")?);
         Ok(Arc::new(Engine {
             pool: TaskPool::new(slots),
             shuffle,
+            broadcast,
             blocks,
             fault,
             conf,
@@ -82,6 +89,64 @@ impl Engine {
 
     fn next_stage_id(&self) -> u64 {
         self.next_stage.fetch_add(1, Ordering::Relaxed) as u64
+    }
+
+    /// Resolve a broadcast value: the BlockManager's decoded cache, then
+    /// the broadcast manager's block tiers (local blocks → peer fetch →
+    /// master fetch). The decoded value is cached so every later read on
+    /// this process is free; an over-budget cache insert is tolerated
+    /// (the value is simply re-decoded next time).
+    pub fn broadcast_value(&self, id: u64) -> Result<Arc<Value>> {
+        let key = crate::broadcast::value_cache_key(id);
+        if let Some(v) = self.blocks.get_typed::<Value>(&key) {
+            return Ok(v);
+        }
+        let bytes = self.broadcast.fetch_value_bytes(id)?;
+        let value: Arc<Value> = Arc::new(from_bytes(&bytes)?);
+        self.cache_decoded(&key, value.clone(), bytes.len(), id);
+        Ok(value)
+    }
+
+    /// Resolve a broadcast partition set (the payload behind
+    /// [`crate::rdd::PlanSpec::SourceRef`]), with the same cached-decode
+    /// discipline as [`broadcast_value`](Self::broadcast_value).
+    pub fn broadcast_partitions(&self, id: u64) -> Result<Arc<Vec<Vec<Value>>>> {
+        let key = crate::broadcast::partitions_cache_key(id);
+        if let Some(v) = self.blocks.get_typed::<Vec<Vec<Value>>>(&key) {
+            return Ok(v);
+        }
+        let bytes = self.broadcast.fetch_value_bytes(id)?;
+        let parts: Arc<Vec<Vec<Value>>> = Arc::new(from_bytes(&bytes)?);
+        self.cache_decoded(&key, parts.clone(), bytes.len(), id);
+        Ok(parts)
+    }
+
+    /// Insert a decoded broadcast payload into the BlockManager cache,
+    /// undoing the insert if a `clear_broadcast` raced it: broadcast ids
+    /// are never reused, so a resurrected cache entry would sit in the
+    /// block budget with no future GC ever naming it again (the raw-block
+    /// layer defends this with its publish-under-gate step; this is the
+    /// decoded layer's equivalent).
+    fn cache_decoded<T: Send + Sync + 'static>(
+        &self,
+        key: &str,
+        value: Arc<T>,
+        size: usize,
+        id: u64,
+    ) {
+        if let Err(e) = self.blocks.put_typed(key, value, size) {
+            debug!(target: "scheduler", "broadcast {id} decoded cache skipped: {e}");
+        } else if !self.broadcast.contains(id) {
+            self.blocks.remove(key);
+        }
+    }
+
+    /// Drop one broadcast from every local tier: raw blocks in the
+    /// broadcast manager plus both decoded caches in the block manager.
+    pub fn clear_broadcast(&self, id: u64) {
+        self.broadcast.clear(id);
+        self.blocks.remove(&crate::broadcast::value_cache_key(id));
+        self.blocks.remove(&crate::broadcast::partitions_cache_key(id));
     }
 
     /// Run the map stages in `stages` (lineage order: parents first),
@@ -492,6 +557,37 @@ mod tests {
         got.sort_unstable();
         got.dedup(); // a speculative duplicate is legal; the set is not
         assert_eq!(got, vec![3, 7, 12]);
+    }
+
+    #[test]
+    fn broadcast_value_decodes_caches_and_clears() {
+        let engine = test_engine();
+        let value = Value::List(vec![Value::I64(1), Value::Str("shared".into())]);
+        let bytes = crate::ser::to_bytes(&value);
+        let id = crate::util::next_id();
+        engine.broadcast.put_value_bytes(id, &bytes);
+
+        let got = engine.broadcast_value(id).unwrap();
+        assert_eq!(*got, value);
+        // Second read hits the decoded cache (same Arc).
+        let again = engine.broadcast_value(id).unwrap();
+        assert!(Arc::ptr_eq(&got, &again), "decoded value must be cached");
+
+        engine.clear_broadcast(id);
+        assert_eq!(engine.broadcast.value_count(), 0);
+        assert!(engine.broadcast_value(id).is_err(), "cleared broadcast is gone");
+    }
+
+    #[test]
+    fn broadcast_partitions_roundtrip() {
+        let engine = test_engine();
+        let parts: Vec<Vec<Value>> =
+            vec![vec![Value::I64(1)], vec![], vec![Value::I64(2), Value::I64(3)]];
+        let id = crate::util::next_id();
+        engine.broadcast.put_value_bytes(id, &crate::ser::to_bytes(&parts));
+        let got = engine.broadcast_partitions(id).unwrap();
+        assert_eq!(*got, parts);
+        engine.clear_broadcast(id);
     }
 
     #[test]

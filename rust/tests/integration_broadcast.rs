@@ -1,0 +1,249 @@
+//! Cluster broadcast plane, end to end on a real (in-process) cluster:
+//!
+//! * a multi-stage plan job over a parallelized source ships the
+//!   source's encoded bytes to each worker **at most once** (asserted
+//!   via the `broadcast.bytes.fetched.{peer,master}` metrics — the
+//!   acceptance criterion of the broadcast-plane issue);
+//! * workers fetch peer-first: the second worker to assemble a value
+//!   pulls every block from the first, not from the master;
+//! * killing the peer that holds the only worker replica mid-fetch
+//!   falls back to the master/driver copy block by block, and jobs
+//!   still complete on the survivors;
+//! * job-end cleanup is ONE `job.clear` covering both planes: after a
+//!   plan job — successful or failed — the master's shuffle *and*
+//!   broadcast tables are empty and the workers hold no buckets and no
+//!   broadcast blocks.
+
+use mpignite::closure::register_op;
+use mpignite::cluster::Worker;
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use mpignite::rdd::AggSpec;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Serializes the tests in this binary: they assert exact deltas of
+/// process-global broadcast metrics, which interleaved tests would skew.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn metric(name: &str) -> u64 {
+    mpignite::metrics::global().counter(name).get()
+}
+
+fn conf() -> IgniteConf {
+    let mut c = IgniteConf::new();
+    c.set("ignite.worker.heartbeat.ms", "50");
+    c.set("ignite.worker.timeout.ms", "2000");
+    c.set("ignite.broadcast.block.bytes", "64"); // force multi-block values
+    c.set("ignite.broadcast.auto.min.bytes", "1"); // every source ships by reference
+    c
+}
+
+fn register_ops() {
+    register_op("bc.pair", |v| Ok(Value::List(vec![v, Value::I64(1)])));
+}
+
+fn source_rows() -> Vec<Value> {
+    (0..48i64).map(|x| Value::Str(format!("word-{:02}", x % 7))).collect()
+}
+
+fn counts_of(rows: Vec<Value>) -> HashMap<String, i64> {
+    let mut out = HashMap::new();
+    for row in rows {
+        match row {
+            Value::List(l) if l.len() == 2 => match (&l[0], &l[1]) {
+                (Value::Str(w), Value::I64(n)) => {
+                    out.insert(w.clone(), *n);
+                }
+                other => panic!("bad pair {other:?}"),
+            },
+            other => panic!("bad row {other:?}"),
+        }
+    }
+    out
+}
+
+fn setup(c: &IgniteConf, n: usize) -> (IgniteContext, Vec<Arc<Worker>>) {
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let workers: Vec<Arc<Worker>> =
+        (0..n).map(|_| Worker::start(c, master.address()).unwrap()).collect();
+    master.wait_for_workers(n, Duration::from_secs(5)).unwrap();
+    (sc, workers)
+}
+
+/// Poll until every worker holds zero shuffle buckets and zero broadcast
+/// state (the `job.clear` fan-out is a one-way send, so it lands shortly
+/// after the job returns).
+fn wait_workers_drained(workers: &[Arc<Worker>], what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(3);
+    loop {
+        let buckets: usize = workers.iter().map(|w| w.engine().shuffle.bucket_count()).sum();
+        let values: usize = workers.iter().map(|w| w.engine().broadcast.value_count()).sum();
+        let blocks: usize = workers.iter().map(|w| w.engine().broadcast.block_count()).sum();
+        if buckets == 0 && values == 0 && blocks == 0 {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{what}: cleanup incomplete ({buckets} buckets, {values} values, {blocks} blocks left)"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn multi_stage_plan_ships_source_bytes_once_per_worker() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    register_ops();
+    let c = conf();
+    let (sc, workers) = setup(&c, 2);
+    let master = sc.master().unwrap().clone();
+
+    let src = sc.parallelize_values_with(source_rows(), 4);
+    let src_encoded = match src.plan() {
+        PlanSpec::Source { partitions } => mpignite::ser::to_bytes(partitions).len() as u64,
+        other => panic!("expected Source, got {other:?}"),
+    };
+    // Two chained shuffles → three stages, all shipped over task.run.
+    let job = src
+        .map_named("bc.pair")
+        .reduce_by_key(3, AggSpec::SumI64)
+        .reduce_by_key(2, AggSpec::First);
+
+    let fetched_before =
+        metric("broadcast.bytes.fetched.peer") + metric("broadcast.bytes.fetched.master");
+    let rewritten_before = metric("cluster.broadcast.sources.rewritten");
+
+    let got = counts_of(job.collect().unwrap());
+
+    // The source was shipped by reference, not inlined per stage.
+    assert!(
+        metric("cluster.broadcast.sources.rewritten") > rewritten_before,
+        "auto.min.bytes=1 must rewrite the source into a SourceRef"
+    );
+    // THE acceptance criterion: across a three-stage job, each of the 2
+    // workers pulled the source's encoded bytes over its wire exactly
+    // once — not once per stage, not once per task.
+    let fetched =
+        metric("broadcast.bytes.fetched.peer") + metric("broadcast.bytes.fetched.master")
+            - fetched_before;
+    assert_eq!(
+        fetched,
+        2 * src_encoded,
+        "each worker's wire must carry the source exactly once (source = {src_encoded} B)"
+    );
+
+    // Results identical to driver-local execution of the same pipeline.
+    let sc_local = IgniteContext::local(4);
+    let want = counts_of(
+        sc_local
+            .parallelize_values_with(source_rows(), 4)
+            .map_named("bc.pair")
+            .reduce_by_key(3, AggSpec::SumI64)
+            .reduce_by_key(2, AggSpec::First)
+            .collect()
+            .unwrap(),
+    );
+    assert_eq!(got, want, "broadcast-source result matches inline-source local run");
+    assert_eq!(got.len(), 7);
+
+    // Combined job-end GC: both master tables empty, workers drained.
+    assert_eq!(master.shuffle_table_len(), 0, "job.clear pruned the map-output table");
+    assert_eq!(master.broadcast_table_len(), 0, "job.clear pruned the broadcast table");
+    wait_workers_drained(&workers, "successful job");
+    master.shutdown();
+}
+
+#[test]
+fn peer_fetch_preferred_and_master_fallback_on_worker_loss() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    register_ops();
+    let c = {
+        let mut c = conf();
+        // Short connect timeout so each dead-peer attempt fails fast.
+        c.set("ignite.rpc.connect.timeout.ms", "300");
+        c
+    };
+    let (sc, workers) = setup(&c, 2);
+    let master = sc.master().unwrap().clone();
+
+    let payload = Value::Str("broadcast-me ".repeat(80)); // ≫ 64 B → many blocks
+    let total = mpignite::ser::to_bytes(&payload).len() as u64;
+    let b = sc.broadcast(payload.clone()).unwrap();
+    assert_eq!(b.total_bytes() as u64, total);
+
+    // First worker assembles from the master (no peers exist yet) …
+    let m0 = metric("broadcast.bytes.fetched.master");
+    let p0 = metric("broadcast.bytes.fetched.peer");
+    assert_eq!(*workers[0].engine().broadcast_value(b.id()).unwrap(), payload);
+    assert_eq!(metric("broadcast.bytes.fetched.master") - m0, total);
+    assert_eq!(metric("broadcast.bytes.fetched.peer") - p0, 0);
+
+    // … and the second worker pulls every block from that peer.
+    let m1 = metric("broadcast.bytes.fetched.master");
+    let p1 = metric("broadcast.bytes.fetched.peer");
+    assert_eq!(*workers[1].engine().broadcast_value(b.id()).unwrap(), payload);
+    assert_eq!(metric("broadcast.bytes.fetched.peer") - p1, total, "peer copy preferred");
+    assert_eq!(metric("broadcast.bytes.fetched.master") - m1, 0);
+
+    // Kill the peer holding the only worker replica, drop the second
+    // worker's copy, and re-fetch immediately (the dead worker is still
+    // inside its heartbeat window, so the master still lists it): every
+    // block's peer attempt fails and falls back to the master copy.
+    workers[0].kill();
+    workers[1].engine().clear_broadcast(b.id());
+    let m2 = metric("broadcast.bytes.fetched.master");
+    let f2 = metric("broadcast.fetch.peer.failures");
+    assert_eq!(*workers[1].engine().broadcast_value(b.id()).unwrap(), payload);
+    assert!(
+        metric("broadcast.fetch.peer.failures") > f2,
+        "the dead peer must have been tried first"
+    );
+    assert_eq!(
+        metric("broadcast.bytes.fetched.master") - m2,
+        total,
+        "every block fell back to the master/driver copy"
+    );
+
+    // The cluster still completes plan jobs on the survivor once the
+    // loss is detected.
+    std::thread::sleep(Duration::from_millis(2500)); // > worker.timeout.ms
+    let got = counts_of(
+        sc.parallelize_values_with(source_rows(), 2)
+            .map_named("bc.pair")
+            .reduce_by_key(2, AggSpec::SumI64)
+            .collect()
+            .unwrap(),
+    );
+    assert_eq!(got.len(), 7, "job completes after worker loss");
+    assert_eq!(master.broadcast_table_len(), 1, "user broadcast outlives the job GC");
+    b.destroy();
+    assert_eq!(master.broadcast_table_len(), 0);
+    master.shutdown();
+}
+
+#[test]
+fn failed_plan_job_leaks_no_broadcast_or_shuffle_state() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    register_ops();
+    let c = conf();
+    let (sc, workers) = setup(&c, 2);
+    let master = sc.master().unwrap().clone();
+
+    // The map stage fetches the broadcast source, then dies on an
+    // unregistered op — after the failure, NEITHER plane may leak.
+    let err = sc
+        .parallelize_values_with(source_rows(), 4)
+        .map_named("bc.this_op_does_not_exist")
+        .reduce_by_key(2, AggSpec::SumI64)
+        .collect()
+        .unwrap_err();
+    assert!(err.to_string().contains("this_op_does_not_exist"), "got: {err}");
+
+    assert_eq!(master.shuffle_table_len(), 0, "failed job left shuffle table entries");
+    assert_eq!(master.broadcast_table_len(), 0, "failed job left broadcast table entries");
+    wait_workers_drained(&workers, "failed job");
+    master.shutdown();
+}

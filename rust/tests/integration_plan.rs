@@ -141,7 +141,8 @@ fn plan_wordcount_runs_map_tasks_on_workers() {
         );
         std::thread::sleep(Duration::from_millis(20));
     }
-    assert_eq!(master.shuffle_table_len(), 0, "shuffle.clear pruned the map-output table");
+    assert_eq!(master.shuffle_table_len(), 0, "job.clear pruned the map-output table");
+    assert_eq!(master.broadcast_table_len(), 0, "job.clear covers the broadcast table too");
 
     master.shutdown();
 }

@@ -165,6 +165,54 @@ fn prop_plan_round_trips_byte_identically() {
 }
 
 #[test]
+fn prop_source_ref_plans_match_inline_source_plans() {
+    register_ops();
+    let sc = IgniteContext::local(4);
+    let gen = FnGen(|rng: &mut Xoshiro256| arbitrary_script(rng));
+    check(cfg(40), &gen, |script| {
+        let inline = build_plan(&sc, script);
+        // An independently-built copy of the same script (fresh shuffle
+        // ids, so the two executions share no shuffle state) with every
+        // Source replaced by a SourceRef whose partitions are staged in
+        // the engine's broadcast manager — the decoded shape a worker
+        // sees after Master::run_plan's auto-broadcast rewrite.
+        let engine = sc.engine().clone();
+        let mut staged: Vec<u64> = Vec::new();
+        let by_ref = build_plan(&sc, script).plan().rewrite_sources(&mut |src| {
+            let PlanSpec::Source { partitions } = src else { return None };
+            let id = mpignite::util::next_id();
+            engine.broadcast.put_value_bytes(id, &to_bytes(partitions));
+            staged.push(id);
+            Some(PlanSpec::SourceRef {
+                broadcast_id: id,
+                num_partitions: partitions.len() as u64,
+            })
+        });
+        // Ship-shaped: encode + decode before executing.
+        let decoded: PlanSpec = from_bytes(&to_bytes(&by_ref)).map_err(|e| e.to_string())?;
+        let got = sc.plan_rdd(decoded).collect().map_err(|e| e.to_string())?;
+        let want = inline.collect().map_err(|e| e.to_string())?;
+        for id in staged {
+            engine.clear_broadcast(id);
+        }
+        if script.shuffle {
+            let got = plan_rows_as_pairs(got)?;
+            let want = plan_rows_as_pairs(want)?;
+            if got != want {
+                return Err(format!("shuffled mismatch: got {got:?}, want {want:?}"));
+            }
+        } else {
+            let got = plan_rows_as_i64(got)?;
+            let want = plan_rows_as_i64(want)?;
+            if got != want {
+                return Err(format!("mismatch: got {got:?}, want {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_decoded_plan_matches_closure_fast_path() {
     register_ops();
     let sc = IgniteContext::local(4);
