@@ -120,6 +120,19 @@ fn main() -> Result<()> {
     println!("\nBroadcast plane — ignite.broadcast.* configuration:\n");
     print!("{}", bt.render());
 
+    // The peer-section config surface (`ignite.peer.*`) — gang deadline
+    // and restart budget — also straight from KNOWN_KEYS.
+    let mut pt = Table::new(vec!["key", "default", "meaning"]);
+    for (key, default, meaning) in mpignite::config::KNOWN_KEYS
+        .iter()
+        .filter(|(key, _, _)| key.starts_with("ignite.peer."))
+    {
+        pt.row(vec![*key, *default, *meaning]);
+    }
+    assert!(!pt.is_empty(), "peer config keys must exist");
+    println!("\nPeer sections — ignite.peer.* configuration:\n");
+    print!("{}", pt.render());
+
     println!("\napi_table OK ({} methods verified)", rows.len());
     Ok(())
 }

@@ -1,0 +1,172 @@
+//! E12 — peer sections vs shuffle: one k-means step per iteration as an
+//! **in-stage allreduce** (a single gang-scheduled peer section runs all
+//! iterations, exchanging centroid stats through `all_reduce` between
+//! sibling tasks) versus the classic Spark shape (one plan job per
+//! iteration: map-assign → `reduce_by_key` shuffle → driver recomputes
+//! centroids → next job).
+//!
+//! Both lanes run the same k-means math over the same points on a real
+//! 2-worker in-process cluster. Expected shape: the peer lane wins and
+//! its margin grows with the iteration count, because it pays gang
+//! launch ONCE and then only ~k·d floats of allreduce per iteration,
+//! while the shuffle lane pays stage shipping + bucket registration +
+//! fetch + driver round-trip per iteration — the pattern Alchemist pays
+//! a Spark⇔MPI bridge for and DataMPI shows is the performance-critical
+//! shape.
+//!
+//! Run: `cargo bench --bench bench_peer` (MPIGNITE_BENCH_FAST=1 to
+//! smoke). CSV block feeds CHANGES.md baselines.
+
+use mpignite::apps;
+use mpignite::bench::{black_box, BenchSuite};
+use mpignite::closure::register_op;
+use mpignite::cluster::Worker;
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+const POINTS: usize = 400;
+const PARTS: usize = 4;
+const K: usize = 3;
+const ITERS: usize = 3;
+
+fn points() -> Vec<Value> {
+    (0..POINTS)
+        .map(|i| {
+            let center = match i % 3 {
+                0 => (0.0, 0.0),
+                1 => (10.0, 0.0),
+                _ => (0.0, 10.0),
+            };
+            let jitter = 0.3 * ((i * 7 % 13) as f64 / 13.0 - 0.5);
+            Value::F64Vec(vec![center.0 + jitter, center.1 - jitter])
+        })
+        .collect()
+}
+
+/// Shared centroid cell for the shuffle lane: the assign op reads it,
+/// the driver writes it between iterations. (In-process clusters share
+/// the registry; a multi-process deployment would broadcast the
+/// centroids instead — which is exactly the overhead this lane models.)
+fn centroid_cell() -> &'static Mutex<Vec<Vec<f64>>> {
+    static CELL: Mutex<Vec<Vec<f64>>> = Mutex::new(Vec::new());
+    &CELL
+}
+
+fn register_ops() {
+    apps::register_kmeans_peer("bench.peer.kmeans", K, ITERS);
+    // point -> List([I64(cluster), F64Vec(coordinate sums + count)])
+    register_op("bench.peer.assign", |v| {
+        let Value::F64Vec(p) = v else {
+            return Err(IgniteError::Invalid("assign wants f64vec".into()));
+        };
+        let centroids = centroid_cell().lock().unwrap().clone();
+        let mut best = 0usize;
+        let mut best_dist = f64::INFINITY;
+        for (j, c) in centroids.iter().enumerate() {
+            let dist: f64 = c.iter().zip(&p).map(|(a, b)| (a - b) * (a - b)).sum();
+            if dist < best_dist {
+                best_dist = dist;
+                best = j;
+            }
+        }
+        let mut stats = p.clone();
+        stats.push(1.0);
+        Ok(Value::List(vec![Value::I64(best as i64), Value::F64Vec(stats)]))
+    });
+    // List([a, b]) -> elementwise sum (the shuffle-side combiner).
+    register_op("bench.peer.merge", |v| {
+        let Value::List(mut ab) = v else {
+            return Err(IgniteError::Invalid("merge wants List([a, b])".into()));
+        };
+        let (Some(Value::F64Vec(b)), Some(Value::F64Vec(mut a))) = (ab.pop(), ab.pop()) else {
+            return Err(IgniteError::Invalid("merge wants f64vec stats".into()));
+        };
+        for (ai, bi) in a.iter_mut().zip(&b) {
+            *ai += bi;
+        }
+        Ok(Value::F64Vec(a))
+    });
+}
+
+fn cluster() -> (IgniteContext, Vec<Arc<Worker>>) {
+    let mut conf = IgniteConf::new();
+    conf.set("ignite.worker.heartbeat.ms", "50");
+    let sc = IgniteContext::cluster_driver(conf.clone(), 0).expect("driver");
+    let master = sc.master().unwrap().clone();
+    let workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&conf, master.address()).expect("worker")).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+    (sc, workers)
+}
+
+/// One full k-means run, peer-section flavor: ONE gang, all iterations
+/// inside the stage.
+fn run_peer(sc: &IgniteContext) -> usize {
+    sc.peer_rdd(points(), PARTS, "bench.peer.kmeans").collect().expect("peer job").len()
+}
+
+/// One full k-means run, shuffle flavor: one plan job per iteration,
+/// centroids recomputed on the driver in between.
+fn run_shuffle(sc: &IgniteContext) -> usize {
+    let initial: Vec<Vec<f64>> =
+        (0..K).map(|j| vec![j as f64 * 5.0, j as f64 * 5.0]).collect();
+    *centroid_cell().lock().unwrap() = initial;
+    let mut last = 0;
+    for _ in 0..ITERS {
+        let reduced = sc
+            .parallelize_values_with(points(), PARTS)
+            .map_named("bench.peer.assign")
+            .reduce_by_key(1, AggSpec::Named { name: "bench.peer.merge".into() })
+            .collect()
+            .expect("shuffle job");
+        let mut centroids = centroid_cell().lock().unwrap();
+        for row in &reduced {
+            let Value::List(pair) = row else { continue };
+            let (Some(Value::I64(j)), Some(Value::F64Vec(stats))) =
+                (pair.first(), pair.get(1))
+            else {
+                continue;
+            };
+            let d = stats.len() - 1;
+            let count = stats[d];
+            if count > 0.0 {
+                centroids[*j as usize] = stats[..d].iter().map(|x| x / count).collect();
+            }
+        }
+        last = reduced.len();
+    }
+    last
+}
+
+fn main() {
+    mpignite::util::init_logger();
+    register_ops();
+    let mut suite = BenchSuite::new(format!(
+        "E12: k-means step, allreduce-in-stage vs reduce_by_key shuffle \
+         ({POINTS} points, {PARTS} ranks, k={K}, {ITERS} iterations, 2 workers)"
+    ));
+
+    {
+        let (sc, _workers) = cluster();
+        suite.bench("kmeans_allreduce_in_stage", || {
+            black_box(run_peer(&sc));
+        });
+        let sent = mpignite::metrics::global().counter("peer.bytes.sent").get();
+        println!("peer lane: {sent} B of in-stage peer traffic total");
+        sc.master().unwrap().shutdown();
+    }
+
+    {
+        let (sc, _workers) = cluster();
+        suite.bench("kmeans_shuffle_per_iteration", || {
+            black_box(run_shuffle(&sc));
+        });
+        let fetches = mpignite::metrics::global().counter("shuffle.remote.fetches").get();
+        println!("shuffle lane: {fetches} remote bucket fetches total");
+        sc.master().unwrap().shutdown();
+    }
+
+    suite.report();
+}

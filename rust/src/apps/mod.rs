@@ -174,6 +174,150 @@ pub fn power_iter(world: &SparkComm, arg: &Value) -> Result<Value> {
     ]))
 }
 
+// ------------------------------------------------- peer k-means -------
+
+/// Parse peer-section k-means rows: each row is a `Value::F64Vec` point.
+pub fn peer_points(rows: &[Value]) -> Result<Vec<Vec<f64>>> {
+    rows.iter()
+        .map(|v| match v {
+            Value::F64Vec(p) => Ok(p.clone()),
+            other => Err(IgniteError::Invalid(format!(
+                "k-means peer rows must be f64vec points, got {}",
+                other.type_name()
+            ))),
+        })
+        .collect()
+}
+
+fn centroids_of(v: Value) -> Result<Vec<Vec<f64>>> {
+    match v {
+        Value::List(entries) => entries
+            .into_iter()
+            .map(|e| match e {
+                Value::F64Vec(c) => Ok(c),
+                other => Err(IgniteError::Invalid(format!(
+                    "centroid must be f64vec, got {}",
+                    other.type_name()
+                ))),
+            })
+            .collect(),
+        other => Err(IgniteError::Invalid(format!(
+            "centroid list must be a list, got {}",
+            other.type_name()
+        ))),
+    }
+}
+
+/// Elementwise-add two per-cluster stats lists (the all-reduce combiner
+/// of [`kmeans_iteration`]; shape mismatches keep the left side — they
+/// cannot occur between well-formed gang members).
+fn merge_kmeans_stats(a: Value, b: Value) -> Value {
+    match (a, b) {
+        (Value::List(xs), Value::List(ys)) if xs.len() == ys.len() => Value::List(
+            xs.into_iter()
+                .zip(ys)
+                .map(|(x, y)| match (x, y) {
+                    (Value::F64Vec(mut u), Value::F64Vec(v)) if u.len() == v.len() => {
+                        for (ui, vi) in u.iter_mut().zip(&v) {
+                            *ui += vi;
+                        }
+                        Value::F64Vec(u)
+                    }
+                    (x, _) => x,
+                })
+                .collect(),
+        ),
+        (a, _) => a,
+    }
+}
+
+/// Agree on initial centroids across the gang: rank 0 proposes its first
+/// `k` points (padded with unit-offset points when it holds fewer) and
+/// broadcasts them.
+pub fn kmeans_init(comm: &SparkComm, points: &[Vec<f64>], k: usize) -> Result<Vec<Vec<f64>>> {
+    let proposal = if comm.rank() == 0 {
+        let d = points.first().map(|p| p.len()).unwrap_or(2);
+        let mut init: Vec<Vec<f64>> = points.iter().take(k).cloned().collect();
+        while init.len() < k {
+            init.push(vec![init.len() as f64; d]);
+        }
+        Some(Value::List(init.into_iter().map(Value::F64Vec).collect()))
+    } else {
+        None
+    };
+    centroids_of(comm.broadcast(0, proposal)?)
+}
+
+/// One synchronized k-means iteration: assign each local point to its
+/// nearest centroid, all-reduce the per-cluster `(coordinate sums,
+/// count)` stats across the gang, and return the updated centroids —
+/// identical on every rank (the reduction folds in rank order, so even
+/// float rounding agrees). An empty cluster keeps its old centroid.
+pub fn kmeans_iteration(
+    comm: &SparkComm,
+    points: &[Vec<f64>],
+    centroids: &[Vec<f64>],
+) -> Result<Vec<Vec<f64>>> {
+    let d = centroids.first().map(|c| c.len()).unwrap_or(0);
+    let mut stats = vec![vec![0.0f64; d + 1]; centroids.len()];
+    for p in points {
+        let mut best = 0usize;
+        let mut best_dist = f64::INFINITY;
+        for (j, c) in centroids.iter().enumerate() {
+            let dist: f64 = c.iter().zip(p).map(|(a, b)| (a - b) * (a - b)).sum();
+            if dist < best_dist {
+                best_dist = dist;
+                best = j;
+            }
+        }
+        for (si, xi) in stats[best].iter_mut().zip(p) {
+            *si += xi;
+        }
+        stats[best][d] += 1.0;
+    }
+    let local = Value::List(stats.into_iter().map(Value::F64Vec).collect());
+    let total = centroids_of(comm.all_reduce(local, merge_kmeans_stats)?)?;
+    Ok(total
+        .into_iter()
+        .zip(centroids)
+        .map(|(t, old)| {
+            let count = t[d];
+            if count > 0.0 {
+                t[..d].iter().map(|x| x / count).collect()
+            } else {
+                old.clone()
+            }
+        })
+        .collect())
+}
+
+/// Full peer-section k-means step: agree on initial centroids
+/// ([`kmeans_init`]), run `iters` synchronized iterations — each one an
+/// in-stage all-reduce, no shuffle, no driver round-trip — and return
+/// the final centroids as rows (identical on every rank).
+pub fn kmeans_peer_step(
+    comm: &SparkComm,
+    rows: Vec<Value>,
+    k: usize,
+    iters: usize,
+) -> Result<Vec<Value>> {
+    let points = peer_points(&rows)?;
+    let mut centroids = kmeans_init(comm, &points, k)?;
+    for _ in 0..iters {
+        centroids = kmeans_iteration(comm, &points, &centroids)?;
+    }
+    Ok(centroids.into_iter().map(Value::F64Vec).collect())
+}
+
+/// Register [`kmeans_peer_step`] as peer operator `name` with fixed
+/// `(k, iters)` — the shape `examples/kmeans_peer.rs`, the E12 bench and
+/// the peer integration tests share.
+pub fn register_kmeans_peer(name: &str, k: usize, iters: usize) {
+    crate::closure::register_peer_op(name, move |comm, rows| {
+        kmeans_peer_step(comm, rows, k, iters)
+    });
+}
+
 /// Pure-Rust single-node power iteration (baseline + correctness oracle
 /// for the distributed version; also the E8 bench comparator).
 pub fn power_iter_reference(n: usize, iters: usize, seed: u64) -> f64 {
@@ -253,6 +397,45 @@ mod tests {
             assert_eq!(v.get("a"), Some(&Value::I64(2)));
             assert_eq!(v.get("b"), Some(&Value::I64(1)));
         }
+    }
+
+    #[test]
+    fn kmeans_peer_step_converges_and_agrees_across_ranks() {
+        // Three tight clusters around (0,0), (10,0), (0,10); two ranks
+        // each hold half the points. Every rank must return the SAME
+        // centroids, each near one cluster center.
+        let out = run_local_world(2, |comm| {
+            let rank = comm.rank() as f64;
+            let rows: Vec<Value> = (0..6)
+                .map(|i| {
+                    let center = match i % 3 {
+                        0 => (0.0, 0.0),
+                        1 => (10.0, 0.0),
+                        _ => (0.0, 10.0),
+                    };
+                    let jitter = 0.1 * (i as f64 + rank);
+                    Value::F64Vec(vec![center.0 + jitter, center.1 - jitter])
+                })
+                .collect();
+            kmeans_peer_step(comm, rows, 3, 5)
+        })
+        .unwrap();
+        assert_eq!(out[0], out[1], "ranks must agree bit-for-bit");
+        assert_eq!(out[0].len(), 3);
+        for centroid in &out[0] {
+            let Value::F64Vec(c) = centroid else { panic!("bad centroid {centroid:?}") };
+            let near_a_center = [(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)]
+                .iter()
+                .any(|(x, y)| (c[0] - x).abs() < 1.0 && (c[1] - y).abs() < 1.0);
+            assert!(near_a_center, "centroid {c:?} far from every cluster");
+        }
+        // Malformed rows fail loudly.
+        let err = run_local_world(1, |comm| {
+            kmeans_peer_step(comm, vec![Value::I64(1)], 2, 1)?;
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("f64vec"), "got: {err}");
     }
 
     #[test]

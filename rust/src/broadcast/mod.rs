@@ -47,8 +47,10 @@ use crate::error::{IgniteError, Result};
 use crate::metrics;
 use crate::ser::Value;
 use crate::shuffle::StableHasher;
-use std::collections::HashMap;
+use crate::storage::DiskStore;
+use std::collections::{HashMap, HashSet};
 use std::hash::Hasher;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 /// Default block size when `ignite.broadcast.block.bytes` is absent.
@@ -56,6 +58,11 @@ pub const DEFAULT_BLOCK_BYTES: usize = 256 * 1024;
 
 /// `(broadcast id, block index)` — the unit of distribution.
 type BlockKey = (u64, usize);
+
+/// DiskStore id of one spilled broadcast block.
+fn block_disk_id(id: u64, block: usize) -> String {
+    format!("bcast-{id}-{block}")
+}
 
 /// Split encoded bytes into `block_bytes`-sized chunks (the last block
 /// may be shorter; an empty payload still yields one empty block so every
@@ -121,8 +128,18 @@ pub trait BroadcastNet: Send + Sync {
 /// (see `crate::cluster::install_broadcast_service`).
 pub struct BroadcastManager {
     block_bytes: usize,
-    /// Locally-held blocks (driver-registered or fetched).
+    /// In-memory tier: locally-held blocks (driver-registered or
+    /// fetched) within the byte budget.
     blocks: RwLock<HashMap<BlockKey, Arc<Vec<u8>>>>,
+    /// Keys currently spilled to `disk` (bytes live in the DiskStore) —
+    /// the broadcast twin of the shuffle plane's spill tier.
+    spilled: Mutex<HashSet<BlockKey>>,
+    /// Spill tier; `None` in memory-only setups.
+    disk: Option<Arc<DiskStore>>,
+    /// In-memory byte budget across all broadcasts
+    /// (`ignite.broadcast.memory.bytes`).
+    budget: usize,
+    mem_used: AtomicUsize,
     /// Fully-assembled values known locally.
     meta: Mutex<HashMap<u64, BroadcastMeta>>,
     /// Single-flight gates: concurrent tasks wanting the same value must
@@ -140,10 +157,26 @@ impl Default for BroadcastManager {
 }
 
 impl BroadcastManager {
+    /// Budget-unlimited, memory-only manager (unit tests, the master's
+    /// authoritative store).
     pub fn new(block_bytes: usize) -> Self {
+        BroadcastManager::with_tiering(block_bytes, usize::MAX, None)
+    }
+
+    /// A manager holding at most `budget` raw block bytes in memory,
+    /// spilling overflow to `disk` when present — mirroring the shuffle
+    /// plane's memory → disk tiering (blocks are already opaque bytes,
+    /// so the tiers compose with peer fetch unchanged: `local_block`
+    /// reads spills back transparently, which is also what the worker's
+    /// `broadcast.fetch` endpoint serves to peers).
+    pub fn with_tiering(block_bytes: usize, budget: usize, disk: Option<Arc<DiskStore>>) -> Self {
         BroadcastManager {
             block_bytes: block_bytes.max(1),
             blocks: RwLock::new(HashMap::new()),
+            spilled: Mutex::new(HashSet::new()),
+            disk,
+            budget,
+            mem_used: AtomicUsize::new(0),
             meta: Mutex::new(HashMap::new()),
             fetch_gates: Mutex::new(HashMap::new()),
             net: RwLock::new(None),
@@ -164,17 +197,89 @@ impl BroadcastManager {
         self.net.read().unwrap().clone()
     }
 
+    /// Store one block, spilling past the memory budget (the write half
+    /// of the memory → disk tiering; same admission discipline as the
+    /// shuffle plane: the budget check runs under the blocks write lock
+    /// so concurrent stores cannot collectively blow past it, and a
+    /// replaced duplicate is subtracted exactly once).
+    /// Publish the current in-memory byte count to the
+    /// `broadcast.mem.used` gauge (call after ANY `mem_used` mutation —
+    /// a stale gauge after `clear` would read as phantom pressure).
+    fn sync_mem_gauge(&self) {
+        metrics::global()
+            .gauge("broadcast.mem.used")
+            .set(self.mem_used.load(Ordering::Relaxed) as i64);
+    }
+
+    fn store_block(&self, key: BlockKey, bytes: Vec<u8>) {
+        let size = bytes.len();
+        let to_spill = {
+            let mut blocks = self.blocks.write().unwrap();
+            if let Some(old) = blocks.remove(&key) {
+                self.mem_used.fetch_sub(old.len(), Ordering::Relaxed);
+            }
+            let fits = self
+                .mem_used
+                .load(Ordering::Relaxed)
+                .checked_add(size)
+                .map(|total| total <= self.budget)
+                .unwrap_or(false);
+            if self.disk.is_some() && !fits {
+                Some(bytes)
+            } else {
+                blocks.insert(key, Arc::new(bytes));
+                self.mem_used.fetch_add(size, Ordering::Relaxed);
+                None
+            }
+        };
+        match to_spill {
+            Some(bytes) => {
+                let disk = self.disk.as_ref().expect("spill path implies a disk tier");
+                metrics::global().counter("broadcast.spills").inc();
+                metrics::global().counter("broadcast.bytes.spilled").add(size as u64);
+                if let Err(e) = disk.put_bytes(&block_disk_id(key.0, key.1), &bytes) {
+                    // Spill I/O failure: keep the block in memory (over
+                    // budget beats losing a block we already paid the
+                    // wire for), and drop any STALE spilled copy of this
+                    // key — leaving it would double-count the block and
+                    // let a later read-back serve outdated disk bytes.
+                    log::warn!(target: "broadcast", "spill of {key:?} failed ({e}); keeping in memory");
+                    {
+                        let mut blocks = self.blocks.write().unwrap();
+                        if let Some(old) = blocks.insert(key, Arc::new(bytes)) {
+                            self.mem_used.fetch_sub(old.len(), Ordering::Relaxed);
+                        }
+                        self.mem_used.fetch_add(size, Ordering::Relaxed);
+                    }
+                    if self.spilled.lock().unwrap().remove(&key) {
+                        disk.remove(&block_disk_id(key.0, key.1));
+                    }
+                    self.sync_mem_gauge();
+                    return;
+                }
+                self.spilled.lock().unwrap().insert(key);
+            }
+            None => {
+                // The block now lives in memory; drop any stale spilled
+                // copy a previous registration left on disk.
+                if self.spilled.lock().unwrap().remove(&key) {
+                    if let Some(disk) = &self.disk {
+                        disk.remove(&block_disk_id(key.0, key.1));
+                    }
+                }
+            }
+        }
+        self.sync_mem_gauge();
+    }
+
     /// Chunk and store a value's encoded bytes locally (driver-side
     /// registration, or a test staging blocks for a `SourceRef` plan).
     /// Returns the number of blocks.
     pub fn put_value_bytes(&self, id: u64, bytes: &[u8]) -> usize {
         let chunks = chunk_bytes(bytes, self.block_bytes);
         let n = chunks.len();
-        {
-            let mut blocks = self.blocks.write().unwrap();
-            for (i, c) in chunks.into_iter().enumerate() {
-                blocks.insert((id, i), Arc::new(c));
-            }
+        for (i, c) in chunks.into_iter().enumerate() {
+            self.store_block((id, i), c);
         }
         self.meta
             .lock()
@@ -184,21 +289,32 @@ impl BroadcastManager {
         n
     }
 
-    /// One locally-held block — what the worker's `broadcast.fetch`
-    /// endpoint serves. Remote requests must never recurse into the
-    /// remote tier.
+    /// One locally-held block (memory tier, then transparent read-back
+    /// of spills) — what the worker's `broadcast.fetch` endpoint serves.
+    /// Remote requests must never recurse into the remote tier.
     pub fn local_block(&self, id: u64, block: usize) -> Option<Arc<Vec<u8>>> {
-        self.blocks.read().unwrap().get(&(id, block)).cloned()
+        let key = (id, block);
+        if let Some(bytes) = self.blocks.read().unwrap().get(&key) {
+            return Some(bytes.clone());
+        }
+        if self.spilled.lock().unwrap().contains(&key) {
+            if let Some(disk) = &self.disk {
+                if let Some(bytes) = disk.get_bytes(&block_disk_id(id, block)) {
+                    metrics::global().counter("broadcast.spill.readbacks").inc();
+                    return Some(Arc::new(bytes));
+                }
+            }
+        }
+        None
     }
 
     /// Reassemble a fully locally-held value; `None` when any block (or
     /// the value itself) is unknown here.
     pub fn local_value_bytes(&self, id: u64) -> Option<Vec<u8>> {
         let meta = self.meta.lock().unwrap().get(&id).copied()?;
-        let blocks = self.blocks.read().unwrap();
         let mut out = Vec::with_capacity(meta.total_bytes);
         for b in 0..meta.num_blocks {
-            out.extend_from_slice(blocks.get(&(id, b))?);
+            out.extend_from_slice(&self.local_block(id, b)?);
         }
         Some(out)
     }
@@ -265,11 +381,8 @@ impl BroadcastManager {
         let published = {
             let gates = self.fetch_gates.lock().unwrap();
             if gates.get(&id).map(|g| Arc::ptr_eq(g, &gate)).unwrap_or(false) {
-                {
-                    let mut blocks = self.blocks.write().unwrap();
-                    for (i, bytes) in staged.into_iter().enumerate() {
-                        blocks.insert((id, i), Arc::new(bytes));
-                    }
+                for (i, bytes) in staged.into_iter().enumerate() {
+                    self.store_block((id, i), bytes);
                 }
                 self.meta.lock().unwrap().insert(
                     id,
@@ -352,7 +465,26 @@ impl BroadcastManager {
     pub fn clear(&self, id: u64) {
         let mut gates = self.fetch_gates.lock().unwrap();
         gates.remove(&id);
-        self.blocks.write().unwrap().retain(|(bid, _), _| *bid != id);
+        self.blocks.write().unwrap().retain(|(bid, _), bytes| {
+            if *bid == id {
+                self.mem_used.fetch_sub(bytes.len(), Ordering::Relaxed);
+                false
+            } else {
+                true
+            }
+        });
+        self.sync_mem_gauge();
+        {
+            let mut spilled = self.spilled.lock().unwrap();
+            let keys: Vec<BlockKey> =
+                spilled.iter().filter(|(bid, _)| *bid == id).copied().collect();
+            for key in keys {
+                spilled.remove(&key);
+                if let Some(disk) = &self.disk {
+                    disk.remove(&block_disk_id(key.0, key.1));
+                }
+            }
+        }
         self.meta.lock().unwrap().remove(&id);
     }
 
@@ -366,9 +498,20 @@ impl BroadcastManager {
         self.meta.lock().unwrap().len()
     }
 
-    /// Blocks held locally (any value, including partial fetches).
+    /// Blocks held locally (any value, including partial fetches), both
+    /// tiers.
     pub fn block_count(&self) -> usize {
-        self.blocks.read().unwrap().len()
+        self.blocks.read().unwrap().len() + self.spilled.lock().unwrap().len()
+    }
+
+    /// Blocks currently spilled to the disk tier.
+    pub fn spilled_block_count(&self) -> usize {
+        self.spilled.lock().unwrap().len()
+    }
+
+    /// Raw block bytes currently held in memory.
+    pub fn mem_used(&self) -> usize {
+        self.mem_used.load(Ordering::Relaxed)
     }
 }
 
@@ -615,6 +758,44 @@ mod tests {
         assert_eq!(got, payload, "the caller still gets its bytes");
         assert_eq!(bm.value_count(), 0, "cleared mid-fetch: nothing may be published");
         assert_eq!(bm.block_count(), 0, "cleared mid-fetch: no resurrected blocks");
+    }
+
+    #[test]
+    fn zero_budget_spills_blocks_and_reads_back() {
+        let disk = Arc::new(crate::storage::DiskStore::new("/tmp/mpignite-test-bcast").unwrap());
+        let bm = BroadcastManager::with_tiering(16, 0, Some(disk));
+        let payload = to_bytes(&Value::I64Vec((0..64).collect()));
+        let n = bm.put_value_bytes(31, &payload);
+        assert!(n > 1, "payload must span multiple blocks");
+        assert_eq!(bm.spilled_block_count(), n, "budget 0 spills every block");
+        assert_eq!(bm.mem_used(), 0);
+        // Read-back is transparent, block by block and whole-value.
+        assert!(bm.local_block(31, 0).is_some());
+        assert_eq!(bm.local_value_bytes(31).unwrap(), payload);
+        assert_eq!(bm.fetch_value_bytes(31).unwrap(), payload);
+        bm.clear(31);
+        assert_eq!(bm.spilled_block_count(), 0, "clear drops spilled blocks too");
+        assert_eq!(bm.block_count(), 0);
+        assert!(bm.local_value_bytes(31).is_none());
+    }
+
+    #[test]
+    fn blocks_spill_past_budget_and_fetched_values_tier_too() {
+        let disk = Arc::new(crate::storage::DiskStore::new("/tmp/mpignite-test-bcast").unwrap());
+        // Budget fits ~2 of the 16-byte blocks; the rest spill.
+        let bm = BroadcastManager::with_tiering(16, 32, Some(disk));
+        let payload = to_bytes(&Value::I64Vec((0..64).collect()));
+        // Remote assembly (the publish step) must go through the same
+        // tiering as driver-side registration.
+        let net = Arc::new(FakeNet::new(&payload, 16, false, true));
+        bm.set_net(net);
+        assert_eq!(bm.fetch_value_bytes(32).unwrap(), payload);
+        assert!(bm.spilled_block_count() > 0, "over-budget fetched blocks must spill");
+        assert!(bm.mem_used() <= 32, "memory stays within budget");
+        // Later reads reassemble across both tiers.
+        assert_eq!(bm.fetch_value_bytes(32).unwrap(), payload);
+        bm.clear(32);
+        assert_eq!(bm.block_count(), 0);
     }
 
     #[test]

@@ -131,6 +131,15 @@ pub type NamedParallelFn = Arc<dyn Fn(&SparkComm, &Value) -> Result<Value> + Sen
 /// combined value.
 pub type NamedOpFn = Arc<dyn Fn(Value) -> Result<Value> + Send + Sync>;
 
+/// Signature of a registered *peer* operator — the body of a
+/// [`crate::rdd::PlanSpec::PeerOp`] stage. Every task of the stage runs
+/// this function once over its own partition's rows, with a live
+/// [`SparkComm`] whose rank is the partition index and whose size is the
+/// stage's partition count, so the function can `send` / `receive` /
+/// `barrier` / `all_reduce` / `broadcast` against its sibling tasks
+/// mid-stage. The returned rows become the stage's output partition.
+pub type NamedPeerFn = Arc<dyn Fn(&SparkComm, Vec<Value>) -> Result<Vec<Value>> + Send + Sync>;
+
 /// Global registry of named parallel functions and plan operators.
 /// Worker binaries register the same names as the driver (both link the
 /// same application crate), which is how cluster mode replaces closure
@@ -141,6 +150,7 @@ pub type NamedOpFn = Arc<dyn Fn(Value) -> Result<Value> + Send + Sync>;
 pub struct FuncRegistry {
     fns: Mutex<HashMap<String, NamedParallelFn>>,
     ops: Mutex<HashMap<String, NamedOpFn>>,
+    peer_ops: Mutex<HashMap<String, NamedPeerFn>>,
 }
 
 impl FuncRegistry {
@@ -184,6 +194,28 @@ impl FuncRegistry {
         names.sort();
         names
     }
+
+    /// Register a named peer operator (driver + workers must agree).
+    pub fn register_peer_op(&self, name: &str, f: NamedPeerFn) {
+        self.peer_ops.lock().unwrap().insert(name.to_string(), f);
+    }
+
+    /// Resolve a named peer operator; the error names the missing op so a
+    /// worker lacking the application library fails loudly.
+    pub fn get_peer_op(&self, name: &str) -> Result<NamedPeerFn> {
+        self.peer_ops
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| IgniteError::Invalid(format!("no registered peer op '{name}'")))
+    }
+
+    pub fn peer_op_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.peer_ops.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
 }
 
 static REGISTRY: Lazy<FuncRegistry> = Lazy::new(FuncRegistry::default);
@@ -207,6 +239,18 @@ pub fn register_parallel_fn(
 /// resolves the function from its own registry.
 pub fn register_op(name: &str, f: impl Fn(Value) -> Result<Value> + Send + Sync + 'static) {
     registry().register_op(name, Arc::new(f));
+}
+
+/// Register a named peer operator (driver + workers must agree). The
+/// peer-section analogue of [`register_op`]: a
+/// [`crate::rdd::PlanSpec::PeerOp`] stage ships the *name*, and every
+/// gang-scheduled task resolves the function from its own registry and
+/// runs it with a communicator over its sibling tasks.
+pub fn register_peer_op(
+    name: &str,
+    f: impl Fn(&SparkComm, Vec<Value>) -> Result<Vec<Value>> + Send + Sync + 'static,
+) {
+    registry().register_peer_op(name, Arc::new(f));
 }
 
 #[cfg(test)]
@@ -288,6 +332,25 @@ mod tests {
         assert!(f(Value::Str("x".into())).is_err());
         assert!(registry().get_op("test.op.ghost").is_err());
         assert!(registry().op_names().contains(&"test.op.double".to_string()));
+    }
+
+    #[test]
+    fn peer_op_registry_round_trip() {
+        register_peer_op("test.peer.sum_sizes", |comm, rows| {
+            let total = comm.all_reduce(rows.len() as i64, |a, b| a + b)?;
+            Ok(vec![Value::I64(total)])
+        });
+        let f = registry().get_peer_op("test.peer.sum_sizes").unwrap();
+        let world = CommWorld::local(1);
+        let comm = world.comm_for_rank(0);
+        assert_eq!(
+            f(&comm, vec![Value::Unit, Value::Unit]).unwrap(),
+            vec![Value::I64(2)]
+        );
+        assert!(registry().get_peer_op("test.peer.ghost").is_err());
+        assert!(registry()
+            .peer_op_names()
+            .contains(&"test.peer.sum_sizes".to_string()));
     }
 
     #[test]

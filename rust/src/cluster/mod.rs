@@ -23,9 +23,9 @@ use crate::comm::{
 };
 use crate::config::IgniteConf;
 use crate::error::{IgniteError, Result};
-use crate::fault::HeartbeatMonitor;
+use crate::fault::{HeartbeatMonitor, TaskId};
 use crate::metrics;
-use crate::rdd::{run_shuffle_map_task, PlanSpec};
+use crate::rdd::{run_shuffle_map_task, PlanSpec, PlanStage, PlanStageKind};
 use crate::rpc::{Envelope, RpcAddress, RpcEnv};
 use crate::ser::{from_bytes, to_bytes, Value};
 use log::{info, warn};
@@ -81,10 +81,22 @@ pub const EP_BROADCAST_CLEAR: &str = "broadcast.clear";
 /// the finished plan job's shuffle ids and auto-created broadcast ids,
 /// so a failed job cannot clean one table and leak the other.
 pub const EP_JOB_CLEAR: &str = "job.clear";
+/// Worker peer-section launch, two-phase like parallel-fn jobs:
+/// `prepare` installs the gang's rank table and hosts this worker's rank
+/// mailboxes (re-hosting poisons an aborted attempt's), `run` spawns one
+/// dedicated thread per rank. No `run` is sent until EVERY participating
+/// worker acked `prepare`, so no rank's first send can race an un-hosted
+/// destination.
+pub const EP_PEER_PREPARE: &str = "peer.prepare";
+pub const EP_PEER_RUN: &str = "peer.run";
+/// Worker → master: one gang rank finished (rank-level, not batched —
+/// the first failure aborts the whole gang).
+pub const EP_PEER_RESULT: &str = "master.peer_result";
 
 struct WorkerInfo {
     addr: RpcAddress,
-    #[allow(dead_code)]
+    /// Task slots the worker advertised at registration; the gang
+    /// scheduler counts peer-section placements against it.
     slots: usize,
 }
 
@@ -108,6 +120,27 @@ struct PlanJobState {
     wake_lock: Mutex<()>,
 }
 
+/// Driver-side state of one in-flight peer-section gang attempt: a
+/// countdown of outstanding ranks plus the first failure (rank outputs
+/// live in the shuffle plane, so there are no result slots). Keyed by
+/// the attempt's own job id — a report from an aborted attempt finds no
+/// state and is dropped.
+struct PeerJobState {
+    remaining: AtomicU64,
+    error: Mutex<Option<(String, bool)>>,
+    wake: Condvar,
+    wake_lock: Mutex<()>,
+}
+
+/// Why a gang attempt failed, plus whether its communicator ever came to
+/// life. `launched: false` (placement impossible, a prepare/run ack
+/// failed) means no gang existed — the retry is a re-placement, not a
+/// restart, and `peer.gang.restarts` must not count it.
+struct GangAttemptFailure {
+    error: IgniteError,
+    launched: bool,
+}
+
 /// The embedded cluster master.
 pub struct Master {
     env: RpcEnv,
@@ -117,6 +150,7 @@ pub struct Master {
     rank_table: RankTable,
     jobs: Mutex<HashMap<u64, Arc<JobState>>>,
     plan_jobs: Mutex<HashMap<u64, Arc<PlanJobState>>>,
+    peer_jobs: Mutex<HashMap<u64, Arc<PeerJobState>>>,
     next_worker: AtomicU64,
     next_job: AtomicU64,
     /// Serializes jobs: the prototype runs one parallel execution at a
@@ -155,6 +189,7 @@ impl Master {
             rank_table,
             jobs: Mutex::new(HashMap::new()),
             plan_jobs: Mutex::new(HashMap::new()),
+            peer_jobs: Mutex::new(HashMap::new()),
             next_worker: AtomicU64::new(1),
             next_job: AtomicU64::new(1),
             job_serial: Mutex::new(()),
@@ -284,6 +319,35 @@ impl Master {
                         if err.is_none() {
                             *err = Some((
                                 format!("worker {}: {}", pr.worker_id, pr.error),
+                                pr.recoverable,
+                            ));
+                        }
+                    }
+                    job.remaining.fetch_sub(1, Ordering::SeqCst);
+                    let _g = job.wake_lock.lock().unwrap();
+                    job.wake.notify_all();
+                }
+                Ok(None)
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_PEER_RESULT,
+            Arc::new(move |envelope: &Envelope| {
+                let pr: PeerTaskResult = from_bytes(&envelope.body)?;
+                // Stale reports (aborted gang attempts, or ranks racing
+                // the abort) find no job state and are dropped.
+                let job = m.peer_jobs.lock().unwrap().get(&pr.job_id).cloned();
+                if let Some(job) = job {
+                    if !pr.ok {
+                        let mut err = job.error.lock().unwrap();
+                        if err.is_none() {
+                            *err = Some((
+                                format!(
+                                    "rank {} (worker {}, generation {}): {}",
+                                    pr.rank, pr.worker_id, pr.generation, pr.error
+                                ),
                                 pr.recoverable,
                             ));
                         }
@@ -675,8 +739,10 @@ impl Master {
             })
         });
         let plan_bytes = to_bytes(&plan);
-        let stages = plan.shuffle_stages();
-        let shuffles = plan.shuffle_ids();
+        let stages = plan.stages();
+        // Peer-section outputs live in the same bucket namespace as
+        // shuffle outputs, so one id list GCs both.
+        let shuffles = plan.cleanup_ids();
 
         // Recoverable failures (worker lost, timeout, worker-reported
         // recoverable errors) retry the WHOLE job — not just the failing
@@ -732,19 +798,247 @@ impl Master {
         outcome
     }
 
-    /// One attempt at a full plan job: every map stage in lineage order,
-    /// then the result stage.
+    /// One attempt at a full plan job: every materializing stage in
+    /// lineage order (shuffle map stages shipped over `task.run`, peer
+    /// sections gang-scheduled over `peer.prepare`/`peer.run`), then the
+    /// result stage.
     fn try_plan_job(
         &self,
         plan_bytes: &[u8],
-        stages: &[(u64, usize)],
+        stages: &[PlanStage],
         num_result_tasks: usize,
     ) -> Result<Vec<Vec<Value>>> {
-        for (shuffle_id, num_maps) in stages {
-            info!(target: "cluster", "plan map stage shuffle {shuffle_id} ({num_maps} tasks)");
-            self.try_plan_stage(plan_bytes, Some(*shuffle_id), *num_maps)?;
+        for stage in stages {
+            match stage.kind {
+                PlanStageKind::Shuffle => {
+                    info!(
+                        target: "cluster",
+                        "plan map stage shuffle {} ({} tasks)", stage.id, stage.num_tasks
+                    );
+                    self.try_plan_stage(plan_bytes, Some(stage.id), stage.num_tasks)?;
+                }
+                PlanStageKind::Peer => {
+                    info!(
+                        target: "cluster",
+                        "plan peer section {} ({} ranks)", stage.id, stage.num_tasks
+                    );
+                    self.try_peer_stage(plan_bytes, stage.id, stage.num_tasks)?;
+                }
+            }
         }
         self.try_plan_stage(plan_bytes, None, num_result_tasks)
+    }
+
+    /// Run one peer section to completion, restarting the WHOLE gang on
+    /// a fresh communicator generation when a rank fails or a worker
+    /// dies mid-gang (up to the `ignite.peer.gang.retries` budget).
+    /// Placement errors (`Invalid`: not enough gang slots, no workers)
+    /// fail immediately — restarting cannot create capacity.
+    fn try_peer_stage(&self, plan_bytes: &[u8], peer_id: u64, num_tasks: usize) -> Result<()> {
+        if num_tasks == 0 {
+            return Ok(());
+        }
+        let budget = self.conf.get_usize("ignite.peer.gang.retries").unwrap_or(3).max(1);
+        let mut generation = 0u64;
+        loop {
+            let failure = match self.try_peer_gang(plan_bytes, peer_id, num_tasks, generation) {
+                Ok(()) => return Ok(()),
+                Err(f) => f,
+            };
+            let retryable = failure.error.is_recoverable()
+                || matches!(failure.error, IgniteError::Task(_));
+            if !retryable || (generation as usize) + 1 >= budget {
+                return Err(failure.error);
+            }
+            if failure.launched {
+                // A RUNNING gang was aborted (rank failure / worker
+                // death): that is a restart — the next attempt gets a
+                // fresh communicator generation.
+                warn!(
+                    target: "cluster",
+                    "peer section {peer_id} gang failed ({}); restarting as generation {}",
+                    failure.error,
+                    generation + 1
+                );
+                metrics::global().counter("peer.gang.restarts").inc();
+            } else {
+                // The gang never launched (a worker died between
+                // placement and ack — e.g. not yet past its heartbeat
+                // timeout): retry placement, but no communicator ever
+                // existed, so nothing "restarts".
+                warn!(
+                    target: "cluster",
+                    "peer section {peer_id} gang launch failed ({}); re-placing",
+                    failure.error
+                );
+            }
+            generation += 1;
+        }
+    }
+
+    /// One gang attempt: all-or-nothing placement against worker slot
+    /// capacities, rank-table install (master-side authoritative copy
+    /// for relay/lookup + pushed to every participating worker), the
+    /// two-phase `peer.prepare` / `peer.run` launch, then a wait for
+    /// every rank with worker-loss watching. Failures carry whether the
+    /// gang had actually launched — only a launched gang's failure is a
+    /// *restart* (see [`try_peer_stage`](Self::try_peer_stage)).
+    fn try_peer_gang(
+        &self,
+        plan_bytes: &[u8],
+        peer_id: u64,
+        n: usize,
+        generation: u64,
+    ) -> std::result::Result<(), GangAttemptFailure> {
+        let fail =
+            |error: IgniteError, launched: bool| GangAttemptFailure { error, launched };
+        // Gang slots: every rank needs a slot BEFORE anything launches.
+        let live = self.live_workers();
+        if live.is_empty() {
+            return Err(fail(IgniteError::Invalid("no live workers".into()), false));
+        }
+        let caps: Vec<(u64, RpcAddress, usize)> = {
+            let workers = self.workers.lock().unwrap();
+            live.iter()
+                .filter_map(|(id, addr)| {
+                    workers.get(id).map(|w| (*id, addr.clone(), w.slots.max(1)))
+                })
+                .collect()
+        };
+        let total: usize = caps.iter().map(|c| c.2).sum();
+        if total < n {
+            return Err(fail(
+                IgniteError::Invalid(format!(
+                    "peer section {peer_id} needs {n} gang slots, cluster has {total}"
+                )),
+                false,
+            ));
+        }
+        // Round-robin placement that skips workers at slot capacity
+        // (terminates because total >= n).
+        let mut assignment: HashMap<u64, (RpcAddress, Vec<u64>)> = HashMap::new();
+        let mut used = vec![0usize; caps.len()];
+        let mut table: Vec<(u64, String)> = Vec::with_capacity(n);
+        let mut cursor = 0usize;
+        for rank in 0..n {
+            while used[cursor % caps.len()] >= caps[cursor % caps.len()].2 {
+                cursor += 1;
+            }
+            let (wid, addr, _) = &caps[cursor % caps.len()];
+            used[cursor % caps.len()] += 1;
+            cursor += 1;
+            assignment
+                .entry(*wid)
+                .or_insert_with(|| (addr.clone(), Vec::new()))
+                .1
+                .push(rank as u64);
+            table.push((rank as u64, addr.0.clone()));
+        }
+        // Master-side authoritative rank table (relay forwarding and the
+        // `comm.lookup` cold-table fallback resolve through it).
+        {
+            let mut t = self.rank_table.write().unwrap();
+            t.clear();
+            for (rank, addr) in &table {
+                t.insert(*rank as usize, RpcAddress(addr.clone()));
+            }
+        }
+
+        let job_id = self.next_job.fetch_add(1, Ordering::SeqCst);
+        metrics::global().counter("peer.sections.launched").inc();
+        let t0 = std::time::Instant::now();
+        let job = Arc::new(PeerJobState {
+            remaining: AtomicU64::new(n as u64),
+            error: Mutex::new(None),
+            wake: Condvar::new(),
+            wake_lock: Mutex::new(()),
+        });
+        self.peer_jobs.lock().unwrap().insert(job_id, job.clone());
+        let assigned_workers: Vec<u64> = assignment.keys().copied().collect();
+
+        // Phase 1 everywhere (mailboxes hosted, stale ones poisoned,
+        // rank tables pushed), THEN phase 2 everywhere.
+        let launch_timeout = Duration::from_secs(5);
+        for phase in [EP_PEER_PREPARE, EP_PEER_RUN] {
+            for (wid, (addr, ranks)) in &assignment {
+                let req = PeerTaskReq {
+                    job_id,
+                    peer_id,
+                    generation,
+                    // Each phase ships only what it reads — prepare the
+                    // rank table (mailbox hosting + routing install), run
+                    // the plan (rank execution) — so neither payload
+                    // crosses a worker's wire twice per attempt.
+                    plan: if phase == EP_PEER_RUN { plan_bytes.to_vec() } else { Vec::new() },
+                    world_size: n as u64,
+                    ranks: ranks.clone(),
+                    rank_table: if phase == EP_PEER_PREPARE {
+                        table.clone()
+                    } else {
+                        Vec::new()
+                    },
+                };
+                if let Err(e) = self.env.ask(addr, phase, to_bytes(&req), launch_timeout) {
+                    self.peer_jobs.lock().unwrap().remove(&job_id);
+                    // Treat the unreachable worker as lost NOW instead of
+                    // waiting out its heartbeat window: the re-placement
+                    // must not hand the same dead worker the same ranks
+                    // again. (A merely-slow worker re-registers itself
+                    // with its next heartbeat.)
+                    self.monitor.remove(*wid);
+                    return Err(fail(
+                        IgniteError::WorkerLost {
+                            worker: *wid,
+                            reason: format!("{phase} failed: {e}"),
+                        },
+                        false,
+                    ));
+                }
+                if phase == EP_PEER_PREPARE {
+                    metrics::global().counter("cluster.peer.rank_tables.pushed").inc();
+                }
+            }
+        }
+
+        let deadline = std::time::Instant::now()
+            + self
+                .conf
+                .get_duration_ms("ignite.peer.section.timeout.ms")
+                .unwrap_or(Duration::from_secs(30));
+        let outcome = loop {
+            // Same remaining-before-error discipline as plan stages: a
+            // failing rank sets the error then decrements, so observing
+            // remaining == 0 guarantees any failure is already visible.
+            let all_reported = job.remaining.load(Ordering::SeqCst) == 0;
+            if let Some((msg, recoverable)) = job.error.lock().unwrap().clone() {
+                break Err(if recoverable {
+                    IgniteError::Rpc(msg)
+                } else {
+                    IgniteError::Task(msg)
+                });
+            }
+            if all_reported {
+                break Ok(());
+            }
+            let lost = self.monitor.lost_workers();
+            if let Some(&w) = lost.iter().find(|w| assigned_workers.contains(w)) {
+                break Err(IgniteError::WorkerLost {
+                    worker: w,
+                    reason: "heartbeat timeout mid-gang".into(),
+                });
+            }
+            if std::time::Instant::now() > deadline {
+                break Err(IgniteError::Timeout(format!(
+                    "peer section {peer_id} gang (job {job_id}, generation {generation}) \
+                     incomplete"
+                )));
+            }
+            let g = job.wake_lock.lock().unwrap();
+            let _ = job.wake.wait_timeout(g, Duration::from_millis(20)).unwrap();
+        };
+        self.peer_jobs.lock().unwrap().remove(&job_id);
+        metrics::global().histogram("peer.section.latency").record(t0.elapsed());
+        outcome.map_err(|error| fail(error, true))
     }
 
     fn try_plan_stage(
@@ -1224,21 +1518,27 @@ impl Worker {
         let soft_cap = conf.get_usize("ignite.comm.buffer.max")?;
         let transport = ClusterTransport::new(env.clone(), master_addr.clone(), mode, soft_cap);
 
+        // The worker's engine: shuffle buckets land here (memory within
+        // the budget, spilled to disk past it) and are served to remote
+        // reduce tasks over `shuffle.fetch`. Built BEFORE registration so
+        // the slot capacity this worker advertises — what the master's
+        // peer-section gang scheduler counts placements against — is the
+        // engine's actual pool size, not a separate config read.
+        let engine = crate::scheduler::Engine::new(conf.clone())?;
+
         let resp = env.ask(
             &master_addr,
             EP_REGISTER,
             to_bytes(&RegisterReq {
                 addr: env.address().0.clone(),
-                slots: conf.get_usize("ignite.worker.slots")? as u64,
+                slots: engine.slots() as u64,
             }),
             Duration::from_secs(5),
         )?;
         let RegisterResp { worker_id } = from_bytes(&resp)?;
-
-        // The worker's engine: shuffle buckets land here (memory within
-        // the budget, spilled to disk past it) and are served to remote
-        // reduce tasks over `shuffle.fetch`.
-        let engine = crate::scheduler::Engine::new(conf.clone())?;
+        // Peer-section traffic leaving/entering this worker is also
+        // attributed to cluster.worker.<id>.peer.bytes.{sent,received}.
+        transport.set_metrics_label(worker_id);
         install_shuffle_service(
             &env,
             master_addr.clone(),
@@ -1350,6 +1650,145 @@ impl Worker {
                         engine.clear_broadcast(id);
                     }
                     Ok(None)
+                }),
+            );
+        }
+
+        // Peer-section launch, phase 1: install the gang's rank table
+        // and host this worker's rank mailboxes. Re-hosting a rank
+        // poisons an aborted attempt's mailbox, which is what evicts
+        // stale sends from a dead gang generation.
+        let peer_prepared: Arc<Mutex<HashMap<u64, HashMap<usize, u64>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        {
+            let transport = transport.clone();
+            let prepared = peer_prepared.clone();
+            env.register(
+                EP_PEER_PREPARE,
+                Arc::new(move |envelope: &Envelope| {
+                    let req: PeerTaskReq = from_bytes(&envelope.body)?;
+                    log::debug!(
+                        target: "cluster",
+                        "worker {worker_id} peer prepare job {} generation {} ranks {:?}",
+                        req.job_id, req.generation, req.ranks
+                    );
+                    let entries: Vec<(usize, RpcAddress)> = req
+                        .rank_table
+                        .iter()
+                        .map(|(r, a)| (*r as usize, RpcAddress(a.clone())))
+                        .collect();
+                    transport.update_rank_table(&entries);
+                    let mut generations = HashMap::new();
+                    for &rank in &req.ranks {
+                        let rank = rank as usize;
+                        let (_, mailbox_gen) = transport.host_rank(rank);
+                        generations.insert(rank, mailbox_gen);
+                    }
+                    let mut p = prepared.lock().unwrap();
+                    // Gangs are serialized by the master, so any older
+                    // entry belongs to an attempt whose `run` never came
+                    // (its launch failed on another worker) — drop it.
+                    p.clear();
+                    p.insert(req.job_id, generations);
+                    Ok(Some(Vec::new())) // ack
+                }),
+            );
+        }
+
+        // Peer-section launch, phase 2: one dedicated thread per rank
+        // (NOT pool tasks — the master's gang scheduler already counted
+        // these against this worker's slots, and a rank blocked in a
+        // collective must never starve a sibling of a pool slot). Each
+        // rank computes its parent partition from the shipped plan, runs
+        // the registered peer operator with a communicator over the
+        // gang, materializes its output as bucket (peer_id, rank, rank),
+        // and reports to the master individually.
+        {
+            let conf = conf.clone();
+            let transport = transport.clone();
+            let engine = engine.clone();
+            let env2 = env.clone();
+            let master = master_addr.clone();
+            let prepared = peer_prepared.clone();
+            env.register(
+                EP_PEER_RUN,
+                Arc::new(move |envelope: &Envelope| {
+                    let req: PeerTaskReq = from_bytes(&envelope.body)?;
+                    let generations =
+                        prepared.lock().unwrap().remove(&req.job_id).ok_or_else(|| {
+                            IgniteError::Invalid(format!("peer job {} not prepared", req.job_id))
+                        })?;
+                    let plan: PlanSpec = from_bytes(&req.plan)?;
+                    let (op_name, parent) = crate::peer::resolve_peer_node(&plan, req.peer_id)?;
+                    let world = CommWorld::over_transport(
+                        transport.clone(),
+                        req.world_size as usize,
+                        &conf,
+                    );
+                    let context = crate::peer::peer_context(req.job_id, req.generation);
+                    for &rank in &req.ranks {
+                        let rank = rank as usize;
+                        let mailbox_gen = generations[&rank];
+                        let world = Arc::clone(&world);
+                        let op_name = op_name.clone();
+                        let parent = Arc::clone(&parent);
+                        let engine = engine.clone();
+                        let env3 = env2.clone();
+                        let master = master.clone();
+                        let transport = transport.clone();
+                        let (job_id, peer_id, generation) =
+                            (req.job_id, req.peer_id, req.generation);
+                        let world_size = req.world_size as usize;
+                        std::thread::Builder::new()
+                            .name(format!("peer-job{job_id}-rank{rank}"))
+                            .spawn(move || {
+                                let comm = world.comm_for_rank_ctx(rank, context);
+                                let outcome = (|| -> Result<()> {
+                                    engine.fault.before_task(TaskId {
+                                        stage: peer_id,
+                                        partition: rank,
+                                        attempt: generation as usize,
+                                    })?;
+                                    let rows = parent.compute(rank, &engine)?;
+                                    let f = registry().get_peer_op(&op_name)?;
+                                    let out = f(&comm, rows)?;
+                                    engine.shuffle.put_bucket(peer_id, rank, rank, out);
+                                    engine.shuffle.map_done(peer_id, rank, world_size)
+                                })();
+                                metrics::global().counter("peer.tasks.executed").inc();
+                                metrics::global().counter(&worker_task_counter(worker_id)).inc();
+                                // Evict BEFORE reporting, like parallel-fn
+                                // ranks: once the master has every rank it
+                                // may launch the next gang, which re-hosts
+                                // this rank. Stale evictions (the rank was
+                                // re-hosted by a restarted gang) are no-ops
+                                // thanks to the mailbox generation guard.
+                                transport.evict_rank(rank, mailbox_gen);
+                                let msg = match outcome {
+                                    Ok(()) => PeerTaskResult {
+                                        job_id,
+                                        worker_id,
+                                        rank: rank as u64,
+                                        generation,
+                                        ok: true,
+                                        error: String::new(),
+                                        recoverable: false,
+                                    },
+                                    Err(e) => PeerTaskResult {
+                                        job_id,
+                                        worker_id,
+                                        rank: rank as u64,
+                                        generation,
+                                        ok: false,
+                                        error: e.to_string(),
+                                        recoverable: e.is_recoverable(),
+                                    },
+                                };
+                                let _ = env3.send(&master, EP_PEER_RESULT, to_bytes(&msg));
+                            })
+                            .expect("spawn peer rank thread");
+                    }
+                    Ok(Some(Vec::new())) // launch ack
                 }),
             );
         }
@@ -1512,9 +1951,19 @@ impl Worker {
     }
 
     /// How many shipped plan-stage tasks this worker has executed
-    /// (reads its [`worker_task_counter`] metric).
+    /// (reads its [`worker_task_counter`] metric; peer-section ranks
+    /// count too).
     pub fn tasks_executed(&self) -> u64 {
         metrics::global().counter(&worker_task_counter(self.worker_id)).get()
+    }
+
+    /// Peer-section bytes this worker's ranks have sent (reads its
+    /// [`crate::comm::peer_bytes_sent_counter`] metric) — how tests
+    /// assert that ranks on *this* worker actually talked to siblings.
+    pub fn peer_bytes_sent(&self) -> u64 {
+        metrics::global()
+            .counter(&crate::comm::peer_bytes_sent_counter(self.worker_id))
+            .get()
     }
 
     /// Simulate a crash: stop heartbeats and drop the RPC env.
@@ -1585,6 +2034,33 @@ mod tests {
         let (master, _workers) = setup(3);
         let out = master.execute_named("cluster.test.ring", 6, Value::Unit).unwrap();
         assert_eq!(out, vec![Value::I64(42); 6]);
+        master.shutdown();
+    }
+
+    #[test]
+    fn ring_allreduce_crosses_workers_end_to_end() {
+        // The `ring` allreduce shape end-to-end over ClusterTransport:
+        // ranks spread across 3 worker processes, vector payloads, and
+        // the result must match what the tree shape computes locally.
+        register_parallel_fn("cluster.test.ring_allreduce", |comm, _| {
+            let v = vec![comm.rank() as i64 + 1; 3];
+            let total = comm.all_reduce(v, |a, b| {
+                a.iter().zip(&b).map(|(x, y)| x.wrapping_add(*y)).collect()
+            })?;
+            Ok(Value::I64Vec(total))
+        });
+        let conf = {
+            let mut c = cluster_conf();
+            c.set("ignite.comm.allreduce.algo", "ring");
+            c
+        };
+        let master = Master::start(&conf, 0).unwrap();
+        let _workers: Vec<Arc<Worker>> =
+            (0..3).map(|_| Worker::start(&conf, master.address()).unwrap()).collect();
+        master.wait_for_workers(3, Duration::from_secs(5)).unwrap();
+        let out = master.execute_named("cluster.test.ring_allreduce", 6, Value::Unit).unwrap();
+        // sum of 1..=6 = 21, in every component, on every rank.
+        assert_eq!(out, vec![Value::I64Vec(vec![21, 21, 21]); 6]);
         master.shutdown();
     }
 

@@ -317,6 +317,98 @@ impl Decode for PlanTaskResult {
     }
 }
 
+/// Master → worker (`peer.prepare` then `peer.run`): launch this
+/// worker's share of a gang-scheduled peer section. Each phase carries
+/// only what it reads, so no payload crosses a worker's wire twice per
+/// attempt: `plan` (the whole encoded [`crate::rdd::PlanSpec`]) ships
+/// only in `run`, `rank_table` (the master-built rank → worker-address
+/// map pushed into the worker's `ClusterTransport`) only in `prepare`;
+/// `peer_id` names the `PeerOp` node to run; `ranks` are the
+/// communicator ranks (= partition indices) placed on this worker;
+/// `generation` is the gang attempt number — it feeds the communicator
+/// context ([`crate::peer::peer_context`]) so a restarted gang can never
+/// match messages from an aborted attempt. Two-phase like parallel-fn
+/// launch: `prepare` hosts mailboxes and installs the table, `run`
+/// spawns the rank threads, and no `run` is sent until every worker
+/// acked `prepare`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeerTaskReq {
+    pub job_id: u64,
+    pub peer_id: u64,
+    pub generation: u64,
+    pub plan: Vec<u8>,
+    pub world_size: u64,
+    pub ranks: Vec<u64>,
+    pub rank_table: Vec<(u64, String)>,
+}
+
+impl Encode for PeerTaskReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.job_id.encode(buf);
+        self.peer_id.encode(buf);
+        self.generation.encode(buf);
+        self.plan.encode(buf);
+        self.world_size.encode(buf);
+        self.ranks.encode(buf);
+        self.rank_table.encode(buf);
+    }
+}
+impl Decode for PeerTaskReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(PeerTaskReq {
+            job_id: u64::decode(r)?,
+            peer_id: u64::decode(r)?,
+            generation: u64::decode(r)?,
+            plan: Vec::<u8>::decode(r)?,
+            world_size: u64::decode(r)?,
+            ranks: Vec::<u64>::decode(r)?,
+            rank_table: Vec::<(u64, String)>::decode(r)?,
+        })
+    }
+}
+
+/// Worker → master (`master.peer_result`): one gang rank finished. Rank
+/// results are reported individually (unlike `task.run`'s per-worker
+/// batches) because the master aborts the WHOLE gang on the first
+/// failure — it must not wait for a worker's other ranks, which may be
+/// blocked in collectives against the failed one. A report from an
+/// aborted attempt (stale `job_id`) is ignored by the master.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeerTaskResult {
+    pub job_id: u64,
+    pub worker_id: u64,
+    pub rank: u64,
+    pub generation: u64,
+    pub ok: bool,
+    pub error: String,
+    pub recoverable: bool,
+}
+
+impl Encode for PeerTaskResult {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.job_id.encode(buf);
+        self.worker_id.encode(buf);
+        self.rank.encode(buf);
+        self.generation.encode(buf);
+        self.ok.encode(buf);
+        self.error.encode(buf);
+        self.recoverable.encode(buf);
+    }
+}
+impl Decode for PeerTaskResult {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(PeerTaskResult {
+            job_id: u64::decode(r)?,
+            worker_id: u64::decode(r)?,
+            rank: u64::decode(r)?,
+            generation: u64::decode(r)?,
+            ok: bool::decode(r)?,
+            error: String::decode(r)?,
+            recoverable: bool::decode(r)?,
+        })
+    }
+}
+
 /// Driver → master and master → workers (`shuffle.clear`): the shuffles
 /// of a finished job — prune the master's map-output table and drop the
 /// workers' local buckets so long-lived clusters don't grow unboundedly.
@@ -585,6 +677,35 @@ mod tests {
 
         let clear = ShuffleClear { shuffles: vec![9, 11] };
         assert_eq!(from_bytes::<ShuffleClear>(&to_bytes(&clear)).unwrap(), clear);
+    }
+
+    #[test]
+    fn peer_section_messages_round_trip() {
+        let req = PeerTaskReq {
+            job_id: 12,
+            peer_id: 900,
+            generation: 2,
+            plan: vec![5, 6, 7],
+            world_size: 4,
+            ranks: vec![1, 3],
+            rank_table: vec![(0, "127.0.0.1:1".into()), (1, "127.0.0.1:2".into())],
+        };
+        assert_eq!(from_bytes::<PeerTaskReq>(&to_bytes(&req)).unwrap(), req);
+
+        for (ok, error, recoverable) in
+            [(true, String::new(), false), (false, "rank exploded".to_string(), true)]
+        {
+            let res = PeerTaskResult {
+                job_id: 12,
+                worker_id: 2,
+                rank: 3,
+                generation: 2,
+                ok,
+                error,
+                recoverable,
+            };
+            assert_eq!(from_bytes::<PeerTaskResult>(&to_bytes(&res)).unwrap(), res);
+        }
     }
 
     #[test]

@@ -616,6 +616,36 @@ mod tests {
     }
 
     #[test]
+    fn all_reduce_ring_matches_tree_and_linear_on_random_payloads() {
+        // Property: for a commutative + associative reduction, every
+        // algorithm shape produces the SAME result — bit-for-bit — on
+        // random world sizes and vector payloads. (Tree requires
+        // commutativity; ring and linear fold in rank order.)
+        use crate::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seeded(0xE12_0);
+        for case in 0..25 {
+            let n = rng.next_below(7) as usize + 1;
+            let len = rng.next_below(6) as usize + 1;
+            let data: Vec<Vec<i64>> = (0..n)
+                .map(|_| (0..len).map(|_| rng.next_below(2000) as i64 - 1000).collect())
+                .collect();
+            let mut results = Vec::new();
+            for algo in [CollectiveAlgo::Tree, CollectiveAlgo::Ring, CollectiveAlgo::Linear] {
+                let data = data.clone();
+                let out = run_local_world(n, move |world| {
+                    world.all_reduce_with(algo, data[world.rank()].clone(), |a, b| {
+                        a.iter().zip(&b).map(|(x, y)| x.wrapping_add(*y)).collect()
+                    })
+                })
+                .unwrap();
+                results.push(out);
+            }
+            assert_eq!(results[0], results[1], "tree ≠ ring (case {case}, n={n})");
+            assert_eq!(results[1], results[2], "ring ≠ linear (case {case}, n={n})");
+        }
+    }
+
+    #[test]
     fn all_reduce_non_commutative_string_concat_rank_order() {
         // Linear and Ring preserve rank order; strings expose ordering.
         for algo in [CollectiveAlgo::Linear, CollectiveAlgo::Ring] {

@@ -14,6 +14,14 @@ pub const ANY_SOURCE: i64 = -1;
 /// Wildcard tag for receive matching (MPI's `MPI_ANY_TAG`).
 pub const ANY_TAG: i64 = i64::MIN;
 
+/// High bit of a context id marking peer-section traffic (communicators
+/// minted by [`crate::peer::peer_context`] for gang-scheduled plan
+/// stages). The transport uses it to attribute bytes to the
+/// `peer.bytes.{sent,received}` metrics without inspecting payloads;
+/// sub-communicators split off a peer communicator derive fresh context
+/// ids and so drop out of the accounting (documented limitation).
+pub const PEER_CONTEXT_FLAG: u64 = 1 << 63;
+
 /// Reserved (negative) tags used internally by collectives; user tags must
 /// be non-negative.
 pub mod internal_tags {

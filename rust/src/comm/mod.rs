@@ -30,10 +30,10 @@ mod transport;
 
 pub use future::{promise_pair, CommFuture, CommPromise};
 pub use mailbox::Mailbox;
-pub use message::{internal_tags, Message, Pattern, ANY_SOURCE, ANY_TAG};
+pub use message::{internal_tags, Message, Pattern, ANY_SOURCE, ANY_TAG, PEER_CONTEXT_FLAG};
 pub use transport::{
-    install_master_comm, ClusterTransport, CommTransport, LocalTransport, RankTable,
-    TransportMode, EP_DELIVER, EP_LOOKUP, EP_RELAY,
+    install_master_comm, peer_bytes_received_counter, peer_bytes_sent_counter, ClusterTransport,
+    CommTransport, LocalTransport, RankTable, TransportMode, EP_DELIVER, EP_LOOKUP, EP_RELAY,
 };
 
 use crate::config::IgniteConf;

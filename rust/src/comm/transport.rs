@@ -17,14 +17,14 @@
 //!   fault-tolerance fallback (drop to relay during recovery, resume p2p).
 
 use super::mailbox::Mailbox;
-use super::message::Message;
+use super::message::{Message, PEER_CONTEXT_FLAG};
 use crate::error::{IgniteError, Result};
 use crate::metrics;
 use crate::rpc::{Envelope, RpcAddress, RpcEnv};
 use crate::ser::{from_bytes, to_bytes, Decode, Encode, Reader};
 use log::debug;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
@@ -119,6 +119,18 @@ impl Decode for LookupReq {
 const MODE_P2P: u8 = 0;
 const MODE_RELAY: u8 = 1;
 
+/// Metric name of one worker's peer-section bytes-sent counter (filled
+/// alongside the global `peer.bytes.sent`, so tests and operators can
+/// tell *which* worker's ranks actually talked).
+pub fn peer_bytes_sent_counter(worker_id: u64) -> String {
+    format!("cluster.worker.{worker_id}.peer.bytes.sent")
+}
+
+/// Metric name of one worker's peer-section bytes-received counter.
+pub fn peer_bytes_received_counter(worker_id: u64) -> String {
+    format!("cluster.worker.{worker_id}.peer.bytes.received")
+}
+
 /// Transport for multi-process deployments.
 pub struct ClusterTransport {
     env: RpcEnv,
@@ -134,6 +146,9 @@ pub struct ClusterTransport {
     mode: AtomicU8,
     soft_cap: usize,
     lookup_timeout: Duration,
+    /// Worker id for per-worker peer-traffic metrics (0 = unlabeled —
+    /// only the global `peer.bytes.*` counters are filled).
+    metrics_label: AtomicU64,
 }
 
 impl ClusterTransport {
@@ -158,6 +173,7 @@ impl ClusterTransport {
             }),
             soft_cap,
             lookup_timeout: Duration::from_secs(5),
+            metrics_label: AtomicU64::new(0),
         });
         let t2 = Arc::clone(&t);
         env.register(
@@ -171,10 +187,44 @@ impl ClusterTransport {
         t
     }
 
+    /// Label this transport with its worker id so peer-section traffic
+    /// is also attributed to `cluster.worker.<id>.peer.bytes.{sent,received}`.
+    pub fn set_metrics_label(&self, worker_id: u64) {
+        self.metrics_label.store(worker_id, Ordering::Relaxed);
+    }
+
+    /// Account a peer-section message leaving this process.
+    fn note_peer_sent(&self, msg: &Message) {
+        if msg.context & PEER_CONTEXT_FLAG == 0 {
+            return;
+        }
+        let n = msg.approx_size() as u64;
+        metrics::global().counter("peer.bytes.sent").add(n);
+        metrics::global().counter("peer.msgs.sent").inc();
+        let label = self.metrics_label.load(Ordering::Relaxed);
+        if label != 0 {
+            metrics::global().counter(&peer_bytes_sent_counter(label)).add(n);
+        }
+    }
+
+    /// Account a peer-section message arriving at this process.
+    fn note_peer_received(&self, msg: &Message) {
+        if msg.context & PEER_CONTEXT_FLAG == 0 {
+            return;
+        }
+        let n = msg.approx_size() as u64;
+        metrics::global().counter("peer.bytes.received").add(n);
+        let label = self.metrics_label.load(Ordering::Relaxed);
+        if label != 0 {
+            metrics::global().counter(&peer_bytes_received_counter(label)).add(n);
+        }
+    }
+
     /// Deliver to a hosted rank's mailbox, or park the message until the
     /// rank is hosted (a peer's launch can race ours — "sending in
     /// MPIgnite is always nonblocking", so the receiver buffers).
     fn deliver_local(&self, msg: Message) {
+        self.note_peer_received(&msg);
         // Fast path under the read lock.
         if let Some((mb, _)) = self.local.read().unwrap().get(&msg.dst_world) {
             mb.deliver(msg);
@@ -271,9 +321,11 @@ impl ClusterTransport {
 impl CommTransport for ClusterTransport {
     fn send(&self, msg: Message) -> Result<()> {
         metrics::global().counter("comm.msgs.sent").inc();
+        self.note_peer_sent(&msg);
         // Same-process fast path (both ranks scheduled on this worker).
         if self.mode() == TransportMode::P2p {
             if let Some(mb) = self.local_mailbox(msg.dst_world) {
+                self.note_peer_received(&msg);
                 mb.deliver(msg);
                 return Ok(());
             }

@@ -31,6 +31,9 @@ pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
     ("ignite.broadcast.block.bytes", "262144", "Broadcast plane block (chunk) size"),
     ("ignite.broadcast.auto.min.bytes", "65536", "Plan Source nodes at least this large ship as broadcast SourceRef"),
     ("ignite.broadcast.fetch.timeout.ms", "5000", "Remote broadcast.fetch RPC timeout"),
+    ("ignite.broadcast.memory.bytes", "67108864", "In-memory broadcast block budget; overflow spills to disk"),
+    ("ignite.peer.section.timeout.ms", "30000", "Gang-scheduled peer section deadline"),
+    ("ignite.peer.gang.retries", "3", "Peer-section gang launch budget (restarts on a fresh communicator generation)"),
     ("ignite.shuffle.partitions", "8", "Default reduce-side partition count"),
     ("ignite.shuffle.memory.bytes", "67108864", "In-memory shuffle bucket budget; overflow spills to disk"),
     ("ignite.shuffle.fetch.timeout.ms", "5000", "Remote shuffle.fetch RPC timeout"),
@@ -169,6 +172,9 @@ impl IgniteConf {
         self.get_bool("ignite.task.speculation")?;
         self.get_usize("ignite.broadcast.block.bytes")?;
         self.get_usize("ignite.broadcast.auto.min.bytes")?;
+        self.get_usize("ignite.broadcast.memory.bytes")?;
+        self.get_duration_ms("ignite.peer.section.timeout.ms")?;
+        self.get_usize("ignite.peer.gang.retries")?;
         // Collective algorithm names are validated per key, so a typo'd
         // algo fails app startup instead of silently defaulting at the
         // first broadcast (the comm layer double-checks at use time).
@@ -305,7 +311,18 @@ mod tests {
         let conf = IgniteConf::new();
         assert!(conf.get_usize("ignite.broadcast.block.bytes").unwrap() > 0);
         assert!(conf.get_usize("ignite.broadcast.auto.min.bytes").unwrap() > 0);
+        assert!(conf.get_usize("ignite.broadcast.memory.bytes").unwrap() > 0);
         conf.get_duration_ms("ignite.broadcast.fetch.timeout.ms").unwrap();
+    }
+
+    #[test]
+    fn peer_keys_have_sane_defaults() {
+        let conf = IgniteConf::new();
+        assert!(conf.get_usize("ignite.peer.gang.retries").unwrap() >= 1);
+        assert!(
+            conf.get_duration_ms("ignite.peer.section.timeout.ms").unwrap()
+                > Duration::from_secs(1)
+        );
     }
 
     #[test]

@@ -136,6 +136,19 @@ impl IgniteContext {
         PlanRdd::new(plan, self.engine.clone(), self.master.clone())
     }
 
+    /// Parallelize `rows` into `parts` partitions and run the registered
+    /// peer operator `peer_op` over them as one gang-scheduled **peer
+    /// section**: rank = partition index, size = `parts`, and the
+    /// operator's [`SparkComm`] reaches the sibling tasks mid-stage
+    /// (`send` / `receive` / `barrier` / `all_reduce` / `broadcast`).
+    /// In cluster mode the gang is placed all-or-nothing across workers
+    /// and restarted whole on a fresh communicator generation when a
+    /// rank or worker dies; locally it runs on dedicated threads. See
+    /// [`crate::peer`] and [`crate::closure::register_peer_op`].
+    pub fn peer_rdd(&self, rows: Vec<Value>, parts: usize, peer_op: &str) -> PlanRdd {
+        self.parallelize_values_with(rows, parts).map_partitions_peer(peer_op)
+    }
+
     /// Broadcast a value cluster-wide through the block-distribution
     /// plane: the value is encoded once, chunked into
     /// `ignite.broadcast.block.bytes` blocks, cached on the driver, and

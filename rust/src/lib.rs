@@ -135,11 +135,68 @@
 //!
 //! Key config: `ignite.broadcast.block.bytes` (chunk size),
 //! `ignite.broadcast.auto.min.bytes` (auto-`SourceRef` threshold),
-//! `ignite.broadcast.fetch.timeout.ms` (block fetch RPC timeout).
+//! `ignite.broadcast.fetch.timeout.ms` (block fetch RPC timeout),
+//! `ignite.broadcast.memory.bytes` (raw-block memory budget — overflow
+//! spills to the engine's disk store and reads back transparently,
+//! mirroring the shuffle tiering).
 //! Instrumentation: `broadcast.bytes.fetched.{peer,master}`,
-//! `broadcast.blocks.cached`, `broadcast.fetch.latency`;
-//! `rust/benches/bench_broadcast.rs` compares inline-source vs
-//! broadcast-source stage shipping.
+//! `broadcast.blocks.cached`, `broadcast.{spills,bytes.spilled,spill.readbacks}`,
+//! `broadcast.fetch.latency`; `rust/benches/bench_broadcast.rs` compares
+//! inline-source vs broadcast-source stage shipping.
+//!
+//! ## Peer sections: MPI communicators inside plan stages
+//!
+//! The paper's headline — "featherweight, highly scalable peer-to-peer
+//! data-parallel code sections" — is realized by the [`peer`] subsystem:
+//! a [`rdd::PlanSpec::PeerOp`] stage whose tasks form an MPI-style
+//! communicator (**rank = partition index, size = partition count**) and
+//! each run a registered *peer operator*
+//! ([`closure::register_peer_op`]) over their partition's rows with a
+//! live [`comm::SparkComm`] — `send` / `receive` / `barrier` /
+//! `all_reduce` / `broadcast` against sibling tasks **mid-stage**, so an
+//! iterative workload (k-means, SGD) exchanges per-iteration state with
+//! one in-stage all-reduce instead of a shuffle plus a driver round-trip
+//! (`examples/kmeans_peer.rs`, `rust/benches/bench_peer.rs` E12).
+//!
+//! Gang lifecycle (cluster mode, [`cluster::Master::run_plan`]):
+//!
+//! 1. **placement** — all-or-nothing: every rank needs a slot up front,
+//!    counted against each worker's registered slot capacity; a cluster
+//!    without enough gang slots fails the section immediately;
+//! 2. **rank table** — the master builds the per-job rank → worker map,
+//!    installs it as its own authoritative table (relay/`comm.lookup`)
+//!    and pushes it to every participating worker's `ClusterTransport`
+//!    (`cluster.peer.rank_tables.pushed`);
+//! 3. **two-phase launch** — `peer.prepare` hosts every rank's mailbox
+//!    everywhere (re-hosting poisons an aborted attempt's mailboxes),
+//!    then `peer.run` spawns one dedicated thread per rank; ranks
+//!    resolve siblings through the shipped table and the existing
+//!    mailbox RPC (`comm.deliver`), p2p or master-relay alike;
+//! 4. **failure semantics** — rank results report individually
+//!    (`master.peer_result`); the FIRST failing rank — or a worker lost
+//!    mid-gang — aborts the whole gang, and the master reschedules it on
+//!    the survivors with a **fresh communicator generation**
+//!    ([`peer::peer_context`]), so stale sends from the dead attempt can
+//!    never match a live receive (`peer.gang.restarts`, budget
+//!    `ignite.peer.gang.retries`); the engine's [`fault::FaultInjector`]
+//!    is wired through the per-rank path exactly like ordinary tasks;
+//! 5. **output** — each rank's returned rows materialize as bucket
+//!    `(peer_id, rank, rank)` in the shuffle plane: downstream stages
+//!    read them through the tiered `fetch_bucket` path (memory → disk →
+//!    `shuffle.fetch`), and job-end `job.clear` GCs peer ids exactly
+//!    like shuffle ids.
+//!
+//! Driver API: [`context::IgniteContext::peer_rdd`] /
+//! [`rdd::PlanRdd::map_partitions_peer`] (shippable, named operator), and
+//! [`rdd::Rdd::map_partitions_peer`] (driver-local closure flavor — the
+//! reference semantics the distributed path is tested against in
+//! `rust/tests/integration_peer.rs`).
+//!
+//! Key config: `ignite.peer.section.timeout.ms` (gang deadline),
+//! `ignite.peer.gang.retries` (restart budget). Instrumentation:
+//! `peer.sections.launched`, `peer.gang.restarts`, `peer.tasks.executed`,
+//! `peer.bytes.{sent,received}` (plus per-worker
+//! `cluster.worker.<id>.peer.bytes.*`), `peer.section.latency`.
 //!
 //! ## Quickstart (Listing 1 of the paper)
 //!
@@ -176,6 +233,7 @@ pub mod context;
 pub mod error;
 pub mod fault;
 pub mod metrics;
+pub mod peer;
 pub mod rdd;
 pub mod rng;
 pub mod rpc;
@@ -193,7 +251,7 @@ pub use error::{IgniteError, Result};
 /// Convenience re-exports for applications and examples.
 pub mod prelude {
     pub use crate::broadcast::Broadcast;
-    pub use crate::closure::{register_op, register_parallel_fn, FuncRdd};
+    pub use crate::closure::{register_op, register_parallel_fn, register_peer_op, FuncRdd};
     pub use crate::comm::{CommFuture, SparkComm, ANY_SOURCE, ANY_TAG};
     pub use crate::config::IgniteConf;
     pub use crate::context::IgniteContext;

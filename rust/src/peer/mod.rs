@@ -1,0 +1,243 @@
+//! Gang-scheduled peer sections — MPI communicators *inside* plan stages.
+//!
+//! The paper's pitch is "featherweight, highly scalable peer-to-peer
+//! data-parallel code sections": MPI-style collective and point-to-point
+//! communication embedded in Spark's data-parallel jobs. Before this
+//! module, the comm plane ([`crate::comm::SparkComm`] over
+//! [`crate::comm::ClusterTransport`]) and the distributed plan executor
+//! ([`crate::cluster::Master::run_plan`]) were disjoint worlds — a plan
+//! task could not send a byte to a sibling task. Peer sections bridge
+//! them:
+//!
+//! * a [`crate::rdd::PlanSpec::PeerOp`] node cuts a stage whose tasks
+//!   form a communicator — **rank = partition index, size = partition
+//!   count** — and each task runs a registered *peer operator*
+//!   ([`crate::closure::register_peer_op`]) over its partition's rows
+//!   with a live [`crate::comm::SparkComm`];
+//! * the stage is **gang-scheduled**: in cluster mode the master places
+//!   it all-or-nothing (every rank needs a slot up front, counted
+//!   against each worker's registered slot capacity), builds the
+//!   per-job rank table, pushes it to every participating worker's
+//!   `ClusterTransport`, and launches via the two-phase
+//!   `peer.prepare` / `peer.run` protocol (mailboxes are hosted
+//!   everywhere before any rank thread starts, so no early send can
+//!   race into an un-hosted or stale destination);
+//! * failure semantics are **stage-wide**: one rank failing — or its
+//!   worker dying — aborts the whole gang, and the master reschedules it
+//!   on the survivors with a **fresh communicator generation** (a new
+//!   [`peer_context`], plus re-hosted mailboxes that poison the aborted
+//!   attempt's), so stale sends from the dead attempt can never match a
+//!   live receive;
+//! * each rank's returned rows materialize as bucket
+//!   `(peer_id, rank, rank)` in the shuffle plane — downstream stages
+//!   read them through the ordinary tiered `fetch_bucket` path (memory
+//!   → disk → `shuffle.fetch`), and `job.clear` GC covers peer ids
+//!   exactly like shuffle ids.
+//!
+//! This module holds the pieces shared by the local fast path and the
+//! cluster runtime: the peer context-id scheme and the local (in-process)
+//! gang runner used by [`crate::rdd::PlanRdd::collect_local`].
+//!
+//! Instrumentation: `peer.sections.launched`, `peer.gang.restarts`,
+//! `peer.tasks.executed`, `peer.bytes.{sent,received}` (global and
+//! `cluster.worker.<id>.peer.bytes.*`), `peer.section.latency`.
+
+use crate::closure::registry;
+use crate::comm::{CommWorld, PEER_CONTEXT_FLAG};
+use crate::error::{IgniteError, Result};
+use crate::fault::TaskId;
+use crate::metrics;
+use crate::rdd::PlanSpec;
+use crate::scheduler::Engine;
+use crate::ser::Value;
+use std::sync::Arc;
+
+/// Context id of one gang attempt: the peer flag (so the transport can
+/// attribute traffic to the `peer.bytes.*` metrics), the cluster job id
+/// (a fresh one per gang attempt, so consecutive attempts and unrelated
+/// jobs can never match each other's messages), and the communicator
+/// generation (the gang-restart counter, kept in the low bits for
+/// logging/debugging).
+pub fn peer_context(job_id: u64, generation: u64) -> u64 {
+    PEER_CONTEXT_FLAG | (job_id << 16) | (generation & 0xFFFF)
+}
+
+/// Resolve the `PeerOp` node `peer_id` inside `plan` to its operator
+/// name and parent subtree.
+pub fn resolve_peer_node(plan: &PlanSpec, peer_id: u64) -> Result<(String, Arc<PlanSpec>)> {
+    match plan.find_peer(peer_id) {
+        Some(PlanSpec::PeerOp { name, parent, .. }) => Ok((name.clone(), parent.clone())),
+        _ => Err(IgniteError::Invalid(format!("plan has no peer section {peer_id}"))),
+    }
+}
+
+/// Run one whole peer-section gang in-process (the driver-local fast
+/// path): one dedicated thread per rank over a fresh
+/// [`crate::comm::LocalTransport`] world, the registered peer operator
+/// applied to each rank's parent partition. All ranks must succeed
+/// before anything is published — on success every rank's output rows
+/// are registered as bucket `(peer_id, rank, rank)` and the section is
+/// marked complete; on any failure nothing is materialized and the
+/// caller (the engine's stage retry) re-runs the gang with a bumped
+/// `attempt`, which is also what feeds the [`crate::fault::FaultInjector`]
+/// hook per rank (chaos and scripted faults target attempt 0, exactly
+/// like ordinary tasks).
+pub fn run_local_gang(
+    plan: &Arc<PlanSpec>,
+    peer_id: u64,
+    attempt: usize,
+    engine: &Engine,
+) -> Result<()> {
+    let (name, parent) = resolve_peer_node(plan, peer_id)?;
+    let n = parent.num_partitions();
+    if n == 0 {
+        return Ok(());
+    }
+    // Resolve the operator once, up front: a worker/driver lacking the
+    // application library fails before any thread or mailbox exists.
+    let f = registry().get_peer_op(&name)?;
+    metrics::global().counter("peer.sections.launched").inc();
+    if attempt > 0 {
+        metrics::global().counter("peer.gang.restarts").inc();
+    }
+    let t0 = std::time::Instant::now();
+    let world = CommWorld::local_with_conf(n, &engine.conf);
+
+    // Scoped threads so the gang can borrow the plan and engine; the
+    // scope's implicit join is the section's barrier.
+    let outputs: Vec<Vec<Value>> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(n);
+        for rank in 0..n {
+            let world = Arc::clone(&world);
+            let parent = Arc::clone(&parent);
+            let f = Arc::clone(&f);
+            handles.push(s.spawn(move || -> Result<Vec<Value>> {
+                engine.fault.before_task(TaskId { stage: peer_id, partition: rank, attempt })?;
+                metrics::global().counter("peer.tasks.executed").inc();
+                let comm = world.comm_for_rank(rank);
+                let rows = parent.compute(rank, engine)?;
+                f(&comm, rows)
+            }));
+        }
+        let mut outs = Vec::with_capacity(n);
+        for (rank, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(rows)) => outs.push(rows),
+                Ok(Err(e)) => return Err(e),
+                Err(_) => return Err(IgniteError::Task(format!("peer rank {rank} panicked"))),
+            }
+        }
+        Ok(outs)
+    })?;
+
+    // Publish only after the whole gang succeeded: a failed attempt
+    // leaves no partial buckets for the retry to trip over.
+    for (rank, rows) in outputs.into_iter().enumerate() {
+        engine.shuffle.put_bucket(peer_id, rank, rank, rows);
+    }
+    for rank in 0..n {
+        engine.shuffle.map_done(peer_id, rank, n)?;
+    }
+    metrics::global().histogram("peer.section.latency").record(t0.elapsed());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::closure::register_peer_op;
+    use crate::config::IgniteConf;
+
+    fn register_ops() {
+        register_peer_op("peer.unit.scale_by_size", |comm, rows| {
+            let size = comm.size() as i64;
+            // A collective per gang run: every rank must participate.
+            comm.barrier()?;
+            Ok(rows
+                .into_iter()
+                .map(|v| match v {
+                    Value::I64(x) => Value::I64(x * size),
+                    other => other,
+                })
+                .collect())
+        });
+    }
+
+    fn engine() -> Arc<Engine> {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.worker.slots", "4");
+        // Short receive timeout: a gang whose sibling died must unblock
+        // its collectives quickly in tests.
+        conf.set("ignite.comm.recv.timeout.ms", "800");
+        Engine::new(conf).unwrap()
+    }
+
+    fn peer_plan(parts: usize, rows_per_part: i64) -> (Arc<PlanSpec>, u64) {
+        let partitions: Vec<Vec<Value>> = (0..parts as i64)
+            .map(|p| (0..rows_per_part).map(|i| Value::I64(p * rows_per_part + i)).collect())
+            .collect();
+        let peer_id = crate::util::next_id();
+        let plan = Arc::new(PlanSpec::PeerOp {
+            peer_id,
+            name: "peer.unit.scale_by_size".into(),
+            parent: Arc::new(PlanSpec::Source { partitions }),
+        });
+        (plan, peer_id)
+    }
+
+    #[test]
+    fn peer_context_sets_flag_and_separates_attempts() {
+        let a = peer_context(7, 0);
+        let b = peer_context(7, 1);
+        let c = peer_context(8, 0);
+        assert_ne!(a, b, "generations get distinct contexts");
+        assert_ne!(a, c, "jobs get distinct contexts");
+        for ctx in [a, b, c] {
+            assert_ne!(ctx & PEER_CONTEXT_FLAG, 0, "peer flag must be set");
+        }
+    }
+
+    #[test]
+    fn local_gang_materializes_rank_buckets() {
+        register_ops();
+        let engine = engine();
+        let (plan, peer_id) = peer_plan(3, 2);
+        run_local_gang(&plan, peer_id, 0, &engine).unwrap();
+        assert!(engine.shuffle.is_complete(peer_id));
+        for rank in 0..3usize {
+            let rows: Vec<Value> = engine.shuffle.fetch_bucket(peer_id, rank, rank).unwrap();
+            let want: Vec<Value> =
+                (0..2).map(|i| Value::I64((rank as i64 * 2 + i) * 3)).collect();
+            assert_eq!(rows, want, "rank {rank} output scaled by gang size");
+            // And the interpreter reads the same rows back through compute.
+            assert_eq!(plan.compute(rank, &engine).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn failed_rank_publishes_nothing() {
+        register_ops();
+        let engine = engine();
+        let (plan, peer_id) = peer_plan(2, 2);
+        // Scripted fault on rank 1's first attempt; the gang as a whole
+        // must fail (rank 0's barrier times out against the dead rank)
+        // without materializing anything.
+        engine.fault.fail_task(peer_id, 1, 0);
+        assert!(run_local_gang(&plan, peer_id, 0, &engine).is_err());
+        assert!(!engine.shuffle.is_complete(peer_id));
+        assert!(engine.shuffle.fetch_bucket::<Value>(peer_id, 0, 0).is_err());
+        // The retry (attempt 1) runs clean and counts a gang restart.
+        let restarts = metrics::global().counter("peer.gang.restarts").get();
+        run_local_gang(&plan, peer_id, 1, &engine).unwrap();
+        assert!(engine.shuffle.is_complete(peer_id));
+        assert_eq!(metrics::global().counter("peer.gang.restarts").get(), restarts + 1);
+    }
+
+    #[test]
+    fn unknown_peer_section_is_invalid() {
+        let engine = engine();
+        let (plan, _) = peer_plan(1, 1);
+        let err = run_local_gang(&plan, u64::MAX, 0, &engine).unwrap_err();
+        assert!(err.to_string().contains("no peer section"), "got: {err}");
+    }
+}

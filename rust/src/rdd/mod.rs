@@ -20,9 +20,12 @@ mod plan;
 pub use nodes::*;
 pub use plan::{
     run_shuffle_map_task, stable_value_hash, value_partition, AggSpec, OpSpec, PlanRdd, PlanSpec,
+    PlanStage, PlanStageKind,
 };
 
+use crate::comm::{CommWorld, SparkComm};
 use crate::error::Result;
+use crate::metrics;
 use crate::scheduler::{Engine, StageSpec};
 use crate::ser::{Decode, Encode};
 use crate::shuffle::HashPartitioner;
@@ -387,6 +390,75 @@ impl<T: Data + Hash + Eq + Encode + Decode> Rdd<T> {
 }
 
 impl<T: Data> Rdd<T> {
+    /// Run `f` over every partition as one gang of communicating ranks —
+    /// the driver-local closure flavor of the plan IR's peer sections
+    /// ([`PlanRdd::map_partitions_peer`]): rank = partition index, size =
+    /// partition count, and `f`'s [`SparkComm`] reaches the sibling
+    /// partitions' ranks mid-stage (`all_reduce` instead of a shuffle).
+    /// Action-backed like [`sort_by`](Self::sort_by): partitions are
+    /// materialized, the gang runs on dedicated threads over an
+    /// in-process world, and the per-rank outputs re-parallelize. This
+    /// is the reference semantics the distributed peer path is tested
+    /// against.
+    pub fn map_partitions_peer<F>(&self, f: F) -> Result<Rdd<T>>
+    where
+        F: Fn(&SparkComm, Vec<T>) -> Result<Vec<T>> + Send + Sync + 'static,
+    {
+        let parts: Vec<Vec<T>> = self.run_action(|_, data| data)?;
+        let n = parts.len();
+        if n == 0 {
+            return Ok(self.clone());
+        }
+        metrics::global().counter("peer.sections.launched").inc();
+        let t0 = std::time::Instant::now();
+        let world = CommWorld::local_with_conf(n, &self.engine.conf);
+        let f = Arc::new(f);
+        let mut handles = Vec::with_capacity(n);
+        for (rank, rows) in parts.into_iter().enumerate() {
+            let world = Arc::clone(&world);
+            let f = Arc::clone(&f);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("peer-closure-{rank}"))
+                    .spawn(move || {
+                        let comm = world.comm_for_rank(rank);
+                        f(&comm, rows)
+                    })
+                    .expect("spawn peer rank"),
+            );
+        }
+        // Join EVERY rank before reporting (the section's barrier):
+        // returning on the first failure would leave sibling threads
+        // detached and blocked in collectives, leaking them and their
+        // partition copies until the receive timeout.
+        let mut out_parts: Vec<Vec<T>> = Vec::with_capacity(n);
+        let mut first_err: Option<crate::error::IgniteError> = None;
+        for (rank, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(rows)) => out_parts.push(rows),
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(crate::error::IgniteError::Task(format!(
+                        "peer rank {rank} panicked"
+                    )));
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        metrics::global().histogram("peer.section.latency").record(t0.elapsed());
+        Ok(Rdd::new(
+            Arc::new(ParallelCollectionNode {
+                id: crate::util::next_id(),
+                partitions: Arc::new(out_parts),
+            }),
+            self.engine.clone(),
+        ))
+    }
+
     /// Globally sort by a key function (action-backed: materializes, sorts
     /// on the driver, re-parallelizes — adequate at engine scale; Spark's
     /// range-partitioned sort is an optimization of the same contract).

@@ -405,6 +405,19 @@ pub enum PlanSpec {
     /// map tasks bucket by the stable hash of the encoded key, combining
     /// map-side with `agg`; reduce partitions merge every map's bucket.
     Shuffle { shuffle_id: u64, partitions: u64, agg: AggSpec, parent: Arc<PlanSpec> },
+    /// Peer-section boundary: the stage's tasks form an MPI-style
+    /// communicator (rank = partition index, size = partition count) and
+    /// each runs the registered peer operator `name`
+    /// ([`crate::closure::register_peer_op`]) over its parent partition,
+    /// free to `send`/`receive`/`barrier`/`all_reduce`/`broadcast`
+    /// against its siblings mid-stage. The stage is **gang-scheduled**:
+    /// it launches only when every rank has a slot, and one rank failing
+    /// aborts and reschedules the whole gang on a fresh communicator
+    /// generation (see [`crate::peer`]). Each rank's returned rows are
+    /// materialized as bucket `(peer_id, rank, rank)` in the shuffle
+    /// plane, which is what downstream [`compute`](Self::compute) reads
+    /// (locally or over `shuffle.fetch`) and what `job.clear` GCs.
+    PeerOp { peer_id: u64, name: String, parent: Arc<PlanSpec> },
 }
 
 const PLAN_SOURCE: u8 = 0;
@@ -412,6 +425,7 @@ const PLAN_OP: u8 = 1;
 const PLAN_UNION: u8 = 2;
 const PLAN_SHUFFLE: u8 = 3;
 const PLAN_SOURCE_REF: u8 = 4;
+const PLAN_PEER_OP: u8 = 5;
 
 impl Encode for PlanSpec {
     fn encode(&self, buf: &mut Vec<u8>) {
@@ -442,6 +456,12 @@ impl Encode for PlanSpec {
                 agg.encode(buf);
                 parent.encode(buf);
             }
+            PlanSpec::PeerOp { peer_id, name, parent } => {
+                buf.push(PLAN_PEER_OP);
+                peer_id.encode(buf);
+                name.encode(buf);
+                parent.encode(buf);
+            }
         }
     }
 }
@@ -467,9 +487,35 @@ impl Decode for PlanSpec {
                 agg: AggSpec::decode(r)?,
                 parent: Arc::new(PlanSpec::decode(r)?),
             },
+            PLAN_PEER_OP => PlanSpec::PeerOp {
+                peer_id: u64::decode(r)?,
+                name: String::decode(r)?,
+                parent: Arc::new(PlanSpec::decode(r)?),
+            },
             t => return Err(IgniteError::Codec(format!("unknown PlanSpec tag {t}"))),
         })
     }
+}
+
+/// How one materializing stage of a plan executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanStageKind {
+    /// Independent map tasks bucketing pairs for a later reduce side.
+    Shuffle,
+    /// A gang of communicating ranks (all-or-nothing placement).
+    Peer,
+}
+
+/// One stage cut from a plan, in lineage order: the unit the driver
+/// ships to workers (`task.run` for shuffles, `peer.run` for gangs) and
+/// the unit [`PlanRdd::local_stages`] wraps for the local engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanStage {
+    pub kind: PlanStageKind,
+    /// The shuffle id or peer-section id (they share the bucket
+    /// namespace of the shuffle plane).
+    pub id: u64,
+    pub num_tasks: usize,
 }
 
 impl PlanSpec {
@@ -481,6 +527,7 @@ impl PlanSpec {
             PlanSpec::Op { parent, .. } => parent.num_partitions(),
             PlanSpec::Union { left, right } => left.num_partitions() + right.num_partitions(),
             PlanSpec::Shuffle { partitions, .. } => *partitions as usize,
+            PlanSpec::PeerOp { parent, .. } => parent.num_partitions(),
         }
     }
 
@@ -541,6 +588,18 @@ impl PlanSpec {
                     .map(|(k, v)| Value::List(vec![k, v]))
                     .collect())
             }
+            PlanSpec::PeerOp { peer_id, .. } => {
+                // The gang already ran (it is a stage boundary) and
+                // materialized rank `part`'s output as bucket
+                // (peer_id, part, part); read it back through the
+                // tier-transparent shuffle path (memory → disk → remote).
+                engine.shuffle.fetch_bucket(*peer_id, part, part).map_err(|e| {
+                    IgniteError::Storage(format!(
+                        "peer section {peer_id} rank {part} output unavailable \
+                         (stage skipped?): {e}"
+                    ))
+                })
+            }
         }
     }
 
@@ -548,7 +607,9 @@ impl PlanSpec {
     pub fn find_shuffle(&self, id: u64) -> Option<&PlanSpec> {
         match self {
             PlanSpec::Source { .. } | PlanSpec::SourceRef { .. } => None,
-            PlanSpec::Op { parent, .. } => parent.find_shuffle(id),
+            PlanSpec::Op { parent, .. } | PlanSpec::PeerOp { parent, .. } => {
+                parent.find_shuffle(id)
+            }
             PlanSpec::Union { left, right } => {
                 left.find_shuffle(id).or_else(|| right.find_shuffle(id))
             }
@@ -562,18 +623,46 @@ impl PlanSpec {
         }
     }
 
-    /// Shuffle stages in lineage order (parents first, deduped):
-    /// `(shuffle_id, num_map_tasks)` per stage — the unit the driver
-    /// ships to workers and the unit [`local_stages`](Self::local_stages)
-    /// wraps for the local engine.
-    pub fn shuffle_stages(&self) -> Vec<(u64, usize)> {
+    /// Find the `PeerOp` node with the given id anywhere in the tree.
+    pub fn find_peer(&self, id: u64) -> Option<&PlanSpec> {
+        match self {
+            PlanSpec::Source { .. } | PlanSpec::SourceRef { .. } => None,
+            PlanSpec::Op { parent, .. } | PlanSpec::Shuffle { parent, .. } => {
+                parent.find_peer(id)
+            }
+            PlanSpec::Union { left, right } => {
+                left.find_peer(id).or_else(|| right.find_peer(id))
+            }
+            PlanSpec::PeerOp { peer_id, parent, .. } => {
+                if *peer_id == id {
+                    Some(self)
+                } else {
+                    parent.find_peer(id)
+                }
+            }
+        }
+    }
+
+    /// Materializing stages in lineage order (parents first, deduped):
+    /// shuffle map stages and peer sections, each with its task count.
+    pub fn stages(&self) -> Vec<PlanStage> {
         let mut out = Vec::new();
         let mut seen = HashSet::new();
         self.collect_stages(&mut out, &mut seen);
         out
     }
 
-    fn collect_stages(&self, out: &mut Vec<(u64, usize)>, seen: &mut HashSet<u64>) {
+    /// Shuffle stages only, as `(shuffle_id, num_map_tasks)` (kept for
+    /// callers that predate peer sections; prefer [`stages`](Self::stages)).
+    pub fn shuffle_stages(&self) -> Vec<(u64, usize)> {
+        self.stages()
+            .into_iter()
+            .filter(|s| s.kind == PlanStageKind::Shuffle)
+            .map(|s| (s.id, s.num_tasks))
+            .collect()
+    }
+
+    fn collect_stages(&self, out: &mut Vec<PlanStage>, seen: &mut HashSet<u64>) {
         match self {
             PlanSpec::Source { .. } | PlanSpec::SourceRef { .. } => {}
             PlanSpec::Op { parent, .. } => parent.collect_stages(out, seen),
@@ -584,15 +673,36 @@ impl PlanSpec {
             PlanSpec::Shuffle { shuffle_id, parent, .. } => {
                 parent.collect_stages(out, seen);
                 if seen.insert(*shuffle_id) {
-                    out.push((*shuffle_id, parent.num_partitions()));
+                    out.push(PlanStage {
+                        kind: PlanStageKind::Shuffle,
+                        id: *shuffle_id,
+                        num_tasks: parent.num_partitions(),
+                    });
+                }
+            }
+            PlanSpec::PeerOp { peer_id, parent, .. } => {
+                parent.collect_stages(out, seen);
+                if seen.insert(*peer_id) {
+                    out.push(PlanStage {
+                        kind: PlanStageKind::Peer,
+                        id: *peer_id,
+                        num_tasks: parent.num_partitions(),
+                    });
                 }
             }
         }
     }
 
-    /// Ids of every shuffle in the plan (for `shuffle.clear` GC).
+    /// Ids of every shuffle in the plan.
     pub fn shuffle_ids(&self) -> Vec<u64> {
         self.shuffle_stages().into_iter().map(|(id, _)| id).collect()
+    }
+
+    /// Ids of every materializing stage — shuffles AND peer sections,
+    /// which store their outputs in the same bucket namespace — for
+    /// job-end `job.clear` GC.
+    pub fn cleanup_ids(&self) -> Vec<u64> {
+        self.stages().into_iter().map(|s| s.id).collect()
     }
 
     /// Ids of every [`SourceRef`](PlanSpec::SourceRef) in the plan,
@@ -606,12 +716,13 @@ impl PlanSpec {
                         out.push(*broadcast_id);
                     }
                 }
-                PlanSpec::Op { parent, .. } => walk(parent, out, seen),
+                PlanSpec::Op { parent, .. }
+                | PlanSpec::Shuffle { parent, .. }
+                | PlanSpec::PeerOp { parent, .. } => walk(parent, out, seen),
                 PlanSpec::Union { left, right } => {
                     walk(left, out, seen);
                     walk(right, out, seen);
                 }
-                PlanSpec::Shuffle { parent, .. } => walk(parent, out, seen),
             }
         }
         let mut out = Vec::new();
@@ -642,6 +753,11 @@ impl PlanSpec {
                 shuffle_id: *shuffle_id,
                 partitions: *partitions,
                 agg: agg.clone(),
+                parent: Arc::new(parent.rewrite_sources(f)),
+            },
+            PlanSpec::PeerOp { peer_id, name, parent } => PlanSpec::PeerOp {
+                peer_id: *peer_id,
+                name: name.clone(),
                 parent: Arc::new(parent.rewrite_sources(f)),
             },
         }
@@ -789,6 +905,25 @@ impl PlanRdd {
         }
     }
 
+    /// Run the registered peer operator `name` over every partition as a
+    /// gang-scheduled **peer section**: rank = partition index, size =
+    /// partition count, and the operator's [`crate::comm::SparkComm`]
+    /// reaches the sibling tasks mid-stage (in-stage `all_reduce`
+    /// instead of a shuffle + driver round-trip). The peer id is minted
+    /// here, on the driver — like a shuffle id, it is the identity the
+    /// workers, the master's map-output table, and job-end GC agree on.
+    pub fn map_partitions_peer(&self, name: &str) -> PlanRdd {
+        PlanRdd {
+            plan: Arc::new(PlanSpec::PeerOp {
+                peer_id: crate::util::next_id(),
+                name: name.to_string(),
+                parent: self.plan.clone(),
+            }),
+            engine: self.engine.clone(),
+            master: self.master.clone(),
+        }
+    }
+
     /// Shuffle + combine values per key. Rows must be `List([key, value])`
     /// pairs. The shuffle id is minted here, on the driver — it is the
     /// identity workers and the master's map-output table agree on.
@@ -875,20 +1010,42 @@ impl PlanRdd {
         Ok(total)
     }
 
-    /// The plan's shuffle map stages as engine [`StageSpec`]s (the local
-    /// fast-path equivalent of shipping them to workers).
+    /// The plan's materializing stages as engine [`StageSpec`]s (the
+    /// local fast-path equivalent of shipping them to workers). Shuffle
+    /// stages run one map task per parent partition; a peer section runs
+    /// as a single stage task that launches the whole gang on dedicated
+    /// threads ([`crate::peer::run_local_gang`]) — the engine's generic
+    /// retry re-runs the entire gang with a bumped attempt number, which
+    /// is the local flavor of the cluster's gang restart.
     pub fn local_stages(&self) -> Vec<StageSpec> {
+        use std::sync::atomic::{AtomicUsize, Ordering};
         self.plan
-            .shuffle_stages()
+            .stages()
             .into_iter()
-            .map(|(shuffle_id, num_maps)| {
-                let plan = self.plan.clone();
-                StageSpec {
-                    shuffle_id,
-                    num_tasks: num_maps,
-                    run_task: Arc::new(move |map_idx, engine: &Engine| {
-                        run_shuffle_map_task(&plan, shuffle_id, map_idx, engine)
-                    }),
+            .map(|stage| match stage.kind {
+                PlanStageKind::Shuffle => {
+                    let plan = self.plan.clone();
+                    let shuffle_id = stage.id;
+                    StageSpec {
+                        shuffle_id,
+                        num_tasks: stage.num_tasks,
+                        run_task: Arc::new(move |map_idx, engine: &Engine| {
+                            run_shuffle_map_task(&plan, shuffle_id, map_idx, engine)
+                        }),
+                    }
+                }
+                PlanStageKind::Peer => {
+                    let plan = self.plan.clone();
+                    let peer_id = stage.id;
+                    let attempts = Arc::new(AtomicUsize::new(0));
+                    StageSpec {
+                        shuffle_id: peer_id,
+                        num_tasks: 1,
+                        run_task: Arc::new(move |_task, engine: &Engine| {
+                            let attempt = attempts.fetch_add(1, Ordering::SeqCst);
+                            crate::peer::run_local_gang(&plan, peer_id, attempt, engine)
+                        }),
+                    }
                 }
             })
             .collect()
@@ -926,7 +1083,7 @@ mod tests {
 
     #[test]
     fn plan_codec_round_trips_every_node_kind() {
-        let plan = PlanSpec::Shuffle {
+        let shuffle = PlanSpec::Shuffle {
             shuffle_id: 9,
             partitions: 3,
             agg: AggSpec::Named { name: "agg".into() },
@@ -946,6 +1103,8 @@ mod tests {
                 }),
             }),
         };
+        let plan =
+            PlanSpec::PeerOp { peer_id: 77, name: "peer.op".into(), parent: Arc::new(shuffle) };
         let bytes = to_bytes(&plan);
         let back: PlanSpec = from_bytes(&bytes).unwrap();
         assert_eq!(back, plan);
@@ -1181,5 +1340,71 @@ mod tests {
             .collect_local()
             .unwrap_err();
         assert!(err.to_string().contains("List([key, value])"), "got: {err}");
+    }
+
+    fn register_peer_test_ops() {
+        crate::closure::register_peer_op("plan.test.peer.add_total", |comm, rows| {
+            let local = rows.iter().fold(0i64, |acc, v| match v {
+                Value::I64(x) => acc.wrapping_add(*x),
+                _ => acc,
+            });
+            let total = comm.all_reduce(local, |a, b| a.wrapping_add(b))?;
+            Ok(rows
+                .into_iter()
+                .map(|v| match v {
+                    Value::I64(x) => Value::I64(x.wrapping_add(total)),
+                    other => other,
+                })
+                .collect())
+        });
+    }
+
+    #[test]
+    fn peer_section_runs_locally_with_in_stage_allreduce() {
+        register_peer_test_ops();
+        let sc = IgniteContext::local(3);
+        let got = sc
+            .parallelize_values_with(i64_rows(0..12), 3)
+            .map_partitions_peer("plan.test.peer.add_total")
+            .collect()
+            .unwrap();
+        let total: i64 = (0..12).sum(); // 66, all-reduced across the gang
+        let want: Vec<Value> = (0..12).map(|x| Value::I64(x + total)).collect();
+        assert_eq!(got, want, "every rank saw the gang-wide total");
+    }
+
+    #[test]
+    fn peer_stage_order_and_cleanup_ids() {
+        register_test_ops();
+        register_peer_test_ops();
+        let sc = IgniteContext::local(2);
+        let job = sc
+            .parallelize_values_with(i64_rows(0..8), 2)
+            .map_partitions_peer("plan.test.peer.add_total")
+            .map_named("plan.test.pair1")
+            .reduce_by_key(3, AggSpec::SumI64);
+        let stages = job.plan().stages();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].kind, PlanStageKind::Peer);
+        assert_eq!(stages[0].num_tasks, 2, "one gang rank per parent partition");
+        assert_eq!(stages[1].kind, PlanStageKind::Shuffle);
+        // The peer id participates in job GC but is not a shuffle.
+        assert_eq!(job.plan().cleanup_ids(), vec![stages[0].id, stages[1].id]);
+        assert_eq!(job.plan().shuffle_ids(), vec![stages[1].id]);
+        assert!(job.plan().find_peer(stages[0].id).is_some());
+        assert!(job.plan().find_peer(u64::MAX).is_none());
+        // The pipeline still executes end to end locally.
+        assert_eq!(job.collect().unwrap().len(), 8, "8 distinct shifted values");
+    }
+
+    #[test]
+    fn missing_peer_op_is_a_clean_error() {
+        let sc = IgniteContext::local(2);
+        let err = sc
+            .parallelize_values_with(i64_rows(0..4), 2)
+            .map_partitions_peer("plan.test.peer.not_registered")
+            .collect_local()
+            .unwrap_err();
+        assert!(err.to_string().contains("not_registered"), "got: {err}");
     }
 }

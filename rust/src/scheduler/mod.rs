@@ -72,7 +72,14 @@ impl Engine {
         // put path after a loss.
         let shuffle_budget = conf.get_usize("ignite.shuffle.memory.bytes")?;
         let shuffle = ShuffleManager::new(shuffle_budget, Some(blocks.disk.clone()));
-        let broadcast = BroadcastManager::new(conf.get_usize("ignite.broadcast.block.bytes")?);
+        // Broadcast raw blocks tier the same way: in memory within the
+        // `ignite.broadcast.memory.bytes` budget, spilled to the same
+        // per-instance disk store past it.
+        let broadcast = BroadcastManager::with_tiering(
+            conf.get_usize("ignite.broadcast.block.bytes")?,
+            conf.get_usize("ignite.broadcast.memory.bytes")?,
+            Some(blocks.disk.clone()),
+        );
         Ok(Arc::new(Engine {
             pool: TaskPool::new(slots),
             shuffle,
@@ -89,6 +96,14 @@ impl Engine {
 
     fn next_stage_id(&self) -> u64 {
         self.next_stage.fetch_add(1, Ordering::Relaxed) as u64
+    }
+
+    /// Number of task slots this engine runs (`ignite.worker.slots`).
+    /// Workers advertise this at registration; the master's peer-section
+    /// gang scheduler counts placements against it so a gang only
+    /// launches when every rank has a slot (all-or-nothing placement).
+    pub fn slots(&self) -> usize {
+        self.pool.slots()
     }
 
     /// Resolve a broadcast value: the BlockManager's decoded cache, then

@@ -1,0 +1,262 @@
+//! Gang-scheduled peer sections, end to end on a real (in-process)
+//! cluster:
+//!
+//! * a 3-iteration k-means peer section runs distributed across 2
+//!   workers — ranks on *different workers* exchange centroids through
+//!   an in-stage `all_reduce` (asserted via each worker's
+//!   `cluster.worker.<id>.peer.bytes.sent` counter), with NO shuffle and
+//!   NO driver round-trip per iteration — and the result matches the
+//!   single-process closure path (`Rdd::map_partitions_peer`) exactly;
+//! * killing a worker mid-iteration aborts and reschedules the WHOLE
+//!   gang on the survivor with a bumped communicator generation —
+//!   exactly one gang restart — and the job still converges to the
+//!   fault-free result;
+//! * a scripted `FaultInjector` rank failure takes the same gang-restart
+//!   path, and seeded chaos mode (local engine) is absorbed by the
+//!   gang retry machinery;
+//! * all-or-nothing placement: a cluster with fewer slots than ranks
+//!   rejects the gang up front.
+
+use mpignite::apps;
+use mpignite::cluster::Worker;
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use mpignite::rdd::PlanStageKind;
+use std::sync::{Arc, Mutex, Once};
+use std::time::{Duration, Instant};
+
+/// Serializes the tests in this binary: they assert exact deltas of
+/// process-global peer metrics, which interleaved tests would skew.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+static OPS: Once = Once::new();
+
+const K: usize = 3;
+const ITERS: usize = 3;
+
+fn register_ops() {
+    OPS.call_once(|| {
+        apps::register_kmeans_peer("peer.test.kmeans", K, ITERS);
+        // Identical math, but slow enough that a worker can be killed
+        // mid-iteration (the sleeps do not change the result).
+        register_peer_op("peer.test.kmeans_slow", |comm, rows| {
+            let points = apps::peer_points(&rows)?;
+            let mut centroids = apps::kmeans_init(comm, &points, K)?;
+            for _ in 0..ITERS {
+                std::thread::sleep(Duration::from_millis(120));
+                centroids = apps::kmeans_iteration(comm, &points, &centroids)?;
+            }
+            Ok(centroids.into_iter().map(Value::F64Vec).collect())
+        });
+    });
+}
+
+fn metric(name: &str) -> u64 {
+    mpignite::metrics::global().counter(name).get()
+}
+
+fn conf() -> IgniteConf {
+    let mut c = IgniteConf::new();
+    c.set("ignite.worker.heartbeat.ms", "50");
+    c.set("ignite.worker.timeout.ms", "600");
+    // A gang whose sibling died must unblock its collectives well before
+    // the peer-section deadline.
+    c.set("ignite.comm.recv.timeout.ms", "3000");
+    c
+}
+
+/// 24 2-D points around three well-separated centers, so k-means with
+/// k=3 is stable; partition 0 (rank 0) holds one point per cluster among
+/// its first K rows, making the broadcast initialization well-spread.
+fn points() -> Vec<Value> {
+    (0..24)
+        .map(|i| {
+            let center = match i % 3 {
+                0 => (0.0, 0.0),
+                1 => (10.0, 0.0),
+                _ => (0.0, 10.0),
+            };
+            let jitter = 0.05 * i as f64;
+            Value::F64Vec(vec![center.0 + jitter, center.1 - jitter])
+        })
+        .collect()
+}
+
+fn setup(c: &IgniteConf, n: usize) -> (IgniteContext, Vec<Arc<Worker>>) {
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let workers: Vec<Arc<Worker>> =
+        (0..n).map(|_| Worker::start(c, master.address()).unwrap()).collect();
+    master.wait_for_workers(n, Duration::from_secs(5)).unwrap();
+    (sc, workers)
+}
+
+/// The single-process closure path over the same points — the reference
+/// semantics every distributed run must reproduce bit-for-bit.
+fn closure_reference() -> Vec<Value> {
+    let sc = IgniteContext::local(2);
+    sc.parallelize_with(points(), 2)
+        .map_partitions_peer(|comm, rows| apps::kmeans_peer_step(comm, rows, K, ITERS))
+        .unwrap()
+        .collect()
+        .unwrap()
+}
+
+fn wait_workers_drained(workers: &[Arc<Worker>]) {
+    let deadline = Instant::now() + Duration::from_secs(3);
+    loop {
+        let buckets: usize = workers.iter().map(|w| w.engine().shuffle.bucket_count()).sum();
+        if buckets == 0 {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "job.clear never drained the workers' peer buckets ({buckets} left)"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn kmeans_peer_section_runs_distributed_with_in_stage_allreduce() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    register_ops();
+    let c = conf();
+    let (sc, workers) = setup(&c, 2);
+    let master = sc.master().unwrap().clone();
+
+    let sent_before: Vec<u64> = workers.iter().map(|w| w.peer_bytes_sent()).collect();
+    let shuffles_before = metric("cluster.shuffle.registrations");
+
+    let got = sc.peer_rdd(points(), 2, "peer.test.kmeans").collect().unwrap();
+
+    // Two ranks × K centroids, identical across ranks.
+    assert_eq!(got.len(), 2 * K);
+    assert_eq!(got[..K], got[K..], "gang members must agree on the centroids");
+
+    // Ranks lived on DIFFERENT workers and exchanged centroid stats
+    // through the in-stage all_reduce: both workers sent peer bytes.
+    for (i, w) in workers.iter().enumerate() {
+        let sent = w.peer_bytes_sent() - sent_before[i];
+        assert!(sent > 0, "worker {} sent no peer-section bytes", w.worker_id);
+    }
+    // No per-iteration shuffle: the only map-output registrations are
+    // the gang's own rank outputs (one per rank, not one per iteration).
+    let registered = metric("cluster.shuffle.registrations") - shuffles_before;
+    assert_eq!(registered, 2, "peer section registers one output per rank");
+
+    // The distributed gang reproduces the closure fast path exactly.
+    assert_eq!(got, closure_reference(), "distributed ≠ closure reference");
+
+    // Job-end GC covers peer ids like shuffle ids.
+    assert_eq!(master.shuffle_table_len(), 0, "job.clear pruned the peer outputs");
+    wait_workers_drained(&workers);
+    master.shutdown();
+}
+
+#[test]
+fn worker_loss_mid_iteration_restarts_gang_once_and_converges() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    register_ops();
+    let c = conf();
+    let (sc, workers) = setup(&c, 2);
+    let master = sc.master().unwrap().clone();
+
+    let restarts_before = metric("peer.gang.restarts");
+    let job_retries_before = metric("cluster.plan.jobs.retried");
+
+    // Launch in the background; the gang spends >= 360ms in its
+    // sleep-per-iteration loop, so a kill at 250ms lands mid-iteration.
+    let job = sc.peer_rdd(points(), 2, "peer.test.kmeans_slow");
+    let driver = std::thread::spawn(move || job.collect());
+    std::thread::sleep(Duration::from_millis(250));
+    workers[1].kill();
+
+    let got = driver.join().expect("driver thread").unwrap();
+
+    assert_eq!(
+        metric("peer.gang.restarts") - restarts_before,
+        1,
+        "exactly one gang restart (fresh communicator generation)"
+    );
+    assert_eq!(
+        metric("cluster.plan.jobs.retried") - job_retries_before,
+        0,
+        "the gang restarted inside the stage; the job itself never retried"
+    );
+    // The restarted gang (both ranks on the survivor) still converges to
+    // the fault-free result.
+    assert_eq!(got, closure_reference(), "post-restart result diverged");
+    assert_eq!(master.live_workers().len(), 1);
+    master.shutdown();
+}
+
+#[test]
+fn injected_rank_fault_restarts_gang_on_bumped_generation() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    register_ops();
+    let c = conf();
+    let (sc, workers) = setup(&c, 2);
+    let master = sc.master().unwrap().clone();
+
+    let job = sc.peer_rdd(points(), 2, "peer.test.kmeans");
+    let peer_id = job
+        .plan()
+        .stages()
+        .iter()
+        .find(|s| s.kind == PlanStageKind::Peer)
+        .expect("plan has a peer stage")
+        .id;
+    // Kill rank 0's generation-0 attempt on whichever worker hosts it
+    // (round-robin places rank 0 on the first-registered worker). The
+    // FaultInjector hook sits on the peer-task path like any task's.
+    workers[0].engine().fault.fail_task(peer_id, 0, 0);
+
+    let restarts_before = metric("peer.gang.restarts");
+    let got = job.collect().unwrap();
+
+    assert_eq!(
+        metric("peer.gang.restarts") - restarts_before,
+        1,
+        "the injected rank fault must abort and restart the whole gang"
+    );
+    assert_eq!(got, closure_reference(), "post-restart result diverged");
+    master.shutdown();
+}
+
+#[test]
+fn peer_sections_complete_under_seeded_chaos_locally() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    register_ops();
+    // Chaos mode: every task's first attempt — gang ranks included —
+    // fails with 5% probability from a deterministic seed; gang retries
+    // (bumped attempt numbers are spared by chaos) absorb all of it.
+    let mut c = IgniteConf::new();
+    c.set("ignite.master", "local[4]");
+    c.set("ignite.worker.slots", "4");
+    c.set("ignite.fault.inject.seed", "1234");
+    c.set("ignite.comm.recv.timeout.ms", "1000");
+    let sc = IgniteContext::with_conf(c).unwrap();
+    assert!(sc.engine().fault.is_active());
+    let got = sc.peer_rdd(points(), 4, "peer.test.kmeans").collect().unwrap();
+
+    let plain = IgniteContext::local(4);
+    let want = plain.peer_rdd(points(), 4, "peer.test.kmeans").collect().unwrap();
+    assert_eq!(got, want, "chaos must not change the converged result");
+}
+
+#[test]
+fn gang_placement_is_all_or_nothing() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    register_ops();
+    let c = {
+        let mut c = conf();
+        c.set("ignite.worker.slots", "1");
+        c
+    };
+    let (sc, _workers) = setup(&c, 1);
+    // 3 ranks, 1 slot: the gang must be rejected up front, not deadlock.
+    let err = sc.peer_rdd(points(), 3, "peer.test.kmeans").collect().unwrap_err();
+    assert!(err.to_string().contains("gang slots"), "got: {err}");
+    sc.master().unwrap().shutdown();
+}

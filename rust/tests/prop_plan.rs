@@ -42,6 +42,23 @@ fn register_ops() {
             Value::I64(x) => Ok(Value::List(vec![Value::I64(x.rem_euclid(7)), Value::I64(x)])),
             other => Err(IgniteError::Invalid(format!("want i64, got {}", other.type_name()))),
         });
+        // Peer section: every rank adds the gang-wide (all-reduced) sum
+        // to its rows — a value that provably needed sibling-task
+        // communication to compute.
+        mpignite::closure::register_peer_op("prop.peer.add_total", |comm, rows| {
+            let local = rows.iter().fold(0i64, |acc, v| match v {
+                Value::I64(x) => acc.wrapping_add(*x),
+                _ => acc,
+            });
+            let total = comm.all_reduce(local, |a, b| a.wrapping_add(b))?;
+            Ok(rows
+                .into_iter()
+                .map(|v| match v {
+                    Value::I64(x) => Value::I64(x.wrapping_add(total)),
+                    other => other,
+                })
+                .collect())
+        });
     });
 }
 
@@ -55,13 +72,16 @@ enum Step {
     Sample(u64),
 }
 
-/// A random script: source data, partitioning, element steps, and
-/// whether the pipeline ends in a shuffle (`reduce_by_key` mod 7).
+/// A random script: source data, partitioning, element steps, an
+/// optional peer section (gang all-reduce adding the global sum to every
+/// row), and whether the pipeline ends in a shuffle (`reduce_by_key`
+/// mod 7).
 #[derive(Debug, Clone)]
 struct Script {
     data: Vec<i64>,
     parts: usize,
     steps: Vec<Step>,
+    peer: bool,
     shuffle: bool,
 }
 
@@ -78,7 +98,7 @@ fn arbitrary_script(rng: &mut Xoshiro256) -> Script {
             _ => Step::Sample(rng.next_u64()),
         })
         .collect();
-    Script { data, parts, steps, shuffle: rng.chance(0.5) }
+    Script { data, parts, steps, peer: rng.chance(0.4), shuffle: rng.chance(0.5) }
 }
 
 fn build_plan(sc: &IgniteContext, script: &Script) -> PlanRdd {
@@ -92,6 +112,9 @@ fn build_plan(sc: &IgniteContext, script: &Script) -> PlanRdd {
             Step::DupFlatMap => plan.flat_map_named("prop.dup"),
             Step::Sample(seed) => plan.sample(0.5, *seed),
         };
+    }
+    if script.peer {
+        plan = plan.map_partitions_peer("prop.peer.add_total");
     }
     if script.shuffle {
         plan = plan.map_named("prop.pair_mod7").reduce_by_key(3, AggSpec::SumI64);
@@ -109,6 +132,16 @@ fn build_closure_rdd(sc: &IgniteContext, script: &Script) -> Rdd<i64> {
             Step::DupFlatMap => rdd.flat_map(|x| vec![x, x]),
             Step::Sample(seed) => rdd.sample(0.5, *seed),
         };
+    }
+    if script.peer {
+        // Closure flavor of prop.peer.add_total, same math to the bit.
+        rdd = rdd
+            .map_partitions_peer(|comm, rows: Vec<i64>| {
+                let local = rows.iter().fold(0i64, |acc, x| acc.wrapping_add(*x));
+                let total = comm.all_reduce(local, |a, b| a.wrapping_add(b))?;
+                Ok(rows.into_iter().map(|x| x.wrapping_add(total)).collect())
+            })
+            .expect("closure peer section");
     }
     rdd
 }
