@@ -133,6 +133,22 @@ fn main() -> Result<()> {
     println!("\nPeer sections — ignite.peer.* configuration:\n");
     print!("{}", pt.render());
 
+    // The shuffle fast path's config surface (`ignite.shuffle.*`):
+    // partition count, LRU memory budget, compression, batched-fetch
+    // frame size — plus the locality switch the plan scheduler reads.
+    let mut st = Table::new(vec!["key", "default", "meaning"]);
+    for (key, default, meaning) in mpignite::config::KNOWN_KEYS
+        .iter()
+        .filter(|(key, _, _)| {
+            key.starts_with("ignite.shuffle.") || *key == "ignite.plan.locality"
+        })
+    {
+        st.row(vec![*key, *default, *meaning]);
+    }
+    assert!(!st.is_empty(), "shuffle config keys must exist");
+    println!("\nShuffle plane — ignite.shuffle.* (and plan placement) configuration:\n");
+    print!("{}", st.render());
+
     println!("\napi_table OK ({} methods verified)", rows.len());
     Ok(())
 }

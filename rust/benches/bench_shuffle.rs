@@ -1,11 +1,15 @@
-//! E9 — shuffle tier throughput: reading a full shuffle's buckets from
-//! the in-memory tier vs forced-spill disk read-back vs remote fetch over
-//! the `shuffle.fetch` RPC endpoint.
+//! E9 — shuffle fast-path throughput: reading a full shuffle's buckets
+//! from the in-memory tier vs forced-spill disk read-back vs remote fetch
+//! over the shuffle RPC endpoints, each with and without LZ block
+//! compression; remote fetch per-bucket (`shuffle.fetch`) vs batched
+//! streaming (`shuffle.fetch_multi`); and a 2-worker plan job with
+//! locality-aware vs round-robin reduce placement.
 //!
-//! Expected shape: memory ≫ disk > remote; the remote path adds one RPC
-//! round trip per bucket on top of the serving worker's local read, so
-//! its gap versus disk is the network/framing cost the DataMPI line of
-//! work identifies as the dominant shuffle term.
+//! Expected shape: memory ≫ disk > remote; compression trades CPU for
+//! bytes (wins grow with payload redundancy and with slower tiers);
+//! batched fetch removes per-bucket round-trips so its gap over the
+//! per-bucket lane is pure RPC overhead; the locality lane removes
+//! remote fetches entirely for well-placed reduces.
 //!
 //! Run: `cargo bench --bench bench_shuffle` (MPIGNITE_BENCH_FAST=1 to
 //! smoke). CSV block feeds CHANGES.md baselines.
@@ -13,8 +17,9 @@
 use mpignite::bench::{black_box, BenchSuite, Throughput};
 use mpignite::cluster::{Master, Worker};
 use mpignite::config::IgniteConf;
-use mpignite::ser::to_bytes;
-use mpignite::shuffle::ShuffleManager;
+use mpignite::rdd::{AggSpec, PlanSpec};
+use mpignite::ser::{to_bytes, Value};
+use mpignite::shuffle::{ShuffleManager, DEFAULT_FETCH_BATCH_BYTES};
 use mpignite::storage::DiskStore;
 use std::sync::Arc;
 use std::time::Duration;
@@ -53,7 +58,8 @@ fn fill(sm: &ShuffleManager, shuffle: u64) {
     }
 }
 
-/// Read every bucket of the shuffle back, whatever tier it lives in.
+/// Read every bucket of the shuffle back one at a time, whatever tier it
+/// lives in (the per-bucket baseline).
 fn drain(sm: &ShuffleManager, shuffle: u64) -> u64 {
     let mut acc = 0u64;
     for m in 0..MAPS {
@@ -65,11 +71,63 @@ fn drain(sm: &ShuffleManager, shuffle: u64) -> u64 {
     acc
 }
 
+/// Read the shuffle reduce-side: one batched streaming pull per reduce
+/// partition (the `fetch_multi` fast path).
+fn drain_batched(sm: &ShuffleManager, shuffle: u64) -> u64 {
+    let mut acc = 0u64;
+    for r in 0..REDUCES {
+        let framed = sm.fetch_reduce_bytes(shuffle, r, MAPS).unwrap();
+        for f in &framed {
+            let b: Vec<(u64, u64)> = mpignite::shuffle::decode_bucket(f).unwrap();
+            acc = acc.wrapping_add(b.len() as u64);
+        }
+    }
+    acc
+}
+
+/// One 4-map × 4-reduce plan wordcount (fresh shuffle id per call so
+/// back-to-back jobs never see stale completion state).
+fn locality_plan() -> PlanSpec {
+    let partitions: Vec<Vec<Value>> = (0..4)
+        .map(|p| {
+            (0..100)
+                .map(|i| {
+                    Value::List(vec![
+                        Value::Str(format!("key-{:02}", (p * 100 + i) % 40)),
+                        Value::I64(i as i64),
+                    ])
+                })
+                .collect()
+        })
+        .collect();
+    PlanSpec::Shuffle {
+        shuffle_id: mpignite::util::next_id(),
+        partitions: 4,
+        agg: AggSpec::SumI64,
+        parent: Arc::new(PlanSpec::Source { partitions }),
+    }
+}
+
+fn bench_locality_lane(suite: &mut BenchSuite, name: &str, locality: bool) {
+    let mut conf = IgniteConf::new();
+    conf.set("ignite.plan.locality", if locality { "true" } else { "false" });
+    let master = Master::start(&conf, 0).expect("master");
+    let _workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&conf, master.address()).expect("worker")).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+    let m = master.clone();
+    suite.bench(name, move || {
+        let parts = m.run_plan(&locality_plan()).unwrap();
+        black_box(parts.len());
+    });
+    master.shutdown();
+}
+
 fn main() {
     mpignite::util::init_logger();
     let bytes = shuffle_bytes();
     let mut suite = BenchSuite::new(format!(
-        "E9: shuffle tier read throughput ({MAPS} maps x {REDUCES} reduces, {} B/shuffle)",
+        "E9: shuffle fast-path read throughput ({MAPS} maps x {REDUCES} reduces, {} B/shuffle)",
         bytes
     ));
 
@@ -80,6 +138,15 @@ fn main() {
         assert_eq!(sm.spilled_count(), 0);
         suite.bench_throughput("read_in_memory", Throughput::Bytes(bytes), move || {
             black_box(drain(&sm, 1));
+        });
+    }
+
+    // --- tier 1 + LZ: in-memory, compressed frames --------------------
+    {
+        let sm = ShuffleManager::with_options(usize::MAX, None, true, DEFAULT_FETCH_BATCH_BYTES);
+        fill(&sm, 11);
+        suite.bench_throughput("read_in_memory_lz", Throughput::Bytes(bytes), move || {
+            black_box(drain(&sm, 11));
         });
     }
 
@@ -94,7 +161,18 @@ fn main() {
         });
     }
 
-    // --- tier 3: remote fetch over shuffle.fetch RPC -------------------
+    // --- tier 2 + LZ: forced spill with compressed frames (less disk) --
+    {
+        let disk = Arc::new(DiskStore::new("/tmp/mpignite-bench-shuffle-lz").unwrap());
+        let sm = ShuffleManager::with_options(0, Some(disk), true, DEFAULT_FETCH_BATCH_BYTES);
+        fill(&sm, 12);
+        assert_eq!(sm.spilled_count(), MAPS * REDUCES);
+        suite.bench_throughput("read_forced_spill_lz", Throughput::Bytes(bytes), move || {
+            black_box(drain(&sm, 12));
+        });
+    }
+
+    // --- tier 3: remote fetch, one RPC per bucket ----------------------
     {
         let conf = IgniteConf::new();
         let master = Master::start(&conf, 0).expect("master");
@@ -111,8 +189,26 @@ fn main() {
         });
         let remote = mpignite::metrics::global().counter("shuffle.remote.fetches").get();
         assert!(remote >= (MAPS * REDUCES) as u64, "remote tier must be exercised");
+
+        // --- tier 3 batched: one streaming fetch_multi per worker ------
+        fill(&producer.engine().shuffle, 13);
+        let consumer_sm = consumer.engine().clone();
+        let multi_before =
+            mpignite::metrics::global().counter("shuffle.fetch.multi.calls").get();
+        suite.bench_throughput("read_remote_fetch_batched", Throughput::Bytes(bytes), move || {
+            black_box(drain_batched(&consumer_sm.shuffle, 13));
+        });
+        assert!(
+            mpignite::metrics::global().counter("shuffle.fetch.multi.calls").get()
+                > multi_before,
+            "batched lane must ride shuffle.fetch_multi"
+        );
         master.shutdown();
     }
+
+    // --- locality: plan-job latency with and without byte-aware placement
+    bench_locality_lane(&mut suite, "plan_job_locality_on", true);
+    bench_locality_lane(&mut suite, "plan_job_locality_off", false);
 
     suite.report();
 }

@@ -51,6 +51,11 @@ pub const EP_LAUNCH: &str = "worker.launch";
 /// Worker shuffle service: serves locally-held (in-memory or spilled)
 /// shuffle buckets to remote reduce tasks by block id.
 pub const EP_SHUFFLE_FETCH: &str = "shuffle.fetch";
+/// Batched worker shuffle service: one framed response carries every
+/// bucket a reduce task needs from this worker (streamed in
+/// `ignite.shuffle.fetch.batch.bytes` frames), collapsing remote
+/// round-trips from O(maps × reduces) to O(workers × reduces).
+pub const EP_SHUFFLE_FETCH_MULTI: &str = "shuffle.fetch_multi";
 /// Worker stage execution: the driver ships an encoded plan stage plus a
 /// task-index assignment; the worker acks, runs the tasks on its local
 /// engine, and reports the batch through [`EP_PLAN_RESULT`].
@@ -108,10 +113,11 @@ struct JobState {
 }
 
 /// Driver-side state of one in-flight plan stage: per-task result slots
-/// plus a countdown of outstanding worker batches. A failure keeps the
-/// worker-side recoverability classification (the typed error does not
-/// survive the wire) so the driver can decide between retrying the stage
-/// on survivors and failing the job.
+/// plus a countdown of outstanding **tasks** (workers report each task
+/// as it finishes, so a straggler no longer holds back its batch-mates).
+/// A failure keeps the worker-side recoverability classification (the
+/// typed error does not survive the wire) so the driver can decide
+/// between retrying the stage on survivors and failing the job.
 struct PlanJobState {
     results: Mutex<Vec<Option<Vec<Value>>>>,
     remaining: AtomicU64,
@@ -156,8 +162,8 @@ pub struct Master {
     /// Serializes jobs: the prototype runs one parallel execution at a
     /// time (each `execute` is an implicit barrier anyway).
     job_serial: Mutex<()>,
-    /// Map-output table: shuffle → (total maps, map index → worker addr).
-    map_outputs: Mutex<HashMap<u64, (usize, HashMap<usize, String>)>>,
+    /// Map-output table: shuffle → locations + per-reduce byte totals.
+    map_outputs: Mutex<HashMap<u64, MapOutputEntry>>,
     /// Broadcast block-location table: id → shape + per-block holders.
     broadcasts: Mutex<HashMap<u64, BroadcastEntry>>,
     /// The driver-registered authoritative block copies this master
@@ -165,6 +171,18 @@ pub struct Master {
     /// when every peer holding a block is gone). Same chunk/store/serve
     /// machinery the workers use, never wired to a net.
     broadcast_store: crate::broadcast::BroadcastManager,
+}
+
+/// One shuffle in the master's map-output table: the location of every
+/// completed map output plus each output's per-reduce framed bucket
+/// sizes — what locality-aware reduce placement sums per worker.
+#[derive(Default)]
+struct MapOutputEntry {
+    total_maps: usize,
+    /// map index → worker RPC address.
+    locations: HashMap<usize, String>,
+    /// map index → `(reduce_idx, framed bytes)` pairs.
+    reduce_bytes: HashMap<usize, Vec<(usize, u64)>>,
 }
 
 /// One broadcast value in the master's location table.
@@ -258,11 +276,13 @@ impl Master {
             Arc::new(move |envelope: &Envelope| {
                 let reg: ShuffleRegister = from_bytes(&envelope.body)?;
                 let mut table = m.map_outputs.lock().unwrap();
-                let entry = table
-                    .entry(reg.shuffle)
-                    .or_insert_with(|| (reg.total_maps as usize, HashMap::new()));
-                entry.0 = reg.total_maps as usize;
-                entry.1.insert(reg.map_idx as usize, reg.addr);
+                let entry = table.entry(reg.shuffle).or_default();
+                entry.total_maps = reg.total_maps as usize;
+                entry.locations.insert(reg.map_idx as usize, reg.addr);
+                entry.reduce_bytes.insert(
+                    reg.map_idx as usize,
+                    reg.bucket_bytes.iter().map(|(r, b)| (*r as usize, *b)).collect(),
+                );
                 metrics::global().counter("cluster.shuffle.registrations").inc();
                 Ok(Some(Vec::new())) // ack
             }),
@@ -284,14 +304,15 @@ impl Master {
                     .collect();
                 let table = m.map_outputs.lock().unwrap();
                 let resp = match table.get(&req.shuffle) {
-                    Some((total, locs)) => {
-                        let mut locations: Vec<(u64, String)> = locs
+                    Some(entry) => {
+                        let mut locations: Vec<(u64, String)> = entry
+                            .locations
                             .iter()
                             .filter(|(_, a)| live.contains(*a))
                             .map(|(m, a)| (*m as u64, a.clone()))
                             .collect();
                         locations.sort_by_key(|(m, _)| *m);
-                        ShuffleLocateResp { total_maps: *total as u64, locations }
+                        ShuffleLocateResp { total_maps: entry.total_maps as u64, locations }
                     }
                     None => ShuffleLocateResp { total_maps: 0, locations: Vec::new() },
                 };
@@ -755,7 +776,7 @@ impl Master {
         let mut last_err = None;
         let mut outcome = None;
         for attempt in 0..budget {
-            match self.try_plan_job(&plan_bytes, &stages, plan.num_partitions()) {
+            match self.try_plan_job(&plan, &plan_bytes, &stages, plan.num_partitions()) {
                 Ok(parts) => {
                     outcome = Some(Ok(parts));
                     break;
@@ -801,9 +822,12 @@ impl Master {
     /// One attempt at a full plan job: every materializing stage in
     /// lineage order (shuffle map stages shipped over `task.run`, peer
     /// sections gang-scheduled over `peer.prepare`/`peer.run`), then the
-    /// result stage.
+    /// result stage. Each `task.run` stage's placement consults the
+    /// map-output table for the stage's direct input ids (locality-aware
+    /// reduce placement); gang stages keep their slot-capacity placement.
     fn try_plan_job(
         &self,
+        plan: &PlanSpec,
         plan_bytes: &[u8],
         stages: &[PlanStage],
         num_result_tasks: usize,
@@ -815,7 +839,8 @@ impl Master {
                         target: "cluster",
                         "plan map stage shuffle {} ({} tasks)", stage.id, stage.num_tasks
                     );
-                    self.try_plan_stage(plan_bytes, Some(stage.id), stage.num_tasks)?;
+                    let inputs = plan.stage_input_ids(Some(stage.id));
+                    self.try_plan_stage(plan_bytes, Some(stage.id), stage.num_tasks, &inputs)?;
                 }
                 PlanStageKind::Peer => {
                     info!(
@@ -826,7 +851,73 @@ impl Master {
                 }
             }
         }
-        self.try_plan_stage(plan_bytes, None, num_result_tasks)
+        let inputs = plan.stage_input_ids(None);
+        self.try_plan_stage(plan_bytes, None, num_result_tasks, &inputs)
+    }
+
+    /// Locality-aware task placement for one `task.run` stage: sum each
+    /// task's input bytes per worker from the map-output table (over the
+    /// stage's direct input shuffle/peer ids, using the per-reduce sizes
+    /// registration reports) and place the task on the live worker
+    /// holding the most — turning remote fetches into local reads.
+    /// Round-robin among ties and among tasks with no known bytes, so an
+    /// empty table degrades to the old rotation. Returns one index into
+    /// `workers` per task; `plan.tasks.local_bytes_ratio` records the
+    /// percentage of input bytes colocated with the chosen workers.
+    fn place_stage_tasks(
+        &self,
+        workers: &[(u64, RpcAddress)],
+        num_tasks: usize,
+        input_ids: &[u64],
+    ) -> Vec<usize> {
+        let locality = self.conf.get_bool("ignite.plan.locality").unwrap_or(true);
+        let mut weights: Vec<HashMap<String, u64>> = vec![HashMap::new(); num_tasks];
+        if locality && !input_ids.is_empty() {
+            let table = self.map_outputs.lock().unwrap();
+            for id in input_ids {
+                if let Some(entry) = table.get(id) {
+                    for (map, addr) in &entry.locations {
+                        if let Some(sizes) = entry.reduce_bytes.get(map) {
+                            for (reduce, bytes) in sizes {
+                                if *reduce < num_tasks {
+                                    *weights[*reduce].entry(addr.clone()).or_insert(0) += bytes;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut rr = 0usize;
+        let mut local_bytes = 0u64;
+        let mut total_bytes = 0u64;
+        let mut out = Vec::with_capacity(num_tasks);
+        for w in &weights {
+            let per_worker: Vec<u64> =
+                workers.iter().map(|(_, addr)| w.get(&addr.0).copied().unwrap_or(0)).collect();
+            total_bytes += per_worker.iter().sum::<u64>();
+            let max = per_worker.iter().copied().max().unwrap_or(0);
+            let cands: Vec<usize> = if max == 0 {
+                (0..workers.len()).collect()
+            } else {
+                per_worker
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, b)| **b == max)
+                    .map(|(i, _)| i)
+                    .collect()
+            };
+            let pick = cands[rr % cands.len()];
+            rr += 1;
+            local_bytes += per_worker[pick];
+            out.push(pick);
+        }
+        if total_bytes > 0 {
+            metrics::global()
+                .gauge("plan.tasks.local_bytes_ratio")
+                .set(((local_bytes * 100) / total_bytes) as i64);
+        }
+        out
     }
 
     /// Run one peer section to completion, restarting the WHOLE gang on
@@ -1046,6 +1137,7 @@ impl Master {
         plan_bytes: &[u8],
         shuffle_id: Option<u64>,
         num_tasks: usize,
+        input_ids: &[u64],
     ) -> Result<Vec<Vec<Value>>> {
         if num_tasks == 0 {
             return Ok(Vec::new());
@@ -1056,10 +1148,13 @@ impl Master {
         }
         let job_id = self.next_job.fetch_add(1, Ordering::SeqCst);
 
-        // Round-robin task placement, batched per worker.
+        // Locality-aware placement (round-robin when the map-output
+        // table knows nothing about this stage's inputs), batched per
+        // worker for launch but reported per task.
+        let placement = self.place_stage_tasks(&workers, num_tasks, input_ids);
         let mut assignment: HashMap<u64, (RpcAddress, Vec<u64>)> = HashMap::new();
-        for task in 0..num_tasks {
-            let (wid, addr) = &workers[task % workers.len()];
+        for (task, &widx) in placement.iter().enumerate() {
+            let (wid, addr) = &workers[widx];
             assignment
                 .entry(*wid)
                 .or_insert_with(|| (addr.clone(), Vec::new()))
@@ -1070,7 +1165,7 @@ impl Master {
 
         let job = Arc::new(PlanJobState {
             results: Mutex::new((0..num_tasks).map(|_| None).collect()),
-            remaining: AtomicU64::new(assignment.len() as u64),
+            remaining: AtomicU64::new(num_tasks as u64),
             error: Mutex::new(None),
             wake: Condvar::new(),
             wake_lock: Mutex::new(()),
@@ -1252,12 +1347,19 @@ impl RpcShuffleNet {
 }
 
 impl crate::shuffle::ShuffleNet for RpcShuffleNet {
-    fn register(&self, shuffle: u64, map_idx: usize, total_maps: usize) -> Result<()> {
+    fn register(
+        &self,
+        shuffle: u64,
+        map_idx: usize,
+        total_maps: usize,
+        bucket_bytes: &[(usize, usize)],
+    ) -> Result<()> {
         let req = ShuffleRegister {
             shuffle,
             map_idx: map_idx as u64,
             total_maps: total_maps as u64,
             addr: self.env.address().0.clone(),
+            bucket_bytes: bucket_bytes.iter().map(|(r, b)| (*r as u64, *b as u64)).collect(),
         };
         // Ask (not send): registration must be in the master's table
         // before this map task is reported done, or a remote reduce task
@@ -1304,14 +1406,40 @@ impl crate::shuffle::ShuffleNet for RpcShuffleNet {
         })
     }
 
+    fn fetch_multi(
+        &self,
+        addr: &str,
+        shuffle: u64,
+        reduce_idx: usize,
+        map_idxs: &[usize],
+        batch_bytes: usize,
+    ) -> Result<Vec<(usize, Option<Vec<u8>>)>> {
+        let req = ShuffleFetchMultiReq {
+            shuffle,
+            reduce_idx: reduce_idx as u64,
+            map_idxs: map_idxs.iter().map(|&m| m as u64).collect(),
+            batch_bytes: batch_bytes as u64,
+        };
+        let resp = self.env.ask(
+            &RpcAddress(addr.to_string()),
+            EP_SHUFFLE_FETCH_MULTI,
+            to_bytes(&req),
+            self.timeout,
+        )?;
+        let resp: ShuffleFetchMultiResp = from_bytes(&resp)?;
+        Ok(resp.buckets.into_iter().map(|(m, b)| (m as usize, b)).collect())
+    }
+
     fn local_addr(&self) -> String {
         self.env.address().0.clone()
     }
 }
 
 /// Install the worker half of the shuffle plane on an RPC env: serve
-/// locally-held buckets on [`EP_SHUFFLE_FETCH`] and wire the engine's
-/// shuffle manager to the master's map-output table.
+/// locally-held buckets on [`EP_SHUFFLE_FETCH`] (one bucket per
+/// round-trip) and [`EP_SHUFFLE_FETCH_MULTI`] (every requested bucket of
+/// one reduce partition, streamed in `batch_bytes`-bounded frames), and
+/// wire the engine's shuffle manager to the master's map-output table.
 pub fn install_shuffle_service(
     env: &RpcEnv,
     master: RpcAddress,
@@ -1329,6 +1457,33 @@ pub fn install_shuffle_service(
                 .map(|b| (*b).clone());
             metrics::global().counter("cluster.shuffle.fetches.served").inc();
             Ok(Some(to_bytes(&ShuffleFetchResp { bytes })))
+        }),
+    );
+    let serve = engine.clone();
+    env.register(
+        EP_SHUFFLE_FETCH_MULTI,
+        Arc::new(move |envelope: &Envelope| {
+            let req: ShuffleFetchMultiReq = from_bytes(&envelope.body)?;
+            // Fill buckets in request order until the frame budget is
+            // spent — always at least one, so the caller's streaming
+            // loop makes progress on every round-trip.
+            let mut buckets: Vec<(u64, Option<Vec<u8>>)> = Vec::new();
+            let mut total = 0usize;
+            for &m in &req.map_idxs {
+                if !buckets.is_empty() && total >= req.batch_bytes as usize {
+                    break;
+                }
+                let bytes = serve
+                    .shuffle
+                    .local_bucket_bytes(req.shuffle, m as usize, req.reduce_idx as usize)
+                    .map(|b| (*b).clone());
+                if let Some(b) = &bytes {
+                    total += b.len();
+                    metrics::global().counter("cluster.shuffle.fetches.served").inc();
+                }
+                buckets.push((m, bytes));
+            }
+            Ok(Some(to_bytes(&ShuffleFetchMultiResp { buckets })))
         }),
     );
     engine
@@ -1455,47 +1610,38 @@ pub fn worker_task_counter(worker_id: u64) -> String {
     format!("cluster.worker.{worker_id}.tasks.executed")
 }
 
-/// Worker half of `task.run`: decode the plan, run the assigned task
-/// indices through the local engine's pool, and return `(task, rows)`
-/// pairs for result stages (map stages write to the shuffle plane and
-/// return no rows).
+/// Worker half of `task.run`: decode the plan and run the assigned task
+/// indices through the local engine's pool, invoking `report` with each
+/// finished task's rows (empty for map tasks, which write to the shuffle
+/// plane instead) **as it completes** — per-task, not per-batch, so a
+/// straggler never delays its batch-mates' results and the master can
+/// observe `plan.task.latency` per task.
 fn run_plan_tasks(
     engine: &Arc<crate::scheduler::Engine>,
     worker_id: u64,
     req: &PlanTaskReq,
-) -> Result<Vec<(u64, Vec<Value>)>> {
+    report: impl Fn(u64, Vec<Value>) + Send + Sync + 'static,
+) -> Result<()> {
     let plan: PlanSpec = from_bytes(&req.plan)?;
     let plan = Arc::new(plan);
     let indices: Vec<usize> = req.tasks.iter().map(|&t| t as usize).collect();
-    let collected: Arc<Mutex<HashMap<usize, Vec<Value>>>> = Arc::new(Mutex::new(HashMap::new()));
     let shuffle_id = req.shuffle_id;
-    {
-        let plan = plan.clone();
-        let engine2 = engine.clone();
-        let collected = collected.clone();
-        engine.run_task_indices(req.job_id, indices, move |task_idx| {
-            metrics::global().counter("cluster.tasks.executed").inc();
-            metrics::global().counter(&worker_task_counter(worker_id)).inc();
-            match shuffle_id {
-                Some(sid) => run_shuffle_map_task(&plan, sid, task_idx, &engine2),
-                None => {
-                    let rows = plan.compute(task_idx, &engine2)?;
-                    let mut slots = collected.lock().unwrap();
-                    // First finisher wins (a retried attempt is benign).
-                    slots.entry(task_idx).or_insert(rows);
-                    Ok(())
-                }
+    let engine2 = engine.clone();
+    engine.run_task_indices(req.job_id, indices, move |task_idx| {
+        metrics::global().counter("cluster.tasks.executed").inc();
+        metrics::global().counter(&worker_task_counter(worker_id)).inc();
+        let t0 = std::time::Instant::now();
+        let rows = match shuffle_id {
+            Some(sid) => {
+                run_shuffle_map_task(&plan, sid, task_idx, &engine2)?;
+                Vec::new()
             }
-        })?;
-    }
-    let mut out: Vec<(u64, Vec<Value>)> = collected
-        .lock()
-        .unwrap()
-        .drain()
-        .map(|(task, rows)| (task as u64, rows))
-        .collect();
-    out.sort_by_key(|(task, _)| *task);
-    Ok(out)
+            None => plan.compute(task_idx, &engine2)?,
+        };
+        metrics::global().histogram("plan.task.latency").record(t0.elapsed());
+        report(task_idx as u64, rows);
+        Ok(())
+    })
 }
 
 /// A worker process (or in-process worker for tests).
@@ -1575,26 +1721,35 @@ impl Worker {
                     std::thread::Builder::new()
                         .name(format!("plan-job{}-w{worker_id}", req.job_id))
                         .spawn(move || {
-                            let outcome = run_plan_tasks(&engine, worker_id, &req);
-                            let msg = match outcome {
-                                Ok(results) => PlanTaskResult {
-                                    job_id: req.job_id,
-                                    worker_id,
-                                    ok: true,
-                                    error: String::new(),
-                                    recoverable: false,
-                                    results,
-                                },
-                                Err(e) => PlanTaskResult {
-                                    job_id: req.job_id,
+                            let job_id = req.job_id;
+                            // Per-task reporting: each finished task sends
+                            // its own result immediately, so a straggler
+                            // in this batch cannot hold back the others'.
+                            let env4 = env3.clone();
+                            let master2 = master.clone();
+                            let outcome =
+                                run_plan_tasks(&engine, worker_id, &req, move |task, rows| {
+                                    let msg = PlanTaskResult {
+                                        job_id,
+                                        worker_id,
+                                        ok: true,
+                                        error: String::new(),
+                                        recoverable: false,
+                                        results: vec![(task, rows)],
+                                    };
+                                    let _ = env4.send(&master2, EP_PLAN_RESULT, to_bytes(&msg));
+                                });
+                            if let Err(e) = outcome {
+                                let msg = PlanTaskResult {
+                                    job_id,
                                     worker_id,
                                     ok: false,
                                     error: e.to_string(),
                                     recoverable: e.is_recoverable(),
                                     results: Vec::new(),
-                                },
-                            };
-                            let _ = env3.send(&master, EP_PLAN_RESULT, to_bytes(&msg));
+                                };
+                                let _ = env3.send(&master, EP_PLAN_RESULT, to_bytes(&msg));
+                            }
                         })
                         .expect("spawn plan task batch");
                     Ok(Some(Vec::new())) // launch ack

@@ -137,6 +137,10 @@ pub struct ShuffleRegister {
     pub total_maps: u64,
     /// The worker's RPC address serving `shuffle.fetch` for this block.
     pub addr: String,
+    /// Framed byte size of each registered bucket as
+    /// `(reduce_idx, bytes)` pairs — what the master's locality-aware
+    /// reduce placement sums per worker.
+    pub bucket_bytes: Vec<(u64, u64)>,
 }
 
 impl Encode for ShuffleRegister {
@@ -145,6 +149,7 @@ impl Encode for ShuffleRegister {
         self.map_idx.encode(buf);
         self.total_maps.encode(buf);
         self.addr.encode(buf);
+        self.bucket_bytes.encode(buf);
     }
 }
 impl Decode for ShuffleRegister {
@@ -154,6 +159,7 @@ impl Decode for ShuffleRegister {
             map_idx: u64::decode(r)?,
             total_maps: u64::decode(r)?,
             addr: String::decode(r)?,
+            bucket_bytes: Vec::<(u64, u64)>::decode(r)?,
         })
     }
 }
@@ -241,6 +247,58 @@ impl Decode for ShuffleFetchResp {
     }
 }
 
+/// Reduce task → remote worker (`shuffle.fetch_multi`): pull several of
+/// one worker's buckets for a single reduce partition in one round-trip.
+/// `batch_bytes` bounds the response frame — the server fills buckets in
+/// request order until the budget is spent (always at least one), and
+/// the client re-asks for the remainder, so a giant shuffle streams in
+/// bounded frames instead of ballooning one RPC response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShuffleFetchMultiReq {
+    pub shuffle: u64,
+    pub reduce_idx: u64,
+    pub map_idxs: Vec<u64>,
+    pub batch_bytes: u64,
+}
+
+impl Encode for ShuffleFetchMultiReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.shuffle.encode(buf);
+        self.reduce_idx.encode(buf);
+        self.map_idxs.encode(buf);
+        self.batch_bytes.encode(buf);
+    }
+}
+impl Decode for ShuffleFetchMultiReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ShuffleFetchMultiReq {
+            shuffle: u64::decode(r)?,
+            reduce_idx: u64::decode(r)?,
+            map_idxs: Vec::<u64>::decode(r)?,
+            batch_bytes: u64::decode(r)?,
+        })
+    }
+}
+
+/// Remote worker → reduce task: one `shuffle.fetch_multi` frame — a
+/// prefix of the requested buckets (in request order), each `None` when
+/// the worker no longer holds it (triggers recompute on the caller).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShuffleFetchMultiResp {
+    pub buckets: Vec<(u64, Option<Vec<u8>>)>,
+}
+
+impl Encode for ShuffleFetchMultiResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.buckets.encode(buf);
+    }
+}
+impl Decode for ShuffleFetchMultiResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ShuffleFetchMultiResp { buckets: Vec::<(u64, Option<Vec<u8>>)>::decode(r)? })
+    }
+}
+
 /// Master → worker (`task.run`): run a batch of stage tasks of a shipped
 /// plan. `plan` is the canonical encoding of the whole
 /// [`crate::rdd::PlanSpec`]; `shuffle_id` selects which stage to run —
@@ -277,10 +335,14 @@ impl Decode for PlanTaskReq {
     }
 }
 
-/// Worker → master (`master.plan_result`): one worker's whole `task.run`
-/// batch finished. `results` carries `(task index, rows)` pairs for
-/// result stages and is empty for map stages (whose output went into the
-/// shuffle plane instead). `recoverable` classifies a failure on the
+/// Worker → master (`master.plan_result`): **per-task** stage reporting.
+/// Each finished task sends one message with `results` carrying its
+/// single `(task index, rows)` pair (rows empty for map tasks, whose
+/// output went into the shuffle plane instead), so a straggler no longer
+/// holds a whole worker batch hostage — the master's per-task slots fill
+/// as tasks land and `plan.task.latency` is observable per task. A batch
+/// that fails (after the worker's own retries) sends one `ok: false`
+/// message with no results. `recoverable` classifies a failure on the
 /// worker side (where the typed error still exists): `true` means the
 /// driver may re-run the stage on the surviving workers, `false` means a
 /// deterministic task failure that retrying cannot fix.
@@ -624,6 +686,7 @@ mod tests {
             map_idx: 2,
             total_maps: 4,
             addr: "127.0.0.1:4000".into(),
+            bucket_bytes: vec![(0, 128), (2, 4096)],
         };
         assert_eq!(from_bytes::<ShuffleRegister>(&to_bytes(&reg)).unwrap(), reg);
 
@@ -643,6 +706,18 @@ mod tests {
             let resp = ShuffleFetchResp { bytes };
             assert_eq!(from_bytes::<ShuffleFetchResp>(&to_bytes(&resp)).unwrap(), resp);
         }
+
+        let multi = ShuffleFetchMultiReq {
+            shuffle: 9,
+            reduce_idx: 3,
+            map_idxs: vec![0, 2, 5],
+            batch_bytes: 1 << 20,
+        };
+        assert_eq!(from_bytes::<ShuffleFetchMultiReq>(&to_bytes(&multi)).unwrap(), multi);
+        let resp = ShuffleFetchMultiResp {
+            buckets: vec![(0, Some(vec![1, 2, 3])), (2, None), (5, Some(Vec::new()))],
+        };
+        assert_eq!(from_bytes::<ShuffleFetchMultiResp>(&to_bytes(&resp)).unwrap(), resp);
     }
 
     #[test]

@@ -14,12 +14,18 @@
 //! sequence number advances identically on every member).
 
 use super::message::internal_tags::{SPLIT_GATHER, SPLIT_RESULT};
+use super::message::PEER_CONTEXT_FLAG;
 use super::SparkComm;
 use crate::error::{IgniteError, Result};
 use crate::ser::Value;
 use std::sync::Arc;
 
 /// FNV-1a over the split identity; never returns 0 (reserved for world).
+/// The [`PEER_CONTEXT_FLAG`] bit is **inherited from the parent**, never
+/// taken from the hash: a communicator split inside a peer section stays
+/// a peer communicator — its traffic keeps the `peer.bytes.{sent,received}`
+/// attribution — while a split of an ordinary communicator can never
+/// masquerade as one.
 fn derive_context(parent: u64, seq: u64, color: i64) -> u64 {
     const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x0000_0100_0000_01B3;
@@ -30,11 +36,11 @@ fn derive_context(parent: u64, seq: u64, color: i64) -> u64 {
             h = h.wrapping_mul(PRIME);
         }
     }
+    h &= !PEER_CONTEXT_FLAG;
     if h == 0 {
-        1
-    } else {
-        h
+        h = 1;
     }
+    h | (parent & PEER_CONTEXT_FLAG)
 }
 
 impl SparkComm {
@@ -141,6 +147,50 @@ mod tests {
         assert_ne!(derive_context(0, 0, 1), a, "different colors differ");
         assert_ne!(derive_context(0, 1, 0), a, "different splits differ");
         assert_ne!(derive_context(7, 0, 0), a, "different parents differ");
+    }
+
+    #[test]
+    fn derive_context_inherits_peer_flag_from_parent_only() {
+        // Non-peer parents can never produce a peer-flagged context...
+        for (parent, seq, color) in [(0u64, 0u64, 0i64), (7, 3, 2), (u64::MAX >> 1, 9, 1)] {
+            assert_eq!(
+                derive_context(parent, seq, color) & PEER_CONTEXT_FLAG,
+                0,
+                "non-peer parent ({parent}, {seq}, {color}) leaked the flag"
+            );
+        }
+        // ...and peer parents always keep it, so derived communicators
+        // keep their peer.bytes.{sent,received} attribution.
+        let peer_parents = [(PEER_CONTEXT_FLAG, 0u64, 0i64), (PEER_CONTEXT_FLAG | 42, 5, 3)];
+        for (parent, seq, color) in peer_parents {
+            assert_ne!(
+                derive_context(parent, seq, color) & PEER_CONTEXT_FLAG,
+                0,
+                "peer parent dropped the flag"
+            );
+        }
+    }
+
+    #[test]
+    fn split_of_peer_context_keeps_peer_flag() {
+        use super::super::CommWorld;
+        // A gang-style world whose base context carries the peer flag
+        // (what crate::peer::peer_context builds): splitting inside the
+        // section must yield flagged sub-contexts on every member.
+        let world = CommWorld::local(2);
+        let mut handles = Vec::new();
+        for rank in 0..2usize {
+            let world = Arc::clone(&world);
+            handles.push(std::thread::spawn(move || {
+                let comm = world.comm_for_rank_ctx(rank, PEER_CONTEXT_FLAG | (42 << 16));
+                let sub = comm.split(0, rank as i64).unwrap();
+                sub.context_id()
+            }));
+        }
+        let ctxs: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(ctxs[0], ctxs[1], "members agree on the derived context");
+        assert_ne!(ctxs[0] & PEER_CONTEXT_FLAG, 0, "derived context kept the peer flag");
+        assert_ne!(ctxs[0], PEER_CONTEXT_FLAG | (42 << 16), "split still derives a fresh context");
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! `IgniteConf` — the engine configuration system, modelled on Spark's
 //! `SparkConf`: string key/value pairs with typed accessors, defaults,
-//! and three override layers (defaults < file < environment < explicit
-//! `set` calls). The file format is a deliberately small TOML subset
+//! and three override layers (defaults < environment `MPIGNITE_*` <
+//! file < explicit `set` calls; the env overlay applies at construction,
+//! so a CI matrix lane can steer every conf a process builds). The file
+//! format is a deliberately small TOML subset
 //! (`key = value` lines, `#` comments, bare/quoted strings, ints, floats,
 //! bools) parsed in-tree because the vendor set has no TOML crate.
 
@@ -35,8 +37,11 @@ pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
     ("ignite.peer.section.timeout.ms", "30000", "Gang-scheduled peer section deadline"),
     ("ignite.peer.gang.retries", "3", "Peer-section gang launch budget (restarts on a fresh communicator generation)"),
     ("ignite.shuffle.partitions", "8", "Default reduce-side partition count"),
-    ("ignite.shuffle.memory.bytes", "67108864", "In-memory shuffle bucket budget; overflow spills to disk"),
+    ("ignite.shuffle.memory.bytes", "67108864", "In-memory shuffle bucket budget; overflow demotes LRU buckets to disk"),
     ("ignite.shuffle.fetch.timeout.ms", "5000", "Remote shuffle.fetch RPC timeout"),
+    ("ignite.shuffle.compress", "false", "LZ-compress shuffle buckets at encode/spill/wire boundaries (raw fallback per bucket)"),
+    ("ignite.shuffle.fetch.batch.bytes", "1048576", "Streaming frame budget per shuffle.fetch_multi response"),
+    ("ignite.plan.locality", "true", "Place plan reduce tasks on the worker holding most of their input bytes"),
     ("ignite.storage.memory.max", "268435456", "Block store budget (bytes)"),
     ("ignite.storage.spill.dir", "/tmp/mpignite-spill", "Spill directory"),
     ("ignite.artifacts.dir", "artifacts", "AOT HLO artifact directory"),
@@ -57,27 +62,46 @@ impl Default for IgniteConf {
 }
 
 impl IgniteConf {
-    /// Config with built-in defaults only.
+    /// Config with built-in defaults, overlaid with any `MPIGNITE_*`
+    /// environment variables (`ignite.comm.mode` ← `MPIGNITE_COMM_MODE`).
+    /// The env overlay lives here — not only in [`from_env`](Self::from_env)
+    /// — so a whole process (most importantly: the test suite in a CI
+    /// matrix lane) can be steered onto alternate shuffle-plane paths
+    /// like forced compression or a tiny LRU budget without touching
+    /// call sites; explicit `set` calls and file overrides still win.
     pub fn new() -> Self {
         let mut values = BTreeMap::new();
         for (k, v, _) in KNOWN_KEYS {
             values.insert((*k).to_string(), (*v).to_string());
         }
-        IgniteConf { values }
+        let mut conf = IgniteConf { values };
+        conf.apply_env();
+        conf
     }
 
-    /// Defaults, then overrides from `MPIGNITE_*` environment variables
-    /// (`ignite.comm.mode` ← `MPIGNITE_COMM_MODE`).
+    /// Explicit alias of [`new`](Self::new) for call sites that want to
+    /// document their env sensitivity.
     pub fn from_env() -> Self {
-        let mut conf = Self::new();
+        Self::new()
+    }
+
+    /// Overlay `MPIGNITE_*` environment variables over current values.
+    fn apply_env(&mut self) {
+        self.apply_env_from(|name| std::env::var(name).ok());
+    }
+
+    /// The overlay itself, with the variable lookup injected — unit
+    /// tests exercise the mapping through this without mutating the
+    /// process environment (which would leak into every concurrently
+    /// constructed conf, since `new()` reads the env).
+    fn apply_env_from(&mut self, get: impl Fn(&str) -> Option<String>) {
         for (key, _, _) in KNOWN_KEYS {
             let env_key =
                 key.trim_start_matches("ignite.").replace('.', "_").to_uppercase();
-            if let Ok(v) = std::env::var(format!("MPIGNITE_{env_key}")) {
-                conf.values.insert((*key).to_string(), v);
+            if let Some(v) = get(&format!("MPIGNITE_{env_key}")) {
+                self.values.insert((*key).to_string(), v);
             }
         }
-        conf
     }
 
     /// Parse `key = value` lines (mini-TOML subset) over the defaults.
@@ -173,6 +197,9 @@ impl IgniteConf {
         self.get_usize("ignite.broadcast.block.bytes")?;
         self.get_usize("ignite.broadcast.auto.min.bytes")?;
         self.get_usize("ignite.broadcast.memory.bytes")?;
+        self.get_bool("ignite.shuffle.compress")?;
+        self.get_usize("ignite.shuffle.fetch.batch.bytes")?;
+        self.get_bool("ignite.plan.locality")?;
         self.get_duration_ms("ignite.peer.section.timeout.ms")?;
         self.get_usize("ignite.peer.gang.retries")?;
         // Collective algorithm names are validated per key, so a typo'd
@@ -323,6 +350,37 @@ mod tests {
             conf.get_duration_ms("ignite.peer.section.timeout.ms").unwrap()
                 > Duration::from_secs(1)
         );
+    }
+
+    #[test]
+    fn shuffle_tuning_keys_have_sane_defaults() {
+        let conf = IgniteConf::new();
+        // `compress` may be overridden by the CI matrix lane's env, so
+        // only assert it parses as a bool; the rest are lane-independent.
+        conf.get_bool("ignite.shuffle.compress").unwrap();
+        assert!(conf.get_usize("ignite.shuffle.fetch.batch.bytes").unwrap() > 0);
+        conf.get_bool("ignite.plan.locality").unwrap();
+    }
+
+    #[test]
+    fn env_overlay_maps_keys_and_set_still_wins() {
+        // Injected lookup, NOT std::env::set_var: mutating the process
+        // env would leak into every conf that concurrent tests build.
+        let fake = |name: &str| {
+            if name == "MPIGNITE_RPC_CONNECT_TIMEOUT_MS" {
+                Some("1234".to_string())
+            } else {
+                None
+            }
+        };
+        let mut conf = IgniteConf::new();
+        conf.apply_env_from(fake);
+        assert_eq!(conf.get_u64("ignite.rpc.connect.timeout.ms").unwrap(), 1234);
+        // Unknown / unset vars change nothing else.
+        assert_eq!(conf.get_str("ignite.comm.mode").unwrap(), "p2p");
+        // Explicit set (applied after construction) still wins.
+        conf.set("ignite.rpc.connect.timeout.ms", "77");
+        assert_eq!(conf.get_u64("ignite.rpc.connect.timeout.ms").unwrap(), 77);
     }
 
     #[test]

@@ -21,35 +21,60 @@
 //!    to HLO text at build time and executed from Rust via PJRT
 //!    ([`runtime`]); Python is never on the request path.
 //!
-//! ## Shuffle architecture (memory → disk → remote)
+//! ## Shuffle architecture: the tiered fast path (memory → disk → remote)
 //!
 //! Shuffle buckets are **byte-oriented and tiered** ([`shuffle`]): map
 //! tasks encode each reduce-side bucket through the [`ser`] codec and
-//! register it with the engine's [`shuffle::ShuffleManager`], which
+//! register it with the engine's [`shuffle::ShuffleManager`]. Four
+//! mechanisms make the plane fast end-to-end:
 //!
-//! 1. holds encoded buckets **in memory** while the
-//!    `ignite.shuffle.memory.bytes` budget allows (the [`scheduler::Engine`]
-//!    owns the budget),
-//! 2. **spills** over-budget buckets to the engine's per-instance
-//!    [`storage::DiskStore`], keyed by `(shuffle, map, reduce)`, with
-//!    transparent read-back, and
-//! 3. in cluster mode **fetches remote buckets** over the worker-hosted
-//!    `shuffle.fetch` RPC endpoint, locating them through the master's
-//!    map-output table ([`cluster`]).
+//! 1. **Framed block compression** — every stored or wire-shipped
+//!    bucket wears a self-describing frame ([`shuffle::compress`]): with
+//!    `ignite.shuffle.compress`, payloads that shrink carry an in-tree
+//!    LZ77 stream (LZ4-style sequences); incompressible or tiny buckets
+//!    keep a raw frame, so mixed-config clusters interoperate and
+//!    compression can never grow data. One encode at registration cuts
+//!    memory, spill AND network bytes (`shuffle.bytes.{compressed,saved}`).
+//! 2. **LRU memory tier** — buckets stay resident while the
+//!    `ignite.shuffle.memory.bytes` budget allows (the
+//!    [`scheduler::Engine`] owns the budget); under pressure the
+//!    **least-recently-used residents demote** to the engine's
+//!    per-instance [`storage::DiskStore`] (`shuffle.evictions`), keyed by
+//!    `(shuffle, map, reduce)` with transparent read-back — hot buckets
+//!    stay in memory instead of the tier freezing on its first
+//!    residents. Only a bucket larger than the whole budget spills
+//!    directly (`shuffle.spills`).
+//! 3. **Batched streaming fetch** — a reduce task reads its whole input
+//!    through [`shuffle::ShuffleManager::fetch_reduce_bytes`]: local
+//!    tiers first, then ONE `shuffle.fetch_multi` stream per remote
+//!    worker (responses bounded by `ignite.shuffle.fetch.batch.bytes`,
+//!    re-asked until drained), collapsing remote round-trips from
+//!    O(maps × reduces) to O(workers × reduces)
+//!    (`shuffle.fetch.multi.{calls,buckets}`). The single-bucket
+//!    `shuffle.fetch` endpoint remains for point reads.
+//! 4. **Locality-aware reduce placement** — map-output registration
+//!    reports each bucket's framed size, so the master's
+//!    `Master::run_plan` places every reduce task on the live worker
+//!    holding most of its input bytes (`ignite.plan.locality`,
+//!    round-robin tiebreak, gang stages unchanged), turning remote
+//!    fetches into local reads (`plan.tasks.local_bytes_ratio`).
 //!
-//! Reduce tasks read through one API —
-//! [`shuffle::ShuffleManager::fetch_bucket`] — regardless of tier, and
-//! partition assignment uses a fixed-seed [`shuffle::StableHasher`] so
-//! every process in a cluster buckets keys identically. Lost outputs
-//! (any tier) are recomputed from lineage and re-registered through the
-//! same put path. The whole pipeline is instrumented in [`metrics`]
-//! (`shuffle.bytes.spilled`, `shuffle.fetch.latency`,
-//! `shuffle.merge.passes`, ...); `rust/benches/bench_shuffle.rs` compares
-//! the three tiers' read throughput.
+//! Reduce tasks read through tier-transparent APIs
+//! ([`shuffle::ShuffleManager::fetch_bucket`] /
+//! [`shuffle::ShuffleManager::fetch_reduce_bytes`]), and partition
+//! assignment uses a fixed-seed [`shuffle::StableHasher`] so every
+//! process in a cluster buckets keys identically. Lost outputs (any
+//! tier) are recomputed from lineage and re-registered through the same
+//! put path. `rust/benches/bench_shuffle.rs` (E9) compares the tiers'
+//! read throughput with/without compression, per-bucket vs batched
+//! remote fetch, and locality on/off plan jobs.
 //!
-//! Key config: `ignite.shuffle.memory.bytes` (in-memory bucket budget;
-//! `0` forces all-spill), `ignite.shuffle.fetch.timeout.ms` (remote
-//! fetch RPC timeout), `ignite.storage.spill.dir` (spill directory).
+//! Key config: `ignite.shuffle.memory.bytes` (LRU budget; `0` forces
+//! all-spill), `ignite.shuffle.compress` (LZ frames),
+//! `ignite.shuffle.fetch.batch.bytes` (streaming frame budget),
+//! `ignite.shuffle.fetch.timeout.ms` (remote fetch RPC timeout),
+//! `ignite.plan.locality` (byte-aware reduce placement),
+//! `ignite.storage.spill.dir` (spill directory).
 //!
 //! ## Plan IR: distributed RDD execution
 //!
@@ -70,10 +95,13 @@
 //!   stages as usual and ships each stage — encoded plan + task
 //!   assignment — to workers over the `task.run` RPC. Workers decode,
 //!   resolve ops from their registry, run map tasks on their local
-//!   engines (registering map outputs with the master's map-output
-//!   table), and reduce/result tasks pull buckets through `shuffle.fetch`.
-//!   Job completion piggybacks a `shuffle.clear` RPC that prunes the
-//!   master's map-output table and the workers' local buckets.
+//!   engines (registering map outputs — with per-reduce byte sizes — in
+//!   the master's map-output table), report **each task's result as it
+//!   finishes** (`master.plan_result` per task, `plan.task.latency`), and
+//!   reduce/result tasks pull buckets through the batched
+//!   `shuffle.fetch_multi` path. Job completion piggybacks a
+//!   `shuffle.clear` RPC that prunes the master's map-output table and
+//!   the workers' local buckets.
 //!
 //! Which operations are shippable:
 //!

@@ -573,10 +573,13 @@ impl PlanSpec {
                         "shuffle {shuffle_id} not materialized (stage skipped?)"
                     ))
                 })?;
+                // Batched reduce-side read: local tiers first, then ONE
+                // streaming `shuffle.fetch_multi` per remote worker
+                // instead of a round-trip per map output.
+                let buckets = engine.shuffle.fetch_reduce_bytes(*shuffle_id, part, n_maps)?;
                 let mut merged: HashMap<Vec<u8>, (Value, Value)> = HashMap::new();
-                for map_idx in 0..n_maps {
-                    let bucket: Vec<(Value, Value)> =
-                        engine.shuffle.fetch_bucket(*shuffle_id, map_idx, part)?;
+                for framed in &buckets {
+                    let bucket: Vec<(Value, Value)> = crate::shuffle::decode_bucket(framed)?;
                     metrics::global().counter("shuffle.merge.passes").inc();
                     for (k, v) in bucket {
                         let kb = to_bytes(&k);
@@ -703,6 +706,48 @@ impl PlanSpec {
     /// job-end `job.clear` GC.
     pub fn cleanup_ids(&self) -> Vec<u64> {
         self.stages().into_iter().map(|s| s.id).collect()
+    }
+
+    /// The materialized buckets one stage reads **directly**: walking
+    /// from the stage's root — the whole plan for the result stage
+    /// (`None`), shuffle `id`'s parent subtree for that map stage —
+    /// collect the ids of the first `Shuffle`/`PeerOp` boundary on every
+    /// path. Those are the buckets the stage's tasks fetch, and
+    /// therefore what locality-aware placement weighs per worker.
+    /// Empty for source-only stages (nothing to be local *to*).
+    pub fn stage_input_ids(&self, stage: Option<u64>) -> Vec<u64> {
+        let root: &PlanSpec = match stage {
+            None => self,
+            Some(id) => match self.find_shuffle(id) {
+                Some(PlanSpec::Shuffle { parent, .. }) => parent.as_ref(),
+                _ => return Vec::new(),
+            },
+        };
+        let mut out = Vec::new();
+        let mut seen = HashSet::new();
+        root.collect_direct_inputs(&mut out, &mut seen);
+        out
+    }
+
+    fn collect_direct_inputs(&self, out: &mut Vec<u64>, seen: &mut HashSet<u64>) {
+        match self {
+            PlanSpec::Source { .. } | PlanSpec::SourceRef { .. } => {}
+            PlanSpec::Op { parent, .. } => parent.collect_direct_inputs(out, seen),
+            PlanSpec::Union { left, right } => {
+                left.collect_direct_inputs(out, seen);
+                right.collect_direct_inputs(out, seen);
+            }
+            PlanSpec::Shuffle { shuffle_id, .. } => {
+                if seen.insert(*shuffle_id) {
+                    out.push(*shuffle_id);
+                }
+            }
+            PlanSpec::PeerOp { peer_id, .. } => {
+                if seen.insert(*peer_id) {
+                    out.push(*peer_id);
+                }
+            }
+        }
     }
 
     /// Ids of every [`SourceRef`](PlanSpec::SourceRef) in the plan,
@@ -1129,6 +1174,41 @@ mod tests {
         assert!(from_bytes::<PlanSpec>(&[200]).is_err());
         assert!(from_bytes::<OpSpec>(&[200]).is_err());
         assert!(from_bytes::<AggSpec>(&[200]).is_err());
+    }
+
+    #[test]
+    fn stage_input_ids_stop_at_first_boundary() {
+        // source → shuffle 1 → op → shuffle 2 → op (result)
+        let s1 = Arc::new(PlanSpec::Shuffle {
+            shuffle_id: 1,
+            partitions: 2,
+            agg: AggSpec::First,
+            parent: Arc::new(PlanSpec::Source { partitions: vec![vec![Value::I64(1)]] }),
+        });
+        let s2 = PlanSpec::Shuffle {
+            shuffle_id: 2,
+            partitions: 2,
+            agg: AggSpec::First,
+            parent: Arc::new(PlanSpec::Op { op: OpSpec::Identity, parent: s1.clone() }),
+        };
+        let plan = PlanSpec::Op { op: OpSpec::Identity, parent: Arc::new(s2) };
+
+        // The result stage reads shuffle 2's buckets only (shuffle 1 is
+        // behind the boundary); shuffle 2's map stage reads shuffle 1;
+        // shuffle 1's map stage reads sources only.
+        assert_eq!(plan.stage_input_ids(None), vec![2]);
+        assert_eq!(plan.stage_input_ids(Some(2)), vec![1]);
+        assert_eq!(plan.stage_input_ids(Some(1)), Vec::<u64>::new());
+        assert_eq!(plan.stage_input_ids(Some(99)), Vec::<u64>::new(), "unknown stage");
+
+        // A peer section is a boundary too: the result stage of a plan
+        // rooted at a PeerOp reads the peer buckets.
+        let peer = PlanSpec::PeerOp {
+            peer_id: 7,
+            name: "p".into(),
+            parent: Arc::new(PlanSpec::Source { partitions: vec![vec![]] }),
+        };
+        assert_eq!(peer.stage_input_ids(None), vec![7]);
     }
 
     #[test]

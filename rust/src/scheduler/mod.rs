@@ -66,12 +66,19 @@ impl Engine {
             conf.get_usize("ignite.storage.memory.max")?,
             conf.get_str("ignite.storage.spill.dir")?,
         )?;
-        // The engine owns the shuffle memory budget; over-budget buckets
-        // spill into the block manager's per-instance disk store, and
-        // lineage recompute re-registers spilled blocks through the same
-        // put path after a loss.
+        // The engine owns the shuffle memory budget; under pressure the
+        // manager demotes LRU buckets into the block manager's
+        // per-instance disk store, and lineage recompute re-registers
+        // spilled blocks through the same put path after a loss.
+        // Compression and the batched-fetch frame budget ride on the
+        // same conf.
         let shuffle_budget = conf.get_usize("ignite.shuffle.memory.bytes")?;
-        let shuffle = ShuffleManager::new(shuffle_budget, Some(blocks.disk.clone()));
+        let shuffle = ShuffleManager::with_options(
+            shuffle_budget,
+            Some(blocks.disk.clone()),
+            conf.get_bool("ignite.shuffle.compress")?,
+            conf.get_usize("ignite.shuffle.fetch.batch.bytes")?,
+        );
         // Broadcast raw blocks tier the same way: in memory within the
         // `ignite.broadcast.memory.bytes` budget, spilled to the same
         // per-instance disk store past it.

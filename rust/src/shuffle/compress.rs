@@ -1,0 +1,317 @@
+//! Vendored pure-Rust LZ-style block codec for shuffle buckets.
+//!
+//! The vendor set has no compression crate, so this is a small in-tree
+//! LZ77 codec in the LZ4 block style: greedy hash-table matching over a
+//! 64 KiB window, 4-byte minimum matches, and sequences of
+//! `token | literal-run | literals | offset(u16 LE) | match-run`, where
+//! the token packs a 4-bit literal count and a 4-bit `match length - 4`
+//! (value 15 extends through 255-run bytes, exactly like LZ4). The final
+//! sequence carries literals only — the decoder stops when the input is
+//! exhausted after a literal run.
+//!
+//! On top of the raw codec sits the **bucket frame** every stored or
+//! wire-shipped shuffle bucket wears: one tag byte (`FRAME_RAW` /
+//! `FRAME_LZ`), and for compressed payloads a `u32` LE uncompressed
+//! length. [`frame`] falls back to the raw tag whenever compression does
+//! not win (incompressible data must never grow), so a frame is always
+//! self-describing — readers need no config to decode, and clusters with
+//! mixed `ignite.shuffle.compress` settings interoperate.
+
+use crate::error::{IgniteError, Result};
+use std::borrow::Cow;
+
+/// Frame tag: payload follows uncompressed.
+pub const FRAME_RAW: u8 = 0;
+/// Frame tag: `u32` LE uncompressed length, then the LZ stream.
+pub const FRAME_LZ: u8 = 1;
+
+const MIN_MATCH: usize = 4;
+const MAX_OFFSET: usize = 65_535;
+const HASH_BITS: u32 = 13;
+
+#[inline]
+fn hash4(src: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes([src[i], src[i + 1], src[i + 2], src[i + 3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Append a 255-run extension length (LZ4 style).
+fn emit_run(out: &mut Vec<u8>, mut extra: usize) {
+    while extra >= 255 {
+        out.push(255);
+        extra -= 255;
+    }
+    out.push(extra as u8);
+}
+
+fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], offset: usize, match_len: usize) {
+    let lit = literals.len();
+    let m = match_len - MIN_MATCH;
+    out.push(((lit.min(15) as u8) << 4) | m.min(15) as u8);
+    if lit >= 15 {
+        emit_run(out, lit - 15);
+    }
+    out.extend_from_slice(literals);
+    out.extend_from_slice(&(offset as u16).to_le_bytes());
+    if m >= 15 {
+        emit_run(out, m - 15);
+    }
+}
+
+fn emit_trailing_literals(out: &mut Vec<u8>, literals: &[u8]) {
+    if literals.is_empty() {
+        return;
+    }
+    let lit = literals.len();
+    out.push((lit.min(15) as u8) << 4);
+    if lit >= 15 {
+        emit_run(out, lit - 15);
+    }
+    out.extend_from_slice(literals);
+}
+
+/// Compress `src` into the LZ block stream. Always succeeds; worst case
+/// the output is slightly larger than the input (callers gate with
+/// [`frame`], which keeps the raw bytes when compression does not win).
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    let n = src.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    if n < MIN_MATCH + 1 {
+        emit_trailing_literals(&mut out, src);
+        return out;
+    }
+    // Position table over 4-byte prefixes; entries store position + 1 so
+    // 0 means "empty".
+    let mut table = vec![0u32; 1 << HASH_BITS];
+    let limit = n - MIN_MATCH;
+    let mut i = 0usize;
+    let mut anchor = 0usize;
+    while i <= limit {
+        let h = hash4(src, i);
+        let cand = table[h] as usize;
+        table[h] = (i + 1) as u32;
+        if cand > 0 {
+            let cand = cand - 1;
+            let off = i - cand;
+            if off > 0 && off <= MAX_OFFSET && src[cand..cand + MIN_MATCH] == src[i..i + MIN_MATCH]
+            {
+                let mut len = MIN_MATCH;
+                while i + len < n && src[cand + len] == src[i + len] {
+                    len += 1;
+                }
+                emit_sequence(&mut out, &src[anchor..i], off, len);
+                i += len;
+                anchor = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    emit_trailing_literals(&mut out, &src[anchor..]);
+    out
+}
+
+/// Decompress an LZ block stream produced by [`compress`], verifying the
+/// output against `expected_len`. Malformed input is a `Codec` error,
+/// never a panic or an out-of-bounds read.
+pub fn decompress(src: &[u8], expected_len: usize) -> Result<Vec<u8>> {
+    fn err(m: &str) -> IgniteError {
+        IgniteError::Codec(format!("lz block: {m}"))
+    }
+    let mut out = Vec::with_capacity(expected_len);
+    let mut i = 0usize;
+    while i < src.len() {
+        let token = src[i];
+        i += 1;
+        let mut lit = (token >> 4) as usize;
+        if lit == 15 {
+            loop {
+                let b = *src.get(i).ok_or_else(|| err("truncated literal run"))?;
+                i += 1;
+                lit += b as usize;
+                if b != 255 {
+                    break;
+                }
+            }
+        }
+        if i + lit > src.len() {
+            return Err(err("literal run past end of input"));
+        }
+        out.extend_from_slice(&src[i..i + lit]);
+        i += lit;
+        if i == src.len() {
+            break; // final literal-only sequence
+        }
+        if i + 2 > src.len() {
+            return Err(err("truncated match offset"));
+        }
+        let off = u16::from_le_bytes([src[i], src[i + 1]]) as usize;
+        i += 2;
+        if off == 0 || off > out.len() {
+            return Err(err("match offset out of window"));
+        }
+        let mut mlen = (token & 0x0F) as usize + MIN_MATCH;
+        if token & 0x0F == 15 {
+            loop {
+                let b = *src.get(i).ok_or_else(|| err("truncated match run"))?;
+                i += 1;
+                mlen += b as usize;
+                if b != 255 {
+                    break;
+                }
+            }
+        }
+        // Byte-at-a-time copy: offsets smaller than the match length are
+        // legal run encodings and must replicate freshly-written bytes.
+        let start = out.len() - off;
+        for k in 0..mlen {
+            let b = out[start + k];
+            out.push(b);
+        }
+    }
+    if out.len() != expected_len {
+        return Err(err("decompressed length mismatch"));
+    }
+    Ok(out)
+}
+
+/// Wrap an encoded bucket into its storage/wire frame. With
+/// `try_compress`, payloads that shrink (header included) get the
+/// `FRAME_LZ` tag; everything else — compression off, tiny buckets,
+/// incompressible data — ships raw behind `FRAME_RAW`.
+pub fn frame(bytes: &[u8], try_compress: bool) -> Vec<u8> {
+    if try_compress && bytes.len() > 64 && bytes.len() <= u32::MAX as usize {
+        let comp = compress(bytes);
+        if comp.len() + 5 < bytes.len() + 1 {
+            let mut out = Vec::with_capacity(comp.len() + 5);
+            out.push(FRAME_LZ);
+            out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            out.extend_from_slice(&comp);
+            return out;
+        }
+    }
+    let mut out = Vec::with_capacity(bytes.len() + 1);
+    out.push(FRAME_RAW);
+    out.extend_from_slice(bytes);
+    out
+}
+
+/// Recover a bucket's encoded bytes from its frame. Raw frames borrow
+/// (no copy on the hot uncompressed path); compressed frames decompress.
+pub fn unframe(framed: &[u8]) -> Result<Cow<'_, [u8]>> {
+    match framed.first() {
+        Some(&FRAME_RAW) => Ok(Cow::Borrowed(&framed[1..])),
+        Some(&FRAME_LZ) => {
+            if framed.len() < 5 {
+                return Err(IgniteError::Codec("truncated compressed shuffle frame".into()));
+            }
+            let expected =
+                u32::from_le_bytes([framed[1], framed[2], framed[3], framed[4]]) as usize;
+            Ok(Cow::Owned(decompress(&framed[5..], expected)?))
+        }
+        Some(t) => Err(IgniteError::Codec(format!("unknown shuffle frame tag {t}"))),
+        None => Err(IgniteError::Codec("empty shuffle frame".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn roundtrip(data: &[u8]) {
+        let comp = compress(data);
+        let back = decompress(&comp, data.len()).unwrap();
+        assert_eq!(back, data, "lz round trip changed {} bytes", data.len());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_round_trip() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"abc");
+        roundtrip(b"abcd");
+        roundtrip(b"aaaaa");
+    }
+
+    #[test]
+    fn repetitive_input_compresses_well() {
+        let data: Vec<u8> = b"the quick brown fox ".iter().copied().cycle().take(4096).collect();
+        let comp = compress(&data);
+        assert!(comp.len() * 4 < data.len(), "20-byte cycle should shrink 4x+, got {}", comp.len());
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn long_runs_use_extended_lengths() {
+        // > 15 literals and > 19-byte matches exercise the 255-run paths.
+        let mut data = Vec::new();
+        for i in 0..64u8 {
+            data.push(i); // 64 incompressible literals
+        }
+        data.extend(std::iter::repeat(7u8).take(1000)); // one long match run
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn random_input_round_trips() {
+        let mut rng = Xoshiro256::seeded(0xC0FFEE);
+        for len in [1usize, 7, 100, 1000, 70_000] {
+            let data: Vec<u8> = (0..len).map(|_| rng.next_below(256) as u8).collect();
+            roundtrip(&data);
+        }
+    }
+
+    #[test]
+    fn mixed_input_round_trips() {
+        let mut rng = Xoshiro256::seeded(42);
+        let mut data = Vec::new();
+        for _ in 0..200 {
+            if rng.chance(0.5) {
+                data.extend_from_slice(b"key-0000-padding-padding");
+            } else {
+                data.extend((0..rng.range(1, 30)).map(|_| rng.next_below(256) as u8));
+            }
+        }
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn malformed_streams_error_cleanly() {
+        assert!(decompress(&[0xF0], 100).is_err(), "truncated literal run");
+        assert!(decompress(&[0x10], 1).is_err(), "literal past end");
+        // literal + dangling offset byte
+        assert!(decompress(&[0x11, b'x', 0x01], 5).is_err(), "truncated offset");
+        // offset 0 is never valid
+        assert!(decompress(&[0x01, 0x00, 0x00], 5).is_err(), "zero offset");
+        // offset beyond what has been written
+        assert!(decompress(&[0x10, b'x', 0x09, 0x00], 6).is_err(), "offset out of window");
+    }
+
+    #[test]
+    fn frame_prefers_raw_when_compression_does_not_win() {
+        let mut rng = Xoshiro256::seeded(9);
+        let random: Vec<u8> = (0..512).map(|_| rng.next_below(256) as u8).collect();
+        let framed = frame(&random, true);
+        assert_eq!(framed[0], FRAME_RAW, "incompressible data must ship raw");
+        assert_eq!(unframe(&framed).unwrap().as_ref(), &random[..]);
+
+        let text: Vec<u8> = b"pad-pad-pad-".iter().copied().cycle().take(2048).collect();
+        let framed = frame(&text, true);
+        assert_eq!(framed[0], FRAME_LZ);
+        assert!(framed.len() < text.len() / 2);
+        assert_eq!(unframe(&framed).unwrap().as_ref(), &text[..]);
+
+        // Compression disabled: always raw, and always decodable.
+        let framed = frame(&text, false);
+        assert_eq!(framed[0], FRAME_RAW);
+        assert_eq!(unframe(&framed).unwrap().as_ref(), &text[..]);
+    }
+
+    #[test]
+    fn unframe_rejects_garbage() {
+        assert!(unframe(&[]).is_err());
+        assert!(unframe(&[9, 1, 2]).is_err(), "unknown tag");
+        assert!(unframe(&[FRAME_LZ, 1, 0]).is_err(), "truncated header");
+    }
+}

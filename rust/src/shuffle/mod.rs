@@ -7,23 +7,44 @@
 //! tiered**: buckets are encoded through the [`crate::ser`] codec at
 //! registration, held in memory while a per-shuffle byte budget
 //! (`ignite.shuffle.memory.bytes`) allows, **spilled** to the engine's
-//! [`crate::storage::DiskStore`] past the budget, and — when the manager
-//! is wired to a cluster via [`ShuffleNet`] — **fetched from remote
-//! workers** over the `shuffle.fetch` RPC endpoint. Reduce tasks see one
-//! API, [`ShuffleManager::fetch_bucket`], regardless of where the bytes
-//! live (memory → disk → remote).
+//! [`crate::storage::DiskStore`] past it, and — when the manager is wired
+//! to a cluster via [`ShuffleNet`] — **fetched from remote workers** over
+//! RPC. Reduce tasks see one API regardless of where the bytes live
+//! (memory → disk → remote).
+//!
+//! PR 5 made the plane fast end-to-end:
+//!
+//! * **framing + compression** — every stored or wire-shipped bucket
+//!   wears a self-describing [`compress`] frame; with
+//!   `ignite.shuffle.compress` the frame holds an LZ-compressed payload
+//!   (raw fallback when compression does not win), cutting memory, spill
+//!   and network bytes at every boundary with one encode;
+//! * **LRU demotion** — the memory tier no longer freezes its first
+//!   residents: under budget pressure the least-recently-used buckets
+//!   demote to the disk tier (`shuffle.evictions`) so hot buckets stay
+//!   resident instead of forcing every new write straight to disk;
+//! * **batched streaming fetch** — [`ShuffleManager::fetch_reduce_bytes`]
+//!   pulls ALL of a reduce task's missing buckets from each remote worker
+//!   through `shuffle.fetch_multi`, streamed in
+//!   `ignite.shuffle.fetch.batch.bytes` response frames, collapsing
+//!   remote round-trips from O(maps × reduces) to O(workers × reduces);
+//! * **size-reporting registration** — [`ShuffleNet::register`] carries
+//!   each map output's per-reduce framed byte sizes, which is what the
+//!   master's locality-aware reduce placement sums per worker.
 //!
 //! The manager tracks per-shuffle completion so a finished map stage is
 //! never re-run (and can be, if a fault wipes it — lineage recomputation
 //! re-encodes and re-registers the buckets, including spilled ones).
 
+pub mod compress;
+
 use crate::error::{IgniteError, Result};
 use crate::metrics;
 use crate::ser::{from_bytes, to_bytes, Decode, Encode};
 use crate::storage::DiskStore;
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 // ------------------------------------------------------------ hashing --
@@ -196,15 +217,45 @@ impl MapOutputs {
 
 /// Network hooks wiring a [`ShuffleManager`] into a cluster: registration
 /// of completed map outputs with the master's map-output table, lookup of
-/// bucket locations, and the `shuffle.fetch` pull itself. Implemented
-/// over RPC in [`crate::cluster`]; absent in pure local mode.
+/// bucket locations, and the bucket pulls themselves. Implemented over
+/// RPC in [`crate::cluster`]; absent in pure local mode.
 pub trait ShuffleNet: Send + Sync {
     /// Announce that this process holds map output `map_idx` of `shuffle`.
-    fn register(&self, shuffle: u64, map_idx: usize, total_maps: usize) -> Result<()>;
+    /// `bucket_bytes` carries the framed size of each registered bucket
+    /// as `(reduce_idx, bytes)` pairs — the per-worker byte totals the
+    /// master's locality-aware reduce placement sums.
+    fn register(
+        &self,
+        shuffle: u64,
+        map_idx: usize,
+        total_maps: usize,
+        bucket_bytes: &[(usize, usize)],
+    ) -> Result<()>;
     /// Ask the master where every map output of `shuffle` lives.
     fn locate(&self, shuffle: u64) -> Result<MapOutputs>;
-    /// Fetch one bucket's encoded bytes from the worker at `addr`.
+    /// Fetch one bucket's framed bytes from the worker at `addr`.
     fn fetch(&self, addr: &str, shuffle: u64, map_idx: usize, reduce_idx: usize) -> Result<Vec<u8>>;
+    /// Fetch several of one worker's buckets for a single reduce
+    /// partition in one round-trip (`shuffle.fetch_multi`). A response
+    /// frame is bounded by `batch_bytes`, so implementations may return
+    /// fewer entries than requested (always at least one) — the caller
+    /// re-asks for the remainder. `None` bytes mean the holder no longer
+    /// has that bucket. The default implementation degrades to one
+    /// [`fetch`](Self::fetch) per bucket for simple test nets.
+    fn fetch_multi(
+        &self,
+        addr: &str,
+        shuffle: u64,
+        reduce_idx: usize,
+        map_idxs: &[usize],
+        batch_bytes: usize,
+    ) -> Result<Vec<(usize, Option<Vec<u8>>)>> {
+        let _ = batch_bytes;
+        map_idxs
+            .iter()
+            .map(|&m| self.fetch(addr, shuffle, m, reduce_idx).map(|b| (m, Some(b))))
+            .collect()
+    }
     /// This process's own shuffle-serving address (skip self-fetch).
     fn local_addr(&self) -> String;
 }
@@ -217,23 +268,63 @@ fn block_id(shuffle: u64, map_idx: usize, reduce_idx: usize) -> String {
     format!("shuffle-{shuffle}-{map_idx}-{reduce_idx}")
 }
 
-/// Byte-oriented, tiered shuffle block registry (memory → disk → remote).
+/// Decode a framed bucket (see [`compress`]) back into typed rows — the
+/// read-side twin of the encode+frame step in
+/// [`ShuffleManager::put_bucket_bytes`].
+pub fn decode_bucket<T: Decode>(framed: &[u8]) -> Result<Vec<T>> {
+    let payload = compress::unframe(framed)?;
+    from_bytes(&payload)
+}
+
+/// Default streaming frame budget for `shuffle.fetch_multi` responses
+/// (`ignite.shuffle.fetch.batch.bytes`).
+pub const DEFAULT_FETCH_BATCH_BYTES: usize = 1 << 20;
+
+/// One resident bucket: framed bytes plus an LRU clock stamp.
+struct MemBucket {
+    bytes: Arc<Vec<u8>>,
+    last_use: AtomicU64,
+}
+
+/// What the admission path decided to do with overflow, executed after
+/// the buckets lock is released (disk I/O never runs under it).
+enum Overflow {
+    /// Demote these LRU residents to the disk tier.
+    Demote(Vec<(BlockKey, Arc<Vec<u8>>)>),
+    /// The new bucket cannot fit even after demoting everything: spill
+    /// it directly.
+    SpillNew(Vec<u8>),
+}
+
+/// Byte-oriented, tiered shuffle block registry (memory → disk → remote)
+/// with optional LZ block compression and LRU demotion under pressure.
 pub struct ShuffleManager {
-    /// In-memory tier: encoded buckets within the byte budget.
-    buckets: RwLock<HashMap<BlockKey, Arc<Vec<u8>>>>,
-    /// Keys currently spilled to `disk` (bytes live in the DiskStore).
-    spilled: Mutex<HashSet<BlockKey>>,
+    /// In-memory tier: framed buckets within the byte budget.
+    buckets: RwLock<HashMap<BlockKey, MemBucket>>,
+    /// Keys currently on the disk tier, with their framed byte size.
+    spilled: Mutex<HashMap<BlockKey, usize>>,
+    /// Per-(shuffle, map) framed bucket sizes, maintained at put/drop
+    /// time so [`map_done`](ShuffleManager::map_done)'s locality report
+    /// is O(reduces) instead of a scan of every bucket in every tier.
+    /// Demotions don't touch it (the framed bytes are unchanged).
+    sizes: Mutex<HashMap<(u64, usize), HashMap<usize, usize>>>,
     /// Spill tier; `None` in budget-unlimited unit-test setups.
     disk: Option<Arc<DiskStore>>,
     /// In-memory byte budget across all shuffles.
     budget: usize,
     mem_used: AtomicUsize,
+    /// LRU clock for the memory tier.
+    clock: AtomicU64,
+    /// Compress bucket frames (`ignite.shuffle.compress`).
+    compress: bool,
+    /// Streaming frame budget for batched remote fetches.
+    batch_bytes: usize,
     /// Cluster plane; `None` in local mode.
     net: RwLock<Option<Arc<dyn ShuffleNet>>>,
     /// Cached master locate() answers (one RPC per shuffle, not per bucket).
     located: Mutex<HashMap<u64, MapOutputs>>,
     /// Completed map tasks per shuffle.
-    done_maps: Mutex<HashMap<u64, HashSet<usize>>>,
+    done_maps: Mutex<HashMap<u64, std::collections::HashSet<usize>>>,
     /// Shuffles whose map stage has fully completed locally (with map count).
     complete: Mutex<HashMap<u64, usize>>,
 }
@@ -246,15 +337,31 @@ impl Default for ShuffleManager {
 }
 
 impl ShuffleManager {
-    /// A manager holding at most `budget` encoded bytes in memory,
-    /// spilling overflow to `disk` when present.
+    /// A manager holding at most `budget` framed bytes in memory,
+    /// spilling overflow to `disk` when present. Compression off,
+    /// default fetch batching.
     pub fn new(budget: usize, disk: Option<Arc<DiskStore>>) -> Self {
+        ShuffleManager::with_options(budget, disk, false, DEFAULT_FETCH_BATCH_BYTES)
+    }
+
+    /// Full-control constructor: `compress` turns on LZ bucket frames,
+    /// `batch_bytes` bounds each `shuffle.fetch_multi` response frame.
+    pub fn with_options(
+        budget: usize,
+        disk: Option<Arc<DiskStore>>,
+        compress: bool,
+        batch_bytes: usize,
+    ) -> Self {
         ShuffleManager {
             buckets: RwLock::new(HashMap::new()),
-            spilled: Mutex::new(HashSet::new()),
+            spilled: Mutex::new(HashMap::new()),
+            sizes: Mutex::new(HashMap::new()),
             disk,
             budget,
             mem_used: AtomicUsize::new(0),
+            clock: AtomicU64::new(0),
+            compress,
+            batch_bytes: batch_bytes.max(1),
             net: RwLock::new(None),
             located: Mutex::new(HashMap::new()),
             done_maps: Mutex::new(HashMap::new()),
@@ -284,8 +391,13 @@ impl ShuffleManager {
         self.put_bucket_bytes(shuffle, map_idx, reduce_idx, to_bytes(&bucket));
     }
 
-    /// Register an already-encoded bucket. Over-budget buckets spill to
-    /// the disk tier (counted in `shuffle.spills` / `shuffle.bytes.spilled`).
+    /// Register an already-encoded bucket. The bytes are framed (and LZ
+    /// compressed when `ignite.shuffle.compress` wins) before admission,
+    /// so memory, spill and wire all carry the compact form. Admission
+    /// under budget pressure **demotes the least-recently-used resident
+    /// buckets** to the disk tier (`shuffle.evictions`) so recent buckets
+    /// stay hot; only a bucket too large for the whole budget spills
+    /// directly.
     pub fn put_bucket_bytes(
         &self,
         shuffle: u64,
@@ -294,91 +406,231 @@ impl ShuffleManager {
         bytes: Vec<u8>,
     ) {
         let key = (shuffle, map_idx, reduce_idx);
-        let size = bytes.len();
         metrics::global().counter("shuffle.buckets.written").inc();
-        metrics::global().counter("shuffle.bytes.written").add(size as u64);
+        metrics::global().counter("shuffle.bytes.written").add(bytes.len() as u64);
+        let raw_framed_len = bytes.len() + 1;
+        let framed = compress::frame(&bytes, self.compress);
+        drop(bytes);
+        if framed.first() == Some(&compress::FRAME_LZ) {
+            metrics::global().counter("shuffle.bytes.compressed").add(framed.len() as u64);
+            metrics::global()
+                .counter("shuffle.bytes.saved")
+                .add((raw_framed_len - framed.len()) as u64);
+        }
+        let size = framed.len();
+        self.sizes
+            .lock()
+            .unwrap()
+            .entry((shuffle, map_idx))
+            .or_default()
+            .insert(reduce_idx, size);
 
         // Budget admission happens under the buckets write lock so
         // concurrent map tasks cannot all observe a stale `mem_used` and
         // collectively blow past the budget, and a replaced duplicate
-        // (speculative / recomputed put) is always subtracted exactly once.
-        let to_spill = {
+        // (speculative / recomputed put) is always subtracted exactly
+        // once. Disk I/O (demotions, direct spills) runs after release.
+        let overflow = {
             let mut buckets = self.buckets.write().unwrap();
             if let Some(old) = buckets.remove(&key) {
-                self.mem_used.fetch_sub(old.len(), Ordering::Relaxed);
+                self.mem_used.fetch_sub(old.bytes.len(), Ordering::Relaxed);
             }
-            let fits = self
-                .mem_used
-                .load(Ordering::Relaxed)
-                .checked_add(size)
-                .map(|total| total <= self.budget)
-                .unwrap_or(false);
-            if self.disk.is_some() && !fits {
-                Some(bytes)
-            } else {
-                buckets.insert(key, Arc::new(bytes));
-                let used = self.mem_used.fetch_add(size, Ordering::Relaxed) + size;
+            let used = self.mem_used.load(Ordering::Relaxed);
+            let fits = used.checked_add(size).map(|total| total <= self.budget).unwrap_or(false);
+            if fits || self.disk.is_none() {
+                let used = self.insert_locked(&mut buckets, key, Arc::new(framed));
                 metrics::global().gauge("shuffle.mem.used").set(used as i64);
                 None
+            } else {
+                // Pick LRU victims whose combined size frees enough room.
+                let need = (used + size).saturating_sub(self.budget);
+                let mut order: Vec<(u64, BlockKey, usize)> = buckets
+                    .iter()
+                    .map(|(k, b)| (b.last_use.load(Ordering::Relaxed), *k, b.bytes.len()))
+                    .collect();
+                order.sort_unstable();
+                let mut freed = 0usize;
+                let mut victims: Vec<(BlockKey, Arc<Vec<u8>>)> = Vec::new();
+                for (_, vkey, vlen) in order {
+                    if freed >= need {
+                        break;
+                    }
+                    freed += vlen;
+                    victims.push((vkey, buckets.get(&vkey).unwrap().bytes.clone()));
+                }
+                if freed >= need {
+                    // Insert now (briefly over budget); the demotions
+                    // below bring usage back under it.
+                    let used = self.insert_locked(&mut buckets, key, Arc::new(framed));
+                    metrics::global().gauge("shuffle.mem.used").set(used as i64);
+                    Some(Overflow::Demote(victims))
+                } else {
+                    Some(Overflow::SpillNew(framed))
+                }
             }
         };
-        match to_spill {
-            Some(bytes) => {
+        match overflow {
+            None => self.drop_stale_spill(&key),
+            Some(Overflow::Demote(victims)) => {
+                self.drop_stale_spill(&key);
+                for (vkey, vbytes) in victims {
+                    self.demote(vkey, vbytes);
+                }
+            }
+            Some(Overflow::SpillNew(framed)) => {
                 let disk = self.disk.as_ref().expect("spill path implies a disk tier");
                 metrics::global().counter("shuffle.spills").inc();
                 metrics::global().counter("shuffle.bytes.spilled").add(size as u64);
-                if let Err(e) = disk.put_bytes(&block_id(shuffle, map_idx, reduce_idx), &bytes) {
+                if let Err(e) = disk.put_bytes(&block_id(shuffle, map_idx, reduce_idx), &framed) {
                     // Spill I/O failure: keep the bucket in memory (over
                     // budget beats losing data; lineage would recompute,
                     // but we still have the bytes in hand).
                     log::warn!(target: "shuffle", "spill of {key:?} failed ({e}); keeping in memory");
-                    self.insert_mem(key, bytes);
+                    self.insert_mem(key, framed);
                     return;
                 }
-                self.spilled.lock().unwrap().insert(key);
-            }
-            None => {
-                // The bucket now lives in memory; drop any stale spilled
-                // copy a previous registration left on disk.
-                if self.spilled.lock().unwrap().remove(&key) {
-                    if let Some(disk) = &self.disk {
-                        disk.remove(&block_id(shuffle, map_idx, reduce_idx));
-                    }
-                }
+                self.spilled.lock().unwrap().insert(key, size);
             }
         }
+    }
+
+    /// Insert into the memory tier under an already-held write lock,
+    /// stamping the LRU clock; returns the new `mem_used`.
+    fn insert_locked(
+        &self,
+        buckets: &mut HashMap<BlockKey, MemBucket>,
+        key: BlockKey,
+        bytes: Arc<Vec<u8>>,
+    ) -> usize {
+        let size = bytes.len();
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed);
+        if let Some(old) = buckets.insert(key, MemBucket { bytes, last_use: AtomicU64::new(tick) })
+        {
+            self.mem_used.fetch_sub(old.bytes.len(), Ordering::Relaxed);
+        }
+        self.mem_used.fetch_add(size, Ordering::Relaxed) + size
     }
 
     fn insert_mem(&self, key: BlockKey, bytes: Vec<u8>) {
-        let size = bytes.len();
         let mut buckets = self.buckets.write().unwrap();
-        if let Some(old) = buckets.insert(key, Arc::new(bytes)) {
-            self.mem_used.fetch_sub(old.len(), Ordering::Relaxed);
-        }
-        let used = self.mem_used.fetch_add(size, Ordering::Relaxed) + size;
+        let used = self.insert_locked(&mut buckets, key, Arc::new(bytes));
         metrics::global().gauge("shuffle.mem.used").set(used as i64);
     }
 
-    /// Remove one bucket from every local tier, fixing accounting.
-    fn drop_block(&self, key: &BlockKey) {
-        if let Some(old) = self.buckets.write().unwrap().remove(key) {
-            self.mem_used.fetch_sub(old.len(), Ordering::Relaxed);
-        }
-        if self.spilled.lock().unwrap().remove(key) {
+    /// A bucket now lives in memory; drop any stale spilled copy a
+    /// previous registration left on disk.
+    fn drop_stale_spill(&self, key: &BlockKey) {
+        if self.spilled.lock().unwrap().remove(key).is_some() {
             if let Some(disk) = &self.disk {
                 disk.remove(&block_id(key.0, key.1, key.2));
             }
         }
     }
 
+    /// Demote one resident bucket to the disk tier (LRU eviction). The
+    /// disk copy is written and published in the `spilled` map BEFORE the
+    /// memory copy is unlinked, so a concurrent reader always finds the
+    /// bucket in some tier. If a recompute replaced the bucket since the
+    /// victim was chosen, the newer resident copy wins and this demotion
+    /// is rolled back; if a RACING demotion of the same bucket already
+    /// unlinked it, its published disk copy (identical content — puts of
+    /// one key are idempotent by contract) is left alone, so two
+    /// admissions picking the same victim can never delete the bucket
+    /// from every tier.
+    fn demote(&self, key: BlockKey, bytes: Arc<Vec<u8>>) {
+        enum Outcome {
+            Demoted,
+            Superseded,
+            AlreadyGone,
+        }
+        let Some(disk) = &self.disk else { return };
+        if let Err(e) = disk.put_bytes(&block_id(key.0, key.1, key.2), &bytes) {
+            log::warn!(target: "shuffle", "demotion of {key:?} failed ({e}); keeping in memory");
+            return;
+        }
+        self.spilled.lock().unwrap().insert(key, bytes.len());
+        let outcome = {
+            let mut buckets = self.buckets.write().unwrap();
+            match buckets.get(&key) {
+                Some(b) if Arc::ptr_eq(&b.bytes, &bytes) => {
+                    buckets.remove(&key);
+                    Outcome::Demoted
+                }
+                Some(_) => Outcome::Superseded,
+                None => Outcome::AlreadyGone,
+            }
+        };
+        match outcome {
+            Outcome::Demoted => {
+                let used = self.mem_used.fetch_sub(bytes.len(), Ordering::Relaxed) - bytes.len();
+                metrics::global().gauge("shuffle.mem.used").set(used as i64);
+                metrics::global().counter("shuffle.evictions").inc();
+                metrics::global().counter("shuffle.bytes.spilled").add(bytes.len() as u64);
+            }
+            Outcome::Superseded => {
+                // A newer resident copy replaced this bucket mid-demotion:
+                // the resident copy is authoritative — drop our disk copy
+                // so the key is not double-present across tiers.
+                if self.spilled.lock().unwrap().remove(&key).is_some() {
+                    disk.remove(&block_id(key.0, key.1, key.2));
+                }
+            }
+            Outcome::AlreadyGone => {
+                // A racing demotion of this very bucket won: it did the
+                // memory accounting and counted the eviction, and the
+                // spilled entry + disk copy (ours or its — same bytes)
+                // must stay, or the bucket would vanish from every tier.
+            }
+        }
+    }
+
+    /// Remove one bucket from every local tier, fixing accounting.
+    fn drop_block(&self, key: &BlockKey) {
+        if let Some(old) = self.buckets.write().unwrap().remove(key) {
+            self.mem_used.fetch_sub(old.bytes.len(), Ordering::Relaxed);
+        }
+        if self.spilled.lock().unwrap().remove(key).is_some() {
+            if let Some(disk) = &self.disk {
+                disk.remove(&block_id(key.0, key.1, key.2));
+            }
+        }
+        let mut sizes = self.sizes.lock().unwrap();
+        if let Some(per_map) = sizes.get_mut(&(key.0, key.1)) {
+            per_map.remove(&key.2);
+            if per_map.is_empty() {
+                sizes.remove(&(key.0, key.1));
+            }
+        }
+    }
+
+    /// Framed byte size of each of one map task's registered buckets, as
+    /// `(reduce_idx, bytes)` pairs sorted by reduce index — what
+    /// [`map_done`](Self::map_done) reports through the net so the master
+    /// can place reduce tasks near their input bytes. O(reduces): reads
+    /// the put-time size index, never scans the tiers.
+    fn bucket_sizes_of(&self, shuffle: u64, map_idx: usize) -> Vec<(usize, usize)> {
+        let mut sizes: Vec<(usize, usize)> = self
+            .sizes
+            .lock()
+            .unwrap()
+            .get(&(shuffle, map_idx))
+            .map(|per_map| per_map.iter().map(|(r, s)| (*r, *s)).collect())
+            .unwrap_or_default();
+        sizes.sort_unstable();
+        sizes
+    }
+
     /// Mark map task finished (all its buckets registered). In cluster
-    /// mode this first announces the output to the master's map-output
-    /// table so remote reduce tasks can find it; a failed registration
-    /// fails the map task (the scheduler's retry re-runs it), keeping the
-    /// invariant that a locally-complete map output is always locatable.
+    /// mode this first announces the output — with its per-reduce bucket
+    /// sizes — to the master's map-output table so remote reduce tasks
+    /// can find it (and the scheduler can place them near it); a failed
+    /// registration fails the map task (the scheduler's retry re-runs
+    /// it), keeping the invariant that a locally-complete map output is
+    /// always locatable.
     pub fn map_done(&self, shuffle: u64, map_idx: usize, total_maps: usize) -> Result<()> {
         if let Some(net) = self.net() {
-            net.register(shuffle, map_idx, total_maps).map_err(|e| {
+            let sizes = self.bucket_sizes_of(shuffle, map_idx);
+            net.register(shuffle, map_idx, total_maps, &sizes).map_err(|e| {
                 IgniteError::Storage(format!(
                     "map-output registration ({shuffle}, map {map_idx}) failed: {e}"
                 ))
@@ -434,21 +686,24 @@ impl ShuffleManager {
         }
     }
 
-    /// Fetch one bucket, decoded — the single read API for reduce tasks.
-    /// Resolution order: memory, disk (transparent read-back of spills),
-    /// remote worker via `shuffle.fetch`. `Err` when missing everywhere
-    /// (triggers stage recompute through lineage).
+    /// Fetch one bucket, decoded — the single-bucket read API. Resolution
+    /// order: memory, disk (transparent read-back of spills), remote
+    /// worker via `shuffle.fetch`. `Err` when missing everywhere
+    /// (triggers stage recompute through lineage). Reduce tasks merging a
+    /// whole shuffle should prefer
+    /// [`fetch_reduce_bytes`](Self::fetch_reduce_bytes), which batches
+    /// remote pulls per worker.
     pub fn fetch_bucket<T: Decode>(
         &self,
         shuffle: u64,
         map_idx: usize,
         reduce_idx: usize,
     ) -> Result<Vec<T>> {
-        let bytes = self.fetch_bucket_bytes(shuffle, map_idx, reduce_idx)?;
-        from_bytes(&bytes)
+        let framed = self.fetch_bucket_bytes(shuffle, map_idx, reduce_idx)?;
+        decode_bucket(&framed)
     }
 
-    /// Fetch one bucket's encoded bytes through the tier chain.
+    /// Fetch one bucket's framed bytes through the tier chain.
     pub fn fetch_bucket_bytes(
         &self,
         shuffle: u64,
@@ -493,9 +748,116 @@ impl ShuffleManager {
         )))
     }
 
-    /// Read a bucket from the local tiers only (memory, then disk). This
-    /// is what the worker's `shuffle.fetch` endpoint serves — remote
-    /// requests must never recurse back into the remote tier.
+    /// Fetch every map's bucket for reduce partition `reduce_idx`, framed,
+    /// indexed by map — THE reduce-side read path. Local tiers resolve
+    /// first; the remaining buckets are grouped by owning worker and
+    /// pulled through [`ShuffleNet::fetch_multi`] in
+    /// `ignite.shuffle.fetch.batch.bytes`-bounded frames, so remote
+    /// round-trips are O(workers), not O(maps)
+    /// (`shuffle.fetch.multi.{calls,buckets}`).
+    pub fn fetch_reduce_bytes(
+        &self,
+        shuffle: u64,
+        reduce_idx: usize,
+        n_maps: usize,
+    ) -> Result<Vec<Arc<Vec<u8>>>> {
+        metrics::global().counter("shuffle.buckets.read").add(n_maps as u64);
+        let mut out: Vec<Option<Arc<Vec<u8>>>> = (0..n_maps)
+            .map(|m| self.local_bucket_bytes(shuffle, m, reduce_idx))
+            .collect();
+        let missing: Vec<usize> =
+            out.iter().enumerate().filter(|(_, b)| b.is_none()).map(|(m, _)| m).collect();
+        if !missing.is_empty() {
+            let net = self.net().ok_or_else(|| {
+                IgniteError::Storage(format!(
+                    "missing shuffle buckets {missing:?} of ({shuffle}, reduce {reduce_idx})"
+                ))
+            })?;
+            let outputs = self.locate(shuffle).ok_or_else(|| {
+                IgniteError::Storage(format!("shuffle {shuffle} has no map-output locations"))
+            })?;
+            let local = net.local_addr();
+            // Group missing maps by owning worker (one fetch_multi stream
+            // per worker), preserving map order within each group.
+            let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+            for m in missing {
+                let addr = outputs.addr_of(m).ok_or_else(|| {
+                    IgniteError::Storage(format!("no location for map {m} of shuffle {shuffle}"))
+                })?;
+                if addr == local {
+                    return Err(IgniteError::Storage(format!(
+                        "bucket ({shuffle}, map {m}, reduce {reduce_idx}) missing locally"
+                    )));
+                }
+                match groups.iter_mut().find(|g| g.0.as_str() == addr) {
+                    Some((_, idxs)) => idxs.push(m),
+                    None => groups.push((addr.to_string(), vec![m])),
+                }
+            }
+            for (addr, mut idxs) in groups {
+                while !idxs.is_empty() {
+                    let t0 = std::time::Instant::now();
+                    let got = match net.fetch_multi(
+                        &addr,
+                        shuffle,
+                        reduce_idx,
+                        &idxs,
+                        self.batch_bytes,
+                    ) {
+                        Ok(got) => got,
+                        Err(e) => {
+                            // Stale location (worker died): drop the cache
+                            // so the stage retry re-asks the master.
+                            self.located.lock().unwrap().remove(&shuffle);
+                            return Err(e);
+                        }
+                    };
+                    metrics::global().counter("shuffle.remote.fetches").inc();
+                    metrics::global().counter("shuffle.fetch.multi.calls").inc();
+                    metrics::global().histogram("shuffle.fetch.latency").record(t0.elapsed());
+                    let before = idxs.len();
+                    for (m, bytes) in got {
+                        match bytes {
+                            Some(bytes) => {
+                                metrics::global()
+                                    .counter("shuffle.remote.bytes")
+                                    .add(bytes.len() as u64);
+                                metrics::global().counter("shuffle.fetch.multi.buckets").inc();
+                                idxs.retain(|&x| x != m);
+                                if m < out.len() {
+                                    out[m] = Some(Arc::new(bytes));
+                                }
+                            }
+                            None => {
+                                self.located.lock().unwrap().remove(&shuffle);
+                                return Err(IgniteError::Storage(format!(
+                                    "worker {addr} no longer holds bucket \
+                                     ({shuffle}, map {m}, reduce {reduce_idx})"
+                                )));
+                            }
+                        }
+                    }
+                    if idxs.len() == before {
+                        self.located.lock().unwrap().remove(&shuffle);
+                        return Err(IgniteError::Storage(format!(
+                            "fetch_multi from {addr} made no progress \
+                             (shuffle {shuffle}, reduce {reduce_idx})"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(out
+            .into_iter()
+            .map(|b| b.expect("every bucket resolved above"))
+            .collect())
+    }
+
+    /// Read a bucket's framed bytes from the local tiers only (memory,
+    /// then disk), touching the LRU clock on a memory hit. This is what
+    /// the worker's `shuffle.fetch` / `shuffle.fetch_multi` endpoints
+    /// serve — remote requests must never recurse back into the remote
+    /// tier, and the wire carries the framed (possibly compressed) form.
     pub fn local_bucket_bytes(
         &self,
         shuffle: u64,
@@ -503,10 +865,11 @@ impl ShuffleManager {
         reduce_idx: usize,
     ) -> Option<Arc<Vec<u8>>> {
         let key = (shuffle, map_idx, reduce_idx);
-        if let Some(bytes) = self.buckets.read().unwrap().get(&key) {
-            return Some(bytes.clone());
+        if let Some(b) = self.buckets.read().unwrap().get(&key) {
+            b.last_use.store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+            return Some(b.bytes.clone());
         }
-        if self.spilled.lock().unwrap().contains(&key) {
+        if self.spilled.lock().unwrap().contains_key(&key) {
             if let Some(disk) = &self.disk {
                 if let Some(bytes) = disk.get_bytes(&block_id(shuffle, map_idx, reduce_idx)) {
                     metrics::global().counter("shuffle.spill.readbacks").inc();
@@ -525,7 +888,7 @@ impl ShuffleManager {
             .read()
             .unwrap()
             .keys()
-            .chain(self.spilled.lock().unwrap().iter())
+            .chain(self.spilled.lock().unwrap().keys())
             .filter(|(s, _, _)| *s == shuffle)
             .copied()
             .collect();
@@ -546,7 +909,7 @@ impl ShuffleManager {
             .read()
             .unwrap()
             .keys()
-            .chain(self.spilled.lock().unwrap().iter())
+            .chain(self.spilled.lock().unwrap().keys())
             .filter(|(s, m, _)| *s == shuffle && *m == map_idx)
             .copied()
             .collect();
@@ -565,12 +928,12 @@ impl ShuffleManager {
         self.buckets.read().unwrap().len() + self.spilled.lock().unwrap().len()
     }
 
-    /// Buckets currently spilled to disk.
+    /// Buckets currently on the disk tier.
     pub fn spilled_count(&self) -> usize {
         self.spilled.lock().unwrap().len()
     }
 
-    /// Encoded bytes currently held in memory.
+    /// Framed bytes currently held in memory.
     pub fn mem_used(&self) -> usize {
         self.mem_used.load(Ordering::Relaxed)
     }
@@ -582,6 +945,10 @@ mod tests {
 
     fn disk() -> Arc<DiskStore> {
         Arc::new(DiskStore::new("/tmp/mpignite-test-shuffle").unwrap())
+    }
+
+    fn counter(name: &str) -> u64 {
+        metrics::global().counter(name).get()
     }
 
     #[test]
@@ -708,13 +1075,13 @@ mod tests {
 
     #[test]
     fn buckets_spill_past_budget_then_clear() {
-        // ~each encoded bucket is >8 bytes; a 64-byte budget takes a few
-        // then spills the rest.
+        // ~each framed bucket is >8 bytes; a 64-byte budget keeps a few
+        // resident and moves the rest to disk (demotion or direct spill).
         let sm = ShuffleManager::new(64, Some(disk()));
         for m in 0..16usize {
             sm.put_bucket(8, m, 0, vec![m as u64, 1, 2, 3]);
         }
-        assert!(sm.spilled_count() > 0, "over-budget buckets must spill");
+        assert!(sm.spilled_count() > 0, "over-budget buckets must hit the disk tier");
         assert!(sm.mem_used() <= 64, "memory stays within budget");
         for m in 0..16usize {
             let b: Vec<u64> = sm.fetch_bucket(8, m, 0).unwrap();
@@ -724,6 +1091,79 @@ mod tests {
         assert_eq!(sm.bucket_count(), 0);
         assert_eq!(sm.spilled_count(), 0);
         assert_eq!(sm.mem_used(), 0);
+    }
+
+    #[test]
+    fn lru_demotes_cold_buckets_not_new_writes() {
+        // Budget fits ~2 of 3 equal-size buckets. After touching A, a
+        // third write must demote the cold B — not spill the new C.
+        let payload = |tag: u64| vec![tag; 6]; // ~ >24 framed bytes each
+        let one_size = {
+            let probe = ShuffleManager::default();
+            probe.put_bucket(1, 0, 0, payload(0));
+            probe.mem_used()
+        };
+        let sm = ShuffleManager::new(one_size * 2, Some(disk()));
+        sm.put_bucket(10, 0, 0, payload(1)); // A
+        sm.put_bucket(10, 1, 0, payload(2)); // B
+        assert_eq!(sm.spilled_count(), 0, "both fit");
+        // Touch A so B becomes the LRU victim.
+        assert_eq!(sm.fetch_bucket::<u64>(10, 0, 0).unwrap(), payload(1));
+        let evictions_before = counter("shuffle.evictions");
+        sm.put_bucket(10, 2, 0, payload(3)); // C demotes B
+        assert_eq!(sm.spilled_count(), 1, "exactly one bucket demoted");
+        assert!(counter("shuffle.evictions") > evictions_before);
+        assert!(sm.mem_used() <= one_size * 2, "demotion restored the budget");
+        // B reads back from disk; A and C still resident.
+        let readbacks_before = counter("shuffle.spill.readbacks");
+        assert_eq!(sm.fetch_bucket::<u64>(10, 1, 0).unwrap(), payload(2));
+        assert!(counter("shuffle.spill.readbacks") > readbacks_before, "B was the victim");
+        assert_eq!(sm.fetch_bucket::<u64>(10, 0, 0).unwrap(), payload(1));
+        assert_eq!(sm.fetch_bucket::<u64>(10, 2, 0).unwrap(), payload(3));
+    }
+
+    #[test]
+    fn oversized_bucket_spills_directly_even_after_demoting() {
+        let sm = ShuffleManager::new(48, Some(disk()));
+        sm.put_bucket(11, 0, 0, vec![1u64, 2]);
+        // Far larger than the whole budget: demoting everything cannot
+        // make room, so it must take the direct-spill path.
+        sm.put_bucket(11, 1, 0, (0..64u64).collect::<Vec<u64>>());
+        let b: Vec<u64> = sm.fetch_bucket(11, 1, 0).unwrap();
+        assert_eq!(b.len(), 64);
+        assert!(sm.spilled_count() >= 1);
+        assert!(sm.mem_used() <= 48);
+    }
+
+    #[test]
+    fn compression_shrinks_storage_and_round_trips() {
+        let rows: Vec<String> =
+            (0..64).map(|i| format!("key-{:03}-padding-padding-padding", i % 4)).collect();
+        let raw = ShuffleManager::default();
+        raw.put_bucket(12, 0, 0, rows.clone());
+        let raw_size = raw.mem_used();
+
+        let saved_before = counter("shuffle.bytes.saved");
+        let lz = ShuffleManager::with_options(usize::MAX, None, true, DEFAULT_FETCH_BATCH_BYTES);
+        lz.put_bucket(12, 0, 0, rows.clone());
+        assert!(
+            lz.mem_used() * 2 < raw_size,
+            "repetitive keys must compress ({} vs {raw_size})",
+            lz.mem_used()
+        );
+        assert!(counter("shuffle.bytes.saved") > saved_before);
+        let back: Vec<String> = lz.fetch_bucket(12, 0, 0).unwrap();
+        assert_eq!(back, rows, "compressed bucket decodes bit-identically");
+    }
+
+    #[test]
+    fn compressed_spill_and_readback() {
+        let rows: Vec<String> = (0..64).map(|i| format!("value-{:02}-padding", i % 8)).collect();
+        let sm = ShuffleManager::with_options(0, Some(disk()), true, DEFAULT_FETCH_BATCH_BYTES);
+        sm.put_bucket(13, 0, 0, rows.clone());
+        assert_eq!(sm.spilled_count(), 1);
+        let back: Vec<String> = sm.fetch_bucket(13, 0, 0).unwrap();
+        assert_eq!(back, rows);
     }
 
     #[test]
@@ -748,7 +1188,7 @@ mod tests {
     }
 
     impl ShuffleNet for OneBucketNet {
-        fn register(&self, _s: u64, _m: usize, _t: usize) -> Result<()> {
+        fn register(&self, _s: u64, _m: usize, _t: usize, _b: &[(usize, usize)]) -> Result<()> {
             Ok(())
         }
 
@@ -774,7 +1214,9 @@ mod tests {
     fn remote_tier_fetches_missing_buckets() {
         let sm = ShuffleManager::default();
         let net = Arc::new(OneBucketNet {
-            bytes: to_bytes(&vec![(7u64, 70u64)]),
+            // The wire always carries framed bytes (what the serving
+            // worker's local_bucket_bytes returns).
+            bytes: compress::frame(&to_bytes(&vec![(7u64, 70u64)]), false),
             fetches: AtomicUsize::new(0),
         });
         sm.set_net(net.clone());
@@ -784,5 +1226,83 @@ mod tests {
         assert_eq!(net.fetches.load(Ordering::SeqCst), 1);
         // map_count resolves through locate() for remote-only shuffles.
         assert_eq!(sm.map_count(11), Some(1));
+    }
+
+    /// A net that streams at most one bucket per `fetch_multi` frame —
+    /// the smallest legal response — to exercise the client's re-ask loop.
+    struct OnePerFrameNet {
+        buckets: HashMap<usize, Vec<u8>>, // map_idx → framed bytes
+        total_maps: usize,
+        calls: AtomicUsize,
+    }
+
+    impl ShuffleNet for OnePerFrameNet {
+        fn register(&self, _s: u64, _m: usize, _t: usize, _b: &[(usize, usize)]) -> Result<()> {
+            Ok(())
+        }
+
+        fn locate(&self, _s: u64) -> Result<MapOutputs> {
+            Ok(MapOutputs {
+                total_maps: self.total_maps,
+                locations: (0..self.total_maps).map(|m| (m, "peer:1".to_string())).collect(),
+            })
+        }
+
+        fn fetch(&self, _a: &str, _s: u64, m: usize, _r: usize) -> Result<Vec<u8>> {
+            self.buckets
+                .get(&m)
+                .cloned()
+                .ok_or_else(|| IgniteError::Storage("no bucket".into()))
+        }
+
+        fn fetch_multi(
+            &self,
+            _addr: &str,
+            _shuffle: u64,
+            _reduce_idx: usize,
+            map_idxs: &[usize],
+            _batch_bytes: usize,
+        ) -> Result<Vec<(usize, Option<Vec<u8>>)>> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            let m = map_idxs[0];
+            Ok(vec![(m, self.buckets.get(&m).cloned())])
+        }
+
+        fn local_addr(&self) -> String {
+            "self:0".to_string()
+        }
+    }
+
+    #[test]
+    fn fetch_reduce_streams_frames_until_all_buckets_arrive() {
+        let sm = ShuffleManager::default();
+        sm.put_bucket(14, 1, 0, vec![100u64]); // map 1 is already local
+        let net = Arc::new(OnePerFrameNet {
+            buckets: (0..4usize)
+                .filter(|&m| m != 1)
+                .map(|m| (m, compress::frame(&to_bytes(&vec![m as u64]), false)))
+                .collect(),
+            total_maps: 4,
+            calls: AtomicUsize::new(0),
+        });
+        sm.set_net(net.clone());
+        let multi_before = counter("shuffle.fetch.multi.buckets");
+        let framed = sm.fetch_reduce_bytes(14, 0, 4).unwrap();
+        assert_eq!(framed.len(), 4);
+        for (m, f) in framed.iter().enumerate() {
+            let rows: Vec<u64> = decode_bucket(f).unwrap();
+            let want = if m == 1 { 100 } else { m as u64 };
+            assert_eq!(rows, vec![want], "map {m}");
+        }
+        // One frame per missing bucket with this tiny-frame net: the
+        // client kept re-asking until the stream drained.
+        assert_eq!(net.calls.load(Ordering::SeqCst), 3);
+        assert_eq!(counter("shuffle.fetch.multi.buckets") - multi_before, 3);
+    }
+
+    #[test]
+    fn fetch_reduce_missing_everywhere_is_an_error() {
+        let sm = ShuffleManager::default();
+        assert!(sm.fetch_reduce_bytes(15, 0, 2).is_err());
     }
 }

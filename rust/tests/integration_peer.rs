@@ -48,6 +48,19 @@ fn register_ops() {
             }
             Ok(centroids.into_iter().map(Value::F64Vec).collect())
         });
+        // Splits the gang's communicator and rings a LARGE payload
+        // through the DERIVED communicator only — the split protocol's
+        // own messages are tiny, so the per-worker peer-byte assertions
+        // below can only pass if derived contexts keep the peer flag.
+        register_peer_op("peer.test.split_exchange", |comm, rows| {
+            let sub = comm.split(0, comm.rank() as i64)?;
+            let payload = vec![sub.rank() as f64; 2048]; // ~16 KiB encoded
+            let next = (sub.rank() + 1) % sub.size();
+            let prev = (sub.rank() + sub.size() - 1) % sub.size();
+            sub.send(next, 9, Value::F64Vec(payload))?;
+            let _: Value = sub.receive(prev as i64, 9)?;
+            Ok(rows)
+        });
     });
 }
 
@@ -151,6 +164,33 @@ fn kmeans_peer_section_runs_distributed_with_in_stage_allreduce() {
     // Job-end GC covers peer ids like shuffle ids.
     assert_eq!(master.shuffle_table_len(), 0, "job.clear pruned the peer outputs");
     wait_workers_drained(&workers);
+    master.shutdown();
+}
+
+#[test]
+fn split_traffic_inside_peer_section_keeps_byte_accounting() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    register_ops();
+    let c = conf();
+    let (sc, workers) = setup(&c, 2);
+    let master = sc.master().unwrap().clone();
+
+    let sent_before: Vec<u64> = workers.iter().map(|w| w.peer_bytes_sent()).collect();
+    let got = sc.peer_rdd(points(), 2, "peer.test.split_exchange").collect().unwrap();
+    assert_eq!(got.len(), points().len(), "split_exchange passes rows through");
+
+    // Each rank lives on its own worker and rings ~16 KiB through the
+    // communicator DERIVED by split(); the split protocol itself moves
+    // <1 KiB. Both workers must therefore show multi-KiB peer-byte
+    // deltas — which requires the derived context to keep the peer flag.
+    for (i, w) in workers.iter().enumerate() {
+        let sent = w.peer_bytes_sent() - sent_before[i];
+        assert!(
+            sent > 8_000,
+            "worker {} sent only {sent} peer bytes: split dropped the peer flag",
+            w.worker_id
+        );
+    }
     master.shutdown();
 }
 

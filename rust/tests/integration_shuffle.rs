@@ -1,18 +1,32 @@
-//! Integration tests for the tiered shuffle pipeline (PR 1): a
-//! cluster-mode `reduce_by_key` whose reduce tasks pull buckets from a
-//! *different worker* over the `shuffle.fetch` RPC endpoint, and a local
-//! job with the memory budget forced to zero so every bucket spills to
-//! the `DiskStore` and is read back — both compared against the pure
-//! in-memory path.
+//! Integration tests for the tiered shuffle pipeline: a cluster-mode
+//! `reduce_by_key` whose reduce tasks pull buckets from a *different
+//! worker* over the shuffle RPC endpoints, a local job with the memory
+//! budget forced to zero so every bucket spills to the `DiskStore` and
+//! is read back — both compared against the pure in-memory path — and
+//! the PR 5 fast-path acceptance: a 2-worker 4-map × 4-reduce plan job
+//! whose remote round-trips are batched (`shuffle.fetch_multi` ≤
+//! workers × reduces, down from maps × reduces), whose tiny memory
+//! budget forces LRU demotions, and whose compressed/batched/evicting
+//! result is bit-identical to the plain path.
 
 use mpignite::cluster::{Master, Worker};
 use mpignite::config::IgniteConf;
-use mpignite::rdd::{ParallelCollectionNode, RddNode, ShuffledNode};
+use mpignite::rdd::{AggSpec, ParallelCollectionNode, RddNode, ShuffledNode};
+use mpignite::ser::Value;
 use mpignite::shuffle::HashPartitioner;
 use mpignite::IgniteContext;
 use std::collections::{HashMap, HashSet};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Serializes the cluster tests in this binary: they assert exact or
+/// upper-bounded deltas of process-global shuffle metrics, which
+/// interleaved cluster tests would skew.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn metric(name: &str) -> u64 {
+    mpignite::metrics::global().counter(name).get()
+}
 
 fn conf() -> IgniteConf {
     let mut c = IgniteConf::new();
@@ -64,6 +78,7 @@ fn wordcount_node(shuffle_id: u64) -> ShuffledNode<String, u64> {
 
 #[test]
 fn cluster_reduce_fetches_buckets_from_remote_worker() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
     let c = conf();
     let master = Master::start(&c, 0).unwrap();
     let worker_a = Worker::start(&c, master.address()).unwrap();
@@ -124,6 +139,127 @@ fn cluster_reduce_fetches_buckets_from_remote_worker() {
     assert_eq!(merged, local, "remote-fetch result identical to in-memory path");
 
     master.shutdown();
+}
+
+/// 1200 pair rows over 300 distinct padded keys: enough byte volume that
+/// a tiny worker budget forces LRU demotions, repetitive enough that LZ
+/// compression wins, and every key summed across all 4 map partitions so
+/// the aggregation is real.
+fn plan_rows() -> Vec<Value> {
+    (0..1200)
+        .map(|i| {
+            Value::List(vec![
+                Value::Str(format!("key-{:03}-padding-padding", i % 300)),
+                Value::I64(i as i64),
+            ])
+        })
+        .collect()
+}
+
+/// Collected `List([Str, I64])` rows as a key → summed-value map.
+fn to_map(rows: Vec<Value>) -> HashMap<String, i64> {
+    let mut out = HashMap::new();
+    for row in rows {
+        match row {
+            Value::List(kv) if kv.len() == 2 => match (&kv[0], &kv[1]) {
+                (Value::Str(k), Value::I64(v)) => {
+                    assert!(out.insert(k.clone(), *v).is_none(), "duplicate key {k}");
+                }
+                other => panic!("unexpected pair {other:?}"),
+            },
+            other => panic!("unexpected row {other:?}"),
+        }
+    }
+    out
+}
+
+/// Run the 4-map × 4-reduce plan wordcount on a fresh 2-worker cluster
+/// built from `c`, returning the result map and the
+/// `shuffle.fetch.multi.calls` delta the job produced.
+fn run_cluster_plan_job(c: &IgniteConf) -> (HashMap<String, i64>, u64) {
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let _workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(c, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    let multi_before = metric("shuffle.fetch.multi.calls");
+    let got = sc
+        .parallelize_values_with(plan_rows(), 4)
+        .reduce_by_key(4, AggSpec::SumI64)
+        .collect()
+        .unwrap();
+    let multi = metric("shuffle.fetch.multi.calls") - multi_before;
+    master.shutdown();
+    (to_map(got), multi)
+}
+
+#[test]
+fn plan_job_batches_fetches_and_evicts_under_pressure_bit_identically() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+
+    // Reference: the plain single-process path (no cluster, default
+    // tiers) — what the compressed/batched/evicting run must reproduce.
+    let local = IgniteContext::local(4);
+    let want = to_map(
+        local
+            .parallelize_values_with(plan_rows(), 4)
+            .reduce_by_key(4, AggSpec::SumI64)
+            .collect()
+            .unwrap(),
+    );
+    assert_eq!(want.len(), 300);
+
+    let mut c = conf();
+    c.set("ignite.shuffle.compress", "true");
+    // Tiny budget — bigger than any single ~1-2 KiB bucket but far
+    // smaller than a worker's 8-bucket share — so admission must demote
+    // LRU residents instead of freezing the tier (a budget below the
+    // single-bucket size would take the direct-spill path and never
+    // evict).
+    c.set("ignite.shuffle.memory.bytes", "3000");
+
+    let fetches_before = metric("shuffle.remote.fetches");
+    let evictions_before = metric("shuffle.evictions");
+    let saved_before = metric("shuffle.bytes.saved");
+
+    let (got, multi_calls) = run_cluster_plan_job(&c);
+    assert_eq!(got, want, "compressed/batched/evicting result must be bit-identical");
+
+    // Batched fetch: remote round-trips are multi-calls now, bounded by
+    // workers × reduces (2 × 4 = 8) instead of maps × reduces (16).
+    let fetched = metric("shuffle.remote.fetches") - fetches_before;
+    assert!(fetched >= 1, "reduce tasks must fetch across workers");
+    assert!(fetched <= 8, "remote round-trips must be <= workers x reduces, got {fetched}");
+    assert!(multi_calls >= 1, "the batched endpoint must carry the job");
+
+    // LRU pressure: resident buckets were demoted, not just new writes
+    // spilled; compression saved real bytes on the way.
+    assert!(metric("shuffle.evictions") > evictions_before, "tiny budget must demote buckets");
+    assert!(metric("shuffle.bytes.saved") > saved_before, "padded keys must compress");
+}
+
+#[test]
+fn fetch_batch_frame_size_changes_round_trips_not_results() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+
+    // batch.bytes=1: every fetch_multi frame carries exactly one bucket
+    // (the server always includes at least one), so the client re-asks
+    // once per remote bucket — the per-bucket baseline. The default
+    // frame budget carries a whole worker's share per round-trip.
+    let mut tiny = conf();
+    tiny.set("ignite.shuffle.fetch.batch.bytes", "1");
+    let (got_tiny, calls_tiny) = run_cluster_plan_job(&tiny);
+
+    let batched = conf();
+    let (got_batched, calls_batched) = run_cluster_plan_job(&batched);
+
+    assert_eq!(got_tiny, got_batched, "frame size must not change results");
+    assert!(calls_tiny >= 1 && calls_batched >= 1);
+    assert!(
+        calls_tiny > calls_batched,
+        "one-bucket frames must cost more round-trips ({calls_tiny} vs {calls_batched})"
+    );
 }
 
 #[test]

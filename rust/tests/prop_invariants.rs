@@ -354,6 +354,46 @@ fn prop_reduce_by_key_identical_across_spill_budgets() {
     });
 }
 
+#[test]
+fn prop_results_invariant_under_compression_and_lru_budgets() {
+    // The whole shuffle fast path must be invisible to results:
+    // compression on/off × LRU memory budget {0 = all-spill, tiny =
+    // forced eviction churn, usize::MAX = never spill} all produce
+    // bit-identical reduce_by_key output. (Batched vs per-bucket remote
+    // fetch is the cluster-mode leg of this invariant, covered in
+    // integration_shuffle.rs.)
+    let gen = VecGen { inner: IntGen { lo: 0, hi: 400 }, max_len: 120 };
+    check(cfg(6), &gen, |data| {
+        let pairs: Vec<(i64, i64)> = data.iter().map(|&x| (x % 9, x)).collect();
+        let budgets = ["0".to_string(), "512".to_string(), usize::MAX.to_string()];
+        let mut results = Vec::new();
+        for compress in ["false", "true"] {
+            for budget in &budgets {
+                let mut conf = IgniteConf::new();
+                conf.set("ignite.worker.slots", "4");
+                conf.set("ignite.shuffle.compress", compress);
+                conf.set("ignite.shuffle.memory.bytes", budget.clone());
+                let sc = IgniteContext::with_conf(conf).map_err(|e| e.to_string())?;
+                let got = sc
+                    .parallelize_with(pairs.clone(), 5)
+                    .reduce_by_key(3, |a, b| a + b)
+                    .collect_map()
+                    .map_err(|e| e.to_string())?;
+                results.push((compress, budget.clone(), got));
+            }
+        }
+        let (_, _, reference) = &results[0];
+        for (compress, budget, got) in &results[1..] {
+            if got != reference {
+                return Err(format!(
+                    "compress={compress} budget={budget} diverged: {got:?} vs {reference:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 // ------------------------------------------------------- partitioner --
 
 #[test]
