@@ -73,6 +73,22 @@ fn main() -> Result<()> {
         assert_ne!(dup.context_id(), comm.context_id());
         // MPI_Iprobe (nothing pending on this fresh dup)
         assert_eq!(dup.probe(mpignite::comm::ANY_SOURCE, mpignite::comm::ANY_TAG)?, None);
+        // MPI_Iallreduce / MPI_Ibcast: handles first, results on wait.
+        let ar = comm.i_all_reduce(rank as i64, |a, b| a + b)?;
+        let bc = comm.i_broadcast(0, if rank == 0 { Some(41i64) } else { None })?;
+        assert_eq!(ar.wait()?, 6);
+        assert_eq!(bc.wait()?, 41);
+        // MPI_Win_create / MPI_Put / MPI_Win_fence / MPI_Win_free:
+        // everyone writes its rank into the next rank's exposed region.
+        let win = comm.window(vec![0u8; 4])?;
+        win.put((rank + 1) % size, 0, &[rank as u8])?;
+        win.fence()?;
+        assert_eq!(win.snapshot()[0] as usize, (rank + size - 1) % size);
+        // MPI_Get: read the previous rank's region one-sidedly.
+        let got = win.get((rank + size - 1) % size, 0, 1)?;
+        assert_eq!(got[0] as usize, (rank + size + size - 2) % size);
+        win.fence()?;
+        win.free()?;
         Ok(true)
     })?;
     assert!(checks.iter().all(|&c| c));
@@ -99,6 +115,13 @@ fn main() -> Result<()> {
         ("comm.all_to_all::<T>(data)", "MPI_Alltoall", "extension"),
         ("comm.dup()", "MPI_Comm_dup", "extension"),
         ("comm.probe(src, tag)", "MPI_Iprobe", "extension"),
+        ("comm.i_all_reduce::<T>(data, f) -> CommFuture<T>", "MPI_Iallreduce", "extension"),
+        ("comm.i_broadcast::<T>(root, data) -> CommFuture<T>", "MPI_Ibcast", "extension"),
+        ("comm.window(region) -> Window", "MPI_Win_create", "extension"),
+        ("window.put(rank, offset, bytes)", "MPI_Put", "extension"),
+        ("window.get(rank, offset, len) -> Vec<u8>", "MPI_Get", "extension"),
+        ("window.fence()", "MPI_Win_fence", "extension"),
+        ("window.free()", "MPI_Win_free", "extension"),
     ];
     let mut t = Table::new(vec!["MPIgnite-RS", "MPI", "status"]);
     for (ours, mpi, status) in rows {
@@ -148,6 +171,19 @@ fn main() -> Result<()> {
     assert!(!st.is_empty(), "shuffle config keys must exist");
     println!("\nShuffle plane — ignite.shuffle.* (and plan placement) configuration:\n");
     print!("{}", st.render());
+
+    // The comm-plane wire surface: the zero-copy send toggle
+    // (`ignite.rpc.*`) and the one-sided window deadline
+    // (`ignite.comm.window.*`) — again straight from KNOWN_KEYS.
+    let mut ct = Table::new(vec!["key", "default", "meaning"]);
+    for (key, default, meaning) in mpignite::config::KNOWN_KEYS.iter().filter(|(key, _, _)| {
+        key.starts_with("ignite.rpc.") || key.starts_with("ignite.comm.window.")
+    }) {
+        ct.row(vec![*key, *default, *meaning]);
+    }
+    assert!(!ct.is_empty(), "rpc/window config keys must exist");
+    println!("\nComm plane — ignite.rpc.* and ignite.comm.window.* configuration:\n");
+    print!("{}", ct.render());
 
     println!("\napi_table OK ({} methods verified)", rows.len());
     Ok(())

@@ -1,0 +1,138 @@
+//! One-sided halo exchange — a 1-D Jacobi heat stencil whose boundary
+//! exchange goes through [`Window::put`] (MPI_Put against each
+//! neighbor's exposed halo slots) instead of matched send/receive
+//! pairs, with the per-iteration global residual riding a non-blocking
+//! `i_all_reduce` that overlaps the interior update.
+//!
+//! The same simulation then runs on classic two-sided send/receive and
+//! a blocking all-reduce; the two trajectories must agree bit for bit —
+//! one-sided windows and non-blocking collectives change *when* data
+//! moves, never *what* arrives.
+//!
+//! Run: `cargo run --example halo_exchange`
+
+use mpignite::comm::run_local_world;
+use mpignite::prelude::*;
+
+/// Interior cells per rank.
+const N: usize = 8;
+const RANKS: usize = 4;
+const ITERS: usize = 25;
+/// Fixed boundary temperatures at the global edges.
+const HOT: f64 = 100.0;
+const COLD: f64 = 0.0;
+
+/// Tags for the two-sided reference exchange.
+const TAG_TO_LEFT: i64 = 1;
+const TAG_TO_RIGHT: i64 = 2;
+
+fn f64_at(bytes: &[u8], slot: usize) -> f64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&bytes[slot * 8..slot * 8 + 8]);
+    f64::from_le_bytes(b)
+}
+
+/// One Jacobi step over this rank's cells given its two halo values.
+/// Returns the updated cells and the local max-abs change.
+fn stencil_step(cells: &[f64], left: f64, right: f64) -> (Vec<f64>, f64) {
+    let mut next = vec![0.0f64; cells.len()];
+    let mut residual = 0.0f64;
+    for i in 0..cells.len() {
+        let l = if i == 0 { left } else { cells[i - 1] };
+        let r = if i + 1 == cells.len() { right } else { cells[i + 1] };
+        next[i] = 0.5 * (l + r);
+        residual = residual.max((next[i] - cells[i]).abs());
+    }
+    (next, residual)
+}
+
+fn main() -> Result<()> {
+    mpignite::util::init_logger();
+
+    // One-sided flavor: each rank exposes a 2-slot halo window
+    // (slot 0 ← left neighbor's boundary cell, slot 1 ← right's), puts
+    // its own boundary cells into its neighbors' windows, and fences.
+    let windowed = run_local_world(RANKS, |comm: &SparkComm| {
+        let rank = comm.rank();
+        let size = comm.size();
+        let mut cells = vec![0.0f64; N];
+        let win = comm.window(vec![0u8; 16])?;
+        let mut last_residual = 0.0f64;
+        for _ in 0..ITERS {
+            if rank > 0 {
+                // My leftmost cell is the LEFT neighbor's right halo.
+                win.put(rank - 1, 8, &cells[0].to_le_bytes())?;
+            }
+            if rank + 1 < size {
+                // My rightmost cell is the RIGHT neighbor's left halo.
+                win.put(rank + 1, 0, &cells[N - 1].to_le_bytes())?;
+            }
+            // Epoch boundary: every put has landed everywhere.
+            win.fence()?;
+            let halos = win.snapshot();
+            let left = if rank == 0 { HOT } else { f64_at(&halos, 0) };
+            let right = if rank + 1 == size { COLD } else { f64_at(&halos, 1) };
+            let (next, local) = stencil_step(&cells, left, right);
+            // Start the residual reduction, THEN apply the update — the
+            // collective runs while this rank finishes its compute.
+            let residual = comm.i_all_reduce(local, f64::max)?;
+            cells = next;
+            last_residual = residual.wait()?;
+            // Nobody starts the next epoch's puts until every rank has
+            // read this epoch's halos.
+            win.fence()?;
+        }
+        win.free()?;
+        Ok((cells, last_residual))
+    })?;
+
+    // Two-sided reference: matched send/receive halo exchange and a
+    // blocking all-reduce. Sends are non-blocking in MPIgnite, so
+    // everyone sends both halos before receiving — no deadlock.
+    let reference = run_local_world(RANKS, |comm: &SparkComm| {
+        let rank = comm.rank();
+        let size = comm.size();
+        let mut cells = vec![0.0f64; N];
+        let mut last_residual = 0.0f64;
+        for _ in 0..ITERS {
+            if rank > 0 {
+                comm.send(rank - 1, TAG_TO_LEFT, cells[0])?;
+            }
+            if rank + 1 < size {
+                comm.send(rank + 1, TAG_TO_RIGHT, cells[N - 1])?;
+            }
+            let left = if rank == 0 {
+                HOT
+            } else {
+                comm.receive::<f64>(rank as i64 - 1, TAG_TO_RIGHT)?
+            };
+            let right = if rank + 1 == size {
+                COLD
+            } else {
+                comm.receive::<f64>(rank as i64 + 1, TAG_TO_LEFT)?
+            };
+            let (next, local) = stencil_step(&cells, left, right);
+            last_residual = comm.all_reduce(local, f64::max)?;
+            cells = next;
+        }
+        Ok((cells, last_residual))
+    })?;
+
+    assert_eq!(windowed.len(), reference.len());
+    for (rank, (w, r)) in windowed.iter().zip(&reference).enumerate() {
+        assert_eq!(
+            w.0, r.0,
+            "rank {rank}: one-sided and two-sided trajectories must agree bit for bit"
+        );
+        assert_eq!(w.1, r.1, "rank {rank}: residuals must agree");
+    }
+    let temps: Vec<f64> = windowed.iter().flat_map(|(c, _)| c.iter().copied()).collect();
+    println!("halo_exchange OK — {RANKS} ranks x {N} cells, {ITERS} iterations");
+    println!(
+        "  residual {:.6}, temperature profile {:.2} .. {:.2}",
+        windowed[0].1,
+        temps.first().unwrap(),
+        temps.last().unwrap()
+    );
+    Ok(())
+}

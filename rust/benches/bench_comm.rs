@@ -1,0 +1,160 @@
+//! E13 — zero-copy comm plane: (a) assembled vs vectored (scatter-gather)
+//! framing for a `fetch_multi`-shaped multi-bucket response — the
+//! assembled lane copies every bucket into one contiguous frame buffer
+//! before writing, the vectored lane hands the shared bucket bytes to the
+//! socket as borrowed segments; (b) blocking vs non-blocking allreduce
+//! when each iteration also has compute to do — `i_all_reduce` overlaps
+//! the collective with the compute, so the iteration costs
+//! ~max(compute, allreduce) instead of their sum.
+//!
+//! Run: `cargo bench --bench bench_comm` (MPIGNITE_BENCH_FAST=1 to
+//! smoke). CSV block feeds EXPERIMENTS.md baselines.
+
+use mpignite::bench::{black_box, BenchSuite, Throughput};
+use mpignite::comm::run_local_world;
+use mpignite::metrics;
+use mpignite::prelude::*;
+use mpignite::rpc::{Envelope, RpcBody, RpcEnv, Segment};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Buckets per simulated `fetch_multi` response frame.
+const BUCKETS: usize = 16;
+/// Bytes per bucket.
+const BUCKET_BYTES: usize = 64 * 1024;
+
+const RANKS: usize = 4;
+const ITERS: usize = 8;
+/// Per-iteration compute kernel size (f64 mul-adds).
+const WORK: usize = 200_000;
+
+/// A `ShuffleFetchMultiResp`-shaped scatter-gather body: codec
+/// scaffolding in owned head segments, each bucket's shared bytes as a
+/// borrowed segment between them (what the worker's shuffle service
+/// sends on the vectored path).
+fn segmented_body(buckets: &[Arc<Vec<u8>>]) -> RpcBody {
+    let mut head = Vec::new();
+    mpignite::ser::put_varint(&mut head, buckets.len() as u64);
+    let mut segments: Vec<Segment> = Vec::with_capacity(buckets.len() * 2);
+    for (m, bucket) in buckets.iter().enumerate() {
+        head.extend_from_slice(&(m as u64).to_le_bytes());
+        head.push(1); // Option tag: Some
+        mpignite::ser::put_varint(&mut head, bucket.len() as u64);
+        segments.push(Segment::Owned(std::mem::take(&mut head)));
+        segments.push(Segment::Shared(bucket.clone()));
+    }
+    RpcBody::Segments(segments)
+}
+
+/// The per-iteration compute kernel both allreduce lanes run.
+fn compute(rank: usize) -> f64 {
+    let mut acc = 0.0f64;
+    let mut x = 1.0 + rank as f64 * 1e-3;
+    for _ in 0..WORK {
+        x = x * 1.000_000_1 + 1e-9;
+        acc += x;
+    }
+    black_box(acc)
+}
+
+fn main() {
+    mpignite::util::init_logger();
+    let mut suite = BenchSuite::new(format!(
+        "E13: zero-copy comm plane ({BUCKETS} x {} KiB buckets/frame; \
+         {RANKS} ranks, {ITERS} iterations, {WORK} mul-adds compute)",
+        BUCKET_BYTES / 1024
+    ));
+
+    // ---- (a) assembled vs vectored multi-bucket response framing ----
+    let server = RpcEnv::server("bench-comm-server", 0).unwrap();
+    let buckets: Vec<Arc<Vec<u8>>> = (0..BUCKETS)
+        .map(|i| Arc::new(vec![(i % 251) as u8; BUCKET_BYTES]))
+        .collect();
+    {
+        let buckets = buckets.clone();
+        server.register(
+            "fetch",
+            Arc::new(move |_env: &Envelope| Ok(Some(segmented_body(&buckets)))),
+        );
+    }
+    let addr = server.address();
+    let total = (BUCKETS * BUCKET_BYTES) as u64;
+
+    {
+        // Assembled lane: the reply's segments are flattened into one
+        // contiguous frame buffer before the write (the pre-vectored
+        // behavior, and the `MPIGNITE_RPC_VECTORED=false` CI lane).
+        server.set_vectored(false);
+        let client = RpcEnv::client("bench-comm-assembled");
+        let addr = addr.clone();
+        let _ = client.ask(&addr, "fetch", Vec::new(), Duration::from_secs(5)).unwrap();
+        suite.bench_throughput("fetch_multi_assembled", Throughput::Bytes(total), move || {
+            let resp =
+                client.ask(&addr, "fetch", Vec::new(), Duration::from_secs(5)).unwrap();
+            black_box(resp.len());
+        });
+    }
+    {
+        // Vectored lane: bucket bytes go buffer→wire as borrowed
+        // segments; only the headers are materialized.
+        server.set_vectored(true);
+        let client = RpcEnv::client("bench-comm-vectored");
+        let addr = addr.clone();
+        let _ = client.ask(&addr, "fetch", Vec::new(), Duration::from_secs(5)).unwrap();
+        let zc_before = metrics::global().counter("rpc.bytes.zero_copy").get();
+        suite.bench_throughput("fetch_multi_vectored", Throughput::Bytes(total), move || {
+            let resp =
+                client.ask(&addr, "fetch", Vec::new(), Duration::from_secs(5)).unwrap();
+            black_box(resp.len());
+        });
+        let zc = metrics::global().counter("rpc.bytes.zero_copy").get() - zc_before;
+        println!("vectored lane: {zc} B shipped zero-copy");
+    }
+    server.shutdown();
+
+    // ---- (b) blocking vs non-blocking allreduce with compute ----
+    suite.bench("allreduce_blocking_then_compute", || {
+        let sums = run_local_world(RANKS, |comm: &SparkComm| {
+            let mut acc = 0.0f64;
+            for _ in 0..ITERS {
+                let local = compute(comm.rank());
+                acc += comm.all_reduce(local, |a, b| a + b)?;
+            }
+            Ok(acc)
+        })
+        .unwrap();
+        black_box(sums);
+    });
+    suite.bench("allreduce_overlapped_with_compute", || {
+        let sums = run_local_world(RANKS, |comm: &SparkComm| {
+            let mut acc = 0.0f64;
+            let mut local = compute(comm.rank());
+            for it in 0..ITERS {
+                // Start the collective on the current value, then do the
+                // NEXT iteration's compute while it runs.
+                let fut = comm.i_all_reduce(local, |a, b| a + b)?;
+                if it + 1 < ITERS {
+                    local = compute(comm.rank());
+                }
+                acc += fut.wait()?;
+            }
+            Ok(acc)
+        })
+        .unwrap();
+        black_box(sums);
+    });
+
+    suite.report();
+    let results = suite.results();
+    let assembled = results[0].median;
+    let vectored = results[1].median;
+    let blocking = results[2].median;
+    let overlapped = results[3].median;
+    println!(
+        "\nframing: assembled/vectored = {:.2}x; allreduce: blocking/overlapped = {:.2}x \
+         (overlapped collectives started: {})",
+        assembled.as_secs_f64() / vectored.as_secs_f64(),
+        blocking.as_secs_f64() / overlapped.as_secs_f64(),
+        metrics::global().counter("comm.collectives.overlapped").get()
+    );
+}

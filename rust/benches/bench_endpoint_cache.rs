@@ -14,7 +14,7 @@ use std::time::Duration;
 fn main() {
     mpignite::util::init_logger();
     let server = RpcEnv::server("bench-server", 0).unwrap();
-    server.register("echo", Arc::new(|env: &Envelope| Ok(Some(env.body.clone()))));
+    server.register("echo", Arc::new(|env: &Envelope| Ok(Some(env.body.clone().into()))));
     let addr = server.address();
 
     let mut suite = BenchSuite::new("E6: endpoint establishment vs cached connection");

@@ -111,6 +111,19 @@ pub trait BroadcastNet: Send + Sync {
     /// (workers register after assembling a value, making themselves
     /// peers for later fetchers).
     fn register(&self, id: u64, num_blocks: usize, total_bytes: usize) -> Result<()>;
+    /// Announce that this process holds just `blocks` of broadcast `id`
+    /// (mid-assembly registration: later fetchers can offload onto this
+    /// process before its assembly finishes). Default no-op, so planes
+    /// that only track whole values need not implement it.
+    fn register_blocks(
+        &self,
+        _id: u64,
+        _blocks: &[usize],
+        _num_blocks: usize,
+        _total_bytes: usize,
+    ) -> Result<()> {
+        Ok(())
+    }
     /// Ask the master where broadcast `id`'s blocks live.
     fn locate(&self, id: u64) -> Result<BroadcastLocations>;
     /// Fetch one block's bytes from the holder at `addr`.
@@ -357,15 +370,43 @@ impl BroadcastManager {
         h.write(me.as_bytes());
         let spread = h.finish() as usize;
 
-        // Assemble into a staging buffer; nothing is visible to peers or
-        // local readers until the publish step below, so an error mid-way
-        // leaves no partial state behind.
-        let mut staged: Vec<Vec<u8>> = Vec::with_capacity(loc.num_blocks);
+        // Assemble block by block, publishing EACH block as it lands (a
+        // store under the gate-map lock, same gates → blocks → meta
+        // order as `clear`, then a best-effort partial registration
+        // outside every lock): later fetchers offload onto this worker
+        // while its assembly is still in flight instead of stampeding
+        // the earlier holders. If a clear races the assembly, the gate
+        // entry is gone — remaining blocks are dropped instead of
+        // cached (the clear itself removed the already-stored ones), so
+        // freed state is never resurrected. Blocks stored before a
+        // mid-way fetch *error* stay cached without meta; they hold
+        // correct bytes (a retry reuses the wire less, job-end GC
+        // prunes them), never stale ones.
         let mut out = Vec::with_capacity(loc.total_bytes);
         for block in 0..loc.num_blocks {
             let bytes = self.fetch_block(net.as_ref(), &loc, id, block, spread)?;
             out.extend_from_slice(&bytes);
-            staged.push(bytes);
+            let stored = {
+                let gates = self.fetch_gates.lock().unwrap();
+                if gates.get(&id).map(|g| Arc::ptr_eq(g, &gate)).unwrap_or(false) {
+                    self.store_block((id, block), bytes);
+                    metrics::global().counter("broadcast.blocks.cached").inc();
+                    true
+                } else {
+                    false
+                }
+            };
+            if stored {
+                metrics::global().counter("broadcast.register.partial").inc();
+                if let Err(e) =
+                    net.register_blocks(id, &[block], loc.num_blocks, loc.total_bytes)
+                {
+                    log::debug!(
+                        target: "broadcast",
+                        "partial registration of broadcast {id} block {block} failed: {e}"
+                    );
+                }
+            }
         }
         if out.len() != loc.total_bytes {
             return Err(IgniteError::Storage(format!(
@@ -374,23 +415,16 @@ impl BroadcastManager {
                 loc.total_bytes
             )));
         }
-        // Publish under the gate-map lock (lock order gates → blocks →
-        // meta, matching `clear`): if a clear raced the assembly, the
-        // gate entry is gone and the blocks are dropped instead of
-        // cached. The caller still gets its bytes either way.
+        // Publish the assembled value's meta under the gate-map lock: if
+        // a clear raced the assembly, the gate entry is gone and nothing
+        // is published. The caller still gets its bytes either way.
         let published = {
             let gates = self.fetch_gates.lock().unwrap();
             if gates.get(&id).map(|g| Arc::ptr_eq(g, &gate)).unwrap_or(false) {
-                for (i, bytes) in staged.into_iter().enumerate() {
-                    self.store_block((id, i), bytes);
-                }
                 self.meta.lock().unwrap().insert(
                     id,
                     BroadcastMeta { num_blocks: loc.num_blocks, total_bytes: loc.total_bytes },
                 );
-                metrics::global()
-                    .counter("broadcast.blocks.cached")
-                    .add(loc.num_blocks as u64);
                 true
             } else {
                 log::debug!(target: "broadcast", "broadcast {id} cleared mid-fetch; dropping assembled blocks");

@@ -26,8 +26,8 @@ use crate::error::{IgniteError, Result};
 use crate::fault::{HeartbeatMonitor, TaskId};
 use crate::metrics;
 use crate::rdd::{run_shuffle_map_task, PlanSpec, PlanStage, PlanStageKind};
-use crate::rpc::{Envelope, RpcAddress, RpcEnv};
-use crate::ser::{from_bytes, to_bytes, Value};
+use crate::rpc::{Envelope, RpcAddress, RpcBody, RpcEnv, Segment};
+use crate::ser::{from_bytes, put_varint, to_bytes, Value};
 use log::{info, warn};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -197,6 +197,10 @@ impl Master {
     /// Start the master on `port` (0 = ephemeral) and install endpoints.
     pub fn start(conf: &IgniteConf, port: u16) -> Result<Arc<Self>> {
         let env = RpcEnv::server("master", port)?;
+        // `ignite.rpc.vectored` (default on) selects the scatter-gather
+        // send path; the CI matrix runs the suite with it off to prove
+        // wire compatibility.
+        env.set_vectored(conf.get_bool("ignite.rpc.vectored").unwrap_or(true));
         let rank_table: RankTable = Arc::new(RwLock::new(HashMap::new()));
         install_master_comm(&env, rank_table.clone());
         let master = Arc::new(Master {
@@ -232,7 +236,7 @@ impl Master {
                 m.monitor.beat(id);
                 info!(target: "cluster", "worker {id} registered from {}", req.addr);
                 metrics::global().counter("cluster.workers.registered").inc();
-                Ok(Some(to_bytes(&RegisterResp { worker_id: id })))
+                Ok(Some(to_bytes(&RegisterResp { worker_id: id }).into()))
             }),
         );
 
@@ -284,7 +288,7 @@ impl Master {
                     reg.bucket_bytes.iter().map(|(r, b)| (*r as usize, *b)).collect(),
                 );
                 metrics::global().counter("cluster.shuffle.registrations").inc();
-                Ok(Some(Vec::new())) // ack
+                Ok(Some(RpcBody::Bytes(Vec::new()))) // ack
             }),
         );
 
@@ -316,7 +320,7 @@ impl Master {
                     }
                     None => ShuffleLocateResp { total_maps: 0, locations: Vec::new() },
                 };
-                Ok(Some(to_bytes(&resp)))
+                Ok(Some(to_bytes(&resp).into()))
             }),
         );
 
@@ -399,7 +403,7 @@ impl Master {
                 for (_, addr) in m.live_workers() {
                     let _ = m.env.send(&addr, EP_SHUFFLE_CLEAR, body.clone());
                 }
-                Ok(Some(Vec::new())) // ack
+                Ok(Some(RpcBody::Bytes(Vec::new()))) // ack
             }),
         );
 
@@ -414,12 +418,26 @@ impl Master {
                 // resurrect a pruned table entry.
                 let mut table = m.broadcasts.lock().unwrap();
                 if let Some(entry) = table.get_mut(&reg.id) {
-                    for block in 0..reg.num_blocks as usize {
-                        entry.holders.entry(block).or_default().insert(reg.addr.clone());
+                    if reg.blocks.is_empty() {
+                        // Whole-value announcement: holder of every block.
+                        for block in 0..reg.num_blocks as usize {
+                            entry.holders.entry(block).or_default().insert(reg.addr.clone());
+                        }
+                    } else {
+                        // Mid-assembly announcement: holder of just the
+                        // listed blocks — fetchers can offload onto this
+                        // worker before its assembly finishes.
+                        for &block in &reg.blocks {
+                            entry
+                                .holders
+                                .entry(block as usize)
+                                .or_default()
+                                .insert(reg.addr.clone());
+                        }
                     }
                     metrics::global().counter("cluster.broadcast.registrations").inc();
                 }
-                Ok(Some(Vec::new())) // ack: the fetcher is now a peer
+                Ok(Some(RpcBody::Bytes(Vec::new()))) // ack: the fetcher is now a peer
             }),
         );
 
@@ -467,7 +485,7 @@ impl Master {
                         locations: Vec::new(),
                     },
                 };
-                Ok(Some(to_bytes(&resp)))
+                Ok(Some(to_bytes(&resp).into()))
             }),
         );
 
@@ -490,7 +508,7 @@ impl Master {
                 for (_, addr) in m.live_workers() {
                     let _ = m.env.send(&addr, EP_BROADCAST_CLEAR, body.clone());
                 }
-                Ok(Some(Vec::new())) // ack
+                Ok(Some(RpcBody::Bytes(Vec::new()))) // ack
             }),
         );
 
@@ -513,7 +531,7 @@ impl Master {
                 for (_, addr) in m.live_workers() {
                     let _ = m.env.send(&addr, EP_JOB_CLEAR, body.clone());
                 }
-                Ok(Some(Vec::new())) // ack
+                Ok(Some(RpcBody::Bytes(Vec::new()))) // ack
             }),
         );
 
@@ -847,7 +865,8 @@ impl Master {
                         target: "cluster",
                         "plan peer section {} ({} ranks)", stage.id, stage.num_tasks
                     );
-                    self.try_peer_stage(plan_bytes, stage.id, stage.num_tasks)?;
+                    let inputs = plan.stage_input_ids(Some(stage.id));
+                    self.try_peer_stage(plan_bytes, stage.id, stage.num_tasks, &inputs)?;
                 }
             }
         }
@@ -925,14 +944,22 @@ impl Master {
     /// dies mid-gang (up to the `ignite.peer.gang.retries` budget).
     /// Placement errors (`Invalid`: not enough gang slots, no workers)
     /// fail immediately — restarting cannot create capacity.
-    fn try_peer_stage(&self, plan_bytes: &[u8], peer_id: u64, num_tasks: usize) -> Result<()> {
+    fn try_peer_stage(
+        &self,
+        plan_bytes: &[u8],
+        peer_id: u64,
+        num_tasks: usize,
+        input_ids: &[u64],
+    ) -> Result<()> {
         if num_tasks == 0 {
             return Ok(());
         }
         let budget = self.conf.get_usize("ignite.peer.gang.retries").unwrap_or(3).max(1);
         let mut generation = 0u64;
         loop {
-            let failure = match self.try_peer_gang(plan_bytes, peer_id, num_tasks, generation) {
+            let failure = match self
+                .try_peer_gang(plan_bytes, peer_id, num_tasks, input_ids, generation)
+            {
                 Ok(()) => return Ok(()),
                 Err(f) => f,
             };
@@ -979,6 +1006,7 @@ impl Master {
         plan_bytes: &[u8],
         peer_id: u64,
         n: usize,
+        input_ids: &[u64],
         generation: u64,
     ) -> std::result::Result<(), GangAttemptFailure> {
         let fail =
@@ -1005,19 +1033,83 @@ impl Master {
                 false,
             ));
         }
-        // Round-robin placement that skips workers at slot capacity
-        // (terminates because total >= n).
-        let mut assignment: HashMap<u64, (RpcAddress, Vec<u64>)> = HashMap::new();
-        let mut used = vec![0usize; caps.len()];
-        let mut table: Vec<(u64, String)> = Vec::with_capacity(n);
-        let mut cursor = 0usize;
-        for rank in 0..n {
-            while used[cursor % caps.len()] >= caps[cursor % caps.len()].2 {
-                cursor += 1;
+        // Byte-weighted gang placement: rank r of a peer section reads
+        // reduce partition r of each parent shuffle, so sum those
+        // bucket bytes per worker (the same per-reduce size table that
+        // `place_stage_tasks` reads) and let the heaviest ranks pick
+        // their host first under the slot caps. Ranks with no known
+        // bytes — and every rank when locality is off or the table is
+        // cold — fall back to round-robin over workers with free
+        // slots, which terminates because total >= n.
+        let locality = self.conf.get_bool("ignite.plan.locality").unwrap_or(true);
+        let mut weights: Vec<HashMap<String, u64>> = vec![HashMap::new(); n];
+        if locality && !input_ids.is_empty() {
+            let outputs = self.map_outputs.lock().unwrap();
+            for id in input_ids {
+                if let Some(entry) = outputs.get(id) {
+                    for (map, addr) in &entry.locations {
+                        if let Some(sizes) = entry.reduce_bytes.get(map) {
+                            for (reduce, bytes) in sizes {
+                                if *reduce < n {
+                                    *weights[*reduce].entry(addr.clone()).or_insert(0) +=
+                                        bytes;
+                                }
+                            }
+                        }
+                    }
+                }
             }
-            let (wid, addr, _) = &caps[cursor % caps.len()];
-            used[cursor % caps.len()] += 1;
-            cursor += 1;
+        }
+        // Heaviest-first pick order; the sort is stable, so rank order
+        // is preserved among ties (and the cold-table case degrades to
+        // plain rotation in rank order).
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&r| {
+            std::cmp::Reverse(weights[r].values().copied().max().unwrap_or(0))
+        });
+        let mut picks: Vec<usize> = vec![0; n];
+        let mut used = vec![0usize; caps.len()];
+        let mut cursor = 0usize;
+        let mut local_bytes = 0u64;
+        let mut total_bytes = 0u64;
+        for &rank in &order {
+            let per: Vec<u64> = caps
+                .iter()
+                .map(|(_, addr, _)| weights[rank].get(&addr.0).copied().unwrap_or(0))
+                .collect();
+            total_bytes += per.iter().sum::<u64>();
+            let mut pick = None;
+            let mut best = 0u64;
+            for (i, &b) in per.iter().enumerate() {
+                if used[i] < caps[i].2 && b > best {
+                    best = b;
+                    pick = Some(i);
+                }
+            }
+            let i = match pick {
+                Some(i) => i,
+                None => {
+                    while used[cursor % caps.len()] >= caps[cursor % caps.len()].2 {
+                        cursor += 1;
+                    }
+                    let i = cursor % caps.len();
+                    cursor += 1;
+                    i
+                }
+            };
+            used[i] += 1;
+            local_bytes += per[i];
+            picks[rank] = i;
+        }
+        if total_bytes > 0 {
+            metrics::global()
+                .gauge("peer.gang.local_bytes_ratio")
+                .set(((local_bytes * 100) / total_bytes) as i64);
+        }
+        let mut assignment: HashMap<u64, (RpcAddress, Vec<u64>)> = HashMap::new();
+        let mut table: Vec<(u64, String)> = Vec::with_capacity(n);
+        for rank in 0..n {
+            let (wid, addr, _) = &caps[picks[rank]];
             assignment
                 .entry(*wid)
                 .or_insert_with(|| (addr.clone(), Vec::new()))
@@ -1435,6 +1527,22 @@ impl crate::shuffle::ShuffleNet for RpcShuffleNet {
     }
 }
 
+/// Encode `Option<bytes>` as a scatter-gather [`RpcBody`], byte-identical
+/// to `to_bytes` of a struct whose sole field is `Option<Vec<u8>>` (tag
+/// byte, then varint length + payload when present) — but the payload
+/// rides as a borrowed [`Segment::Shared`] instead of being cloned into
+/// an assembled body. Shared by the shuffle and broadcast fetch servers.
+fn option_bytes_body(bytes: Option<Arc<Vec<u8>>>) -> RpcBody {
+    match bytes {
+        Some(arc) => {
+            let mut head = vec![1u8]; // Option tag: Some
+            put_varint(&mut head, arc.len() as u64);
+            RpcBody::Segments(vec![Segment::Owned(head), Segment::Shared(arc)])
+        }
+        None => RpcBody::Bytes(vec![0u8]), // Option tag: None
+    }
+}
+
 /// Install the worker half of the shuffle plane on an RPC env: serve
 /// locally-held buckets on [`EP_SHUFFLE_FETCH`] (one bucket per
 /// round-trip) and [`EP_SHUFFLE_FETCH_MULTI`] (every requested bucket of
@@ -1453,10 +1561,13 @@ pub fn install_shuffle_service(
             let req: ShuffleFetchReq = from_bytes(&envelope.body)?;
             let bytes = serve
                 .shuffle
-                .local_bucket_bytes(req.shuffle, req.map_idx as usize, req.reduce_idx as usize)
-                .map(|b| (*b).clone());
+                .local_bucket_bytes(req.shuffle, req.map_idx as usize, req.reduce_idx as usize);
             metrics::global().counter("cluster.shuffle.fetches.served").inc();
-            Ok(Some(to_bytes(&ShuffleFetchResp { bytes })))
+            // Scatter-gather response: the bucket's shared bytes go out
+            // as a borrowed segment behind a hand-encoded Option header,
+            // byte-identical to `to_bytes(&ShuffleFetchResp { bytes })`
+            // but without cloning the bucket into an envelope body.
+            Ok(Some(option_bytes_body(bytes)))
         }),
     );
     let serve = engine.clone();
@@ -1467,7 +1578,7 @@ pub fn install_shuffle_service(
             // Fill buckets in request order until the frame budget is
             // spent — always at least one, so the caller's streaming
             // loop makes progress on every round-trip.
-            let mut buckets: Vec<(u64, Option<Vec<u8>>)> = Vec::new();
+            let mut buckets: Vec<(u64, Option<Arc<Vec<u8>>>)> = Vec::new();
             let mut total = 0usize;
             for &m in &req.map_idxs {
                 if !buckets.is_empty() && total >= req.batch_bytes as usize {
@@ -1475,15 +1586,37 @@ pub fn install_shuffle_service(
                 }
                 let bytes = serve
                     .shuffle
-                    .local_bucket_bytes(req.shuffle, m as usize, req.reduce_idx as usize)
-                    .map(|b| (*b).clone());
+                    .local_bucket_bytes(req.shuffle, m as usize, req.reduce_idx as usize);
                 if let Some(b) = &bytes {
                     total += b.len();
                     metrics::global().counter("cluster.shuffle.fetches.served").inc();
                 }
                 buckets.push((m, bytes));
             }
-            Ok(Some(to_bytes(&ShuffleFetchMultiResp { buckets })))
+            // Scatter-gather response, byte-identical to
+            // `to_bytes(&ShuffleFetchMultiResp { buckets })`: codec
+            // scaffolding (count, map indices, Option tags, lengths)
+            // accumulates in owned head segments; each bucket's shared
+            // bytes ride between them uncopied.
+            let mut head = Vec::with_capacity(16);
+            put_varint(&mut head, buckets.len() as u64);
+            let mut segments: Vec<Segment> = Vec::with_capacity(buckets.len() * 2 + 1);
+            for (m, bytes) in buckets {
+                head.extend_from_slice(&m.to_le_bytes());
+                match bytes {
+                    Some(arc) => {
+                        head.push(1); // Option tag: Some
+                        put_varint(&mut head, arc.len() as u64);
+                        segments.push(Segment::Owned(std::mem::take(&mut head)));
+                        segments.push(Segment::Shared(arc));
+                    }
+                    None => head.push(0), // Option tag: None
+                }
+            }
+            if !head.is_empty() {
+                segments.push(Segment::Owned(head));
+            }
+            Ok(Some(RpcBody::Segments(segments)))
         }),
     );
     engine
@@ -1513,9 +1646,28 @@ impl crate::broadcast::BroadcastNet for RpcBroadcastNet {
             num_blocks: num_blocks as u64,
             total_bytes: total_bytes as u64,
             addr: self.env.address().0,
+            blocks: Vec::new(), // empty = holder of every block
         };
         // Ask (not send): once this returns, the master lists us as a
         // peer — later fetchers on other workers can offload the master.
+        self.env.ask(&self.master, EP_BROADCAST_REGISTER, to_bytes(&req), self.timeout)?;
+        Ok(())
+    }
+
+    fn register_blocks(
+        &self,
+        id: u64,
+        blocks: &[usize],
+        num_blocks: usize,
+        total_bytes: usize,
+    ) -> Result<()> {
+        let req = BroadcastRegister {
+            id,
+            num_blocks: num_blocks as u64,
+            total_bytes: total_bytes as u64,
+            addr: self.env.address().0,
+            blocks: blocks.iter().map(|&b| b as u64).collect(),
+        };
         self.env.ask(&self.master, EP_BROADCAST_REGISTER, to_bytes(&req), self.timeout)?;
         Ok(())
     }
@@ -1590,9 +1742,9 @@ pub fn install_broadcast_service(
 fn serve_broadcast_fetch(
     store: &crate::broadcast::BroadcastManager,
     envelope: &Envelope,
-) -> Result<Option<Vec<u8>>> {
+) -> crate::rpc::HandlerResult {
     let req: BroadcastFetchReq = from_bytes(&envelope.body)?;
-    let bytes = store.local_block(req.id, req.block as usize).map(|b| (*b).clone());
+    let bytes = store.local_block(req.id, req.block as usize);
     metrics::global()
         .counter(if bytes.is_some() {
             "cluster.broadcast.fetches.served"
@@ -1600,7 +1752,7 @@ fn serve_broadcast_fetch(
             "cluster.broadcast.fetches.missed"
         })
         .inc();
-    Ok(Some(to_bytes(&BroadcastFetchResp { bytes })))
+    Ok(Some(option_bytes_body(bytes)))
 }
 
 /// The metric name of one worker's task-execution counter (how many
@@ -1660,6 +1812,7 @@ impl Worker {
     /// heartbeating, and install the launch endpoint.
     pub fn start(conf: &IgniteConf, master_addr: RpcAddress) -> Result<Arc<Self>> {
         let env = RpcEnv::server("worker", 0)?;
+        env.set_vectored(conf.get_bool("ignite.rpc.vectored").unwrap_or(true));
         let mode = TransportMode::parse(conf.get_str("ignite.comm.mode")?)?;
         let soft_cap = conf.get_usize("ignite.comm.buffer.max")?;
         let transport = ClusterTransport::new(env.clone(), master_addr.clone(), mode, soft_cap);
@@ -1752,7 +1905,7 @@ impl Worker {
                             }
                         })
                         .expect("spawn plan task batch");
-                    Ok(Some(Vec::new())) // launch ack
+                    Ok(Some(RpcBody::Bytes(Vec::new()))) // launch ack
                 }),
             );
         }
@@ -1845,7 +1998,7 @@ impl Worker {
                     // (its launch failed on another worker) — drop it.
                     p.clear();
                     p.insert(req.job_id, generations);
-                    Ok(Some(Vec::new())) // ack
+                    Ok(Some(RpcBody::Bytes(Vec::new()))) // ack
                 }),
             );
         }
@@ -1943,7 +2096,7 @@ impl Worker {
                             })
                             .expect("spawn peer rank thread");
                     }
-                    Ok(Some(Vec::new())) // launch ack
+                    Ok(Some(RpcBody::Bytes(Vec::new()))) // launch ack
                 }),
             );
         }
@@ -2003,7 +2156,7 @@ impl Worker {
                         generations.insert(rank, generation);
                     }
                     prepared.lock().unwrap().insert(req.job_id, generations);
-                    Ok(Some(Vec::new()))
+                    Ok(Some(RpcBody::Bytes(Vec::new())))
                 }),
             );
         }
@@ -2084,7 +2237,7 @@ impl Worker {
                             })
                             .expect("spawn rank thread");
                     }
-                    Ok(Some(Vec::new())) // ack
+                    Ok(Some(RpcBody::Bytes(Vec::new()))) // ack
                 }),
             );
         }

@@ -490,9 +490,13 @@ impl Decode for ShuffleClear {
     }
 }
 
-/// Worker (or driver) → master: this process holds every block of a
-/// broadcast value — record it in the block-location table so later
-/// fetchers can pull from it peer-to-peer.
+/// Worker (or driver) → master: this process holds blocks of a broadcast
+/// value — record it in the block-location table so later fetchers can
+/// pull from it peer-to-peer. `blocks` empty means "every block of the
+/// value" (the classic after-assembly registration); a non-empty list
+/// registers just those blocks, which is how a mid-assembly fetcher
+/// becomes a holder of each block *as it lands* instead of only after
+/// the whole value is assembled.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BroadcastRegister {
     pub id: u64,
@@ -500,6 +504,8 @@ pub struct BroadcastRegister {
     pub total_bytes: u64,
     /// The holder's RPC address serving `broadcast.fetch`.
     pub addr: String,
+    /// Block indices held (empty = all `num_blocks`).
+    pub blocks: Vec<u64>,
 }
 
 impl Encode for BroadcastRegister {
@@ -508,6 +514,7 @@ impl Encode for BroadcastRegister {
         self.num_blocks.encode(buf);
         self.total_bytes.encode(buf);
         self.addr.encode(buf);
+        self.blocks.encode(buf);
     }
 }
 impl Decode for BroadcastRegister {
@@ -517,6 +524,7 @@ impl Decode for BroadcastRegister {
             num_blocks: u64::decode(r)?,
             total_bytes: u64::decode(r)?,
             addr: String::decode(r)?,
+            blocks: Vec::<u64>::decode(r)?,
         })
     }
 }
@@ -785,13 +793,16 @@ mod tests {
 
     #[test]
     fn broadcast_plane_messages_round_trip() {
-        let reg = BroadcastRegister {
-            id: 21,
-            num_blocks: 3,
-            total_bytes: 1000,
-            addr: "127.0.0.1:5000".into(),
-        };
-        assert_eq!(from_bytes::<BroadcastRegister>(&to_bytes(&reg)).unwrap(), reg);
+        for blocks in [Vec::new(), vec![0u64, 2]] {
+            let reg = BroadcastRegister {
+                id: 21,
+                num_blocks: 3,
+                total_bytes: 1000,
+                addr: "127.0.0.1:5000".into(),
+                blocks,
+            };
+            assert_eq!(from_bytes::<BroadcastRegister>(&to_bytes(&reg)).unwrap(), reg);
+        }
 
         let req = BroadcastLocateReq { id: 21 };
         assert_eq!(from_bytes::<BroadcastLocateReq>(&to_bytes(&req)).unwrap(), req);

@@ -15,9 +15,17 @@ use super::message::internal_tags::{
     ALLGATHER, ALLREDUCE_RING, ALLTOALL, BARRIER_DOWN, BARRIER_UP, BCAST, GATHER, REDUCE, SCAN,
     SCATTER,
 };
+use super::future::{promise_pair, CommFuture};
 use super::{CollectiveAlgo, SparkComm};
 use crate::error::{IgniteError, Result};
+use crate::metrics;
 use crate::ser::{FromValue, IntoValue, Value};
+
+/// Context-derivation "color" of a non-blocking all-reduce. Negative so
+/// it can never collide with a user split color (those are `>= 0`); the
+/// window plane uses `-3` (see `comm::window`), `i_broadcast` uses `-4`.
+const NB_ALLREDUCE_COLOR: i64 = -2;
+const NB_BCAST_COLOR: i64 = -4;
 
 impl SparkComm {
     // ---------------------------------------------------------- bcast --
@@ -465,12 +473,67 @@ impl SparkComm {
         }
         Ok(())
     }
+
+    // ------------------------------------- non-blocking collectives --
+
+    /// Non-blocking all-reduce (`MPI_Iallreduce`): returns immediately
+    /// with a [`CommFuture`] that completes with the reduced value, so
+    /// the caller can overlap the reduction with compute and `wait()`
+    /// (or poll) when the result is actually needed.
+    ///
+    /// Collective: every member must call it, and in the same order
+    /// relative to the communicator's other non-blocking collectives and
+    /// window creations — each call derives a private sub-communicator
+    /// context from a shared sequence number, which is what keeps the
+    /// in-flight reduction's traffic from mixing with the caller's own
+    /// sends/receives during the overlap.
+    pub fn i_all_reduce<T, F>(&self, data: T, f: F) -> Result<CommFuture<T>>
+    where
+        T: IntoValue + FromValue + Clone + Send + 'static,
+        F: Fn(T, T) -> T + Send + 'static,
+    {
+        let seq = self.next_aux_seq();
+        let ctx = super::split::derive_context(self.context_id(), seq, NB_ALLREDUCE_COLOR);
+        let sub = self.make_sub(ctx, self.ranks_arc(), self.rank());
+        let (future, promise) = promise_pair::<T>();
+        metrics::global().counter("comm.collectives.overlapped").inc();
+        std::thread::Builder::new()
+            .name(format!("nb-allreduce-{ctx:x}"))
+            .spawn(move || {
+                promise.complete(sub.all_reduce(data, f).map(IntoValue::into_value));
+            })
+            .map_err(|e| IgniteError::Comm(format!("spawn i_all_reduce helper: {e}")))?;
+        Ok(future)
+    }
+
+    /// Non-blocking broadcast (`MPI_Ibcast`): root passes `Some(data)`,
+    /// the rest `None`; every member gets a [`CommFuture`] of the
+    /// broadcast value. Same collective-ordering discipline as
+    /// [`i_all_reduce`](Self::i_all_reduce).
+    pub fn i_broadcast<T>(&self, root: usize, data: Option<T>) -> Result<CommFuture<T>>
+    where
+        T: IntoValue + FromValue + Send + 'static,
+    {
+        let seq = self.next_aux_seq();
+        let ctx = super::split::derive_context(self.context_id(), seq, NB_BCAST_COLOR);
+        let sub = self.make_sub(ctx, self.ranks_arc(), self.rank());
+        let (future, promise) = promise_pair::<T>();
+        metrics::global().counter("comm.collectives.overlapped").inc();
+        std::thread::Builder::new()
+            .name(format!("nb-bcast-{ctx:x}"))
+            .spawn(move || {
+                promise.complete(sub.broadcast(root, data).map(IntoValue::into_value));
+            })
+            .map_err(|e| IgniteError::Comm(format!("spawn i_broadcast helper: {e}")))?;
+        Ok(future)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::{run_local_world, CollectiveAlgo, CommWorld};
     use crate::config::IgniteConf;
+    use crate::metrics;
 
     const ALGOS: [CollectiveAlgo; 3] =
         [CollectiveAlgo::Linear, CollectiveAlgo::Tree, CollectiveAlgo::BlockStore];
@@ -803,5 +866,69 @@ mod tests {
                 assert_eq!(out[3 * i + j], expect, "grid cell ({i},{j})");
             }
         }
+    }
+
+    // ------------------------------------- non-blocking collectives --
+
+    #[test]
+    fn i_all_reduce_matches_blocking_and_overlaps() {
+        let out = run_local_world(4, |world| {
+            // Start the non-blocking reduction...
+            let fut = world.i_all_reduce((world.rank() + 1) as i64, |a, b| a + b)?;
+            // ...then run a *blocking* collective on the parent context
+            // while it is still in flight: the derived sub-context keeps
+            // the two from interfering.
+            let blocking = world.all_reduce((world.rank() + 1) as i64, |a, b| a + b)?;
+            let nonblocking = fut.wait()?;
+            Ok((nonblocking, blocking))
+        })
+        .unwrap();
+        for (nonblocking, blocking) in out {
+            assert_eq!(nonblocking, 10, "1+2+3+4");
+            assert_eq!(nonblocking, blocking, "same result as the blocking path");
+        }
+    }
+
+    #[test]
+    fn i_broadcast_delivers_root_value() {
+        let out = run_local_world(3, |world| {
+            let data = if world.rank() == 1 { Some(777i64) } else { None };
+            let fut = world.i_broadcast(1, data)?;
+            fut.wait()
+        })
+        .unwrap();
+        assert_eq!(out, vec![777, 777, 777]);
+    }
+
+    #[test]
+    fn nonblocking_collectives_complete_in_any_order() {
+        // Start two operations, wait for them in reverse start order —
+        // each runs on its own derived context so neither blocks the
+        // other (MPI_Iallreduce/MPI_Ibcast request semantics).
+        let out = run_local_world(4, |world| {
+            let sum = world.i_all_reduce(world.rank() as i64, |a, b| a + b)?;
+            let bcast_data = if world.rank() == 0 { Some(5i64) } else { None };
+            let bcast = world.i_broadcast(0, bcast_data)?;
+            let max = world.i_all_reduce(world.rank() as i64, |a, b| a.max(b))?;
+            let m = max.wait()?;
+            let b = bcast.wait()?;
+            let s = sum.wait()?;
+            Ok((s, b, m))
+        })
+        .unwrap();
+        for v in out {
+            assert_eq!(v, (6, 5, 3));
+        }
+    }
+
+    #[test]
+    fn overlapped_counter_tracks_inflight_collectives() {
+        let before = metrics::global().counter("comm.collectives.overlapped").get();
+        run_local_world(2, |world| {
+            world.i_all_reduce(1i64, |a, b| a + b)?.wait().map(|_| ())
+        })
+        .unwrap();
+        let after = metrics::global().counter("comm.collectives.overlapped").get();
+        assert!(after >= before + 2, "each rank counts its started op");
     }
 }

@@ -38,6 +38,10 @@ pub mod internal_tags {
     pub const SCAN: i64 = -20;
     pub const SENDRECV: i64 = -21;
     pub const ALLTOALL: i64 = -22;
+    /// One-sided window operation request (put/get/stop).
+    pub const WINDOW_REQ: i64 = -23;
+    /// One-sided window operation response (ack / fetched bytes).
+    pub const WINDOW_RESP: i64 = -24;
 }
 
 /// One peer-to-peer message.
@@ -151,7 +155,8 @@ mod tests {
         use internal_tags::*;
         let tags = [
             SPLIT_GATHER, SPLIT_RESULT, BCAST, REDUCE, ALLREDUCE_RING, GATHER, SCATTER,
-            ALLGATHER, BARRIER_UP, BARRIER_DOWN, SCAN, SENDRECV, ALLTOALL,
+            ALLGATHER, BARRIER_UP, BARRIER_DOWN, SCAN, SENDRECV, ALLTOALL, WINDOW_REQ,
+            WINDOW_RESP,
         ];
         for t in tags {
             assert!(t < 0);

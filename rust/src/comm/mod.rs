@@ -20,6 +20,12 @@
 //! | `comm.split(color, key)`                      | `MPI_Comm_split`   |
 //! | `comm.broadcast::<T>(root, data)`             | `MPI_Bcast`        |
 //! | `comm.all_reduce::<T>(data, f)`               | `MPI_Allreduce`    |
+//! | `comm.i_broadcast::<T>(root, data)`           | `MPI_Ibcast`       |
+//! | `comm.i_all_reduce::<T>(data, f)`             | `MPI_Iallreduce`   |
+//! | `comm.window(region)`                         | `MPI_Win_create`   |
+//! | `window.put(rank, offset, bytes)`             | `MPI_Put`          |
+//! | `window.get(rank, offset, len)`               | `MPI_Get`          |
+//! | `window.fence()`                              | `MPI_Win_fence`    |
 
 mod collectives;
 mod future;
@@ -27,14 +33,18 @@ mod mailbox;
 mod message;
 mod split;
 mod transport;
+mod window;
 
 pub use future::{promise_pair, CommFuture, CommPromise};
 pub use mailbox::Mailbox;
 pub use message::{internal_tags, Message, Pattern, ANY_SOURCE, ANY_TAG, PEER_CONTEXT_FLAG};
 pub use transport::{
     install_master_comm, peer_bytes_received_counter, peer_bytes_sent_counter, ClusterTransport,
-    CommTransport, LocalTransport, RankTable, TransportMode, EP_DELIVER, EP_LOOKUP, EP_RELAY,
+    LocalTransport, RankTable, Transport, TransportMode, EP_DELIVER, EP_LOOKUP, EP_RELAY,
 };
+/// Pre-0.2 name of the [`Transport`] trait, kept for source compatibility.
+pub use transport::Transport as CommTransport;
+pub use window::Window;
 
 use crate::config::IgniteConf;
 use crate::error::{IgniteError, Result};
@@ -88,9 +98,12 @@ struct BcastEntry {
 
 /// Shared state for one "world" of communicating ranks.
 pub struct CommWorld {
-    transport: Arc<dyn CommTransport>,
+    transport: Arc<dyn Transport>,
     size: usize,
     recv_timeout: Duration,
+    /// Per-operation ack timeout for one-sided window put/get
+    /// (`ignite.comm.window.op.timeout.ms`).
+    window_op_timeout: Duration,
     /// Parsed lazily-surfaced: an invalid `ignite.comm.bcast.algo` is a
     /// config error raised at the first `broadcast`, never a silent
     /// default (`IgniteConf::validate` also rejects it at startup).
@@ -120,7 +133,7 @@ impl CommWorld {
 
     /// World over an arbitrary transport (cluster mode).
     pub fn over_transport(
-        transport: Arc<dyn CommTransport>,
+        transport: Arc<dyn Transport>,
         size: usize,
         conf: &IgniteConf,
     ) -> Arc<Self> {
@@ -130,6 +143,9 @@ impl CommWorld {
             recv_timeout: conf
                 .get_duration_ms("ignite.comm.recv.timeout.ms")
                 .unwrap_or(Duration::from_secs(30)),
+            window_op_timeout: conf
+                .get_duration_ms("ignite.comm.window.op.timeout.ms")
+                .unwrap_or(Duration::from_secs(10)),
             // A missing key defaults; a *present but invalid* value is a
             // config error surfaced at the first broadcast. `ring` is
             // rejected here too: it is an allreduce-only shape, and
@@ -164,7 +180,7 @@ impl CommWorld {
         self.size
     }
 
-    pub fn transport(&self) -> &Arc<dyn CommTransport> {
+    pub fn transport(&self) -> &Arc<dyn Transport> {
         &self.transport
     }
 
@@ -185,6 +201,7 @@ impl CommWorld {
             my_rank: world_rank,
             split_seq: AtomicU64::new(0),
             bcast_seq: AtomicU64::new(0),
+            aux_seq: AtomicU64::new(0),
         }
     }
 
@@ -233,6 +250,10 @@ pub struct SparkComm {
     split_seq: AtomicU64,
     /// Number of block-store broadcasts performed (same discipline).
     bcast_seq: AtomicU64,
+    /// Number of non-blocking collectives / window creations performed
+    /// (same collective discipline: members derive matching context ids
+    /// for each operation without coordination).
+    aux_seq: AtomicU64,
 }
 
 impl SparkComm {
@@ -375,6 +396,22 @@ impl SparkComm {
         self.bcast_seq.fetch_add(1, Ordering::SeqCst)
     }
 
+    pub(crate) fn next_aux_seq(&self) -> u64 {
+        self.aux_seq.fetch_add(1, Ordering::SeqCst)
+    }
+
+    pub(crate) fn ranks_arc(&self) -> Arc<Vec<usize>> {
+        Arc::clone(&self.ranks)
+    }
+
+    pub(crate) fn recv_timeout_default(&self) -> Duration {
+        self.world.recv_timeout
+    }
+
+    pub(crate) fn window_op_timeout(&self) -> Duration {
+        self.world.window_op_timeout
+    }
+
     pub(crate) fn make_sub(
         &self,
         context: u64,
@@ -388,6 +425,7 @@ impl SparkComm {
             my_rank,
             split_seq: AtomicU64::new(0),
             bcast_seq: AtomicU64::new(0),
+            aux_seq: AtomicU64::new(0),
         }
     }
 

@@ -26,7 +26,7 @@ use std::sync::Arc;
 /// a peer communicator — its traffic keeps the `peer.bytes.{sent,received}`
 /// attribution — while a split of an ordinary communicator can never
 /// masquerade as one.
-fn derive_context(parent: u64, seq: u64, color: i64) -> u64 {
+pub(crate) fn derive_context(parent: u64, seq: u64, color: i64) -> u64 {
     const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x0000_0100_0000_01B3;
     let mut h = OFFSET;

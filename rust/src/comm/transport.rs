@@ -52,8 +52,11 @@ impl TransportMode {
     }
 }
 
-/// Routing abstraction used by `SparkComm`.
-pub trait CommTransport: Send + Sync {
+/// Routing abstraction used by `SparkComm` — the seam that lets
+/// [`LocalTransport`], the cluster RPC plane, and the vectored zero-copy
+/// send path coexist behind one interface. (Formerly `CommTransport`; an
+/// alias re-export keeps old imports compiling.)
+pub trait Transport: Send + Sync {
     /// Route `msg` toward `msg.dst_world`'s mailbox.
     fn send(&self, msg: Message) -> Result<()>;
     /// Mailbox of a rank hosted in this process, if any.
@@ -82,7 +85,7 @@ impl LocalTransport {
     }
 }
 
-impl CommTransport for LocalTransport {
+impl Transport for LocalTransport {
     fn send(&self, msg: Message) -> Result<()> {
         let mb = self
             .mailboxes
@@ -318,7 +321,7 @@ impl ClusterTransport {
     }
 }
 
-impl CommTransport for ClusterTransport {
+impl Transport for ClusterTransport {
     fn send(&self, msg: Message) -> Result<()> {
         metrics::global().counter("comm.msgs.sent").inc();
         self.note_peer_sent(&msg);
@@ -398,7 +401,7 @@ pub fn install_master_comm(env: &RpcEnv, rank_table: RankTable) {
             let addr = table.read().unwrap().get(&req.0).cloned().ok_or_else(|| {
                 IgniteError::Comm(format!("lookup: unknown rank {}", req.0))
             })?;
-            Ok(Some(to_bytes(&addr.0)))
+            Ok(Some(to_bytes(&addr.0).into()))
         }),
     );
 }

@@ -1,0 +1,530 @@
+//! One-sided communication windows (MPI RMA / GASPI-style put & get).
+//!
+//! A [`Window`] exposes a byte region of one rank's memory to every other
+//! member of its communicator: `put` writes into a remote region and `get`
+//! reads from one **without the target rank calling a matching receive**.
+//! This is the paper's missing half of the MPI surface — two-sided
+//! send/receive and collectives exist since the first prototype; windows
+//! add `MPI_Win_create` / `MPI_Put` / `MPI_Get` / `MPI_Win_fence`
+//! equivalents on top of the *existing* mailbox transport rather than a
+//! new wire protocol:
+//!
+//! - `window(region)` is collective. It derives a private context id
+//!   (same FNV-1a scheme as `split`, color −3) so window traffic can
+//!   never collide with user messages or other windows on the same
+//!   communicator, then starts a per-rank **service thread** that owns
+//!   the exposed region.
+//! - `put`/`get` send a small request message ([`WINDOW_REQ`]) to the
+//!   target's service thread, which applies the operation against the
+//!   region under a lock and acks ([`WINDOW_RESP`]). The origin blocks
+//!   for the ack (bounded by `ignite.comm.window.op.timeout.ms`), so when
+//!   `put` returns the bytes are in place — which is what makes
+//!   [`Window::fence`] a plain barrier.
+//! - Operations targeting the caller's own rank short-circuit to a local
+//!   memcpy under the region lock; no messages are sent.
+//!
+//! Passive-target synchronization (locks) is not modelled; `fence` is the
+//! only epoch primitive, matching the paper's BSP-style examples.
+//!
+//! Metrics: `comm.window.puts`, `comm.window.gets`, `comm.window.bytes`
+//! (payload bytes moved by either operation, counted at the origin).
+
+use super::message::internal_tags::{WINDOW_REQ, WINDOW_RESP};
+use super::{SparkComm, ANY_SOURCE};
+use crate::error::{IgniteError, Result};
+use crate::metrics;
+use crate::ser::Value;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Color fed to `derive_context` for window sub-contexts. Distinct from
+/// the non-blocking collective colors (−2, −4); user split colors are
+/// required to be ≥ 0, so no user context can ever collide.
+const WINDOW_COLOR: i64 = -3;
+
+const OP_PUT: i64 = 0;
+const OP_GET: i64 = 1;
+const OP_STOP: i64 = 2;
+
+const STATUS_OK: i64 = 0;
+
+/// The service thread parks on one long receive instead of polling:
+/// a timed-out `recv_blocking` would leave a stale posted receive behind
+/// that silently swallows the next request. Termination is a self-sent
+/// `OP_STOP`, never a timeout.
+const SVC_RECV_TIMEOUT: Duration = Duration::from_secs(30 * 24 * 3600);
+
+impl SparkComm {
+    /// Expose `region` as a one-sided window (collective — every member
+    /// of the communicator must call it, MPI's `MPI_Win_create`).
+    /// Regions may differ in size per rank; offsets are validated by the
+    /// target. The returned window services remote `put`/`get` until
+    /// [`Window::free`] or drop.
+    pub fn window(&self, region: Vec<u8>) -> Result<Window> {
+        let seq = self.next_aux_seq();
+        let ctx = super::split::derive_context(self.context_id(), seq, WINDOW_COLOR);
+        let comm = Arc::new(self.make_sub(ctx, self.ranks_arc(), self.rank()));
+        let region = Arc::new(Mutex::new(region));
+        let svc = {
+            let comm = Arc::clone(&comm);
+            let region = Arc::clone(&region);
+            std::thread::Builder::new()
+                .name(format!("window-svc-{ctx:x}"))
+                .spawn(move || service_loop(&comm, &region))
+                .map_err(|e| IgniteError::Comm(format!("spawn window service: {e}")))?
+        };
+        let win = Window {
+            comm,
+            region,
+            op_lock: Mutex::new(()),
+            op_timeout: self.window_op_timeout(),
+            failed: AtomicBool::new(false),
+            svc: Some(svc),
+        };
+        // Collective semantics: nobody proceeds until every member's
+        // service thread exists. (Requests arriving before the service's
+        // receive is posted would be buffered by the mailbox anyway; the
+        // barrier is what makes `window` collective like MPI_Win_create.)
+        win.comm.barrier()?;
+        Ok(win)
+    }
+}
+
+/// A one-sided communication window over a [`SparkComm`]; see the module
+/// docs for the protocol.
+pub struct Window {
+    comm: Arc<SparkComm>,
+    region: Arc<Mutex<Vec<u8>>>,
+    /// Serializes remote operations issued *from this process* so each
+    /// request is correlated with its own ack (responses are matched by
+    /// `(context, source rank, WINDOW_RESP)` — FIFO per target).
+    op_lock: Mutex<()>,
+    op_timeout: Duration,
+    /// Set when an ack times out. The abandoned posted receive would
+    /// swallow the late ack of the *next* operation, so the window is
+    /// declared broken rather than risking silent data corruption.
+    failed: AtomicBool,
+    svc: Option<JoinHandle<()>>,
+}
+
+impl Window {
+    /// Paper-style alias for [`SparkComm::window`] (GASPI's segment
+    /// "expose" vocabulary): `Window::expose(&comm, region)`.
+    pub fn expose(comm: &SparkComm, region: Vec<u8>) -> Result<Window> {
+        comm.window(region)
+    }
+
+    /// Rank of the calling process within the window's communicator.
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    /// Number of ranks exposing regions in this window.
+    pub fn size(&self) -> usize {
+        self.comm.size()
+    }
+
+    /// Length in bytes of the locally exposed region.
+    pub fn len(&self) -> usize {
+        self.region.lock().unwrap().len()
+    }
+
+    /// True if the locally exposed region is empty.
+    pub fn is_empty(&self) -> bool {
+        self.region.lock().unwrap().is_empty()
+    }
+
+    /// Copy of the locally exposed region (read your own window memory;
+    /// remote ranks' writes are visible after a [`fence`](Self::fence)).
+    pub fn snapshot(&self) -> Vec<u8> {
+        self.region.lock().unwrap().clone()
+    }
+
+    /// Write `bytes` into rank `target`'s region at `offset` (MPI_Put).
+    /// Blocks until the target has applied the write.
+    pub fn put(&self, target: usize, offset: usize, bytes: &[u8]) -> Result<()> {
+        self.check_usable(target)?;
+        metrics::global().counter("comm.window.puts").inc();
+        metrics::global().counter("comm.window.bytes").add(bytes.len() as u64);
+        if target == self.comm.rank() {
+            let mut region = self.region.lock().unwrap();
+            return apply_put(&mut region, offset, bytes);
+        }
+        let _serial = self.op_lock.lock().unwrap();
+        let req = Value::List(vec![
+            Value::I64(OP_PUT),
+            Value::I64(self.comm.rank() as i64),
+            Value::I64(offset as i64),
+            Value::Bytes(bytes.to_vec()),
+        ]);
+        self.roundtrip(target, req).map(|_| ())
+    }
+
+    /// Read `len` bytes from rank `target`'s region at `offset` (MPI_Get).
+    pub fn get(&self, target: usize, offset: usize, len: usize) -> Result<Vec<u8>> {
+        self.check_usable(target)?;
+        metrics::global().counter("comm.window.gets").inc();
+        metrics::global().counter("comm.window.bytes").add(len as u64);
+        if target == self.comm.rank() {
+            let region = self.region.lock().unwrap();
+            return apply_get(&region, offset, len);
+        }
+        let _serial = self.op_lock.lock().unwrap();
+        let req = Value::List(vec![
+            Value::I64(OP_GET),
+            Value::I64(self.comm.rank() as i64),
+            Value::I64(offset as i64),
+            Value::I64(len as i64),
+        ]);
+        let bytes = self.roundtrip(target, req)?;
+        if bytes.len() != len {
+            return Err(IgniteError::Comm(format!(
+                "window get returned {} bytes, wanted {len}",
+                bytes.len()
+            )));
+        }
+        Ok(bytes)
+    }
+
+    /// Close the current access epoch (MPI_Win_fence): a collective
+    /// barrier. Because every `put`/`get` is synchronously acked by the
+    /// target before returning, the barrier alone is enough to make all
+    /// operations issued before the fence visible to all ranks after it.
+    pub fn fence(&self) -> Result<()> {
+        if self.failed.load(Ordering::SeqCst) {
+            return Err(IgniteError::Comm("window is broken (an operation timed out)".into()));
+        }
+        self.comm.barrier()
+    }
+
+    /// Tear the window down: stops the local service thread. Not
+    /// collective — but callers should fence first so no peer still has
+    /// operations in flight toward this rank.
+    pub fn free(mut self) -> Result<()> {
+        self.shutdown()
+    }
+
+    fn check_usable(&self, target: usize) -> Result<()> {
+        if self.failed.load(Ordering::SeqCst) {
+            return Err(IgniteError::Comm("window is broken (an operation timed out)".into()));
+        }
+        if target >= self.comm.size() {
+            return Err(IgniteError::Comm(format!(
+                "window target rank {target} out of range (size {})",
+                self.comm.size()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Send one request to `target`'s service and block for its ack.
+    fn roundtrip(&self, target: usize, req: Value) -> Result<Vec<u8>> {
+        self.comm.send_internal(target, WINDOW_REQ, req)?;
+        let resp = self
+            .comm
+            .receive_timeout::<Value>(target as i64, WINDOW_RESP, self.op_timeout)
+            .map_err(|e| {
+                self.failed.store(true, Ordering::SeqCst);
+                e
+            })?;
+        match resp {
+            Value::List(mut items) if items.len() == 2 => {
+                let payload = items.pop().expect("len checked");
+                let status = items.pop().expect("len checked");
+                match (status, payload) {
+                    (Value::I64(s), Value::Bytes(b)) if s == STATUS_OK => Ok(b),
+                    (Value::I64(_), Value::Str(msg)) => Err(IgniteError::Comm(msg)),
+                    _ => Err(IgniteError::Comm("malformed window response".into())),
+                }
+            }
+            other => Err(IgniteError::Comm(format!(
+                "malformed window response: {}",
+                other.type_name()
+            ))),
+        }
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        if let Some(handle) = self.svc.take() {
+            let stop = Value::List(vec![
+                Value::I64(OP_STOP),
+                Value::I64(self.comm.rank() as i64),
+                Value::I64(0),
+                Value::I64(0),
+            ]);
+            self.comm.send_internal(self.comm.rank(), WINDOW_REQ, stop)?;
+            let _ = handle.join();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Window {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+impl std::fmt::Debug for Window {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Window")
+            .field("rank", &self.comm.rank())
+            .field("size", &self.comm.size())
+            .field("context", &self.comm.context_id())
+            .finish()
+    }
+}
+
+fn apply_put(region: &mut [u8], offset: usize, bytes: &[u8]) -> Result<()> {
+    let end = offset.checked_add(bytes.len()).filter(|&e| e <= region.len());
+    match end {
+        Some(end) => {
+            region[offset..end].copy_from_slice(bytes);
+            Ok(())
+        }
+        None => Err(IgniteError::Comm(format!(
+            "window put out of bounds: offset {offset} + {} > region {}",
+            bytes.len(),
+            region.len()
+        ))),
+    }
+}
+
+fn apply_get(region: &[u8], offset: usize, len: usize) -> Result<Vec<u8>> {
+    let end = offset.checked_add(len).filter(|&e| e <= region.len());
+    match end {
+        Some(end) => Ok(region[offset..end].to_vec()),
+        None => Err(IgniteError::Comm(format!(
+            "window get out of bounds: offset {offset} + {len} > region {}",
+            region.len()
+        ))),
+    }
+}
+
+/// Per-rank service: owns the exposed region, applies remote put/get.
+/// Exits on a self-sent `OP_STOP` (from `free`/drop) or mailbox poison.
+fn service_loop(comm: &SparkComm, region: &Mutex<Vec<u8>>) {
+    loop {
+        let req = match comm.receive_timeout::<Value>(ANY_SOURCE, WINDOW_REQ, SVC_RECV_TIMEOUT) {
+            Ok(v) => v,
+            // Poisoned mailbox (world teardown) or the 30-day park
+            // elapsed: nothing left to serve.
+            Err(_) => return,
+        };
+        let items = match req {
+            Value::List(items) if items.len() == 4 => items,
+            other => {
+                log::warn!("window service: malformed request ({})", other.type_name());
+                continue;
+            }
+        };
+        let (op, origin) = match (&items[0], &items[1]) {
+            (Value::I64(op), Value::I64(origin)) => (*op, *origin as usize),
+            _ => {
+                log::warn!("window service: malformed request header");
+                continue;
+            }
+        };
+        if op == OP_STOP {
+            return;
+        }
+        let offset = match &items[2] {
+            Value::I64(o) if *o >= 0 => *o as usize,
+            _ => {
+                reply(comm, origin, Err(IgniteError::Comm("negative window offset".into())));
+                continue;
+            }
+        };
+        let outcome = match (op, &items[3]) {
+            (OP_PUT, Value::Bytes(bytes)) => {
+                let mut region = region.lock().unwrap();
+                apply_put(&mut region, offset, bytes).map(|()| Vec::new())
+            }
+            (OP_GET, Value::I64(len)) if *len >= 0 => {
+                let region = region.lock().unwrap();
+                apply_get(&region, offset, *len as usize)
+            }
+            _ => Err(IgniteError::Comm(format!("malformed window op {op}"))),
+        };
+        reply(comm, origin, outcome);
+    }
+}
+
+fn reply(comm: &SparkComm, origin: usize, outcome: Result<Vec<u8>>) {
+    let resp = match outcome {
+        Ok(bytes) => Value::List(vec![Value::I64(STATUS_OK), Value::Bytes(bytes)]),
+        Err(e) => Value::List(vec![Value::I64(1), Value::Str(e.to_string())]),
+    };
+    if let Err(e) = comm.send_internal(origin, WINDOW_RESP, resp) {
+        log::warn!("window service: failed to ack rank {origin}: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::run_local_world;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn put_lands_in_remote_region() {
+        let out = run_local_world(4, |world| {
+            let rank = world.rank();
+            let win = world.window(vec![0u8; 4])?;
+            // Everyone writes its rank into slot `rank` of rank 0's region.
+            win.put(0, rank, &[rank as u8 + 1])?;
+            win.fence()?;
+            Ok(win.snapshot())
+        })
+        .unwrap();
+        assert_eq!(out[0], vec![1, 2, 3, 4]);
+        for region in &out[1..] {
+            assert_eq!(region, &vec![0u8; 4], "only rank 0 was written to");
+        }
+    }
+
+    #[test]
+    fn get_reads_remote_region() {
+        let out = run_local_world(3, |world| {
+            let rank = world.rank();
+            let region = vec![rank as u8 * 10; 5];
+            let win = world.window(region)?;
+            win.fence()?;
+            let next = (rank + 1) % world.size();
+            win.get(next, 1, 3)
+        })
+        .unwrap();
+        assert_eq!(out[0], vec![10, 10, 10]);
+        assert_eq!(out[1], vec![20, 20, 20]);
+        assert_eq!(out[2], vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn local_fast_path_round_trips() {
+        let out = run_local_world(1, |world| {
+            let win = world.window(vec![0u8; 8])?;
+            win.put(0, 3, &[7, 8, 9])?;
+            let got = win.get(0, 2, 5)?;
+            Ok((got, win.snapshot()))
+        })
+        .unwrap();
+        assert_eq!(out[0].0, vec![0, 7, 8, 9, 0]);
+        assert_eq!(out[0].1, vec![0, 0, 0, 7, 8, 9, 0, 0]);
+    }
+
+    #[test]
+    fn out_of_bounds_ops_error_without_breaking_window() {
+        let out = run_local_world(2, |world| {
+            let win = world.window(vec![0u8; 4])?;
+            let peer = 1 - world.rank();
+            let put_err = win.put(peer, 3, &[1, 2]).unwrap_err().to_string();
+            let get_err = win.get(peer, 0, 5).unwrap_err().to_string();
+            // The window stays usable after a rejected op.
+            win.put(peer, 0, &[world.rank() as u8 + 1])?;
+            win.fence()?;
+            Ok((put_err, get_err, win.snapshot()))
+        })
+        .unwrap();
+        for (put_err, get_err, region) in &out {
+            assert!(put_err.contains("out of bounds"), "put error: {put_err}");
+            assert!(get_err.contains("out of bounds"), "get error: {get_err}");
+            assert_eq!(region.len(), 4);
+        }
+        assert_eq!(out[0].2[0], 2, "rank 1 wrote into rank 0");
+        assert_eq!(out[1].2[0], 1, "rank 0 wrote into rank 1");
+    }
+
+    #[test]
+    fn target_rank_out_of_range_rejected() {
+        run_local_world(2, |world| {
+            let win = world.window(vec![0u8; 1])?;
+            let err = win.put(5, 0, &[1]).unwrap_err().to_string();
+            assert!(err.contains("out of range"), "{err}");
+            win.fence()?;
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn two_windows_on_one_comm_are_isolated() {
+        let out = run_local_world(2, |world| {
+            let a = world.window(vec![0u8; 2])?;
+            let b = world.window(vec![9u8; 2])?;
+            let peer = 1 - world.rank();
+            a.put(peer, 0, &[1])?;
+            a.fence()?;
+            b.fence()?;
+            Ok((a.snapshot(), b.snapshot()))
+        })
+        .unwrap();
+        for (a, b) in &out {
+            assert_eq!(a, &vec![1, 0], "window a received the put");
+            assert_eq!(b, &vec![9, 9], "window b untouched");
+        }
+    }
+
+    /// The ISSUE's acceptance property: a halo exchange through one-sided
+    /// puts is bit-identical to the classic two-sided send/receive version
+    /// on random per-rank data.
+    #[test]
+    fn halo_exchange_matches_two_sided() {
+        const N: usize = 16; // interior cells per rank
+        let out = run_local_world(4, |world| {
+            let rank = world.rank();
+            let size = world.size();
+            let left = (rank + size - 1) % size;
+            let right = (rank + 1) % size;
+            let mut rng = Xoshiro256::seeded(0x4a10_5eed ^ rank as u64);
+            let interior: Vec<u8> = (0..N).map(|_| rng.next_below(256) as u8).collect();
+
+            // One-sided: region = [left halo | interior | right halo].
+            let mut region = vec![0u8; N + 2];
+            region[1..=N].copy_from_slice(&interior);
+            let win = world.window(region)?;
+            // My first interior cell becomes my left neighbor's right halo;
+            // my last interior cell becomes my right neighbor's left halo.
+            win.put(left, N + 1, &interior[..1])?;
+            win.put(right, 0, &interior[N - 1..])?;
+            win.fence()?;
+            let one_sided = win.snapshot();
+            win.free()?;
+
+            // Two-sided reference: same exchange with send/receive.
+            world.send(left, 1, interior[0] as i64)?;
+            world.send(right, 2, interior[N - 1] as i64)?;
+            let from_right: i64 = world.receive(right as i64, 1)?;
+            let from_left: i64 = world.receive(left as i64, 2)?;
+            let mut two_sided = vec![0u8; N + 2];
+            two_sided[0] = from_left as u8;
+            two_sided[1..=N].copy_from_slice(&interior);
+            two_sided[N + 1] = from_right as u8;
+
+            Ok((one_sided, two_sided))
+        })
+        .unwrap();
+        for (rank, (one_sided, two_sided)) in out.iter().enumerate() {
+            assert_eq!(one_sided, two_sided, "rank {rank}: halos diverge");
+        }
+    }
+
+    #[test]
+    fn window_metrics_count_ops_and_bytes() {
+        let puts0 = crate::metrics::global().counter("comm.window.puts").get();
+        let bytes0 = crate::metrics::global().counter("comm.window.bytes").get();
+        run_local_world(2, |world| {
+            let win = world.window(vec![0u8; 64])?;
+            let peer = 1 - world.rank();
+            win.put(peer, 0, &[0u8; 32])?;
+            let _ = win.get(peer, 0, 16)?;
+            win.fence()?;
+            Ok(())
+        })
+        .unwrap();
+        let puts = crate::metrics::global().counter("comm.window.puts").get();
+        let bytes = crate::metrics::global().counter("comm.window.bytes").get();
+        assert!(puts >= puts0 + 2, "two ranks put once each");
+        assert!(bytes >= bytes0 + 2 * (32 + 16), "bytes from puts and gets");
+    }
+}

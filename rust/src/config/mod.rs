@@ -30,6 +30,8 @@ pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
     ("ignite.comm.allreduce.algo", "tree", "tree | linear | ring"),
     ("ignite.rpc.connect.timeout.ms", "2000", "TCP connect timeout"),
     ("ignite.rpc.frame.max", "67108864", "Max RPC frame size (bytes)"),
+    ("ignite.rpc.vectored", "true", "Scatter-gather (zero-copy) send framing; off = assemble each frame into one buffer"),
+    ("ignite.comm.window.op.timeout.ms", "10000", "One-sided window put/get acknowledgement deadline"),
     ("ignite.broadcast.block.bytes", "262144", "Broadcast plane block (chunk) size"),
     ("ignite.broadcast.auto.min.bytes", "65536", "Plan Source nodes at least this large ship as broadcast SourceRef"),
     ("ignite.broadcast.fetch.timeout.ms", "5000", "Remote broadcast.fetch RPC timeout"),
@@ -200,6 +202,8 @@ impl IgniteConf {
         self.get_bool("ignite.shuffle.compress")?;
         self.get_usize("ignite.shuffle.fetch.batch.bytes")?;
         self.get_bool("ignite.plan.locality")?;
+        self.get_bool("ignite.rpc.vectored")?;
+        self.get_duration_ms("ignite.comm.window.op.timeout.ms")?;
         self.get_duration_ms("ignite.peer.section.timeout.ms")?;
         self.get_usize("ignite.peer.gang.retries")?;
         // Collective algorithm names are validated per key, so a typo'd
@@ -360,6 +364,12 @@ mod tests {
         conf.get_bool("ignite.shuffle.compress").unwrap();
         assert!(conf.get_usize("ignite.shuffle.fetch.batch.bytes").unwrap() > 0);
         conf.get_bool("ignite.plan.locality").unwrap();
+        // `vectored` is a CI matrix-lane toggle too: parse-only.
+        conf.get_bool("ignite.rpc.vectored").unwrap();
+        assert!(
+            conf.get_duration_ms("ignite.comm.window.op.timeout.ms").unwrap()
+                > Duration::from_millis(0)
+        );
     }
 
     #[test]

@@ -226,6 +226,56 @@
 //! `peer.bytes.{sent,received}` (plus per-worker
 //! `cluster.worker.<id>.peer.bytes.*`), `peer.section.latency`.
 //!
+//! ## Comm plane: one `Transport` seam, zero-copy framing, windows
+//!
+//! Every MPI-style message flows through the [`comm::Transport`] trait —
+//! the routing seam behind [`comm::SparkComm`] that lets the in-process
+//! [`comm::LocalTransport`] (one mailbox per rank), the cluster RPC
+//! plane (`ClusterTransport`, p2p or master-relay per
+//! `ignite.comm.mode`), and the vectored send path below them coexist
+//! behind one interface. Three mechanisms define the plane:
+//!
+//! **Scatter-gather (zero-copy) framing.** An outbound RPC payload is an
+//! [`rpc::RpcBody`]: one owned buffer, or a list of [`rpc::Segment`]s —
+//! owned codec scaffolding interleaved with `Arc`-shared payload bytes.
+//! `Connection::write_frame_vectored` writes the length prefix, the
+//! envelope header, and each segment buffer→wire under one writer lock,
+//! with **no intermediate assembly Vec**; the hot senders (the
+//! `shuffle.fetch_multi` streaming response, `broadcast.fetch` block
+//! serving, and peer `send`) hand their already-encoded bucket/block
+//! bytes to the socket without ever re-copying them into an envelope
+//! body. The wire format is unchanged — `ignite.rpc.vectored` (env
+//! `MPIGNITE_RPC_VECTORED`) selects the path per process, a CI matrix
+//! lane runs the whole suite with it off, and a property test asserts
+//! vectored frames are byte-identical to assembled ones. Metrics:
+//! `rpc.writes.vectored`, `rpc.bytes.zero_copy`.
+//!
+//! **One-sided put/get windows.** [`comm::Window`] layers GASPI-style
+//! RMA over the mailbox transport: [`comm::SparkComm::window`] is
+//! collective — each rank exposes a byte region and a per-window service
+//! thread (on a derived communicator context, so window traffic can
+//! never match user receives) answers remote ops against it.
+//! [`comm::Window::put`] / [`comm::Window::get`] then move bytes to/from
+//! any rank's region **without the target's code participating** —
+//! usable mid-iteration inside peer operators; `fence()` separates
+//! epochs (every put/get is synchronously acknowledged, so the barrier
+//! is a full sync point), and `free()` is the collective teardown.
+//! `examples/halo_exchange.rs` runs the canonical stencil halo exchange
+//! on windows; a property test pins window exchanges bit-identical to
+//! the two-sided send/receive equivalent. Metrics:
+//! `comm.window.{puts,gets,bytes}`; config
+//! `ignite.comm.window.op.timeout.ms` bounds each op's acknowledgement.
+//!
+//! **Non-blocking collectives.** [`comm::SparkComm::i_all_reduce`] and
+//! [`comm::SparkComm::i_broadcast`] return a [`comm::CommFuture`]
+//! immediately and run the collective on a helper thread over a derived
+//! sub-communicator context — in-flight collective traffic cannot match
+//! the caller's point-to-point receives, so compute overlaps
+//! communication until `wait()` collects the result (bit-identical to
+//! the blocking collective: same trees underneath). Multiple handles
+//! complete in any order; `comm.collectives.overlapped` counts
+//! in-flight overlap.
+//!
 //! ## Quickstart (Listing 1 of the paper)
 //!
 //! ```
@@ -280,7 +330,7 @@ pub use error::{IgniteError, Result};
 pub mod prelude {
     pub use crate::broadcast::Broadcast;
     pub use crate::closure::{register_op, register_parallel_fn, register_peer_op, FuncRdd};
-    pub use crate::comm::{CommFuture, SparkComm, ANY_SOURCE, ANY_TAG};
+    pub use crate::comm::{CommFuture, SparkComm, Window, ANY_SOURCE, ANY_TAG};
     pub use crate::config::IgniteConf;
     pub use crate::context::IgniteContext;
     pub use crate::error::{IgniteError, Result};

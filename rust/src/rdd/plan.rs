@@ -710,9 +710,10 @@ impl PlanSpec {
 
     /// The materialized buckets one stage reads **directly**: walking
     /// from the stage's root — the whole plan for the result stage
-    /// (`None`), shuffle `id`'s parent subtree for that map stage —
-    /// collect the ids of the first `Shuffle`/`PeerOp` boundary on every
-    /// path. Those are the buckets the stage's tasks fetch, and
+    /// (`None`), shuffle `id`'s parent subtree for that map stage, peer
+    /// section `id`'s parent subtree for that gang — collect the ids of
+    /// the first `Shuffle`/`PeerOp` boundary on every path. Those are
+    /// the buckets the stage's tasks (or gang ranks) fetch, and
     /// therefore what locality-aware placement weighs per worker.
     /// Empty for source-only stages (nothing to be local *to*).
     pub fn stage_input_ids(&self, stage: Option<u64>) -> Vec<u64> {
@@ -720,7 +721,10 @@ impl PlanSpec {
             None => self,
             Some(id) => match self.find_shuffle(id) {
                 Some(PlanSpec::Shuffle { parent, .. }) => parent.as_ref(),
-                _ => return Vec::new(),
+                _ => match self.find_peer(id) {
+                    Some(PlanSpec::PeerOp { parent, .. }) => parent.as_ref(),
+                    _ => return Vec::new(),
+                },
             },
         };
         let mut out = Vec::new();
@@ -1209,6 +1213,16 @@ mod tests {
             parent: Arc::new(PlanSpec::Source { partitions: vec![vec![]] }),
         };
         assert_eq!(peer.stage_input_ids(None), vec![7]);
+
+        // A peer stage id resolves like a shuffle stage id: the gang's
+        // ranks read whatever boundary feeds the PeerOp's parent.
+        let peer_over_shuffle = PlanSpec::PeerOp {
+            peer_id: 8,
+            name: "p".into(),
+            parent: Arc::new(PlanSpec::Op { op: OpSpec::Identity, parent: s1 }),
+        };
+        assert_eq!(peer_over_shuffle.stage_input_ids(Some(8)), vec![1]);
+        assert_eq!(peer.stage_input_ids(Some(7)), Vec::<u64>::new(), "source-fed gang");
     }
 
     #[test]

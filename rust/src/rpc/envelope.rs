@@ -82,15 +82,38 @@ impl Envelope {
     pub fn one_way(endpoint: &str, from: RpcAddress, body: Vec<u8>) -> Self {
         Envelope { kind: EnvelopeKind::OneWay, endpoint: endpoint.into(), from, request_id: 0, body }
     }
+
+    /// Encode everything *up to* the body bytes — header fields plus the
+    /// body length prefix — so a vectored sender can follow it with the
+    /// payload segments straight from their owning buffers. The `Encode`
+    /// impl delegates here, which keeps the two paths byte-identical by
+    /// construction.
+    pub fn encode_header_into(
+        buf: &mut Vec<u8>,
+        kind: EnvelopeKind,
+        endpoint: &str,
+        from: &RpcAddress,
+        request_id: u64,
+        body_len: usize,
+    ) {
+        buf.push(kind.to_u8());
+        endpoint.encode(buf);
+        from.0.encode(buf);
+        request_id.encode(buf);
+        put_varint(buf, body_len as u64);
+    }
 }
 
 impl Encode for Envelope {
     fn encode(&self, buf: &mut Vec<u8>) {
-        buf.push(self.kind.to_u8());
-        self.endpoint.encode(buf);
-        self.from.0.encode(buf);
-        self.request_id.encode(buf);
-        put_varint(buf, self.body.len() as u64);
+        Envelope::encode_header_into(
+            buf,
+            self.kind,
+            &self.endpoint,
+            &self.from,
+            self.request_id,
+            self.body.len(),
+        );
         buf.extend_from_slice(&self.body);
     }
 }
@@ -149,6 +172,28 @@ mod tests {
     fn client_address_detection() {
         assert!(RpcAddress("client:123:4".into()).is_client());
         assert!(!RpcAddress("10.0.0.1:7077".into()).is_client());
+    }
+
+    #[test]
+    fn header_plus_body_matches_full_encoding() {
+        let e = Envelope {
+            kind: EnvelopeKind::Reply,
+            endpoint: "shuffle.fetch".into(),
+            from: RpcAddress("127.0.0.1:7077".into()),
+            request_id: 99,
+            body: vec![5; 37],
+        };
+        let mut split = Vec::new();
+        Envelope::encode_header_into(
+            &mut split,
+            e.kind,
+            &e.endpoint,
+            &e.from,
+            e.request_id,
+            e.body.len(),
+        );
+        split.extend_from_slice(&e.body);
+        assert_eq!(split, to_bytes(&e));
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //! mixed `ignite.shuffle.compress` settings interoperate.
 
 use crate::error::{IgniteError, Result};
+use crate::metrics;
 use std::borrow::Cow;
+use std::sync::atomic::{AtomicU32, Ordering};
 
 /// Frame tag: payload follows uncompressed.
 pub const FRAME_RAW: u8 = 0;
@@ -196,6 +198,66 @@ pub fn frame(bytes: &[u8], try_compress: bool) -> Vec<u8> {
     out
 }
 
+/// Consecutive raw outcomes before [`AdaptiveGate`] stops attempting LZ.
+const SKIP_AFTER_RAW: u32 = 16;
+/// While the gate is closed, one frame in this many still attempts LZ,
+/// so a workload that turns compressible reopens it.
+const REPROBE_EVERY: u32 = 64;
+
+/// Adaptive compression gate: tracks how recent [`frame`] attempts went
+/// and, after [`SKIP_AFTER_RAW`] consecutive `FRAME_RAW` outcomes (the
+/// LZ pass ran and lost), stops paying for the compression attempt —
+/// incompressible workloads (already-compressed or random payloads)
+/// otherwise burn a full LZ pass per bucket just to ship raw anyway.
+/// One frame in [`REPROBE_EVERY`] is still attempted while closed, so a
+/// shift back to compressible data reopens the gate. Skipped attempts
+/// count on `shuffle.compress.skipped`. The streak is a heuristic:
+/// updates are racy under concurrent map tasks, and a lost increment
+/// only delays the gate, never corrupts a frame.
+#[derive(Debug, Default)]
+pub struct AdaptiveGate {
+    /// Consecutive raw outcomes; past `SKIP_AFTER_RAW`, the overflow
+    /// counts frames skipped while closed (for re-probe scheduling).
+    raw_streak: AtomicU32,
+}
+
+impl AdaptiveGate {
+    pub fn new() -> Self {
+        AdaptiveGate::default()
+    }
+
+    /// Is the gate currently skipping LZ attempts?
+    pub fn is_closed(&self) -> bool {
+        self.raw_streak.load(Ordering::Relaxed) >= SKIP_AFTER_RAW
+    }
+}
+
+/// [`frame`] behind an [`AdaptiveGate`]: identical output byte-for-byte
+/// on every attempted frame, but once the gate closes the LZ pass is
+/// skipped outright (raw tag, no compression attempt). Tiny buckets
+/// (which [`frame`] never compresses) bypass the gate so they neither
+/// open nor close it.
+pub fn frame_adaptive(bytes: &[u8], try_compress: bool, gate: &AdaptiveGate) -> Vec<u8> {
+    if !try_compress || bytes.len() <= 64 {
+        return frame(bytes, false);
+    }
+    let streak = gate.raw_streak.load(Ordering::Relaxed);
+    if streak >= SKIP_AFTER_RAW {
+        let skips = streak - SKIP_AFTER_RAW;
+        if (skips + 1) % REPROBE_EVERY != 0 {
+            gate.raw_streak.store(streak.saturating_add(1), Ordering::Relaxed);
+            metrics::global().counter("shuffle.compress.skipped").inc();
+            return frame(bytes, false);
+        }
+    }
+    let out = frame(bytes, true);
+    match out.first() {
+        Some(&FRAME_LZ) => gate.raw_streak.store(0, Ordering::Relaxed),
+        _ => gate.raw_streak.store(streak.saturating_add(1), Ordering::Relaxed),
+    }
+    out
+}
+
 /// Recover a bucket's encoded bytes from its frame. Raw frames borrow
 /// (no copy on the hot uncompressed path); compressed frames decompress.
 pub fn unframe(framed: &[u8]) -> Result<Cow<'_, [u8]>> {
@@ -313,5 +375,61 @@ mod tests {
         assert!(unframe(&[]).is_err());
         assert!(unframe(&[9, 1, 2]).is_err(), "unknown tag");
         assert!(unframe(&[FRAME_LZ, 1, 0]).is_err(), "truncated header");
+    }
+
+    #[test]
+    fn adaptive_gate_closes_after_persistent_raw_outcomes() {
+        let mut rng = Xoshiro256::seeded(0xADA9);
+        let random: Vec<u8> = (0..512).map(|_| rng.next_below(256) as u8).collect();
+        let gate = AdaptiveGate::new();
+        let skipped = || crate::metrics::global().counter("shuffle.compress.skipped").get();
+        let before = skipped();
+        for _ in 0..16 {
+            // Attempted, lost: identical to the plain framing path.
+            let framed = frame_adaptive(&random, true, &gate);
+            assert_eq!(framed, frame(&random, true));
+            assert_eq!(framed[0], FRAME_RAW);
+        }
+        assert!(gate.is_closed(), "16 consecutive raw outcomes close the gate");
+        let framed = frame_adaptive(&random, true, &gate);
+        assert_eq!(framed[0], FRAME_RAW, "skipped frames still decode");
+        assert_eq!(unframe(&framed).unwrap().as_ref(), &random[..]);
+        // `>=`: the counter is global, and concurrent tests may skip too.
+        assert!(skipped() >= before + 1, "the 17th frame skipped the LZ attempt");
+    }
+
+    #[test]
+    fn adaptive_gate_reopens_on_compressible_reprobe() {
+        let mut rng = Xoshiro256::seeded(0xADA10);
+        let random: Vec<u8> = (0..512).map(|_| rng.next_below(256) as u8).collect();
+        let text: Vec<u8> = b"pad-pad-pad-".iter().copied().cycle().take(2048).collect();
+        let gate = AdaptiveGate::new();
+        for _ in 0..16 {
+            frame_adaptive(&random, true, &gate);
+        }
+        assert!(gate.is_closed());
+        // The workload turns compressible: skipped frames still ship raw
+        // until the scheduled re-probe (one in 64) wins and reopens.
+        for i in 0..63 {
+            let framed = frame_adaptive(&text, true, &gate);
+            assert_eq!(framed[0], FRAME_RAW, "frame {i} rides the closed gate");
+        }
+        let framed = frame_adaptive(&text, true, &gate);
+        assert_eq!(framed[0], FRAME_LZ, "the 64th frame re-probes and wins");
+        assert!(!gate.is_closed(), "a winning probe reopens the gate");
+        assert_eq!(frame_adaptive(&text, true, &gate)[0], FRAME_LZ);
+    }
+
+    #[test]
+    fn adaptive_gate_ignores_tiny_and_uncompressed_frames() {
+        let gate = AdaptiveGate::new();
+        for _ in 0..100 {
+            // ≤ 64 bytes: frame() never compresses, so the gate must not
+            // learn from these.
+            assert_eq!(frame_adaptive(b"tiny", true, &gate)[0], FRAME_RAW);
+            // Compression off entirely: the gate is bypassed too.
+            assert_eq!(frame_adaptive(&[7u8; 512], false, &gate)[0], FRAME_RAW);
+        }
+        assert!(!gate.is_closed(), "bypassed frames never close the gate");
     }
 }

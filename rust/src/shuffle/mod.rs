@@ -317,6 +317,9 @@ pub struct ShuffleManager {
     clock: AtomicU64,
     /// Compress bucket frames (`ignite.shuffle.compress`).
     compress: bool,
+    /// Adaptive skip of LZ attempts on persistently incompressible
+    /// buckets (see [`compress::AdaptiveGate`]).
+    compress_gate: compress::AdaptiveGate,
     /// Streaming frame budget for batched remote fetches.
     batch_bytes: usize,
     /// Cluster plane; `None` in local mode.
@@ -361,6 +364,7 @@ impl ShuffleManager {
             mem_used: AtomicUsize::new(0),
             clock: AtomicU64::new(0),
             compress,
+            compress_gate: compress::AdaptiveGate::new(),
             batch_bytes: batch_bytes.max(1),
             net: RwLock::new(None),
             located: Mutex::new(HashMap::new()),
@@ -409,7 +413,7 @@ impl ShuffleManager {
         metrics::global().counter("shuffle.buckets.written").inc();
         metrics::global().counter("shuffle.bytes.written").add(bytes.len() as u64);
         let raw_framed_len = bytes.len() + 1;
-        let framed = compress::frame(&bytes, self.compress);
+        let framed = compress::frame_adaptive(&bytes, self.compress, &self.compress_gate);
         drop(bytes);
         if framed.first() == Some(&compress::FRAME_LZ) {
             metrics::global().counter("shuffle.bytes.compressed").add(framed.len() as u64);

@@ -48,6 +48,33 @@ fn register_ops() {
             }
             Ok(centroids.into_iter().map(Value::F64Vec).collect())
         });
+        // Iterative reduction where the NEXT iteration's "compute" (a
+        // deterministic value update) runs while the CURRENT iteration's
+        // i_all_reduce is in flight — the overlap the non-blocking
+        // collectives exist for.
+        register_peer_op("peer.test.overlap_iterate", |comm, rows| {
+            let mut local = rows.len() as f64 + comm.rank() as f64;
+            let mut sums = Vec::with_capacity(ITERS);
+            for _ in 0..ITERS {
+                let fut = comm.i_all_reduce(local, |a, b| a + b)?;
+                // Overlapped compute: mutate local state while the
+                // collective on the PRE-update value is still running.
+                local = local * 1.5 + 1.0;
+                sums.push(Value::F64(fut.wait()?));
+            }
+            Ok(sums)
+        });
+        // Same math, blocking all_reduce — the bit-identity reference.
+        register_peer_op("peer.test.blocking_iterate", |comm, rows| {
+            let mut local = rows.len() as f64 + comm.rank() as f64;
+            let mut sums = Vec::with_capacity(ITERS);
+            for _ in 0..ITERS {
+                let sum = comm.all_reduce(local, |a, b| a + b)?;
+                local = local * 1.5 + 1.0;
+                sums.push(Value::F64(sum));
+            }
+            Ok(sums)
+        });
         // Splits the gang's communicator and rings a LARGE payload
         // through the DERIVED communicator only — the split protocol's
         // own messages are tiny, so the per-worker peer-byte assertions
@@ -191,6 +218,45 @@ fn split_traffic_inside_peer_section_keeps_byte_accounting() {
             w.worker_id
         );
     }
+    master.shutdown();
+}
+
+#[test]
+fn i_all_reduce_overlaps_compute_inside_distributed_peer_section() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    register_ops();
+    let c = conf();
+    let (sc, _workers) = setup(&c, 2);
+    let master = sc.master().unwrap().clone();
+
+    // Overlapped lane: each rank starts the collective, advances its
+    // local state while the reduction is in flight, then waits.
+    let overlapped_before = metric("comm.collectives.overlapped");
+    let got = sc.peer_rdd(points(), 2, "peer.test.overlap_iterate").collect().unwrap();
+    let overlapped = metric("comm.collectives.overlapped") - overlapped_before;
+    assert!(
+        overlapped >= ITERS as u64,
+        "each iteration must start a non-blocking collective, got {overlapped}"
+    );
+
+    // Blocking reference lane on the same cluster: the overlap changes
+    // WHEN the reduction runs relative to the update, never the values.
+    let want = sc.peer_rdd(points(), 2, "peer.test.blocking_iterate").collect().unwrap();
+    assert_eq!(got, want, "overlapped collectives must be bit-identical to blocking");
+
+    // Oracle: 2 ranks × 12 rows each, locals 12.0 and 13.0, tripling
+    // through local = local*1.5 + 1 each iteration.
+    let (mut l0, mut l1) = (12.0f64, 13.0f64);
+    let mut oracle = Vec::new();
+    for _ in 0..ITERS {
+        oracle.push(Value::F64(l0 + l1));
+        l0 = l0 * 1.5 + 1.0;
+        l1 = l1 * 1.5 + 1.0;
+    }
+    // Both ranks emit the same per-iteration sums.
+    let expect: Vec<Value> =
+        oracle.iter().cloned().chain(oracle.iter().cloned()).collect();
+    assert_eq!(got, expect, "per-iteration global sums diverged from the oracle");
     master.shutdown();
 }
 

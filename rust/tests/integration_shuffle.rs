@@ -240,6 +240,47 @@ fn plan_job_batches_fetches_and_evicts_under_pressure_bit_identically() {
 }
 
 #[test]
+fn cluster_plan_job_ships_shuffle_bytes_zero_copy() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+
+    // The assembled-frames CI lane (`MPIGNITE_RPC_VECTORED=false`) turns
+    // scatter-gather framing off globally; there the zero-copy counters
+    // legitimately stay flat. Results are still checked either way —
+    // only the metric assertions are lane-gated.
+    let vectored_off = std::env::var("MPIGNITE_RPC_VECTORED")
+        .map(|v| matches!(v.trim().to_ascii_lowercase().as_str(), "false" | "0" | "no"))
+        .unwrap_or(false);
+
+    let local = IgniteContext::local(4);
+    let want = to_map(
+        local
+            .parallelize_values_with(plan_rows(), 4)
+            .reduce_by_key(4, AggSpec::SumI64)
+            .collect()
+            .unwrap(),
+    );
+
+    let zc_before = metric("rpc.bytes.zero_copy");
+    let writes_before = metric("rpc.writes.vectored");
+    let (got, _multi_calls) = run_cluster_plan_job(&conf());
+    assert_eq!(got, want, "vectored-framing result must match the in-memory path");
+
+    if vectored_off {
+        return;
+    }
+    let zc = metric("rpc.bytes.zero_copy") - zc_before;
+    let writes = metric("rpc.writes.vectored") - writes_before;
+    assert!(
+        writes >= 1,
+        "cluster frames must go out through the scatter-gather write path"
+    );
+    assert!(
+        zc >= 1,
+        "fetch_multi bucket bytes must ship buffer-to-wire without reassembly"
+    );
+}
+
+#[test]
 fn fetch_batch_frame_size_changes_round_trips_not_results() {
     let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
 
