@@ -185,6 +185,20 @@ fn main() -> Result<()> {
     println!("\nComm plane — ignite.rpc.* and ignite.comm.window.* configuration:\n");
     print!("{}", ct.render());
 
+    // The job server's multi-tenant surface: session scheduling policy
+    // and quota (`ignite.scheduler.*`) plus master-side straggler
+    // speculation (`ignite.speculation.*`) — straight from KNOWN_KEYS
+    // so the table can't drift from the validated config surface.
+    let mut jt = Table::new(vec!["key", "default", "meaning"]);
+    for (key, default, meaning) in mpignite::config::KNOWN_KEYS.iter().filter(|(key, _, _)| {
+        key.starts_with("ignite.scheduler.") || key.starts_with("ignite.speculation.")
+    }) {
+        jt.row(vec![*key, *default, *meaning]);
+    }
+    assert!(!jt.is_empty(), "scheduler/speculation config keys must exist");
+    println!("\nJob server — ignite.scheduler.* and ignite.speculation.* configuration:\n");
+    print!("{}", jt.render());
+
     println!("\napi_table OK ({} methods verified)", rows.len());
     Ok(())
 }

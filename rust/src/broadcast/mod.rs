@@ -56,6 +56,17 @@ use std::sync::{Arc, Mutex, RwLock};
 /// Default block size when `ignite.broadcast.block.bytes` is absent.
 pub const DEFAULT_BLOCK_BYTES: usize = 256 * 1024;
 
+/// Smoothing factor for the per-peer fetch-latency EWMA — the weight of
+/// the newest sample (the rest stays on the history), reactive enough to
+/// demote a peer that turned slow within a few blocks without thrashing
+/// on one noisy sample.
+const PEER_EWMA_ALPHA: f64 = 0.3;
+
+/// Latency sample charged to a peer whose fetch *failed* — far above any
+/// real block pull, so a flaky holder sinks to the back of the candidate
+/// order instead of being retried first on every block.
+const PEER_FAILURE_PENALTY_SECS: f64 = 1.0;
+
 /// `(broadcast id, block index)` — the unit of distribution.
 type BlockKey = (u64, usize);
 
@@ -159,6 +170,11 @@ pub struct BroadcastManager {
     /// not each pull it over the wire (that would break the
     /// once-per-worker guarantee the whole plane exists for).
     fetch_gates: Mutex<HashMap<u64, Arc<Mutex<()>>>>,
+    /// Per-peer EWMA of observed `broadcast.fetch.latency` seconds
+    /// (failed fetches charged [`PEER_FAILURE_PENALTY_SECS`]). Drives
+    /// holder ordering in [`fetch_block`](Self::fetch_block): measured
+    /// peers fastest-first ahead of unmeasured ones.
+    peer_latency: Mutex<HashMap<String, f64>>,
     /// Cluster plane; `None` in local mode.
     net: RwLock<Option<Arc<dyn BroadcastNet>>>,
 }
@@ -192,6 +208,7 @@ impl BroadcastManager {
             mem_used: AtomicUsize::new(0),
             meta: Mutex::new(HashMap::new()),
             fetch_gates: Mutex::new(HashMap::new()),
+            peer_latency: Mutex::new(HashMap::new()),
             net: RwLock::new(None),
         }
     }
@@ -443,8 +460,53 @@ impl BroadcastManager {
         Ok(out)
     }
 
-    /// Pull one block: every live peer holder in spread order, then the
-    /// master/driver copy. A dead peer costs one failed RPC, not the job.
+    /// Fold one observed per-peer fetch latency (seconds) into that
+    /// peer's EWMA; the first sample seeds the average.
+    fn note_peer_latency(&self, addr: &str, secs: f64) {
+        let mut lat = self.peer_latency.lock().unwrap();
+        match lat.get_mut(addr) {
+            Some(e) => *e = PEER_EWMA_ALPHA * secs + (1.0 - PEER_EWMA_ALPHA) * *e,
+            None => {
+                lat.insert(addr.to_string(), secs);
+            }
+        }
+    }
+
+    /// This process's current latency estimate for one peer, if any
+    /// block has ever been pulled from (or failed against) it.
+    pub fn peer_latency_estimate(&self, addr: &str) -> Option<f64> {
+        self.peer_latency.lock().unwrap().get(addr).copied()
+    }
+
+    /// Reorder holder candidates by fetch-latency EWMA, fastest first:
+    /// measured peers ascending, unmeasured ones after them in their
+    /// incoming (spread-rotated) order — the rotation keeps first
+    /// contact with unmeasured holders spread across the fleet, the
+    /// EWMA keeps repeat business on whoever actually answers fastest.
+    /// Bumps `broadcast.holder.reorders` when history changed the order.
+    fn order_holders(&self, peers: &mut [String]) {
+        if peers.len() < 2 {
+            return;
+        }
+        let before = peers.to_vec();
+        {
+            let lat = self.peer_latency.lock().unwrap();
+            peers.sort_by(|a, b| match (lat.get(a), lat.get(b)) {
+                (Some(x), Some(y)) => x.total_cmp(y),
+                (Some(_), None) => std::cmp::Ordering::Less,
+                (None, Some(_)) => std::cmp::Ordering::Greater,
+                (None, None) => std::cmp::Ordering::Equal,
+            });
+        }
+        if *peers != *before {
+            metrics::global().counter("broadcast.holder.reorders").inc();
+        }
+    }
+
+    /// Pull one block: every live peer holder — spread-rotated, then
+    /// EWMA-reordered fastest-first — then the master/driver copy. A
+    /// dead peer costs one failed RPC (and a latency penalty demoting it
+    /// for later blocks), not the job.
     fn fetch_block(
         &self,
         net: &dyn BroadcastNet,
@@ -457,16 +519,19 @@ impl BroadcastManager {
         let master = net.master_addr();
         let empty: Vec<String> = Vec::new();
         let holders = loc.holders.get(&block).unwrap_or(&empty);
-        let mut peers: Vec<&String> =
-            holders.iter().filter(|a| **a != me && **a != master).collect();
+        let mut peers: Vec<String> =
+            holders.iter().filter(|a| **a != me && **a != master).cloned().collect();
         if !peers.is_empty() {
             let n = peers.len();
             peers.rotate_left(spread.wrapping_add(block) % n);
         }
+        self.order_holders(&mut peers);
         let t0 = std::time::Instant::now();
-        for addr in peers {
+        for addr in &peers {
+            let attempt = std::time::Instant::now();
             match net.fetch(addr, id, block) {
                 Ok(bytes) => {
+                    self.note_peer_latency(addr, attempt.elapsed().as_secs_f64());
                     metrics::global().counter("broadcast.fetches.peer").inc();
                     metrics::global()
                         .counter("broadcast.bytes.fetched.peer")
@@ -475,6 +540,7 @@ impl BroadcastManager {
                     return Ok(bytes);
                 }
                 Err(e) => {
+                    self.note_peer_latency(addr, PEER_FAILURE_PENALTY_SECS);
                     metrics::global().counter("broadcast.fetch.peer.failures").inc();
                     log::warn!(
                         target: "broadcast",
@@ -841,6 +907,103 @@ mod tests {
         assert_eq!(bm.fetch_value_bytes(13).unwrap(), payload);
         assert_eq!(net.peer_fetches.load(Ordering::SeqCst), 0);
         assert!(net.master_fetches.load(Ordering::SeqCst) > 0);
+    }
+
+    #[test]
+    fn holder_order_follows_latency_ewma_fastest_first() {
+        let payload = to_bytes(&Value::I64Vec((0..64).collect()));
+        let bm = BroadcastManager::new(16);
+
+        /// Two listed peers; records which addresses were fetched from,
+        /// in order. Both always answer.
+        struct TwoPeerNet {
+            chunks: Vec<Vec<u8>>,
+            fetched: Mutex<Vec<String>>,
+        }
+
+        impl BroadcastNet for TwoPeerNet {
+            fn register(&self, _: u64, _: usize, _: usize) -> Result<()> {
+                Ok(())
+            }
+            fn locate(&self, _: u64) -> Result<BroadcastLocations> {
+                let mut holders = HashMap::new();
+                for b in 0..self.chunks.len() {
+                    holders.insert(
+                        b,
+                        vec![
+                            "master:0".to_string(),
+                            "peer:slow".to_string(),
+                            "peer:fast".to_string(),
+                        ],
+                    );
+                }
+                Ok(BroadcastLocations {
+                    num_blocks: self.chunks.len(),
+                    total_bytes: self.chunks.iter().map(Vec::len).sum(),
+                    holders,
+                })
+            }
+            fn fetch(&self, addr: &str, _: u64, block: usize) -> Result<Vec<u8>> {
+                self.fetched.lock().unwrap().push(addr.to_string());
+                Ok(self.chunks[block].clone())
+            }
+            fn local_addr(&self) -> String {
+                "self:2".into()
+            }
+            fn master_addr(&self) -> String {
+                "master:0".into()
+            }
+        }
+
+        let net =
+            Arc::new(TwoPeerNet { chunks: chunk_bytes(&payload, 16), fetched: Mutex::new(Vec::new()) });
+        bm.set_net(net.clone());
+        // Seed history: `peer:fast` has a much better latency EWMA than
+        // `peer:slow`, so whatever the spread rotation says, every block
+        // must be pulled from `peer:fast` first (and it answers, so it
+        // is the only peer contacted at all).
+        bm.note_peer_latency("peer:slow", 0.5);
+        bm.note_peer_latency("peer:fast", 0.001);
+        let reorders0 = metrics::global().counter("broadcast.holder.reorders").get();
+        assert_eq!(bm.fetch_value_bytes(55).unwrap(), payload);
+        let fetched = net.fetched.lock().unwrap().clone();
+        assert!(!fetched.is_empty());
+        assert!(
+            fetched.iter().all(|a| a == "peer:fast"),
+            "EWMA must route every block to the fast peer, got {fetched:?}"
+        );
+        // The rotation puts `peer:slow` first for at least one block
+        // (spread varies per block), so the EWMA reordering must have
+        // fired at least once.
+        assert!(
+            metrics::global().counter("broadcast.holder.reorders").get() > reorders0,
+            "reordering fastest-first must bump broadcast.holder.reorders"
+        );
+        // Successful pulls refine the fast peer's EWMA; the slow peer's
+        // seeded estimate is untouched (it was never contacted).
+        assert!(bm.peer_latency_estimate("peer:fast").unwrap() < 0.5);
+        assert_eq!(bm.peer_latency_estimate("peer:slow").unwrap(), 0.5);
+    }
+
+    #[test]
+    fn failed_peer_is_penalized_behind_a_measured_one() {
+        let bm = BroadcastManager::new(16);
+        bm.note_peer_latency("peer:ok", 0.010);
+        bm.note_peer_latency("peer:flaky", PEER_FAILURE_PENALTY_SECS);
+        let mut order = vec!["peer:flaky".to_string(), "peer:ok".to_string()];
+        bm.order_holders(&mut order);
+        assert_eq!(order, vec!["peer:ok".to_string(), "peer:flaky".to_string()]);
+        // Unmeasured holders keep their incoming order, after measured ones.
+        let mut mixed = vec![
+            "peer:new-b".to_string(),
+            "peer:ok".to_string(),
+            "peer:new-a".to_string(),
+        ];
+        bm.order_holders(&mut mixed);
+        assert_eq!(
+            mixed,
+            vec!["peer:ok".to_string(), "peer:new-b".to_string(), "peer:new-a".to_string()]
+        );
     }
 
     #[test]

@@ -24,12 +24,13 @@ use crate::comm::{
 use crate::config::IgniteConf;
 use crate::error::{IgniteError, Result};
 use crate::fault::{HeartbeatMonitor, TaskId};
+use crate::jobserver::{JobHandle, JobState as ServerJobState, JobTable, SchedulerPolicy, SlotLedger};
 use crate::metrics;
 use crate::rdd::{run_shuffle_map_task, PlanSpec, PlanStage, PlanStageKind};
 use crate::rpc::{Envelope, RpcAddress, RpcBody, RpcEnv, Segment};
 use crate::ser::{from_bytes, put_varint, to_bytes, Value};
 use log::{info, warn};
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
@@ -97,6 +98,25 @@ pub const EP_PEER_RUN: &str = "peer.run";
 /// Worker → master: one gang rank finished (rank-level, not batched —
 /// the first failure aborts the whole gang).
 pub const EP_PEER_RESULT: &str = "master.peer_result";
+/// Job-server control plane (multi-tenant admission): driver sessions
+/// submit encoded plans asynchronously, poll their state, and cancel
+/// them. Many sessions submit concurrently; their stages interleave on
+/// the cluster as the slot ledger admits them.
+pub const EP_JOB_SUBMIT: &str = "job.submit";
+pub const EP_JOB_STATUS: &str = "job.status";
+pub const EP_JOB_CANCEL: &str = "job.cancel";
+/// Elastic workers: `worker.join` registers a worker into a RUNNING
+/// cluster (same handler as `master.register` — the job server starts
+/// placing tasks on the newcomer from its next dispatch round);
+/// `worker.drain` gracefully retires one (stop placing, let running
+/// tasks finish; the process keeps serving shuffle/broadcast fetches).
+pub const EP_WORKER_JOIN: &str = "worker.join";
+pub const EP_WORKER_DRAIN: &str = "worker.drain";
+/// Batch-spanning worker shuffle service: one framed stream per remote
+/// peer carries buckets for EVERY reduce task in a `task.run` batch
+/// (arbitrary `(map_idx, reduce_idx)` pairs), collapsing remote
+/// round-trips from O(workers × reduce tasks) to O(workers) per batch.
+pub const EP_SHUFFLE_FETCH_BATCH: &str = "shuffle.fetch_batch";
 
 struct WorkerInfo {
     addr: RpcAddress,
@@ -113,15 +133,22 @@ struct JobState {
 }
 
 /// Driver-side state of one in-flight plan stage: per-task result slots
-/// plus a countdown of outstanding **tasks** (workers report each task
-/// as it finishes, so a straggler no longer holds back its batch-mates).
-/// A failure keeps the worker-side recoverability classification (the
-/// typed error does not survive the wire) so the driver can decide
-/// between retrying the stage on survivors and failing the job.
+/// plus a countdown of tasks not yet **first-filled** (workers report
+/// each task as it finishes; a speculative duplicate's late report finds
+/// its slot taken and only releases the loser's ledger hold). The stage
+/// scheduler drains `task_events` (every report, winner and loser, so it
+/// can release per-launch slot holds) and `failures` (worker-reported
+/// batch failures with their recoverability classification — the typed
+/// error does not survive the wire) between dispatch rounds.
 struct PlanJobState {
     results: Mutex<Vec<Option<Vec<Value>>>>,
     remaining: AtomicU64,
-    error: Mutex<Option<(String, bool)>>,
+    /// Every ok-report as `(task, worker)`, in arrival order.
+    task_events: Mutex<Vec<(u64, u64)>>,
+    /// Every failed batch as `(worker, error, recoverable)`.
+    failures: Mutex<Vec<(u64, String, bool)>>,
+    /// Set for `job.submit` jobs: per-session task metrics + counters.
+    handle: Option<Arc<JobHandle>>,
     wake: Condvar,
     wake_lock: Mutex<()>,
 }
@@ -159,9 +186,25 @@ pub struct Master {
     peer_jobs: Mutex<HashMap<u64, Arc<PeerJobState>>>,
     next_worker: AtomicU64,
     next_job: AtomicU64,
-    /// Serializes jobs: the prototype runs one parallel execution at a
-    /// time (each `execute` is an implicit barrier anyway).
+    /// Serializes parallel-fn jobs and peer GANGS (both own the single
+    /// rank-routing namespace — the master's `rank_table` and every
+    /// worker's transport table — which concurrent gangs would corrupt).
+    /// Plan stages do NOT take this lock: stages from different jobs
+    /// overlap freely, and overlap with a running gang, mediated only by
+    /// the slot ledger.
     job_serial: Mutex<()>,
+    /// The job server's slot ledger: every plan-task launch and every
+    /// gang placement acquires here, so concurrent jobs cannot
+    /// oversubscribe a worker and admission policy is enforced.
+    ledger: SlotLedger,
+    /// Submitted-job registry behind `job.submit`/`job.status`/`job.cancel`.
+    job_table: JobTable,
+    /// Shuffle ids already GC'd (`job.clear`/`shuffle.clear`): a
+    /// straggling registration — e.g. a speculative loser finishing
+    /// after its job ended — must not resurrect a pruned table entry.
+    /// Ids are never reused, so tombstones are correct forever; they
+    /// cost 8 bytes per finished shuffle.
+    cleared_shuffles: Mutex<HashSet<u64>>,
     /// Map-output table: shuffle → locations + per-reduce byte totals.
     map_outputs: Mutex<HashMap<u64, MapOutputEntry>>,
     /// Broadcast block-location table: id → shape + per-block holders.
@@ -203,6 +246,7 @@ impl Master {
         env.set_vectored(conf.get_bool("ignite.rpc.vectored").unwrap_or(true));
         let rank_table: RankTable = Arc::new(RwLock::new(HashMap::new()));
         install_master_comm(&env, rank_table.clone());
+        let (policy, quota) = SchedulerPolicy::from_conf(conf)?;
         let master = Arc::new(Master {
             env: env.clone(),
             conf: conf.clone(),
@@ -215,6 +259,9 @@ impl Master {
             next_worker: AtomicU64::new(1),
             next_job: AtomicU64::new(1),
             job_serial: Mutex::new(()),
+            ledger: SlotLedger::new(policy, quota),
+            job_table: JobTable::new(),
+            cleared_shuffles: Mutex::new(HashSet::new()),
             map_outputs: Mutex::new(HashMap::new()),
             broadcasts: Mutex::new(HashMap::new()),
             broadcast_store: crate::broadcast::BroadcastManager::new(
@@ -223,20 +270,113 @@ impl Master {
             ),
         });
 
+        // Registration doubles as elastic join: the handler works the
+        // same whether the cluster is idle or mid-job (the job server's
+        // dispatch loop re-reads the live-worker set every round, so a
+        // newcomer starts receiving tasks immediately), and is installed
+        // under both names — `master.register` (startup) and
+        // `worker.join` (the job-server protocol name).
+        let m = Arc::clone(&master);
+        let join: crate::rpc::Handler = Arc::new(move |envelope: &Envelope| {
+            let req: RegisterReq = from_bytes(&envelope.body)?;
+            let id = m.next_worker.fetch_add(1, Ordering::SeqCst);
+            m.workers.lock().unwrap().insert(
+                id,
+                WorkerInfo { addr: RpcAddress(req.addr.clone()), slots: req.slots as usize },
+            );
+            m.ledger.register_worker(id, (req.slots as usize).max(1));
+            m.monitor.beat(id);
+            info!(target: "cluster", "worker {id} registered from {}", req.addr);
+            metrics::global().counter("cluster.workers.registered").inc();
+            Ok(Some(to_bytes(&RegisterResp { worker_id: id }).into()))
+        });
+        env.register(EP_REGISTER, join.clone());
+        env.register(EP_WORKER_JOIN, join);
+
         let m = Arc::clone(&master);
         env.register(
-            EP_REGISTER,
+            EP_WORKER_DRAIN,
             Arc::new(move |envelope: &Envelope| {
-                let req: RegisterReq = from_bytes(&envelope.body)?;
-                let id = m.next_worker.fetch_add(1, Ordering::SeqCst);
-                m.workers.lock().unwrap().insert(
-                    id,
-                    WorkerInfo { addr: RpcAddress(req.addr.clone()), slots: req.slots as usize },
-                );
-                m.monitor.beat(id);
-                info!(target: "cluster", "worker {id} registered from {}", req.addr);
-                metrics::global().counter("cluster.workers.registered").inc();
-                Ok(Some(to_bytes(&RegisterResp { worker_id: id }).into()))
+                let req: WorkerDrainReq = from_bytes(&envelope.body)?;
+                let known = m.workers.lock().unwrap().contains_key(&req.worker_id);
+                if known {
+                    m.ledger.set_draining(req.worker_id, true);
+                    info!(target: "cluster", "worker {} draining", req.worker_id);
+                    metrics::global().counter("cluster.workers.draining").inc();
+                }
+                let resp = WorkerDrainResp {
+                    known,
+                    in_flight: m.ledger.in_flight(req.worker_id) as u64,
+                };
+                Ok(Some(to_bytes(&resp).into()))
+            }),
+        );
+
+        // Job-server control plane. Submit acks immediately (handlers
+        // never block) and runs the job on a named thread; many
+        // sessions' jobs run concurrently, interleaved by the ledger.
+        let m = Arc::clone(&master);
+        env.register(
+            EP_JOB_SUBMIT,
+            Arc::new(move |envelope: &Envelope| {
+                let req: JobSubmitReq = from_bytes(&envelope.body)?;
+                let plan: PlanSpec = from_bytes(&req.plan)?;
+                let job_id = m.next_job.fetch_add(1, Ordering::SeqCst);
+                let handle = m.job_table.register(job_id, req.session_id);
+                let m2 = Arc::clone(&m);
+                std::thread::Builder::new()
+                    .name(format!("jobserver-{job_id}"))
+                    .spawn(move || {
+                        handle.set_running();
+                        let outcome = m2
+                            .run_plan_session(&plan, handle.session_id, Some(handle.clone()))
+                            .map(|parts| parts.into_iter().flatten().collect());
+                        handle.finish(outcome);
+                    })
+                    .expect("spawn job server thread");
+                Ok(Some(to_bytes(&JobSubmitResp { job_id }).into()))
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_JOB_STATUS,
+            Arc::new(move |envelope: &Envelope| {
+                let req: JobStatusReq = from_bytes(&envelope.body)?;
+                let resp = match m.job_table.get(req.job_id) {
+                    Some(handle) => {
+                        let state = handle.state();
+                        JobStatusResp {
+                            state: state.tag(),
+                            error: match &state {
+                                ServerJobState::Failed(e) => e.clone(),
+                                _ => String::new(),
+                            },
+                            tasks_completed: handle.tasks_completed.load(Ordering::SeqCst),
+                            results: handle.results(),
+                        }
+                    }
+                    None => JobStatusResp {
+                        state: ServerJobState::Failed(String::new()).tag(),
+                        error: format!("unknown job {}", req.job_id),
+                        tasks_completed: 0,
+                        results: None,
+                    },
+                };
+                Ok(Some(to_bytes(&resp).into()))
+            }),
+        );
+
+        let m = Arc::clone(&master);
+        env.register(
+            EP_JOB_CANCEL,
+            Arc::new(move |envelope: &Envelope| {
+                let req: JobCancelReq = from_bytes(&envelope.body)?;
+                if let Some(handle) = m.job_table.get(req.job_id) {
+                    handle.cancel();
+                    info!(target: "cluster", "job {} cancel requested", req.job_id);
+                }
+                Ok(Some(RpcBody::Bytes(Vec::new()))) // ack
             }),
         );
 
@@ -279,14 +419,37 @@ impl Master {
             EP_SHUFFLE_REGISTER,
             Arc::new(move |envelope: &Envelope| {
                 let reg: ShuffleRegister = from_bytes(&envelope.body)?;
+                // A registration racing the job's GC (a speculative loser
+                // finishing after job end) must not resurrect the entry.
+                if m.cleared_shuffles.lock().unwrap().contains(&reg.shuffle) {
+                    metrics::global().counter("cluster.shuffle.stale_registrations").inc();
+                    return Ok(Some(RpcBody::Bytes(Vec::new())));
+                }
+                let live: HashSet<String> =
+                    m.live_workers().into_iter().map(|(_, addr)| addr.0).collect();
                 let mut table = m.map_outputs.lock().unwrap();
                 let entry = table.entry(reg.shuffle).or_default();
                 entry.total_maps = reg.total_maps as usize;
-                entry.locations.insert(reg.map_idx as usize, reg.addr);
-                entry.reduce_bytes.insert(
-                    reg.map_idx as usize,
-                    reg.bucket_bytes.iter().map(|(r, b)| (*r as usize, *b)).collect(),
-                );
+                // First LIVE registration wins, atomically under the
+                // table lock: a speculative duplicate that loses the race
+                // is dropped here (its locally-held bucket is GC'd with
+                // the job), while a re-registration after the original
+                // holder died — fine-grained recovery re-running just
+                // that map task — replaces the dead location.
+                let idx = reg.map_idx as usize;
+                let duplicate = entry
+                    .locations
+                    .get(&idx)
+                    .is_some_and(|a| *a != reg.addr && live.contains(a));
+                if duplicate {
+                    metrics::global().counter("cluster.shuffle.speculative_losses").inc();
+                } else {
+                    entry.locations.insert(idx, reg.addr);
+                    entry.reduce_bytes.insert(
+                        idx,
+                        reg.bucket_bytes.iter().map(|(r, b)| (*r as usize, *b)).collect(),
+                    );
+                }
                 metrics::global().counter("cluster.shuffle.registrations").inc();
                 Ok(Some(RpcBody::Bytes(Vec::new()))) // ack
             }),
@@ -332,23 +495,37 @@ impl Master {
                 let job = m.plan_jobs.lock().unwrap().get(&pr.job_id).cloned();
                 if let Some(job) = job {
                     if pr.ok {
-                        let mut slots = job.results.lock().unwrap();
                         for (idx, rows) in pr.results {
-                            let idx = idx as usize;
-                            if idx < slots.len() && slots[idx].is_none() {
-                                slots[idx] = Some(rows);
+                            // First fill wins: a speculative duplicate's
+                            // late report finds its slot taken and does
+                            // not decrement `remaining` — but its event
+                            // is still recorded so the stage scheduler
+                            // releases the loser's ledger hold.
+                            let first = {
+                                let mut slots = job.results.lock().unwrap();
+                                let i = idx as usize;
+                                if i < slots.len() && slots[i].is_none() {
+                                    slots[i] = Some(rows);
+                                    true
+                                } else {
+                                    false
+                                }
+                            };
+                            if first {
+                                job.remaining.fetch_sub(1, Ordering::SeqCst);
+                                if let Some(handle) = &job.handle {
+                                    handle.task_completed();
+                                }
                             }
+                            job.task_events.lock().unwrap().push((idx, pr.worker_id));
                         }
                     } else {
-                        let mut err = job.error.lock().unwrap();
-                        if err.is_none() {
-                            *err = Some((
-                                format!("worker {}: {}", pr.worker_id, pr.error),
-                                pr.recoverable,
-                            ));
-                        }
+                        job.failures.lock().unwrap().push((
+                            pr.worker_id,
+                            format!("worker {}: {}", pr.worker_id, pr.error),
+                            pr.recoverable,
+                        ));
                     }
-                    job.remaining.fetch_sub(1, Ordering::SeqCst);
                     let _g = job.wake_lock.lock().unwrap();
                     job.wake.notify_all();
                 }
@@ -392,8 +569,10 @@ impl Master {
                 let req: ShuffleClear = from_bytes(&envelope.body)?;
                 {
                     let mut table = m.map_outputs.lock().unwrap();
+                    let mut cleared = m.cleared_shuffles.lock().unwrap();
                     for id in &req.shuffles {
                         table.remove(id);
+                        cleared.insert(*id);
                     }
                 }
                 metrics::global().counter("cluster.shuffle.clears").inc();
@@ -519,8 +698,10 @@ impl Master {
                 let req: JobClear = from_bytes(&envelope.body)?;
                 {
                     let mut table = m.map_outputs.lock().unwrap();
+                    let mut cleared = m.cleared_shuffles.lock().unwrap();
                     for id in &req.shuffles {
                         table.remove(id);
+                        cleared.insert(*id);
                     }
                 }
                 m.drop_broadcasts(&req.broadcasts);
@@ -734,7 +915,33 @@ impl Master {
     /// map-output table, the broadcast table, and the workers' buckets
     /// and broadcast blocks for this job are all pruned together.
     pub fn run_plan(&self, plan: &PlanSpec) -> Result<Vec<Vec<Value>>> {
-        let _serial = self.job_serial.lock().unwrap();
+        // Embedded drivers run as the anonymous session 0; the fair/quota
+        // admission math treats it like any other tenant.
+        self.run_plan_session(plan, 0, None)
+    }
+
+    /// [`run_plan`](Self::run_plan) under a driver session: the job
+    /// server's concurrent entry point. NOT serialized against other
+    /// jobs — concurrent sessions' stages interleave on the cluster,
+    /// admitted task-by-task through the slot ledger.
+    fn run_plan_session(
+        &self,
+        plan: &PlanSpec,
+        session: u64,
+        handle: Option<Arc<JobHandle>>,
+    ) -> Result<Vec<Vec<Value>>> {
+        self.ledger.begin_session(session);
+        let outcome = self.run_plan_session_inner(plan, session, handle);
+        self.ledger.end_session(session);
+        outcome
+    }
+
+    fn run_plan_session_inner(
+        &self,
+        plan: &PlanSpec,
+        session: u64,
+        handle: Option<Arc<JobHandle>>,
+    ) -> Result<Vec<Vec<Value>>> {
         metrics::global().counter("cluster.plans.launched").inc();
 
         // Ship large sources by reference: every `Source` node whose
@@ -794,7 +1001,14 @@ impl Master {
         let mut last_err = None;
         let mut outcome = None;
         for attempt in 0..budget {
-            match self.try_plan_job(&plan, &plan_bytes, &stages, plan.num_partitions()) {
+            match self.try_plan_job(
+                &plan,
+                &plan_bytes,
+                &stages,
+                plan.num_partitions(),
+                session,
+                handle.as_ref(),
+            ) {
                 Ok(parts) => {
                     outcome = Some(Ok(parts));
                     break;
@@ -849,8 +1063,13 @@ impl Master {
         plan_bytes: &[u8],
         stages: &[PlanStage],
         num_result_tasks: usize,
+        session: u64,
+        handle: Option<&Arc<JobHandle>>,
     ) -> Result<Vec<Vec<Value>>> {
         for stage in stages {
+            if handle.is_some_and(|h| h.is_cancelled()) {
+                return Err(IgniteError::Task("job cancelled".into()));
+            }
             match stage.kind {
                 PlanStageKind::Shuffle => {
                     info!(
@@ -858,7 +1077,14 @@ impl Master {
                         "plan map stage shuffle {} ({} tasks)", stage.id, stage.num_tasks
                     );
                     let inputs = plan.stage_input_ids(Some(stage.id));
-                    self.try_plan_stage(plan_bytes, Some(stage.id), stage.num_tasks, &inputs)?;
+                    self.try_plan_stage(
+                        plan_bytes,
+                        Some(stage.id),
+                        stage.num_tasks,
+                        &inputs,
+                        session,
+                        handle,
+                    )?;
                 }
                 PlanStageKind::Peer => {
                     info!(
@@ -866,12 +1092,12 @@ impl Master {
                         "plan peer section {} ({} ranks)", stage.id, stage.num_tasks
                     );
                     let inputs = plan.stage_input_ids(Some(stage.id));
-                    self.try_peer_stage(plan_bytes, stage.id, stage.num_tasks, &inputs)?;
+                    self.try_peer_stage(plan_bytes, stage.id, stage.num_tasks, &inputs, session)?;
                 }
             }
         }
         let inputs = plan.stage_input_ids(None);
-        self.try_plan_stage(plan_bytes, None, num_result_tasks, &inputs)
+        self.try_plan_stage(plan_bytes, None, num_result_tasks, &inputs, session, handle)
     }
 
     /// Locality-aware task placement for one `task.run` stage: sum each
@@ -950,15 +1176,23 @@ impl Master {
         peer_id: u64,
         num_tasks: usize,
         input_ids: &[u64],
+        session: u64,
     ) -> Result<()> {
         if num_tasks == 0 {
             return Ok(());
         }
+        // Gangs serialize against each other and against parallel-fn
+        // jobs — all of those own the single rank-routing namespace (the
+        // master's `rank_table`, every worker's transport table), which
+        // concurrent gangs would corrupt. They do NOT serialize against
+        // plan stages: a gang and another job's `task.run` stages
+        // overlap on the cluster, sharing slots through the ledger.
+        let _serial = self.job_serial.lock().unwrap();
         let budget = self.conf.get_usize("ignite.peer.gang.retries").unwrap_or(3).max(1);
         let mut generation = 0u64;
         loop {
             let failure = match self
-                .try_peer_gang(plan_bytes, peer_id, num_tasks, input_ids, generation)
+                .try_peer_gang(plan_bytes, peer_id, num_tasks, input_ids, generation, session)
             {
                 Ok(()) => return Ok(()),
                 Err(f) => f,
@@ -994,12 +1228,12 @@ impl Master {
         }
     }
 
-    /// One gang attempt: all-or-nothing placement against worker slot
-    /// capacities, rank-table install (master-side authoritative copy
-    /// for relay/lookup + pushed to every participating worker), the
-    /// two-phase `peer.prepare` / `peer.run` launch, then a wait for
-    /// every rank with worker-loss watching. Failures carry whether the
-    /// gang had actually launched — only a launched gang's failure is a
+    /// One gang attempt: all-or-nothing slot-ledger admission (waiting
+    /// out other jobs' in-flight tasks within the section-timeout
+    /// budget), byte-weighted placement, then the two-phase launch via
+    /// [`launch_peer_gang`](Self::launch_peer_gang). The gang's slots
+    /// are released on every exit path. Failures carry whether the gang
+    /// had actually launched — only a launched gang's failure is a
     /// *restart* (see [`try_peer_stage`](Self::try_peer_stage)).
     fn try_peer_gang(
         &self,
@@ -1008,39 +1242,88 @@ impl Master {
         n: usize,
         input_ids: &[u64],
         generation: u64,
+        session: u64,
     ) -> std::result::Result<(), GangAttemptFailure> {
         let fail =
             |error: IgniteError, launched: bool| GangAttemptFailure { error, launched };
-        // Gang slots: every rank needs a slot BEFORE anything launches.
-        let live = self.live_workers();
-        if live.is_empty() {
-            return Err(fail(IgniteError::Invalid("no live workers".into()), false));
-        }
-        let caps: Vec<(u64, RpcAddress, usize)> = {
-            let workers = self.workers.lock().unwrap();
-            live.iter()
+        // Gang admission: every rank needs a ledger slot BEFORE anything
+        // launches (all-or-nothing, so a half-placed gang can never
+        // deadlock against another job holding the rest). Concurrent
+        // plan stages may hold slots right now — wait for them to drain,
+        // as long as the cluster's total capacity can ever fit the gang.
+        let admission_deadline = std::time::Instant::now()
+            + self
+                .conf
+                .get_duration_ms("ignite.peer.section.timeout.ms")
+                .unwrap_or(Duration::from_secs(30));
+        let (wants, assignment, table) = loop {
+            let live = self.live_workers();
+            if live.is_empty() {
+                return Err(fail(IgniteError::Invalid("no live workers".into()), false));
+            }
+            let total: usize = live.iter().map(|(id, _)| self.ledger.capacity(*id)).sum();
+            if total < n {
+                return Err(fail(
+                    IgniteError::Invalid(format!(
+                        "peer section {peer_id} needs {n} gang slots, cluster has {total}"
+                    )),
+                    false,
+                ));
+            }
+            // Workers with free slots right now (draining ones show 0).
+            let caps: Vec<(u64, RpcAddress, usize)> = live
+                .iter()
                 .filter_map(|(id, addr)| {
-                    workers.get(id).map(|w| (*id, addr.clone(), w.slots.max(1)))
+                    let free = self.ledger.available(*id);
+                    (free > 0).then(|| (*id, addr.clone(), free))
                 })
-                .collect()
+                .collect();
+            let free: usize = caps.iter().map(|c| c.2).sum();
+            if free >= n {
+                let (assignment, table) = self.place_gang(&caps, n, input_ids);
+                let wants: Vec<(u64, usize)> = assignment
+                    .iter()
+                    .map(|(wid, (_, ranks))| (*wid, ranks.len()))
+                    .collect();
+                if self.ledger.try_acquire_gang(session, &wants) {
+                    break (wants, assignment, table);
+                }
+                // Lost an admission race with another job; re-place.
+            }
+            if std::time::Instant::now() > admission_deadline {
+                return Err(fail(
+                    IgniteError::Timeout(format!(
+                        "peer section {peer_id}: {n} gang slots never freed up"
+                    )),
+                    false,
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(20));
         };
-        let total: usize = caps.iter().map(|c| c.2).sum();
-        if total < n {
-            return Err(fail(
-                IgniteError::Invalid(format!(
-                    "peer section {peer_id} needs {n} gang slots, cluster has {total}"
-                )),
-                false,
-            ));
+        let outcome =
+            self.launch_peer_gang(plan_bytes, peer_id, n, generation, &assignment, &table);
+        for (wid, count) in &wants {
+            self.ledger.release(session, *wid, *count);
         }
-        // Byte-weighted gang placement: rank r of a peer section reads
-        // reduce partition r of each parent shuffle, so sum those
-        // bucket bytes per worker (the same per-reduce size table that
-        // `place_stage_tasks` reads) and let the heaviest ranks pick
-        // their host first under the slot caps. Ranks with no known
-        // bytes — and every rank when locality is off or the table is
-        // cold — fall back to round-robin over workers with free
-        // slots, which terminates because total >= n.
+        outcome
+    }
+
+    /// Byte-weighted gang placement over the workers with free slots:
+    /// rank r of a peer section reads reduce partition r of each parent
+    /// shuffle, so sum those bucket bytes per worker (the same
+    /// per-reduce size table that `place_stage_tasks` reads) and let
+    /// the heaviest ranks pick their host first under the free-slot
+    /// caps. Ranks with no known bytes — and every rank when locality
+    /// is off or the table is cold — fall back to round-robin over
+    /// workers with free slots, which terminates because the caller
+    /// checked `sum(free) >= n`. Returns the per-worker rank assignment
+    /// and the rank → address table.
+    fn place_gang(
+        &self,
+        caps: &[(u64, RpcAddress, usize)],
+        n: usize,
+        input_ids: &[u64],
+    ) -> (HashMap<u64, (RpcAddress, Vec<u64>)>, Vec<(u64, String)>) {
         let locality = self.conf.get_bool("ignite.plan.locality").unwrap_or(true);
         let mut weights: Vec<HashMap<String, u64>> = vec![HashMap::new(); n];
         if locality && !input_ids.is_empty() {
@@ -1117,12 +1400,30 @@ impl Master {
                 .push(rank as u64);
             table.push((rank as u64, addr.0.clone()));
         }
+        (assignment, table)
+    }
+
+    /// Launch one admitted, placed gang: rank-table install (master-side
+    /// authoritative copy for relay/lookup + pushed to every
+    /// participating worker), the two-phase `peer.prepare` / `peer.run`
+    /// launch, then a wait for every rank with worker-loss watching.
+    fn launch_peer_gang(
+        &self,
+        plan_bytes: &[u8],
+        peer_id: u64,
+        n: usize,
+        generation: u64,
+        assignment: &HashMap<u64, (RpcAddress, Vec<u64>)>,
+        table: &[(u64, String)],
+    ) -> std::result::Result<(), GangAttemptFailure> {
+        let fail =
+            |error: IgniteError, launched: bool| GangAttemptFailure { error, launched };
         // Master-side authoritative rank table (relay forwarding and the
         // `comm.lookup` cold-table fallback resolve through it).
         {
             let mut t = self.rank_table.write().unwrap();
             t.clear();
-            for (rank, addr) in &table {
+            for (rank, addr) in table {
                 t.insert(*rank as usize, RpcAddress(addr.clone()));
             }
         }
@@ -1143,7 +1444,7 @@ impl Master {
         // rank tables pushed), THEN phase 2 everywhere.
         let launch_timeout = Duration::from_secs(5);
         for phase in [EP_PEER_PREPARE, EP_PEER_RUN] {
-            for (wid, (addr, ranks)) in &assignment {
+            for (wid, (addr, ranks)) in assignment {
                 let req = PeerTaskReq {
                     job_id,
                     peer_id,
@@ -1156,7 +1457,7 @@ impl Master {
                     world_size: n as u64,
                     ranks: ranks.clone(),
                     rank_table: if phase == EP_PEER_PREPARE {
-                        table.clone()
+                        table.to_vec()
                     } else {
                         Vec::new()
                     },
@@ -1224,12 +1525,25 @@ impl Master {
         outcome.map_err(|error| fail(error, true))
     }
 
+    /// Run one `task.run` stage to completion with per-task
+    /// bookkeeping. Every in-flight attempt occupies one slot in the
+    /// ledger (multi-tenant admission: concurrent jobs' stages overlap
+    /// as capacity allows), a lost worker re-issues ONLY its unfinished
+    /// tasks on the survivors (`plan.tasks.reissued`) instead of
+    /// failing the stage, an attempt running past
+    /// `ignite.speculation.multiplier` × the stage's median task
+    /// latency gets a speculative duplicate on a different worker
+    /// (`plan.tasks.speculated`, first finisher wins), and a worker
+    /// that joins mid-stage starts taking tasks on the next dispatch
+    /// round.
     fn try_plan_stage(
         &self,
         plan_bytes: &[u8],
         shuffle_id: Option<u64>,
         num_tasks: usize,
         input_ids: &[u64],
+        session: u64,
+        handle: Option<&Arc<JobHandle>>,
     ) -> Result<Vec<Vec<Value>>> {
         if num_tasks == 0 {
             return Ok(Vec::new());
@@ -1240,81 +1554,311 @@ impl Master {
         }
         let job_id = self.next_job.fetch_add(1, Ordering::SeqCst);
 
-        // Locality-aware placement (round-robin when the map-output
-        // table knows nothing about this stage's inputs), batched per
-        // worker for launch but reported per task.
+        // Locality-aware preference (round-robin when the map-output
+        // table knows nothing about this stage's inputs): a task's
+        // preferred worker gets first shot at admitting it; when that
+        // worker is full, draining, or gone, any worker with a free
+        // slot takes over.
         let placement = self.place_stage_tasks(&workers, num_tasks, input_ids);
-        let mut assignment: HashMap<u64, (RpcAddress, Vec<u64>)> = HashMap::new();
-        for (task, &widx) in placement.iter().enumerate() {
-            let (wid, addr) = &workers[widx];
-            assignment
-                .entry(*wid)
-                .or_insert_with(|| (addr.clone(), Vec::new()))
-                .1
-                .push(task as u64);
-        }
-        let assigned_workers: Vec<u64> = assignment.keys().copied().collect();
+        let prefs: Vec<u64> = placement.iter().map(|&widx| workers[widx].0).collect();
 
         let job = Arc::new(PlanJobState {
             results: Mutex::new((0..num_tasks).map(|_| None).collect()),
             remaining: AtomicU64::new(num_tasks as u64),
-            error: Mutex::new(None),
+            task_events: Mutex::new(Vec::new()),
+            failures: Mutex::new(Vec::new()),
+            handle: handle.cloned(),
             wake: Condvar::new(),
             wake_lock: Mutex::new(()),
         });
         self.plan_jobs.lock().unwrap().insert(job_id, job.clone());
 
         let launch_timeout = Duration::from_secs(5);
-        for (wid, (addr, tasks)) in &assignment {
-            let req = PlanTaskReq {
-                job_id,
-                plan: plan_bytes.to_vec(),
-                shuffle_id,
-                tasks: tasks.clone(),
-            };
-            if let Err(e) = self.env.ask(addr, EP_TASK_RUN, to_bytes(&req), launch_timeout) {
-                self.plan_jobs.lock().unwrap().remove(&job_id);
-                return Err(IgniteError::WorkerLost {
-                    worker: *wid,
-                    reason: format!("task.run launch failed: {e}"),
-                });
-            }
-        }
-
+        let retry_budget = self.conf.get_usize("ignite.task.retries").unwrap_or(3).max(1);
+        let speculate = self.conf.get_bool("ignite.task.speculation").unwrap_or(true);
+        let multiplier = self.conf.get_f64("ignite.speculation.multiplier").unwrap_or(4.0);
         let stage_timeout = self
             .conf
             .get_duration_ms("ignite.task.run.timeout.ms")
             .unwrap_or(Duration::from_secs(30));
         let deadline = std::time::Instant::now() + stage_timeout;
+
+        // Per-task scheduler state. A "hold" is one ledger slot occupied
+        // by one in-flight attempt of one task on one worker; every exit
+        // from the loop releases whatever holds remain.
+        let mut pending: VecDeque<u64> = (0..num_tasks as u64).collect();
+        let mut holds: HashMap<(u64, u64), std::time::Instant> = HashMap::new();
+        let mut done = vec![false; num_tasks];
+        let mut failed_attempts = vec![0usize; num_tasks];
+        let mut first_launch: Vec<Option<std::time::Instant>> = vec![None; num_tasks];
+        let mut durations: Vec<f64> = Vec::new();
+        let mut speculated: HashSet<u64> = HashSet::new();
+        let mut events_seen = 0usize;
+        let mut failures_seen = 0usize;
+
         let outcome = loop {
-            // Sample `remaining` BEFORE checking the error flag: a failing
-            // batch sets the error and then decrements, so observing
-            // remaining==0 here guarantees any failure is already visible
-            // at the error check below — checking remaining first and
-            // breaking Ok on it directly would mask a failure reported by
-            // the last batch and declare the stage successful with missing
-            // outputs.
-            let all_reported = job.remaining.load(Ordering::SeqCst) == 0;
-            if let Some((msg, recoverable)) = job.error.lock().unwrap().clone() {
-                break Err(if recoverable {
-                    // Typed errors don't survive the wire; Rpc carries the
-                    // worker's recoverable classification into
-                    // `is_recoverable()` so the stage retries on survivors.
-                    IgniteError::Rpc(msg)
-                } else {
-                    IgniteError::Task(msg)
-                });
+            // (a) Completed-task events: free the attempt's ledger slot.
+            // The FIRST event per task records its latency sample for
+            // the speculation median; a speculative duplicate's late
+            // event only releases its hold (its result was already
+            // rejected by the first-fill check in `master.plan_result`).
+            {
+                let events = job.task_events.lock().unwrap();
+                for &(task, worker) in &events[events_seen..] {
+                    if holds.remove(&(task, worker)).is_some() {
+                        self.ledger.release(session, worker, 1);
+                    }
+                    let t = task as usize;
+                    if t < num_tasks && !done[t] {
+                        done[t] = true;
+                        if let Some(t0) = first_launch[t] {
+                            durations.push(t0.elapsed().as_secs_f64());
+                        }
+                    }
+                }
+                events_seen = events.len();
             }
-            if all_reported {
+
+            // (b) Worker-reported failures: re-queue that worker's
+            // unfinished attempts (fine-grained re-issue) when the
+            // worker classified the failure recoverable and the task
+            // still has budget; a deterministic task failure aborts the
+            // stage — retrying cannot fix it. A failure whose tasks all
+            // finished elsewhere (a speculative loser dying after the
+            // winner landed) only releases its holds.
+            let new_failures: Vec<(u64, String, bool)> = {
+                let failures = job.failures.lock().unwrap();
+                let fresh = failures[failures_seen..].to_vec();
+                failures_seen = failures.len();
+                fresh
+            };
+            let mut abort = None;
+            'failures: for (worker, msg, recoverable) in new_failures {
+                let affected: Vec<u64> =
+                    holds.keys().filter(|(_, w)| *w == worker).map(|(t, _)| *t).collect();
+                let mut live_failure = false;
+                for task in affected {
+                    holds.remove(&(task, worker));
+                    self.ledger.release(session, worker, 1);
+                    if done[task as usize] {
+                        continue;
+                    }
+                    live_failure = true;
+                    if !recoverable {
+                        continue;
+                    }
+                    failed_attempts[task as usize] += 1;
+                    if failed_attempts[task as usize] >= retry_budget {
+                        // Typed errors don't survive the wire; Rpc keeps
+                        // the worker's recoverable classification alive
+                        // through `is_recoverable()` so the whole-job
+                        // retry in `run_plan_session` still fires.
+                        abort = Some(IgniteError::Rpc(format!(
+                            "plan job {job_id} task {task}: retries exhausted ({msg})"
+                        )));
+                        break 'failures;
+                    }
+                    metrics::global().counter("plan.tasks.reissued").inc();
+                    pending.push_back(task);
+                }
+                if live_failure && !recoverable {
+                    abort = Some(IgniteError::Task(msg));
+                    break;
+                }
+            }
+            if let Some(e) = abort {
+                break Err(e);
+            }
+
+            // (c) Lost workers: deregister cluster-wide (worker table,
+            // heartbeat, ledger, map-output locations) so no later
+            // stage or job places onto the corpse, then re-queue only
+            // OUR unfinished attempts via the stranded-hold sweep below
+            // (which also catches workers another job's stage already
+            // deregistered — they vanish from the live set either way).
+            for w in self.monitor.lost_workers() {
+                let addr = self.workers.lock().unwrap().remove(&w).map(|wi| wi.addr.0);
+                self.monitor.remove(w);
+                self.ledger.remove_worker(w);
+                if let Some(addr) = addr {
+                    warn!(
+                        target: "cluster",
+                        "worker {w} ({addr}) lost mid-stage; re-issuing its unfinished tasks"
+                    );
+                    metrics::global().counter("cluster.workers.lost").inc();
+                    self.invalidate_worker_outputs(&addr);
+                }
+            }
+            let live = self.live_workers();
+            let live_ids: HashSet<u64> = live.iter().map(|(id, _)| *id).collect();
+            let stranded: Vec<(u64, u64)> =
+                holds.keys().filter(|(_, w)| !live_ids.contains(w)).copied().collect();
+            let mut abort = None;
+            for (task, worker) in stranded {
+                holds.remove(&(task, worker));
+                self.ledger.release(session, worker, 1);
+                if done[task as usize] {
+                    continue;
+                }
+                failed_attempts[task as usize] += 1;
+                if failed_attempts[task as usize] >= retry_budget {
+                    abort = Some(IgniteError::WorkerLost {
+                        worker,
+                        reason: format!("task {task}: retries exhausted"),
+                    });
+                    break;
+                }
+                metrics::global().counter("plan.tasks.reissued").inc();
+                pending.push_back(task);
+            }
+            if let Some(e) = abort {
+                break Err(e);
+            }
+
+            // (d) Driver-requested cancellation (`job.cancel`).
+            if handle.is_some_and(|h| h.is_cancelled()) {
+                break Err(IgniteError::Task(format!("plan job {job_id} cancelled")));
+            }
+
+            // (e) Done? `remaining` only ever decrements on a first
+            // fill, so zero means every partition has a result — and
+            // the failure drain above already ran, so a failing last
+            // batch cannot be masked.
+            if job.remaining.load(Ordering::SeqCst) == 0 {
                 break Ok(());
             }
-            let lost = self.monitor.lost_workers();
-            if let Some(&w) = lost.iter().find(|w| assigned_workers.contains(w)) {
-                break Err(IgniteError::WorkerLost {
-                    worker: w,
-                    reason: "heartbeat timeout mid-stage".into(),
-                });
+            if live.is_empty() {
+                break Err(IgniteError::Invalid("no live workers".into()));
             }
+
+            // (f) Dispatch: a pending task goes to its preferred worker
+            // when that worker has a free slot under this session's
+            // policy cap, else to the live worker with the most
+            // headroom — computed fresh each round so a `worker.join`
+            // mid-stage starts taking tasks immediately and a draining
+            // worker (available() == 0) stops. One coalesced `task.run`
+            // batch per worker per round.
+            let mut batches: HashMap<u64, (RpcAddress, Vec<u64>)> = HashMap::new();
+            let mut unplaced: VecDeque<u64> = VecDeque::new();
+            while let Some(task) = pending.pop_front() {
+                let mut placed = None;
+                if let Some(&p) = prefs.get(task as usize) {
+                    if let Some((_, addr)) = live.iter().find(|(id, _)| *id == p) {
+                        if self.ledger.try_acquire(session, p) {
+                            placed = Some((p, addr.clone()));
+                        }
+                    }
+                }
+                if placed.is_none() {
+                    let mut cands: Vec<(u64, RpcAddress, usize)> = live
+                        .iter()
+                        .map(|(id, addr)| (*id, addr.clone(), self.ledger.available(*id)))
+                        .filter(|(_, _, free)| *free > 0)
+                        .collect();
+                    cands.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.cmp(&b.0)));
+                    for (id, addr, _) in cands {
+                        if self.ledger.try_acquire(session, id) {
+                            placed = Some((id, addr));
+                            break;
+                        }
+                    }
+                }
+                match placed {
+                    Some((wid, addr)) => {
+                        batches.entry(wid).or_insert_with(|| (addr, Vec::new())).1.push(task);
+                    }
+                    None => {
+                        // No slot anywhere (other sessions hold them,
+                        // or this session's fair/quota cap is reached):
+                        // park the rest and wait for a release instead
+                        // of spinning.
+                        unplaced.push_back(task);
+                        break;
+                    }
+                }
+            }
+            unplaced.append(&mut pending);
+            pending = unplaced;
+            for (wid, (addr, tasks)) in batches {
+                let now = std::time::Instant::now();
+                for &t in &tasks {
+                    first_launch[t as usize].get_or_insert(now);
+                    holds.insert((t, wid), now);
+                }
+                let req = PlanTaskReq {
+                    job_id,
+                    plan: plan_bytes.to_vec(),
+                    shuffle_id,
+                    tasks: tasks.clone(),
+                };
+                if let Err(e) = self.env.ask(&addr, EP_TASK_RUN, to_bytes(&req), launch_timeout) {
+                    // The launch never reached the worker: re-queue
+                    // without burning retry budget and let the
+                    // heartbeat sweep deregister it if it is gone.
+                    warn!(target: "cluster", "task.run launch on worker {wid} failed: {e}");
+                    for &t in &tasks {
+                        holds.remove(&(t, wid));
+                        self.ledger.release(session, wid, 1);
+                        pending.push_back(t);
+                    }
+                }
+            }
+
+            // (g) Speculation: once half the stage has landed, any
+            // attempt running past multiplier × median gets ONE
+            // duplicate on a different worker. The first finisher wins
+            // the result slot; the loser's event above just frees its
+            // hold, and the shuffle plane's first-live-wins
+            // registration ignores its late buckets.
+            if speculate && durations.len() >= (num_tasks / 2).max(1) {
+                let mut sorted = durations.clone();
+                sorted.sort_by(f64::total_cmp);
+                let median = sorted[sorted.len() / 2];
+                let threshold = (median * multiplier).max(0.005);
+                let slow: Vec<(u64, u64)> = holds
+                    .iter()
+                    .filter(|((t, _), t0)| {
+                        !done[*t as usize]
+                            && !speculated.contains(t)
+                            && t0.elapsed().as_secs_f64() > threshold
+                    })
+                    .map(|(&k, _)| k)
+                    .collect();
+                for (task, slow_worker) in slow {
+                    let mut cands: Vec<(u64, RpcAddress, usize)> = live
+                        .iter()
+                        .filter(|(id, _)| *id != slow_worker)
+                        .map(|(id, addr)| (*id, addr.clone(), self.ledger.available(*id)))
+                        .filter(|(_, _, free)| *free > 0)
+                        .collect();
+                    cands.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.cmp(&b.0)));
+                    let Some((wid, addr, _)) =
+                        cands.into_iter().find(|(id, _, _)| self.ledger.try_acquire(session, *id))
+                    else {
+                        continue;
+                    };
+                    let req = PlanTaskReq {
+                        job_id,
+                        plan: plan_bytes.to_vec(),
+                        shuffle_id,
+                        tasks: vec![task],
+                    };
+                    match self.env.ask(&addr, EP_TASK_RUN, to_bytes(&req), launch_timeout) {
+                        Ok(_) => {
+                            holds.insert((task, wid), std::time::Instant::now());
+                            speculated.insert(task);
+                            metrics::global().counter("plan.tasks.speculated").inc();
+                            info!(
+                                target: "cluster",
+                                "speculating task {task} of plan job {job_id} on worker {wid}"
+                            );
+                        }
+                        Err(_) => self.ledger.release(session, wid, 1),
+                    }
+                }
+            }
+
+            // (h) Stage deadline.
             if std::time::Instant::now() > deadline {
                 break Err(IgniteError::Timeout(format!(
                     "plan job {job_id}: stage incomplete after {stage_timeout:?}"
@@ -1323,6 +1867,11 @@ impl Master {
             let g = job.wake_lock.lock().unwrap();
             let _ = job.wake.wait_timeout(g, Duration::from_millis(20)).unwrap();
         };
+        // Release any holds still out (speculative losers on success,
+        // everything on failure) so other sessions see the capacity.
+        for ((_, worker), _) in holds.drain() {
+            self.ledger.release(session, worker, 1);
+        }
         self.plan_jobs.lock().unwrap().remove(&job_id);
         outcome?;
 
@@ -1346,6 +1895,127 @@ impl Master {
     /// (post-job GC leaves this at zero; see `shuffle.clear`).
     pub fn shuffle_table_len(&self) -> usize {
         self.map_outputs.lock().unwrap().len()
+    }
+
+    /// Open a new driver session: the unit of multi-tenant admission
+    /// accounting (fair-share / quota caps and the per-session
+    /// `jobserver.session.<id>.tasks.completed` counter).
+    pub fn new_session(&self) -> u64 {
+        self.job_table.next_session_id()
+    }
+
+    /// Submit a plan for concurrent execution (`job.submit`). Returns
+    /// the server-assigned job id immediately; the job runs on its own
+    /// thread, admitted stage-by-stage through the slot ledger, and
+    /// [`Master::job_status`] / [`Master::wait_job`] observe it.
+    pub fn submit_job(&self, session: u64, plan: &PlanSpec) -> Result<u64> {
+        let resp = self.env.ask(
+            &self.env.address(),
+            EP_JOB_SUBMIT,
+            to_bytes(&JobSubmitReq { session_id: session, plan: to_bytes(plan) }),
+            Duration::from_secs(5),
+        )?;
+        let JobSubmitResp { job_id } = from_bytes(&resp)?;
+        Ok(job_id)
+    }
+
+    /// One `job.status` poll.
+    pub fn job_status(&self, job_id: u64) -> Result<JobStatusResp> {
+        let resp = self.env.ask(
+            &self.env.address(),
+            EP_JOB_STATUS,
+            to_bytes(&JobStatusReq { job_id }),
+            Duration::from_secs(5),
+        )?;
+        from_bytes(&resp)
+    }
+
+    /// Request cancellation (`job.cancel`): the job's scheduler loop
+    /// observes the flag at its next round / stage boundary and aborts.
+    pub fn cancel_job(&self, job_id: u64) -> Result<()> {
+        self.env.ask(
+            &self.env.address(),
+            EP_JOB_CANCEL,
+            to_bytes(&JobCancelReq { job_id }),
+            Duration::from_secs(5),
+        )?;
+        Ok(())
+    }
+
+    /// Poll `job.status` until the job settles, returning its result
+    /// rows (partitions flattened in order).
+    pub fn wait_job(&self, job_id: u64, timeout: Duration) -> Result<Vec<Value>> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let status = self.job_status(job_id)?;
+            if status.state == ServerJobState::Done.tag() {
+                return status.results.ok_or_else(|| {
+                    IgniteError::Task(format!("job {job_id}: done without results"))
+                });
+            }
+            if status.state == ServerJobState::Failed(String::new()).tag() {
+                return Err(IgniteError::Task(status.error));
+            }
+            if status.state == ServerJobState::Cancelled.tag() {
+                return Err(IgniteError::Task(format!("job {job_id} cancelled")));
+            }
+            if std::time::Instant::now() > deadline {
+                return Err(IgniteError::Timeout(format!(
+                    "job {job_id} incomplete after {timeout:?}"
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Gracefully retire a worker (`worker.drain`): the ledger stops
+    /// admitting new attempts immediately, and this blocks until the
+    /// worker's in-flight attempts finish (or `timeout`). The drained
+    /// worker stays registered and keeps heartbeating — its map outputs
+    /// remain valid and it keeps serving `shuffle.fetch` — it just
+    /// never receives another task.
+    pub fn drain_worker(&self, worker_id: u64, timeout: Duration) -> Result<()> {
+        let resp = self.env.ask(
+            &self.env.address(),
+            EP_WORKER_DRAIN,
+            to_bytes(&WorkerDrainReq { worker_id }),
+            Duration::from_secs(5),
+        )?;
+        let drain: WorkerDrainResp = from_bytes(&resp)?;
+        if !drain.known {
+            return Err(IgniteError::Invalid(format!("worker {worker_id} is not registered")));
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        while self.ledger.in_flight(worker_id) > 0 {
+            if std::time::Instant::now() > deadline {
+                return Err(IgniteError::Timeout(format!(
+                    "worker {worker_id} still has {} in-flight attempts after {timeout:?}",
+                    self.ledger.in_flight(worker_id)
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        Ok(())
+    }
+
+    /// Drop a dead worker's registered map-output locations so reduce
+    /// placement and `shuffle.locate` stop pointing at the corpse; a
+    /// shuffle that loses blocks this way is regenerated by the
+    /// whole-job retry re-running its map stage on the survivors.
+    fn invalidate_worker_outputs(&self, addr: &str) {
+        let mut table = self.map_outputs.lock().unwrap();
+        for entry in table.values_mut() {
+            let stale: Vec<usize> = entry
+                .locations
+                .iter()
+                .filter(|(_, a)| a.as_str() == addr)
+                .map(|(m, _)| *m)
+                .collect();
+            for m in stale {
+                entry.locations.remove(&m);
+                entry.reduce_bytes.remove(&m);
+            }
+        }
     }
 
     /// Chunk an encoded broadcast value into blocks, hold the
@@ -1522,6 +2192,32 @@ impl crate::shuffle::ShuffleNet for RpcShuffleNet {
         Ok(resp.buckets.into_iter().map(|(m, b)| (m as usize, b)).collect())
     }
 
+    fn fetch_pairs(
+        &self,
+        addr: &str,
+        shuffle: u64,
+        pairs: &[(usize, usize)],
+        batch_bytes: usize,
+    ) -> Result<Vec<((usize, usize), Option<Vec<u8>>)>> {
+        let req = ShuffleFetchBatchReq {
+            shuffle,
+            pairs: pairs.iter().map(|&(m, r)| (m as u64, r as u64)).collect(),
+            batch_bytes: batch_bytes as u64,
+        };
+        let resp = self.env.ask(
+            &RpcAddress(addr.to_string()),
+            EP_SHUFFLE_FETCH_BATCH,
+            to_bytes(&req),
+            self.timeout,
+        )?;
+        let resp: ShuffleFetchBatchResp = from_bytes(&resp)?;
+        Ok(resp
+            .buckets
+            .into_iter()
+            .map(|((m, r), b)| ((m as usize, r as usize), b))
+            .collect())
+    }
+
     fn local_addr(&self) -> String {
         self.env.address().0.clone()
     }
@@ -1603,6 +2299,54 @@ pub fn install_shuffle_service(
             let mut segments: Vec<Segment> = Vec::with_capacity(buckets.len() * 2 + 1);
             for (m, bytes) in buckets {
                 head.extend_from_slice(&m.to_le_bytes());
+                match bytes {
+                    Some(arc) => {
+                        head.push(1); // Option tag: Some
+                        put_varint(&mut head, arc.len() as u64);
+                        segments.push(Segment::Owned(std::mem::take(&mut head)));
+                        segments.push(Segment::Shared(arc));
+                    }
+                    None => head.push(0), // Option tag: None
+                }
+            }
+            if !head.is_empty() {
+                segments.push(Segment::Owned(head));
+            }
+            Ok(Some(RpcBody::Segments(segments)))
+        }),
+    );
+    let serve = engine.clone();
+    env.register(
+        EP_SHUFFLE_FETCH_BATCH,
+        Arc::new(move |envelope: &Envelope| {
+            let req: ShuffleFetchBatchReq = from_bytes(&envelope.body)?;
+            // Cross-task stream: arbitrary (map, reduce) pairs of one
+            // shuffle, filled in request order until the frame budget
+            // is spent — always at least one pair per frame, so the
+            // prefetching caller makes progress on every round-trip.
+            let mut buckets: Vec<((u64, u64), Option<Arc<Vec<u8>>>)> = Vec::new();
+            let mut total = 0usize;
+            for &(m, r) in &req.pairs {
+                if !buckets.is_empty() && total >= req.batch_bytes as usize {
+                    break;
+                }
+                let bytes =
+                    serve.shuffle.local_bucket_bytes(req.shuffle, m as usize, r as usize);
+                if let Some(b) = &bytes {
+                    total += b.len();
+                    metrics::global().counter("cluster.shuffle.fetches.served").inc();
+                }
+                buckets.push(((m, r), bytes));
+            }
+            // Scatter-gather response, byte-identical to
+            // `to_bytes(&ShuffleFetchBatchResp { buckets })`: codec
+            // scaffolding in owned head segments, bucket bytes shared.
+            let mut head = Vec::with_capacity(16);
+            put_varint(&mut head, buckets.len() as u64);
+            let mut segments: Vec<Segment> = Vec::with_capacity(buckets.len() * 2 + 1);
+            for ((m, r), bytes) in buckets {
+                head.extend_from_slice(&m.to_le_bytes());
+                head.extend_from_slice(&r.to_le_bytes());
                 match bytes {
                     Some(arc) => {
                         head.push(1); // Option tag: Some
@@ -1778,6 +2522,26 @@ fn run_plan_tasks(
     let plan = Arc::new(plan);
     let indices: Vec<usize> = req.tasks.iter().map(|&t| t as usize).collect();
     let shuffle_id = req.shuffle_id;
+    // Batch-prefetch the whole assignment's remote input buckets before
+    // running any task: one `shuffle.fetch_batch` stream per remote
+    // holder spanning every (map, reduce) pair this batch will read,
+    // instead of per-task per-bucket round-trips. Best-effort — the
+    // per-task read path still fetches whatever prefetch left behind.
+    for id in plan.stage_input_ids(shuffle_id) {
+        let pairs: Vec<(usize, usize)> = match plan.find_shuffle(id) {
+            Some(PlanSpec::Shuffle { parent, .. }) => {
+                let n_maps = parent.num_partitions();
+                indices
+                    .iter()
+                    .flat_map(|&t| (0..n_maps).map(move |m| (m, t)))
+                    .collect()
+            }
+            // Peer-section outputs live in the same bucket namespace
+            // keyed (rank, rank).
+            _ => indices.iter().map(|&t| (t, t)).collect(),
+        };
+        engine.shuffle.prefetch_pairs(id, &pairs);
+    }
     let engine2 = engine.clone();
     engine.run_task_indices(req.job_id, indices, move |task_idx| {
         metrics::global().counter("cluster.tasks.executed").inc();

@@ -654,6 +654,205 @@ impl Decode for JobClear {
     }
 }
 
+/// Driver session → master (`job.submit`): run this encoded
+/// [`crate::rdd::PlanSpec`] asynchronously under `session_id`'s share of
+/// the slot ledger. The master acks with a [`JobSubmitResp`] immediately
+/// and the session polls `job.status` — many sessions submit
+/// concurrently and their stages interleave as capacity allows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSubmitReq {
+    pub session_id: u64,
+    pub plan: Vec<u8>,
+}
+
+impl Encode for JobSubmitReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.session_id.encode(buf);
+        self.plan.encode(buf);
+    }
+}
+impl Decode for JobSubmitReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(JobSubmitReq { session_id: u64::decode(r)?, plan: Vec::<u8>::decode(r)? })
+    }
+}
+
+/// Master → driver session: the submitted job's id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSubmitResp {
+    pub job_id: u64,
+}
+
+impl Encode for JobSubmitResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.job_id.encode(buf);
+    }
+}
+impl Decode for JobSubmitResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(JobSubmitResp { job_id: u64::decode(r)? })
+    }
+}
+
+/// Driver session → master (`job.status`): poll one submitted job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobStatusReq {
+    pub job_id: u64,
+}
+
+impl Encode for JobStatusReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.job_id.encode(buf);
+    }
+}
+impl Decode for JobStatusReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(JobStatusReq { job_id: u64::decode(r)? })
+    }
+}
+
+/// Master → driver session: job state. `state` is the
+/// [`crate::jobserver::JobState`] tag (0 pending, 1 running, 2 done,
+/// 3 failed, 4 cancelled); `results` carries the collected rows once
+/// done, `error` the failure message once failed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobStatusResp {
+    pub state: u8,
+    pub error: String,
+    pub tasks_completed: u64,
+    pub results: Option<Vec<Value>>,
+}
+
+impl Encode for JobStatusResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.state.encode(buf);
+        self.error.encode(buf);
+        self.tasks_completed.encode(buf);
+        self.results.encode(buf);
+    }
+}
+impl Decode for JobStatusResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(JobStatusResp {
+            state: u8::decode(r)?,
+            error: String::decode(r)?,
+            tasks_completed: u64::decode(r)?,
+            results: Option::<Vec<Value>>::decode(r)?,
+        })
+    }
+}
+
+/// Driver session → master (`job.cancel`): stop a submitted job. The
+/// stage scheduler observes the flag between dispatch rounds; already
+/// running tasks finish on their workers but their results are dropped.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobCancelReq {
+    pub job_id: u64,
+}
+
+impl Encode for JobCancelReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.job_id.encode(buf);
+    }
+}
+impl Decode for JobCancelReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(JobCancelReq { job_id: u64::decode(r)? })
+    }
+}
+
+/// Operator → master (`worker.drain`): gracefully retire a worker —
+/// stop placing tasks and gang ranks on it, let what's running finish.
+/// The worker process keeps serving shuffle/broadcast fetches until its
+/// owner shuts it down, so its map outputs stay reachable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerDrainReq {
+    pub worker_id: u64,
+}
+
+impl Encode for WorkerDrainReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.worker_id.encode(buf);
+    }
+}
+impl Decode for WorkerDrainReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(WorkerDrainReq { worker_id: u64::decode(r)? })
+    }
+}
+
+/// Master → operator: drain acknowledged; `in_flight` is the number of
+/// ledger slots the worker still holds (poll until 0 to retire it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerDrainResp {
+    pub known: bool,
+    pub in_flight: u64,
+}
+
+impl Encode for WorkerDrainResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.known.encode(buf);
+        self.in_flight.encode(buf);
+    }
+}
+impl Decode for WorkerDrainResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(WorkerDrainResp { known: bool::decode(r)?, in_flight: u64::decode(r)? })
+    }
+}
+
+/// Task batch → remote worker (`shuffle.fetch_batch`): pull buckets for
+/// a *whole batch of reduce tasks* from one peer in one stream, instead
+/// of one `shuffle.fetch_multi` stream per task. `pairs` lists the
+/// wanted `(map_idx, reduce_idx)` blocks across every reduce partition
+/// the batch covers; like `fetch_multi`, `batch_bytes` bounds each
+/// response frame (at least one bucket per frame) and the client re-asks
+/// for the tail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShuffleFetchBatchReq {
+    pub shuffle: u64,
+    pub pairs: Vec<(u64, u64)>,
+    pub batch_bytes: u64,
+}
+
+impl Encode for ShuffleFetchBatchReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.shuffle.encode(buf);
+        self.pairs.encode(buf);
+        self.batch_bytes.encode(buf);
+    }
+}
+impl Decode for ShuffleFetchBatchReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ShuffleFetchBatchReq {
+            shuffle: u64::decode(r)?,
+            pairs: Vec::<(u64, u64)>::decode(r)?,
+            batch_bytes: u64::decode(r)?,
+        })
+    }
+}
+
+/// Remote worker → task batch: one `shuffle.fetch_batch` frame — a
+/// prefix of the requested `(map_idx, reduce_idx)` buckets in request
+/// order, each `None` when the worker no longer holds it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShuffleFetchBatchResp {
+    pub buckets: Vec<((u64, u64), Option<Vec<u8>>)>,
+}
+
+impl Encode for ShuffleFetchBatchResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.buckets.encode(buf);
+    }
+}
+impl Decode for ShuffleFetchBatchResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(ShuffleFetchBatchResp {
+            buckets: Vec::<((u64, u64), Option<Vec<u8>>)>::decode(r)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -829,6 +1028,47 @@ mod tests {
 
         let job = JobClear { shuffles: vec![9], broadcasts: vec![21] };
         assert_eq!(from_bytes::<JobClear>(&to_bytes(&job)).unwrap(), job);
+    }
+
+    #[test]
+    fn job_server_messages_round_trip() {
+        let submit = JobSubmitReq { session_id: 3, plan: vec![1, 2, 3] };
+        assert_eq!(from_bytes::<JobSubmitReq>(&to_bytes(&submit)).unwrap(), submit);
+        let resp = JobSubmitResp { job_id: 17 };
+        assert_eq!(from_bytes::<JobSubmitResp>(&to_bytes(&resp)).unwrap(), resp);
+
+        let status = JobStatusReq { job_id: 17 };
+        assert_eq!(from_bytes::<JobStatusReq>(&to_bytes(&status)).unwrap(), status);
+        for (state, error, results) in [
+            (1u8, String::new(), None),
+            (2, String::new(), Some(vec![Value::I64(4), Value::Str("x".into())])),
+            (3, "worker lost".to_string(), None),
+        ] {
+            let resp = JobStatusResp { state, error, tasks_completed: 9, results };
+            assert_eq!(from_bytes::<JobStatusResp>(&to_bytes(&resp)).unwrap(), resp);
+        }
+
+        let cancel = JobCancelReq { job_id: 17 };
+        assert_eq!(from_bytes::<JobCancelReq>(&to_bytes(&cancel)).unwrap(), cancel);
+
+        let drain = WorkerDrainReq { worker_id: 2 };
+        assert_eq!(from_bytes::<WorkerDrainReq>(&to_bytes(&drain)).unwrap(), drain);
+        let dresp = WorkerDrainResp { known: true, in_flight: 3 };
+        assert_eq!(from_bytes::<WorkerDrainResp>(&to_bytes(&dresp)).unwrap(), dresp);
+    }
+
+    #[test]
+    fn shuffle_fetch_batch_round_trip() {
+        let req = ShuffleFetchBatchReq {
+            shuffle: 9,
+            pairs: vec![(0, 1), (2, 1), (0, 3)],
+            batch_bytes: 1 << 20,
+        };
+        assert_eq!(from_bytes::<ShuffleFetchBatchReq>(&to_bytes(&req)).unwrap(), req);
+        let resp = ShuffleFetchBatchResp {
+            buckets: vec![((0, 1), Some(vec![1, 2])), ((2, 1), None), ((0, 3), Some(Vec::new()))],
+        };
+        assert_eq!(from_bytes::<ShuffleFetchBatchResp>(&to_bytes(&resp)).unwrap(), resp);
     }
 
     #[test]

@@ -23,6 +23,9 @@ pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
     ("ignite.task.run.timeout.ms", "30000", "Distributed plan stage (task.run) deadline"),
     ("ignite.task.speculation", "true", "Re-run straggler tasks elsewhere"),
     ("ignite.task.speculation.multiplier", "4.0", "Straggler = multiplier x median"),
+    ("ignite.scheduler.policy", "fifo", "Multi-tenant admission over the slot ledger: fifo | fair | quota"),
+    ("ignite.scheduler.session.quota.slots", "0", "Concurrent slot cap per driver session under policy=quota (0 = unlimited)"),
+    ("ignite.speculation.multiplier", "4.0", "Master-side plan-task straggler threshold: multiplier x stage median task latency"),
     ("ignite.comm.mode", "p2p", "p2p | relay (paper's two iterations)"),
     ("ignite.comm.buffer.max", "65536", "Max buffered unexpected messages/rank"),
     ("ignite.comm.recv.timeout.ms", "30000", "Blocking receive timeout"),
@@ -206,6 +209,17 @@ impl IgniteConf {
         self.get_duration_ms("ignite.comm.window.op.timeout.ms")?;
         self.get_duration_ms("ignite.peer.section.timeout.ms")?;
         self.get_usize("ignite.peer.gang.retries")?;
+        // Job-server admission: the policy is an enum (typos must fail
+        // startup, not silently schedule FIFO), quota and the master-side
+        // speculation multiplier are plain numerics.
+        let policy = self.get_str("ignite.scheduler.policy")?;
+        if !matches!(policy, "fifo" | "fair" | "quota") {
+            return Err(IgniteError::Config(format!(
+                "ignite.scheduler.policy={policy} (want fifo|fair|quota)"
+            )));
+        }
+        self.get_usize("ignite.scheduler.session.quota.slots")?;
+        self.get_f64("ignite.speculation.multiplier")?;
         // Collective algorithm names are validated per key, so a typo'd
         // algo fails app startup instead of silently defaulting at the
         // first broadcast (the comm layer double-checks at use time).
@@ -370,6 +384,29 @@ mod tests {
             conf.get_duration_ms("ignite.comm.window.op.timeout.ms").unwrap()
                 > Duration::from_millis(0)
         );
+    }
+
+    #[test]
+    fn scheduler_keys_validate() {
+        let conf = IgniteConf::new();
+        // Policy may be steered by the CI multitenant lane's env, so
+        // assert it is one of the valid enum values rather than a fixed
+        // default; quota and multiplier are lane-independent numerics.
+        assert!(matches!(
+            conf.get_str("ignite.scheduler.policy").unwrap(),
+            "fifo" | "fair" | "quota"
+        ));
+        assert_eq!(conf.get_usize("ignite.scheduler.session.quota.slots").unwrap(), 0);
+        assert!(conf.get_f64("ignite.speculation.multiplier").unwrap() > 1.0);
+
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.scheduler.policy", "lottery");
+        let err = conf.validate().unwrap_err();
+        assert!(err.to_string().contains("scheduler.policy"), "got: {err}");
+
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.scheduler.policy", "fair");
+        conf.validate().unwrap();
     }
 
     #[test]

@@ -276,6 +276,50 @@
 //! complete in any order; `comm.collectives.overlapped` counts
 //! in-flight overlap.
 //!
+//! ## Job server: multi-tenant scheduling, elastic workers, recovery
+//!
+//! The classic [`cluster::Master::run_plan`] entry point runs ONE job
+//! at a time. The job server ([`jobserver`], wired through [`cluster`])
+//! turns the master into a multi-tenant scheduler:
+//!
+//! * **Sessions and the slot ledger** — a driver session
+//!   ([`cluster::Master::new_session`]) submits jobs asynchronously
+//!   (`job.submit` → [`cluster::Master::submit_job`]), polls them
+//!   (`job.status`), awaits them ([`cluster::Master::wait_job`]) or
+//!   aborts them (`job.cancel`). Stage task batches from *different*
+//!   jobs overlap on the cluster as slot capacity allows: every
+//!   placement acquires slots from the [`jobserver::SlotLedger`] under
+//!   the admission policy `ignite.scheduler.policy` — `fifo` (arrival
+//!   order), `fair` (fewest-running-tasks session first), or `quota`
+//!   (`ignite.scheduler.session.quota.slots` caps each session's
+//!   concurrent slots). Per-session progress is observable at
+//!   `jobserver.session.<id>.tasks.completed`.
+//! * **Elastic workers** — a worker may `worker.join` a RUNNING
+//!   cluster and immediately receives tasks from in-flight jobs;
+//!   `worker.drain` ([`cluster::Master::drain_worker`]) retires one
+//!   gracefully: no new placements, running tasks finish and report,
+//!   and the call returns once nothing is in flight there — zero
+//!   re-issues.
+//! * **Fine-grained recovery** — per-task `master.plan_result`
+//!   bookkeeping means a worker loss re-issues ONLY that worker's
+//!   unfinished tasks onto the survivors (`plan.tasks.reissued`);
+//!   finished partitions keep their reported results, and whole-stage
+//!   (or whole-job) restarts stay at zero.
+//! * **Straggler speculation** — once a stage has a median task
+//!   latency, a task running past `ignite.speculation.multiplier` ×
+//!   that median is speculatively duplicated on another worker
+//!   (`plan.tasks.speculated`); the first finisher wins and the
+//!   loser's late report is ignored.
+//!
+//! `rust/tests/integration_jobserver.rs` pins all four end-to-end:
+//! concurrent jobs interleave with results bit-identical to serial
+//! runs, a mid-job joiner receives tasks, a drained worker retires
+//! with zero re-issues, a killed worker re-issues strictly fewer
+//! tasks than its stage holds, and a straggler is duplicated without
+//! changing the result. The CI `test-multitenant` lane re-runs the
+//! whole suite under `MPIGNITE_SCHEDULER_POLICY=fair` plus a seeded
+//! chaos soak over the job-server scenarios.
+//!
 //! ## Quickstart (Listing 1 of the paper)
 //!
 //! ```
@@ -310,6 +354,7 @@ pub mod config;
 pub mod context;
 pub mod error;
 pub mod fault;
+pub mod jobserver;
 pub mod metrics;
 pub mod peer;
 pub mod rdd;

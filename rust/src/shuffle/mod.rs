@@ -256,6 +256,30 @@ pub trait ShuffleNet: Send + Sync {
             .map(|&m| self.fetch(addr, shuffle, m, reduce_idx).map(|b| (m, Some(b))))
             .collect()
     }
+    /// Fetch many `(map_idx, reduce_idx)` buckets of one shuffle from
+    /// the worker at `addr` in one combined stream
+    /// (`shuffle.fetch_batch`) — the cross-task generalization of
+    /// [`fetch_multi`](Self::fetch_multi): one stream spans EVERY reduce
+    /// partition a worker's task batch is about to merge, not just one
+    /// task's, so a batch of R reduce tasks costs O(workers) streams
+    /// instead of O(workers × R). Same streaming contract: a response
+    /// frame is bounded by `batch_bytes` and may carry fewer pairs than
+    /// asked (always at least one); `None` bytes mean the holder no
+    /// longer has that bucket. The default degrades to one
+    /// [`fetch`](Self::fetch) per bucket for simple test nets.
+    fn fetch_pairs(
+        &self,
+        addr: &str,
+        shuffle: u64,
+        pairs: &[(usize, usize)],
+        batch_bytes: usize,
+    ) -> Result<Vec<((usize, usize), Option<Vec<u8>>)>> {
+        let _ = batch_bytes;
+        pairs
+            .iter()
+            .map(|&(m, r)| self.fetch(addr, shuffle, m, r).map(|b| ((m, r), Some(b))))
+            .collect()
+    }
     /// This process's own shuffle-serving address (skip self-fetch).
     fn local_addr(&self) -> String;
 }
@@ -857,6 +881,95 @@ impl ShuffleManager {
             .collect())
     }
 
+    /// Prefetch the framed bytes of many `(map, reduce)` buckets — the
+    /// whole remote working set of a worker's task batch — into the
+    /// local memory tier with ONE combined `shuffle.fetch_batch` stream
+    /// per remote holder, so the batch's reduce tasks then merge from
+    /// local reads instead of opening one `shuffle.fetch_multi` stream
+    /// each. Best-effort by design: any error is swallowed (the
+    /// per-task read path re-fetches and classifies failures), buckets
+    /// already local are skipped, and over-budget buckets are dropped
+    /// rather than demoting residents. Returns the number of buckets
+    /// brought over.
+    pub fn prefetch_pairs(&self, shuffle: u64, pairs: &[(usize, usize)]) -> usize {
+        let Some(net) = self.net() else { return 0 };
+        if pairs.is_empty() {
+            return 0;
+        }
+        let Some(outputs) = self.locate(shuffle) else { return 0 };
+        let local = net.local_addr();
+        // Group the non-local misses by owning worker, preserving order.
+        let mut groups: Vec<(String, Vec<(usize, usize)>)> = Vec::new();
+        {
+            let buckets = self.buckets.read().unwrap();
+            let spilled = self.spilled.lock().unwrap();
+            for &(m, r) in pairs {
+                let key = (shuffle, m, r);
+                if buckets.contains_key(&key) || spilled.contains_key(&key) {
+                    continue;
+                }
+                let Some(addr) = outputs.addr_of(m) else { continue };
+                if addr == local {
+                    continue;
+                }
+                match groups.iter_mut().find(|g| g.0.as_str() == addr) {
+                    Some((_, ps)) => ps.push((m, r)),
+                    None => groups.push((addr.to_string(), vec![(m, r)])),
+                }
+            }
+        }
+        let mut fetched = 0usize;
+        for (addr, mut ps) in groups {
+            while !ps.is_empty() {
+                let t0 = std::time::Instant::now();
+                let got = match net.fetch_pairs(&addr, shuffle, &ps, self.batch_bytes) {
+                    Ok(got) => got,
+                    Err(e) => {
+                        log::debug!(target: "shuffle", "prefetch from {addr} failed: {e}");
+                        self.located.lock().unwrap().remove(&shuffle);
+                        break;
+                    }
+                };
+                metrics::global().counter("shuffle.remote.fetches").inc();
+                metrics::global().counter("shuffle.fetch.batch.calls").inc();
+                metrics::global().histogram("shuffle.fetch.latency").record(t0.elapsed());
+                let before = ps.len();
+                for ((m, r), bytes) in got {
+                    ps.retain(|&p| p != (m, r));
+                    if let Some(bytes) = bytes {
+                        metrics::global()
+                            .counter("shuffle.remote.bytes")
+                            .add(bytes.len() as u64);
+                        metrics::global().counter("shuffle.fetch.batch.buckets").inc();
+                        fetched += 1;
+                        self.insert_prefetched(shuffle, m, r, bytes);
+                    }
+                    // `None` (holder lost the bucket): leave it for the
+                    // read path, which classifies the miss recoverable.
+                }
+                if ps.len() == before {
+                    break;
+                }
+            }
+        }
+        fetched
+    }
+
+    /// Admit one remotely-prefetched, already-framed bucket into the
+    /// memory tier. Never demotes residents or spills — the bytes remain
+    /// fetchable from their owner, so an over-budget prefetch is simply
+    /// dropped and the read path falls back to the streaming fetch.
+    /// Deliberately does NOT touch the put-time size index: these are
+    /// another worker's map outputs, and this worker must not report
+    /// them as its own if it later runs that map task.
+    fn insert_prefetched(&self, shuffle: u64, map_idx: usize, reduce_idx: usize, framed: Vec<u8>) {
+        if self.mem_used.load(Ordering::Relaxed).saturating_add(framed.len()) > self.budget {
+            metrics::global().counter("shuffle.prefetch.dropped").inc();
+            return;
+        }
+        self.insert_mem((shuffle, map_idx, reduce_idx), framed);
+    }
+
     /// Read a bucket's framed bytes from the local tiers only (memory,
     /// then disk), touching the LRU clock on a memory hit. This is what
     /// the worker's `shuffle.fetch` / `shuffle.fetch_multi` endpoints
@@ -1308,5 +1421,82 @@ mod tests {
     fn fetch_reduce_missing_everywhere_is_an_error() {
         let sm = ShuffleManager::default();
         assert!(sm.fetch_reduce_bytes(15, 0, 2).is_err());
+    }
+
+    /// A net that records `fetch_pairs` streams — the cross-task batch
+    /// path — and serves every pair from one table.
+    struct PairNet {
+        buckets: HashMap<(usize, usize), Vec<u8>>,
+        total_maps: usize,
+        pair_calls: AtomicUsize,
+    }
+
+    impl ShuffleNet for PairNet {
+        fn register(&self, _s: u64, _m: usize, _t: usize, _b: &[(usize, usize)]) -> Result<()> {
+            Ok(())
+        }
+
+        fn locate(&self, _s: u64) -> Result<MapOutputs> {
+            Ok(MapOutputs {
+                total_maps: self.total_maps,
+                locations: (0..self.total_maps).map(|m| (m, "peer:1".to_string())).collect(),
+            })
+        }
+
+        fn fetch(&self, _a: &str, _s: u64, m: usize, r: usize) -> Result<Vec<u8>> {
+            self.buckets
+                .get(&(m, r))
+                .cloned()
+                .ok_or_else(|| IgniteError::Storage("no bucket".into()))
+        }
+
+        fn fetch_pairs(
+            &self,
+            _addr: &str,
+            _shuffle: u64,
+            pairs: &[(usize, usize)],
+            _batch_bytes: usize,
+        ) -> Result<Vec<((usize, usize), Option<Vec<u8>>)>> {
+            self.pair_calls.fetch_add(1, Ordering::SeqCst);
+            Ok(pairs.iter().map(|&p| (p, self.buckets.get(&p).cloned())).collect())
+        }
+
+        fn local_addr(&self) -> String {
+            "self:0".to_string()
+        }
+    }
+
+    #[test]
+    fn prefetch_pairs_pulls_a_task_batch_in_one_stream() {
+        let sm = ShuffleManager::default();
+        sm.put_bucket(16, 0, 0, vec![900u64]); // already local: skipped
+        let net = Arc::new(PairNet {
+            buckets: (0..2usize)
+                .flat_map(|m| {
+                    (0..3usize).map(move |r| {
+                        ((m, r), compress::frame(&to_bytes(&vec![(m * 10 + r) as u64]), false))
+                    })
+                })
+                .collect(),
+            total_maps: 2,
+            pair_calls: AtomicUsize::new(0),
+        });
+        sm.set_net(net.clone());
+        // A 3-reduce task batch over 2 maps: 6 buckets, 1 already local,
+        // 5 fetched — through ONE stream to the single remote holder.
+        let pairs: Vec<(usize, usize)> =
+            (0..2).flat_map(|m| (0..3).map(move |r| (m, r))).collect();
+        let fetched = sm.prefetch_pairs(16, &pairs);
+        assert_eq!(fetched, 5);
+        assert_eq!(net.pair_calls.load(Ordering::SeqCst), 1);
+        // The batch's reduce reads now resolve locally: no fetch_multi
+        // stream (which PairNet would route through per-bucket `fetch`).
+        for r in 0..3usize {
+            let framed = sm.fetch_reduce_bytes(16, r, 2).unwrap();
+            assert_eq!(framed.len(), 2);
+        }
+        // Re-prefetching is a no-op (everything already local).
+        assert_eq!(sm.prefetch_pairs(16, &pairs), 0);
+        assert_eq!(net.pair_calls.load(Ordering::SeqCst), 1);
     }
 }

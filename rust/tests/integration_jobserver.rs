@@ -1,0 +1,280 @@
+//! Job-server integration: multi-tenant concurrent submission (results
+//! bit-identical to serial execution, sessions interleaving on the slot
+//! ledger), elastic workers (mid-job join, graceful drain), fine-grained
+//! task recovery after a worker kill (only the lost tasks re-issue — no
+//! whole-stage restart), and master-side speculative execution of
+//! stragglers.
+
+use mpignite::closure::register_op;
+use mpignite::cluster::Worker;
+use mpignite::config::IgniteConf;
+use mpignite::jobserver::{session_task_counter, JobState};
+use mpignite::prelude::*;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Heartbeat-timing-sensitive clusters; serialized like the other
+/// cluster suites so concurrent test threads don't turn timing
+/// assumptions into flakes.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn conf() -> IgniteConf {
+    let mut c = IgniteConf::new();
+    c.set("ignite.worker.heartbeat.ms", "50");
+    c.set("ignite.worker.timeout.ms", "2000");
+    c.set("ignite.worker.slots", "2");
+    c
+}
+
+/// Per-element ops used across the scenarios. `js.inc` is pure compute;
+/// the `nap` variants stretch task latency so jobs are observable (and
+/// killable / drainable) mid-flight; `js.stall_inc` turns exactly the
+/// partitions holding the marker value into stragglers.
+fn register_ops() {
+    register_op("js.inc", |v| match v {
+        Value::I64(n) => Ok(Value::I64(n + 1)),
+        other => Err(IgniteError::Invalid(format!("js.inc wants i64, got {}", other.type_name()))),
+    });
+    register_op("js.nap60_inc", |v| match v {
+        Value::I64(n) => {
+            std::thread::sleep(Duration::from_millis(60));
+            Ok(Value::I64(n + 1))
+        }
+        other => Err(IgniteError::Invalid(format!("js.nap wants i64, got {}", other.type_name()))),
+    });
+    register_op("js.nap400_inc", |v| match v {
+        Value::I64(n) => {
+            std::thread::sleep(Duration::from_millis(400));
+            Ok(Value::I64(n + 1))
+        }
+        other => Err(IgniteError::Invalid(format!("js.nap wants i64, got {}", other.type_name()))),
+    });
+    register_op("js.stall_inc", |v| match v {
+        Value::I64(n) => {
+            if n == -777 {
+                std::thread::sleep(Duration::from_millis(700));
+            }
+            Ok(Value::I64(n + 1))
+        }
+        other => {
+            Err(IgniteError::Invalid(format!("js.stall wants i64, got {}", other.type_name())))
+        }
+    });
+}
+
+fn counter(name: &str) -> u64 {
+    mpignite::metrics::global().counter(name).get()
+}
+
+fn values(range: std::ops::Range<i64>) -> Vec<Value> {
+    range.map(Value::I64).collect()
+}
+
+fn finished(state: u8) -> bool {
+    state == JobState::Done.tag()
+        || state == JobState::Failed(String::new()).tag()
+        || state == JobState::Cancelled.tag()
+}
+
+#[test]
+fn concurrent_sessions_interleave_and_match_serial_results() {
+    let _serial = lock();
+    register_ops();
+    let mut c = conf();
+    c.set("ignite.scheduler.policy", "fair");
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let _workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&c, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    let plan_a = sc.parallelize_values_with(values(0..8), 8).map_named("js.nap60_inc");
+    let plan_b = sc.parallelize_values_with(values(100..108), 8).map_named("js.nap60_inc");
+
+    // Serial baselines through the classic one-job-at-a-time entry point.
+    let want_a: Vec<Value> = master.run_plan(plan_a.plan()).unwrap().into_iter().flatten().collect();
+    let want_b: Vec<Value> = master.run_plan(plan_b.plan()).unwrap().into_iter().flatten().collect();
+
+    let session_a = master.new_session();
+    let session_b = master.new_session();
+    let job_a = master.submit_job(session_a, plan_a.plan()).unwrap();
+    let job_b = master.submit_job(session_b, plan_b.plan()).unwrap();
+
+    // Watch both jobs: at some instant BOTH sessions must have completed
+    // tasks while NEITHER job has finished — that is the multi-tenant
+    // interleaving the fair ledger exists for (a serial master would
+    // finish one job before the other completes a single task).
+    let mut overlapped = false;
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let sa = master.job_status(job_a).unwrap();
+        let sb = master.job_status(job_b).unwrap();
+        if finished(sa.state) && finished(sb.state) {
+            break;
+        }
+        if !finished(sa.state)
+            && !finished(sb.state)
+            && counter(&session_task_counter(session_a)) > 0
+            && counter(&session_task_counter(session_b)) > 0
+        {
+            overlapped = true;
+        }
+        assert!(std::time::Instant::now() < deadline, "jobs did not finish in time");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(overlapped, "both sessions must progress before either job finishes");
+
+    let got_a = master.wait_job(job_a, Duration::from_secs(5)).unwrap();
+    let got_b = master.wait_job(job_b, Duration::from_secs(5)).unwrap();
+    assert_eq!(got_a, want_a, "concurrent result A must be bit-identical to serial");
+    assert_eq!(got_b, want_b, "concurrent result B must be bit-identical to serial");
+    master.shutdown();
+}
+
+#[test]
+fn worker_joining_mid_job_receives_tasks() {
+    let _serial = lock();
+    register_ops();
+    let c = conf();
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let _w1 = Worker::start(&c, master.address()).unwrap();
+    master.wait_for_workers(1, Duration::from_secs(5)).unwrap();
+
+    // 12 slow tasks over 2 slots: plenty still pending when the second
+    // worker joins the running cluster.
+    let plan = sc.parallelize_values_with(values(0..12), 12).map_named("js.nap60_inc");
+    let session = master.new_session();
+    let job = master.submit_job(session, plan.plan()).unwrap();
+    std::thread::sleep(Duration::from_millis(130));
+    let w2 = Worker::start(&c, master.address()).unwrap();
+
+    let got = master.wait_job(job, Duration::from_secs(30)).unwrap();
+    assert_eq!(got, values(1..13), "result unchanged by the elastic join");
+    assert!(
+        w2.tasks_executed() > 0,
+        "the mid-job joiner must have been handed tasks (got {})",
+        w2.tasks_executed()
+    );
+    master.shutdown();
+}
+
+#[test]
+fn drained_worker_retires_gracefully_with_zero_reissues() {
+    let _serial = lock();
+    register_ops();
+    let c = conf();
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&c, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    let reissued0 = counter("plan.tasks.reissued");
+    let plan = sc.parallelize_values_with(values(0..10), 10).map_named("js.nap60_inc");
+    let session = master.new_session();
+    let job = master.submit_job(session, plan.plan()).unwrap();
+    std::thread::sleep(Duration::from_millis(80));
+
+    // Graceful retirement mid-job: stop placing on the worker, wait for
+    // its running tasks to report. Returns only once nothing is in
+    // flight there.
+    master.drain_worker(workers[1].worker_id, Duration::from_secs(20)).unwrap();
+    let drained_at = workers[1].tasks_executed();
+
+    let got = master.wait_job(job, Duration::from_secs(30)).unwrap();
+    assert_eq!(got, values(1..11), "job completes correctly around the drain");
+    assert_eq!(
+        workers[1].tasks_executed(),
+        drained_at,
+        "a drained worker must receive no tasks after the drain completes"
+    );
+    assert_eq!(
+        counter("plan.tasks.reissued") - reissued0,
+        0,
+        "graceful drain means zero failed or re-issued tasks"
+    );
+    master.shutdown();
+}
+
+#[test]
+fn killed_worker_reissues_only_its_unfinished_tasks() {
+    let _serial = lock();
+    register_ops();
+    let mut c = conf();
+    // Fast loss detection so the re-issue happens promptly.
+    c.set("ignite.worker.timeout.ms", "600");
+    c.set("ignite.worker.slots", "4");
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&c, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    let reissued0 = counter("plan.tasks.reissued");
+    let retried0 = counter("cluster.plan.jobs.retried");
+
+    // A SINGLE-stage plan (no shuffle): fine-grained recovery must
+    // re-run only the dead worker's unfinished tasks — never the whole
+    // stage, and never the whole job.
+    let plan = sc.parallelize_values_with(values(0..8), 8).map_named("js.nap400_inc");
+    let session = master.new_session();
+    let job = master.submit_job(session, plan.plan()).unwrap();
+    std::thread::sleep(Duration::from_millis(120));
+    workers[1].kill();
+
+    let got = master.wait_job(job, Duration::from_secs(30)).unwrap();
+    assert_eq!(got, values(1..9), "result correct despite the mid-job kill");
+    let reissued = counter("plan.tasks.reissued") - reissued0;
+    assert!(reissued > 0, "the dead worker's in-flight tasks must be re-issued");
+    assert!(
+        reissued < 8,
+        "fine-grained recovery: strictly fewer re-issues ({reissued}) than stage tasks (8)"
+    );
+    assert_eq!(
+        counter("cluster.plan.jobs.retried") - retried0,
+        0,
+        "no whole-job (or whole-stage) restart for an in-stage worker loss"
+    );
+    master.shutdown();
+}
+
+#[test]
+fn speculation_duplicates_straggler_without_changing_result() {
+    let _serial = lock();
+    register_ops();
+    let mut c = conf();
+    // Aggressive speculation so the injected straggler trips it fast.
+    c.set("ignite.speculation.multiplier", "2.0");
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let _workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&c, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    let speculated0 = counter("plan.tasks.speculated");
+
+    // Seven fast partitions establish the latency median; the marker
+    // partition stalls far past multiplier x median, so the master
+    // launches a duplicate on the other worker. First finisher wins;
+    // the loser's late report is ignored.
+    let mut rows = values(0..7);
+    rows.push(Value::I64(-777));
+    let plan = sc.parallelize_values_with(rows, 8).map_named("js.stall_inc");
+    let session = master.new_session();
+    let job = master.submit_job(session, plan.plan()).unwrap();
+    let got = master.wait_job(job, Duration::from_secs(30)).unwrap();
+
+    let mut want = values(1..8);
+    want.push(Value::I64(-776));
+    assert_eq!(got, want, "speculative duplicates must not change the result");
+    assert!(
+        counter("plan.tasks.speculated") - speculated0 >= 1,
+        "the straggler must have been speculatively duplicated"
+    );
+    master.shutdown();
+}

@@ -175,8 +175,10 @@ fn to_map(rows: Vec<Value>) -> HashMap<String, i64> {
 
 /// Run the 4-map × 4-reduce plan wordcount on a fresh 2-worker cluster
 /// built from `c`, returning the result map and the
-/// `shuffle.fetch.multi.calls` delta the job produced.
-fn run_cluster_plan_job(c: &IgniteConf) -> (HashMap<String, i64>, u64) {
+/// `shuffle.fetch.multi.calls` / `shuffle.fetch.batch.calls` deltas the
+/// job produced (the per-task streaming endpoint and the cross-task
+/// batch-prefetch endpoint — between them, every remote round-trip).
+fn run_cluster_plan_job(c: &IgniteConf) -> (HashMap<String, i64>, u64, u64) {
     let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
     let master = sc.master().unwrap().clone();
     let _workers: Vec<Arc<Worker>> =
@@ -184,14 +186,16 @@ fn run_cluster_plan_job(c: &IgniteConf) -> (HashMap<String, i64>, u64) {
     master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
 
     let multi_before = metric("shuffle.fetch.multi.calls");
+    let batch_before = metric("shuffle.fetch.batch.calls");
     let got = sc
         .parallelize_values_with(plan_rows(), 4)
         .reduce_by_key(4, AggSpec::SumI64)
         .collect()
         .unwrap();
     let multi = metric("shuffle.fetch.multi.calls") - multi_before;
+    let batch = metric("shuffle.fetch.batch.calls") - batch_before;
     master.shutdown();
-    (to_map(got), multi)
+    (to_map(got), multi, batch)
 }
 
 #[test]
@@ -223,15 +227,20 @@ fn plan_job_batches_fetches_and_evicts_under_pressure_bit_identically() {
     let evictions_before = metric("shuffle.evictions");
     let saved_before = metric("shuffle.bytes.saved");
 
-    let (got, multi_calls) = run_cluster_plan_job(&c);
+    let (got, multi_calls, batch_calls) = run_cluster_plan_job(&c);
     assert_eq!(got, want, "compressed/batched/evicting result must be bit-identical");
 
-    // Batched fetch: remote round-trips are multi-calls now, bounded by
-    // workers × reduces (2 × 4 = 8) instead of maps × reduces (16).
+    // Batched fetch: remote round-trips are streamed now (per-task
+    // fetch_multi plus the cross-task batch prefetch), bounded by
+    // workers × reduces + workers (2 × 4 + 2 = 10) instead of
+    // maps × reduces (16).
     let fetched = metric("shuffle.remote.fetches") - fetches_before;
     assert!(fetched >= 1, "reduce tasks must fetch across workers");
-    assert!(fetched <= 8, "remote round-trips must be <= workers x reduces, got {fetched}");
-    assert!(multi_calls >= 1, "the batched endpoint must carry the job");
+    assert!(fetched <= 10, "remote round-trips must stay batched, got {fetched}");
+    assert!(
+        multi_calls + batch_calls >= 1,
+        "a batched endpoint must carry the job ({multi_calls} multi, {batch_calls} batch)"
+    );
 
     // LRU pressure: resident buckets were demoted, not just new writes
     // spilled; compression saved real bytes on the way.
@@ -262,7 +271,7 @@ fn cluster_plan_job_ships_shuffle_bytes_zero_copy() {
 
     let zc_before = metric("rpc.bytes.zero_copy");
     let writes_before = metric("rpc.writes.vectored");
-    let (got, _multi_calls) = run_cluster_plan_job(&conf());
+    let (got, _multi_calls, _batch_calls) = run_cluster_plan_job(&conf());
     assert_eq!(got, want, "vectored-framing result must match the in-memory path");
 
     if vectored_off {
@@ -284,22 +293,55 @@ fn cluster_plan_job_ships_shuffle_bytes_zero_copy() {
 fn fetch_batch_frame_size_changes_round_trips_not_results() {
     let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
 
-    // batch.bytes=1: every fetch_multi frame carries exactly one bucket
-    // (the server always includes at least one), so the client re-asks
-    // once per remote bucket — the per-bucket baseline. The default
-    // frame budget carries a whole worker's share per round-trip.
+    // batch.bytes=1: every streaming frame (fetch_multi or fetch_batch)
+    // carries exactly one bucket (the server always includes at least
+    // one), so the client re-asks once per remote bucket — the
+    // per-bucket baseline. The default frame budget carries a whole
+    // worker's share per round-trip.
     let mut tiny = conf();
     tiny.set("ignite.shuffle.fetch.batch.bytes", "1");
-    let (got_tiny, calls_tiny) = run_cluster_plan_job(&tiny);
+    let (got_tiny, multi_tiny, batch_tiny) = run_cluster_plan_job(&tiny);
+    let calls_tiny = multi_tiny + batch_tiny;
 
     let batched = conf();
-    let (got_batched, calls_batched) = run_cluster_plan_job(&batched);
+    let (got_batched, multi_batched, batch_batched) = run_cluster_plan_job(&batched);
+    let calls_batched = multi_batched + batch_batched;
 
     assert_eq!(got_tiny, got_batched, "frame size must not change results");
     assert!(calls_tiny >= 1 && calls_batched >= 1);
     assert!(
         calls_tiny > calls_batched,
         "one-bucket frames must cost more round-trips ({calls_tiny} vs {calls_batched})"
+    );
+}
+
+#[test]
+fn task_batch_prefetch_collapses_round_trips_per_peer() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+
+    let local = IgniteContext::local(4);
+    let want = to_map(
+        local
+            .parallelize_values_with(plan_rows(), 4)
+            .reduce_by_key(4, AggSpec::SumI64)
+            .collect()
+            .unwrap(),
+    );
+
+    // Default budgets: each worker's task batch prefetches ALL of its
+    // reduce tasks' remote buckets through `shuffle.fetch_batch` — one
+    // combined stream per remote peer, not one per (task, peer). With 2
+    // workers and the whole corpus a fraction of the frame budget, that
+    // is at most one stream each way plus slack, strictly below the 4
+    // per-task `fetch_multi` round-trips the task-by-task path needs
+    // (4 reduce tasks × 1 remote peer).
+    let (got, multi_calls, batch_calls) = run_cluster_plan_job(&conf());
+    assert_eq!(got, want, "prefetched result must be bit-identical");
+    assert!(batch_calls >= 1, "the cross-task batch stream must carry the prefetch");
+    assert!(
+        multi_calls + batch_calls < 4,
+        "whole-batch streams must undercut per-task round-trips \
+         ({multi_calls} multi + {batch_calls} batch)"
     );
 }
 
