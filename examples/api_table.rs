@@ -199,6 +199,20 @@ fn main() -> Result<()> {
     println!("\nJob server — ignite.scheduler.* and ignite.speculation.* configuration:\n");
     print!("{}", jt.render());
 
+    // The streaming engine's surface: pacing intervals, the
+    // backpressure cap, and event-time windowing (`ignite.streaming.*`)
+    // — straight from KNOWN_KEYS so the table can't drift.
+    let mut smt = Table::new(vec!["key", "default", "meaning"]);
+    for (key, default, meaning) in mpignite::config::KNOWN_KEYS
+        .iter()
+        .filter(|(key, _, _)| key.starts_with("ignite.streaming."))
+    {
+        smt.row(vec![*key, *default, *meaning]);
+    }
+    assert!(!smt.is_empty(), "streaming config keys must exist");
+    println!("\nStreaming — ignite.streaming.* configuration:\n");
+    print!("{}", smt.render());
+
     println!("\napi_table OK ({} methods verified)", rows.len());
     Ok(())
 }

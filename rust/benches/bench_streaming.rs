@@ -1,0 +1,126 @@
+//! E14 — streaming micro-batch engine: batches/sec and batch-latency
+//! percentiles through the job server on a real 2-worker in-process
+//! cluster, across the axes the subsystem introduces:
+//!
+//! * **backpressure on vs off** — the same stream drained under the
+//!   default in-flight cap (admission stalls when the cluster lags)
+//!   versus a cap high enough that admission never blocks;
+//! * **stateful vs stateless** — windowed aggregation (cross-batch
+//!   state merged into the driver's shuffle tiers, watermark
+//!   finalization + GC) versus plain per-batch reduction.
+//!
+//! One bench iteration = one full stream of `BATCHES` micro-batches
+//! drained to completion, so the Items throughput column reads directly
+//! as batches/sec. The p50/p99 batch latencies come from the engine's
+//! own `streaming.batch.latency` histogram.
+//!
+//! Run: `cargo bench --bench bench_streaming` (MPIGNITE_BENCH_FAST=1 to
+//! smoke). CSV block feeds CHANGES.md baselines.
+
+use mpignite::bench::{black_box, BenchSuite, Throughput};
+use mpignite::cluster::Worker;
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use std::sync::Arc;
+use std::time::Duration;
+
+const BATCHES: u64 = 20;
+const PARTS: usize = 2;
+const ROWS_PER_PART: usize = 32;
+const KEYS: usize = 8;
+
+fn cluster(max_inflight: usize) -> (IgniteContext, Vec<Arc<Worker>>) {
+    let mut conf = IgniteConf::new();
+    conf.set("ignite.worker.heartbeat.ms", "50");
+    conf.set("ignite.streaming.max.inflight.batches", max_inflight.to_string());
+    let sc = IgniteContext::cluster_driver(conf.clone(), 0).expect("driver");
+    let master = sc.master().unwrap().clone();
+    let workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&conf, master.address()).expect("worker")).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+    (sc, workers)
+}
+
+fn source() -> MemoryStreamSource {
+    let src = MemoryStreamSource::new();
+    for t in 0..BATCHES {
+        let parts: Vec<Vec<Value>> = (0..PARTS)
+            .map(|p| {
+                (0..ROWS_PER_PART)
+                    .map(|i| {
+                        Value::List(vec![
+                            Value::Str(format!("k{}", (i + p) % KEYS)),
+                            Value::I64(1),
+                        ])
+                    })
+                    .collect()
+            })
+            .collect();
+        src.push(parts, t);
+    }
+    src.close();
+    src
+}
+
+/// Drain one full stream; returns the result-row count (for black_box).
+fn run_stream(sc: &IgniteContext, windowed: bool) -> usize {
+    let mut spec = QuerySpec::reduce("bench.stream", Vec::new(), AggSpec::SumI64, PARTS);
+    if windowed {
+        spec = spec.windowed(WindowSpec::tumbling(4));
+    }
+    let mut query = sc.streaming().query(Box::new(source()), spec).expect("query");
+    query.drain(Duration::from_secs(60)).expect("drain");
+    assert_eq!(query.batches_completed(), BATCHES);
+    query.results_sorted().len()
+}
+
+fn main() {
+    mpignite::util::init_logger();
+    let mut suite = BenchSuite::new(format!(
+        "E14: streaming micro-batches through the job server \
+         ({BATCHES} batches/stream, {PARTS}x{ROWS_PER_PART} rows, {KEYS} keys, 2 workers)"
+    ));
+
+    {
+        let (sc, _workers) = cluster(2);
+        suite.bench_throughput("stateless_backpressure_cap2", Throughput::Items(BATCHES), || {
+            black_box(run_stream(&sc, false));
+        });
+        sc.master().unwrap().shutdown();
+    }
+
+    {
+        let (sc, _workers) = cluster(64);
+        suite.bench_throughput("stateless_backpressure_off", Throughput::Items(BATCHES), || {
+            black_box(run_stream(&sc, false));
+        });
+        sc.master().unwrap().shutdown();
+    }
+
+    {
+        let (sc, _workers) = cluster(2);
+        suite.bench_throughput("stateful_windowed_cap2", Throughput::Items(BATCHES), || {
+            black_box(run_stream(&sc, true));
+        });
+        sc.master().unwrap().shutdown();
+    }
+
+    suite.report();
+
+    let m = mpignite::metrics::global();
+    let latency = m.histogram("streaming.batch.latency");
+    println!(
+        "\nbatch latency over {} batches: p50 {}us p99 {}us max {}us",
+        latency.count(),
+        latency.quantile_ns(0.5) / 1_000,
+        latency.quantile_ns(0.99) / 1_000,
+        latency.max_ns() / 1_000,
+    );
+    println!(
+        "submitted {} completed {} backpressure stalls {} windows finalized {}",
+        m.counter("streaming.batches.submitted").get(),
+        m.counter("streaming.batches.completed").get(),
+        m.counter("streaming.backpressure.stalls").get(),
+        m.counter("streaming.windows.finalized").get(),
+    );
+}

@@ -9,7 +9,7 @@ use crate::comm::SparkComm;
 use crate::error::{IgniteError, Result};
 use crate::rng::Xoshiro256;
 use crate::runtime::{shared_service, TensorF32};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use crate::ser::Value;
 
 /// Register every application function (idempotent).
@@ -318,6 +318,50 @@ pub fn register_kmeans_peer(name: &str, k: usize, iters: usize) {
     });
 }
 
+/// Online (streaming mini-batch) k-means as a peer operator: each
+/// micro-batch's gang refreshes a persistent model with ONE in-stage
+/// all-reduce — the streaming-iterative shape (`examples/
+/// streaming_kmeans.rs`): no shuffle, no driver round-trip, and the
+/// model is fresh after every batch.
+///
+/// Per batch: rank 0 broadcasts the current model (so every process in
+/// the gang — including one that joined mid-stream — starts from the
+/// same state; first batch initializes via [`kmeans_init`]), every rank
+/// folds its partition in with [`kmeans_iteration`], and the result
+/// blends into the prior model with learning rate `alpha`. All ranks
+/// return the identical refreshed model as `Value::F64Vec` rows.
+///
+/// The model lock is never held across a comm call — sibling ranks
+/// sharing a process would deadlock otherwise; every rank computes the
+/// same blended model, so last-writer-wins is benign.
+pub fn register_kmeans_online(name: &str, k: usize, alpha: f64) {
+    let model: Arc<Mutex<Option<Vec<Vec<f64>>>>> = Arc::new(Mutex::new(None));
+    crate::closure::register_peer_op(name, move |comm, rows| {
+        let points = peer_points(&rows)?;
+        let proposal = if comm.rank() == 0 {
+            let current = model.lock().unwrap().clone();
+            Some(Value::List(
+                current.unwrap_or_default().into_iter().map(Value::F64Vec).collect(),
+            ))
+        } else {
+            None
+        };
+        let prior = centroids_of(comm.broadcast(0, proposal)?)?;
+        let base =
+            if prior.len() == k { prior } else { kmeans_init(comm, &points, k)? };
+        let refreshed = kmeans_iteration(comm, &points, &base)?;
+        let blended: Vec<Vec<f64>> = base
+            .iter()
+            .zip(&refreshed)
+            .map(|(old, new)| {
+                old.iter().zip(new).map(|(o, n)| (1.0 - alpha) * o + alpha * n).collect()
+            })
+            .collect();
+        *model.lock().unwrap() = Some(blended.clone());
+        Ok(blended.into_iter().map(Value::F64Vec).collect())
+    });
+}
+
 /// Pure-Rust single-node power iteration (baseline + correctness oracle
 /// for the distributed version; also the E8 bench comparator).
 pub fn power_iter_reference(n: usize, iters: usize, seed: u64) -> f64 {
@@ -436,6 +480,37 @@ mod tests {
         })
         .unwrap_err();
         assert!(err.to_string().contains("f64vec"), "got: {err}");
+    }
+
+    #[test]
+    fn online_kmeans_persists_and_blends_the_model_across_batches() {
+        register_kmeans_online("app.test.kmeans_online", 2, 0.5);
+        let op = crate::closure::registry().get_peer_op("app.test.kmeans_online").unwrap();
+        let batch = |shift: f64| {
+            let op = op.clone();
+            run_local_world(2, move |comm| {
+                let rank = comm.rank() as f64;
+                let rows = vec![
+                    Value::F64Vec(vec![shift + 0.1 * rank, 0.0]),
+                    Value::F64Vec(vec![10.0 + shift + 0.1 * rank, 0.0]),
+                ];
+                op(comm, rows)
+            })
+            .unwrap()
+        };
+        let first = batch(0.0);
+        assert_eq!(first[0], first[1], "ranks must agree bit-for-bit");
+        // Second batch near (4, 0) / (14, 0): the blended model must
+        // move toward it but remember the first batch (alpha = 0.5).
+        let second = batch(4.0);
+        assert_eq!(second[0], second[1]);
+        assert_ne!(first[0], second[0], "model must refresh per batch");
+        let Value::F64Vec(c) = &second[0][0] else { panic!("bad centroid") };
+        assert!(
+            c[0] > 0.0 && c[0] < 4.5,
+            "blend must sit between the batch means, got {}",
+            c[0]
+        );
     }
 
     #[test]

@@ -1942,30 +1942,70 @@ impl Master {
         Ok(())
     }
 
-    /// Poll `job.status` until the job settles, returning its result
-    /// rows (partitions flattened in order).
+    /// Wait (bounded by `timeout`) until the job settles, returning its
+    /// result rows (partitions flattened in order). Watches the job's
+    /// local [`crate::jobserver::JobHandle`] directly — no `job.status`
+    /// RPC per poll — and surfaces the failure detail:
+    /// `Invalid` for a job id this master never issued, `Task` carrying
+    /// the job's own error string for `Failed`/`Cancelled`, and a
+    /// `Timeout` that reports the state and task progress at expiry so a
+    /// wedged job is diagnosable from the error alone.
     pub fn wait_job(&self, job_id: u64, timeout: Duration) -> Result<Vec<Value>> {
+        let handle = self
+            .job_table
+            .get(job_id)
+            .ok_or_else(|| IgniteError::Invalid(format!("unknown job {job_id}")))?;
         let deadline = std::time::Instant::now() + timeout;
         loop {
-            let status = self.job_status(job_id)?;
-            if status.state == ServerJobState::Done.tag() {
-                return status.results.ok_or_else(|| {
-                    IgniteError::Task(format!("job {job_id}: done without results"))
-                });
+            match handle.state() {
+                ServerJobState::Done => {
+                    return handle.results().ok_or_else(|| {
+                        IgniteError::Task(format!("job {job_id}: done without results"))
+                    });
+                }
+                ServerJobState::Failed(detail) => {
+                    return Err(IgniteError::Task(format!("job {job_id} failed: {detail}")));
+                }
+                ServerJobState::Cancelled => {
+                    return Err(IgniteError::Task(format!("job {job_id} cancelled")));
+                }
+                state @ (ServerJobState::Pending | ServerJobState::Running) => {
+                    if std::time::Instant::now() > deadline {
+                        let word = match state {
+                            ServerJobState::Pending => "pending",
+                            _ => "running",
+                        };
+                        return Err(IgniteError::Timeout(format!(
+                            "job {job_id} still {word} after {timeout:?} ({} tasks completed)",
+                            handle.tasks_completed.load(std::sync::atomic::Ordering::SeqCst)
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
             }
-            if status.state == ServerJobState::Failed(String::new()).tag() {
-                return Err(IgniteError::Task(status.error));
-            }
-            if status.state == ServerJobState::Cancelled.tag() {
-                return Err(IgniteError::Task(format!("job {job_id} cancelled")));
-            }
-            if std::time::Instant::now() > deadline {
-                return Err(IgniteError::Timeout(format!(
-                    "job {job_id} incomplete after {timeout:?}"
-                )));
-            }
-            std::thread::sleep(Duration::from_millis(10));
         }
+    }
+
+    /// The multi-tenant slot ledger — read-only admission signal for
+    /// layers above the job server (the streaming engine's backpressure
+    /// consults schedulable capacity here before cutting a batch).
+    pub fn ledger(&self) -> &SlotLedger {
+        &self.ledger
+    }
+
+    /// `job.clear`-style pruning for artifacts owned by layers above the
+    /// job server (streaming window state past the watermark): drops the
+    /// ids from the master's map-output/broadcast tables, tombstones the
+    /// shuffles against stale re-registration, and fans the clear out to
+    /// every live worker — exactly the job-end GC path, minus the job.
+    pub fn clear_artifacts(&self, shuffles: Vec<u64>, broadcasts: Vec<u64>) -> Result<()> {
+        self.env.ask(
+            &self.env.address(),
+            EP_JOB_CLEAR,
+            to_bytes(&JobClear { shuffles, broadcasts }),
+            Duration::from_secs(5),
+        )?;
+        Ok(())
     }
 
     /// Gracefully retire a worker (`worker.drain`): the ledger stops

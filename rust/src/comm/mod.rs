@@ -262,21 +262,9 @@ impl SparkComm {
         self.my_rank
     }
 
-    /// Paper-style alias for [`rank`](Self::rank).
-    #[deprecated(since = "0.2.0", note = "use `rank()`; kept as a paper-style alias only")]
-    pub fn get_rank(&self) -> usize {
-        self.rank()
-    }
-
     /// Number of ranks in this communicator (paper: `world.getSize`).
     pub fn size(&self) -> usize {
         self.ranks.len()
-    }
-
-    /// Paper-style alias for [`size`](Self::size).
-    #[deprecated(since = "0.2.0", note = "use `size()`; kept as a paper-style alias only")]
-    pub fn get_size(&self) -> usize {
-        self.size()
     }
 
     /// Context identifier (0 for the world communicator).
@@ -517,13 +505,6 @@ mod tests {
     fn world_rank_and_size() {
         let out = run_local_world(4, |comm| Ok((comm.rank(), comm.size()))).unwrap();
         assert_eq!(out, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
-    }
-
-    #[test]
-    #[allow(deprecated)] // the deprecated aliases must keep working
-    fn paper_aliases() {
-        let out = run_local_world(2, |comm| Ok((comm.get_rank(), comm.get_size()))).unwrap();
-        assert_eq!(out, vec![(0, 2), (1, 2)]);
     }
 
     #[test]

@@ -47,6 +47,11 @@ pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
     ("ignite.shuffle.compress", "false", "LZ-compress shuffle buckets at encode/spill/wire boundaries (raw fallback per bucket)"),
     ("ignite.shuffle.fetch.batch.bytes", "1048576", "Streaming frame budget per shuffle.fetch_multi response"),
     ("ignite.plan.locality", "true", "Place plan reduce tasks on the worker holding most of their input bytes"),
+    ("ignite.streaming.batch.interval.ms", "100", "Target micro-batch cut interval for StreamQuery::run"),
+    ("ignite.streaming.interval.max.ms", "2000", "Ceiling the adaptive interval may stretch to under backpressure"),
+    ("ignite.streaming.max.inflight.batches", "2", "Batch admission blocks once this many batches are submitted but unfinished"),
+    ("ignite.streaming.window.size", "10", "Tumbling window width in event-time units"),
+    ("ignite.streaming.allowed.lateness", "0", "Event-time slack before a window behind the watermark is finalized and pruned"),
     ("ignite.storage.memory.max", "268435456", "Block store budget (bytes)"),
     ("ignite.storage.spill.dir", "/tmp/mpignite-spill", "Spill directory"),
     ("ignite.artifacts.dir", "artifacts", "AOT HLO artifact directory"),
@@ -220,6 +225,20 @@ impl IgniteConf {
         }
         self.get_usize("ignite.scheduler.session.quota.slots")?;
         self.get_f64("ignite.speculation.multiplier")?;
+        // Streaming admission/windowing: zero in-flight batches or a
+        // zero-width window would wedge the driver loop on its first
+        // batch, so both must be >= 1.
+        self.get_duration_ms("ignite.streaming.batch.interval.ms")?;
+        self.get_duration_ms("ignite.streaming.interval.max.ms")?;
+        if self.get_usize("ignite.streaming.max.inflight.batches")? == 0 {
+            return Err(IgniteError::Config(
+                "ignite.streaming.max.inflight.batches must be >= 1".into(),
+            ));
+        }
+        if self.get_u64("ignite.streaming.window.size")? == 0 {
+            return Err(IgniteError::Config("ignite.streaming.window.size must be >= 1".into()));
+        }
+        self.get_u64("ignite.streaming.allowed.lateness")?;
         // Collective algorithm names are validated per key, so a typo'd
         // algo fails app startup instead of silently defaulting at the
         // first broadcast (the comm layer double-checks at use time).
@@ -407,6 +426,30 @@ mod tests {
         let mut conf = IgniteConf::new();
         conf.set("ignite.scheduler.policy", "fair");
         conf.validate().unwrap();
+    }
+
+    #[test]
+    fn streaming_keys_validate() {
+        let conf = IgniteConf::new();
+        // Interval and in-flight cap may be steered by a CI lane's env,
+        // so assert the invariants validate() enforces rather than fixed
+        // defaults.
+        assert!(conf.get_usize("ignite.streaming.max.inflight.batches").unwrap() >= 1);
+        assert!(conf.get_u64("ignite.streaming.window.size").unwrap() >= 1);
+        conf.get_duration_ms("ignite.streaming.batch.interval.ms").unwrap();
+        conf.get_duration_ms("ignite.streaming.interval.max.ms").unwrap();
+        conf.get_u64("ignite.streaming.allowed.lateness").unwrap();
+        conf.validate().unwrap();
+
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.streaming.max.inflight.batches", "0");
+        let err = conf.validate().unwrap_err();
+        assert!(err.to_string().contains("max.inflight.batches"), "got: {err}");
+
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.streaming.window.size", "0");
+        let err = conf.validate().unwrap_err();
+        assert!(err.to_string().contains("window.size"), "got: {err}");
     }
 
     #[test]

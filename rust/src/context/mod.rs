@@ -136,6 +136,14 @@ impl IgniteContext {
         PlanRdd::new(plan, self.engine.clone(), self.master.clone())
     }
 
+    /// Entry point for streaming queries: continuous sources cut into
+    /// micro-batch plan jobs through the job server, with windowed state
+    /// in the shuffle tiers and ledger-tied backpressure. See
+    /// [`crate::streaming`].
+    pub fn streaming(&self) -> crate::streaming::StreamContext {
+        crate::streaming::StreamContext::new(self)
+    }
+
     /// Parallelize `rows` into `parts` partitions and run the registered
     /// peer operator `peer_op` over them as one gang-scheduled **peer
     /// section**: rank = partition index, size = `parts`, and the

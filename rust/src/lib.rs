@@ -320,6 +320,64 @@
 //! whole suite under `MPIGNITE_SCHEDULER_POLICY=fair` plus a seeded
 //! chaos soak over the job-server scenarios.
 //!
+//! ## Streaming: micro-batches through the job server
+//!
+//! The [`streaming`] subsystem turns continuous sources into the batch
+//! engine's own jobs — Structured-Streaming-style micro-batching with
+//! zero new execution machinery:
+//!
+//! * **Source → batch → plan job.** A [`streaming::StreamSource`]
+//!   ([`streaming::MemoryStreamSource`], or the replayable
+//!   [`streaming::FileTailSource`] that cuts only complete appended
+//!   lines) yields [`streaming::StreamBatch`]es — new partitions plus a
+//!   per-batch event time. [`streaming::StreamQuery`] wraps each batch
+//!   in `Source → ops → WindowKey → sink` and submits it through
+//!   `job.submit`, recording per-batch lineage (batch id → job id →
+//!   stage id → window → latency).
+//! * **Windowed state lives in the shuffle tiers.** The built-in
+//!   [`rdd::OpSpec::WindowKey`] stamp prefixes every pair's key with its
+//!   tumbling window, so cross-batch state for one window meets in the
+//!   same reduce buckets; completed batches merge (commutative
+//!   [`rdd::AggSpec`]) into per-window state buckets on the driver
+//!   engine — same LRU memory tier, same disk demotion, same codec as
+//!   any shuffle data. When the **watermark** passes a window's end plus
+//!   `ignite.streaming.allowed.lateness`, the window finalizes into the
+//!   query's results and its state is pruned through the `job.clear` GC
+//!   path on master, workers, and driver alike
+//!   (`streaming.windows.finalized`).
+//! * **Backpressure from the slot ledger.** Admission of a new batch
+//!   blocks while `ignite.streaming.max.inflight.batches` jobs are
+//!   unfinished or the [`jobserver::SlotLedger`] reports zero
+//!   schedulable capacity (`streaming.backpressure.stalls`,
+//!   `streaming.queue.depth`); the paced [`streaming::StreamQuery::run`]
+//!   loop stretches its cut interval toward
+//!   `ignite.streaming.interval.max.ms` while stalled and relaxes back
+//!   to `ignite.streaming.batch.interval.ms` when the cluster catches
+//!   up.
+//! * **Recovery for free.** Because each micro-batch is an ordinary
+//!   job-server job, a worker killed mid-stream costs re-issued *tasks*
+//!   (`plan.tasks.reissued`), never a query restart — the soak test in
+//!   `rust/tests/integration_streaming.rs` pins ≥200 chaos-injected
+//!   micro-batches bit-identical to the equivalent single batch job
+//!   ([`streaming::batch_oracle_plan`]).
+//! * **Streaming-iterative sinks.** [`streaming::SinkSpec::Peer`] gang-
+//!   runs a registered peer operator per batch — `examples/
+//!   streaming_kmeans.rs` keeps an online k-means model fresh with one
+//!   in-stage `all_reduce` per micro-batch
+//!   ([`apps::register_kmeans_online`]).
+//!
+//! Key config: `ignite.streaming.batch.interval.ms` /
+//! `ignite.streaming.interval.max.ms` (pacing),
+//! `ignite.streaming.max.inflight.batches` (backpressure cap),
+//! `ignite.streaming.window.size` / `ignite.streaming.allowed.lateness`
+//! (event-time windows). Instrumentation:
+//! `streaming.batches.{submitted,completed,failed}`,
+//! `streaming.batch.latency`, `streaming.backpressure.stalls`,
+//! `streaming.queue.depth`, `streaming.windows.finalized`,
+//! `streaming.interval.ms`; `rust/benches/bench_streaming.rs` (E14)
+//! measures batches/sec and p50/p99 batch latency, backpressure on/off,
+//! stateful vs stateless.
+//!
 //! ## Quickstart (Listing 1 of the paper)
 //!
 //! ```
@@ -365,6 +423,7 @@ pub mod scheduler;
 pub mod ser;
 pub mod shuffle;
 pub mod storage;
+pub mod streaming;
 pub mod testkit;
 pub mod util;
 
@@ -381,4 +440,8 @@ pub mod prelude {
     pub use crate::error::{IgniteError, Result};
     pub use crate::rdd::{AggSpec, OpSpec, PlanRdd, PlanSpec, Rdd};
     pub use crate::ser::{FromValue, IntoValue, Value};
+    pub use crate::streaming::{
+        FileTailSource, MemoryStreamSource, QuerySpec, SinkSpec, StreamBatch, StreamContext,
+        StreamQuery, StreamSource, WindowSpec,
+    };
 }

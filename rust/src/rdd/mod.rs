@@ -19,8 +19,8 @@ mod plan;
 
 pub use nodes::*;
 pub use plan::{
-    run_shuffle_map_task, stable_value_hash, value_partition, AggSpec, OpSpec, PlanRdd, PlanSpec,
-    PlanStage, PlanStageKind,
+    partition_for_key_bytes, run_shuffle_map_task, stable_value_hash, value_partition, AggSpec,
+    OpSpec, PlanRdd, PlanSpec, PlanStage, PlanStageKind,
 };
 
 use crate::comm::{CommWorld, SparkComm};

@@ -122,6 +122,12 @@ pub enum OpSpec {
     MapPartitionsNamed { name: String },
     /// Key each element by its stable hash: `v -> List([I64(hash), v])`.
     KeyByHash,
+    /// Prefix each pair's key with a tumbling-window id:
+    /// `List([k, v]) -> List([List([I64(window), k]), v])`. The streaming
+    /// engine stamps every micro-batch's rows with the window its event
+    /// time falls in, so windowed state from different batches meets in
+    /// the same shuffle bucket.
+    WindowKey { window: u64 },
     /// Deterministic Bernoulli sample. The fraction is stored as raw
     /// `f64` bits so round-trips are byte-identical; the per-partition
     /// RNG seeding matches [`super::SampleNode`] exactly.
@@ -185,6 +191,20 @@ impl OpSpec {
                     Value::List(vec![Value::I64(h), v])
                 })
                 .collect()),
+            OpSpec::WindowKey { window } => rows
+                .into_iter()
+                .map(|v| match v {
+                    Value::List(mut l) if l.len() == 2 => {
+                        let value = l.pop().unwrap();
+                        let key = l.pop().unwrap();
+                        Ok(Value::List(vec![
+                            Value::List(vec![Value::I64(*window as i64), key]),
+                            value,
+                        ]))
+                    }
+                    other => Err(op_type_err("window_key", "List([key, value])", &other)),
+                })
+                .collect(),
             OpSpec::Sample { fraction_bits, seed } => {
                 let fraction = f64::from_bits(*fraction_bits);
                 // Same per-(seed, partition) derivation as SampleNode so
@@ -227,6 +247,7 @@ const OP_SAMPLE: u8 = 6;
 const OP_COUNT: u8 = 7;
 const OP_SUM_I64: u8 = 8;
 const OP_SUM_F64: u8 = 9;
+const OP_WINDOW_KEY: u8 = 10;
 
 impl Encode for OpSpec {
     fn encode(&self, buf: &mut Vec<u8>) {
@@ -257,6 +278,10 @@ impl Encode for OpSpec {
             OpSpec::Count => buf.push(OP_COUNT),
             OpSpec::SumI64 => buf.push(OP_SUM_I64),
             OpSpec::SumF64 => buf.push(OP_SUM_F64),
+            OpSpec::WindowKey { window } => {
+                buf.push(OP_WINDOW_KEY);
+                window.encode(buf);
+            }
         }
     }
 }
@@ -276,6 +301,7 @@ impl Decode for OpSpec {
             OP_COUNT => OpSpec::Count,
             OP_SUM_I64 => OpSpec::SumI64,
             OP_SUM_F64 => OpSpec::SumF64,
+            OP_WINDOW_KEY => OpSpec::WindowKey { window: u64::decode(r)? },
             t => return Err(IgniteError::Codec(format!("unknown OpSpec tag {t}"))),
         })
     }
@@ -937,6 +963,12 @@ impl PlanRdd {
         self.op(OpSpec::KeyByHash)
     }
 
+    /// Prefix each pair's key with a tumbling-window id (built-in; the
+    /// streaming engine's per-batch window stamp).
+    pub fn window_key(&self, window: u64) -> PlanRdd {
+        self.op(OpSpec::WindowKey { window })
+    }
+
     /// Deterministic Bernoulli sample with a fixed seed (built-in).
     pub fn sample(&self, fraction: f64, seed: u64) -> PlanRdd {
         self.op(OpSpec::Sample { fraction_bits: fraction.to_bits(), seed })
@@ -1167,6 +1199,7 @@ mod tests {
             OpSpec::Count,
             OpSpec::SumI64,
             OpSpec::SumF64,
+            OpSpec::WindowKey { window: 12 },
         ] {
             let b = to_bytes(&op);
             assert_eq!(from_bytes::<OpSpec>(&b).unwrap(), op);
@@ -1178,6 +1211,34 @@ mod tests {
         assert!(from_bytes::<PlanSpec>(&[200]).is_err());
         assert!(from_bytes::<OpSpec>(&[200]).is_err());
         assert!(from_bytes::<AggSpec>(&[200]).is_err());
+    }
+
+    #[test]
+    fn window_key_wraps_pairs_and_rejects_non_pairs() {
+        let op = OpSpec::WindowKey { window: 3 };
+        let rows = vec![Value::List(vec![Value::Str("a".into()), Value::I64(1)])];
+        let got = op.apply(0, rows).unwrap();
+        assert_eq!(
+            got,
+            vec![Value::List(vec![
+                Value::List(vec![Value::I64(3), Value::Str("a".into())]),
+                Value::I64(1),
+            ])]
+        );
+        assert!(op.apply(0, vec![Value::I64(9)]).is_err(), "bare rows are not pairs");
+        // Same window + key from different batches meets in the same
+        // reduce partition: the wrapped key's encoding is batch-independent.
+        let a = op.apply(0, vec![Value::List(vec![Value::I64(7), Value::I64(1)])]).unwrap();
+        let b = op.apply(5, vec![Value::List(vec![Value::I64(7), Value::I64(2)])]).unwrap();
+        let key = |v: &Value| match v {
+            Value::List(l) => to_bytes(&l[0]),
+            _ => unreachable!(),
+        };
+        assert_eq!(key(&a[0]), key(&b[0]));
+        assert_eq!(
+            partition_for_key_bytes(&key(&a[0]), 8),
+            partition_for_key_bytes(&key(&b[0]), 8)
+        );
     }
 
     #[test]

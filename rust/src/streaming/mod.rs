@@ -1,0 +1,865 @@
+//! Streaming micro-batch engine: continuous sources cut into plan jobs.
+//!
+//! The execution model is the Spark Structured Streaming one rebuilt on
+//! this repo's own planes, one micro-batch at a time:
+//!
+//! 1. A [`StreamSource`] appends partitions over time; each poll yields
+//!    a [`StreamBatch`] stamped with an event time (per-batch watermark
+//!    granularity).
+//! 2. [`StreamQuery`] cuts every batch into an ordinary [`PlanSpec`] job
+//!    — `Source → ops → WindowKey → sink` — and submits it through the
+//!    job server (`job.submit`) in cluster mode, or runs it on the
+//!    driver engine locally. Batch lineage (batch id, job id, stage id,
+//!    window, latency) is recorded per batch.
+//! 3. **Windowed state lives in the shuffle tiers.** Each open window
+//!    owns a state shuffle id; the reduced pairs of every completed
+//!    batch merge into buckets keyed `(state_id, 0, reduce_partition)`
+//!    on the driver engine, so state rides the exact same LRU /
+//!    spill-to-disk discipline as any shuffle bucket. The per-key merge
+//!    uses the query's [`AggSpec`], which must therefore be commutative
+//!    (batches complete out of order under the in-flight window).
+//! 4. **Watermarks close windows.** When the watermark passes a
+//!    window's end plus allowed lateness — and no in-flight batch can
+//!    still add to it — the window finalizes: its buckets are read out
+//!    into the query's results and pruned through the `job.clear` GC
+//!    path ([`crate::cluster::Master::clear_artifacts`] fans the clear
+//!    out to every live worker) plus the driver's own tiers.
+//! 5. **Backpressure is admission control.** Cutting a batch blocks
+//!    while `ignite.streaming.max.inflight.batches` jobs are
+//!    unfinished, or while the job server's [`SlotLedger`] reports zero
+//!    schedulable capacity with work already in flight
+//!    (`streaming.backpressure.stalls`, `streaming.queue.depth`);
+//!    [`StreamQuery::run`] additionally stretches its pacing interval
+//!    toward `ignite.streaming.interval.max.ms` while stalled and
+//!    relaxes it once admission clears.
+//!
+//! Because each micro-batch is a plain plan job, everything the batch
+//! engine earned applies per batch for free: fine-grained task re-issue
+//! after a worker loss, speculation, locality, compressed tiered
+//! shuffle. A killed worker mid-stream costs re-issued tasks, never a
+//! query restart.
+//!
+//! [`SlotLedger`]: crate::jobserver::SlotLedger
+
+mod source;
+
+pub use source::{FileTailSource, MemoryStreamSource, StreamBatch, StreamSource};
+
+use crate::cluster::Master;
+use crate::config::IgniteConf;
+use crate::context::IgniteContext;
+use crate::error::{IgniteError, Result};
+use crate::jobserver::JobState;
+use crate::metrics;
+use crate::rdd::{partition_for_key_bytes, AggSpec, OpSpec, PlanRdd, PlanSpec};
+use crate::scheduler::Engine;
+use crate::ser::{to_bytes, Value};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Ceiling on one admission stall before the query gives up — a wedged
+/// cluster must surface as an error, not a silent hang.
+const ADMIT_TIMEOUT: Duration = Duration::from_secs(30);
+
+// ------------------------------------------------------------- windows --
+
+/// Tumbling event-time windows of `size` units; a window stays open for
+/// `allowed_lateness` units past its end before it finalizes.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowSpec {
+    pub size: u64,
+    pub allowed_lateness: u64,
+}
+
+impl WindowSpec {
+    pub fn tumbling(size: u64) -> Self {
+        WindowSpec { size: size.max(1), allowed_lateness: 0 }
+    }
+
+    pub fn with_lateness(mut self, lateness: u64) -> Self {
+        self.allowed_lateness = lateness;
+        self
+    }
+
+    /// The `ignite.streaming.window.size` / `allowed.lateness` pair.
+    pub fn from_conf(conf: &IgniteConf) -> Result<Self> {
+        Ok(WindowSpec {
+            size: conf.get_u64("ignite.streaming.window.size")?.max(1),
+            allowed_lateness: conf.get_u64("ignite.streaming.allowed.lateness")?,
+        })
+    }
+
+    /// Window containing `event_time`.
+    pub fn window_of(&self, event_time: u64) -> u64 {
+        event_time / self.size
+    }
+
+    /// Watermark at which window `window` can no longer receive data.
+    fn closes_at(&self, window: u64) -> u64 {
+        (window + 1).saturating_mul(self.size).saturating_add(self.allowed_lateness)
+    }
+}
+
+// --------------------------------------------------------------- query --
+
+/// What each micro-batch's plan job ends in.
+#[derive(Debug, Clone)]
+pub enum SinkSpec {
+    /// Shuffle-reduce the (window-stamped) pairs with this combiner.
+    /// Windowed queries require the combiner to be commutative and
+    /// associative: state merges in batch-completion order.
+    Reduce { agg: AggSpec },
+    /// Gang-run the named peer operator over the batch's partitions
+    /// (rank = partition index) — the streaming-iterative shape where
+    /// the model update is an in-stage `all_reduce`, no driver
+    /// round-trip. Outputs are emitted per batch; windows do not apply.
+    Peer { name: String },
+}
+
+/// A streaming query: the per-batch transform chain plus its sink.
+/// `ops` must leave rows as `List([key, value])` pairs for a reduce
+/// sink; a peer sink takes whatever the peer operator expects.
+#[derive(Debug, Clone)]
+pub struct QuerySpec {
+    pub name: String,
+    pub ops: Vec<OpSpec>,
+    pub sink: SinkSpec,
+    pub partitions: usize,
+    pub window: Option<WindowSpec>,
+}
+
+impl QuerySpec {
+    pub fn reduce(name: &str, ops: Vec<OpSpec>, agg: AggSpec, partitions: usize) -> Self {
+        QuerySpec {
+            name: name.to_string(),
+            ops,
+            sink: SinkSpec::Reduce { agg },
+            partitions: partitions.max(1),
+            window: None,
+        }
+    }
+
+    pub fn peer(name: &str, ops: Vec<OpSpec>, peer_op: &str, partitions: usize) -> Self {
+        QuerySpec {
+            name: name.to_string(),
+            ops,
+            sink: SinkSpec::Peer { name: peer_op.to_string() },
+            partitions: partitions.max(1),
+            window: None,
+        }
+    }
+
+    pub fn windowed(mut self, window: WindowSpec) -> Self {
+        self.window = Some(window);
+        self
+    }
+}
+
+/// Lineage record for one micro-batch: which job ran it, which stage id
+/// its sink used, which window it fed, and how long it took.
+#[derive(Debug, Clone)]
+pub struct BatchRecord {
+    pub batch_id: u64,
+    /// Job-server id in cluster mode; `None` for a driver-local run.
+    pub job_id: Option<u64>,
+    /// The batch plan's shuffle (reduce sink) or peer (peer sink) id.
+    pub stage_id: u64,
+    pub window: Option<u64>,
+    pub event_time: u64,
+    pub rows_in: usize,
+    /// Submit-to-complete latency; `None` while in flight.
+    pub latency: Option<Duration>,
+}
+
+/// Entry point: holds the engine/master handles a query needs. Build it
+/// from a context with [`IgniteContext::streaming`].
+pub struct StreamContext {
+    conf: IgniteConf,
+    engine: Arc<Engine>,
+    master: Option<Arc<Master>>,
+}
+
+impl StreamContext {
+    pub fn new(sc: &IgniteContext) -> Self {
+        StreamContext {
+            conf: sc.conf().clone(),
+            engine: sc.engine().clone(),
+            master: sc.master().cloned(),
+        }
+    }
+
+    /// Start a query over `source`. In cluster mode the query opens its
+    /// own job-server session — a stream is one tenant under the slot
+    /// ledger's admission policy, exactly like any batch driver.
+    pub fn query(&self, source: Box<dyn StreamSource>, spec: QuerySpec) -> Result<StreamQuery> {
+        if spec.window.is_some() && matches!(spec.sink, SinkSpec::Peer { .. }) {
+            return Err(IgniteError::Invalid(format!(
+                "streaming query {}: windowed state requires a reduce sink",
+                spec.name
+            )));
+        }
+        let session = self.master.as_ref().map(|m| m.new_session());
+        Ok(StreamQuery {
+            engine: self.engine.clone(),
+            master: self.master.clone(),
+            session,
+            source,
+            spec,
+            query_id: crate::util::next_id(),
+            max_inflight: self.conf.get_usize("ignite.streaming.max.inflight.batches")?.max(1),
+            base_interval: self.conf.get_duration_ms("ignite.streaming.batch.interval.ms")?,
+            max_interval: self.conf.get_duration_ms("ignite.streaming.interval.max.ms")?,
+            inflight: Vec::new(),
+            state: BTreeMap::new(),
+            finalized: BTreeMap::new(),
+            emitted: BTreeMap::new(),
+            lineage: Vec::new(),
+            watermark: 0,
+            next_batch: 0,
+            completed: 0,
+            max_inflight_observed: 0,
+            stalled_recently: false,
+        })
+    }
+}
+
+struct InFlight {
+    batch_id: u64,
+    job_id: u64,
+    stage_id: u64,
+    window: Option<u64>,
+    submitted: Instant,
+    lineage_idx: usize,
+}
+
+/// A running streaming query (see the module docs for the lifecycle).
+/// Single-threaded driver object: the owner calls [`poll_once`] /
+/// [`run`] / [`drain`]; batch jobs themselves run concurrently on the
+/// job server.
+///
+/// [`poll_once`]: Self::poll_once
+/// [`run`]: Self::run
+/// [`drain`]: Self::drain
+pub struct StreamQuery {
+    engine: Arc<Engine>,
+    master: Option<Arc<Master>>,
+    session: Option<u64>,
+    source: Box<dyn StreamSource>,
+    spec: QuerySpec,
+    query_id: u64,
+    max_inflight: usize,
+    base_interval: Duration,
+    max_interval: Duration,
+    inflight: Vec<InFlight>,
+    /// Open window → its state shuffle id on the driver engine.
+    state: BTreeMap<u64, u64>,
+    /// Finalized windowed pairs, keyed by the encoded (window-stamped)
+    /// key — BTreeMap so results are canonically ordered.
+    finalized: BTreeMap<Vec<u8>, (Value, Value)>,
+    /// Per-batch outputs of stateless / peer queries, keyed by batch id.
+    emitted: BTreeMap<u64, Vec<Value>>,
+    lineage: Vec<BatchRecord>,
+    watermark: u64,
+    next_batch: u64,
+    completed: u64,
+    max_inflight_observed: usize,
+    stalled_recently: bool,
+}
+
+impl StreamQuery {
+    /// One driver-loop turn: reap finished batch jobs, poll the source,
+    /// and — if a batch arrived — admit it through backpressure and
+    /// submit its plan job. Returns whether a batch was cut.
+    pub fn poll_once(&mut self) -> Result<bool> {
+        self.reap()?;
+        let Some(batch) = self.source.poll_batch()? else {
+            // Source queue is empty: everything it promised is submitted
+            // or in flight, so its watermark may drive finalization (the
+            // in-flight guard covers unfinished batches).
+            self.watermark = self.watermark.max(self.source.watermark());
+            self.finalize_closed()?;
+            return Ok(false);
+        };
+        self.admit()?;
+        let rows_in = batch.partitions.iter().map(Vec::len).sum();
+        let window = self.spec.window.map(|w| w.window_of(batch.event_time));
+        let (plan, stage_id) = self.build_plan(&batch, window);
+        let batch_id = self.next_batch;
+        self.next_batch += 1;
+        self.lineage.push(BatchRecord {
+            batch_id,
+            job_id: None,
+            stage_id,
+            window,
+            event_time: batch.event_time,
+            rows_in,
+            latency: None,
+        });
+        let lineage_idx = self.lineage.len() - 1;
+        metrics::global().counter("streaming.batches.submitted").inc();
+        let submitted = Instant::now();
+        match (&self.master, self.session) {
+            (Some(master), Some(session)) if !master.live_workers().is_empty() => {
+                let job_id = master.submit_job(session, &plan)?;
+                self.lineage[lineage_idx].job_id = Some(job_id);
+                self.inflight.push(InFlight {
+                    batch_id,
+                    job_id,
+                    stage_id,
+                    window,
+                    submitted,
+                    lineage_idx,
+                });
+                self.max_inflight_observed =
+                    self.max_inflight_observed.max(self.inflight.len());
+                metrics::global()
+                    .gauge("streaming.queue.depth")
+                    .set(self.inflight.len() as i64);
+            }
+            _ => {
+                // Driver-local micro-batch (no live workers): same plan,
+                // same stages, run synchronously on the local engine.
+                let rows = PlanRdd::new(plan, self.engine.clone(), None).collect_local()?;
+                let latency = submitted.elapsed();
+                self.complete_batch(batch_id, lineage_idx, stage_id, window, latency, rows)?;
+            }
+        }
+        self.watermark = self.watermark.max(batch.event_time);
+        self.finalize_closed()?;
+        Ok(true)
+    }
+
+    /// Paced driver loop: poll, then sleep the adaptive interval —
+    /// stretched (×2 up to `ignite.streaming.interval.max.ms`) while
+    /// admission stalls, relaxed (÷2 down to the configured base) once
+    /// it clears. Ends when the source is exhausted and every batch and
+    /// window has settled.
+    pub fn run(&mut self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        let mut interval = self.base_interval;
+        loop {
+            self.stalled_recently = false;
+            let cut = self.poll_once()?;
+            if !cut && self.source.exhausted() && self.inflight.is_empty() {
+                break;
+            }
+            if Instant::now() > deadline {
+                return Err(IgniteError::Timeout(format!(
+                    "streaming query {}: run incomplete after {timeout:?} ({} in flight)",
+                    self.spec.name,
+                    self.inflight.len()
+                )));
+            }
+            interval = if self.stalled_recently {
+                self.max_interval.min(interval.saturating_mul(2).max(Duration::from_millis(1)))
+            } else {
+                self.base_interval.max(interval / 2)
+            };
+            metrics::global().gauge("streaming.interval.ms").set(interval.as_millis() as i64);
+            // Between cuts, wait the pacing interval; on an empty poll
+            // just nap briefly so a draining source is noticed promptly.
+            std::thread::sleep(if cut { interval } else { interval.min(Duration::from_millis(5)) });
+        }
+        self.finish()
+    }
+
+    /// Drain as fast as admission allows (no pacing): poll until the
+    /// source is exhausted and nothing is in flight, then finalize every
+    /// remaining window — the source being closed is the promise that no
+    /// event below any bound can still arrive.
+    pub fn drain(&mut self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let cut = self.poll_once()?;
+            if !cut && self.source.exhausted() && self.inflight.is_empty() {
+                break;
+            }
+            if Instant::now() > deadline {
+                return Err(IgniteError::Timeout(format!(
+                    "streaming query {}: drain incomplete after {timeout:?} ({} in flight)",
+                    self.spec.name,
+                    self.inflight.len()
+                )));
+            }
+            if !cut {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        self.finish()
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        let remaining: Vec<u64> = self.state.keys().copied().collect();
+        for w in remaining {
+            self.finalize_window(w)?;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------ internals --
+
+    fn build_plan(&self, batch: &StreamBatch, window: Option<u64>) -> (PlanSpec, u64) {
+        let mut node = PlanSpec::Source { partitions: batch.partitions.clone() };
+        for op in &self.spec.ops {
+            node = PlanSpec::Op { op: op.clone(), parent: Arc::new(node) };
+        }
+        if let Some(w) = window {
+            node = PlanSpec::Op { op: OpSpec::WindowKey { window: w }, parent: Arc::new(node) };
+        }
+        let stage_id = crate::util::next_id();
+        let plan = match &self.spec.sink {
+            SinkSpec::Reduce { agg } => PlanSpec::Shuffle {
+                shuffle_id: stage_id,
+                partitions: self.spec.partitions as u64,
+                agg: agg.clone(),
+                parent: Arc::new(node),
+            },
+            SinkSpec::Peer { name } => PlanSpec::PeerOp {
+                peer_id: stage_id,
+                name: name.clone(),
+                parent: Arc::new(node),
+            },
+        };
+        (plan, stage_id)
+    }
+
+    /// Backpressure: block admission while the in-flight cap is reached,
+    /// or while the slot ledger has zero schedulable capacity with work
+    /// already in flight (submitting more would only deepen the queue).
+    fn admit(&mut self) -> Result<()> {
+        let deadline = Instant::now() + ADMIT_TIMEOUT;
+        loop {
+            self.reap()?;
+            let ledger_full = match &self.master {
+                Some(m) if !self.inflight.is_empty() => {
+                    m.ledger().schedulable_capacity() == 0
+                }
+                _ => false,
+            };
+            if self.inflight.len() < self.max_inflight && !ledger_full {
+                return Ok(());
+            }
+            metrics::global().counter("streaming.backpressure.stalls").inc();
+            self.stalled_recently = true;
+            if Instant::now() > deadline {
+                return Err(IgniteError::Timeout(format!(
+                    "streaming query {}: admission stalled for {ADMIT_TIMEOUT:?} \
+                     ({} batches in flight, cap {})",
+                    self.spec.name,
+                    self.inflight.len(),
+                    self.max_inflight
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Non-blocking completion poll over the in-flight batch jobs.
+    fn reap(&mut self) -> Result<()> {
+        if self.inflight.is_empty() {
+            return Ok(());
+        }
+        let master = self.master.clone().ok_or_else(|| {
+            IgniteError::Runtime("in-flight streaming batches without a master".into())
+        })?;
+        let mut done: Vec<(usize, Vec<Value>)> = Vec::new();
+        for (i, b) in self.inflight.iter().enumerate() {
+            let status = master.job_status(b.job_id)?;
+            if status.state == JobState::Done.tag() {
+                let rows = status.results.ok_or_else(|| {
+                    IgniteError::Task(format!(
+                        "streaming batch {} (job {}): done without results",
+                        b.batch_id, b.job_id
+                    ))
+                })?;
+                done.push((i, rows));
+            } else if status.state == JobState::Failed(String::new()).tag()
+                || status.state == JobState::Cancelled.tag()
+            {
+                metrics::global().counter("streaming.batches.failed").inc();
+                return Err(IgniteError::Task(format!(
+                    "streaming query {}: batch {} (job {}) failed: {}",
+                    self.spec.name, b.batch_id, b.job_id, status.error
+                )));
+            }
+        }
+        for (i, rows) in done.into_iter().rev() {
+            let b = self.inflight.remove(i);
+            let latency = b.submitted.elapsed();
+            self.complete_batch(b.batch_id, b.lineage_idx, b.stage_id, b.window, latency, rows)?;
+        }
+        metrics::global().gauge("streaming.queue.depth").set(self.inflight.len() as i64);
+        Ok(())
+    }
+
+    fn complete_batch(
+        &mut self,
+        batch_id: u64,
+        lineage_idx: usize,
+        stage_id: u64,
+        window: Option<u64>,
+        latency: Duration,
+        rows: Vec<Value>,
+    ) -> Result<()> {
+        metrics::global().histogram("streaming.batch.latency").record(latency);
+        metrics::global().counter("streaming.batches.completed").inc();
+        self.completed += 1;
+        self.lineage[lineage_idx].latency = Some(latency);
+        // Driver-side copies of the batch's stage buckets are dead now
+        // (cluster job-end GC already covered the workers; a local run
+        // left them on this engine).
+        self.engine.shuffle.clear_shuffle(stage_id);
+        match window {
+            Some(w) => self.merge_into_state(w, rows)?,
+            None => {
+                self.emitted.insert(batch_id, rows);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold a completed batch's reduced pairs into the window's state
+    /// buckets in the driver engine's shuffle tiers: fetch (transparent
+    /// memory → disk read-back), merge by encoded key with the query's
+    /// combiner, re-put (re-admission under the LRU budget, exactly like
+    /// any map output).
+    fn merge_into_state(&mut self, window: u64, rows: Vec<Value>) -> Result<()> {
+        let agg = match &self.spec.sink {
+            SinkSpec::Reduce { agg } => agg.clone(),
+            SinkSpec::Peer { .. } => {
+                return Err(IgniteError::Invalid(format!(
+                    "streaming query {}: windowed state requires a reduce sink",
+                    self.spec.name
+                )))
+            }
+        };
+        let parts = self.spec.partitions;
+        let sid = *self.state.entry(window).or_insert_with(crate::util::next_id);
+        let mut by_part: Vec<Vec<(Vec<u8>, Value, Value)>> = vec![Vec::new(); parts];
+        for row in rows {
+            let (k, v) = split_pair(&self.spec.name, row)?;
+            let kb = to_bytes(&k);
+            let p = partition_for_key_bytes(&kb, parts);
+            by_part[p].push((kb, k, v));
+        }
+        for (p, adds) in by_part.into_iter().enumerate() {
+            if adds.is_empty() {
+                continue;
+            }
+            let existing: Vec<(Value, Value)> =
+                self.engine.shuffle.fetch_bucket(sid, 0, p).unwrap_or_default();
+            let mut merged: HashMap<Vec<u8>, (Value, Value)> =
+                existing.into_iter().map(|(k, v)| (to_bytes(&k), (k, v))).collect();
+            for (kb, k, v) in adds {
+                match merged.remove(&kb) {
+                    Some((k0, acc)) => {
+                        let combined = agg.combine(acc, v)?;
+                        merged.insert(kb, (k0, combined));
+                    }
+                    None => {
+                        merged.insert(kb, (k, v));
+                    }
+                }
+            }
+            let mut pairs: Vec<(Vec<u8>, (Value, Value))> = merged.into_iter().collect();
+            // Deterministic bucket bytes: state content is a function of
+            // the data, never of HashMap iteration order.
+            pairs.sort_by(|a, b| a.0.cmp(&b.0));
+            let pairs: Vec<(Value, Value)> = pairs.into_iter().map(|(_, kv)| kv).collect();
+            self.engine.shuffle.put_bucket(sid, 0, p, pairs);
+        }
+        Ok(())
+    }
+
+    /// Finalize every window the watermark has passed, skipping windows
+    /// an in-flight batch could still add to.
+    fn finalize_closed(&mut self) -> Result<()> {
+        let Some(win) = self.spec.window else { return Ok(()) };
+        let closable: Vec<u64> = self
+            .state
+            .keys()
+            .copied()
+            .filter(|w| self.watermark >= win.closes_at(*w))
+            .filter(|w| !self.inflight.iter().any(|b| b.window == Some(*w)))
+            .collect();
+        for w in closable {
+            self.finalize_window(w)?;
+        }
+        Ok(())
+    }
+
+    /// Emit a closed window's state into the query results and prune it:
+    /// the `job.clear`-style path through the master (fans out to every
+    /// live worker) plus the driver engine's own tiers.
+    fn finalize_window(&mut self, window: u64) -> Result<()> {
+        let Some(sid) = self.state.remove(&window) else { return Ok(()) };
+        for p in 0..self.spec.partitions {
+            let pairs: Vec<(Value, Value)> =
+                self.engine.shuffle.fetch_bucket(sid, 0, p).unwrap_or_default();
+            for (k, v) in pairs {
+                self.finalized.insert(to_bytes(&k), (k, v));
+            }
+        }
+        if let Some(master) = &self.master {
+            master.clear_artifacts(vec![sid], Vec::new())?;
+        }
+        self.engine.shuffle.clear_shuffle(sid);
+        metrics::global().counter("streaming.windows.finalized").inc();
+        Ok(())
+    }
+
+    // ----------------------------------------------------- observers --
+
+    pub fn query_id(&self) -> u64 {
+        self.query_id
+    }
+
+    /// Current event-time watermark.
+    pub fn watermark(&self) -> u64 {
+        self.watermark
+    }
+
+    /// Windows still holding state in the shuffle tiers.
+    pub fn live_state_windows(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Per-batch lineage, in submission order.
+    pub fn lineage(&self) -> &[BatchRecord] {
+        &self.lineage
+    }
+
+    pub fn batches_completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// High-water mark of concurrently in-flight batches — the
+    /// backpressure cap made observable for tests.
+    pub fn max_inflight_observed(&self) -> usize {
+        self.max_inflight_observed
+    }
+
+    /// All results so far in canonical order ([`sort_rows`]): finalized
+    /// windows' pairs for a windowed query, every batch's emitted rows
+    /// otherwise.
+    pub fn results_sorted(&self) -> Vec<Value> {
+        let rows: Vec<Value> = if self.spec.window.is_some() {
+            self.finalized
+                .values()
+                .map(|(k, v)| Value::List(vec![k.clone(), v.clone()]))
+                .collect()
+        } else {
+            self.emitted.values().flatten().cloned().collect()
+        };
+        sort_rows(rows)
+    }
+
+    /// The most recent batch's output (stateless / peer queries — e.g.
+    /// the current online-k-means model).
+    pub fn last_batch_output(&self) -> Option<&[Value]> {
+        self.emitted.iter().next_back().map(|(_, rows)| rows.as_slice())
+    }
+}
+
+fn split_pair(query: &str, row: Value) -> Result<(Value, Value)> {
+    match row {
+        Value::List(mut l) if l.len() == 2 => {
+            let v = l.pop().unwrap();
+            let k = l.pop().unwrap();
+            Ok((k, v))
+        }
+        other => Err(IgniteError::Invalid(format!(
+            "streaming query {query}: reduce output rows must be List([key, value]), got {}",
+            other.type_name()
+        ))),
+    }
+}
+
+/// Canonical row order for comparing streamed results to a batch oracle:
+/// reduce output order is merge-map order, which carries no meaning, so
+/// both sides sort by their codec encoding.
+pub fn sort_rows(mut rows: Vec<Value>) -> Vec<Value> {
+    rows.sort_by_cached_key(to_bytes);
+    rows
+}
+
+/// The "equivalent single batch job" for a windowed reduce query over a
+/// recorded batch sequence: each batch's subtree (`Source → ops →
+/// window stamp`) unioned, then ONE shuffle reduce over everything.
+/// Soak tests compare a stream's finalized output bit-for-bit (after
+/// [`sort_rows`]) against this plan's result.
+pub fn batch_oracle_plan(spec: &QuerySpec, batches: &[StreamBatch]) -> Result<PlanSpec> {
+    let SinkSpec::Reduce { agg } = &spec.sink else {
+        return Err(IgniteError::Invalid(format!(
+            "streaming query {}: a batch oracle needs a reduce sink",
+            spec.name
+        )));
+    };
+    let mut unioned: Option<PlanSpec> = None;
+    for batch in batches {
+        let mut node = PlanSpec::Source { partitions: batch.partitions.clone() };
+        for op in &spec.ops {
+            node = PlanSpec::Op { op: op.clone(), parent: Arc::new(node) };
+        }
+        if let Some(w) = spec.window {
+            node = PlanSpec::Op {
+                op: OpSpec::WindowKey { window: w.window_of(batch.event_time) },
+                parent: Arc::new(node),
+            };
+        }
+        unioned = Some(match unioned {
+            None => node,
+            Some(acc) => PlanSpec::Union { left: Arc::new(acc), right: Arc::new(node) },
+        });
+    }
+    let source = unioned.ok_or_else(|| {
+        IgniteError::Invalid(format!("streaming query {}: empty batch sequence", spec.name))
+    })?;
+    Ok(PlanSpec::Shuffle {
+        shuffle_id: crate::util::next_id(),
+        partitions: spec.partitions as u64,
+        agg: agg.clone(),
+        parent: Arc::new(source),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::closure::register_op;
+
+    fn register_stream_ops() {
+        register_op("stream.test.word_pairs", |v| match v {
+            Value::Str(s) => Ok(Value::List(
+                s.split_whitespace()
+                    .map(|w| {
+                        Value::List(vec![Value::Str(w.to_string()), Value::I64(1)])
+                    })
+                    .collect(),
+            )),
+            other => Err(IgniteError::Invalid(format!(
+                "word_pairs wants str, got {}",
+                other.type_name()
+            ))),
+        });
+    }
+
+    fn line_batch(lines: &[&str], parts: usize) -> Vec<Vec<Value>> {
+        let mut partitions: Vec<Vec<Value>> = vec![Vec::new(); parts];
+        for (i, l) in lines.iter().enumerate() {
+            partitions[i % parts].push(Value::Str((*l).to_string()));
+        }
+        partitions
+    }
+
+    fn wordcount_spec() -> QuerySpec {
+        QuerySpec::reduce(
+            "wc",
+            vec![OpSpec::FlatMapNamed { name: "stream.test.word_pairs".into() }],
+            AggSpec::SumI64,
+            4,
+        )
+        .windowed(WindowSpec::tumbling(2))
+    }
+
+    #[test]
+    fn windowed_wordcount_matches_batch_oracle_locally() {
+        register_stream_ops();
+        let sc = IgniteContext::local(2);
+        let stream = StreamContext::new(&sc);
+        let source = MemoryStreamSource::new();
+        let mut replay: Vec<StreamBatch> = Vec::new();
+        for t in 0..6u64 {
+            let parts = line_batch(&["a b a", "b c"], 2);
+            replay.push(StreamBatch { partitions: parts.clone(), event_time: t });
+            source.push(parts, t);
+        }
+        source.close();
+
+        let mut q = stream.query(Box::new(source), wordcount_spec()).unwrap();
+        q.drain(Duration::from_secs(30)).unwrap();
+        assert_eq!(q.batches_completed(), 6);
+        assert_eq!(q.lineage().len(), 6);
+        assert!(q.lineage().iter().all(|b| b.latency.is_some()));
+        assert_eq!(q.live_state_windows(), 0, "drain prunes every window");
+        assert_eq!(
+            sc.engine().shuffle.bucket_count(),
+            0,
+            "no state or batch buckets survive the drain"
+        );
+
+        let oracle = batch_oracle_plan(&wordcount_spec(), &replay).unwrap();
+        let want = sort_rows(sc.plan_rdd(oracle).collect().unwrap());
+        assert_eq!(q.results_sorted(), want, "stream must equal the single batch job");
+    }
+
+    #[test]
+    fn watermark_advance_finalizes_and_prunes_mid_stream() {
+        register_stream_ops();
+        let sc = IgniteContext::local(2);
+        let stream = StreamContext::new(&sc);
+        let source = MemoryStreamSource::new();
+        let tap = source.clone();
+        let mut q = stream
+            .query(
+                Box::new(source),
+                wordcount_spec().windowed(WindowSpec::tumbling(2).with_lateness(1)),
+            )
+            .unwrap();
+
+        tap.push(line_batch(&["x y"], 2), 0);
+        q.poll_once().unwrap();
+        assert_eq!(q.live_state_windows(), 1, "window 0 open");
+        // Watermark 3 = window 0 end (2) + lateness (1): window 0 closes.
+        tap.push(line_batch(&["y z"], 2), 3);
+        q.poll_once().unwrap();
+        assert_eq!(q.watermark(), 3);
+        assert_eq!(q.live_state_windows(), 1, "window 0 pruned, window 1 open");
+        assert!(!q.results_sorted().is_empty(), "window 0 emitted on finalize");
+        tap.close();
+        q.drain(Duration::from_secs(10)).unwrap();
+        assert_eq!(q.live_state_windows(), 0);
+    }
+
+    #[test]
+    fn stateless_query_emits_per_batch() {
+        let sc = IgniteContext::local(2);
+        let stream = StreamContext::new(&sc);
+        let source = MemoryStreamSource::new();
+        for t in 0..3u64 {
+            let pair = Value::List(vec![Value::Str("k".into()), Value::I64(t as i64)]);
+            source.push(vec![vec![pair]], t);
+        }
+        source.close();
+        let spec = QuerySpec::reduce("stateless", Vec::new(), AggSpec::SumI64, 2);
+        let mut q = stream.query(Box::new(source), spec).unwrap();
+        q.drain(Duration::from_secs(10)).unwrap();
+        assert_eq!(q.batches_completed(), 3);
+        assert_eq!(
+            q.results_sorted().len(),
+            3,
+            "one reduced pair per batch, no cross-batch state"
+        );
+        assert_eq!(q.last_batch_output().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn windowed_peer_sink_is_rejected() {
+        let sc = IgniteContext::local(2);
+        let stream = StreamContext::new(&sc);
+        let spec = QuerySpec::peer("bad", Vec::new(), "nope", 2)
+            .windowed(WindowSpec::tumbling(4));
+        let err = stream.query(Box::new(MemoryStreamSource::new()), spec).unwrap_err();
+        assert!(err.to_string().contains("reduce sink"), "got: {err}");
+    }
+
+    #[test]
+    fn oracle_needs_batches_and_reduce_sink() {
+        let spec = wordcount_spec();
+        assert!(batch_oracle_plan(&spec, &[]).is_err());
+        let peer = QuerySpec::peer("p", Vec::new(), "op", 2);
+        let batch = StreamBatch { partitions: vec![vec![]], event_time: 0 };
+        assert!(batch_oracle_plan(&peer, &[batch]).is_err());
+    }
+}

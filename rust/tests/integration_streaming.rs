@@ -1,0 +1,319 @@
+//! Streaming integration: a ≥200-micro-batch windowed word-count soak
+//! through the job server — under seeded task-fault chaos, with a worker
+//! killed and replaced mid-stream — whose finalized output must be
+//! bit-identical to the equivalent single batch job; backpressure
+//! admission stalls when the cluster lags; `wait_job` failure surfacing;
+//! and the streaming-iterative peer sink (online k-means).
+
+use mpignite::apps;
+use mpignite::closure::register_op;
+use mpignite::cluster::Worker;
+use mpignite::config::IgniteConf;
+use mpignite::prelude::*;
+use mpignite::streaming::{batch_oracle_plan, sort_rows, StreamBatch};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Heartbeat-timing-sensitive clusters; serialized like the other
+/// cluster suites so concurrent test threads don't turn timing
+/// assumptions into flakes.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn conf() -> IgniteConf {
+    let mut c = IgniteConf::new();
+    c.set("ignite.worker.heartbeat.ms", "50");
+    c.set("ignite.worker.timeout.ms", "600");
+    c.set("ignite.worker.slots", "2");
+    c
+}
+
+fn register_ops() {
+    // Str line -> List of List([Str(word), I64(1)]) pairs.
+    register_op("stream.it.word_pairs", |v| match v {
+        Value::Str(s) => Ok(Value::List(
+            s.split_whitespace()
+                .map(|w| Value::List(vec![Value::Str(w.to_string()), Value::I64(1)]))
+                .collect(),
+        )),
+        other => Err(IgniteError::Invalid(format!(
+            "word_pairs wants str, got {}",
+            other.type_name()
+        ))),
+    });
+    register_op("stream.it.nap60_inc", |v| match v {
+        Value::I64(n) => {
+            std::thread::sleep(Duration::from_millis(60));
+            Ok(Value::I64(n + 1))
+        }
+        other => Err(IgniteError::Invalid(format!("nap wants i64, got {}", other.type_name()))),
+    });
+    register_op("stream.it.fail", |_| {
+        Err(IgniteError::Invalid("stream.it.fail always fails".into()))
+    });
+}
+
+fn counter(name: &str) -> u64 {
+    mpignite::metrics::global().counter(name).get()
+}
+
+/// Deterministic per-batch lines: a handful of words whose mix shifts
+/// with the batch index, split over 2 partitions.
+fn soak_batch(t: u64) -> Vec<Vec<Value>> {
+    vec![
+        vec![Value::Str(format!("w{} w{} common", t % 7, (t + 1) % 5))],
+        vec![Value::Str(format!("common w{}", t % 3))],
+    ]
+}
+
+#[test]
+fn soak_windowed_wordcount_survives_chaos_and_matches_batch_oracle() {
+    let _serial = lock();
+    register_ops();
+    const TOTAL: u64 = 210;
+
+    let mut c = conf();
+    // Seeded chaos: attempt-0 task faults the worker retry ladder must
+    // absorb. The CI soak lane overrides the seed via env (the env
+    // overlay is applied at IgniteConf::new, so this explicit set wins
+    // only when the env is absent).
+    if std::env::var("MPIGNITE_FAULT_INJECT_SEED").is_err() {
+        c.set("ignite.fault.inject.seed", "23");
+    }
+    let window = mpignite::streaming::WindowSpec::from_conf(&c).unwrap();
+    assert_eq!(window.size, 10, "default streaming window size");
+
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&c, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    let submitted0 = counter("streaming.batches.submitted");
+    let completed0 = counter("streaming.batches.completed");
+    let finalized0 = counter("streaming.windows.finalized");
+    let reissued0 = counter("plan.tasks.reissued");
+    let latency = mpignite::metrics::global().histogram("streaming.batch.latency");
+    let latency_count0 = latency.count();
+
+    let source = MemoryStreamSource::new();
+    let mut replay: Vec<StreamBatch> = Vec::new();
+    for t in 0..TOTAL {
+        let parts = soak_batch(t);
+        replay.push(StreamBatch { partitions: parts.clone(), event_time: t });
+        source.push(parts, t);
+    }
+    source.close();
+
+    let spec = QuerySpec::reduce(
+        "soak-wc",
+        vec![OpSpec::FlatMapNamed { name: "stream.it.word_pairs".into() }],
+        AggSpec::SumI64,
+        2,
+    )
+    .windowed(window);
+    let mut query = sc.streaming().query(Box::new(source), spec.clone()).unwrap();
+
+    // Drive the stream by hand so the worker kill + replacement lands
+    // mid-stream, and so watermark pruning is observable while batches
+    // are still flowing.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut max_live_windows = 0usize;
+    let mut killed = false;
+    let mut replacement: Option<Arc<Worker>> = None;
+    while query.batches_completed() < TOTAL {
+        let cut = query.poll_once().unwrap();
+        max_live_windows = max_live_windows.max(query.live_state_windows());
+        if !killed && query.batches_completed() >= TOTAL / 5 {
+            // Kill a worker with batches in flight, then rejoin a fresh
+            // one: per-batch task re-issue must carry the stream across
+            // with zero whole-query restarts.
+            workers[1].kill();
+            replacement = Some(Worker::start(&c, master.address()).unwrap());
+            killed = true;
+        }
+        assert!(Instant::now() < deadline, "soak did not finish in time");
+        if !cut {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    query.drain(Duration::from_secs(30)).unwrap();
+    assert!(killed, "the kill must have happened mid-stream");
+    drop(replacement);
+
+    // Bit-identical to the equivalent single batch job over the same
+    // batch sequence (run on a clean local engine — SumI64 is exact).
+    let oracle_plan = batch_oracle_plan(&spec, &replay).unwrap();
+    let oracle = IgniteContext::local(2);
+    let want = sort_rows(oracle.plan_rdd(oracle_plan).collect().unwrap());
+    assert_eq!(
+        query.results_sorted(),
+        want,
+        "streamed windowed counts must equal the single batch job"
+    );
+
+    // Lineage: every batch completed exactly once, each with a job id
+    // (cluster mode) and a recorded latency.
+    assert_eq!(query.lineage().len(), TOTAL as usize);
+    assert!(query.lineage().iter().all(|b| b.job_id.is_some() && b.latency.is_some()));
+
+    // Watermark pruning ran DURING the stream (state never accumulated
+    // across all 21 windows) and finished CLEAN: no live windows, no
+    // state or batch buckets left in the driver's shuffle tiers.
+    assert!(
+        max_live_windows <= 3,
+        "watermark must prune windows mid-stream (saw {max_live_windows} live)"
+    );
+    assert_eq!(query.live_state_windows(), 0);
+    assert_eq!(sc.engine().shuffle.bucket_count(), 0, "drained stream leaves no buckets");
+    assert_eq!(counter("streaming.windows.finalized") - finalized0, 21);
+
+    // Acceptance metrics.
+    assert_eq!(counter("streaming.batches.submitted") - submitted0, TOTAL);
+    assert_eq!(counter("streaming.batches.completed") - completed0, TOTAL);
+    assert_eq!(latency.count() - latency_count0, TOTAL);
+    assert!(
+        counter("plan.tasks.reissued") - reissued0 > 0,
+        "the killed worker's in-flight batch tasks must have been re-issued"
+    );
+    master.shutdown();
+}
+
+#[test]
+fn backpressure_stalls_admission_when_the_cluster_lags() {
+    let _serial = lock();
+    register_ops();
+    let mut c = conf();
+    c.set("ignite.streaming.max.inflight.batches", "1");
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let _worker = Worker::start(&c, master.address()).unwrap();
+    master.wait_for_workers(1, Duration::from_secs(5)).unwrap();
+
+    let stalls0 = counter("streaming.backpressure.stalls");
+
+    // Slow batches (60ms tasks) against an in-flight cap of 1: cutting
+    // batch N+1 must stall until batch N's job finishes.
+    let source = MemoryStreamSource::new();
+    for t in 0..6u64 {
+        source.push(vec![vec![Value::I64(t as i64)], vec![Value::I64(-(t as i64))]], t);
+    }
+    source.close();
+    let spec = QuerySpec::reduce(
+        "backpressure",
+        vec![
+            OpSpec::MapNamed { name: "stream.it.nap60_inc".into() },
+            OpSpec::KeyByHash,
+        ],
+        AggSpec::First,
+        2,
+    );
+    let mut query = sc.streaming().query(Box::new(source), spec).unwrap();
+    query.drain(Duration::from_secs(60)).unwrap();
+
+    assert_eq!(query.batches_completed(), 6);
+    assert!(
+        counter("streaming.backpressure.stalls") - stalls0 > 0,
+        "admission must have stalled under the in-flight cap"
+    );
+    assert!(
+        query.max_inflight_observed() <= 1,
+        "the cap bounds concurrent batches (saw {})",
+        query.max_inflight_observed()
+    );
+    assert_eq!(
+        mpignite::metrics::global().gauge("streaming.queue.depth").get(),
+        0,
+        "queue depth gauge returns to zero once drained"
+    );
+    master.shutdown();
+}
+
+#[test]
+fn wait_job_surfaces_failure_detail_timeout_and_unknown_jobs() {
+    let _serial = lock();
+    register_ops();
+    let c = conf();
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let _worker = Worker::start(&c, master.address()).unwrap();
+    master.wait_for_workers(1, Duration::from_secs(5)).unwrap();
+
+    // Unknown job ids are an Invalid error, not an endless poll.
+    let err = master.wait_job(u64::MAX, Duration::from_secs(1)).unwrap_err();
+    assert!(err.to_string().contains("unknown job"), "got: {err}");
+
+    // A deterministically failing op exhausts the task retry ladder and
+    // fails the job; wait_job must surface the failure detail instead of
+    // timing out opaquely.
+    let session = master.new_session();
+    let plan = sc.parallelize_values_with(vec![Value::I64(1)], 1).map_named("stream.it.fail");
+    let job = master.submit_job(session, plan.plan()).unwrap();
+    let err = master.wait_job(job, Duration::from_secs(30)).unwrap_err();
+    assert!(
+        matches!(err, IgniteError::Task(_)) && err.to_string().contains("failed"),
+        "failure detail must surface, got: {err}"
+    );
+
+    // A live-but-slow job hits the caller's deadline with a progress-rich
+    // Timeout error.
+    let slow = sc.parallelize_values_with(vec![Value::I64(5)], 1).map_named("stream.it.nap60_inc");
+    let job = master.submit_job(session, slow.plan()).unwrap();
+    let err = master.wait_job(job, Duration::from_millis(1)).unwrap_err();
+    assert!(
+        matches!(err, IgniteError::Timeout(_)) && err.to_string().contains("still"),
+        "expected a pending/running timeout, got: {err}"
+    );
+    // The job itself still completes.
+    let got = master.wait_job(job, Duration::from_secs(30)).unwrap();
+    assert_eq!(got, vec![Value::I64(6)]);
+    master.shutdown();
+}
+
+#[test]
+fn streaming_kmeans_peer_sink_refreshes_the_model_per_batch() {
+    let _serial = lock();
+    apps::register_kmeans_online("stream.it.kmeans", 2, 0.5);
+    let sc = IgniteContext::local(2);
+
+    // Three batches of 2-partition point clouds drifting along x: each
+    // batch runs as a gang-scheduled peer section whose model update is
+    // one in-stage all_reduce.
+    let source = MemoryStreamSource::new();
+    for t in 0..3u64 {
+        let shift = t as f64 * 2.0;
+        source.push(
+            vec![
+                vec![
+                    Value::F64Vec(vec![shift, 0.0]),
+                    Value::F64Vec(vec![10.0 + shift, 0.0]),
+                ],
+                vec![
+                    Value::F64Vec(vec![shift + 0.2, 0.0]),
+                    Value::F64Vec(vec![10.2 + shift, 0.0]),
+                ],
+            ],
+            t,
+        );
+    }
+    source.close();
+
+    let spec = QuerySpec::peer("kmeans-online", Vec::new(), "stream.it.kmeans", 2);
+    let mut query = sc.streaming().query(Box::new(source), spec).unwrap();
+    query.drain(Duration::from_secs(30)).unwrap();
+
+    assert_eq!(query.batches_completed(), 3);
+    let last = query.last_batch_output().expect("final model").to_vec();
+    assert_eq!(last.len(), 4, "2 ranks x k=2 model rows");
+    assert!(last.iter().all(|r| matches!(r, Value::F64Vec(_))));
+    // The model refreshed per batch: the final batch's output differs
+    // from the first batch's (the clouds drifted).
+    let first = query.results_sorted();
+    assert!(!first.is_empty());
+    let Value::F64Vec(c) = &last[0] else { panic!("bad model row") };
+    assert!(c[0] > 0.5, "model must have tracked the drift, got {c:?}");
+    assert_eq!(query.live_state_windows(), 0, "stateless query holds no window state");
+}
