@@ -213,6 +213,20 @@ fn main() -> Result<()> {
     println!("\nStreaming — ignite.streaming.* configuration:\n");
     print!("{}", smt.render());
 
+    // The observability plane: span tracing (`ignite.trace.*` — sampling
+    // rate, profile export dir) and the metrics report form
+    // (`ignite.metrics.*`) — straight from KNOWN_KEYS so the table can't
+    // drift.
+    let mut ot = Table::new(vec!["key", "default", "meaning"]);
+    for (key, default, meaning) in mpignite::config::KNOWN_KEYS.iter().filter(|(key, _, _)| {
+        key.starts_with("ignite.trace.") || key.starts_with("ignite.metrics.")
+    }) {
+        ot.row(vec![*key, *default, *meaning]);
+    }
+    assert!(!ot.is_empty(), "trace/metrics config keys must exist");
+    println!("\nObservability — ignite.trace.* and ignite.metrics.* configuration:\n");
+    print!("{}", ot.render());
+
     println!("\napi_table OK ({} methods verified)", rows.len());
     Ok(())
 }

@@ -1,0 +1,144 @@
+//! E15 — tracing overhead: what the span plane costs when it is off
+//! (the product-default hot path), when it is on, and end-to-end on a
+//! real 2-worker plan job.
+//!
+//! Expected shape: off-path span creation is nanoseconds (one relaxed
+//! atomic load, no allocation); on-path costs one clock read plus one
+//! ring push per span; whole-job overhead with tracing on stays within
+//! a few percent of the untraced run.
+//!
+//! Run: `cargo bench --bench bench_trace` (MPIGNITE_BENCH_FAST=1 to
+//! smoke).
+
+use mpignite::cluster::Worker;
+use mpignite::config::IgniteConf;
+use mpignite::rdd::AggSpec;
+use mpignite::ser::Value;
+use mpignite::trace;
+use mpignite::util::{fmt_duration, Stopwatch, Table};
+use mpignite::IgniteContext;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn span_iters() -> u64 {
+    if std::env::var("MPIGNITE_BENCH_FAST").is_ok() {
+        50_000
+    } else {
+        1_000_000
+    }
+}
+
+fn job_rows() -> usize {
+    if std::env::var("MPIGNITE_BENCH_FAST").is_ok() {
+        2_000
+    } else {
+        20_000
+    }
+}
+
+/// Per-op cost of `span(...) -> label -> finish` at the current tracer
+/// state, in nanoseconds.
+fn span_cost_ns(parent: Option<trace::TraceContext>) -> f64 {
+    let iters = span_iters();
+    let sw = Stopwatch::start();
+    for i in 0..iters {
+        let mut s = trace::span("bench", parent);
+        s.label("i", i.to_string());
+        s.finish();
+    }
+    let ns = sw.elapsed().as_nanos() as f64 / iters as f64;
+    trace::global().clear();
+    ns
+}
+
+fn event_cost_ns(parent: Option<trace::TraceContext>) -> f64 {
+    let iters = span_iters();
+    let sw = Stopwatch::start();
+    for i in 0..iters {
+        trace::event(parent, "bench.event", &[("i", i.to_string())]);
+    }
+    let ns = sw.elapsed().as_nanos() as f64 / iters as f64;
+    trace::global().clear();
+    ns
+}
+
+/// One 2-worker distributed word count (4 maps × 8 reduces over the
+/// shuffle plane); returns its wall time.
+fn cluster_job(traced: bool) -> Duration {
+    let mut conf = IgniteConf::new();
+    conf.set("ignite.worker.heartbeat.ms", "50");
+    conf.set("ignite.trace.enabled", if traced { "true" } else { "false" });
+    let sc = IgniteContext::cluster_driver(conf.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let _workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&conf, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(10)).unwrap();
+    let rows: Vec<Value> = (0..job_rows())
+        .map(|i| Value::List(vec![Value::Str(format!("word{}", i % 500)), Value::I64(1)]))
+        .collect();
+    let sw = Stopwatch::start();
+    let counts = sc
+        .parallelize_values_with(rows, 4)
+        .reduce_by_key(8, AggSpec::SumI64)
+        .collect()
+        .unwrap();
+    let elapsed = sw.elapsed();
+    assert_eq!(counts.len(), 500);
+    master.shutdown();
+    trace::global().set_enabled(false);
+    trace::global().clear();
+    elapsed
+}
+
+fn main() {
+    mpignite::util::init_logger();
+    println!("\n== E15: tracing overhead ==");
+    let mut t = Table::new(vec!["scenario", "cost", "notes"]);
+
+    // Hot-path primitive costs, tracing OFF: every span/event is a
+    // no-op gated on one atomic load — no SpanRec is ever allocated.
+    trace::global().set_enabled(false);
+    let off_none = span_cost_ns(None);
+    let off_ctx = span_cost_ns(Some(trace::TraceContext { trace_id: 1, span_id: 1 }));
+    t.row(vec![
+        "span create+finish, trace OFF, no parent".into(),
+        format!("{off_none:.1} ns/op"),
+        "product default".into(),
+    ]);
+    t.row(vec![
+        "span create+finish, trace OFF, parent ctx".into(),
+        format!("{off_ctx:.1} ns/op"),
+        String::new(),
+    ]);
+
+    // Tracing ON: clock read + label alloc + ring push.
+    trace::global().set_enabled(true);
+    trace::global().set_sample_rate(1.0);
+    let on_ctx = span_cost_ns(Some(trace::TraceContext { trace_id: 1, span_id: 1 }));
+    let on_event = event_cost_ns(Some(trace::TraceContext { trace_id: 1, span_id: 1 }));
+    trace::global().set_enabled(false);
+    t.row(vec![
+        "span create+finish, trace ON".into(),
+        format!("{on_ctx:.1} ns/op"),
+        "clock + ring push".into(),
+    ]);
+    t.row(vec![
+        "instant event, trace ON".into(),
+        format!("{on_event:.1} ns/op"),
+        String::new(),
+    ]);
+
+    // End-to-end: the same 2-worker job untraced vs fully traced.
+    let base = cluster_job(false);
+    let traced = cluster_job(true);
+    let overhead = (traced.as_secs_f64() / base.as_secs_f64() - 1.0) * 100.0;
+    t.row(vec!["2-worker word-count, trace OFF".into(), fmt_duration(base), String::new()]);
+    t.row(vec![
+        "2-worker word-count, trace ON".into(),
+        fmt_duration(traced),
+        format!("{overhead:+.1}% vs off"),
+    ]);
+
+    print!("{}", t.render());
+    println!("\nbench_trace OK");
+}

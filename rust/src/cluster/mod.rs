@@ -25,10 +25,11 @@ use crate::config::IgniteConf;
 use crate::error::{IgniteError, Result};
 use crate::fault::{HeartbeatMonitor, TaskId};
 use crate::jobserver::{JobHandle, JobState as ServerJobState, JobTable, SchedulerPolicy, SlotLedger};
-use crate::metrics;
+use crate::metrics::{self, RegistrySnapshot};
 use crate::rdd::{run_shuffle_map_task, PlanSpec, PlanStage, PlanStageKind};
 use crate::rpc::{Envelope, RpcAddress, RpcBody, RpcEnv, Segment};
 use crate::ser::{from_bytes, put_varint, to_bytes, Value};
+use crate::trace::{self, SpanRec, TraceContext};
 use log::{info, warn};
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -117,6 +118,14 @@ pub const EP_WORKER_DRAIN: &str = "worker.drain";
 /// (arbitrary `(map_idx, reduce_idx)` pairs), collapsing remote
 /// round-trips from O(workers × reduce tasks) to O(workers) per batch.
 pub const EP_SHUFFLE_FETCH_BATCH: &str = "shuffle.fetch_batch";
+/// Observability plane, registered on every worker env: `metrics.pull`
+/// returns the worker's whole metrics registry as a wire-encodable
+/// snapshot (the master merges all workers into one cluster view —
+/// counters sum, histograms bucket-merge), and `trace.flush` drains the
+/// worker's span ring (the job-end sweep for spans that missed a
+/// piggy-backed `master.plan_result`/`master.peer_result` ride).
+pub const EP_METRICS_PULL: &str = "metrics.pull";
+pub const EP_TRACE_FLUSH: &str = "trace.flush";
 
 struct WorkerInfo {
     addr: RpcAddress,
@@ -214,6 +223,24 @@ pub struct Master {
     /// when every peer holding a block is gone). Same chunk/store/serve
     /// machinery the workers use, never wired to a net.
     broadcast_store: crate::broadcast::BroadcastManager,
+    /// Ingested span records (piggy-backed on plan/peer results, swept
+    /// by `trace.flush`, or drained from this process's own ring),
+    /// deduplicated by `(trace_id, span_id)` — in-process test workers
+    /// share this process's ring, so one record can arrive twice.
+    trace_spans: Mutex<TraceStore>,
+    /// Traced job id → its trace id + job-scoped counter deltas.
+    job_traces: Mutex<HashMap<u64, JobTraceInfo>>,
+}
+
+#[derive(Default)]
+struct TraceStore {
+    seen: HashSet<(u64, u64)>,
+    spans: Vec<SpanRec>,
+}
+
+struct JobTraceInfo {
+    trace_id: u64,
+    counter_deltas: Vec<(String, u64)>,
 }
 
 /// One shuffle in the master's map-output table: the location of every
@@ -246,6 +273,7 @@ impl Master {
         env.set_vectored(conf.get_bool("ignite.rpc.vectored").unwrap_or(true));
         let rank_table: RankTable = Arc::new(RwLock::new(HashMap::new()));
         install_master_comm(&env, rank_table.clone());
+        trace::configure(conf);
         let (policy, quota) = SchedulerPolicy::from_conf(conf)?;
         let master = Arc::new(Master {
             env: env.clone(),
@@ -268,6 +296,8 @@ impl Master {
                 conf.get_usize("ignite.broadcast.block.bytes")
                     .unwrap_or(crate::broadcast::DEFAULT_BLOCK_BYTES),
             ),
+            trace_spans: Mutex::new(TraceStore::default()),
+            job_traces: Mutex::new(HashMap::new()),
         });
 
         // Registration doubles as elastic join: the handler works the
@@ -324,12 +354,13 @@ impl Master {
                 let job_id = m.next_job.fetch_add(1, Ordering::SeqCst);
                 let handle = m.job_table.register(job_id, req.session_id);
                 let m2 = Arc::clone(&m);
+                let parent = req.ctx;
                 std::thread::Builder::new()
                     .name(format!("jobserver-{job_id}"))
                     .spawn(move || {
                         handle.set_running();
                         let outcome = m2
-                            .run_plan_session(&plan, handle.session_id, Some(handle.clone()))
+                            .run_plan_session(&plan, handle.session_id, Some(handle.clone()), parent)
                             .map(|parts| parts.into_iter().flatten().collect());
                         handle.finish(outcome);
                     })
@@ -491,7 +522,13 @@ impl Master {
         env.register(
             EP_PLAN_RESULT,
             Arc::new(move |envelope: &Envelope| {
-                let pr: PlanTaskResult = from_bytes(&envelope.body)?;
+                let mut pr: PlanTaskResult = from_bytes(&envelope.body)?;
+                // Spans ride piggy-backed on every task report; ingest
+                // them even when the job state is already gone (a
+                // speculative loser's late report still carries spans).
+                if !pr.spans.is_empty() {
+                    m.ingest_spans(std::mem::take(&mut pr.spans));
+                }
                 let job = m.plan_jobs.lock().unwrap().get(&pr.job_id).cloned();
                 if let Some(job) = job {
                     if pr.ok {
@@ -537,7 +574,10 @@ impl Master {
         env.register(
             EP_PEER_RESULT,
             Arc::new(move |envelope: &Envelope| {
-                let pr: PeerTaskResult = from_bytes(&envelope.body)?;
+                let mut pr: PeerTaskResult = from_bytes(&envelope.body)?;
+                if !pr.spans.is_empty() {
+                    m.ingest_spans(std::mem::take(&mut pr.spans));
+                }
                 // Stale reports (aborted gang attempts, or ranks racing
                 // the abort) find no job state and are dropped.
                 let job = m.peer_jobs.lock().unwrap().get(&pr.job_id).cloned();
@@ -917,23 +957,105 @@ impl Master {
     pub fn run_plan(&self, plan: &PlanSpec) -> Result<Vec<Vec<Value>>> {
         // Embedded drivers run as the anonymous session 0; the fair/quota
         // admission math treats it like any other tenant.
-        self.run_plan_session(plan, 0, None)
+        self.run_plan_session(plan, 0, None, trace::current())
     }
 
     /// [`run_plan`](Self::run_plan) under a driver session: the job
     /// server's concurrent entry point. NOT serialized against other
     /// jobs — concurrent sessions' stages interleave on the cluster,
     /// admitted task-by-task through the slot ledger.
+    ///
+    /// The single trace choke point: one job span wraps the whole run
+    /// (child of `parent` when the submitter carried a context, else a
+    /// fresh root subject to `ignite.trace.sample.rate`), its context
+    /// threads down through every stage, and at job end the master
+    /// sweeps worker rings, drains its own, and assembles the
+    /// [`crate::trace::JobProfile`].
     fn run_plan_session(
         &self,
         plan: &PlanSpec,
         session: u64,
         handle: Option<Arc<JobHandle>>,
+        parent: Option<TraceContext>,
     ) -> Result<Vec<Vec<Value>>> {
+        let job_id = handle
+            .as_ref()
+            .map(|h| h.job_id)
+            .unwrap_or_else(|| self.next_job.fetch_add(1, Ordering::SeqCst));
+        let mut span = match parent {
+            Some(_) => trace::span("job", parent),
+            None => trace::root("job"),
+        };
+        span.label("job", job_id.to_string());
+        span.label("session", session.to_string());
+        let ctx = span.ctx();
+        // Job-scoped counter deltas: the profile reports how much each
+        // counter moved while the job ran (sampled on the master's
+        // global registry — in-process workers fold into the same one).
+        let counters_before = ctx.map(|_| metrics::global().wire_snapshot());
+
         self.ledger.begin_session(session);
-        let outcome = self.run_plan_session_inner(plan, session, handle);
+        let outcome = self.run_plan_session_inner(plan, session, handle, ctx);
         self.ledger.end_session(session);
+
+        if let Err(e) = &outcome {
+            span.fail(&e.to_string());
+        }
+        span.finish();
+        if let Some(ctx) = ctx {
+            self.collect_job_trace(job_id, ctx.trace_id, counters_before);
+        }
         outcome
+    }
+
+    /// Job-end trace collection: sweep straggler spans from every live
+    /// worker (`trace.flush`), drain this process's own ring, record the
+    /// job's counter deltas, and export the profile as JSONL when
+    /// `ignite.trace.dir` names a directory.
+    fn collect_job_trace(
+        &self,
+        job_id: u64,
+        trace_id: u64,
+        counters_before: Option<RegistrySnapshot>,
+    ) {
+        for (_, addr) in self.live_workers() {
+            if let Ok(body) =
+                self.env.ask(&addr, EP_TRACE_FLUSH, Vec::new(), Duration::from_secs(5))
+            {
+                if let Ok(spans) = from_bytes::<Vec<SpanRec>>(&body) {
+                    self.ingest_spans(spans);
+                }
+            }
+        }
+        self.ingest_spans(trace::global().drain());
+        let deltas: Vec<(String, u64)> = counters_before
+            .map(|before| {
+                metrics::global()
+                    .wire_snapshot()
+                    .counters
+                    .iter()
+                    .filter_map(|(name, v)| {
+                        let d = v.saturating_sub(before.counter(name));
+                        (d > 0).then(|| (name.clone(), d))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        self.job_traces
+            .lock()
+            .unwrap()
+            .insert(job_id, JobTraceInfo { trace_id, counter_deltas: deltas });
+        let dir = self.conf.get_str("ignite.trace.dir").unwrap_or_default();
+        if !dir.is_empty() {
+            if let Some(profile) = self.job_profile(job_id) {
+                let path = std::path::Path::new(&dir).join(format!("job-{job_id}.jsonl"));
+                if let Err(e) = std::fs::create_dir_all(&dir)
+                    .and_then(|_| std::fs::write(&path, profile.to_jsonl()))
+                {
+                    warn!(target: "cluster", "trace export to {} failed: {e}", path.display());
+                }
+            }
+        }
     }
 
     fn run_plan_session_inner(
@@ -941,6 +1063,7 @@ impl Master {
         plan: &PlanSpec,
         session: u64,
         handle: Option<Arc<JobHandle>>,
+        ctx: Option<TraceContext>,
     ) -> Result<Vec<Vec<Value>>> {
         metrics::global().counter("cluster.plans.launched").inc();
 
@@ -1008,6 +1131,7 @@ impl Master {
                 plan.num_partitions(),
                 session,
                 handle.as_ref(),
+                ctx,
             ) {
                 Ok(parts) => {
                     outcome = Some(Ok(parts));
@@ -1057,6 +1181,7 @@ impl Master {
     /// result stage. Each `task.run` stage's placement consults the
     /// map-output table for the stage's direct input ids (locality-aware
     /// reduce placement); gang stages keep their slot-capacity placement.
+    #[allow(clippy::too_many_arguments)]
     fn try_plan_job(
         &self,
         plan: &PlanSpec,
@@ -1065,7 +1190,17 @@ impl Master {
         num_result_tasks: usize,
         session: u64,
         handle: Option<&Arc<JobHandle>>,
+        ctx: Option<TraceContext>,
     ) -> Result<Vec<Vec<Value>>> {
+        // One stage span per materializing stage (and one for the result
+        // stage below); its context rides in the stage's wire frames so
+        // worker-side task/rank spans parent under it.
+        let stage_span = |kind: &str, id: &str| {
+            let mut s = trace::span("stage", ctx);
+            s.label("stage", id);
+            s.label("kind", kind);
+            s
+        };
         for stage in stages {
             if handle.is_some_and(|h| h.is_cancelled()) {
                 return Err(IgniteError::Task("job cancelled".into()));
@@ -1077,14 +1212,21 @@ impl Master {
                         "plan map stage shuffle {} ({} tasks)", stage.id, stage.num_tasks
                     );
                     let inputs = plan.stage_input_ids(Some(stage.id));
-                    self.try_plan_stage(
+                    let mut sspan = stage_span("shuffle", &stage.id.to_string());
+                    let r = self.try_plan_stage(
                         plan_bytes,
                         Some(stage.id),
                         stage.num_tasks,
                         &inputs,
                         session,
                         handle,
-                    )?;
+                        sspan.ctx(),
+                    );
+                    if let Err(e) = &r {
+                        sspan.fail(&e.to_string());
+                    }
+                    sspan.finish();
+                    r?;
                 }
                 PlanStageKind::Peer => {
                     info!(
@@ -1092,12 +1234,39 @@ impl Master {
                         "plan peer section {} ({} ranks)", stage.id, stage.num_tasks
                     );
                     let inputs = plan.stage_input_ids(Some(stage.id));
-                    self.try_peer_stage(plan_bytes, stage.id, stage.num_tasks, &inputs, session)?;
+                    let mut sspan = stage_span("peer", &stage.id.to_string());
+                    let r = self.try_peer_stage(
+                        plan_bytes,
+                        stage.id,
+                        stage.num_tasks,
+                        &inputs,
+                        session,
+                        sspan.ctx(),
+                    );
+                    if let Err(e) = &r {
+                        sspan.fail(&e.to_string());
+                    }
+                    sspan.finish();
+                    r?;
                 }
             }
         }
         let inputs = plan.stage_input_ids(None);
-        self.try_plan_stage(plan_bytes, None, num_result_tasks, &inputs, session, handle)
+        let mut sspan = stage_span("result", "result");
+        let r = self.try_plan_stage(
+            plan_bytes,
+            None,
+            num_result_tasks,
+            &inputs,
+            session,
+            handle,
+            sspan.ctx(),
+        );
+        if let Err(e) = &r {
+            sspan.fail(&e.to_string());
+        }
+        sspan.finish();
+        r
     }
 
     /// Locality-aware task placement for one `task.run` stage: sum each
@@ -1177,6 +1346,7 @@ impl Master {
         num_tasks: usize,
         input_ids: &[u64],
         session: u64,
+        ctx: Option<TraceContext>,
     ) -> Result<()> {
         if num_tasks == 0 {
             return Ok(());
@@ -1191,9 +1361,9 @@ impl Master {
         let budget = self.conf.get_usize("ignite.peer.gang.retries").unwrap_or(3).max(1);
         let mut generation = 0u64;
         loop {
-            let failure = match self
-                .try_peer_gang(plan_bytes, peer_id, num_tasks, input_ids, generation, session)
-            {
+            let failure = match self.try_peer_gang(
+                plan_bytes, peer_id, num_tasks, input_ids, generation, session, ctx,
+            ) {
                 Ok(()) => return Ok(()),
                 Err(f) => f,
             };
@@ -1213,6 +1383,15 @@ impl Master {
                     generation + 1
                 );
                 metrics::global().counter("peer.gang.restarts").inc();
+                trace::event(
+                    ctx,
+                    "event.gang.restart",
+                    &[
+                        ("peer", peer_id.to_string()),
+                        ("generation", (generation + 1).to_string()),
+                        ("error", failure.error.to_string()),
+                    ],
+                );
             } else {
                 // The gang never launched (a worker died between
                 // placement and ack — e.g. not yet past its heartbeat
@@ -1235,6 +1414,7 @@ impl Master {
     /// are released on every exit path. Failures carry whether the gang
     /// had actually launched — only a launched gang's failure is a
     /// *restart* (see [`try_peer_stage`](Self::try_peer_stage)).
+    #[allow(clippy::too_many_arguments)]
     fn try_peer_gang(
         &self,
         plan_bytes: &[u8],
@@ -1243,6 +1423,7 @@ impl Master {
         input_ids: &[u64],
         generation: u64,
         session: u64,
+        ctx: Option<TraceContext>,
     ) -> std::result::Result<(), GangAttemptFailure> {
         let fail =
             |error: IgniteError, launched: bool| GangAttemptFailure { error, launched };
@@ -1301,7 +1482,7 @@ impl Master {
             std::thread::sleep(Duration::from_millis(20));
         };
         let outcome =
-            self.launch_peer_gang(plan_bytes, peer_id, n, generation, &assignment, &table);
+            self.launch_peer_gang(plan_bytes, peer_id, n, generation, &assignment, &table, ctx);
         for (wid, count) in &wants {
             self.ledger.release(session, *wid, *count);
         }
@@ -1407,6 +1588,7 @@ impl Master {
     /// authoritative copy for relay/lookup + pushed to every
     /// participating worker), the two-phase `peer.prepare` / `peer.run`
     /// launch, then a wait for every rank with worker-loss watching.
+    #[allow(clippy::too_many_arguments)]
     fn launch_peer_gang(
         &self,
         plan_bytes: &[u8],
@@ -1415,6 +1597,7 @@ impl Master {
         generation: u64,
         assignment: &HashMap<u64, (RpcAddress, Vec<u64>)>,
         table: &[(u64, String)],
+        ctx: Option<TraceContext>,
     ) -> std::result::Result<(), GangAttemptFailure> {
         let fail =
             |error: IgniteError, launched: bool| GangAttemptFailure { error, launched };
@@ -1461,6 +1644,7 @@ impl Master {
                     } else {
                         Vec::new()
                     },
+                    ctx,
                 };
                 if let Err(e) = self.env.ask(addr, phase, to_bytes(&req), launch_timeout) {
                     self.peer_jobs.lock().unwrap().remove(&job_id);
@@ -1536,6 +1720,7 @@ impl Master {
     /// (`plan.tasks.speculated`, first finisher wins), and a worker
     /// that joins mid-stage starts taking tasks on the next dispatch
     /// round.
+    #[allow(clippy::too_many_arguments)]
     fn try_plan_stage(
         &self,
         plan_bytes: &[u8],
@@ -1544,6 +1729,7 @@ impl Master {
         input_ids: &[u64],
         session: u64,
         handle: Option<&Arc<JobHandle>>,
+        ctx: Option<TraceContext>,
     ) -> Result<Vec<Vec<Value>>> {
         if num_tasks == 0 {
             return Ok(Vec::new());
@@ -1659,6 +1845,11 @@ impl Master {
                         break 'failures;
                     }
                     metrics::global().counter("plan.tasks.reissued").inc();
+                    trace::event(
+                        ctx,
+                        "event.reissue",
+                        &[("task", task.to_string()), ("worker", worker.to_string())],
+                    );
                     pending.push_back(task);
                 }
                 if live_failure && !recoverable {
@@ -1709,6 +1900,11 @@ impl Master {
                     break;
                 }
                 metrics::global().counter("plan.tasks.reissued").inc();
+                trace::event(
+                    ctx,
+                    "event.reissue",
+                    &[("task", task.to_string()), ("worker", worker.to_string())],
+                );
                 pending.push_back(task);
             }
             if let Some(e) = abort {
@@ -1790,6 +1986,7 @@ impl Master {
                     plan: plan_bytes.to_vec(),
                     shuffle_id,
                     tasks: tasks.clone(),
+                    ctx,
                 };
                 if let Err(e) = self.env.ask(&addr, EP_TASK_RUN, to_bytes(&req), launch_timeout) {
                     // The launch never reached the worker: re-queue
@@ -1842,12 +2039,22 @@ impl Master {
                         plan: plan_bytes.to_vec(),
                         shuffle_id,
                         tasks: vec![task],
+                        ctx,
                     };
                     match self.env.ask(&addr, EP_TASK_RUN, to_bytes(&req), launch_timeout) {
                         Ok(_) => {
                             holds.insert((task, wid), std::time::Instant::now());
                             speculated.insert(task);
                             metrics::global().counter("plan.tasks.speculated").inc();
+                            trace::event(
+                                ctx,
+                                "event.speculate",
+                                &[
+                                    ("task", task.to_string()),
+                                    ("slow_worker", slow_worker.to_string()),
+                                    ("worker", wid.to_string()),
+                                ],
+                            );
                             info!(
                                 target: "cluster",
                                 "speculating task {task} of plan job {job_id} on worker {wid}"
@@ -1897,6 +2104,92 @@ impl Master {
         self.map_outputs.lock().unwrap().len()
     }
 
+    /// Absorb finished spans into the master's trace store. Spans arrive
+    /// piggy-backed on `master.plan_result` / `master.peer_result`, via
+    /// the `trace.flush` scrape at job close, and from the master's own
+    /// ring; the (trace_id, span_id) dedup makes any double delivery —
+    /// e.g. in-process test workers sharing the global ring — harmless.
+    pub fn ingest_spans(&self, spans: Vec<SpanRec>) {
+        if spans.is_empty() {
+            return;
+        }
+        let mut store = self.trace_spans.lock().unwrap();
+        for span in spans {
+            if store.seen.insert((span.trace_id, span.span_id)) {
+                store.spans.push(span);
+            }
+        }
+    }
+
+    /// Every span the master has collected so far, across all traces.
+    pub fn ingested_spans(&self) -> Vec<SpanRec> {
+        self.trace_spans.lock().unwrap().spans.clone()
+    }
+
+    /// The trace id recorded for a job, if that job ran with tracing on.
+    pub fn job_trace(&self, job_id: u64) -> Option<u64> {
+        self.job_traces.lock().unwrap().get(&job_id).map(|info| info.trace_id)
+    }
+
+    /// Job ids with a collected trace, ascending (embedded `run_plan`
+    /// jobs get a fresh id from the same sequence as jobserver jobs).
+    pub fn traced_jobs(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.job_traces.lock().unwrap().keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Assemble the per-job profile: the job's span tree (driver job span
+    /// down through stage, task, and fetch spans from every worker) plus
+    /// the job-scoped counter deltas. `None` when the job never ran with
+    /// tracing on.
+    pub fn job_profile(&self, job_id: u64) -> Option<trace::JobProfile> {
+        let traces = self.job_traces.lock().unwrap();
+        let info = traces.get(&job_id)?;
+        let spans: Vec<SpanRec> = self
+            .trace_spans
+            .lock()
+            .unwrap()
+            .spans
+            .iter()
+            .filter(|s| s.trace_id == info.trace_id)
+            .cloned()
+            .collect();
+        Some(trace::JobProfile::new(job_id, info.trace_id, spans, info.counter_deltas.clone()))
+    }
+
+    /// One merged registry snapshot for the whole cluster: every live
+    /// worker is scraped over `metrics.pull` and folded together
+    /// (counters sum, histogram buckets merge).
+    pub fn cluster_metrics(&self) -> RegistrySnapshot {
+        self.cluster_metrics_detailed().0
+    }
+
+    /// Like [`Master::cluster_metrics`] but also returns the individual
+    /// per-worker snapshots the merge was built from — the same pull, so
+    /// the merged view is exactly the sum of the parts.
+    pub fn cluster_metrics_detailed(&self) -> (RegistrySnapshot, Vec<(u64, RegistrySnapshot)>) {
+        let mut merged = RegistrySnapshot::default();
+        let mut parts = Vec::new();
+        for (id, addr) in self.live_workers() {
+            let Ok(resp) = self.env.ask(&addr, EP_METRICS_PULL, Vec::new(), Duration::from_secs(5))
+            else {
+                warn!(target: "cluster", "metrics.pull from worker {id} failed; skipping");
+                continue;
+            };
+            match from_bytes::<RegistrySnapshot>(&resp) {
+                Ok(snap) => {
+                    merged.merge(&snap);
+                    parts.push((id, snap));
+                }
+                Err(e) => {
+                    warn!(target: "cluster", "metrics.pull from worker {id}: bad snapshot: {e}");
+                }
+            }
+        }
+        (merged, parts)
+    }
+
     /// Open a new driver session: the unit of multi-tenant admission
     /// accounting (fair-share / quota caps and the per-session
     /// `jobserver.session.<id>.tasks.completed` counter).
@@ -1912,7 +2205,11 @@ impl Master {
         let resp = self.env.ask(
             &self.env.address(),
             EP_JOB_SUBMIT,
-            to_bytes(&JobSubmitReq { session_id: session, plan: to_bytes(plan) }),
+            to_bytes(&JobSubmitReq {
+                session_id: session,
+                plan: to_bytes(plan),
+                ctx: trace::current(),
+            }),
             Duration::from_secs(5),
         )?;
         let JobSubmitResp { job_id } = from_bytes(&resp)?;
@@ -2194,13 +2491,21 @@ impl crate::shuffle::ShuffleNet for RpcShuffleNet {
             map_idx: map_idx as u64,
             reduce_idx: reduce_idx as u64,
         };
-        let resp = self.env.ask(
+        let mut span = trace::span("fetch", trace::current());
+        span.label("addr", addr);
+        span.label("shuffle", shuffle.to_string());
+        span.label("buckets", "1");
+        let result = self.env.ask(
             &RpcAddress(addr.to_string()),
             EP_SHUFFLE_FETCH,
             to_bytes(&req),
             self.timeout,
-        )?;
-        let resp: ShuffleFetchResp = from_bytes(&resp)?;
+        );
+        if let Err(e) = &result {
+            span.fail(&e.to_string());
+        }
+        span.finish();
+        let resp: ShuffleFetchResp = from_bytes(&result?)?;
         resp.bytes.ok_or_else(|| {
             IgniteError::Storage(format!(
                 "worker {addr} no longer holds bucket ({shuffle}, {map_idx}, {reduce_idx})"
@@ -2216,19 +2521,29 @@ impl crate::shuffle::ShuffleNet for RpcShuffleNet {
         map_idxs: &[usize],
         batch_bytes: usize,
     ) -> Result<Vec<(usize, Option<Vec<u8>>)>> {
+        let ctx = trace::current();
         let req = ShuffleFetchMultiReq {
             shuffle,
             reduce_idx: reduce_idx as u64,
             map_idxs: map_idxs.iter().map(|&m| m as u64).collect(),
             batch_bytes: batch_bytes as u64,
+            ctx,
         };
-        let resp = self.env.ask(
+        let mut span = trace::span("fetch", ctx);
+        span.label("addr", addr);
+        span.label("shuffle", shuffle.to_string());
+        span.label("buckets", map_idxs.len().to_string());
+        let result = self.env.ask(
             &RpcAddress(addr.to_string()),
             EP_SHUFFLE_FETCH_MULTI,
             to_bytes(&req),
             self.timeout,
-        )?;
-        let resp: ShuffleFetchMultiResp = from_bytes(&resp)?;
+        );
+        if let Err(e) = &result {
+            span.fail(&e.to_string());
+        }
+        span.finish();
+        let resp: ShuffleFetchMultiResp = from_bytes(&result?)?;
         Ok(resp.buckets.into_iter().map(|(m, b)| (m as usize, b)).collect())
     }
 
@@ -2239,18 +2554,28 @@ impl crate::shuffle::ShuffleNet for RpcShuffleNet {
         pairs: &[(usize, usize)],
         batch_bytes: usize,
     ) -> Result<Vec<((usize, usize), Option<Vec<u8>>)>> {
+        let ctx = trace::current();
         let req = ShuffleFetchBatchReq {
             shuffle,
             pairs: pairs.iter().map(|&(m, r)| (m as u64, r as u64)).collect(),
             batch_bytes: batch_bytes as u64,
+            ctx,
         };
-        let resp = self.env.ask(
+        let mut span = trace::span("fetch", ctx);
+        span.label("addr", addr);
+        span.label("shuffle", shuffle.to_string());
+        span.label("pairs", pairs.len().to_string());
+        let result = self.env.ask(
             &RpcAddress(addr.to_string()),
             EP_SHUFFLE_FETCH_BATCH,
             to_bytes(&req),
             self.timeout,
-        )?;
-        let resp: ShuffleFetchBatchResp = from_bytes(&resp)?;
+        );
+        if let Err(e) = &result {
+            span.fail(&e.to_string());
+        }
+        span.finish();
+        let resp: ShuffleFetchBatchResp = from_bytes(&result?)?;
         Ok(resp
             .buckets
             .into_iter()
@@ -2476,13 +2801,22 @@ impl crate::broadcast::BroadcastNet for RpcBroadcastNet {
     }
 
     fn fetch(&self, addr: &str, id: u64, block: usize) -> Result<Vec<u8>> {
-        let resp = self.env.ask(
+        let ctx = trace::current();
+        let mut span = trace::span("broadcast.fetch", ctx);
+        span.label("addr", addr);
+        span.label("id", id.to_string());
+        span.label("block", block.to_string());
+        let result = self.env.ask(
             &RpcAddress(addr.to_string()),
             EP_BROADCAST_FETCH,
-            to_bytes(&BroadcastFetchReq { id, block: block as u64 }),
+            to_bytes(&BroadcastFetchReq { id, block: block as u64, ctx }),
             self.timeout,
-        )?;
-        let resp: BroadcastFetchResp = from_bytes(&resp)?;
+        );
+        if let Err(e) = &result {
+            span.fail(&e.to_string());
+        }
+        span.finish();
+        let resp: BroadcastFetchResp = from_bytes(&result?)?;
         resp.bytes.ok_or_else(|| {
             IgniteError::Storage(format!(
                 "holder {addr} no longer has broadcast {id} block {block}"
@@ -2567,32 +2901,57 @@ fn run_plan_tasks(
     // holder spanning every (map, reduce) pair this batch will read,
     // instead of per-task per-bucket round-trips. Best-effort — the
     // per-task read path still fetches whatever prefetch left behind.
-    for id in plan.stage_input_ids(shuffle_id) {
-        let pairs: Vec<(usize, usize)> = match plan.find_shuffle(id) {
-            Some(PlanSpec::Shuffle { parent, .. }) => {
-                let n_maps = parent.num_partitions();
-                indices
-                    .iter()
-                    .flat_map(|&t| (0..n_maps).map(move |m| (m, t)))
-                    .collect()
-            }
-            // Peer-section outputs live in the same bucket namespace
-            // keyed (rank, rank).
-            _ => indices.iter().map(|&t| (t, t)).collect(),
-        };
-        engine.shuffle.prefetch_pairs(id, &pairs);
+    let ctx = req.ctx;
+    {
+        // Stage-parented tracing: the prefetch fans out on behalf of the
+        // whole assignment, so its fetch spans nest under the stage span
+        // rather than any single task.
+        let _cur = trace::with_current(ctx);
+        for id in plan.stage_input_ids(shuffle_id) {
+            let pairs: Vec<(usize, usize)> = match plan.find_shuffle(id) {
+                Some(PlanSpec::Shuffle { parent, .. }) => {
+                    let n_maps = parent.num_partitions();
+                    indices
+                        .iter()
+                        .flat_map(|&t| (0..n_maps).map(move |m| (m, t)))
+                        .collect()
+                }
+                // Peer-section outputs live in the same bucket namespace
+                // keyed (rank, rank).
+                _ => indices.iter().map(|&t| (t, t)).collect(),
+            };
+            engine.shuffle.prefetch_pairs(id, &pairs);
+        }
     }
     let engine2 = engine.clone();
     engine.run_task_indices(req.job_id, indices, move |task_idx| {
         metrics::global().counter("cluster.tasks.executed").inc();
         metrics::global().counter(&worker_task_counter(worker_id)).inc();
         let t0 = std::time::Instant::now();
-        let rows = match shuffle_id {
-            Some(sid) => {
-                run_shuffle_map_task(&plan, sid, task_idx, &engine2)?;
-                Vec::new()
+        // The task span parents every fetch/broadcast span the compute
+        // makes (via the thread-local current context) and is finished
+        // BEFORE `report` so the piggy-backed drain in `task.run`'s
+        // result message carries it home with the rows.
+        let mut tspan = trace::span("task", ctx);
+        tspan.label("task", task_idx.to_string());
+        if let Some(sid) = shuffle_id {
+            tspan.label("shuffle", sid.to_string());
+        }
+        let _cur = trace::with_current(tspan.ctx().or(ctx));
+        let outcome = match shuffle_id {
+            Some(sid) => run_shuffle_map_task(&plan, sid, task_idx, &engine2).map(|()| Vec::new()),
+            None => plan.compute(task_idx, &engine2),
+        };
+        let rows = match outcome {
+            Ok(rows) => {
+                tspan.finish();
+                rows
             }
-            None => plan.compute(task_idx, &engine2)?,
+            Err(e) => {
+                tspan.fail(&e.to_string());
+                tspan.finish();
+                return Err(e);
+            }
         };
         metrics::global().histogram("plan.task.latency").record(t0.elapsed());
         report(task_idx as u64, rows);
@@ -2617,6 +2976,7 @@ impl Worker {
     pub fn start(conf: &IgniteConf, master_addr: RpcAddress) -> Result<Arc<Self>> {
         let env = RpcEnv::server("worker", 0)?;
         env.set_vectored(conf.get_bool("ignite.rpc.vectored").unwrap_or(true));
+        trace::configure(conf);
         let mode = TransportMode::parse(conf.get_str("ignite.comm.mode")?)?;
         let soft_cap = conf.get_usize("ignite.comm.buffer.max")?;
         let transport = ClusterTransport::new(env.clone(), master_addr.clone(), mode, soft_cap);
@@ -2693,6 +3053,11 @@ impl Worker {
                                         error: String::new(),
                                         recoverable: false,
                                         results: vec![(task, rows)],
+                                        spans: if trace::enabled() {
+                                            trace::global().drain()
+                                        } else {
+                                            Vec::new()
+                                        },
                                     };
                                     let _ = env4.send(&master2, EP_PLAN_RESULT, to_bytes(&msg));
                                 });
@@ -2704,6 +3069,11 @@ impl Worker {
                                     error: e.to_string(),
                                     recoverable: e.is_recoverable(),
                                     results: Vec::new(),
+                                    spans: if trace::enabled() {
+                                        trace::global().drain()
+                                    } else {
+                                        Vec::new()
+                                    },
                                 };
                                 let _ = env3.send(&master, EP_PLAN_RESULT, to_bytes(&msg));
                             }
@@ -2765,6 +3135,27 @@ impl Worker {
                 }),
             );
         }
+
+        // Cluster metrics plane: the master's `cluster_metrics()` pulls a
+        // wire-encoded snapshot of this process's registry and merges it
+        // with every other worker's (counters sum, histograms
+        // bucket-merge).
+        env.register(
+            EP_METRICS_PULL,
+            Arc::new(move |_envelope: &Envelope| {
+                Ok(Some(RpcBody::Bytes(to_bytes(&metrics::global().wire_snapshot()))))
+            }),
+        );
+
+        // Trace plane: hand the master whatever finished spans are still
+        // in this worker's ring (spans normally ride home piggy-backed on
+        // result messages; this catches stragglers at job close).
+        env.register(
+            EP_TRACE_FLUSH,
+            Arc::new(move |_envelope: &Envelope| {
+                Ok(Some(RpcBody::Bytes(to_bytes(&trace::global().drain()))))
+            }),
+        );
 
         // Peer-section launch, phase 1: install the gang's rank table
         // and host this worker's rank mailboxes. Re-hosting a rank
@@ -2851,10 +3242,16 @@ impl Worker {
                         let (job_id, peer_id, generation) =
                             (req.job_id, req.peer_id, req.generation);
                         let world_size = req.world_size as usize;
+                        let ctx = req.ctx;
                         std::thread::Builder::new()
                             .name(format!("peer-job{job_id}-rank{rank}"))
                             .spawn(move || {
                                 let comm = world.comm_for_rank_ctx(rank, context);
+                                let mut rspan = trace::span("peer.rank", ctx);
+                                rspan.label("rank", rank.to_string());
+                                rspan.label("peer", peer_id.to_string());
+                                rspan.label("generation", generation.to_string());
+                                let cur = trace::with_current(rspan.ctx().or(ctx));
                                 let outcome = (|| -> Result<()> {
                                     engine.fault.before_task(TaskId {
                                         stage: peer_id,
@@ -2867,6 +3264,11 @@ impl Worker {
                                     engine.shuffle.put_bucket(peer_id, rank, rank, out);
                                     engine.shuffle.map_done(peer_id, rank, world_size)
                                 })();
+                                if let Err(e) = &outcome {
+                                    rspan.fail(&e.to_string());
+                                }
+                                rspan.finish();
+                                drop(cur);
                                 metrics::global().counter("peer.tasks.executed").inc();
                                 metrics::global().counter(&worker_task_counter(worker_id)).inc();
                                 // Evict BEFORE reporting, like parallel-fn
@@ -2876,6 +3278,11 @@ impl Worker {
                                 // re-hosted by a restarted gang) are no-ops
                                 // thanks to the mailbox generation guard.
                                 transport.evict_rank(rank, mailbox_gen);
+                                let spans = if trace::enabled() {
+                                    trace::global().drain()
+                                } else {
+                                    Vec::new()
+                                };
                                 let msg = match outcome {
                                     Ok(()) => PeerTaskResult {
                                         job_id,
@@ -2885,6 +3292,7 @@ impl Worker {
                                         ok: true,
                                         error: String::new(),
                                         recoverable: false,
+                                        spans,
                                     },
                                     Err(e) => PeerTaskResult {
                                         job_id,
@@ -2894,6 +3302,7 @@ impl Worker {
                                         ok: false,
                                         error: e.to_string(),
                                         recoverable: e.is_recoverable(),
+                                        spans,
                                     },
                                 };
                                 let _ = env3.send(&master, EP_PEER_RESULT, to_bytes(&msg));

@@ -1,7 +1,16 @@
 //! Wire messages between master and workers.
+//!
+//! Trace propagation: requests that start remote work (`task.run`,
+//! `peer.prepare`/`peer.run`, `shuffle.fetch_multi`/`fetch_batch`,
+//! `broadcast.fetch`, `job.submit`) carry an optional
+//! [`TraceContext`] the receiver parents its spans under, and the
+//! result messages (`master.plan_result`, `master.peer_result`) ship
+//! completed [`SpanRec`]s back. With tracing off the context is `None`
+//! and the span vectors are empty — one tag byte / varint on the wire.
 
 use crate::error::Result;
 use crate::ser::{Decode, Encode, Reader, Value};
+use crate::trace::{SpanRec, TraceContext};
 
 /// Worker → master: registration.
 #[derive(Debug, Clone, PartialEq)]
@@ -259,6 +268,7 @@ pub struct ShuffleFetchMultiReq {
     pub reduce_idx: u64,
     pub map_idxs: Vec<u64>,
     pub batch_bytes: u64,
+    pub ctx: Option<TraceContext>,
 }
 
 impl Encode for ShuffleFetchMultiReq {
@@ -267,6 +277,7 @@ impl Encode for ShuffleFetchMultiReq {
         self.reduce_idx.encode(buf);
         self.map_idxs.encode(buf);
         self.batch_bytes.encode(buf);
+        self.ctx.encode(buf);
     }
 }
 impl Decode for ShuffleFetchMultiReq {
@@ -276,6 +287,7 @@ impl Decode for ShuffleFetchMultiReq {
             reduce_idx: u64::decode(r)?,
             map_idxs: Vec::<u64>::decode(r)?,
             batch_bytes: u64::decode(r)?,
+            ctx: Option::<TraceContext>::decode(r)?,
         })
     }
 }
@@ -314,6 +326,8 @@ pub struct PlanTaskReq {
     pub plan: Vec<u8>,
     pub shuffle_id: Option<u64>,
     pub tasks: Vec<u64>,
+    /// The dispatching stage span — worker task spans parent under it.
+    pub ctx: Option<TraceContext>,
 }
 
 impl Encode for PlanTaskReq {
@@ -322,6 +336,7 @@ impl Encode for PlanTaskReq {
         self.plan.encode(buf);
         self.shuffle_id.encode(buf);
         self.tasks.encode(buf);
+        self.ctx.encode(buf);
     }
 }
 impl Decode for PlanTaskReq {
@@ -331,6 +346,7 @@ impl Decode for PlanTaskReq {
             plan: Vec::<u8>::decode(r)?,
             shuffle_id: Option::<u64>::decode(r)?,
             tasks: Vec::<u64>::decode(r)?,
+            ctx: Option::<TraceContext>::decode(r)?,
         })
     }
 }
@@ -354,6 +370,9 @@ pub struct PlanTaskResult {
     pub error: String,
     pub recoverable: bool,
     pub results: Vec<(u64, Vec<Value>)>,
+    /// Completed worker-side spans piggy-backed to the master (empty
+    /// when tracing is off or nothing finished since the last report).
+    pub spans: Vec<SpanRec>,
 }
 
 impl Encode for PlanTaskResult {
@@ -364,6 +383,7 @@ impl Encode for PlanTaskResult {
         self.error.encode(buf);
         self.recoverable.encode(buf);
         self.results.encode(buf);
+        self.spans.encode(buf);
     }
 }
 impl Decode for PlanTaskResult {
@@ -375,6 +395,7 @@ impl Decode for PlanTaskResult {
             error: String::decode(r)?,
             recoverable: bool::decode(r)?,
             results: Vec::<(u64, Vec<Value>)>::decode(r)?,
+            spans: Vec::<SpanRec>::decode(r)?,
         })
     }
 }
@@ -402,6 +423,8 @@ pub struct PeerTaskReq {
     pub world_size: u64,
     pub ranks: Vec<u64>,
     pub rank_table: Vec<(u64, String)>,
+    /// The gang's stage span — worker rank spans parent under it.
+    pub ctx: Option<TraceContext>,
 }
 
 impl Encode for PeerTaskReq {
@@ -413,6 +436,7 @@ impl Encode for PeerTaskReq {
         self.world_size.encode(buf);
         self.ranks.encode(buf);
         self.rank_table.encode(buf);
+        self.ctx.encode(buf);
     }
 }
 impl Decode for PeerTaskReq {
@@ -425,6 +449,7 @@ impl Decode for PeerTaskReq {
             world_size: u64::decode(r)?,
             ranks: Vec::<u64>::decode(r)?,
             rank_table: Vec::<(u64, String)>::decode(r)?,
+            ctx: Option::<TraceContext>::decode(r)?,
         })
     }
 }
@@ -444,6 +469,8 @@ pub struct PeerTaskResult {
     pub ok: bool,
     pub error: String,
     pub recoverable: bool,
+    /// Completed worker-side spans piggy-backed to the master.
+    pub spans: Vec<SpanRec>,
 }
 
 impl Encode for PeerTaskResult {
@@ -455,6 +482,7 @@ impl Encode for PeerTaskResult {
         self.ok.encode(buf);
         self.error.encode(buf);
         self.recoverable.encode(buf);
+        self.spans.encode(buf);
     }
 }
 impl Decode for PeerTaskResult {
@@ -467,6 +495,7 @@ impl Decode for PeerTaskResult {
             ok: bool::decode(r)?,
             error: String::decode(r)?,
             recoverable: bool::decode(r)?,
+            spans: Vec::<SpanRec>::decode(r)?,
         })
     }
 }
@@ -578,17 +607,23 @@ impl Decode for BroadcastLocateResp {
 pub struct BroadcastFetchReq {
     pub id: u64,
     pub block: u64,
+    pub ctx: Option<TraceContext>,
 }
 
 impl Encode for BroadcastFetchReq {
     fn encode(&self, buf: &mut Vec<u8>) {
         self.id.encode(buf);
         self.block.encode(buf);
+        self.ctx.encode(buf);
     }
 }
 impl Decode for BroadcastFetchReq {
     fn decode(r: &mut Reader<'_>) -> Result<Self> {
-        Ok(BroadcastFetchReq { id: u64::decode(r)?, block: u64::decode(r)? })
+        Ok(BroadcastFetchReq {
+            id: u64::decode(r)?,
+            block: u64::decode(r)?,
+            ctx: Option::<TraceContext>::decode(r)?,
+        })
     }
 }
 
@@ -663,17 +698,25 @@ impl Decode for JobClear {
 pub struct JobSubmitReq {
     pub session_id: u64,
     pub plan: Vec<u8>,
+    /// Submitter-side parent span (e.g. a streaming batch) the job's
+    /// root span links under.
+    pub ctx: Option<TraceContext>,
 }
 
 impl Encode for JobSubmitReq {
     fn encode(&self, buf: &mut Vec<u8>) {
         self.session_id.encode(buf);
         self.plan.encode(buf);
+        self.ctx.encode(buf);
     }
 }
 impl Decode for JobSubmitReq {
     fn decode(r: &mut Reader<'_>) -> Result<Self> {
-        Ok(JobSubmitReq { session_id: u64::decode(r)?, plan: Vec::<u8>::decode(r)? })
+        Ok(JobSubmitReq {
+            session_id: u64::decode(r)?,
+            plan: Vec::<u8>::decode(r)?,
+            ctx: Option::<TraceContext>::decode(r)?,
+        })
     }
 }
 
@@ -813,6 +856,8 @@ pub struct ShuffleFetchBatchReq {
     pub shuffle: u64,
     pub pairs: Vec<(u64, u64)>,
     pub batch_bytes: u64,
+    /// Calling task's span — the server ties fetch-side work to it.
+    pub ctx: Option<TraceContext>,
 }
 
 impl Encode for ShuffleFetchBatchReq {
@@ -820,6 +865,7 @@ impl Encode for ShuffleFetchBatchReq {
         self.shuffle.encode(buf);
         self.pairs.encode(buf);
         self.batch_bytes.encode(buf);
+        self.ctx.encode(buf);
     }
 }
 impl Decode for ShuffleFetchBatchReq {
@@ -828,6 +874,7 @@ impl Decode for ShuffleFetchBatchReq {
             shuffle: u64::decode(r)?,
             pairs: Vec::<(u64, u64)>::decode(r)?,
             batch_bytes: u64::decode(r)?,
+            ctx: Option::<TraceContext>::decode(r)?,
         })
     }
 }
@@ -919,6 +966,7 @@ mod tests {
             reduce_idx: 3,
             map_idxs: vec![0, 2, 5],
             batch_bytes: 1 << 20,
+            ctx: Some(TraceContext { trace_id: 11, span_id: 12 }),
         };
         assert_eq!(from_bytes::<ShuffleFetchMultiReq>(&to_bytes(&multi)).unwrap(), multi);
         let resp = ShuffleFetchMultiResp {
@@ -929,12 +977,16 @@ mod tests {
 
     #[test]
     fn plan_task_messages_round_trip() {
-        for shuffle_id in [None, Some(77u64)] {
+        for (shuffle_id, ctx) in [
+            (None, None),
+            (Some(77u64), Some(TraceContext { trace_id: 42, span_id: 7 })),
+        ] {
             let req = PlanTaskReq {
                 job_id: 5,
                 plan: vec![1, 2, 3, 4],
                 shuffle_id,
                 tasks: vec![0, 2, 5],
+                ctx,
             };
             assert_eq!(from_bytes::<PlanTaskReq>(&to_bytes(&req)).unwrap(), req);
         }
@@ -945,6 +997,16 @@ mod tests {
             error: String::new(),
             recoverable: false,
             results: vec![(0, vec![Value::I64(1)]), (2, Vec::new())],
+            spans: vec![SpanRec {
+                trace_id: 42,
+                span_id: 9,
+                parent_id: 7,
+                kind: "task".into(),
+                labels: vec![("task".into(), "0".into())],
+                t_start_ns: 100,
+                t_end_ns: 200,
+                ok: true,
+            }],
         };
         assert_eq!(from_bytes::<PlanTaskResult>(&to_bytes(&ok)).unwrap(), ok);
         let failed = PlanTaskResult {
@@ -954,6 +1016,7 @@ mod tests {
             error: "op not registered".into(),
             recoverable: true,
             results: Vec::new(),
+            spans: Vec::new(),
         };
         assert_eq!(from_bytes::<PlanTaskResult>(&to_bytes(&failed)).unwrap(), failed);
 
@@ -971,6 +1034,7 @@ mod tests {
             world_size: 4,
             ranks: vec![1, 3],
             rank_table: vec![(0, "127.0.0.1:1".into()), (1, "127.0.0.1:2".into())],
+            ctx: Some(TraceContext { trace_id: 5, span_id: 6 }),
         };
         assert_eq!(from_bytes::<PeerTaskReq>(&to_bytes(&req)).unwrap(), req);
 
@@ -985,6 +1049,16 @@ mod tests {
                 ok,
                 error,
                 recoverable,
+                spans: vec![SpanRec {
+                    trace_id: 5,
+                    span_id: 8,
+                    parent_id: 6,
+                    kind: "peer.rank".into(),
+                    labels: Vec::new(),
+                    t_start_ns: 1,
+                    t_end_ns: 2,
+                    ok: true,
+                }],
             };
             assert_eq!(from_bytes::<PeerTaskResult>(&to_bytes(&res)).unwrap(), res);
         }
@@ -1016,7 +1090,7 @@ mod tests {
         };
         assert_eq!(from_bytes::<BroadcastLocateResp>(&to_bytes(&resp)).unwrap(), resp);
 
-        let fetch = BroadcastFetchReq { id: 21, block: 1 };
+        let fetch = BroadcastFetchReq { id: 21, block: 1, ctx: None };
         assert_eq!(from_bytes::<BroadcastFetchReq>(&to_bytes(&fetch)).unwrap(), fetch);
         for bytes in [None, Some(vec![9u8, 8, 7])] {
             let resp = BroadcastFetchResp { bytes };
@@ -1032,7 +1106,7 @@ mod tests {
 
     #[test]
     fn job_server_messages_round_trip() {
-        let submit = JobSubmitReq { session_id: 3, plan: vec![1, 2, 3] };
+        let submit = JobSubmitReq { session_id: 3, plan: vec![1, 2, 3], ctx: None };
         assert_eq!(from_bytes::<JobSubmitReq>(&to_bytes(&submit)).unwrap(), submit);
         let resp = JobSubmitResp { job_id: 17 };
         assert_eq!(from_bytes::<JobSubmitResp>(&to_bytes(&resp)).unwrap(), resp);
@@ -1063,6 +1137,7 @@ mod tests {
             shuffle: 9,
             pairs: vec![(0, 1), (2, 1), (0, 3)],
             batch_bytes: 1 << 20,
+            ctx: None,
         };
         assert_eq!(from_bytes::<ShuffleFetchBatchReq>(&to_bytes(&req)).unwrap(), req);
         let resp = ShuffleFetchBatchResp {

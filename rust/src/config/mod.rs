@@ -57,6 +57,10 @@ pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
     ("ignite.artifacts.dir", "artifacts", "AOT HLO artifact directory"),
     ("ignite.fault.inject.seed", "0", "0 = off; else deterministic fault seed"),
     ("ignite.fault.recovery.mode_switch", "true", "Fall back to relay during recovery"),
+    ("ignite.trace.enabled", "false", "Span-based distributed tracing (job/stage/task/fetch spans over RPC)"),
+    ("ignite.trace.sample.rate", "1.0", "Fraction of jobs traced, decided once at the job root (0.0 - 1.0)"),
+    ("ignite.trace.dir", "", "Non-empty: master exports each traced job's profile as JSONL here"),
+    ("ignite.metrics.report.raw.ns", "false", "Report histogram durations as raw nanoseconds instead of humanized units"),
 ];
 
 /// Engine configuration.
@@ -257,6 +261,17 @@ impl IgniteConf {
                 "ignite.comm.allreduce.algo={allreduce} (want tree|linear|ring|blockstore)"
             )));
         }
+        // Observability plane: the trace toggle and the metrics report
+        // form are bools; the sample rate is a probability — out-of-range
+        // values would silently trace everything or nothing.
+        self.get_bool("ignite.trace.enabled")?;
+        self.get_bool("ignite.metrics.report.raw.ns")?;
+        let rate = self.get_f64("ignite.trace.sample.rate")?;
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(IgniteError::Config(format!(
+                "ignite.trace.sample.rate={rate} (want 0.0 - 1.0)"
+            )));
+        }
         Ok(())
     }
 
@@ -450,6 +465,27 @@ mod tests {
         conf.set("ignite.streaming.window.size", "0");
         let err = conf.validate().unwrap_err();
         assert!(err.to_string().contains("window.size"), "got: {err}");
+    }
+
+    #[test]
+    fn trace_keys_validate() {
+        let conf = IgniteConf::new();
+        // `enabled` is the test-traced CI lane's env toggle: parse-only.
+        conf.get_bool("ignite.trace.enabled").unwrap();
+        conf.get_bool("ignite.metrics.report.raw.ns").unwrap();
+        let rate = conf.get_f64("ignite.trace.sample.rate").unwrap();
+        assert!((0.0..=1.0).contains(&rate));
+        assert_eq!(conf.get_str("ignite.trace.dir").unwrap(), "");
+        conf.validate().unwrap();
+
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.trace.sample.rate", "1.5");
+        let err = conf.validate().unwrap_err();
+        assert!(err.to_string().contains("sample.rate"), "got: {err}");
+
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.trace.enabled", "maybe");
+        assert!(conf.validate().is_err());
     }
 
     #[test]

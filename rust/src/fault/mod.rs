@@ -76,6 +76,16 @@ impl FaultInjector {
             }
         }
         if self.fail_once.lock().unwrap().remove(&(id.stage, id.partition, id.attempt)) {
+            crate::trace::event(
+                crate::trace::current(),
+                "event.fault",
+                &[
+                    ("site", "scripted".to_string()),
+                    ("stage", id.stage.to_string()),
+                    ("partition", id.partition.to_string()),
+                    ("attempt", id.attempt.to_string()),
+                ],
+            );
             return Err(IgniteError::Task(format!(
                 "injected fault: stage {} partition {} attempt {}",
                 id.stage, id.partition, id.attempt
@@ -87,6 +97,17 @@ impl FaultInjector {
                     ^ ((id.partition as u64).wrapping_mul(0xD1B54A32D192ED03));
                 let mut rng = Xoshiro256::seeded(mix);
                 if rng.chance(p) {
+                    crate::trace::event(
+                        crate::trace::current(),
+                        "event.fault",
+                        &[
+                            ("site", "chaos".to_string()),
+                            ("seed", seed.to_string()),
+                            ("stage", id.stage.to_string()),
+                            ("partition", id.partition.to_string()),
+                            ("attempt", id.attempt.to_string()),
+                        ],
+                    );
                     return Err(IgniteError::Task(format!(
                         "chaos fault: stage {} partition {}",
                         id.stage, id.partition

@@ -378,6 +378,51 @@
 //! measures batches/sec and p50/p99 batch latency, backpressure on/off,
 //! stateful vs stateless.
 //!
+//! ## Observability: distributed tracing + the cluster metrics plane
+//!
+//! Two planes turn the cluster's scattered per-process counters into a
+//! correlated story ([`trace`], [`metrics`]):
+//!
+//! **Span lifecycle.** With `ignite.trace.enabled`, the master opens a
+//! root `job` span per plan job (sampled once at the root by
+//! `ignite.trace.sample.rate` — an unsampled job propagates no context
+//! and costs nothing downstream), one `stage` span per scheduled stage,
+//! and workers open `task` / `peer.rank` spans around execution, with
+//! client-side `fetch` / `broadcast.fetch` spans nested under the
+//! running task via a thread-local current context
+//! ([`trace::current`]). Scheduler decisions (`event.reissue`,
+//! `event.speculate`, `event.gang.restart`), fault injections
+//! (`event.fault`), shuffle tier movement (`event.spill`,
+//! `event.evict`) and streaming stalls (`event.backpressure`) are
+//! instant events under the nearest enclosing span.
+//!
+//! **Propagation rules.** A [`trace::TraceContext`]
+//! `{ trace_id, span_id }` rides in the wire frames of `job.submit`,
+//! `task.run`, `peer.prepare`/`peer.run`,
+//! `shuffle.fetch_multi`/`fetch_batch` and `broadcast.fetch`; the
+//! receiver parents its spans under it. Completed worker spans ship
+//! back piggy-backed on `master.plan_result` / `master.peer_result`,
+//! and the master sweeps stragglers with a `trace.flush` RPC at job
+//! end. Records live in a bounded ring ([`trace::Tracer`]) — when
+//! tracing is off the hot path is one relaxed atomic load and **no
+//! span record is allocated**.
+//!
+//! **Pull/merge semantics.** The `metrics.pull` RPC returns a
+//! wire-encodable [`metrics::RegistrySnapshot`] (counters, gauges, and
+//! *full* histogram buckets — [`metrics::HistogramSnapshot`]).
+//! [`cluster::Master::cluster_metrics`] pulls every live worker and
+//! merges: counters and gauges sum, histograms merge bucket-by-bucket,
+//! so cluster-wide quantiles stay exact. Per job,
+//! [`cluster::Master::job_profile`] assembles the ingested span tree
+//! plus job-scoped counter deltas into a [`trace::JobProfile`] with a
+//! timeline / critical-path text renderer and a JSONL export written
+//! under `ignite.trace.dir` for benches and CI to diff.
+//!
+//! Key config: `ignite.trace.enabled`, `ignite.trace.sample.rate`,
+//! `ignite.trace.dir`, `ignite.metrics.report.raw.ns`.
+//! `rust/benches/bench_trace.rs` (E15) measures tracing overhead
+//! (sampled-on vs off plan-job latency).
+//!
 //! ## Quickstart (Listing 1 of the paper)
 //!
 //! ```
@@ -425,6 +470,7 @@ pub mod shuffle;
 pub mod storage;
 pub mod streaming;
 pub mod testkit;
+pub mod trace;
 pub mod util;
 
 pub use context::IgniteContext;

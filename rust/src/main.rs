@@ -223,7 +223,12 @@ fn cmd_power_iter(rest: &[String]) -> Result<()> {
     };
     println!("λ ≈ {lambda:.4} (planted ≈ {})", mpignite::apps::PLANTED_EIG);
     println!("wall time: {elapsed:.1} ms  ({:.2} ms/iter)", elapsed / iters as f64);
-    println!("\n== metrics ==\n{}", mpignite::metrics::global().report());
+    let report = if conf.get_bool("ignite.metrics.report.raw.ns").unwrap_or(false) {
+        mpignite::metrics::global().report_raw()
+    } else {
+        mpignite::metrics::global().report()
+    };
+    println!("\n== metrics ==\n{report}");
     Ok(())
 }
 
@@ -240,6 +245,12 @@ fn cmd_metrics_demo() -> Result<()> {
         })
         .execute(4)?;
     println!("allreduce: {hist:?}");
-    println!("\n{}", mpignite::metrics::global().report());
+    let conf = IgniteConf::from_env();
+    let report = if conf.get_bool("ignite.metrics.report.raw.ns").unwrap_or(false) {
+        mpignite::metrics::global().report_raw()
+    } else {
+        mpignite::metrics::global().report()
+    };
+    println!("\n{report}");
     Ok(())
 }

@@ -3,6 +3,8 @@
 //! bytes, comm messages, scheduler tasks, block store hits) reports here;
 //! the bench harness and the E2E driver print the registry at exit.
 
+use crate::error::Result;
+use crate::ser::{Decode, Encode, Reader};
 use once_cell::sync::Lazy;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
@@ -138,6 +140,175 @@ impl Histogram {
         }
         self.max_ns()
     }
+
+    /// Freeze the full bucket state into a wire-encodable snapshot, the
+    /// unit of cross-process histogram aggregation (`metrics.pull`).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fold a remote snapshot into this histogram bucket-by-bucket, so
+    /// merged quantiles are exactly what one histogram observing both
+    /// processes' samples would report.
+    pub fn merge(&self, snap: &HistogramSnapshot) {
+        for (i, n) in snap.buckets.iter().enumerate().take(NUM_BUCKETS) {
+            if *n > 0 {
+                self.buckets[i].fetch_add(*n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(snap.count, Ordering::Relaxed);
+        self.sum_ns.fetch_add(snap.sum_ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(snap.max_ns, Ordering::Relaxed);
+    }
+}
+
+/// Full-fidelity histogram state (every bucket, not just summary
+/// quantiles), codec-encodable for the `metrics.pull` RPC.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket lower bounds (same math as
+    /// [`Histogram::quantile_ns`]).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (i, n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return Histogram::bucket_value(i);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Bucket-wise merge of another snapshot into this one.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (i, n) in other.buckets.iter().enumerate() {
+            self.buckets[i] += n;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+impl Encode for HistogramSnapshot {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.buckets.encode(buf);
+        self.count.encode(buf);
+        self.sum_ns.encode(buf);
+        self.max_ns.encode(buf);
+    }
+}
+
+impl Decode for HistogramSnapshot {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(HistogramSnapshot {
+            buckets: Vec::decode(r)?,
+            count: u64::decode(r)?,
+            sum_ns: u64::decode(r)?,
+            max_ns: u64::decode(r)?,
+        })
+    }
+}
+
+/// A whole registry frozen for the wire: the `metrics.pull` response
+/// body, and the unit [`crate::cluster::Master::cluster_metrics`]
+/// merges. All three vectors are sorted by name.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RegistrySnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+impl RegistrySnapshot {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .binary_search_by(|(k, _)| k.as_str().cmp(name))
+            .map(|i| self.counters[i].1)
+            .unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges
+            .binary_search_by(|(k, _)| k.as_str().cmp(name))
+            .map(|i| self.gauges[i].1)
+            .unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms
+            .binary_search_by(|(k, _)| k.as_str().cmp(name))
+            .map(|i| &self.histograms[i].1)
+            .ok()
+    }
+
+    /// Merge another process's snapshot into this cluster view: counters
+    /// and gauges sum by name, histograms merge bucket-by-bucket.
+    pub fn merge(&mut self, other: &RegistrySnapshot) {
+        for (k, v) in &other.counters {
+            match self.counters.binary_search_by(|(n, _)| n.cmp(k)) {
+                Ok(i) => self.counters[i].1 += v,
+                Err(i) => self.counters.insert(i, (k.clone(), *v)),
+            }
+        }
+        for (k, v) in &other.gauges {
+            match self.gauges.binary_search_by(|(n, _)| n.cmp(k)) {
+                Ok(i) => self.gauges[i].1 += v,
+                Err(i) => self.gauges.insert(i, (k.clone(), *v)),
+            }
+        }
+        for (k, h) in &other.histograms {
+            match self.histograms.binary_search_by(|(n, _)| n.cmp(k)) {
+                Ok(i) => self.histograms[i].1.merge(h),
+                Err(i) => self.histograms.insert(i, (k.clone(), h.clone())),
+            }
+        }
+    }
+}
+
+impl Encode for RegistrySnapshot {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.counters.encode(buf);
+        self.gauges.encode(buf);
+        self.histograms.encode(buf);
+    }
+}
+
+impl Decode for RegistrySnapshot {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(RegistrySnapshot {
+            counters: Vec::decode(r)?,
+            gauges: Vec::decode(r)?,
+            histograms: Vec::decode(r)?,
+        })
+    }
 }
 
 /// A snapshot row for reporting.
@@ -201,19 +372,92 @@ impl MetricsRegistry {
         out
     }
 
-    /// Text report, one line per metric.
+    /// Freeze the whole registry (full histogram buckets included) into
+    /// the wire-encodable form `metrics.pull` ships.
+    pub fn wire_snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            histograms: self
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+
+    /// Fold a remote snapshot into this registry's live metrics.
+    pub fn merge_snapshot(&self, snap: &RegistrySnapshot) {
+        for (k, v) in &snap.counters {
+            self.counter(k).add(*v);
+        }
+        for (k, v) in &snap.gauges {
+            self.gauge(k).add(*v);
+        }
+        for (k, h) in &snap.histograms {
+            self.histogram(k).merge(h);
+        }
+    }
+
+    /// Text report, one line per metric, durations humanized
+    /// (ns → µs/ms/s). Histograms sort after the scalar metrics with
+    /// their names and counts column-aligned.
     pub fn report(&self) -> String {
+        self.render_report(false)
+    }
+
+    /// The raw-nanosecond report form (`ignite.metrics.report.raw.ns`),
+    /// kept for test assertions and machine diffing.
+    pub fn report_raw(&self) -> String {
+        self.render_report(true)
+    }
+
+    fn render_report(&self, raw_ns: bool) -> String {
+        let fmt_ns = |ns: u64| -> String {
+            if raw_ns {
+                format!("{ns}ns")
+            } else {
+                crate::util::fmt_duration(Duration::from_nanos(ns))
+            }
+        };
         let mut out = String::new();
+        let mut hists: Vec<(String, u64, f64, u64, u64, u64)> = Vec::new();
         for (k, v) in self.snapshot() {
             match v {
                 MetricValue::Counter(c) => out.push_str(&format!("{k} = {c}\n")),
                 MetricValue::Gauge(g) => out.push_str(&format!("{k} = {g}\n")),
                 MetricValue::Histogram { count, mean_ns, p50_ns, p99_ns, max_ns } => {
-                    out.push_str(&format!(
-                        "{k} = count={count} mean={mean_ns:.0}ns p50={p50_ns}ns p99={p99_ns}ns max={max_ns}ns\n"
-                    ));
+                    hists.push((k, count, mean_ns, p50_ns, p99_ns, max_ns));
                 }
             }
+        }
+        // snapshot() is a BTreeMap, so `hists` is already name-sorted;
+        // align the name and count columns so the eye can scan them.
+        let name_w = hists.iter().map(|(k, ..)| k.len()).max().unwrap_or(0);
+        let count_w =
+            hists.iter().map(|(_, c, ..)| c.to_string().len()).max().unwrap_or(0);
+        for (k, count, mean_ns, p50_ns, p99_ns, max_ns) in hists {
+            out.push_str(&format!(
+                "{k:<name_w$} = count={count:<count_w$} mean={} p50={} p99={} max={}\n",
+                fmt_ns(mean_ns.round() as u64),
+                fmt_ns(p50_ns),
+                fmt_ns(p99_ns),
+                fmt_ns(max_ns),
+            ));
         }
         out
     }
@@ -301,5 +545,92 @@ mod tests {
     fn global_registry_is_shared() {
         global().counter("test.global").inc();
         assert!(global().counter("test.global").get() >= 1);
+    }
+
+    #[test]
+    fn histogram_snapshot_round_trips_and_merges() {
+        use crate::ser::{from_bytes, to_bytes};
+        let a = Histogram::default();
+        let b = Histogram::default();
+        for i in 1..=100u64 {
+            a.record_ns(i * 1_000);
+            b.record_ns(i * 1_000_000);
+        }
+        let snap_b = b.snapshot();
+        let back: HistogramSnapshot = from_bytes(&to_bytes(&snap_b)).unwrap();
+        assert_eq!(back, snap_b);
+
+        // Histogram::merge(&snapshot): `a` absorbs `b`'s samples exactly.
+        a.merge(&snap_b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.max_ns(), b.max_ns());
+        let both = Histogram::default();
+        for i in 1..=100u64 {
+            both.record_ns(i * 1_000);
+            both.record_ns(i * 1_000_000);
+        }
+        assert_eq!(a.snapshot(), both.snapshot());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile_ns(q), both.quantile_ns(q));
+        }
+    }
+
+    #[test]
+    fn registry_snapshot_merge_sums_bit_exactly() {
+        use crate::ser::{from_bytes, to_bytes};
+        let r1 = MetricsRegistry::new();
+        let r2 = MetricsRegistry::new();
+        r1.counter("tasks").add(7);
+        r2.counter("tasks").add(5);
+        r2.counter("only.two").add(3);
+        r1.gauge("depth").set(2);
+        r2.gauge("depth").set(4);
+        r1.histogram("lat").record_ns(1_000);
+        r2.histogram("lat").record_ns(2_000_000);
+
+        let s1 = r1.wire_snapshot();
+        let s2 = r2.wire_snapshot();
+        let back: RegistrySnapshot = from_bytes(&to_bytes(&s1)).unwrap();
+        assert_eq!(back, s1);
+
+        let mut cluster = RegistrySnapshot::default();
+        cluster.merge(&s1);
+        cluster.merge(&s2);
+        assert_eq!(cluster.counter("tasks"), 12);
+        assert_eq!(cluster.counter("only.two"), 3);
+        assert_eq!(cluster.gauge("depth"), 6);
+        let lat = cluster.histogram("lat").unwrap();
+        assert_eq!(lat.count, 2);
+        assert_eq!(lat.sum_ns, 2_001_000);
+        assert_eq!(lat.max_ns, 2_000_000);
+
+        // merge_snapshot folds the cluster view back into a registry.
+        let view = MetricsRegistry::new();
+        view.merge_snapshot(&cluster);
+        assert_eq!(view.counter("tasks").get(), 12);
+        assert_eq!(view.histogram("lat").count(), 2);
+    }
+
+    #[test]
+    fn report_humanizes_and_raw_form_keeps_ns() {
+        let reg = MetricsRegistry::new();
+        reg.histogram("lat.long.name").record(Duration::from_millis(5));
+        reg.histogram("lat").record(Duration::from_micros(2));
+        reg.counter("n").inc();
+        let human = reg.report();
+        assert!(human.contains("n = 1"));
+        assert!(human.contains("count=1"));
+        assert!(human.contains("ms"), "expected humanized ms in: {human}");
+        // Names pad to the longest histogram so the columns align.
+        let eq_cols: Vec<usize> = human
+            .lines()
+            .filter(|l| l.contains("count="))
+            .map(|l| l.find(" = ").unwrap())
+            .collect();
+        assert_eq!(eq_cols.len(), 2);
+        assert_eq!(eq_cols[0], eq_cols[1], "histogram columns misaligned:\n{human}");
+        let raw = reg.report_raw();
+        assert!(raw.contains("count=1"));
+        assert!(raw.contains("max=5242880ns") || raw.contains("max=5000000ns"), "raw: {raw}");
     }
 }

@@ -509,6 +509,16 @@ impl ShuffleManager {
                 let disk = self.disk.as_ref().expect("spill path implies a disk tier");
                 metrics::global().counter("shuffle.spills").inc();
                 metrics::global().counter("shuffle.bytes.spilled").add(size as u64);
+                crate::trace::event(
+                    crate::trace::current(),
+                    "event.spill",
+                    &[
+                        ("shuffle", shuffle.to_string()),
+                        ("map", map_idx.to_string()),
+                        ("reduce", reduce_idx.to_string()),
+                        ("bytes", size.to_string()),
+                    ],
+                );
                 if let Err(e) = disk.put_bytes(&block_id(shuffle, map_idx, reduce_idx), &framed) {
                     // Spill I/O failure: keep the bucket in memory (over
                     // budget beats losing data; lineage would recompute,
@@ -594,6 +604,16 @@ impl ShuffleManager {
                 metrics::global().gauge("shuffle.mem.used").set(used as i64);
                 metrics::global().counter("shuffle.evictions").inc();
                 metrics::global().counter("shuffle.bytes.spilled").add(bytes.len() as u64);
+                crate::trace::event(
+                    crate::trace::current(),
+                    "event.evict",
+                    &[
+                        ("shuffle", key.0.to_string()),
+                        ("map", key.1.to_string()),
+                        ("reduce", key.2.to_string()),
+                        ("bytes", bytes.len().to_string()),
+                    ],
+                );
             }
             Outcome::Superseded => {
                 // A newer resident copy replaced this bucket mid-demotion:

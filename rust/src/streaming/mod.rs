@@ -54,6 +54,7 @@ use crate::metrics;
 use crate::rdd::{partition_for_key_bytes, AggSpec, OpSpec, PlanRdd, PlanSpec};
 use crate::scheduler::Engine;
 use crate::ser::{to_bytes, Value};
+use crate::trace;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -231,6 +232,10 @@ struct InFlight {
     window: Option<u64>,
     submitted: Instant,
     lineage_idx: usize,
+    /// The batch's root trace span (disabled/no-op when tracing is off);
+    /// the micro-batch job span nests under it, and it finishes when the
+    /// batch job completes.
+    span: trace::Span,
 }
 
 /// A running streaming query (see the module docs for the lifecycle).
@@ -299,9 +304,21 @@ impl StreamQuery {
         let lineage_idx = self.lineage.len() - 1;
         metrics::global().counter("streaming.batches.submitted").inc();
         let submitted = Instant::now();
+        // One root span per micro-batch; the plan job submitted below
+        // reads it off the thread-local and nests its job span under it.
+        let mut bspan = trace::root("batch");
+        bspan.label("batch", batch_id.to_string());
+        bspan.label("query", self.spec.name.clone());
+        if let Some(w) = window {
+            bspan.label("window", w.to_string());
+        }
+        bspan.label("rows_in", rows_in.to_string());
         match (&self.master, self.session) {
             (Some(master), Some(session)) if !master.live_workers().is_empty() => {
-                let job_id = master.submit_job(session, &plan)?;
+                let job_id = {
+                    let _cur = trace::with_current(bspan.ctx());
+                    master.submit_job(session, &plan)?
+                };
                 self.lineage[lineage_idx].job_id = Some(job_id);
                 self.inflight.push(InFlight {
                     batch_id,
@@ -310,6 +327,7 @@ impl StreamQuery {
                     window,
                     submitted,
                     lineage_idx,
+                    span: bspan,
                 });
                 self.max_inflight_observed =
                     self.max_inflight_observed.max(self.inflight.len());
@@ -322,7 +340,7 @@ impl StreamQuery {
                 // same stages, run synchronously on the local engine.
                 let rows = PlanRdd::new(plan, self.engine.clone(), None).collect_local()?;
                 let latency = submitted.elapsed();
-                self.complete_batch(batch_id, lineage_idx, stage_id, window, latency, rows)?;
+                self.complete_batch(batch_id, lineage_idx, stage_id, window, latency, rows, bspan)?;
             }
         }
         self.watermark = self.watermark.max(batch.event_time);
@@ -441,6 +459,16 @@ impl StreamQuery {
                 return Ok(());
             }
             metrics::global().counter("streaming.backpressure.stalls").inc();
+            // Nest the stall under the newest outstanding batch's span —
+            // the work whose completion admission is waiting on.
+            trace::event(
+                self.inflight.last().and_then(|b| b.span.ctx()),
+                "event.backpressure",
+                &[
+                    ("inflight", self.inflight.len().to_string()),
+                    ("cap", self.max_inflight.to_string()),
+                ],
+            );
             self.stalled_recently = true;
             if Instant::now() > deadline {
                 return Err(IgniteError::Timeout(format!(
@@ -487,12 +515,21 @@ impl StreamQuery {
         for (i, rows) in done.into_iter().rev() {
             let b = self.inflight.remove(i);
             let latency = b.submitted.elapsed();
-            self.complete_batch(b.batch_id, b.lineage_idx, b.stage_id, b.window, latency, rows)?;
+            self.complete_batch(
+                b.batch_id,
+                b.lineage_idx,
+                b.stage_id,
+                b.window,
+                latency,
+                rows,
+                b.span,
+            )?;
         }
         metrics::global().gauge("streaming.queue.depth").set(self.inflight.len() as i64);
         Ok(())
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn complete_batch(
         &mut self,
         batch_id: u64,
@@ -501,7 +538,18 @@ impl StreamQuery {
         window: Option<u64>,
         latency: Duration,
         rows: Vec<Value>,
+        mut span: trace::Span,
     ) -> Result<()> {
+        span.label("rows_out", rows.len().to_string());
+        span.finish();
+        // Hand the finished batch span (plus anything else sitting in
+        // this process's ring) straight to the master's trace store so
+        // `ingested_spans()` sees one "batch" span per completed batch.
+        if trace::enabled() {
+            if let Some(master) = &self.master {
+                master.ingest_spans(trace::global().drain());
+            }
+        }
         metrics::global().histogram("streaming.batch.latency").record(latency);
         metrics::global().counter("streaming.batches.completed").inc();
         self.completed += 1;

@@ -1,0 +1,812 @@
+//! Span-based distributed tracing.
+//!
+//! Every subsystem reports *metrics* into a process-local registry, but a
+//! distributed job's *story* — which stage ran when, which task a slow
+//! fetch belonged to, where a gang restart or speculation fired — needs
+//! causally linked records that cross process boundaries. This module
+//! provides them:
+//!
+//! * [`Tracer`] — a lock-cheap, ring-buffered recorder of [`SpanRec`]s
+//!   (id, parent, kind, labels, start/end nanos). One process-global
+//!   instance ([`global`]); when tracing is disabled the hot path is a
+//!   single relaxed atomic load and **no span record is allocated**.
+//! * [`TraceContext`] `{ trace_id, span_id }` — the propagation handle.
+//!   It rides inside the wire frames of `job.submit`, `task.run`,
+//!   `peer.prepare`/`peer.run`, `shuffle.fetch_multi`/`fetch_batch` and
+//!   `broadcast.fetch`, so worker-side task, fetch, fault, reissue,
+//!   speculation, gang-restart and backpressure records nest under the
+//!   driver's job span. Workers ship completed spans back piggy-backed
+//!   on `master.plan_result` / `master.peer_result`, and the master
+//!   sweeps stragglers with the `trace.flush` RPC at job end.
+//! * a **thread-local current context** ([`current`] / [`with_current`])
+//!   so deep call sites (the shuffle fetch client, the fault injector)
+//!   parent their records under the executing task without threading a
+//!   context argument through every layer.
+//! * [`JobProfile`] — the per-job assembly the master builds from the
+//!   ingested span tree plus job-scoped counter deltas, with a
+//!   human-readable timeline / critical-path renderer and a JSONL
+//!   export that benches and CI can diff.
+//!
+//! Sampling is decided once at the job root ([`Tracer::sample`], config
+//! `ignite.trace.sample.rate`): an unsampled job produces no root span,
+//! so no context propagates and workers record nothing for it.
+
+use crate::config::IgniteConf;
+use crate::error::Result;
+use crate::ser::{Decode, Encode, Reader};
+use once_cell::sync::Lazy;
+use std::cell::Cell;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Default ring capacity: enough for thousands of tasks' spans between
+/// two flush points without unbounded growth when nobody drains.
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+/// Nanoseconds since the unix epoch (span timestamps).
+pub fn now_ns() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------
+// Wire types
+// ---------------------------------------------------------------------
+
+/// The propagation handle stamped into RPC request frames: which trace
+/// this work belongs to and which span is its causal parent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceContext {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+impl Encode for TraceContext {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.trace_id.encode(buf);
+        self.span_id.encode(buf);
+    }
+}
+
+impl Decode for TraceContext {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(TraceContext { trace_id: u64::decode(r)?, span_id: u64::decode(r)? })
+    }
+}
+
+/// One completed span or instant event. `parent_id == 0` marks a root;
+/// an *event* is a record whose end equals its start.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRec {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent_id: u64,
+    pub kind: String,
+    pub labels: Vec<(String, String)>,
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    pub ok: bool,
+}
+
+impl SpanRec {
+    pub fn is_event(&self) -> bool {
+        self.t_end_ns == self.t_start_ns
+    }
+
+    pub fn duration_ns(&self) -> u64 {
+        self.t_end_ns.saturating_sub(self.t_start_ns)
+    }
+
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+impl Encode for SpanRec {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.trace_id.encode(buf);
+        self.span_id.encode(buf);
+        self.parent_id.encode(buf);
+        self.kind.encode(buf);
+        self.labels.encode(buf);
+        self.t_start_ns.encode(buf);
+        self.t_end_ns.encode(buf);
+        self.ok.encode(buf);
+    }
+}
+
+impl Decode for SpanRec {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(SpanRec {
+            trace_id: u64::decode(r)?,
+            span_id: u64::decode(r)?,
+            parent_id: u64::decode(r)?,
+            kind: String::decode(r)?,
+            labels: Vec::decode(r)?,
+            t_start_ns: u64::decode(r)?,
+            t_end_ns: u64::decode(r)?,
+            ok: bool::decode(r)?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tracer
+// ---------------------------------------------------------------------
+
+/// Lock-cheap span recorder: a relaxed-atomic enabled gate in front of a
+/// single mutex-guarded ring of finished records. Span *construction*
+/// never touches the lock — only `finish` (and `event`) do, once per
+/// record.
+pub struct Tracer {
+    enabled: AtomicBool,
+    sample_bits: AtomicU64,
+    rng: AtomicU64,
+    cap: usize,
+    ring: Mutex<VecDeque<SpanRec>>,
+    dropped: AtomicU64,
+}
+
+impl Tracer {
+    pub fn new(cap: usize) -> Self {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            sample_bits: AtomicU64::new(1.0f64.to_bits()),
+            rng: AtomicU64::new(now_ns() | 1),
+            cap: cap.max(1),
+            ring: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// The zero-cost-off gate: one relaxed load.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn sample_rate(&self) -> f64 {
+        f64::from_bits(self.sample_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn set_sample_rate(&self, rate: f64) {
+        self.sample_bits.store(rate.clamp(0.0, 1.0).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Read `ignite.trace.enabled` / `ignite.trace.sample.rate`.
+    pub fn configure(&self, conf: &IgniteConf) {
+        if let Ok(rate) = conf.get_f64("ignite.trace.sample.rate") {
+            self.set_sample_rate(rate);
+        }
+        self.set_enabled(conf.get_bool("ignite.trace.enabled").unwrap_or(false));
+    }
+
+    fn next_rand(&self) -> u64 {
+        let stepped = self
+            .rng
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |x| {
+                let mut y = x ^ (x << 13);
+                y ^= y >> 7;
+                y ^= y << 17;
+                Some(if y == 0 { 0x9E37_79B9_7F4A_7C15 } else { y })
+            })
+            .unwrap_or(0x9E37_79B9_7F4A_7C15);
+        // Return the *stepped* value, non-zero (0 is the no-parent id).
+        let mut y = stepped ^ (stepped << 13);
+        y ^= y >> 7;
+        y ^= y << 17;
+        y | 1
+    }
+
+    /// The head-of-trace sampling decision (`ignite.trace.sample.rate`).
+    pub fn sample(&self) -> bool {
+        if !self.is_enabled() {
+            return false;
+        }
+        let rate = self.sample_rate();
+        if rate >= 1.0 {
+            return true;
+        }
+        if rate <= 0.0 {
+            return false;
+        }
+        (self.next_rand() >> 11) as f64 / (1u64 << 53) as f64 <= rate
+    }
+
+    pub(crate) fn push(&self, rec: SpanRec) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= self.cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(rec);
+    }
+
+    /// Remove and return every buffered record (the flush path).
+    pub fn drain(&self) -> Vec<SpanRec> {
+        self.ring.lock().unwrap().drain(..).collect()
+    }
+
+    /// Copy the buffered records without consuming them.
+    pub fn snapshot(&self) -> Vec<SpanRec> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    pub fn clear(&self) {
+        self.ring.lock().unwrap().clear();
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// Records evicted because nobody drained the ring in time.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+static GLOBAL: Lazy<Tracer> = Lazy::new(|| Tracer::new(DEFAULT_RING_CAP));
+
+/// The process-global tracer every subsystem records into.
+pub fn global() -> &'static Tracer {
+    &GLOBAL
+}
+
+/// Shorthand for `global().is_enabled()`.
+#[inline]
+pub fn enabled() -> bool {
+    GLOBAL.is_enabled()
+}
+
+/// Apply `ignite.trace.*` config to the global tracer.
+pub fn configure(conf: &IgniteConf) {
+    GLOBAL.configure(conf);
+}
+
+// ---------------------------------------------------------------------
+// Span handles + thread-local current context
+// ---------------------------------------------------------------------
+
+/// An in-flight span. `None` inside means tracing was off (or the trace
+/// unsampled) at creation — every method is then a no-op and nothing
+/// was allocated beyond this option.
+#[must_use = "finish() records the span; dropping it unfinished loses it"]
+pub struct Span {
+    rec: Option<SpanRec>,
+}
+
+impl Span {
+    /// The disabled span: no allocation, no recording.
+    pub fn none() -> Span {
+        Span { rec: None }
+    }
+
+    pub fn is_recording(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// The context children should propagate (None when not recording).
+    pub fn ctx(&self) -> Option<TraceContext> {
+        self.rec.as_ref().map(|r| TraceContext { trace_id: r.trace_id, span_id: r.span_id })
+    }
+
+    pub fn label(&mut self, key: &str, value: impl Into<String>) {
+        if let Some(rec) = self.rec.as_mut() {
+            rec.labels.push((key.to_string(), value.into()));
+        }
+    }
+
+    /// Mark the span failed (records an `error` label).
+    pub fn fail(&mut self, err: &str) {
+        if let Some(rec) = self.rec.as_mut() {
+            rec.ok = false;
+            rec.labels.push(("error".to_string(), err.to_string()));
+        }
+    }
+
+    /// Stamp the end time and push the record into the global ring.
+    pub fn finish(self) {
+        if let Some(mut rec) = self.rec {
+            rec.t_end_ns = now_ns().max(rec.t_start_ns + 1);
+            GLOBAL.push(rec);
+        }
+    }
+}
+
+fn make_span(kind: &str, trace_id: u64, parent_id: u64, t_start_ns: u64) -> Span {
+    Span {
+        rec: Some(SpanRec {
+            trace_id,
+            span_id: GLOBAL.next_rand(),
+            parent_id,
+            kind: kind.to_string(),
+            labels: Vec::new(),
+            t_start_ns,
+            t_end_ns: 0,
+            ok: true,
+        }),
+    }
+}
+
+/// Start a root span (fresh trace id), subject to the sampling decision.
+pub fn root(kind: &str) -> Span {
+    if !GLOBAL.sample() {
+        return Span::none();
+    }
+    make_span(kind, GLOBAL.next_rand(), 0, now_ns())
+}
+
+/// Start a child span under `parent`. With `parent == None` nothing is
+/// recorded: an unsampled or untraced request propagates no context, so
+/// its downstream work stays dark.
+pub fn span(kind: &str, parent: Option<TraceContext>) -> Span {
+    match parent {
+        Some(ctx) if GLOBAL.is_enabled() => make_span(kind, ctx.trace_id, ctx.span_id, now_ns()),
+        _ => Span::none(),
+    }
+}
+
+/// Like [`span`] but with an explicit start time (for spans whose work
+/// began before the handle could be created, e.g. streaming batches).
+pub fn span_at(kind: &str, parent: Option<TraceContext>, t_start_ns: u64) -> Span {
+    match parent {
+        Some(ctx) if GLOBAL.is_enabled() => make_span(kind, ctx.trace_id, ctx.span_id, t_start_ns),
+        _ => Span::none(),
+    }
+}
+
+/// Root span with an explicit start time, subject to sampling.
+pub fn root_at(kind: &str, t_start_ns: u64) -> Span {
+    if !GLOBAL.sample() {
+        return Span::none();
+    }
+    make_span(kind, GLOBAL.next_rand(), 0, t_start_ns)
+}
+
+/// Record an instant event under `parent` (no-op when `parent` is None
+/// or tracing is off — events never start their own trace).
+pub fn event(parent: Option<TraceContext>, kind: &str, labels: &[(&str, String)]) {
+    let Some(ctx) = parent else { return };
+    if !GLOBAL.is_enabled() {
+        return;
+    }
+    let t = now_ns();
+    GLOBAL.push(SpanRec {
+        trace_id: ctx.trace_id,
+        span_id: GLOBAL.next_rand(),
+        parent_id: ctx.span_id,
+        kind: kind.to_string(),
+        labels: labels.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        t_start_ns: t,
+        t_end_ns: t,
+        ok: true,
+    });
+}
+
+thread_local! {
+    static CURRENT: Cell<Option<TraceContext>> = const { Cell::new(None) };
+}
+
+/// The context of the span executing on this thread, if any.
+pub fn current() -> Option<TraceContext> {
+    CURRENT.with(|c| c.get())
+}
+
+/// Scope guard that installs `ctx` as this thread's current context and
+/// restores the previous one on drop.
+pub struct CurrentGuard {
+    prev: Option<TraceContext>,
+}
+
+pub fn with_current(ctx: Option<TraceContext>) -> CurrentGuard {
+    let prev = CURRENT.with(|c| c.replace(ctx));
+    CurrentGuard { prev }
+}
+
+impl Drop for CurrentGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT.with(|c| c.set(prev));
+    }
+}
+
+// ---------------------------------------------------------------------
+// JobProfile: span tree + metric deltas, rendered
+// ---------------------------------------------------------------------
+
+/// The master's per-job assembly: the ingested span tree for the job's
+/// trace plus the job-scoped counter deltas observed while it ran.
+#[derive(Debug, Clone)]
+pub struct JobProfile {
+    pub job_id: u64,
+    pub trace_id: u64,
+    /// Sorted by (t_start_ns, span_id).
+    pub spans: Vec<SpanRec>,
+    /// Counter name → increase over the job's lifetime.
+    pub counter_deltas: Vec<(String, u64)>,
+}
+
+impl JobProfile {
+    pub fn new(
+        job_id: u64,
+        trace_id: u64,
+        mut spans: Vec<SpanRec>,
+        counter_deltas: Vec<(String, u64)>,
+    ) -> Self {
+        spans.sort_by_key(|s| (s.t_start_ns, s.span_id));
+        JobProfile { job_id, trace_id, spans, counter_deltas }
+    }
+
+    /// The job root (first root-parented span, preferring kind `job`).
+    pub fn root(&self) -> Option<&SpanRec> {
+        self.spans
+            .iter()
+            .find(|s| s.parent_id == 0 && s.kind == "job")
+            .or_else(|| self.spans.iter().find(|s| s.parent_id == 0))
+    }
+
+    pub fn spans_of_kind(&self, kind: &str) -> Vec<&SpanRec> {
+        self.spans.iter().filter(|s| s.kind == kind).collect()
+    }
+
+    /// Direct children of `span_id`, in start order.
+    pub fn children(&self, span_id: u64) -> Vec<&SpanRec> {
+        self.spans.iter().filter(|s| s.parent_id == span_id).collect()
+    }
+
+    fn known_ids(&self) -> HashMap<u64, ()> {
+        self.spans.iter().map(|s| (s.span_id, ())).collect()
+    }
+
+    /// The chain of non-event spans from the root to the latest-ending
+    /// leaf — where the job's wall-clock actually went.
+    pub fn critical_path(&self) -> Vec<&SpanRec> {
+        let mut path = Vec::new();
+        let Some(mut cur) = self.root() else { return path };
+        path.push(cur);
+        loop {
+            let next = self
+                .children(cur.span_id)
+                .into_iter()
+                .filter(|c| !c.is_event())
+                .max_by_key(|c| (c.t_end_ns, c.span_id));
+            match next {
+                Some(c) => {
+                    path.push(c);
+                    cur = c;
+                }
+                None => return path,
+            }
+        }
+    }
+
+    fn fmt_labels(span: &SpanRec) -> String {
+        span.labels.iter().map(|(k, v)| format!(" {k}={v}")).collect()
+    }
+
+    fn render_node(&self, out: &mut String, span: &SpanRec, base_ns: u64, depth: usize) {
+        let indent = "  ".repeat(depth + 1);
+        let offset = crate::util::fmt_duration(std::time::Duration::from_nanos(
+            span.t_start_ns.saturating_sub(base_ns),
+        ));
+        if span.is_event() {
+            out.push_str(&format!(
+                "{indent}* {kind}{labels} [+{offset}]\n",
+                kind = span.kind,
+                labels = Self::fmt_labels(span)
+            ));
+        } else {
+            let dur =
+                crate::util::fmt_duration(std::time::Duration::from_nanos(span.duration_ns()));
+            let status = if span.ok { "" } else { " FAILED" };
+            out.push_str(&format!(
+                "{indent}{kind} ({dur}){status}{labels} [+{offset}]\n",
+                kind = span.kind,
+                labels = Self::fmt_labels(span)
+            ));
+        }
+        for child in self.children(span.span_id) {
+            self.render_node(out, child, base_ns, depth + 1);
+        }
+    }
+
+    /// Human-readable timeline: the span tree indented by causality with
+    /// offsets relative to the root, then the critical path, then the
+    /// job-scoped counter deltas.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let base_ns = self.root().map(|r| r.t_start_ns).unwrap_or(0);
+        let wall = self
+            .root()
+            .map(|r| crate::util::fmt_duration(std::time::Duration::from_nanos(r.duration_ns())))
+            .unwrap_or_else(|| "?".to_string());
+        out.push_str(&format!(
+            "job profile — job {} trace {:#x}: {} spans, wall {}\n",
+            self.job_id,
+            self.trace_id,
+            self.spans.len(),
+            wall
+        ));
+        // Roots: true roots plus orphans whose parent never arrived.
+        let known = self.known_ids();
+        let roots: Vec<&SpanRec> = self
+            .spans
+            .iter()
+            .filter(|s| s.parent_id == 0 || !known.contains_key(&s.parent_id))
+            .collect();
+        for root in roots {
+            self.render_node(&mut out, root, base_ns, 0);
+        }
+        let path = self.critical_path();
+        if !path.is_empty() {
+            let names: Vec<String> = path
+                .iter()
+                .map(|s| {
+                    let tag = s
+                        .label("task")
+                        .or_else(|| s.label("stage"))
+                        .or_else(|| s.label("rank"))
+                        .or_else(|| s.label("job"))
+                        .map(|v| format!("[{v}]"))
+                        .unwrap_or_default();
+                    format!("{}{}", s.kind, tag)
+                })
+                .collect();
+            out.push_str(&format!("  critical path: {}\n", names.join(" -> ")));
+        }
+        if !self.counter_deltas.is_empty() {
+            out.push_str("  counters (job delta):\n");
+            let width =
+                self.counter_deltas.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+            for (k, v) in &self.counter_deltas {
+                out.push_str(&format!("    {k:<width$} +{v}\n"));
+            }
+        }
+        out
+    }
+
+    /// One JSON object per span, then one `counters` line — a stable
+    /// machine-readable export benches and CI can diff.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for s in &self.spans {
+            let labels: Vec<String> = s
+                .labels
+                .iter()
+                .map(|(k, v)| format!("\"{}\":\"{}\"", json_escape(k), json_escape(v)))
+                .collect();
+            out.push_str(&format!(
+                "{{\"job\":{},\"trace\":{},\"span\":{},\"parent\":{},\"kind\":\"{}\",\"t_start_ns\":{},\"t_end_ns\":{},\"ok\":{},\"labels\":{{{}}}}}\n",
+                self.job_id,
+                s.trace_id,
+                s.span_id,
+                s.parent_id,
+                json_escape(&s.kind),
+                s.t_start_ns,
+                s.t_end_ns,
+                s.ok,
+                labels.join(",")
+            ));
+        }
+        let counters: Vec<String> = self
+            .counter_deltas
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{}", json_escape(k), v))
+            .collect();
+        out.push_str(&format!(
+            "{{\"job\":{},\"trace\":{},\"kind\":\"counters\",\"deltas\":{{{}}}}}\n",
+            self.job_id,
+            self.trace_id,
+            counters.join(",")
+        ));
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::{from_bytes, to_bytes};
+
+    // The tracer is process-global; serialize the tests that toggle it.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn reset(enabled: bool, rate: f64) -> std::sync::MutexGuard<'static, ()> {
+        let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        global().set_enabled(enabled);
+        global().set_sample_rate(rate);
+        global().clear();
+        guard
+    }
+
+    #[test]
+    fn disabled_records_nothing_and_allocates_no_span() {
+        let _g = reset(false, 1.0);
+        let mut s = root("job");
+        assert!(!s.is_recording());
+        assert!(s.ctx().is_none());
+        s.label("k", "v");
+        s.finish();
+        event(Some(TraceContext { trace_id: 1, span_id: 1 }), "event.x", &[]);
+        assert_eq!(global().buffered(), 0);
+    }
+
+    #[test]
+    fn span_tree_nests_and_round_trips() {
+        let _g = reset(true, 1.0);
+        let mut job = root("job");
+        job.label("job", "7");
+        let job_ctx = job.ctx().unwrap();
+        let stage = span("stage", job.ctx());
+        let task = span("task", stage.ctx());
+        let task_ctx = task.ctx().unwrap();
+        assert_eq!(task_ctx.trace_id, job_ctx.trace_id);
+        task.finish();
+        stage.finish();
+        job.finish();
+        let recs = global().drain();
+        assert_eq!(recs.len(), 3);
+        for rec in &recs {
+            let bytes = to_bytes(rec);
+            let back: SpanRec = from_bytes(&bytes).unwrap();
+            assert_eq!(&back, rec);
+        }
+        let job_rec = recs.iter().find(|r| r.kind == "job").unwrap();
+        let stage_rec = recs.iter().find(|r| r.kind == "stage").unwrap();
+        let task_rec = recs.iter().find(|r| r.kind == "task").unwrap();
+        assert_eq!(job_rec.parent_id, 0);
+        assert_eq!(stage_rec.parent_id, job_rec.span_id);
+        assert_eq!(task_rec.parent_id, stage_rec.span_id);
+        assert_eq!(job_rec.label("job"), Some("7"));
+    }
+
+    #[test]
+    fn sample_rate_zero_suppresses_roots() {
+        let _g = reset(true, 0.0);
+        let s = root("job");
+        assert!(!s.is_recording());
+        s.finish();
+        assert_eq!(global().buffered(), 0);
+    }
+
+    #[test]
+    fn ring_caps_and_counts_drops() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let t = Tracer::new(4);
+        t.set_enabled(true);
+        for i in 0..10u64 {
+            t.push(SpanRec {
+                trace_id: 1,
+                span_id: i + 1,
+                parent_id: 0,
+                kind: "x".into(),
+                labels: vec![],
+                t_start_ns: i,
+                t_end_ns: i,
+                ok: true,
+            });
+        }
+        assert_eq!(t.buffered(), 4);
+        assert_eq!(t.dropped(), 6);
+        let recs = t.drain();
+        assert_eq!(recs[0].span_id, 7);
+        assert_eq!(t.buffered(), 0);
+    }
+
+    #[test]
+    fn current_context_guards_nest_and_restore() {
+        let _g = reset(true, 1.0);
+        assert!(current().is_none());
+        let outer = TraceContext { trace_id: 1, span_id: 2 };
+        let inner = TraceContext { trace_id: 1, span_id: 3 };
+        {
+            let _a = with_current(Some(outer));
+            assert_eq!(current(), Some(outer));
+            {
+                let _b = with_current(Some(inner));
+                assert_eq!(current(), Some(inner));
+            }
+            assert_eq!(current(), Some(outer));
+        }
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn trace_context_round_trips() {
+        let ctx = TraceContext { trace_id: u64::MAX, span_id: 12345 };
+        let back: TraceContext = from_bytes(&to_bytes(&ctx)).unwrap();
+        assert_eq!(back, ctx);
+    }
+
+    fn rec(
+        span_id: u64,
+        parent_id: u64,
+        kind: &str,
+        t0: u64,
+        t1: u64,
+        labels: &[(&str, &str)],
+    ) -> SpanRec {
+        SpanRec {
+            trace_id: 9,
+            span_id,
+            parent_id,
+            kind: kind.into(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            t_start_ns: t0,
+            t_end_ns: t1,
+            ok: true,
+        }
+    }
+
+    fn sample_profile() -> JobProfile {
+        JobProfile::new(
+            7,
+            9,
+            vec![
+                rec(1, 0, "job", 0, 10_000_000, &[("job", "7")]),
+                rec(2, 1, "stage", 1_000_000, 9_000_000, &[("stage", "3")]),
+                rec(3, 2, "task", 1_500_000, 4_000_000, &[("task", "0")]),
+                rec(4, 2, "task", 1_500_000, 8_000_000, &[("task", "1")]),
+                rec(5, 4, "fetch", 2_000_000, 3_000_000, &[]),
+                rec(6, 2, "event.reissue", 5_000_000, 5_000_000, &[("task", "0")]),
+            ],
+            vec![("cluster.tasks.executed".into(), 2)],
+        )
+    }
+
+    #[test]
+    fn profile_renders_tree_and_critical_path() {
+        let p = sample_profile();
+        assert_eq!(p.root().unwrap().span_id, 1);
+        let path: Vec<u64> = p.critical_path().iter().map(|s| s.span_id).collect();
+        // job -> stage -> slowest task (1) -> its fetch.
+        assert_eq!(path, vec![1, 2, 4, 5]);
+        let text = p.render();
+        assert!(text.contains("job profile — job 7"));
+        assert!(text.contains("* event.reissue"));
+        assert!(text.contains("critical path: job[7] -> stage[3] -> task[1] -> fetch"));
+        assert!(text.contains("cluster.tasks.executed"));
+    }
+
+    #[test]
+    fn profile_jsonl_has_one_line_per_span_plus_counters() {
+        let p = sample_profile();
+        let jsonl = p.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), p.spans.len() + 1);
+        assert!(lines[0].starts_with("{\"job\":7,"));
+        assert!(lines.last().unwrap().contains("\"kind\":\"counters\""));
+        assert!(lines.last().unwrap().contains("\"cluster.tasks.executed\":2"));
+    }
+
+    #[test]
+    fn json_escaping_handles_quotes_and_control() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

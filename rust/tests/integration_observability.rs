@@ -1,0 +1,312 @@
+//! Observability integration: with tracing on, a 2-worker plan job
+//! yields a complete span tree (job → stage → task, fetch spans nested
+//! under their tasks, 100% task coverage against the executed counter);
+//! the master's cluster-wide metrics merge is bit-exactly the fold of
+//! the per-worker snapshots it pulled; a streaming query records one
+//! batch span per micro-batch with its plan job nested underneath; a
+//! worker killed mid-job leaves `event.reissue` records in the job
+//! profile; and with tracing off the task hot path allocates no span
+//! records at all.
+
+use mpignite::closure::register_op;
+use mpignite::cluster::Worker;
+use mpignite::config::IgniteConf;
+use mpignite::metrics::RegistrySnapshot;
+use mpignite::prelude::*;
+use mpignite::trace;
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Heartbeat-timing-sensitive clusters; serialized like the other
+/// cluster suites so concurrent test threads don't turn timing
+/// assumptions into flakes (and so the process-global tracer ring is
+/// only ever fed by one scenario at a time).
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Tracing is set EXPLICITLY both ways: the CI traced matrix lane
+/// exports `MPIGNITE_TRACE_ENABLED=true` (applied at `IgniteConf::new`),
+/// and explicit sets win over the env overlay — so the off-path
+/// scenario stays off even in that lane.
+fn conf(traced: bool) -> IgniteConf {
+    let mut c = IgniteConf::new();
+    c.set("ignite.worker.heartbeat.ms", "50");
+    c.set("ignite.worker.timeout.ms", "2000");
+    c.set("ignite.worker.slots", "2");
+    c.set("ignite.trace.enabled", if traced { "true" } else { "false" });
+    c.set("ignite.trace.sample.rate", "1.0");
+    c
+}
+
+fn register_ops() {
+    // Str line -> List of List([Str(word), I64(1)]) pairs.
+    register_op("obs.word_pairs", |v| match v {
+        Value::Str(s) => Ok(Value::List(
+            s.split_whitespace()
+                .map(|w| Value::List(vec![Value::Str(w.to_string()), Value::I64(1)]))
+                .collect(),
+        )),
+        other => Err(IgniteError::Invalid(format!(
+            "word_pairs wants str, got {}",
+            other.type_name()
+        ))),
+    });
+    // Slow enough that a mid-job worker kill strands in-flight tasks.
+    register_op("obs.nap400_inc", |v| match v {
+        Value::I64(n) => {
+            std::thread::sleep(Duration::from_millis(400));
+            Ok(Value::I64(n + 1))
+        }
+        other => Err(IgniteError::Invalid(format!("nap wants i64, got {}", other.type_name()))),
+    });
+}
+
+fn counter(name: &str) -> u64 {
+    mpignite::metrics::global().counter(name).get()
+}
+
+fn values(range: std::ops::Range<i64>) -> Vec<Value> {
+    range.map(Value::I64).collect()
+}
+
+/// `n` (word, 1) pairs over `distinct` distinct words.
+fn wordcount_rows(n: usize, distinct: usize) -> Vec<Value> {
+    (0..n)
+        .map(|i| Value::List(vec![Value::Str(format!("word{}", i % distinct)), Value::I64(1)]))
+        .collect()
+}
+
+#[test]
+fn traced_plan_job_produces_complete_span_tree() {
+    let _serial = lock();
+    let mut c = conf(true);
+    let export_dir = std::env::temp_dir().join(format!("mpignite-obs-{}", std::process::id()));
+    c.set("ignite.trace.dir", export_dir.to_str().unwrap());
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let _workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&c, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    trace::global().clear();
+    let executed0 = counter("cluster.tasks.executed");
+
+    let counts = sc
+        .parallelize_values_with(wordcount_rows(1200, 300), 4)
+        .reduce_by_key(4, AggSpec::SumI64)
+        .collect()
+        .unwrap();
+    assert_eq!(counts.len(), 300, "word count must stay correct with tracing on");
+    let executed = counter("cluster.tasks.executed") - executed0;
+    assert!(executed >= 8, "4 map + 4 reduce tasks executed");
+
+    let jobs = master.traced_jobs();
+    assert_eq!(jobs.len(), 1, "exactly one traced job");
+    let profile = master.job_profile(jobs[0]).unwrap();
+
+    // Root: the driver's job span.
+    let root = profile.root().expect("job root span");
+    assert_eq!(root.kind, "job");
+    assert_eq!(root.parent_id, 0);
+
+    // Stages: the reduce_by_key map stage and the result stage, both
+    // directly under the job root.
+    let stages = profile.spans_of_kind("stage");
+    assert_eq!(stages.len(), 2, "shuffle stage + result stage");
+    for s in &stages {
+        assert_eq!(s.parent_id, root.span_id, "stage spans parent under the job root");
+    }
+    assert!(stages.iter().any(|s| s.label("kind") == Some("shuffle")));
+    assert!(stages.iter().any(|s| s.label("kind") == Some("result")));
+    let stage_ids: HashSet<u64> = stages.iter().map(|s| s.span_id).collect();
+
+    // 100% task coverage: every executed task recorded exactly one span,
+    // each nested under its stage.
+    let tasks = profile.spans_of_kind("task");
+    assert_eq!(tasks.len() as u64, executed, "one span per executed task");
+    for t in &tasks {
+        assert!(stage_ids.contains(&t.parent_id), "task spans parent under a stage span");
+        assert!(t.ok, "no task failed");
+        assert!(t.label("task").is_some());
+    }
+    let task_ids: HashSet<u64> = tasks.iter().map(|s| s.span_id).collect();
+
+    // Remote shuffle reads: fetch spans nest under the reading task, or
+    // under the stage span for the batch prefetch issued on the whole
+    // assignment's behalf before any task runs.
+    let fetches = profile.spans_of_kind("fetch");
+    assert!(!fetches.is_empty(), "a 2-worker shuffle must fetch remotely");
+    for f in &fetches {
+        assert!(
+            task_ids.contains(&f.parent_id) || stage_ids.contains(&f.parent_id),
+            "fetch spans parent under their task or stage"
+        );
+    }
+
+    // Renderer, counter deltas, and the JSONL export on disk.
+    let text = profile.render();
+    assert!(text.contains("job profile — job"));
+    assert!(text.contains("critical path: job"));
+    assert!(
+        profile.counter_deltas.iter().any(|(k, v)| k == "cluster.tasks.executed" && *v > 0),
+        "job-scoped counter deltas recorded"
+    );
+    let exported =
+        std::fs::read_to_string(export_dir.join(format!("job-{}.jsonl", jobs[0]))).unwrap();
+    assert_eq!(
+        exported.lines().count(),
+        profile.spans.len() + 1,
+        "JSONL export: one line per span plus the counters line"
+    );
+    let _ = std::fs::remove_dir_all(&export_dir);
+    master.shutdown();
+}
+
+#[test]
+fn cluster_metrics_merge_is_bit_exact_fold_of_worker_pulls() {
+    let _serial = lock();
+    let c = conf(false);
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let _workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&c, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    let counts = sc
+        .parallelize_values_with(wordcount_rows(800, 200), 4)
+        .reduce_by_key(2, AggSpec::SumI64)
+        .collect()
+        .unwrap();
+    assert_eq!(counts.len(), 200);
+
+    let (merged, parts) = master.cluster_metrics_detailed();
+    assert_eq!(parts.len(), 2, "one snapshot per live worker");
+    // The merged view must be EXACTLY the fold of the per-worker
+    // snapshots it was built from: counters and gauges sum by name,
+    // histograms merge bucket-by-bucket — bit-exact, no loss.
+    let mut expected = RegistrySnapshot::default();
+    for (_, snap) in &parts {
+        expected.merge(snap);
+    }
+    assert_eq!(merged, expected, "merge must equal the fold of its parts");
+    assert!(merged.counter("cluster.tasks.executed") > 0, "pulled counters are non-trivial");
+    assert!(
+        merged.histograms.iter().any(|(_, h)| h.count > 0),
+        "latency histograms carry across the merge"
+    );
+    master.shutdown();
+}
+
+#[test]
+fn streaming_batches_each_record_a_batch_span() {
+    let _serial = lock();
+    register_ops();
+    let c = conf(true);
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let _workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&c, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    trace::global().clear();
+    const BATCHES: u64 = 5;
+    let source = MemoryStreamSource::new();
+    for t in 0..BATCHES {
+        source.push(vec![vec![Value::Str(format!("alpha beta b{t}"))]], t);
+    }
+    source.close();
+    let spec = QuerySpec::reduce(
+        "obs-wc",
+        vec![OpSpec::FlatMapNamed { name: "obs.word_pairs".into() }],
+        AggSpec::SumI64,
+        2,
+    );
+    let mut query = sc.streaming().query(Box::new(source), spec).unwrap();
+    query.run(Duration::from_secs(60)).unwrap();
+    assert_eq!(query.batches_completed(), BATCHES);
+
+    let spans = master.ingested_spans();
+    let batches: Vec<&trace::SpanRec> = spans.iter().filter(|s| s.kind == "batch").collect();
+    assert_eq!(batches.len() as u64, BATCHES, "one span per micro-batch");
+    for b in &batches {
+        assert_eq!(b.parent_id, 0, "batch spans are trace roots");
+        assert!(b.label("rows_in").is_some() && b.label("rows_out").is_some());
+        assert!(
+            spans.iter().any(|s| s.kind == "job" && s.parent_id == b.span_id),
+            "each batch's plan job nests under its batch span"
+        );
+    }
+    master.shutdown();
+}
+
+#[test]
+fn killed_worker_reissues_surface_in_the_job_profile() {
+    let _serial = lock();
+    register_ops();
+    let mut c = conf(true);
+    // Fast loss detection so the re-issue happens promptly.
+    c.set("ignite.worker.timeout.ms", "600");
+    c.set("ignite.worker.slots", "4");
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&c, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    trace::global().clear();
+    let reissued0 = counter("plan.tasks.reissued");
+
+    let plan = sc.parallelize_values_with(values(0..8), 8).map_named("obs.nap400_inc");
+    let session = master.new_session();
+    let job = master.submit_job(session, plan.plan()).unwrap();
+    std::thread::sleep(Duration::from_millis(120));
+    workers[1].kill();
+
+    let got = master.wait_job(job, Duration::from_secs(30)).unwrap();
+    assert_eq!(got, values(1..9), "result correct despite the mid-job kill");
+    let reissued = counter("plan.tasks.reissued") - reissued0;
+    assert!(reissued > 0, "the dead worker's in-flight tasks must be re-issued");
+
+    // The recovery story is in the profile: one instant `event.reissue`
+    // per re-issued task, parented under a span of this job's trace.
+    let profile = master.job_profile(job).unwrap();
+    let events = profile.spans_of_kind("event.reissue");
+    assert_eq!(events.len() as u64, reissued, "one trace event per re-issued task");
+    let ids: HashSet<u64> = profile.spans.iter().map(|s| s.span_id).collect();
+    for e in &events {
+        assert!(e.is_event(), "reissue records are instant events");
+        assert!(ids.contains(&e.parent_id), "reissue events parent under their stage span");
+        assert!(e.label("task").is_some() && e.label("worker").is_some());
+    }
+    assert!(profile.render().contains("* event.reissue"));
+    master.shutdown();
+}
+
+#[test]
+fn tracing_off_allocates_no_span_records_on_the_task_path() {
+    let _serial = lock();
+    let c = conf(false);
+    let sc = IgniteContext::cluster_driver(c.clone(), 0).unwrap();
+    let master = sc.master().unwrap().clone();
+    let _workers: Vec<Arc<Worker>> =
+        (0..2).map(|_| Worker::start(&c, master.address()).unwrap()).collect();
+    master.wait_for_workers(2, Duration::from_secs(5)).unwrap();
+
+    trace::global().clear();
+    let counts = sc
+        .parallelize_values_with(wordcount_rows(400, 100), 4)
+        .reduce_by_key(2, AggSpec::SumI64)
+        .collect()
+        .unwrap();
+    assert_eq!(counts.len(), 100);
+
+    assert_eq!(trace::global().buffered(), 0, "no span records with tracing off");
+    assert_eq!(trace::global().dropped(), 0);
+    assert!(master.traced_jobs().is_empty(), "no profile collected for an untraced job");
+    assert!(master.ingested_spans().is_empty());
+    master.shutdown();
+}
