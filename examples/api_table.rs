@@ -227,6 +227,22 @@ fn main() -> Result<()> {
     println!("\nObservability — ignite.trace.* and ignite.metrics.* configuration:\n");
     print!("{}", ot.render());
 
+    // The fault-tolerance plane: asynchronous checkpoint-restart for
+    // peer gangs (`ignite.checkpoint.*`) and driver-session recovery
+    // (`ignite.session.*`) — straight from KNOWN_KEYS so the table
+    // can't drift.
+    let mut ft = Table::new(vec!["key", "default", "meaning"]);
+    for (key, default, meaning) in mpignite::config::KNOWN_KEYS.iter().filter(|(key, _, _)| {
+        key.starts_with("ignite.checkpoint.") || key.starts_with("ignite.session.")
+    }) {
+        ft.row(vec![*key, *default, *meaning]);
+    }
+    assert!(!ft.is_empty(), "checkpoint/session config keys must exist");
+    println!(
+        "\nFault tolerance — ignite.checkpoint.* and ignite.session.* configuration:\n"
+    );
+    print!("{}", ft.render());
+
     println!("\napi_table OK ({} methods verified)", rows.len());
     Ok(())
 }

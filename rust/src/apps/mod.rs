@@ -295,6 +295,15 @@ pub fn kmeans_iteration(
 /// ([`kmeans_init`]), run `iters` synchronized iterations — each one an
 /// in-stage all-reduce, no shuffle, no driver round-trip — and return
 /// the final centroids as rows (identical on every rank).
+///
+/// Checkpoint-restart: with `ignite.checkpoint.interval.iters` > 0 each
+/// rank asynchronously snapshots the agreed centroids after its due
+/// iterations, and a restarted gang resumes from the last *complete*
+/// epoch instead of iteration 0. The centroids are identical on every
+/// rank after each iteration (rank-ordered reduction), so restoring any
+/// complete epoch reproduces exactly the fault-free trajectory — results
+/// stay bit-identical. Checkpoint-off runs take the `None` restore path
+/// and are byte-for-byte the old behavior.
 pub fn kmeans_peer_step(
     comm: &SparkComm,
     rows: Vec<Value>,
@@ -302,9 +311,24 @@ pub fn kmeans_peer_step(
     iters: usize,
 ) -> Result<Vec<Value>> {
     let points = peer_points(&rows)?;
-    let mut centroids = kmeans_init(comm, &points, k)?;
-    for _ in 0..iters {
+    let ckpt = comm.checkpoint();
+    let (mut centroids, start) = match comm.checkpoint_restore::<Value>()? {
+        Some((epoch, state)) => (centroids_of(state)?, epoch as usize + 1),
+        None => (kmeans_init(comm, &points, k)?, 0),
+    };
+    // On a restarted gang every iteration below is replay the fault-free
+    // run would not have needed twice: O(iters-since-checkpoint) of it
+    // with checkpointing on, O(iters) without.
+    let count_replays = ckpt.generation() > 0 && comm.rank() == 0;
+    for i in start..iters {
+        if count_replays {
+            crate::metrics::global().counter("peer.iterations.replayed").inc();
+        }
         centroids = kmeans_iteration(comm, &points, &centroids)?;
+        ckpt.save(
+            i as u64,
+            &Value::List(centroids.iter().cloned().map(Value::F64Vec).collect()),
+        )?;
     }
     Ok(centroids.into_iter().map(Value::F64Vec).collect())
 }

@@ -1,0 +1,517 @@
+//! Asynchronous checkpoint-restart for peer gangs (ROADMAP item 4).
+//!
+//! Gang fault tolerance used to be restart-from-stage-inputs: a
+//! 500-iteration peer section that lost a rank at iteration 499 replayed
+//! all 499. This module gives peer operators algorithm-assisted
+//! snapshots in the style of the MPI/GPI-2 asynchronous
+//! checkpoint-restart work the paper set cites:
+//!
+//! * [`CheckpointHandle`] — the per-rank handle a peer operator reaches
+//!   through [`crate::comm::SparkComm::checkpoint`]. `save(k, state)`
+//!   encodes on the rank thread and hands the bytes to a background
+//!   writer, so the register overlaps iteration `k+1` — **no barrier**.
+//!   Dropping the handle (the rank thread finishing) joins the writer,
+//!   so every enqueued snapshot is registered before the gang reports
+//!   success.
+//! * [`CheckpointStore`] — the epoch table. An epoch `k` is *complete*
+//!   only when all `size` ranks have registered a snapshot for the same
+//!   `k`; only complete epochs are ever served back. The table keeps the
+//!   newest `ignite.checkpoint.keep.epochs` complete epochs and GCs
+//!   everything older (partial epochs below the completeness frontier
+//!   included), plus whole-table GC through the `job.clear` fan-out.
+//! * [`CkptSink`] — where a writer publishes: [`LocalCkptSink`] feeds the
+//!   engine-local store (driver-local gangs), and the cluster runtime
+//!   provides an RPC sink speaking `ckpt.register` / `ckpt.locate` to
+//!   the master's table, mirroring the map-output/broadcast tables.
+//!
+//! Restore is collective ([`crate::comm::SparkComm::checkpoint_restore`]):
+//! rank 0 locates the last complete epoch and broadcasts it, then every
+//! rank fetches its own snapshot for exactly that `k` — survivors and the
+//! replacement rank resume at `k+1`, so replayed work drops from O(k) to
+//! O(iterations-since-checkpoint). A partial epoch can never be restored:
+//! the store refuses to serve an epoch missing any rank.
+//!
+//! Instrumentation: `ckpt.epochs.{saved,complete,restored,gcd}`,
+//! `ckpt.bytes.written`, `ckpt.save.latency`, `peer.iterations.replayed`.
+
+use crate::error::{IgniteError, Result};
+use crate::fault::FaultInjector;
+use crate::metrics;
+use crate::ser::{to_bytes, Encode};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Fault-injection site names on the checkpoint path (see
+/// [`crate::fault::FaultInjector::fail_site`]).
+pub mod sites {
+    /// The rank-thread `save` entry (encode + enqueue).
+    pub const SAVE: &str = "ckpt.save";
+    /// The background writer's publish into the epoch table.
+    pub const REGISTER: &str = "ckpt.register";
+    /// The collective restore entry.
+    pub const RESTORE: &str = "ckpt.restore";
+}
+
+/// Epochs registered for one peer section.
+struct PeerEpochs {
+    /// Gang size: an epoch is complete at exactly this many rank snapshots.
+    size: usize,
+    /// epoch `k` → rank → encoded snapshot.
+    epochs: BTreeMap<u64, HashMap<usize, Vec<u8>>>,
+    /// Highest complete epoch (the restore frontier).
+    last_complete: Option<u64>,
+}
+
+/// The checkpoint epoch table — one per engine (driver-local gangs) and
+/// one on the master (cluster gangs), keyed by peer-section id in the
+/// same id namespace as shuffle outputs so `job.clear` GCs both with one
+/// id list.
+pub struct CheckpointStore {
+    entries: Mutex<HashMap<u64, PeerEpochs>>,
+    /// Complete epochs retained per peer (`ignite.checkpoint.keep.epochs`).
+    keep: usize,
+}
+
+impl CheckpointStore {
+    pub fn new(keep_epochs: usize) -> Self {
+        CheckpointStore { entries: Mutex::new(HashMap::new()), keep: keep_epochs.max(1) }
+    }
+
+    /// Register `rank`'s snapshot for epoch `epoch`. Returns whether the
+    /// epoch is now complete (all `size` ranks registered). Completing an
+    /// epoch advances the restore frontier and prunes: only the newest
+    /// `keep` complete epochs survive, and every older epoch — partial
+    /// ones included — is dropped.
+    pub fn register(
+        &self,
+        peer_id: u64,
+        size: usize,
+        epoch: u64,
+        rank: usize,
+        bytes: Vec<u8>,
+    ) -> bool {
+        let mut entries = self.entries.lock().unwrap();
+        let entry = entries.entry(peer_id).or_insert_with(|| PeerEpochs {
+            size,
+            epochs: BTreeMap::new(),
+            last_complete: None,
+        });
+        entry.size = size;
+        let ranks = entry.epochs.entry(epoch).or_default();
+        ranks.insert(rank, bytes);
+        let complete = ranks.len() == size;
+        if complete {
+            metrics::global().counter("ckpt.epochs.complete").inc();
+            if entry.last_complete.map(|c| epoch > c).unwrap_or(true) {
+                entry.last_complete = Some(epoch);
+            }
+            // Prune past the keep window: find the oldest complete epoch
+            // we retain and drop everything strictly below it.
+            let mut complete_epochs: Vec<u64> = entry
+                .epochs
+                .iter()
+                .filter(|(_, r)| r.len() == size)
+                .map(|(&k, _)| k)
+                .collect();
+            complete_epochs.sort_unstable_by(|a, b| b.cmp(a));
+            if let Some(&cutoff) = complete_epochs.get(self.keep - 1) {
+                let stale: Vec<u64> =
+                    entry.epochs.range(..cutoff).map(|(&k, _)| k).collect();
+                if !stale.is_empty() {
+                    metrics::global().counter("ckpt.epochs.gcd").add(stale.len() as u64);
+                    for k in stale {
+                        entry.epochs.remove(&k);
+                    }
+                }
+            }
+        }
+        complete
+    }
+
+    /// Serve `rank`'s snapshot for `epoch` (or, with `None`, for the last
+    /// complete epoch). Only complete epochs are ever served — a partial
+    /// epoch (some ranks registered, then death) is invisible here, which
+    /// is the completeness rule restore correctness rests on.
+    pub fn locate(&self, peer_id: u64, epoch: Option<u64>, rank: usize) -> Option<(u64, Vec<u8>)> {
+        let entries = self.entries.lock().unwrap();
+        let entry = entries.get(&peer_id)?;
+        let k = epoch.or(entry.last_complete)?;
+        let ranks = entry.epochs.get(&k)?;
+        if ranks.len() != entry.size {
+            return None;
+        }
+        ranks.get(&rank).map(|b| (k, b.clone()))
+    }
+
+    /// Highest complete epoch for `peer_id`, if any.
+    pub fn latest_complete(&self, peer_id: u64) -> Option<u64> {
+        self.entries.lock().unwrap().get(&peer_id).and_then(|e| e.last_complete)
+    }
+
+    /// Drop every epoch of `peer_id` (the `job.clear` GC fan-out).
+    pub fn clear(&self, peer_id: u64) {
+        if let Some(entry) = self.entries.lock().unwrap().remove(&peer_id) {
+            let n = entry.epochs.len() as u64;
+            if n > 0 {
+                metrics::global().counter("ckpt.epochs.gcd").add(n);
+            }
+        }
+    }
+
+    /// Number of peer sections with any registered epoch (tests assert
+    /// this returns to zero after job-end GC).
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Where a rank's background writer publishes snapshots and where restore
+/// reads them back: the engine-local store, or the master's table over
+/// the `ckpt.register` / `ckpt.locate` RPCs.
+pub trait CkptSink: Send + Sync {
+    /// Publish one rank snapshot; returns whether the epoch completed.
+    fn register(
+        &self,
+        peer_id: u64,
+        size: usize,
+        epoch: u64,
+        rank: usize,
+        bytes: Vec<u8>,
+    ) -> Result<bool>;
+
+    /// Fetch `rank`'s snapshot for `epoch` (`None` = last complete).
+    fn locate(&self, peer_id: u64, epoch: Option<u64>, rank: usize)
+        -> Result<Option<(u64, Vec<u8>)>>;
+}
+
+/// Sink over an in-process [`CheckpointStore`] (driver-local gangs).
+pub struct LocalCkptSink(pub Arc<CheckpointStore>);
+
+impl CkptSink for LocalCkptSink {
+    fn register(
+        &self,
+        peer_id: u64,
+        size: usize,
+        epoch: u64,
+        rank: usize,
+        bytes: Vec<u8>,
+    ) -> Result<bool> {
+        Ok(self.0.register(peer_id, size, epoch, rank, bytes))
+    }
+
+    fn locate(
+        &self,
+        peer_id: u64,
+        epoch: Option<u64>,
+        rank: usize,
+    ) -> Result<Option<(u64, Vec<u8>)>> {
+        Ok(self.0.locate(peer_id, epoch, rank))
+    }
+}
+
+/// One snapshot queued to the background writer.
+struct WriteReq {
+    epoch: u64,
+    bytes: Vec<u8>,
+    queued: Instant,
+}
+
+struct Writer {
+    tx: mpsc::Sender<WriteReq>,
+    join: std::thread::JoinHandle<()>,
+}
+
+/// The per-rank checkpoint handle a peer operator uses inside its
+/// [`crate::comm::SparkComm`] context. `save` is asynchronous (encode on
+/// the rank thread, register on a lazily spawned background writer); the
+/// handle's drop joins the writer so a finishing rank leaves no snapshot
+/// in flight. A handle with interval 0 (checkpointing off) is inert:
+/// `save` returns immediately, spawns nothing, touches no fault site.
+pub struct CheckpointHandle {
+    peer_id: u64,
+    rank: usize,
+    size: usize,
+    /// Gang-restart generation of the attempt this handle belongs to.
+    generation: u64,
+    /// Save every `interval` iterations; 0 = disabled.
+    interval: u64,
+    sink: Option<Arc<dyn CkptSink>>,
+    fault: Option<Arc<FaultInjector>>,
+    writer: Mutex<Option<Writer>>,
+    /// First asynchronous write failure, surfaced at the next `save`.
+    failed: Arc<Mutex<Option<String>>>,
+}
+
+impl CheckpointHandle {
+    pub fn new(
+        peer_id: u64,
+        rank: usize,
+        size: usize,
+        generation: u64,
+        interval: u64,
+        sink: Arc<dyn CkptSink>,
+        fault: Option<Arc<FaultInjector>>,
+    ) -> Arc<Self> {
+        Arc::new(CheckpointHandle {
+            peer_id,
+            rank,
+            size,
+            generation,
+            interval,
+            sink: Some(sink),
+            fault,
+            writer: Mutex::new(None),
+            failed: Arc::new(Mutex::new(None)),
+        })
+    }
+
+    /// An inert handle for communicators outside any peer gang (or with
+    /// checkpointing off): every operation is a no-op.
+    pub fn disabled() -> Arc<Self> {
+        Arc::new(CheckpointHandle {
+            peer_id: 0,
+            rank: 0,
+            size: 0,
+            generation: 0,
+            interval: 0,
+            sink: None,
+            fault: None,
+            writer: Mutex::new(None),
+            failed: Arc::new(Mutex::new(None)),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.interval > 0 && self.sink.is_some()
+    }
+
+    /// Gang-restart generation (0 = first attempt).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Whether iteration `k` is a checkpoint point under the configured
+    /// interval (interval 1 → every iteration, 5 → k = 4, 9, …).
+    pub fn due(&self, k: u64) -> bool {
+        self.enabled() && (k + 1) % self.interval == 0
+    }
+
+    /// Asynchronously snapshot this rank's state at iteration `k`: encode
+    /// here, register on the background writer while the operator runs
+    /// iteration `k+1`. Not due / disabled → free no-op. A failure of an
+    /// *earlier* async register surfaces here (failing the rank, hence
+    /// the gang, which restarts and restores — never a torn epoch).
+    pub fn save<T: Encode>(&self, k: u64, state: &T) -> Result<()> {
+        if !self.due(k) {
+            return Ok(());
+        }
+        if let Some(e) = self.failed.lock().unwrap().take() {
+            return Err(IgniteError::Storage(format!("async checkpoint write failed: {e}")));
+        }
+        if let Some(f) = &self.fault {
+            f.before_site(sites::SAVE, self.peer_id, self.rank, k, self.generation)?;
+        }
+        let bytes = to_bytes(state);
+        let nbytes = bytes.len();
+        self.writer_tx()?
+            .send(WriteReq { epoch: k, bytes, queued: Instant::now() })
+            .map_err(|_| IgniteError::Storage("checkpoint writer gone".into()))?;
+        crate::trace::event(
+            crate::trace::current(),
+            "event.checkpoint",
+            &[
+                ("peer", self.peer_id.to_string()),
+                ("rank", self.rank.to_string()),
+                ("epoch", k.to_string()),
+                ("bytes", nbytes.to_string()),
+            ],
+        );
+        Ok(())
+    }
+
+    /// Fault hook for the collective restore entry.
+    pub(crate) fn restore_fault_check(&self) -> Result<()> {
+        if let Some(f) = &self.fault {
+            f.before_site(sites::RESTORE, self.peer_id, self.rank, 0, self.generation)?;
+        }
+        Ok(())
+    }
+
+    /// Last complete epoch as seen through this rank's sink.
+    pub(crate) fn latest_epoch(&self) -> Result<Option<u64>> {
+        match &self.sink {
+            Some(s) => Ok(s.locate(self.peer_id, None, self.rank)?.map(|(k, _)| k)),
+            None => Ok(None),
+        }
+    }
+
+    /// This rank's snapshot for exactly epoch `k`.
+    pub(crate) fn fetch_epoch(&self, k: u64) -> Result<Option<Vec<u8>>> {
+        match &self.sink {
+            Some(s) => Ok(s.locate(self.peer_id, Some(k), self.rank)?.map(|(_, b)| b)),
+            None => Ok(None),
+        }
+    }
+
+    fn writer_tx(&self) -> Result<mpsc::Sender<WriteReq>> {
+        let mut guard = self.writer.lock().unwrap();
+        if let Some(w) = guard.as_ref() {
+            return Ok(w.tx.clone());
+        }
+        let sink = Arc::clone(
+            self.sink.as_ref().ok_or_else(|| IgniteError::Storage("no checkpoint sink".into()))?,
+        );
+        let failed = Arc::clone(&self.failed);
+        let fault = self.fault.clone();
+        let (peer_id, rank, size, generation) = (self.peer_id, self.rank, self.size, self.generation);
+        let (tx, rx) = mpsc::channel::<WriteReq>();
+        let join = std::thread::Builder::new()
+            .name(format!("ckpt-writer-{peer_id}-r{rank}"))
+            .spawn(move || {
+                for req in rx {
+                    let nbytes = req.bytes.len() as u64;
+                    let res = match &fault {
+                        Some(f) => {
+                            f.before_site(sites::REGISTER, peer_id, rank, req.epoch, generation)
+                        }
+                        None => Ok(()),
+                    }
+                    .and_then(|()| sink.register(peer_id, size, req.epoch, rank, req.bytes));
+                    match res {
+                        Ok(_complete) => {
+                            metrics::global().counter("ckpt.epochs.saved").inc();
+                            metrics::global().counter("ckpt.bytes.written").add(nbytes);
+                            metrics::global()
+                                .histogram("ckpt.save.latency")
+                                .record(req.queued.elapsed());
+                        }
+                        Err(e) => {
+                            let mut f = failed.lock().unwrap();
+                            if f.is_none() {
+                                *f = Some(e.to_string());
+                            }
+                        }
+                    }
+                }
+            })
+            .map_err(|e| IgniteError::Storage(format!("spawn checkpoint writer: {e}")))?;
+        let w = Writer { tx: tx.clone(), join };
+        *guard = Some(w);
+        Ok(tx)
+    }
+}
+
+impl Drop for CheckpointHandle {
+    /// Joining the writer here guarantees every enqueued snapshot is
+    /// registered (or its failure recorded) before the rank thread that
+    /// owned the last handle clone exits — a gang that reports success
+    /// has its final epoch durably in the table.
+    fn drop(&mut self) {
+        let writer = self.writer.get_mut().map(|w| w.take()).unwrap_or(None);
+        if let Some(w) = writer {
+            drop(w.tx);
+            let _ = w.join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::{from_bytes, Value};
+
+    #[test]
+    fn epoch_completes_only_with_all_ranks() {
+        let store = CheckpointStore::new(2);
+        assert!(!store.register(7, 2, 0, 0, vec![1]));
+        assert_eq!(store.latest_complete(7), None);
+        assert!(store.locate(7, None, 0).is_none(), "partial epoch must not be served");
+        assert!(store.register(7, 2, 0, 1, vec![2]));
+        assert_eq!(store.latest_complete(7), Some(0));
+        assert_eq!(store.locate(7, None, 0), Some((0, vec![1])));
+        assert_eq!(store.locate(7, None, 1), Some((0, vec![2])));
+    }
+
+    #[test]
+    fn partial_epoch_never_restored_falls_back_to_previous_complete() {
+        let store = CheckpointStore::new(4);
+        for rank in 0..3 {
+            store.register(9, 3, 5, rank, vec![rank as u8]);
+        }
+        // Epoch 6 is torn: ranks 0 and 1 registered, rank 2 died.
+        store.register(9, 3, 6, 0, vec![60]);
+        store.register(9, 3, 6, 1, vec![61]);
+        assert_eq!(store.latest_complete(9), Some(5));
+        assert_eq!(store.locate(9, None, 2), Some((5, vec![2])));
+        assert!(store.locate(9, Some(6), 0).is_none(), "explicit partial epoch refused");
+    }
+
+    #[test]
+    fn keep_window_prunes_old_and_partial_epochs() {
+        let store = CheckpointStore::new(2);
+        // A stale partial at epoch 0 (rank 1 never arrived).
+        store.register(3, 2, 0, 0, vec![0]);
+        for k in 1..=4u64 {
+            store.register(3, 2, k, 0, vec![k as u8]);
+            store.register(3, 2, k, 1, vec![k as u8]);
+        }
+        // keep = 2 → epochs 3 and 4 survive; 0 (partial), 1, 2 pruned.
+        assert!(store.locate(3, Some(1), 0).is_none());
+        assert!(store.locate(3, Some(2), 0).is_none());
+        assert_eq!(store.locate(3, Some(3), 0), Some((3, vec![3])));
+        assert_eq!(store.locate(3, Some(4), 1), Some((4, vec![4])));
+        assert!(store.locate(3, Some(0), 0).is_none(), "stale partial GC'd");
+    }
+
+    #[test]
+    fn clear_empties_the_table() {
+        let store = CheckpointStore::new(2);
+        store.register(11, 1, 0, 0, vec![9]);
+        assert_eq!(store.len(), 1);
+        store.clear(11);
+        assert!(store.is_empty());
+        assert!(store.locate(11, None, 0).is_none());
+    }
+
+    #[test]
+    fn handle_save_registers_through_background_writer() {
+        let store = Arc::new(CheckpointStore::new(2));
+        let sink: Arc<dyn CkptSink> = Arc::new(LocalCkptSink(Arc::clone(&store)));
+        for rank in 0..2usize {
+            let h = CheckpointHandle::new(21, rank, 2, 0, 1, Arc::clone(&sink), None);
+            for k in 0..3u64 {
+                h.save(k, &Value::I64(k as i64 * 10 + rank as i64)).unwrap();
+            }
+            drop(h); // joins the writer: all three epochs registered
+        }
+        assert_eq!(store.latest_complete(21), Some(2));
+        let (k, bytes) = store.locate(21, None, 1).unwrap();
+        assert_eq!(k, 2);
+        assert_eq!(from_bytes::<Value>(&bytes).unwrap(), Value::I64(21));
+    }
+
+    #[test]
+    fn interval_gates_saves_and_disabled_handle_is_inert() {
+        let store = Arc::new(CheckpointStore::new(2));
+        let sink: Arc<dyn CkptSink> = Arc::new(LocalCkptSink(Arc::clone(&store)));
+        let h = CheckpointHandle::new(22, 0, 1, 0, 3, sink, None);
+        assert!(!h.due(0) && !h.due(1) && h.due(2) && h.due(5));
+        for k in 0..6u64 {
+            h.save(k, &Value::I64(k as i64)).unwrap();
+        }
+        drop(h);
+        assert_eq!(store.latest_complete(22), Some(5));
+        assert!(store.locate(22, Some(0), 0).is_none(), "k=0 not due, never saved");
+
+        let off = CheckpointHandle::disabled();
+        assert!(!off.enabled());
+        off.save(0, &Value::I64(1)).unwrap();
+        assert!(off.latest_epoch().unwrap().is_none());
+    }
+}

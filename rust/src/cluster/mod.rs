@@ -126,6 +126,16 @@ pub const EP_SHUFFLE_FETCH_BATCH: &str = "shuffle.fetch_batch";
 /// piggy-backed `master.plan_result`/`master.peer_result` ride).
 pub const EP_METRICS_PULL: &str = "metrics.pull";
 pub const EP_TRACE_FLUSH: &str = "trace.flush";
+/// Master checkpoint table (the checkpoint twin of the map-output and
+/// broadcast tables): gang ranks' background writers register per-epoch
+/// snapshots, the collective restore locates/fetches them back. Only
+/// *complete* epochs — all `size` ranks at the same `k` — are served.
+pub const EP_CKPT_REGISTER: &str = "master.ckpt.register";
+pub const EP_CKPT_LOCATE: &str = "master.ckpt.locate";
+/// Driver-session recovery: a restarted driver presents its session id
+/// and gets back the session's journaled job ids + terminal states, so
+/// it can reacquire handles to running jobs and collect finished ones.
+pub const EP_SESSION_REATTACH: &str = "session.reattach";
 
 struct WorkerInfo {
     addr: RpcAddress,
@@ -218,6 +228,10 @@ pub struct Master {
     map_outputs: Mutex<HashMap<u64, MapOutputEntry>>,
     /// Broadcast block-location table: id → shape + per-block holders.
     broadcasts: Mutex<HashMap<u64, BroadcastEntry>>,
+    /// Checkpoint epoch table for cluster peer gangs — the third member
+    /// of the location-table family (map outputs, broadcasts,
+    /// checkpoints), GC'd through the same `job.clear` fan-out.
+    checkpoints: Arc<crate::ckpt::CheckpointStore>,
     /// The driver-registered authoritative block copies this master
     /// serves over [`EP_BROADCAST_FETCH`] (the always-available fallback
     /// when every peer holding a block is gone). Same chunk/store/serve
@@ -292,6 +306,9 @@ impl Master {
             cleared_shuffles: Mutex::new(HashSet::new()),
             map_outputs: Mutex::new(HashMap::new()),
             broadcasts: Mutex::new(HashMap::new()),
+            checkpoints: Arc::new(crate::ckpt::CheckpointStore::new(
+                conf.get_usize("ignite.checkpoint.keep.epochs").unwrap_or(2),
+            )),
             broadcast_store: crate::broadcast::BroadcastManager::new(
                 conf.get_usize("ignite.broadcast.block.bytes")
                     .unwrap_or(crate::broadcast::DEFAULT_BLOCK_BYTES),
@@ -376,6 +393,9 @@ impl Master {
                 let req: JobStatusReq = from_bytes(&envelope.body)?;
                 let resp = match m.job_table.get(req.job_id) {
                     Some(handle) => {
+                        // A polling driver is a live driver — refresh
+                        // its session so orphan GC never collects it.
+                        m.job_table.touch_session(handle.session_id);
                         let state = handle.state();
                         JobStatusResp {
                             state: state.tag(),
@@ -742,6 +762,10 @@ impl Master {
                     for id in &req.shuffles {
                         table.remove(id);
                         cleared.insert(*id);
+                        // Peer-section ids share the shuffle id
+                        // namespace, so the same list GCs the job's
+                        // checkpoint epochs (complete and partial).
+                        m.checkpoints.clear(*id);
                     }
                 }
                 m.drop_broadcasts(&req.broadcasts);
@@ -753,6 +777,63 @@ impl Master {
                     let _ = m.env.send(&addr, EP_JOB_CLEAR, body.clone());
                 }
                 Ok(Some(RpcBody::Bytes(Vec::new()))) // ack
+            }),
+        );
+
+        // Rank snapshot arrives from a peer rank's background writer.
+        // The epoch becomes complete (and thus restorable) only once
+        // all `size` ranks have registered the same k.
+        let m = Arc::clone(&master);
+        env.register(
+            EP_CKPT_REGISTER,
+            Arc::new(move |envelope: &Envelope| {
+                let req: CkptRegister = from_bytes(&envelope.body)?;
+                let complete = m.checkpoints.register(
+                    req.peer_id,
+                    req.size as usize,
+                    req.epoch,
+                    req.rank as usize,
+                    req.bytes,
+                );
+                Ok(Some(to_bytes(&CkptRegisterResp { complete }).into()))
+            }),
+        );
+
+        // Lookup mirrors the map-output/broadcast tables: only epochs
+        // with all ranks present are ever served, so a gang killed
+        // mid-epoch can never resume from a partial snapshot.
+        let m = Arc::clone(&master);
+        env.register(
+            EP_CKPT_LOCATE,
+            Arc::new(move |envelope: &Envelope| {
+                let req: CkptLocateReq = from_bytes(&envelope.body)?;
+                let want = if req.epoch < 0 { None } else { Some(req.epoch as u64) };
+                let resp = match m.checkpoints.locate(req.peer_id, want, req.rank as usize) {
+                    Some((epoch, bytes)) => CkptLocateResp { found: true, epoch, bytes },
+                    None => CkptLocateResp { found: false, epoch: 0, bytes: Vec::new() },
+                };
+                Ok(Some(to_bytes(&resp).into()))
+            }),
+        );
+
+        // A recovering driver reattaches to its session by id and
+        // learns which jobs it had in flight plus their terminal
+        // states; results are then fetched through the normal
+        // wait-job path.
+        let m = Arc::clone(&master);
+        env.register(
+            EP_SESSION_REATTACH,
+            Arc::new(move |envelope: &Envelope| {
+                let req: SessionReattachReq = from_bytes(&envelope.body)?;
+                let jobs = m.job_table.session_jobs(req.session_id);
+                let found = !jobs.is_empty();
+                if found {
+                    m.job_table.touch_session(req.session_id);
+                    crate::metrics::global()
+                        .counter("jobserver.sessions.reattached")
+                        .inc();
+                }
+                Ok(Some(to_bytes(&SessionReattachResp { found, jobs }).into()))
             }),
         );
 
@@ -1404,6 +1485,12 @@ impl Master {
                 );
             }
             generation += 1;
+            // Exponential backoff (seeded jitter, capped) before the
+            // next attempt: an immediate relaunch tends to land on the
+            // same still-dying worker or still-draining ledger slots.
+            std::thread::sleep(crate::peer::gang_backoff_delay(
+                &self.conf, peer_id, generation,
+            ));
         }
     }
 
@@ -2194,7 +2281,53 @@ impl Master {
     /// accounting (fair-share / quota caps and the per-session
     /// `jobserver.session.<id>.tasks.completed` counter).
     pub fn new_session(&self) -> u64 {
+        // Opportunistic orphan GC: session turnover is the natural
+        // moment to forget crashed drivers that never came back.
+        self.gc_orphan_sessions();
         self.job_table.next_session_id()
+    }
+
+    /// Reattach a recovering driver to its previous session
+    /// (`session.reattach`): returns the session's journaled jobs as
+    /// `(job_id, state tag)` pairs. The jobs themselves kept running on
+    /// the master while the driver was gone — results are then fetched
+    /// through the normal [`Master::wait_job`] path. Errors with
+    /// `Invalid` when the session id is unknown or already GC'd
+    /// (`ignite.session.orphan.timeout.ms`).
+    pub fn reattach_session(&self, session_id: u64) -> Result<Vec<(u64, u8)>> {
+        let resp = self.env.ask(
+            &self.env.address(),
+            EP_SESSION_REATTACH,
+            to_bytes(&SessionReattachReq { session_id }),
+            Duration::from_secs(5),
+        )?;
+        let resp: SessionReattachResp = from_bytes(&resp)?;
+        if !resp.found {
+            return Err(IgniteError::Invalid(format!(
+                "session {session_id} unknown (never existed, or orphaned past \
+                 ignite.session.orphan.timeout.ms and GC'd)"
+            )));
+        }
+        Ok(resp.jobs)
+    }
+
+    /// Drop sessions idle past `ignite.session.orphan.timeout.ms` whose
+    /// jobs have all settled (run opportunistically by
+    /// [`Master::new_session`]; callable directly by operators). Returns
+    /// the number of sessions collected.
+    pub fn gc_orphan_sessions(&self) -> usize {
+        let timeout = self
+            .conf
+            .get_duration_ms("ignite.session.orphan.timeout.ms")
+            .unwrap_or(Duration::from_secs(600));
+        self.job_table.gc_orphan_sessions(timeout.as_millis() as u64)
+    }
+
+    /// Number of peer sections with epochs (complete or partial) in the
+    /// master's checkpoint table. Tests assert this returns to zero
+    /// after job-end GC.
+    pub fn checkpoint_table_len(&self) -> usize {
+        self.checkpoints.len()
     }
 
     /// Submit a plan for concurrent execution (`job.submit`). Returns
@@ -2427,6 +2560,58 @@ impl Master {
     /// Shut the master down.
     pub fn shutdown(&self) {
         self.env.shutdown();
+    }
+}
+
+/// [`crate::ckpt::CkptSink`] over the cluster RPC plane: rank snapshots
+/// go to the master's checkpoint table through `master.ckpt.register`,
+/// restores pull them back through `master.ckpt.locate` — the checkpoint
+/// twin of [`RpcShuffleNet`]'s map-output registration.
+pub struct RpcCkptSink {
+    env: RpcEnv,
+    master: RpcAddress,
+    timeout: Duration,
+}
+
+impl RpcCkptSink {
+    pub fn new(env: RpcEnv, master: RpcAddress, timeout: Duration) -> Self {
+        RpcCkptSink { env, master, timeout }
+    }
+}
+
+impl crate::ckpt::CkptSink for RpcCkptSink {
+    fn register(
+        &self,
+        peer_id: u64,
+        size: usize,
+        epoch: u64,
+        rank: usize,
+        bytes: Vec<u8>,
+    ) -> Result<bool> {
+        let req = CkptRegister {
+            peer_id,
+            size: size as u64,
+            epoch,
+            rank: rank as u64,
+            bytes,
+        };
+        // Ask (not send): the writer's durability claim — and the Drop
+        // join that makes gang exit imply it — is only as good as the
+        // master's ack.
+        let resp = self.env.ask(&self.master, EP_CKPT_REGISTER, to_bytes(&req), self.timeout)?;
+        let resp: CkptRegisterResp = from_bytes(&resp)?;
+        Ok(resp.complete)
+    }
+
+    fn locate(&self, peer_id: u64, epoch: Option<u64>, rank: usize) -> Result<Option<(u64, Vec<u8>)>> {
+        let req = CkptLocateReq {
+            peer_id,
+            rank: rank as u64,
+            epoch: epoch.map(|k| k as i64).unwrap_or(-1),
+        };
+        let resp = self.env.ask(&self.master, EP_CKPT_LOCATE, to_bytes(&req), self.timeout)?;
+        let resp: CkptLocateResp = from_bytes(&resp)?;
+        Ok(if resp.found { Some((resp.epoch, resp.bytes)) } else { None })
     }
 }
 
@@ -3127,6 +3312,10 @@ impl Worker {
                     let req: JobClear = from_bytes(&envelope.body)?;
                     for id in req.shuffles {
                         engine.shuffle.clear_shuffle(id);
+                        // Peer ids share the shuffle id namespace — drop
+                        // any checkpoint epochs cached on this worker's
+                        // local store for the finished gang.
+                        engine.ckpt.clear(id);
                     }
                     for id in req.broadcasts {
                         engine.clear_broadcast(id);
@@ -3229,6 +3418,22 @@ impl Worker {
                         &conf,
                     );
                     let context = crate::peer::peer_context(req.job_id, req.generation);
+                    // Checkpoint plane: one RPC sink per launch, shared
+                    // by every local rank's background writer; handles
+                    // stay `None` (inert) when checkpointing is off so
+                    // the disabled path allocates nothing.
+                    let ckpt_interval =
+                        conf.get_u64("ignite.checkpoint.interval.iters").unwrap_or(0);
+                    let ckpt_sink: Option<Arc<dyn crate::ckpt::CkptSink>> = if ckpt_interval > 0 {
+                        Some(Arc::new(RpcCkptSink::new(
+                            env2.clone(),
+                            master.clone(),
+                            conf.get_duration_ms("ignite.shuffle.fetch.timeout.ms")
+                                .unwrap_or(Duration::from_secs(10)),
+                        )))
+                    } else {
+                        None
+                    };
                     for &rank in &req.ranks {
                         let rank = rank as usize;
                         let mailbox_gen = generations[&rank];
@@ -3243,10 +3448,21 @@ impl Worker {
                             (req.job_id, req.peer_id, req.generation);
                         let world_size = req.world_size as usize;
                         let ctx = req.ctx;
+                        let ckpt = ckpt_sink.as_ref().map(|sink| {
+                            crate::ckpt::CheckpointHandle::new(
+                                peer_id,
+                                rank,
+                                world_size,
+                                generation,
+                                ckpt_interval,
+                                Arc::clone(sink),
+                                Some(Arc::clone(&engine.fault)),
+                            )
+                        });
                         std::thread::Builder::new()
                             .name(format!("peer-job{job_id}-rank{rank}"))
                             .spawn(move || {
-                                let comm = world.comm_for_rank_ctx(rank, context);
+                                let comm = world.comm_for_rank_ckpt(rank, context, ckpt);
                                 let mut rspan = trace::span("peer.rank", ctx);
                                 rspan.label("rank", rank.to_string());
                                 rspan.label("peer", peer_id.to_string());
@@ -3264,6 +3480,12 @@ impl Worker {
                                     engine.shuffle.put_bucket(peer_id, rank, rank, out);
                                     engine.shuffle.map_done(peer_id, rank, world_size)
                                 })();
+                                // Drop the communicator FIRST: that joins
+                                // its checkpoint writer, so the final
+                                // epoch is registered (or failed) before
+                                // the master can see this rank done and
+                                // start job-end checkpoint GC.
+                                drop(comm);
                                 if let Err(e) = &outcome {
                                     rspan.fail(&e.to_string());
                                 }

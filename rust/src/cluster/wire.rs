@@ -900,6 +900,154 @@ impl Decode for ShuffleFetchBatchResp {
     }
 }
 
+/// Rank background writer → master (`master.ckpt.register`): one rank's
+/// encoded snapshot for epoch `epoch` of peer section `peer_id`. `size`
+/// is the gang's world size — the master needs it to decide when the
+/// epoch is complete (all `size` ranks registered the same k).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptRegister {
+    pub peer_id: u64,
+    pub size: u64,
+    pub epoch: u64,
+    pub rank: u64,
+    pub bytes: Vec<u8>,
+}
+
+impl Encode for CkptRegister {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.peer_id.encode(buf);
+        self.size.encode(buf);
+        self.epoch.encode(buf);
+        self.rank.encode(buf);
+        self.bytes.encode(buf);
+    }
+}
+impl Decode for CkptRegister {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(CkptRegister {
+            peer_id: u64::decode(r)?,
+            size: u64::decode(r)?,
+            epoch: u64::decode(r)?,
+            rank: u64::decode(r)?,
+            bytes: Vec::<u8>::decode(r)?,
+        })
+    }
+}
+
+/// Master → rank writer: whether this registration completed the epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptRegisterResp {
+    pub complete: bool,
+}
+
+impl Encode for CkptRegisterResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.complete.encode(buf);
+    }
+}
+impl Decode for CkptRegisterResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(CkptRegisterResp { complete: bool::decode(r)? })
+    }
+}
+
+/// Restoring rank → master (`master.ckpt.locate`): fetch this rank's
+/// snapshot. `epoch < 0` asks for the latest *complete* epoch; a
+/// non-negative value pins the exact k every rank agreed on (rank 0
+/// probes with -1, broadcasts the answer, the rest pin it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptLocateReq {
+    pub peer_id: u64,
+    pub rank: u64,
+    pub epoch: i64,
+}
+
+impl Encode for CkptLocateReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.peer_id.encode(buf);
+        self.rank.encode(buf);
+        self.epoch.encode(buf);
+    }
+}
+impl Decode for CkptLocateReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(CkptLocateReq {
+            peer_id: u64::decode(r)?,
+            rank: u64::decode(r)?,
+            epoch: i64::decode(r)?,
+        })
+    }
+}
+
+/// Master → restoring rank: the snapshot, when a complete epoch exists.
+/// Partial epochs are never served — `found` is false until all ranks
+/// of some k have registered.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptLocateResp {
+    pub found: bool,
+    pub epoch: u64,
+    pub bytes: Vec<u8>,
+}
+
+impl Encode for CkptLocateResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.found.encode(buf);
+        self.epoch.encode(buf);
+        self.bytes.encode(buf);
+    }
+}
+impl Decode for CkptLocateResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(CkptLocateResp {
+            found: bool::decode(r)?,
+            epoch: u64::decode(r)?,
+            bytes: Vec::<u8>::decode(r)?,
+        })
+    }
+}
+
+/// Recovering driver → master (`session.reattach`): look up the jobs
+/// journaled under a previous driver incarnation's session id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionReattachReq {
+    pub session_id: u64,
+}
+
+impl Encode for SessionReattachReq {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.session_id.encode(buf);
+    }
+}
+impl Decode for SessionReattachReq {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(SessionReattachReq { session_id: u64::decode(r)? })
+    }
+}
+
+/// Master → recovering driver: the session's journaled jobs as
+/// `(job_id, state tag)` pairs (tags as in [`JobStatusResp`]); empty /
+/// `found: false` when the session id is unknown or already GC'd.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionReattachResp {
+    pub found: bool,
+    pub jobs: Vec<(u64, u8)>,
+}
+
+impl Encode for SessionReattachResp {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.found.encode(buf);
+        self.jobs.encode(buf);
+    }
+}
+impl Decode for SessionReattachResp {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(SessionReattachResp {
+            found: bool::decode(r)?,
+            jobs: Vec::<(u64, u8)>::decode(r)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1154,5 +1302,34 @@ mod tests {
         assert_eq!(from_bytes::<RegisterResp>(&to_bytes(&resp)).unwrap(), resp);
         let hb = Heartbeat { worker_id: 12 };
         assert_eq!(from_bytes::<Heartbeat>(&to_bytes(&hb)).unwrap(), hb);
+    }
+
+    #[test]
+    fn checkpoint_plane_messages_round_trip() {
+        let reg = CkptRegister { peer_id: 7, size: 4, epoch: 11, rank: 2, bytes: vec![1, 2, 3] };
+        assert_eq!(from_bytes::<CkptRegister>(&to_bytes(&reg)).unwrap(), reg);
+        for complete in [true, false] {
+            let resp = CkptRegisterResp { complete };
+            assert_eq!(from_bytes::<CkptRegisterResp>(&to_bytes(&resp)).unwrap(), resp);
+        }
+
+        for epoch in [-1i64, 0, 11] {
+            let req = CkptLocateReq { peer_id: 7, rank: 2, epoch };
+            assert_eq!(from_bytes::<CkptLocateReq>(&to_bytes(&req)).unwrap(), req);
+        }
+        let hit = CkptLocateResp { found: true, epoch: 11, bytes: vec![9, 8] };
+        assert_eq!(from_bytes::<CkptLocateResp>(&to_bytes(&hit)).unwrap(), hit);
+        let miss = CkptLocateResp { found: false, epoch: 0, bytes: Vec::new() };
+        assert_eq!(from_bytes::<CkptLocateResp>(&to_bytes(&miss)).unwrap(), miss);
+    }
+
+    #[test]
+    fn session_reattach_round_trip() {
+        let req = SessionReattachReq { session_id: 5 };
+        assert_eq!(from_bytes::<SessionReattachReq>(&to_bytes(&req)).unwrap(), req);
+        let resp = SessionReattachResp { found: true, jobs: vec![(17, 2), (18, 1)] };
+        assert_eq!(from_bytes::<SessionReattachResp>(&to_bytes(&resp)).unwrap(), resp);
+        let gone = SessionReattachResp { found: false, jobs: Vec::new() };
+        assert_eq!(from_bytes::<SessionReattachResp>(&to_bytes(&gone)).unwrap(), gone);
     }
 }

@@ -46,6 +46,7 @@ pub use transport::{
 pub use transport::Transport as CommTransport;
 pub use window::Window;
 
+use crate::ckpt::CheckpointHandle;
 use crate::config::IgniteConf;
 use crate::error::{IgniteError, Result};
 use crate::metrics;
@@ -199,10 +200,24 @@ impl CommWorld {
             context,
             ranks: Arc::new((0..self.size).collect()),
             my_rank: world_rank,
+            ckpt: None,
             split_seq: AtomicU64::new(0),
             bcast_seq: AtomicU64::new(0),
             aux_seq: AtomicU64::new(0),
         }
+    }
+
+    /// World communicator for a gang rank with its checkpoint handle
+    /// attached — the construction path of peer-section rank threads.
+    pub fn comm_for_rank_ckpt(
+        self: &Arc<Self>,
+        world_rank: usize,
+        context: u64,
+        ckpt: Option<Arc<CheckpointHandle>>,
+    ) -> SparkComm {
+        let mut comm = self.comm_for_rank_ctx(world_rank, context);
+        comm.ckpt = ckpt;
+        comm
     }
 
     // -- block-store broadcast primitives (local transport only) --------
@@ -244,6 +259,10 @@ pub struct SparkComm {
     ranks: Arc<Vec<usize>>,
     /// This process's rank *within this communicator*.
     my_rank: usize,
+    /// Checkpoint handle of the enclosing peer gang, if any (propagated
+    /// through `split`/`dup`: a sub-communicator checkpoints into its
+    /// gang's epoch table under the gang's world rank).
+    ckpt: Option<Arc<CheckpointHandle>>,
     /// Number of splits performed on this communicator (collective
     /// discipline keeps it identical across members, so derived context
     /// ids agree without coordination).
@@ -366,6 +385,57 @@ impl SparkComm {
         fut.wait_timeout(self.world.recv_timeout)
     }
 
+    // --------------------------------------------- checkpoint-restart --
+
+    /// This rank's checkpoint handle. Inside a peer gang with
+    /// `ignite.checkpoint.interval.iters` > 0 it snapshots into the
+    /// gang's epoch table; anywhere else (plain `run_local_world`,
+    /// checkpointing off) it is an inert handle whose `save` is free.
+    pub fn checkpoint(&self) -> Arc<CheckpointHandle> {
+        self.ckpt.clone().unwrap_or_else(CheckpointHandle::disabled)
+    }
+
+    /// Collective restore: rank 0 locates the last *complete* checkpoint
+    /// epoch and broadcasts it; every rank then fetches its own snapshot
+    /// for exactly that epoch. Returns `None` when checkpointing is off
+    /// or no complete epoch exists (a fresh run) — the operator then
+    /// starts from iteration 0, exactly as before checkpointing existed.
+    /// Every rank of the gang must call this (it broadcasts).
+    pub fn checkpoint_restore<T: crate::ser::Decode>(&self) -> Result<Option<(u64, T)>> {
+        let Some(h) = self.ckpt.clone() else { return Ok(None) };
+        if !h.enabled() {
+            return Ok(None);
+        }
+        h.restore_fault_check()?;
+        // -1 = no complete epoch; ranks must agree on one k, so only
+        // rank 0 consults the table and the verdict rides a broadcast.
+        let probe = if self.my_rank == 0 {
+            Some(h.latest_epoch()?.map(|k| k as i64).unwrap_or(-1))
+        } else {
+            None
+        };
+        let k = self.broadcast::<i64>(0, probe)?;
+        if k < 0 {
+            return Ok(None);
+        }
+        let bytes = h.fetch_epoch(k as u64)?.ok_or_else(|| {
+            IgniteError::Storage(format!(
+                "checkpoint epoch {k} vanished for rank {}",
+                self.my_rank
+            ))
+        })?;
+        let state: T = crate::ser::from_bytes(&bytes)?;
+        if self.my_rank == 0 {
+            metrics::global().counter("ckpt.epochs.restored").inc();
+        }
+        crate::trace::event(
+            crate::trace::current(),
+            "event.restore",
+            &[("rank", self.my_rank.to_string()), ("epoch", k.to_string())],
+        );
+        Ok(Some((k as u64, state)))
+    }
+
     // ------------------------------------------------------ internals --
 
     pub(crate) fn bcast_algo(&self) -> Result<CollectiveAlgo> {
@@ -411,6 +481,7 @@ impl SparkComm {
             context,
             ranks,
             my_rank,
+            ckpt: self.ckpt.clone(),
             split_seq: AtomicU64::new(0),
             bcast_seq: AtomicU64::new(0),
             aux_seq: AtomicU64::new(0),

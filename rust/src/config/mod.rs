@@ -25,6 +25,7 @@ pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
     ("ignite.task.speculation.multiplier", "4.0", "Straggler = multiplier x median"),
     ("ignite.scheduler.policy", "fifo", "Multi-tenant admission over the slot ledger: fifo | fair | quota"),
     ("ignite.scheduler.session.quota.slots", "0", "Concurrent slot cap per driver session under policy=quota (0 = unlimited)"),
+    ("ignite.session.orphan.timeout.ms", "600000", "Driver sessions idle past this with no live jobs are GC'd from the master's journal"),
     ("ignite.speculation.multiplier", "4.0", "Master-side plan-task straggler threshold: multiplier x stage median task latency"),
     ("ignite.comm.mode", "p2p", "p2p | relay (paper's two iterations)"),
     ("ignite.comm.buffer.max", "65536", "Max buffered unexpected messages/rank"),
@@ -41,6 +42,9 @@ pub const KNOWN_KEYS: &[(&str, &str, &str)] = &[
     ("ignite.broadcast.memory.bytes", "67108864", "In-memory broadcast block budget; overflow spills to disk"),
     ("ignite.peer.section.timeout.ms", "30000", "Gang-scheduled peer section deadline"),
     ("ignite.peer.gang.retries", "3", "Peer-section gang launch budget (restarts on a fresh communicator generation)"),
+    ("ignite.peer.gang.backoff.ms", "50", "Base delay before a gang restart; doubles per restart (seeded jitter, capped at 32x; 0 = immediate)"),
+    ("ignite.checkpoint.interval.iters", "0", "Peer operators snapshot rank state every N iterations (0 = checkpointing off)"),
+    ("ignite.checkpoint.keep.epochs", "2", "Complete checkpoint epochs retained per peer section; older and partial epochs are GC'd"),
     ("ignite.shuffle.partitions", "8", "Default reduce-side partition count"),
     ("ignite.shuffle.memory.bytes", "67108864", "In-memory shuffle bucket budget; overflow demotes LRU buckets to disk"),
     ("ignite.shuffle.fetch.timeout.ms", "5000", "Remote shuffle.fetch RPC timeout"),
@@ -218,6 +222,17 @@ impl IgniteConf {
         self.get_duration_ms("ignite.comm.window.op.timeout.ms")?;
         self.get_duration_ms("ignite.peer.section.timeout.ms")?;
         self.get_usize("ignite.peer.gang.retries")?;
+        self.get_duration_ms("ignite.peer.gang.backoff.ms")?;
+        // Checkpoint-restart: the interval is an iteration count (0 =
+        // off); a keep window of 0 would GC the epoch restore just
+        // located, so it must be >= 1.
+        self.get_u64("ignite.checkpoint.interval.iters")?;
+        if self.get_usize("ignite.checkpoint.keep.epochs")? == 0 {
+            return Err(IgniteError::Config(
+                "ignite.checkpoint.keep.epochs must be >= 1".into(),
+            ));
+        }
+        self.get_duration_ms("ignite.session.orphan.timeout.ms")?;
         // Job-server admission: the policy is an enum (typos must fail
         // startup, not silently schedule FIFO), quota and the master-side
         // speculation multiplier are plain numerics.

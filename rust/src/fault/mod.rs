@@ -35,6 +35,9 @@ pub struct FaultInjector {
     fail_once: Mutex<HashSet<(u64, usize, usize)>>,
     /// Delay these (stage, partition) on every attempt.
     delays: Mutex<HashMap<(u64, usize), Duration>>,
+    /// Fail these named checkpoint-path sites once each:
+    /// (site, peer/query id, rank, epoch).
+    site_fail_once: Mutex<HashSet<(String, u64, usize, u64)>>,
     /// Seeded chaos: probability of failure per attempt-0 task.
     chaos: Option<(u64, f64)>,
 }
@@ -118,11 +121,82 @@ impl FaultInjector {
         Ok(())
     }
 
+    /// Script: fail the named checkpoint-path site (`ckpt.save`,
+    /// `ckpt.register`, `ckpt.restore`) once for `(id, rank, k)` — the
+    /// deterministic mid-iteration rank kill the checkpoint tests use.
+    pub fn fail_site(&self, site: &str, id: u64, rank: usize, k: u64) -> &Self {
+        self.site_fail_once.lock().unwrap().insert((site.to_string(), id, rank, k));
+        self
+    }
+
+    /// Called on the checkpoint path (save on the rank thread, register
+    /// on the background writer, restore on the collective entry).
+    /// Scripted site faults fire once regardless of attempt; chaos flips
+    /// its coin only on generation 0, so a restarted gang is not
+    /// re-killed at the same epoch it is trying to recover.
+    pub fn before_site(
+        &self,
+        site: &str,
+        id: u64,
+        rank: usize,
+        k: u64,
+        attempt: u64,
+    ) -> Result<()> {
+        if self.site_fail_once.lock().unwrap().remove(&(site.to_string(), id, rank, k)) {
+            crate::trace::event(
+                crate::trace::current(),
+                "event.fault",
+                &[
+                    ("site", site.to_string()),
+                    ("id", id.to_string()),
+                    ("rank", rank.to_string()),
+                    ("epoch", k.to_string()),
+                ],
+            );
+            return Err(IgniteError::Task(format!(
+                "injected fault at {site}: id {id} rank {rank} epoch {k}"
+            )));
+        }
+        if let Some((seed, p)) = self.chaos {
+            if attempt == 0 {
+                let site_mix = site
+                    .bytes()
+                    .fold(0xCBF2_9CE4_8422_2325u64, |h, b| {
+                        (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3)
+                    });
+                let mix = seed
+                    ^ site_mix
+                    ^ id.wrapping_mul(0x9E3779B97F4A7C15)
+                    ^ (rank as u64).wrapping_mul(0xD1B54A32D192ED03)
+                    ^ k.wrapping_mul(0xA24BAED4963EE407);
+                let mut rng = Xoshiro256::seeded(mix);
+                if rng.chance(p) {
+                    crate::trace::event(
+                        crate::trace::current(),
+                        "event.fault",
+                        &[
+                            ("site", site.to_string()),
+                            ("seed", seed.to_string()),
+                            ("id", id.to_string()),
+                            ("rank", rank.to_string()),
+                            ("epoch", k.to_string()),
+                        ],
+                    );
+                    return Err(IgniteError::Task(format!(
+                        "chaos fault at {site}: id {id} rank {rank} epoch {k}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Whether any fault source is configured (fast-path check).
     pub fn is_active(&self) -> bool {
         self.chaos.is_some()
             || !self.fail_once.lock().unwrap().is_empty()
             || !self.delays.lock().unwrap().is_empty()
+            || !self.site_fail_once.lock().unwrap().is_empty()
     }
 }
 
@@ -230,6 +304,20 @@ mod tests {
             }
         }
         assert!(failed > 20 && failed < 80, "p=0.5 should fail roughly half, got {failed}");
+    }
+
+    #[test]
+    fn site_fault_fires_once_and_chaos_spares_restarted_generations() {
+        let f = FaultInjector::none();
+        f.fail_site("ckpt.save", 5, 1, 6);
+        assert!(f.is_active());
+        assert!(f.before_site("ckpt.save", 5, 1, 6, 0).is_err(), "scripted site fires");
+        assert!(f.before_site("ckpt.save", 5, 1, 6, 0).is_ok(), "fault consumed");
+        assert!(f.before_site("ckpt.register", 5, 1, 6, 0).is_ok(), "other site unaffected");
+
+        let c = FaultInjector::chaos(42, 1.0);
+        assert!(c.before_site("ckpt.save", 1, 0, 0, 0).is_err(), "p=1 chaos on generation 0");
+        assert!(c.before_site("ckpt.save", 1, 0, 0, 1).is_ok(), "restart generation spared");
     }
 
     #[test]

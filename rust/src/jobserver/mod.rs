@@ -384,17 +384,31 @@ pub fn session_task_counter(session: u64) -> String {
     format!("jobserver.session.{session}.tasks.completed")
 }
 
+/// Per-session journal entry: which jobs ran under a driver session and
+/// when the session was last heard from (submit, poll or reattach).
+/// This is what lets a crashed driver's replacement find its jobs — the
+/// journal outlives the driver's `IgniteContext`.
+struct SessionEntry {
+    jobs: Vec<u64>,
+    last_activity_ms: u64,
+}
+
 /// Registry of submitted jobs, shared by the `job.*` RPC handlers and
 /// the threads running the jobs.
 #[derive(Default)]
 pub struct JobTable {
     jobs: Mutex<HashMap<u64, Arc<JobHandle>>>,
+    sessions: Mutex<HashMap<u64, SessionEntry>>,
     next_session: AtomicU64,
 }
 
 impl JobTable {
     pub fn new() -> Self {
-        JobTable { jobs: Mutex::new(HashMap::new()), next_session: AtomicU64::new(1) }
+        JobTable {
+            jobs: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(HashMap::new()),
+            next_session: AtomicU64::new(1),
+        }
     }
 
     /// Mint a fresh driver-session id (`IgniteContext` takes one per
@@ -413,12 +427,77 @@ impl JobTable {
             cancelled: AtomicBool::new(false),
         });
         self.jobs.lock().unwrap().insert(job_id, handle.clone());
+        {
+            let mut sessions = self.sessions.lock().unwrap();
+            let entry = sessions.entry(session_id).or_insert_with(|| SessionEntry {
+                jobs: Vec::new(),
+                last_activity_ms: crate::util::now_millis(),
+            });
+            entry.jobs.push(job_id);
+            entry.last_activity_ms = crate::util::now_millis();
+        }
         metrics::global().counter("jobserver.jobs.submitted").inc();
         handle
     }
 
     pub fn get(&self, job_id: u64) -> Option<Arc<JobHandle>> {
         self.jobs.lock().unwrap().get(&job_id).cloned()
+    }
+
+    /// Refresh a session's liveness stamp (called on submit, status
+    /// polls and reattach, so an actively-polling driver never orphans).
+    pub fn touch_session(&self, session_id: u64) {
+        if let Some(entry) = self.sessions.lock().unwrap().get_mut(&session_id) {
+            entry.last_activity_ms = crate::util::now_millis();
+        }
+    }
+
+    /// The session's journaled jobs as `(job_id, state tag)` pairs, in
+    /// submission order. Empty when the session is unknown or GC'd.
+    pub fn session_jobs(&self, session_id: u64) -> Vec<(u64, u8)> {
+        let ids = match self.sessions.lock().unwrap().get(&session_id) {
+            Some(entry) => entry.jobs.clone(),
+            None => return Vec::new(),
+        };
+        let jobs = self.jobs.lock().unwrap();
+        ids.iter()
+            .filter_map(|id| jobs.get(id).map(|h| (*id, h.state().tag())))
+            .collect()
+    }
+
+    /// Drop sessions idle past `timeout_ms` whose jobs have all reached
+    /// a terminal state, along with those jobs' handles (their results
+    /// become unreachable — the driver had its chance). Sessions with a
+    /// pending/running job are never orphaned, whatever their age.
+    /// Returns the number of sessions GC'd.
+    pub fn gc_orphan_sessions(&self, timeout_ms: u64) -> usize {
+        let now = crate::util::now_millis();
+        let mut sessions = self.sessions.lock().unwrap();
+        let mut jobs = self.jobs.lock().unwrap();
+        let doomed: Vec<u64> = sessions
+            .iter()
+            .filter(|(_, entry)| now.saturating_sub(entry.last_activity_ms) >= timeout_ms)
+            .filter(|(_, entry)| {
+                entry.jobs.iter().all(|id| match jobs.get(id) {
+                    Some(h) => !matches!(h.state(), JobState::Pending | JobState::Running),
+                    None => true,
+                })
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        for sid in &doomed {
+            if let Some(entry) = sessions.remove(sid) {
+                for job_id in entry.jobs {
+                    jobs.remove(&job_id);
+                }
+            }
+        }
+        if !doomed.is_empty() {
+            metrics::global()
+                .counter("jobserver.sessions.gcd")
+                .add(doomed.len() as u64);
+        }
+        doomed.len()
     }
 }
 
@@ -544,6 +623,34 @@ mod tests {
         assert_eq!(job2.state(), JobState::Cancelled);
         assert_eq!(job2.state().tag(), 4);
         assert!(table.get(43).is_none());
+    }
+
+    #[test]
+    fn session_journal_reattaches_and_gcs_orphans() {
+        let table = JobTable::new();
+        let sid = table.next_session_id();
+        let j1 = table.register(100, sid);
+        let j2 = table.register(101, sid);
+        j1.finish(Ok(vec![Value::I64(1)]));
+
+        // Reattach sees both jobs in submission order with live tags.
+        let jobs = table.session_jobs(sid);
+        assert_eq!(jobs, vec![(100, JobState::Done.tag()), (101, JobState::Pending.tag())]);
+        assert!(table.session_jobs(sid + 999).is_empty());
+
+        // A session with a non-terminal job is never orphaned, even at
+        // timeout 0.
+        assert_eq!(table.gc_orphan_sessions(0), 0);
+        assert!(!table.session_jobs(sid).is_empty());
+
+        // Once every job is terminal an idle session is collectable,
+        // but a large timeout still keeps it.
+        j2.finish(Err(IgniteError::Task("boom".into())));
+        assert_eq!(table.gc_orphan_sessions(u64::MAX), 0);
+        assert_eq!(table.gc_orphan_sessions(0), 1);
+        assert!(table.session_jobs(sid).is_empty());
+        assert!(table.get(100).is_none());
+        assert!(table.get(101).is_none());
     }
 
     #[test]

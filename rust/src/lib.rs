@@ -423,6 +423,60 @@
 //! `rust/benches/bench_trace.rs` (E15) measures tracing overhead
 //! (sampled-on vs off plan-job latency).
 //!
+//! ## Fault tolerance: checkpoint-restart + driver-session recovery
+//!
+//! Gang failure semantics are stage-wide (one rank dying aborts the
+//! whole gang, which restarts on a fresh communicator generation), and
+//! before the [`ckpt`] module a restart replayed the section from
+//! iteration 0. Checkpoint-restart bounds that replay:
+//!
+//! **Epoch lifecycle.** A peer operator calls
+//! [`comm::SparkComm::checkpoint`] for its per-rank
+//! [`ckpt::CheckpointHandle`] and `save(k, state)`s each iteration —
+//! the state is encoded on the rank thread and *registered
+//! asynchronously* on a background writer while iteration `k+1` runs
+//! (no barrier; the write overlaps compute, the asynchronous
+//! checkpointing model of the MPI/GPI-2 work in PAPERS.md). Snapshots
+//! land in a checkpoint table — engine-local for driver-local gangs,
+//! master-side (`ckpt.register`/`ckpt.locate` RPCs, mirroring the
+//! map-output and broadcast tables) for cluster gangs.
+//!
+//! **Completeness rule.** An epoch `k` is *complete* only when all
+//! `size` ranks registered a snapshot for the same `k`; only complete
+//! epochs are ever served. A torn epoch (some ranks registered, then
+//! death) is invisible to restore, so
+//! [`comm::SparkComm::checkpoint_restore`] — a collective: rank 0
+//! locates the last complete epoch and broadcasts it, every rank then
+//! fetches its own snapshot at exactly that `k` — always resumes the
+//! restarted gang (survivors + replacement rank) at `k+1` from a
+//! consistent cut, with replayed work down from O(k) to
+//! O(iterations-since-checkpoint). The table keeps
+//! `ignite.checkpoint.keep.epochs` complete epochs, prunes older and
+//! partial ones as the frontier advances, and the `job.clear` fan-out
+//! GCs the rest at job end. Gang restarts themselves back off
+//! exponentially with deterministic seeded jitter
+//! (`ignite.peer.gang.backoff.ms`) so a flapping worker cannot
+//! hot-loop the retry budget.
+//!
+//! **Session-recovery handshake.** The same persistence generalizes to
+//! the driver: the master journals per-session job ids and terminal
+//! states in the job table, so a restarted driver calls
+//! [`cluster::Master::reattach_session`] (the `session.reattach` RPC)
+//! with its session id to reacquire handles to still-running jobs and
+//! collect results of completed ones. Sessions idle past
+//! `ignite.session.orphan.timeout.ms` with no live jobs are GC'd.
+//! Streaming rides the same table: a query persists its last
+//! *completed* batch id per epoch, and [`streaming::StreamQuery`]
+//! `resume()` replays a rewindable source from there — no duplicated,
+//! no skipped batch.
+//!
+//! Key config: `ignite.checkpoint.interval.iters` (0 = off),
+//! `ignite.checkpoint.keep.epochs`, `ignite.peer.gang.backoff.ms`,
+//! `ignite.session.orphan.timeout.ms`. Metrics:
+//! `ckpt.epochs.{saved,complete,restored,gcd}`, `ckpt.bytes.written`,
+//! `ckpt.save.latency`, `peer.iterations.replayed`,
+//! `jobserver.sessions.reattached`.
+//!
 //! ## Quickstart (Listing 1 of the paper)
 //!
 //! ```
@@ -450,6 +504,7 @@
 pub mod apps;
 pub mod bench;
 pub mod broadcast;
+pub mod ckpt;
 pub mod closure;
 pub mod cluster;
 pub mod comm;

@@ -42,15 +42,19 @@
 //! `peer.tasks.executed`, `peer.bytes.{sent,received}` (global and
 //! `cluster.worker.<id>.peer.bytes.*`), `peer.section.latency`.
 
+use crate::ckpt::{CheckpointHandle, CkptSink, LocalCkptSink};
 use crate::closure::registry;
 use crate::comm::{CommWorld, PEER_CONTEXT_FLAG};
+use crate::config::IgniteConf;
 use crate::error::{IgniteError, Result};
 use crate::fault::TaskId;
 use crate::metrics;
 use crate::rdd::PlanSpec;
+use crate::rng::Xoshiro256;
 use crate::scheduler::Engine;
 use crate::ser::Value;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Context id of one gang attempt: the peer flag (so the transport can
 /// attribute traffic to the `peer.bytes.*` metrics), the cluster job id
@@ -60,6 +64,32 @@ use std::sync::Arc;
 /// logging/debugging).
 pub fn peer_context(job_id: u64, generation: u64) -> u64 {
     PEER_CONTEXT_FLAG | (job_id << 16) | (generation & 0xFFFF)
+}
+
+/// How long to wait before gang-restart `generation` of `peer_id`:
+/// exponential from `ignite.peer.gang.backoff.ms` (doubling per restart,
+/// capped at 32× base) with deterministic seeded jitter in the upper
+/// half of the window, so a flapping worker cannot hot-loop restarts and
+/// two sections restarting together do not stay in lockstep. Generation
+/// 0 (the first launch) and base 0 (backoff off) wait nothing.
+pub fn gang_backoff_delay(conf: &IgniteConf, peer_id: u64, generation: u64) -> Duration {
+    if generation == 0 {
+        return Duration::ZERO;
+    }
+    let base = conf
+        .get_duration_ms("ignite.peer.gang.backoff.ms")
+        .unwrap_or(Duration::from_millis(50));
+    if base.is_zero() {
+        return Duration::ZERO;
+    }
+    let exp = base.saturating_mul(1u32 << (generation - 1).min(5));
+    let span = (exp.as_millis() as u64) / 2;
+    if span == 0 {
+        return exp;
+    }
+    let mut rng =
+        Xoshiro256::seeded(peer_id.wrapping_mul(0x9E3779B97F4A7C15) ^ generation);
+    exp - Duration::from_millis(rng.next_below(span + 1))
 }
 
 /// Resolve the `PeerOp` node `peer_id` inside `plan` to its operator
@@ -99,9 +129,19 @@ pub fn run_local_gang(
     metrics::global().counter("peer.sections.launched").inc();
     if attempt > 0 {
         metrics::global().counter("peer.gang.restarts").inc();
+        std::thread::sleep(gang_backoff_delay(&engine.conf, peer_id, attempt as u64));
     }
     let t0 = std::time::Instant::now();
     let world = CommWorld::local_with_conf(n, &engine.conf);
+    // Checkpoint sink for this gang: the engine-local epoch table,
+    // handed to each rank as a per-rank handle (interval 0 = off → no
+    // handle, zero overhead on the rank threads).
+    let ckpt_interval = engine.conf.get_u64("ignite.checkpoint.interval.iters").unwrap_or(0);
+    let ckpt_sink: Option<Arc<dyn CkptSink>> = if ckpt_interval > 0 {
+        Some(Arc::new(LocalCkptSink(Arc::clone(&engine.ckpt))))
+    } else {
+        None
+    };
 
     // Scoped threads so the gang can borrow the plan and engine; the
     // scope's implicit join is the section's barrier.
@@ -111,10 +151,21 @@ pub fn run_local_gang(
             let world = Arc::clone(&world);
             let parent = Arc::clone(&parent);
             let f = Arc::clone(&f);
+            let ckpt = ckpt_sink.as_ref().map(|sink| {
+                CheckpointHandle::new(
+                    peer_id,
+                    rank,
+                    n,
+                    attempt as u64,
+                    ckpt_interval,
+                    Arc::clone(sink),
+                    Some(Arc::clone(&engine.fault)),
+                )
+            });
             handles.push(s.spawn(move || -> Result<Vec<Value>> {
                 engine.fault.before_task(TaskId { stage: peer_id, partition: rank, attempt })?;
                 metrics::global().counter("peer.tasks.executed").inc();
-                let comm = world.comm_for_rank(rank);
+                let comm = world.comm_for_rank_ckpt(rank, 0, ckpt);
                 let rows = parent.compute(rank, engine)?;
                 f(&comm, rows)
             }));
@@ -138,6 +189,11 @@ pub fn run_local_gang(
     for rank in 0..n {
         engine.shuffle.map_done(peer_id, rank, n)?;
     }
+    // Section-end GC: the gang succeeded, so its epochs can never be
+    // restored again — drop them (complete and partial). The scope's
+    // join already drained every rank's background writer, so no late
+    // registration can resurrect the entry.
+    engine.ckpt.clear(peer_id);
     metrics::global().histogram("peer.section.latency").record(t0.elapsed());
     Ok(())
 }
@@ -231,6 +287,24 @@ mod tests {
         run_local_gang(&plan, peer_id, 1, &engine).unwrap();
         assert!(engine.shuffle.is_complete(peer_id));
         assert_eq!(metrics::global().counter("peer.gang.restarts").get(), restarts + 1);
+    }
+
+    #[test]
+    fn gang_backoff_is_deterministic_capped_and_zero_for_first_launch() {
+        let mut conf = IgniteConf::new();
+        conf.set("ignite.peer.gang.backoff.ms", "40");
+        assert_eq!(gang_backoff_delay(&conf, 9, 0), Duration::ZERO, "first launch never waits");
+        let d1 = gang_backoff_delay(&conf, 9, 1);
+        assert_eq!(d1, gang_backoff_delay(&conf, 9, 1), "seeded jitter is deterministic");
+        assert!(
+            d1 >= Duration::from_millis(20) && d1 <= Duration::from_millis(40),
+            "restart 1 in [base/2, base], got {d1:?}"
+        );
+        let d8 = gang_backoff_delay(&conf, 9, 8);
+        assert!(d8 <= Duration::from_millis(40 * 32), "exponent capped at 32x base");
+        assert!(d8 >= Duration::from_millis(40 * 16), "jitter stays in the upper half");
+        conf.set("ignite.peer.gang.backoff.ms", "0");
+        assert_eq!(gang_backoff_delay(&conf, 9, 3), Duration::ZERO, "base 0 disables backoff");
     }
 
     #[test]

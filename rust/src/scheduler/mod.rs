@@ -44,7 +44,12 @@ pub struct Engine {
     /// tier in cluster mode). Decoded values cache in `blocks`.
     pub broadcast: BroadcastManager,
     pub blocks: BlockManager,
-    pub fault: FaultInjector,
+    /// Shared (`Arc`) so peer-gang checkpoint handles can carry the
+    /// injector onto rank and writer threads for the `ckpt.*` sites.
+    pub fault: Arc<FaultInjector>,
+    /// Engine-local checkpoint epoch table (driver-local peer gangs and
+    /// streaming queries; cluster gangs use the master's table instead).
+    pub ckpt: Arc<crate::ckpt::CheckpointStore>,
     pub conf: IgniteConf,
     retries: usize,
     speculation: bool,
@@ -58,10 +63,13 @@ impl Engine {
         let retries = conf.get_usize("ignite.task.retries")?;
         let speculation = conf.get_bool("ignite.task.speculation")?;
         let spec_multiplier = conf.get_f64("ignite.task.speculation.multiplier")?;
-        let fault = match conf.get_u64("ignite.fault.inject.seed")? {
+        let fault = Arc::new(match conf.get_u64("ignite.fault.inject.seed")? {
             0 => FaultInjector::none(),
             seed => FaultInjector::chaos(seed, 0.05),
-        };
+        });
+        let ckpt = Arc::new(crate::ckpt::CheckpointStore::new(
+            conf.get_usize("ignite.checkpoint.keep.epochs")?,
+        ));
         let blocks = BlockManager::new(
             conf.get_usize("ignite.storage.memory.max")?,
             conf.get_str("ignite.storage.spill.dir")?,
@@ -93,6 +101,7 @@ impl Engine {
             broadcast,
             blocks,
             fault,
+            ckpt,
             conf,
             retries,
             speculation,

@@ -24,7 +24,17 @@
 //!    into the query's results and pruned through the `job.clear` GC
 //!    path ([`crate::cluster::Master::clear_artifacts`] fans the clear
 //!    out to every live worker) plus the driver's own tiers.
-//! 5. **Backpressure is admission control.** Cutting a batch blocks
+//! 5. **Source checkpointing makes streams resumable.** After a batch
+//!    — and every batch before it — completes, the source's cursor
+//!    token ([`StreamSource::position`]) is persisted into the engine's
+//!    checkpoint table ([`crate::ckpt::CheckpointStore`], the same
+//!    table peer gangs snapshot into) keyed by the query id. A
+//!    restarted driver rebuilds the query under the same id
+//!    ([`StreamContext::query_with_id`]) and calls
+//!    [`StreamQuery::resume`]: the source seeks past every fully
+//!    processed row — no duplicates, no gaps — and batch numbering
+//!    continues. Draining to exhaustion clears the entry.
+//! 6. **Backpressure is admission control.** Cutting a batch blocks
 //!    while `ignite.streaming.max.inflight.batches` jobs are
 //!    unfinished, or while the job server's [`SlotLedger`] reports zero
 //!    schedulable capacity with work already in flight
@@ -55,7 +65,7 @@ use crate::rdd::{partition_for_key_bytes, AggSpec, OpSpec, PlanRdd, PlanSpec};
 use crate::scheduler::Engine;
 use crate::ser::{to_bytes, Value};
 use crate::trace;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -194,6 +204,19 @@ impl StreamContext {
     /// own job-server session — a stream is one tenant under the slot
     /// ledger's admission policy, exactly like any batch driver.
     pub fn query(&self, source: Box<dyn StreamSource>, spec: QuerySpec) -> Result<StreamQuery> {
+        self.query_with_id(source, spec, crate::util::next_id())
+    }
+
+    /// Like [`query`](Self::query) but with a caller-chosen query id —
+    /// the stable key a restarted driver needs to find the query's
+    /// checkpoint entry ([`StreamQuery::resume`]). A fresh random id
+    /// (the `query` default) can never match a previous incarnation.
+    pub fn query_with_id(
+        &self,
+        source: Box<dyn StreamSource>,
+        spec: QuerySpec,
+        query_id: u64,
+    ) -> Result<StreamQuery> {
         if spec.window.is_some() && matches!(spec.sink, SinkSpec::Peer { .. }) {
             return Err(IgniteError::Invalid(format!(
                 "streaming query {}: windowed state requires a reduce sink",
@@ -207,7 +230,7 @@ impl StreamContext {
             session,
             source,
             spec,
-            query_id: crate::util::next_id(),
+            query_id,
             max_inflight: self.conf.get_usize("ignite.streaming.max.inflight.batches")?.max(1),
             base_interval: self.conf.get_duration_ms("ignite.streaming.batch.interval.ms")?,
             max_interval: self.conf.get_duration_ms("ignite.streaming.interval.max.ms")?,
@@ -221,6 +244,9 @@ impl StreamContext {
             completed: 0,
             max_inflight_observed: 0,
             stalled_recently: false,
+            pending_tokens: HashMap::new(),
+            completed_ahead: BTreeSet::new(),
+            durable_frontier: 0,
         })
     }
 }
@@ -270,6 +296,17 @@ pub struct StreamQuery {
     completed: u64,
     max_inflight_observed: usize,
     stalled_recently: bool,
+    /// Source cursor tokens captured at cut time, waiting for their
+    /// batch (and every earlier one) to complete before being persisted.
+    pending_tokens: HashMap<u64, Vec<u8>>,
+    /// Batches completed out of submission order, ahead of the
+    /// contiguous durable frontier.
+    completed_ahead: BTreeSet<u64>,
+    /// Next batch id whose completion will advance the checkpoint: every
+    /// batch below it has completed, so its token is safe to persist —
+    /// resuming there can neither skip an unfinished batch nor replay a
+    /// finished one.
+    durable_frontier: u64,
 }
 
 impl StreamQuery {
@@ -286,12 +323,20 @@ impl StreamQuery {
             self.finalize_closed()?;
             return Ok(false);
         };
+        // Capture the source cursor as it stands AFTER this batch was
+        // cut — persisted (keyed by this batch id) once the batch and
+        // every earlier one completes, so a resumed source continues at
+        // exactly the first unprocessed row.
+        let position = self.source.position();
         self.admit()?;
         let rows_in = batch.partitions.iter().map(Vec::len).sum();
         let window = self.spec.window.map(|w| w.window_of(batch.event_time));
         let (plan, stage_id) = self.build_plan(&batch, window);
         let batch_id = self.next_batch;
         self.next_batch += 1;
+        if let Some(token) = position {
+            self.pending_tokens.insert(batch_id, token);
+        }
         self.lineage.push(BatchRecord {
             batch_id,
             job_id: None,
@@ -412,7 +457,37 @@ impl StreamQuery {
         for w in remaining {
             self.finalize_window(w)?;
         }
+        // The stream drained to exhaustion: there is nothing left to
+        // resume to, so the query's checkpoint entry is garbage.
+        self.engine.ckpt.clear(self.query_id);
         Ok(())
+    }
+
+    /// Resume from the query's checkpoint entry (written by a previous
+    /// incarnation under the same id — see
+    /// [`StreamContext::query_with_id`]): seek the source to the cursor
+    /// after the last *fully completed* batch and continue the batch
+    /// numbering from there. Returns whether a checkpoint was found and
+    /// the source accepted the seek; `false` leaves the query starting
+    /// from scratch. Must be called before the first poll.
+    pub fn resume(&mut self) -> Result<bool> {
+        if self.next_batch != 0 || !self.inflight.is_empty() {
+            return Err(IgniteError::Invalid(format!(
+                "streaming query {}: resume() must precede the first poll",
+                self.spec.name
+            )));
+        }
+        let Some((epoch, token)) = self.engine.ckpt.locate(self.query_id, None, 0) else {
+            return Ok(false);
+        };
+        if !self.source.seek_to(&token) {
+            return Ok(false);
+        }
+        self.next_batch = epoch + 1;
+        self.durable_frontier = epoch + 1;
+        metrics::global().counter("ckpt.epochs.restored").inc();
+        metrics::global().counter("streaming.queries.resumed").inc();
+        Ok(true)
     }
 
     // ------------------------------------------------------ internals --
@@ -564,7 +639,27 @@ impl StreamQuery {
                 self.emitted.insert(batch_id, rows);
             }
         }
+        self.advance_durable_frontier(batch_id);
         Ok(())
+    }
+
+    /// Persist the checkpoint for every batch the just-completed one
+    /// unblocks: the frontier only moves over *contiguously* completed
+    /// batches (batches finish out of order under the in-flight window),
+    /// and only the frontier's token is ever registered — an epoch in
+    /// the checkpoint table means "everything up to and including this
+    /// batch is fully processed".
+    fn advance_durable_frontier(&mut self, batch_id: u64) {
+        self.completed_ahead.insert(batch_id);
+        while self.completed_ahead.remove(&self.durable_frontier) {
+            if let Some(token) = self.pending_tokens.remove(&self.durable_frontier) {
+                // Single-writer epoch (size 1, rank 0): complete — and
+                // therefore restorable — the moment it registers.
+                self.engine.ckpt.register(self.query_id, 1, self.durable_frontier, 0, token);
+                metrics::global().counter("streaming.batches.checkpointed").inc();
+            }
+            self.durable_frontier += 1;
+        }
     }
 
     /// Fold a completed batch's reduced pairs into the window's state
@@ -661,6 +756,14 @@ impl StreamQuery {
 
     pub fn query_id(&self) -> u64 {
         self.query_id
+    }
+
+    /// Highest batch id through which this query is checkpointed (every
+    /// batch up to and including it completed and its source cursor is
+    /// in the checkpoint table); `None` before the first durable batch
+    /// or for a non-resumable source.
+    pub fn checkpointed_through(&self) -> Option<u64> {
+        self.engine.ckpt.latest_complete(self.query_id)
     }
 
     /// Current event-time watermark.
@@ -890,6 +993,71 @@ mod tests {
             "one reduced pair per batch, no cross-batch state"
         );
         assert_eq!(q.last_batch_output().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn file_tail_query_resumes_from_checkpoint_without_dup_or_gap() {
+        use std::io::Write;
+        register_stream_ops();
+        let sc = IgniteContext::local(2);
+        let stream = StreamContext::new(&sc);
+        let path = std::env::temp_dir()
+            .join(format!("mpignite-stream-resume-{}.txt", crate::util::next_id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        for w in ["w0", "w1", "w2", "w3"] {
+            writeln!(f, "{w}").unwrap();
+        }
+        f.flush().unwrap();
+
+        // Stateless word-count: every line is a unique word, so across
+        // the whole stream each key must reduce to exactly 1 — a
+        // duplicated row (replayed batch) or a gap (skipped batch) both
+        // break the oracle comparison below.
+        let spec = QuerySpec::reduce(
+            "resume",
+            vec![OpSpec::FlatMapNamed { name: "stream.test.word_pairs".into() }],
+            AggSpec::SumI64,
+            2,
+        );
+        let qid = 4242;
+        let mut q1 = stream
+            .query_with_id(Box::new(FileTailSource::new(&path, 2)), spec.clone(), qid)
+            .unwrap();
+        assert!(q1.poll_once().unwrap(), "first incarnation cuts batch 0");
+        assert_eq!(q1.checkpointed_through(), Some(0));
+        let delivered = q1.results_sorted();
+        assert_eq!(delivered.len(), 4);
+        // Driver "crash": the query object dies without finish(), the
+        // checkpoint entry survives in the engine's table.
+        drop(q1);
+
+        for w in ["w4", "w5"] {
+            writeln!(f, "{w}").unwrap();
+        }
+        f.flush().unwrap();
+
+        // The restarted driver rebuilds the query under the same id with
+        // a FRESH source and resumes: the seek lands exactly after w3.
+        let mut q2 = stream
+            .query_with_id(Box::new(FileTailSource::new(&path, 2)), spec.clone(), qid)
+            .unwrap();
+        assert!(q2.resume().unwrap(), "checkpoint found and source seeked");
+        assert!(q2.poll_once().unwrap(), "resumed incarnation cuts the tail");
+        assert_eq!(q2.checkpointed_through(), Some(1), "batch numbering continued");
+
+        let mut all = delivered;
+        all.extend(q2.results_sorted());
+        let replay = vec![StreamBatch {
+            partitions: line_batch(&["w0", "w1", "w2", "w3", "w4", "w5"], 2),
+            event_time: 0,
+        }];
+        let oracle = batch_oracle_plan(&spec, &replay).unwrap();
+        let want = sort_rows(sc.plan_rdd(oracle).collect().unwrap());
+        assert_eq!(sort_rows(all), want, "no duplicate and no gap across the restart");
+
+        // resume() is a pre-flight operation only.
+        assert!(q2.resume().is_err(), "resume after polling is refused");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -41,6 +41,24 @@ pub trait StreamSource: Send {
     /// True once the source is closed: no further batch will ever be
     /// emitted (already-queued data still drains through `poll_batch`).
     fn exhausted(&self) -> bool;
+
+    /// Opaque cursor token capturing the source's position *after* the
+    /// most recent poll, or `None` for a source that cannot resume.
+    /// Contract: feeding the token back through
+    /// [`seek_to`](Self::seek_to) on a fresh instance over the same
+    /// underlying data makes the next poll emit exactly the rows that
+    /// followed — no row re-emitted, none skipped (batch *boundaries*
+    /// may differ; the row stream may not).
+    fn position(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore the cursor from a [`position`](Self::position) token.
+    /// Returns `false` when the source does not support resuming (the
+    /// default) or the token is not one of its own.
+    fn seek_to(&mut self, _token: &[u8]) -> bool {
+        false
+    }
 }
 
 #[derive(Default)]
@@ -183,6 +201,22 @@ impl StreamSource for FileTailSource {
     fn exhausted(&self) -> bool {
         self.closed
     }
+
+    fn position(&self) -> Option<Vec<u8>> {
+        Some(crate::ser::to_bytes(&(self.offset, self.batches)))
+    }
+
+    fn seek_to(&mut self, token: &[u8]) -> bool {
+        match crate::ser::from_bytes::<(u64, u64)>(token) {
+            Ok((offset, batches)) => {
+                self.offset = offset;
+                self.batches = batches;
+                self.closed = false;
+                true
+            }
+            Err(_) => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -252,6 +286,39 @@ mod tests {
         );
         tail.close();
         assert!(tail.exhausted());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn file_tail_position_token_resumes_without_dup_or_gap() {
+        let path = std::env::temp_dir()
+            .join(format!("mpignite-resume-{}.txt", crate::util::next_id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        writeln!(f, "one").unwrap();
+        writeln!(f, "two").unwrap();
+        f.flush().unwrap();
+
+        let mut tail = FileTailSource::new(&path, 1);
+        let b0 = tail.poll_batch().unwrap().unwrap();
+        assert_eq!(b0.partitions[0].len(), 2);
+        let token = tail.position().unwrap();
+
+        writeln!(f, "three").unwrap();
+        f.flush().unwrap();
+
+        // A fresh instance (the restarted driver's source) seeks to the
+        // token: only the rows after the checkpointed batch come back,
+        // and the batch index continues where it left off.
+        let mut resumed = FileTailSource::new(&path, 1);
+        assert!(resumed.seek_to(&token));
+        let b1 = resumed.poll_batch().unwrap().unwrap();
+        assert_eq!(b1.event_time, 1, "batch numbering continues");
+        assert_eq!(b1.partitions[0], vec![Value::Str("three".into())]);
+
+        assert!(!resumed.seek_to(b"garbage"), "bad token is refused");
+        let mut mem = MemoryStreamSource::new();
+        assert!(mem.position().is_none(), "memory source is not resumable");
+        assert!(!mem.seek_to(&token));
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -14,6 +14,10 @@
 //! * a scripted `FaultInjector` rank failure takes the same gang-restart
 //!   path, and seeded chaos mode (local engine) is absorbed by the
 //!   gang retry machinery;
+//! * consecutive gang restarts are spaced by the exponential backoff
+//!   (`ignite.peer.gang.backoff.ms`, deterministic seeded jitter) — the
+//!   wall clock of a double-restart collect is bounded below by the
+//!   recomputed per-generation delays;
 //! * all-or-nothing placement: a cluster with fewer slots than ranks
 //!   rejects the gang up front.
 
@@ -325,6 +329,63 @@ fn injected_rank_fault_restarts_gang_on_bumped_generation() {
         metric("peer.gang.restarts") - restarts_before,
         1,
         "the injected rank fault must abort and restart the whole gang"
+    );
+    assert_eq!(got, closure_reference(), "post-restart result diverged");
+    master.shutdown();
+}
+
+#[test]
+fn gang_restarts_are_spaced_by_deterministic_backoff() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    register_ops();
+    let c = {
+        let mut c = conf();
+        // A base large enough that the two backoff sleeps dominate the
+        // (fast) k-means job in the wall-clock assertion below.
+        c.set("ignite.peer.gang.backoff.ms", "150");
+        c
+    };
+    let (sc, workers) = setup(&c, 2);
+    let master = sc.master().unwrap().clone();
+
+    let job = sc.peer_rdd(points(), 2, "peer.test.kmeans");
+    let peer_id = job
+        .plan()
+        .stages()
+        .iter()
+        .find(|s| s.kind == PlanStageKind::Peer)
+        .expect("plan has a peer stage")
+        .id;
+    // Rank 0's first TWO generations die: the collect traverses the
+    // generation-1 and generation-2 backoff sleeps before the third
+    // attempt (the last within the default budget) wins.
+    workers[0].engine().fault.fail_task(peer_id, 0, 0);
+    workers[0].engine().fault.fail_task(peer_id, 0, 1);
+
+    // The delay is a pure function of (conf, peer_id, generation): the
+    // test recomputes the exact spacing the master must have slept.
+    let delay = |g| mpignite::peer::gang_backoff_delay(sc.conf(), peer_id, g);
+    let spacing = delay(1) + delay(2);
+    // Seeded jitter stays within [exp/2, exp] of the doubling base.
+    assert!(delay(1) >= Duration::from_millis(75) && delay(1) <= Duration::from_millis(150));
+    assert!(delay(2) >= Duration::from_millis(150) && delay(2) <= Duration::from_millis(300));
+    let (once, again) = (delay(1), delay(1));
+    assert_eq!(once, again, "jitter must be deterministic per (peer, generation)");
+
+    let restarts_before = metric("peer.gang.restarts");
+    let t0 = Instant::now();
+    let got = job.collect().unwrap();
+    let elapsed = t0.elapsed();
+
+    assert_eq!(
+        metric("peer.gang.restarts") - restarts_before,
+        2,
+        "both scripted rank faults must each restart the gang"
+    );
+    assert!(
+        elapsed >= spacing,
+        "restarts must be spaced by the configured backoff: ran {elapsed:?}, \
+         deterministic spacing is {spacing:?}"
     );
     assert_eq!(got, closure_reference(), "post-restart result diverged");
     master.shutdown();
